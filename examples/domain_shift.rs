@@ -1,0 +1,63 @@
+//! Domain-shift demo — the paper's Figure 2 story in one run.
+//!
+//! Offline Wanda calibrated on the *wrong* domain pays a perplexity tax on
+//! every prompt; μ-MoE recalibrates per prompt and never pays it.
+//!
+//!     make artifacts && cargo run --release --example domain_shift
+
+use mumoe::benchlib::{fmt_f, Table};
+use mumoe::data::corpus::Corpus;
+use mumoe::data::{domain_label, DOMAINS};
+use mumoe::eval::harness::EvalStack;
+use std::path::Path;
+
+fn main() -> Result<(), mumoe::util::error::Error> {
+    let dir = Path::new("artifacts");
+    let model = "mu-opt-micro";
+    let rho = 0.5;
+    let stack = EvalStack::open(dir, model)?;
+    let seq = stack.cfg.max_seq_len;
+
+    println!("model={model} rho={rho}: offline Wanda per calibration domain vs mu-MoE\n");
+
+    // test windows per domain
+    let tests: Vec<(&str, Vec<_>)> = DOMAINS
+        .iter()
+        .map(|d| {
+            let c = Corpus::load(&dir.join("data"), d, "test").expect("corpus");
+            (*d, c.eval_windows(seq, 8))
+        })
+        .collect();
+
+    let mut headers = vec!["method \\ test domain"];
+    headers.extend(DOMAINS.iter().map(|d| domain_label(d)));
+    let mut table = Table::new("perplexity under domain shift (rho=0.5)", &headers);
+
+    // offline Wanda calibrated on each domain in turn
+    for calib_domain in DOMAINS {
+        let cw = Corpus::load(&dir.join("data"), calib_domain, "train")?
+            .eval_windows(seq, 8);
+        let stats = stack.calibrate(&cw)?;
+        let v = stack.variant_wanda(&stats, rho)?;
+        let mut cells = vec![format!("Wanda calib={}", domain_label(calib_domain))];
+        for (_, windows) in &tests {
+            cells.push(fmt_f(stack.perplexity(&v, windows, None)?.value()));
+        }
+        table.row(cells);
+    }
+
+    // μ-MoE: no calibration input at all
+    let mut cells = vec!["mu-MoE (no calib)".to_string()];
+    for (_, windows) in &tests {
+        cells.push(fmt_f(stack.perplexity(&stack.ckpt, windows, Some(rho))?.value()));
+    }
+    table.row(cells);
+    table.print();
+
+    println!(
+        "\nreading: each Wanda row is best on its own calibration domain \
+         (the matched diagonal) and worse off-diagonal; mu-MoE adapts to \
+         every prompt without any offline calibration."
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! μ-MoE analysis: how micro-grained is the mixture really?
+//!
+//! Treats every weight as a single-parameter expert, extracts the active
+//! sets different prompts induce (host-side reference model), and reports
+//! per-layer overlap + utilization statistics — within-domain prompts
+//! should overlap more than cross-domain ones, and utilization should show
+//! a hot core plus a prompt-dependent tail.
+//!
+//!     make artifacts && cargo run --release --example expert_overlap
+
+use mumoe::data::corpus::Corpus;
+use mumoe::data::DOMAINS;
+use mumoe::model::checkpoint::Checkpoint;
+use mumoe::model::config_by_name;
+use mumoe::moe::{overlap, select_experts, utilization};
+use mumoe::nn::Model;
+use mumoe::util::rng::Pcg32;
+use std::path::Path;
+
+fn main() -> Result<(), mumoe::util::error::Error> {
+    let dir = Path::new("artifacts");
+    let model_name = "mu-opt-micro";
+    let rho = 0.5;
+    let cfg = config_by_name(model_name).unwrap();
+    let ckpt = Checkpoint::load(&dir.join("ckpt").join(format!("{model_name}.ckpt")))?;
+    let model = Model::from_checkpoint(&cfg, &ckpt)?;
+    let mut rng = Pcg32::new(7, 0);
+
+    println!("micro-expert analysis, {model_name} at rho={rho}\n");
+
+    let mut all = Vec::new();
+    for domain in DOMAINS {
+        let corpus = Corpus::load(&dir.join("data"), domain, "test")?;
+        let sels: Vec<_> = (0..4)
+            .map(|_| {
+                let w = corpus.sample_window(&mut rng, 64);
+                select_experts(&model, &w.tokens, w.valid_len, rho)
+            })
+            .collect();
+        let st = overlap(&sels);
+        println!("within {domain:11}: mean active-set overlap {:.4}", st.overall);
+        all.extend(sels);
+    }
+    let cross = overlap(&all);
+    println!("across all domains : mean active-set overlap {:.4}\n", cross.overall);
+
+    // utilization histogram for one attention projection and one FFN layer
+    for lin in ["layers.0.q.w", "layers.2.fc1.w"] {
+        let u = utilization(&all, lin);
+        let always = u.iter().filter(|&&x| x == 1.0).count();
+        let never = u.iter().filter(|&&x| x == 0.0).count();
+        let sometimes = u.len() - always - never;
+        println!(
+            "{lin}: {} experts | always-on {:.1}% | prompt-dependent {:.1}% | never {:.1}%",
+            u.len(),
+            100.0 * always as f64 / u.len() as f64,
+            100.0 * sometimes as f64 / u.len() as f64,
+            100.0 * never as f64 / u.len() as f64,
+        );
+    }
+    println!(
+        "\nthe prompt-dependent slice is what offline pruning freezes wrongly \
+         and mu-MoE re-selects per prompt (paper Figure 2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! E2E serving validation (DESIGN.md §7): start the full coordinator
+//! (router → sparsity-aware dynamic batcher → PJRT μ-MoE session), replay
+//! a Poisson trace of mixed-domain, mixed-sparsity prompts in real time,
+//! and report throughput, latency percentiles and batch occupancy.
+//!
+//!     make artifacts && cargo run --release --example serve_trace
+//!
+//! The numbers printed here are the repo's serving headline and are
+//! recorded in EXPERIMENTS.md.
+
+use mumoe::config::ServeConfig;
+use mumoe::coordinator::server::replay_trace;
+
+fn main() -> Result<(), mumoe::util::error::Error> {
+    let model =
+        std::env::var("MUMOE_SERVE_MODEL").unwrap_or_else(|_| "mu-opt-micro".into());
+    let n: usize = std::env::var("MUMOE_SERVE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let rate: f64 = std::env::var("MUMOE_SERVE_RATE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+
+    let cfg = ServeConfig {
+        model,
+        rho_levels: vec![0.4, 0.6, 1.0],
+        batch_window_us: 4_000,
+        ..Default::default()
+    };
+    println!(
+        "serving {} — replaying {n} requests @ {rate}/s over rho levels {:?}",
+        cfg.model, cfg.rho_levels
+    );
+    let report = replay_trace(cfg, n, rate)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Rust-driven training: drive the AOT `train_step` artifact (full Adam
+//! update lowered from JAX, including backward) for a few hundred steps on
+//! synthetic corpus windows and log the loss curve — proving the L3↔L2↔L1
+//! train path composes without python at runtime.
+//!
+//!     make artifacts && cargo run --release --example train_synth
+//!
+//! The step count is deliberately small (single-core sandbox); the loss
+//! log is recorded in EXPERIMENTS.md §E2E.
+
+use mumoe::data::corpus::Corpus;
+use mumoe::model::checkpoint::Checkpoint;
+use mumoe::runtime::registry::Registry;
+use mumoe::runtime::session::literal_f32;
+use mumoe::runtime::Client;
+use mumoe::util::rng::Pcg32;
+use std::path::Path;
+
+fn main() -> Result<(), mumoe::util::error::Error> {
+    let dir = Path::new("artifacts");
+    let steps: usize = std::env::var("MUMOE_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let client = Client::cpu()?;
+    let registry = Registry::open(dir, client.clone())?;
+    let meta = registry.meta_for("train_step", "mu-opt-micro")?;
+    let (name, order, batch, seq) =
+        (meta.name.clone(), meta.params.clone(), meta.batch, meta.seq_len);
+    let exe = registry.executable(&name)?;
+
+    // fresh random init via the checkpoint shapes (continue-training works
+    // too — swap in the trained checkpoint)
+    let ckpt = Checkpoint::load(&registry.ckpt_path("mu-opt-micro"))?;
+    let mut rng = Pcg32::new(1234, 0);
+    let mut params: Vec<(Vec<usize>, Vec<f32>)> = order
+        .iter()
+        .map(|n| {
+            let t = ckpt.get(n).expect("tensor");
+            let data = if n.ends_with(".g") {
+                vec![1.0; t.numel()]
+            } else if n.ends_with(".b") && t.dims.len() == 1 {
+                vec![0.0; t.numel()]
+            } else {
+                rng.normal_vec(t.numel()).iter().map(|x| x * 0.02).collect()
+            };
+            (t.dims.clone(), data)
+        })
+        .collect();
+    let mut m: Vec<Vec<f32>> = params.iter().map(|(_, d)| vec![0.0; d.len()]).collect();
+    let mut v: Vec<Vec<f32>> = params.iter().map(|(_, d)| vec![0.0; d.len()]).collect();
+
+    let corpus = Corpus::load(&dir.join("data"), "synth_wiki", "train")?;
+    println!("training mu-opt-micro from scratch for {steps} steps (batch {batch});");
+    println!("step\tloss\tsec/step");
+
+    let np = order.len();
+    for step in 0..steps {
+        // sample a fresh batch of windows
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut lengths = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let w = corpus.sample_window(&mut rng, seq);
+            tokens.extend_from_slice(&w.tokens);
+            lengths.push(w.valid_len as i32);
+        }
+        let lr = 3e-3_f32 * (1.0 - step as f32 / steps as f32).max(0.2);
+
+        // build the input literal list: params, m, v, step, tokens, lengths, lr
+        let mut bufs = Vec::with_capacity(3 * np + 4);
+        for (dims, data) in &params {
+            bufs.push(client.upload_f32(data, dims)?);
+        }
+        for (i, mm) in m.iter().enumerate() {
+            bufs.push(client.upload_f32(mm, &params[i].0)?);
+        }
+        for (i, vv) in v.iter().enumerate() {
+            bufs.push(client.upload_f32(vv, &params[i].0)?);
+        }
+        bufs.push(client.upload_f32(&[step as f32], &[])?);
+        bufs.push(client.upload_i32(&tokens, &[batch, seq])?);
+        bufs.push(client.upload_i32(&lengths, &[batch])?);
+        bufs.push(client.upload_f32(&[lr], &[])?);
+
+        let t0 = std::time::Instant::now();
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = exe.execute_b(&refs).map_err(mumoe::util::error::Error::from)?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(mumoe::util::error::Error::from)?;
+        let parts = lit.to_tuple().map_err(mumoe::util::error::Error::from)?;
+        let loss = literal_f32(&parts[0])?[0];
+
+        // unpack new params/m/v
+        for i in 0..np {
+            params[i].1 = literal_f32(&parts[1 + i])?;
+            m[i] = literal_f32(&parts[1 + np + i])?;
+            v[i] = literal_f32(&parts[1 + 2 * np + i])?;
+        }
+        if step % 10 == 0 || step == steps - 1 {
+            println!("{step}\t{loss:.4}\t{:.2}", t0.elapsed().as_secs_f64());
+        }
+    }
+    println!("loss curve should fall from ~5.6 (uniform) toward < 3 within {steps} steps");
+    Ok(())
+}

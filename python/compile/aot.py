@@ -1,0 +1,351 @@
+"""AOT export: lower every runtime computation to HLO *text* + manifest.
+
+This is the L2->L3 bridge. Each artifact is a jitted jax function lowered to
+stablehlo and converted to an XlaComputation HLO text dump, which the rust
+runtime parses with `HloModuleProto::from_text_file` and compiles on the
+PJRT CPU client. Text (not `.serialize()`) is mandatory: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.json) tells rust, per artifact: the HLO
+file, the model, the static batch/seq shapes, the ordered parameter-tensor
+names (fed as leading inputs from the MUCK checkpoint), the extra runtime
+inputs, and the output arity. rust/src/runtime/registry.rs is the consumer —
+keep formats in sync.
+
+Usage: python -m compile.aot --out ../artifacts [--models micro,mini,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, vlm
+from .configs import (
+    EVAL_BATCH,
+    MAX_SEQ_LEN,
+    MODEL_FAMILY,
+    MU_VLM,
+    SERVE_BATCH,
+    VLM_BATCH,
+    OPT_PAPER_TABLE,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(shapes: dict, order: list):
+    return [_spec(shapes[n]) for n in order]
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out = out_dir
+        self.entries = []
+        os.makedirs(f"{out_dir}/hlo", exist_ok=True)
+
+    def export(self, name, fn, specs, meta):
+        """Lower fn(*specs) to HLO text at hlo/{name}.hlo.txt."""
+        path = f"hlo/{name}.hlo.txt"
+        full = f"{self.out}/{path}"
+        print(f"  lowering {name} ...", flush=True)
+        # keep_unused=True: the artifact signature must match the manifest's
+        # full parameter list even when a computation (e.g. calib_stats)
+        # does not touch every tensor — rust feeds them positionally.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(full, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update(
+            name=name,
+            path=path,
+            inputs=[
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        )
+        self.entries.append(entry)
+        print(f"    -> {len(text)} chars", flush=True)
+
+    def write_manifest(self, extra):
+        manifest = dict(extra)
+        manifest["artifacts"] = self.entries
+        with open(f"{self.out}/manifest.json", "w") as f:
+            json.dump(manifest, f, indent=1)
+
+
+def export_lm(ex: Exporter, cfg, kinds):
+    order = model.param_order(cfg)
+    shapes = model.param_shapes(cfg)
+    psl = _param_specs(shapes, order)
+    np_ = len(order)
+    t = MAX_SEQ_LEN
+
+    def unpack(args, n_extra):
+        params = model.params_from_list(cfg, list(args[:np_]))
+        return params, args[np_:]
+
+    base_meta = dict(
+        model=cfg.name,
+        params=order,
+        seq_len=t,
+    )
+
+    if "dense_nll" in kinds:
+        def dense_nll(*args):
+            params, (toks, lens) = unpack(args, 2)
+            return model.nll_sums(cfg, params, toks, lens)
+
+        ex.export(
+            f"dense_nll_{cfg.name}",
+            dense_nll,
+            psl + [_spec((EVAL_BATCH, t), I32), _spec((EVAL_BATCH,), I32)],
+            dict(base_meta, kind="dense_nll", batch=EVAL_BATCH, outputs=2,
+                 extra_inputs=["tokens", "lengths"]),
+        )
+
+    if "mumoe_nll" in kinds:
+        def mumoe_nll(*args):
+            params, (toks, lens, rho) = unpack(args, 3)
+            return model.nll_sums(cfg, params, toks, lens, rho=rho)
+
+        ex.export(
+            f"mumoe_nll_{cfg.name}",
+            mumoe_nll,
+            psl
+            + [
+                _spec((EVAL_BATCH, t), I32),
+                _spec((EVAL_BATCH,), I32),
+                _spec((), F32),
+            ],
+            dict(base_meta, kind="mumoe_nll", batch=EVAL_BATCH, outputs=2,
+                 extra_inputs=["tokens", "lengths", "rho"]),
+        )
+
+    if "dense_logits" in kinds:
+        def dense_logits(*args):
+            params, (toks, lens) = unpack(args, 2)
+            return (model.last_logits(cfg, params, toks, lens),)
+
+        ex.export(
+            f"dense_logits_{cfg.name}",
+            dense_logits,
+            psl + [_spec((SERVE_BATCH, t), I32), _spec((SERVE_BATCH,), I32)],
+            dict(base_meta, kind="dense_logits", batch=SERVE_BATCH, outputs=1,
+                 extra_inputs=["tokens", "lengths"]),
+        )
+
+    if "mumoe_logits" in kinds:
+        def mumoe_logits(*args):
+            params, (toks, lens, rho) = unpack(args, 3)
+            return (model.last_logits(cfg, params, toks, lens, rho=rho),)
+
+        ex.export(
+            f"mumoe_logits_{cfg.name}",
+            mumoe_logits,
+            psl
+            + [
+                _spec((SERVE_BATCH, t), I32),
+                _spec((SERVE_BATCH,), I32),
+                _spec((), F32),
+            ],
+            dict(base_meta, kind="mumoe_logits", batch=SERVE_BATCH, outputs=1,
+                 extra_inputs=["tokens", "lengths", "rho"]),
+        )
+
+    if "calib_stats" in kinds:
+        lin = cfg.linear_names()
+
+        def calib(*args):
+            params, (toks, lens) = unpack(args, 2)
+            return model.calib_stats(cfg, params, toks, lens, with_hessian=True)
+
+        ex.export(
+            f"calib_stats_{cfg.name}",
+            calib,
+            psl + [_spec((EVAL_BATCH, t), I32), _spec((EVAL_BATCH,), I32)],
+            dict(base_meta, kind="calib_stats", batch=EVAL_BATCH,
+                 outputs=2 * len(lin), linears=lin,
+                 extra_inputs=["tokens", "lengths"]),
+        )
+
+    if "train_step" in kinds:
+        def tstep(*args):
+            params = model.params_from_list(cfg, list(args[:np_]))
+            m = model.params_from_list(cfg, list(args[np_ : 2 * np_]))
+            v = model.params_from_list(cfg, list(args[2 * np_ : 3 * np_]))
+            step, toks, lens, lr = args[3 * np_ :]
+            loss, p2, m2, v2 = model.train_step(
+                cfg, params, m, v, step, toks, lens, lr
+            )
+            return tuple(
+                [loss]
+                + model.params_to_list(cfg, p2)
+                + model.params_to_list(cfg, m2)
+                + model.params_to_list(cfg, v2)
+            )
+
+        tb = 16
+        ex.export(
+            f"train_step_{cfg.name}",
+            tstep,
+            psl * 3
+            + [
+                _spec((), F32),
+                _spec((tb, t), I32),
+                _spec((tb,), I32),
+                _spec((), F32),
+            ],
+            dict(base_meta, kind="train_step", batch=tb, outputs=1 + 3 * np_,
+                 extra_inputs=["step", "tokens", "lengths", "lr"]),
+        )
+
+
+def export_vlm(ex: Exporter, kinds):
+    cfg = MU_VLM
+    order = vlm.param_order(cfg)
+    shapes = vlm.param_shapes(cfg)
+    psl = _param_specs(shapes, order)
+    np_ = len(order)
+    tq = cfg.text.max_seq_len - 1  # question token budget (prefix uses pos)
+    img = cfg.image_size
+
+    base_meta = dict(model=cfg.name, params=order, seq_len=tq, batch=VLM_BATCH)
+
+    if "vlm_dense" in kinds:
+        def dense(*args):
+            params = vlm.params_from_list(cfg, list(args[:np_]))
+            images, toks, lens, starts = args[np_:]
+            return (
+                vlm.choice_nll(cfg, params, images, toks, lens, starts),
+            )
+
+        ex.export(
+            "vlm_dense_nll",
+            dense,
+            psl
+            + [
+                _spec((VLM_BATCH, img, img), F32),
+                _spec((VLM_BATCH, tq), I32),
+                _spec((VLM_BATCH,), I32),
+                _spec((VLM_BATCH,), I32),
+            ],
+            dict(base_meta, kind="vlm_dense_nll", outputs=1,
+                 extra_inputs=["images", "tokens", "lengths", "ans_start"]),
+        )
+
+    if "vlm_mumoe" in kinds:
+        def mumoe(*args):
+            params = vlm.params_from_list(cfg, list(args[:np_]))
+            images, toks, lens, starts, rho = args[np_:]
+            return (
+                vlm.choice_nll(
+                    cfg, params, images, toks, lens, starts, rho=rho
+                ),
+            )
+
+        ex.export(
+            "vlm_mumoe_nll",
+            mumoe,
+            psl
+            + [
+                _spec((VLM_BATCH, img, img), F32),
+                _spec((VLM_BATCH, tq), I32),
+                _spec((VLM_BATCH,), I32),
+                _spec((VLM_BATCH,), I32),
+                _spec((), F32),
+            ],
+            dict(base_meta, kind="vlm_mumoe_nll", outputs=1,
+                 extra_inputs=["images", "tokens", "lengths", "ans_start", "rho"]),
+        )
+
+    if "vlm_calib" in kinds:
+        lin = cfg.linear_names()
+
+        def calib(*args):
+            params = vlm.params_from_list(cfg, list(args[:np_]))
+            images, toks, lens = args[np_:]
+            return vlm.calib_stats(cfg, params, images, toks, lens)
+
+        ex.export(
+            "vlm_calib_stats",
+            calib,
+            psl
+            + [
+                _spec((VLM_BATCH, img, img), F32),
+                _spec((VLM_BATCH, tq), I32),
+                _spec((VLM_BATCH,), I32),
+            ],
+            dict(base_meta, kind="vlm_calib_stats", outputs=2 * len(lin),
+                 linears=lin, extra_inputs=["images", "tokens", "lengths"]),
+        )
+
+
+DEFAULT_LM_KINDS = (
+    "dense_nll",
+    "mumoe_nll",
+    "dense_logits",
+    "mumoe_logits",
+    "calib_stats",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None, help="comma list of model names")
+    ap.add_argument("--skip-vlm", action="store_true")
+    ap.add_argument("--skip-train-step", action="store_true")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out)
+    wanted = args.models.split(",") if args.models else list(MODEL_FAMILY)
+
+    for name in wanted:
+        cfg = MODEL_FAMILY[name]
+        kinds = list(DEFAULT_LM_KINDS)
+        # train_step triples the parameter I/O; export for micro only
+        if name == "mu-opt-micro" and not args.skip_train_step:
+            kinds.append("train_step")
+        print(f"exporting {name}: {kinds}", flush=True)
+        export_lm(ex, cfg, kinds)
+
+    if not args.skip_vlm:
+        print("exporting mu-vlm", flush=True)
+        export_vlm(ex, ("vlm_dense", "vlm_mumoe", "vlm_calib"))
+
+    ex.write_manifest(
+        {
+            "version": 1,
+            "models": {c.name: c.to_dict() for c in MODEL_FAMILY.values()},
+            "vlm": MU_VLM.to_dict(),
+            "opt_paper_table": {
+                k: {"layers": v[0], "heads": v[1], "d_model": v[2]}
+                for k, v in OPT_PAPER_TABLE.items()
+            },
+            "specials": {"pad": 256, "bos": 257, "eos": 258, "vocab": 259},
+        }
+    )
+    print(f"wrote manifest with {len(ex.entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""MUCK checkpoint format — shared with rust/src/model/checkpoint.rs.
+
+Layout (little-endian):
+  magic   8 bytes  b"MUCKPT01"
+  n       u32      tensor count
+  per tensor:
+    name_len u32, name utf-8 bytes
+    ndim     u32, dims u64 * ndim
+    data     f32 * prod(dims)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"MUCKPT01"
+
+
+def save(path: str, tensors: dict):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.asarray(tensors[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load(path: str) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, f"bad checkpoint magic in {path}"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            count = 1
+            for d in dims:
+                count *= d
+            data = np.frombuffer(f.read(4 * count), dtype="<f4").reshape(dims)
+            out[name] = data.copy()
+    return out

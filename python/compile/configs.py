@@ -1,0 +1,148 @@
+"""Model family configuration for the mu-MoE reproduction.
+
+The paper evaluates the OPT family (125M..13B, paper Table 5). The sandbox
+has no model hub and no accelerator, so we train a scaled-down family with
+the *same architecture* (decoder-only, pre-LN, learned positional embeddings,
+ReLU FFN with d_i = 4d) from scratch on synthetic corpora. See DESIGN.md S2.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Byte-level vocabulary: 256 raw bytes + PAD/BOS/EOS specials.
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB_SIZE = 259
+
+MAX_SEQ_LEN = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """mu-OPT model hyperparameters (mirrors paper Table 5 columns)."""
+
+    name: str
+    n_layers: int
+    n_heads: int
+    d_model: int
+    max_seq_len: int = MAX_SEQ_LEN
+    vocab_size: int = VOCAB_SIZE
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        """Total trainable parameter count (embeddings tied to LM head)."""
+        d, di = self.d_model, self.d_inner
+        per_layer = (
+            4 * (d * d + d)  # q, k, v, o projections + biases
+            + (di * d + di)  # fc1
+            + (d * di + d)  # fc2
+            + 4 * d  # ln1, ln2 scale+bias
+        )
+        emb = self.vocab_size * d + self.max_seq_len * d
+        final_ln = 2 * d
+        return self.n_layers * per_layer + emb + final_ln
+
+    def linear_names(self) -> list:
+        """Canonical order of prunable linear weights (all linears, as in
+        the paper: 'we compress all linear layers in LLM transformers')."""
+        names = []
+        for i in range(self.n_layers):
+            for lin in ("q", "k", "v", "o", "fc1", "fc2"):
+                names.append(f"layers.{i}.{lin}.w")
+        return names
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["d_inner"] = self.d_inner
+        d["n_params"] = self.n_params()
+        return d
+
+
+# The mu-OPT family. Scale ladder mirrors OPT's (each step ~2-4x params),
+# shrunk to what a CPU sandbox can train in minutes.
+MU_OPT_MICRO = ModelConfig("mu-opt-micro", n_layers=4, n_heads=4, d_model=128)
+MU_OPT_MINI = ModelConfig("mu-opt-mini", n_layers=6, n_heads=6, d_model=192)
+MU_OPT_SMALL = ModelConfig("mu-opt-small", n_layers=8, n_heads=8, d_model=256)
+
+MODEL_FAMILY = {
+    c.name: c for c in (MU_OPT_MICRO, MU_OPT_MINI, MU_OPT_SMALL)
+}
+
+
+@dataclass(frozen=True)
+class VlmConfig:
+    """mu-VLM: a patch-embed vision tower feeding a mu-OPT text decoder,
+    standing in for LLaVA-7B (vision tower + Vicuna)."""
+
+    name: str = "mu-vlm"
+    image_size: int = 24
+    patch_size: int = 4
+    vision_layers: int = 2
+    vision_heads: int = 4
+    vision_d: int = 128
+    text: ModelConfig = field(
+        default_factory=lambda: ModelConfig(
+            "mu-vlm-text", n_layers=4, n_heads=4, d_model=128
+        )
+    )
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size
+
+    def linear_names(self) -> list:
+        names = []
+        for i in range(self.vision_layers):
+            for lin in ("q", "k", "v", "o", "fc1", "fc2"):
+                names.append(f"vision.{i}.{lin}.w")
+        names.append("proj.w")
+        names.extend(self.text.linear_names())
+        return names
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "image_size": self.image_size,
+            "patch_size": self.patch_size,
+            "vision_layers": self.vision_layers,
+            "vision_heads": self.vision_heads,
+            "vision_d": self.vision_d,
+            "n_patches": self.n_patches,
+            "text": self.text.to_dict(),
+        }
+
+
+MU_VLM = VlmConfig()
+
+# Static batch shapes baked into each artifact kind (PJRT programs have
+# static shapes; the coordinator pads to these).
+EVAL_BATCH = 8  # *_nll artifacts (perplexity evaluation)
+SERVE_BATCH = 4  # *_logits artifacts (next-token serving)
+VLM_BATCH = 8
+
+# Paper Table 4 uses OPT-17B-like shapes analytically; we expose the OPT
+# table so the rust flops counter can extrapolate to paper scale.
+OPT_PAPER_TABLE = {
+    # name: (layers, heads, d_model)
+    "opt-125m": (12, 12, 768),
+    "opt-350m": (24, 16, 1024),
+    "opt-1.3b": (24, 32, 2048),
+    "opt-2.7b": (32, 32, 2560),
+    "opt-6.7b": (32, 32, 4096),
+    "opt-13b": (40, 40, 5120),
+    "opt-30b": (48, 56, 7168),
+    "opt-66b": (64, 72, 9216),
+    "opt-175b": (96, 96, 12288),
+}

@@ -1,0 +1,408 @@
+"""Synthetic data substrates (DESIGN.md S2 substitutions).
+
+The sandbox has no dataset hub, so we build generators whose *statistical
+structure* reproduces what each paper experiment needs:
+
+- Three text corpora with deliberately different domain statistics
+  (synth-wiki / synth-news / synth-web standing in for WT2 / PTB / C4).
+  Table 1's experiment is about calibration/test domain shift — the three
+  grammars use different topic vocabularies, sentence shapes and markup
+  noise, so cross-domain calibration mismatch is real and controllable.
+
+- SynthQA (stands in for ScienceQA): multimodal multiple-choice questions
+  stratified by subject {NAT, SOC, LAN}, context modality {TXT, IMG, NO}
+  and grade {G1-6, G7-12}, over 24x24 synthetic images.
+
+- SynthVQA (stands in for TextVQA): the answer must be *read from pixels*
+  (a glyph rendered into the image), exercising the text-in-image skill.
+
+Everything is seeded and versioned; rust reads the corpora as plain text
+and the QA sets through the SQAB binary format (rust/src/data/qa.rs).
+"""
+
+import struct
+
+import numpy as np
+
+IMG = 24  # image side (matches configs.VlmConfig.image_size)
+
+# ---------------------------------------------------------------------------
+# Corpora
+# ---------------------------------------------------------------------------
+
+_WIKI_ENTITIES = (
+    "aldebaran basilica cathedral dynasty empire fjord glacier harbor "
+    "islet junction kingdom lagoon monastery nebula obelisk plateau "
+    "quarry reef summit temple uplands valley watermill zeppelin "
+    "archive ballad chronicle dialect epic folklore gazette hymn"
+).split()
+_WIKI_CLASSES = (
+    "settlement river mountain crater basin province comet mineral "
+    "species manuscript fortress observatory aqueduct cloister"
+).split()
+_WIKI_PLACES = [
+    "northern tyrolia", "the veldt coast", "lower saxonia",
+    "the amber isles", "upper carinthia", "the basalt steppe",
+    "west lusatia", "the coral strait",
+]
+_WIKI_VERBS = "founded charted surveyed excavated restored annexed".split()
+
+_NEWS_COMPANIES = [
+    "acme corp", "nordbank", "helix industries", "veritas group",
+    "zenith holdings", "crestline partners", "omega mills", "atlas freight",
+]
+_NEWS_VERBS = (
+    "reported posted projected announced disclosed forecast revised".split()
+)
+_NEWS_ITEMS = [
+    "quarterly earnings", "net income", "operating revenue",
+    "share dividends", "bond yields", "futures contracts",
+]
+
+_WEB_TOPICS = (
+    "recipe garden review tutorial coupon forum blog travel gadget diet"
+).split()
+_WEB_FILLER = (
+    "click here for more best top free easy quick ultimate guide tips "
+    "tricks how to near me online cheap deal"
+).split()
+
+
+def _sentence(rng, words, zipf_a=1.3):
+    """Zipf-weighted word draw — natural-language-like rank frequencies."""
+    n = len(words)
+    ranks = rng.zipf(zipf_a, size=64) - 1
+    ranks = ranks[ranks < n]
+    return [words[r] for r in ranks]
+
+
+def gen_synth_wiki(rng: np.random.Generator, n_chars: int) -> str:
+    """Encyclopedia-style: headings, entity-is-a-class sentences, years."""
+    out = []
+    size = 0
+    while size < n_chars:
+        ent = rng.choice(_WIKI_ENTITIES)
+        out.append(f"\n== {ent.capitalize()} ==\n")
+        for _ in range(rng.integers(2, 6)):
+            e = rng.choice(_WIKI_ENTITIES)
+            c = rng.choice(_WIKI_CLASSES)
+            p = rng.choice(_WIKI_PLACES)
+            v = rng.choice(_WIKI_VERBS)
+            y = rng.integers(1100, 1990)
+            s = f"The {e} of {p} is a {c} {v} in {y}. "
+            extra = " ".join(_sentence(rng, _WIKI_ENTITIES + _WIKI_CLASSES)[:6])
+            if extra:
+                s += f"It is related to the {extra}. "
+            out.append(s)
+            size += len(s)
+    return "".join(out)
+
+
+def gen_synth_news(rng: np.random.Generator, n_chars: int) -> str:
+    """PTB/WSJ-style: short finance sentences, numerals, fixed idioms."""
+    out = []
+    size = 0
+    while size < n_chars:
+        co = rng.choice(_NEWS_COMPANIES)
+        v = rng.choice(_NEWS_VERBS)
+        item = rng.choice(_NEWS_ITEMS)
+        pct = rng.integers(1, 40)
+        mm = rng.integers(2, 980)
+        s = f"{co} {v} {item} of $ {mm} million , {'up' if rng.random() < 0.5 else 'down'} {pct} % from a year earlier . "
+        if rng.random() < 0.3:
+            s += f"analysts said the {rng.choice(_NEWS_ITEMS)} outlook remains {'strong' if rng.random() < 0.5 else 'weak'} . "
+        out.append(s)
+        size += len(s)
+        if rng.random() < 0.12:
+            out.append("\n")
+    return "".join(out)
+
+
+def gen_synth_web(rng: np.random.Generator, n_chars: int) -> str:
+    """C4-style: noisy web text — boilerplate, urls, lists, mixed casing."""
+    out = []
+    size = 0
+    while size < n_chars:
+        t = rng.choice(_WEB_TOPICS)
+        f1 = " ".join(_sentence(rng, _WEB_FILLER)[:5])
+        mode = rng.integers(0, 4)
+        if mode == 0:
+            s = f"{f1} {t} 2023 | www.{t}{rng.integers(1, 99)}.example.com\n"
+        elif mode == 1:
+            s = f"- {t}: {f1} ({rng.integers(1, 500)} reviews)\n"
+        elif mode == 2:
+            s = f"THE BEST {t.upper()} {f1}!!! "
+        else:
+            s = f"posted by user{rng.integers(1, 400)}: my {t} {f1}. "
+        out.append(s)
+        size += len(s)
+    return "".join(out)
+
+
+CORPUS_GENERATORS = {
+    "synth_wiki": gen_synth_wiki,
+    "synth_news": gen_synth_news,
+    "synth_web": gen_synth_web,
+}
+
+
+def write_corpora(out_dir, train_chars=1_500_000, test_chars=96_000, seed=2026):
+    """Write {domain}.{train,test}.txt; train/test use disjoint seeds."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+    for i, (name, gen) in enumerate(sorted(CORPUS_GENERATORS.items())):
+        for split, n, salt in (("train", train_chars, 0), ("test", test_chars, 7)):
+            rng = np.random.default_rng(seed + 100 * i + salt)
+            text = gen(rng, n)
+            p = f"{out_dir}/{name}.{split}.txt"
+            with open(p, "w") as f:
+                f.write(text)
+            paths[f"{name}.{split}"] = p
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# Glyph font for SynthVQA (digits rendered into pixels, 3x5 bitmaps)
+# ---------------------------------------------------------------------------
+
+_FONT = {
+    "0": "111101101101111",
+    "1": "010110010010111",
+    "2": "111001111100111",
+    "3": "111001111001111",
+    "4": "101101111001001",
+    "5": "111100111001111",
+    "6": "111100111101111",
+    "7": "111001010010010",
+    "8": "111101111101111",
+    "9": "111101111001111",
+}
+
+
+def _draw_glyph(img: np.ndarray, ch: str, r: int, c: int, scale: int = 3):
+    bits = _FONT[ch]
+    for i in range(5):
+        for j in range(3):
+            if bits[i * 3 + j] == "1":
+                img[
+                    r + i * scale : r + (i + 1) * scale,
+                    c + j * scale : c + (j + 1) * scale,
+                ] = 1.0
+
+
+def _draw_blob(img, rng, quadrant=None, intensity=None):
+    """Fill a 6x6 blob at a random spot (optionally inside a quadrant)."""
+    half = IMG // 2
+    if quadrant is None:
+        r0, c0 = rng.integers(0, IMG - 6), rng.integers(0, IMG - 6)
+    else:
+        qr, qc = divmod(quadrant, 2)
+        r0 = qr * half + rng.integers(0, half - 6)
+        c0 = qc * half + rng.integers(0, half - 6)
+    val = intensity if intensity is not None else float(rng.uniform(0.4, 1.0))
+    img[r0 : r0 + 6, c0 : c0 + 6] = np.maximum(img[r0 : r0 + 6, c0 : c0 + 6], val)
+    return val
+
+
+# ---------------------------------------------------------------------------
+# SynthQA: ScienceQA-like strata (subject x modality x grade)
+# ---------------------------------------------------------------------------
+
+SUBJECT_NAT, SUBJECT_SOC, SUBJECT_LAN = 0, 1, 2
+MOD_TXT, MOD_IMG, MOD_NO = 0, 1, 2
+GRADE_LO, GRADE_HI = 0, 1  # G1-6 / G7-12
+
+_NAT_FACTS = [
+    ("iron", "metal"), ("quartz", "mineral"), ("oak", "tree"),
+    ("fern", "plant"), ("granite", "rock"), ("helium", "gas"),
+    ("salmon", "fish"), ("falcon", "bird"), ("amber", "resin"),
+    ("basalt", "rock"),
+]
+_SOC_FACTS = [
+    ("mayor", "city"), ("judge", "court"), ("farmer", "field"),
+    ("sailor", "ship"), ("teacher", "school"), ("miner", "mine"),
+    ("baker", "bakery"), ("guard", "gate"),
+]
+_LAN_WORDS = "cat dog sun map pen cup log fox hat jar kit lamp".split()
+
+_LETTERS = "ABCD"
+
+
+def _mc_question(rng, stem, correct, pool, n_choices=4):
+    """Build a multiple-choice record: distractors drawn from pool.
+
+    The question text lists the choices and ends with "Answer:"; grading
+    appends each choice text and compares continuation NLL (both the rust
+    harness and parse_choices() below rely on this exact format).
+    """
+    distract = [p for p in pool if p != correct]
+    rng.shuffle(distract)
+    choices = distract[: n_choices - 1] + [correct]
+    rng.shuffle(choices)
+    ans = choices.index(correct)
+    body = " ".join(
+        f"{_LETTERS[i]}) {c}" for i, c in enumerate(choices)
+    )
+    text = f"Q: {stem}\n{body}\nAnswer:"
+    return text, ans
+
+
+def parse_choices(question: str):
+    """Recover choice texts from the canonical question format."""
+    body = question.split("\n")[1]
+    parts = []
+    for i, letter in enumerate(_LETTERS):
+        tag = f"{letter}) "
+        start = body.find(tag)
+        if start < 0:
+            break
+        start += len(tag)
+        nxt = len(body)
+        for l2 in _LETTERS[i + 1 :]:
+            j = body.find(f" {l2}) ", start)
+            if j >= 0:
+                nxt = j
+                break
+        parts.append(body[start:nxt])
+    return parts
+
+
+def make_synthqa_record(rng: np.random.Generator):
+    """One SynthQA sample: (image f32[24,24], question str, answer idx,
+    subject, modality, grade)."""
+    subject = int(rng.integers(0, 3))
+    grade = int(rng.integers(0, 2))
+    img = np.zeros((IMG, IMG), np.float32)
+
+    if subject == SUBJECT_NAT:
+        modality = int(rng.integers(0, 3))
+        if modality == MOD_IMG:
+            lo, hi = (1, 5) if grade == GRADE_LO else (4, 8)
+            n = int(rng.integers(lo, hi))
+            for _ in range(n):
+                _draw_blob(img, rng)
+            q, a = _mc_question(
+                rng, "how many mineral samples are shown?", str(n),
+                [str(x) for x in range(0, 10)],
+            )
+        elif modality == MOD_TXT:
+            thing, cls = _NAT_FACTS[rng.integers(0, len(_NAT_FACTS))]
+            q, a = _mc_question(
+                rng,
+                f"the {thing} sample was collected. what kind of matter is {thing}?",
+                cls, sorted({c for _, c in _NAT_FACTS}),
+            )
+        else:
+            thing, cls = _NAT_FACTS[rng.integers(0, len(_NAT_FACTS))]
+            q, a = _mc_question(
+                rng, f"what is {thing}?", cls, sorted({c for _, c in _NAT_FACTS})
+            )
+    elif subject == SUBJECT_SOC:
+        modality = int(rng.integers(0, 3))
+        if modality == MOD_IMG:
+            quad = int(rng.integers(0, 4))
+            _draw_blob(img, rng, quadrant=quad, intensity=1.0)
+            for oq in range(4):
+                if oq != quad:
+                    _draw_blob(img, rng, quadrant=oq, intensity=0.3)
+            names = ["north-west", "north-east", "south-west", "south-east"]
+            q, a = _mc_question(
+                rng, "which district on the map is most populated?",
+                names[quad], names,
+            )
+        elif modality == MOD_TXT:
+            who, where = _SOC_FACTS[rng.integers(0, len(_SOC_FACTS))]
+            q, a = _mc_question(
+                rng,
+                f"the {who} went to work this morning. where does the {who} work?",
+                where, sorted({w for _, w in _SOC_FACTS}),
+            )
+        else:
+            who, where = _SOC_FACTS[rng.integers(0, len(_SOC_FACTS))]
+            q, a = _mc_question(
+                rng, f"where does a {who} work?", where,
+                sorted({w for _, w in _SOC_FACTS}),
+            )
+    else:  # SUBJECT_LAN
+        modality = MOD_TXT if rng.random() < 0.5 else MOD_NO
+        w = _LAN_WORDS[rng.integers(0, len(_LAN_WORDS))]
+        if grade == GRADE_LO:
+            q, a = _mc_question(
+                rng, f"which letter does the word '{w}' start with?",
+                w[0], sorted({x[0] for x in _LAN_WORDS}),
+            )
+        else:
+            q, a = _mc_question(
+                rng, f"which letter does the word '{w}' end with?",
+                w[-1], sorted({x[-1] for x in _LAN_WORDS}),
+            )
+
+    return img, q, a, subject, modality, grade
+
+
+def make_synthvqa_record(rng: np.random.Generator):
+    """One SynthVQA sample: a 2-digit number rendered into the image; the
+    question asks to read it (answer among 4 numeric choices)."""
+    img = np.zeros((IMG, IMG), np.float32)
+    # light clutter so reading is non-trivial
+    for _ in range(int(rng.integers(0, 3))):
+        _draw_blob(img, rng, intensity=0.25)
+    n = int(rng.integers(10, 100))
+    s = str(n)
+    _draw_glyph(img, s[0], 4, 2)
+    _draw_glyph(img, s[1], 4, 13)
+    pool = {str(int(rng.integers(10, 100))) for _ in range(12)} | {str(n)}
+    q, a = _mc_question(
+        rng, "what number is written in the picture?", str(n), sorted(pool)
+    )
+    return img, q, a, 0, MOD_IMG, 0
+
+
+# ---------------------------------------------------------------------------
+# SQAB binary format (shared with rust/src/data/qa.rs — keep in sync)
+# ---------------------------------------------------------------------------
+
+SQAB_MAGIC = b"SQAB0001"
+
+
+def write_qa_bin(path, records, max_qlen=120):
+    """records: iterable of (img, qtext, answer, subject, modality, grade)."""
+    recs = list(records)
+    with open(path, "wb") as f:
+        f.write(SQAB_MAGIC)
+        f.write(struct.pack("<IIII", len(recs), IMG, IMG, max_qlen))
+        for img, q, a, subj, mod, grade in recs:
+            qb = q.encode("utf-8")
+            assert len(qb) <= max_qlen, f"question too long ({len(qb)}): {q!r}"
+            f.write(struct.pack("<BBBBI", subj, mod, grade, a, len(qb)))
+            f.write(qb.ljust(max_qlen, b"\x00"))
+            f.write(img.astype("<f4").tobytes())
+
+
+def read_qa_bin(path):
+    with open(path, "rb") as f:
+        assert f.read(8) == SQAB_MAGIC
+        n, h, w, max_qlen = struct.unpack("<IIII", f.read(16))
+        out = []
+        for _ in range(n):
+            subj, mod, grade, a, qlen = struct.unpack("<BBBBI", f.read(8))
+            q = f.read(max_qlen)[:qlen].decode("utf-8")
+            img = np.frombuffer(f.read(h * w * 4), dtype="<f4").reshape(h, w)
+            out.append((img, q, a, subj, mod, grade))
+        return out
+
+
+def write_qa_sets(out_dir, n_train=4000, n_test=600, seed=2027):
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    for name, maker, salt in (
+        ("synthqa", make_synthqa_record, 0),
+        ("synthvqa", make_synthvqa_record, 31),
+    ):
+        for split, n, salt2 in (("train", n_train, 0), ("test", n_test, 13)):
+            rng = np.random.default_rng(seed + salt + salt2)
+            recs = [maker(rng) for _ in range(n)]
+            write_qa_bin(f"{out_dir}/{name}.{split}.bin", recs)

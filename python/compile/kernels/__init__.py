@@ -1,0 +1,3 @@
+"""Pallas L1 kernels (interpret=True) + pure-jnp reference oracle."""
+
+from . import attention, layernorm, ref, wanda  # noqa: F401

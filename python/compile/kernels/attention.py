@@ -1,0 +1,55 @@
+"""L1 Pallas causal attention kernel.
+
+One grid step per (batch, head): at mu-OPT scale (T<=128, head_dim<=64) a
+full (T, hd) Q/K/V panel fits comfortably in VMEM (3*128*64*4B = 96KiB),
+so the kernel computes the whole attention matrix for its (b, h) program
+rather than streaming K/V flash-style; the flash decomposition only pays
+once T*hd exceeds VMEM. Padding and causality are masked in-kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INTERPRET = True
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    q = q_ref[0, 0]  # (T, hd)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    t = q.shape[0]
+    logits = (q @ k.T) * scale
+    pos = jax.lax.iota(jnp.int32, t)
+    causal = pos[None, :] <= pos[:, None]
+    valid = pos[None, :] < len_ref[0]
+    logits = jnp.where(causal & valid, logits, -1e30)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = p @ v
+
+
+def causal_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray
+) -> jnp.ndarray:
+    """q,k,v: (B, H, T, hd); lengths: (B,) int32 -> (B, H, T, hd)."""
+    b_, h_, t_, hd = q.shape
+    scale = 1.0 / (hd**0.5)
+    kern = functools.partial(_attn_kernel, scale=scale)
+    spec = pl.BlockSpec((1, 1, t_, hd), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(b_, h_),
+        in_specs=[
+            spec,
+            spec,
+            spec,
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b_, h_, t_, hd), q.dtype),
+        interpret=_INTERPRET,
+    )(q, k, v, lengths)

@@ -1,0 +1,43 @@
+"""L1 Pallas layernorm kernel (row-tiled)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_ROW = 128
+
+_INTERPRET = True
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * g_ref[...][None, :] + b_ref[...][
+        None, :
+    ]
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    """x: (M, d); g,b: (d,). The feature dimension stays whole in VMEM (the
+    reduction is over it); rows are tiled."""
+    import functools
+
+    m_, d_ = x.shape
+    bm = min(BLK_ROW, m_)
+    while m_ % bm:  # interpret-mode pallas needs evenly tiling blocks
+        bm -= 1
+    grid = (-(-m_ // bm),)
+    kern = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_), lambda i: (i, 0)),
+            pl.BlockSpec((d_,), lambda i: (0,)),
+            pl.BlockSpec((d_,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_, d_), x.dtype),
+        interpret=_INTERPRET,
+    )(x, g, b)

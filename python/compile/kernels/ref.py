@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness signal).
+
+Each function here is the mathematical definition the corresponding Pallas
+kernel must match to within float tolerance; pytest sweeps shapes/dtypes via
+hypothesis and asserts allclose (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def wanda_score(w: jnp.ndarray, col_norms: jnp.ndarray) -> jnp.ndarray:
+    """Wanda importance score S'_{i,j} = |W_{i,j}| * ||X_{j,:}||_2 (paper eq. 3).
+
+    w: (d_out, d_in) weight matrix; col_norms: (d_in,) activation l2 norms.
+    """
+    return jnp.abs(w) * col_norms[None, :]
+
+
+def row_kth_threshold(scores: jnp.ndarray, k_inactive: jnp.ndarray) -> jnp.ndarray:
+    """Per-row threshold = k_inactive-th smallest score (paper App. B,
+    torch.kthvalue formulation), with k_inactive a *dynamic* scalar so a
+    single AOT artifact serves every sparsity level.
+
+    Returns (d_out,) thresholds; rows keep weights with score > threshold.
+    k_inactive == 0 (rho = 1.0) keeps everything: threshold is -1 (scores
+    are non-negative).
+    """
+    srt = jnp.sort(scores, axis=-1)  # ascending, static shape
+    d_in = scores.shape[-1]
+    idx = jnp.clip(k_inactive - 1, 0, d_in - 1).astype(jnp.int32)
+    thr = jax.lax.dynamic_index_in_dim(srt, idx, axis=-1, keepdims=False)
+    return jnp.where(k_inactive <= 0, -1.0, thr)
+
+
+def prune_mask(scores: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Binary micro-expert activation mask: 1 where score > row threshold."""
+    return (scores > thresholds[:, None]).astype(scores.dtype)
+
+
+def masked_linear(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """y = x @ (W * mask)^T + b — the micro-expert mixture: each surviving
+    weight is a single-parameter expert, gated by `mask`.
+
+    x: (..., d_in), w: (d_out, d_in), mask: (d_out, d_in), b: (d_out,).
+    """
+    return x @ (w * mask).T + b
+
+
+def wanda_prune_linear(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, k_inactive: jnp.ndarray
+) -> jnp.ndarray:
+    """Full online (test-time) Wanda pruning of one linear: score from the
+    *current* activations x, threshold per row, mask, apply. This is the
+    mu-MoE hot path (paper S2, 'Instant Wanda Pruning as mu-MoE')."""
+    flat = x.reshape(-1, x.shape[-1])
+    col_norms = jnp.sqrt(jnp.sum(flat * flat, axis=0))
+    s = wanda_score(w, col_norms)
+    thr = row_kth_threshold(s, k_inactive)
+    mask = prune_mask(s, thr)
+    return masked_linear(x, w, b, mask)
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def causal_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray
+) -> jnp.ndarray:
+    """Multi-head causal attention with right-padding masked out.
+
+    q,k,v: (B, H, T, hd); lengths: (B,) valid-token counts.
+    """
+    b_, h_, t_, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    pos = jnp.arange(t_)
+    causal = pos[None, :] <= pos[:, None]  # (Tq, Tk)
+    valid = pos[None, :] < lengths[:, None]  # (B, Tk)
+    m = causal[None, None, :, :] & valid[:, None, None, :]
+    logits = jnp.where(m, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def col_l2_norms(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-feature l2 norm over all tokens: ||X_{j,:}||_2 with X (d, T) in
+    paper notation; here x is (T, d) so we reduce over axis 0."""
+    return jnp.sqrt(jnp.sum(x * x, axis=0))

@@ -1,0 +1,210 @@
+"""L1 Pallas kernels for the mu-MoE hot spot: Wanda scoring, micro-expert
+masking, and the fused prune+matmul that the L2 model calls.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO that both the
+python tests and the rust runtime can run. Block shapes are chosen for a
+TPU-shaped memory hierarchy (DESIGN.md S3): weight tiles of (BLK_OUT, BLK_IN)
+live in VMEM, the per-column norm vector stays resident, and the mask is
+applied to the tile right before the MXU dot so the systolic array always
+sees a dense tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: multiples of the (8, 128) f32 TPU tile; d_model in the mu-OPT
+# family is 128..256 so a single block often covers the full dimension.
+BLK_OUT = 128
+BLK_IN = 128
+BLK_TOK = 128
+
+_INTERPRET = True  # CPU sandbox; see module docstring.
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest block size <= pref that divides dim exactly. Interpret-mode
+    pallas pads out-of-bounds tiles with undefined values, so blocks must
+    tile the array evenly; model dims are powers-of-two multiples so this
+    almost always returns pref."""
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Wanda scoring: S = |W| * col_norms  (paper eq. 3)
+# ---------------------------------------------------------------------------
+
+
+def _score_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * n_ref[...][None, :]
+
+
+def wanda_score(w: jnp.ndarray, col_norms: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Wanda score. w: (d_out, d_in), col_norms: (d_in,)."""
+    d_out, d_in = w.shape
+    bo, bi = _pick_block(d_out, BLK_OUT), _pick_block(d_in, BLK_IN)
+    grid = (_ceil_div(d_out, bo), _ceil_div(d_in, bi))
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bo, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bo, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), w.dtype),
+        interpret=_INTERPRET,
+    )(w, col_norms)
+
+
+# ---------------------------------------------------------------------------
+# Column l2 norms over tokens: ||X_{j,:}||_2 (the activation statistic)
+# ---------------------------------------------------------------------------
+
+
+def _colnorm_kernel(x_ref, o_ref, *, n_tok_blocks):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    o_ref[...] += jnp.sum(x * x, axis=0)
+
+
+def col_sq_sums(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-feature sum of squares over tokens; sqrt gives the Wanda norm.
+
+    x: (T, d). Returned un-rooted so offline calibration can accumulate
+    across batches before the sqrt (matches rust/src/pruning/wanda.rs).
+    """
+    t_, d_ = x.shape
+    bt, bd = _pick_block(t_, BLK_TOK), _pick_block(d_, BLK_IN)
+    grid = (_ceil_div(d_, bd), _ceil_div(t_, bt))
+    kern = functools.partial(_colnorm_kernel, n_tok_blocks=grid[1])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, bd), lambda j, t: (t, j))],
+        out_specs=pl.BlockSpec((bd,), lambda j, t: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d_,), x.dtype),
+        interpret=_INTERPRET,
+    )(x)
+
+
+def col_l2_norms(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(col_sq_sums(x))
+
+
+# ---------------------------------------------------------------------------
+# Fused micro-expert gate + matmul:
+#   y = x @ (W * [S > thr_row])^T + b
+# The mask never materializes in HBM: each (BLK_OUT, BLK_IN) weight tile is
+# scored, gated and fed to the dot in VMEM. This is the kernel that makes
+# "instant Wanda pruning" nearly free (paper S2 complexity argument).
+# ---------------------------------------------------------------------------
+
+
+def _prune_matmul_kernel(x_ref, w_ref, n_ref, thr_ref, b_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    s = jnp.abs(w) * n_ref[...][None, :]
+    gated = jnp.where(s > thr_ref[...][:, None], w, 0.0)
+    o_ref[...] += x_ref[...] @ gated.T
+
+    @pl.when(k == nk - 1)
+    def _bias():
+        o_ref[...] += b_ref[...][None, :]
+
+
+def prune_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    col_norms: jnp.ndarray,
+    thresholds: jnp.ndarray,
+) -> jnp.ndarray:
+    """x: (M, d_in), w: (d_out, d_in), b/thresholds: (d_out,), col_norms:
+    (d_in,) -> (M, d_out)."""
+    m_, d_in = x.shape
+    d_out = w.shape[0]
+    bm = _pick_block(m_, BLK_TOK)
+    bn = _pick_block(d_out, BLK_OUT)
+    bk = _pick_block(d_in, BLK_IN)
+    grid = (_ceil_div(m_, bm), _ceil_div(d_out, bn), _ceil_div(d_in, bk))
+    kern = functools.partial(_prune_matmul_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_, d_out), x.dtype),
+        interpret=_INTERPRET,
+    )(x, w, col_norms, thresholds, b)
+
+
+# ---------------------------------------------------------------------------
+# Plain masked matmul (offline pruning path / oracle for fused kernel)
+# ---------------------------------------------------------------------------
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, b_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ (w_ref[...] * m_ref[...]).T
+
+    @pl.when(k == nk - 1)
+    def _bias():
+        o_ref[...] += b_ref[...][None, :]
+
+
+def masked_matmul(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """y = x @ (W*mask)^T + b with mask applied tile-wise in VMEM."""
+    m_, d_in = x.shape
+    d_out = w.shape[0]
+    bm = _pick_block(m_, BLK_TOK)
+    bn = _pick_block(d_out, BLK_OUT)
+    bk = _pick_block(d_in, BLK_IN)
+    grid = (_ceil_div(m_, bm), _ceil_div(d_out, bn), _ceil_div(d_in, bk))
+    kern = functools.partial(_masked_matmul_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_, d_out), x.dtype),
+        interpret=_INTERPRET,
+    )(x, w, mask, b)

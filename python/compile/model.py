@@ -1,0 +1,354 @@
+"""L2: the mu-OPT decoder in JAX — dense, masked (offline pruning) and
+mu-MoE (online test-time pruning) forward variants, plus loss/train-step.
+
+The mu-MoE variant is the paper's contribution: every linear layer scores
+its weights against the *current prompt's* activation norms (Wanda, eq. 3),
+thresholds per output row at the k_c-th smallest score (App. B kthvalue
+formulation) and multiplies through the resulting micro-expert gate. The
+sparsity rho enters as a runtime scalar so a single AOT artifact serves all
+sparsity levels (DESIGN.md S6).
+
+Parameters travel as a flat {name: array} dict; `param_order(cfg)` fixes the
+canonical ordering used for AOT artifact signatures and the rust checkpoint
+loader (rust/src/model/checkpoint.rs) — keep the three in sync.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PAD_ID
+from .kernels import attention as kattn
+from .kernels import layernorm as kln
+from .kernels import ref as kref
+from .kernels import wanda as kwanda
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_order(cfg: ModelConfig) -> list:
+    """Canonical parameter name order for artifacts and checkpoints."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        names += [f"{p}.ln1.g", f"{p}.ln1.b"]
+        for lin in ("q", "k", "v", "o"):
+            names += [f"{p}.{lin}.w", f"{p}.{lin}.b"]
+        names += [f"{p}.ln2.g", f"{p}.ln2.b"]
+        names += [f"{p}.fc1.w", f"{p}.fc1.b", f"{p}.fc2.w", f"{p}.fc2.b"]
+    names += ["ln_f.g", "ln_f.b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    d, di, v, t = cfg.d_model, cfg.d_inner, cfg.vocab_size, cfg.max_seq_len
+    shapes = {"tok_emb": (v, d), "pos_emb": (t, d)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        shapes[f"{p}.ln1.g"] = (d,)
+        shapes[f"{p}.ln1.b"] = (d,)
+        for lin in ("q", "k", "v", "o"):
+            shapes[f"{p}.{lin}.w"] = (d, d)
+            shapes[f"{p}.{lin}.b"] = (d,)
+        shapes[f"{p}.ln2.g"] = (d,)
+        shapes[f"{p}.ln2.b"] = (d,)
+        shapes[f"{p}.fc1.w"] = (di, d)
+        shapes[f"{p}.fc1.b"] = (di,)
+        shapes[f"{p}.fc2.w"] = (d, di)
+        shapes[f"{p}.fc2.b"] = (d,)
+    shapes["ln_f.g"] = (d,)
+    shapes["ln_f.b"] = (d,)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """OPT-style init: N(0, 0.02) for weights, zeros for biases, ones for LN
+    scales."""
+    shapes = param_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(shapes))
+    for k, (name, shape) in zip(keys, sorted(shapes.items())):
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b") and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "pos_emb":
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: dict) -> list:
+    return [params[n] for n in param_order(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat: list) -> dict:
+    return dict(zip(param_order(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Linear-layer strategies (the micro-expert gating point)
+# ---------------------------------------------------------------------------
+
+
+def _dense_linear(x2d, w, b, _norms, _kc):
+    return x2d @ w.T + b
+
+
+def _mumoe_linear(x2d, w, b, norms, k_inactive):
+    """Online Wanda gate + fused masked matmul (L1 Pallas kernels).
+
+    `norms` is the per-feature l2 norm of the *current* activations —
+    computed once per distinct input (q/k/v share theirs) by the caller.
+    """
+    s = kwanda.wanda_score(w, norms)
+    thr = kref.row_kth_threshold(s, k_inactive)
+    return kwanda.prune_matmul(x2d, w, b, norms, thr)
+
+
+def _kc_for(d_in: int, rho):
+    """Number of *inactive* weights per row: k_c = floor((1-rho) d_in),
+    clipped to [0, d_in-1] so rho=0 still keeps one weight per row."""
+    kc = jnp.floor((1.0 - rho) * d_in).astype(jnp.int32)
+    return jnp.clip(kc, 0, d_in - 1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+
+def _ln(x2d, g, b, use_kernels=False):
+    """Pallas layernorm on the mu-MoE path; pure-jnp on the dense/training
+    path (interpret-mode pallas_call has no autodiff rules, and the dense
+    baseline should be exactly the plain-XLA reference)."""
+    if use_kernels:
+        return kln.layernorm(x2d, g, b)
+    return kref.layernorm(x2d, g, b)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    lengths: jnp.ndarray,
+    rho=None,
+):
+    """Returns final-LN hidden states (B, T, d) and logits (B, T, V).
+
+    rho=None -> dense path (plain XLA matmuls; also the offline-pruned path,
+    where the host has already zeroed weights). rho=scalar -> mu-MoE online
+    pruning of every linear layer, through the L1 Pallas kernels.
+    """
+    b_, t_ = tokens.shape
+    d = cfg.d_model
+    mumoe = rho is not None
+    attn_fn = kattn.causal_attention if mumoe else kref.causal_attention
+
+    tok_emb = params["tok_emb"]
+    h = tok_emb[tokens] + params["pos_emb"][None, :t_, :]
+
+    def linear(x2d, name, norms, kc):
+        w, bb = params[f"{name}.w"], params[f"{name}.b"]
+        if mumoe:
+            return _mumoe_linear(x2d, w, bb, norms, kc)
+        return _dense_linear(x2d, w, bb, None, None)
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        x2d = h.reshape(b_ * t_, d)
+        y = _ln(x2d, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"], mumoe)
+
+        norms = kc = None
+        if mumoe:
+            norms = jnp.sqrt(kwanda.col_sq_sums(y))
+            kc = _kc_for(d, rho)
+        q = linear(y, f"{p}.q", norms, kc)
+        k = linear(y, f"{p}.k", norms, kc)
+        v = linear(y, f"{p}.v", norms, kc)
+
+        hd = cfg.head_dim
+        q = q.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        attn = attn_fn(q, k, v, lengths)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b_ * t_, d)
+
+        if mumoe:
+            norms_o = jnp.sqrt(kwanda.col_sq_sums(attn))
+        else:
+            norms_o = None
+        h = h + linear(attn, f"{p}.o", norms_o, kc).reshape(b_, t_, d)
+
+        x2d = h.reshape(b_ * t_, d)
+        y = _ln(x2d, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"], mumoe)
+        if mumoe:
+            norms1 = jnp.sqrt(kwanda.col_sq_sums(y))
+        else:
+            norms1 = None
+        z = linear(y, f"{p}.fc1", norms1, kc)
+        z = jax.nn.relu(z)
+        if mumoe:
+            norms2 = jnp.sqrt(kwanda.col_sq_sums(z))
+            kc2 = _kc_for(cfg.d_inner, rho)
+        else:
+            norms2 = kc2 = None
+        h = h + linear(z, f"{p}.fc2", norms2, kc2).reshape(b_, t_, d)
+
+    x2d = h.reshape(b_ * t_, d)
+    x2d = _ln(x2d, params["ln_f.g"], params["ln_f.b"], mumoe)
+    hidden = x2d.reshape(b_, t_, d)
+    logits = hidden @ tok_emb.T  # tied LM head (OPT ties embeddings)
+    return hidden, logits
+
+
+# ---------------------------------------------------------------------------
+# Evaluation / serving heads
+# ---------------------------------------------------------------------------
+
+
+def nll_sums(cfg: ModelConfig, params, tokens, lengths, rho=None):
+    """Per-sequence (sum of next-token NLL, predicted-token count).
+
+    Position t predicts token t+1; only positions t+1 < length count.
+    Returns (B,) f32 sums and (B,) i32 counts — the rust evaluator
+    aggregates exp(sum/count) into perplexity without shipping logits.
+    """
+    _, logits = forward(cfg, params, tokens, lengths, rho=rho)
+    b_, t_ = tokens.shape
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    tgt_lp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    pos = jnp.arange(t_ - 1)
+    valid = (pos[None, :] + 1) < lengths[:, None]
+    nll = -jnp.where(valid, tgt_lp, 0.0)
+    return jnp.sum(nll, axis=-1), jnp.sum(valid.astype(jnp.int32), axis=-1)
+
+
+def last_logits(cfg: ModelConfig, params, tokens, lengths, rho=None):
+    """Next-token logits at each sequence's last valid position: (B, V).
+    This is the serving head used by the coordinator's generate path."""
+    _, logits = forward(cfg, params, tokens, lengths, rho=rho)
+    idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Calibration statistics (offline pruning path)
+# ---------------------------------------------------------------------------
+
+
+def calib_stats(cfg: ModelConfig, params, tokens, lengths, with_hessian=True):
+    """Dense forward that records, for every prunable linear, the activation
+    statistics offline pruners need: per-feature sum of squares (Wanda) and,
+    optionally, the full empirical Hessian X X^T (SparseGPT).
+
+    Padding tokens are zero-weighted so they do not pollute the statistics.
+    Outputs are ordered by cfg.linear_names().
+    """
+    b_, t_ = tokens.shape
+    d = cfg.d_model
+    pos = jnp.arange(t_)
+    valid = (pos[None, :] < lengths[:, None]).astype(jnp.float32)
+    vmask = valid.reshape(b_ * t_, 1)
+
+    sq, hess = {}, {}
+
+    def record(name, x2d):
+        x = x2d * vmask
+        sq[name] = jnp.sum(x * x, axis=0)
+        if with_hessian:
+            hess[name] = x.T @ x
+
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t_, :]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        x2d = h.reshape(b_ * t_, d)
+        y = _ln(x2d, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        for lin in ("q", "k", "v"):
+            record(f"{p}.{lin}.w", y)
+        q = _dense_linear(y, params[f"{p}.q.w"], params[f"{p}.q.b"], None, None)
+        k = _dense_linear(y, params[f"{p}.k.w"], params[f"{p}.k.b"], None, None)
+        v = _dense_linear(y, params[f"{p}.v.w"], params[f"{p}.v.b"], None, None)
+        hd = cfg.head_dim
+        q = q.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b_, t_, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        attn = kref.causal_attention(q, k, v, lengths)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b_ * t_, d)
+        record(f"{p}.o.w", attn)
+        h = h + _dense_linear(
+            attn, params[f"{p}.o.w"], params[f"{p}.o.b"], None, None
+        ).reshape(b_, t_, d)
+
+        x2d = h.reshape(b_ * t_, d)
+        y = _ln(x2d, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        record(f"{p}.fc1.w", y)
+        z = jax.nn.relu(
+            _dense_linear(y, params[f"{p}.fc1.w"], params[f"{p}.fc1.b"], None, None)
+        )
+        record(f"{p}.fc2.w", z)
+        h = h + _dense_linear(
+            z, params[f"{p}.fc2.w"], params[f"{p}.fc2.b"], None, None
+        ).reshape(b_, t_, d)
+
+    names = cfg.linear_names()
+    out = [sq[n] for n in names]
+    if with_hessian:
+        out += [hess[n] for n in names]
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Training (build-time only; also AOT-exported for examples/train_synth.rs)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, lengths):
+    sums, counts = nll_sums(cfg, params, tokens, lengths, rho=None)
+    return jnp.sum(sums) / jnp.maximum(jnp.sum(counts), 1)
+
+
+def adam_init(params: dict):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in zeros.items()}
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step(cfg: ModelConfig, params, m, v, step, tokens, lengths, lr):
+    """One Adam step; returns (loss, params', m', v'). b1=0.9 b2=0.999."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, lengths))(
+        params
+    )
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = b1 * m[k] + (1 - b1) * g
+        vk = b2 * v[k] + (1 - b2) * g * g
+        mhat = mk / (1 - b1**t)
+        vhat = vk / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = mk, vk
+    return loss, new_p, new_m, new_v
+
+
+def pad_batch(seqs, max_len, pad_id=PAD_ID):
+    """Right-pad a list of python int lists to (B, max_len) + lengths."""
+    import numpy as np
+
+    b = len(seqs)
+    out = np.full((b, max_len), pad_id, dtype=np.int32)
+    lens = np.zeros((b,), dtype=np.int32)
+    for i, s in enumerate(seqs):
+        s = s[:max_len]
+        out[i, : len(s)] = s
+        lens[i] = len(s)
+    return jnp.asarray(out), jnp.asarray(lens)

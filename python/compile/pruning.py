@@ -1,0 +1,123 @@
+"""Offline (calibration-based) pruning baselines, build/test-path Python.
+
+These are the reference implementations the rust engines
+(rust/src/pruning/*.rs) are tested against; the runtime uses the rust ones.
+
+- magnitude:  S = |W|                       (Han et al., 2015)
+- wanda:      S = |W| * ||X_j||_2           (Sun et al., 2023; paper eq. 3)
+- sparsegpt:  OBS with damped Hessian,      (Frantar & Alistarh, 2023;
+              Cholesky, column elimination   paper eq. 2)
+
+All produce per-row semi-structured sparsity: exactly k_c zeros per output
+row at active ratio rho (k_c = floor((1-rho) d_in)), matching the paper's
+"constant number of active weights per row".
+"""
+
+import numpy as np
+
+
+def kc_for(d_in: int, rho: float) -> int:
+    return int(np.clip(int(np.floor((1.0 - rho) * d_in)), 0, d_in - 1))
+
+
+def _mask_from_scores(scores: np.ndarray, rho: float) -> np.ndarray:
+    """Keep the top rho fraction per row (kthvalue formulation: zero the
+    k_c smallest-scored weights per row, ties broken by index order)."""
+    d_out, d_in = scores.shape
+    kc = kc_for(d_in, rho)
+    if kc == 0:
+        return np.ones_like(scores, dtype=np.float32)
+    # argpartition = quickselect; matches rust selection::kthvalue semantics
+    idx = np.argpartition(scores, kc - 1, axis=-1)[:, :kc]
+    mask = np.ones_like(scores, dtype=np.float32)
+    np.put_along_axis(mask, idx, 0.0, axis=-1)
+    return mask
+
+
+def magnitude_mask(w: np.ndarray, rho: float) -> np.ndarray:
+    return _mask_from_scores(np.abs(w), rho)
+
+
+def wanda_mask(w: np.ndarray, col_sq_sums: np.ndarray, rho: float) -> np.ndarray:
+    """col_sq_sums: per-input-feature sum of squares accumulated over the
+    calibration activations (sqrt gives ||X_j||_2)."""
+    scores = np.abs(w) * np.sqrt(col_sq_sums)[None, :]
+    return _mask_from_scores(scores, rho)
+
+
+def sparsegpt_prune(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    rho: float,
+    damp_ratio: float = 0.01,
+    blocksize: int = 128,
+) -> np.ndarray:
+    """SparseGPT one-shot pruning with weight update.
+
+    w: (d_out, d_in); hessian: (d_in, d_in) = X X^T accumulated over
+    calibration tokens. Returns the *updated* pruned weight matrix (unlike
+    the mask-only methods, OBS compensates surviving weights).
+
+    Follows the reference algorithm: damp H, invert via Cholesky, take
+    Hinv's Cholesky factor (upper), then column-wise: score with eq. 2,
+    prune to per-row k_c within each block, propagate the error with
+    Gaussian elimination.
+    """
+    d_out, d_in = w.shape
+    kc = kc_for(d_in, rho)
+    w = w.astype(np.float64).copy()
+    h = hessian.astype(np.float64).copy()
+
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[:, dead] = 0.0
+
+    damp = damp_ratio * np.mean(np.diag(h))
+    h[np.arange(d_in), np.arange(d_in)] += damp
+
+    hinv = np.linalg.inv(h)
+    # Upper Cholesky factor U of H^-1 with Hinv = U^T U (the paper's
+    # Chol[(XX^T + lam I)^-1]; torch.linalg.cholesky(..., upper=True))
+    u = np.linalg.cholesky(hinv).T
+
+    losses = np.zeros_like(w)
+    target_zeros_per_row = kc
+
+    for i1 in range(0, d_in, blocksize):
+        i2 = min(i1 + blocksize, d_in)
+        count = i2 - i1
+        w_blk = w[:, i1:i2].copy()
+        q_blk = np.zeros_like(w_blk)
+        err_blk = np.zeros_like(w_blk)
+        u_blk = u[i1:i2, i1:i2]
+
+        # per-block score and mask: keep the proportional share of zeros
+        scores = (w_blk**2) / (np.diag(u_blk)[None, :] ** 2)
+        n_zero = int(round(target_zeros_per_row * count / d_in))
+        mask = np.ones_like(w_blk)
+        if n_zero > 0:
+            idx = np.argpartition(scores, n_zero - 1, axis=-1)[:, :n_zero]
+            np.put_along_axis(mask, idx, 0.0, axis=-1)
+
+        for j in range(count):
+            col = w_blk[:, j]
+            dj = u_blk[j, j]
+            q = col * mask[:, j]
+            q_blk[:, j] = q
+            losses[:, i1 + j] = (col - q) ** 2 / dj**2
+            e = (col - q) / dj
+            w_blk[:, j:] -= np.outer(e, u_blk[j, j:])
+            err_blk[:, j] = e
+        w[:, i1:i2] = q_blk
+        w[:, i2:] -= err_blk @ u[i1:i2, i2:]
+
+    return w.astype(np.float32)
+
+
+def online_wanda_mask(
+    w: np.ndarray, x: np.ndarray, rho: float
+) -> np.ndarray:
+    """mu-MoE: Wanda mask from the *test-time* activations x (T, d_in).
+    This is the numpy oracle for the in-graph (L1/L2) online pruning."""
+    sq = np.sum(x.astype(np.float64) ** 2, axis=0)
+    return wanda_mask(w, sq, rho)

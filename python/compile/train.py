@@ -1,0 +1,179 @@
+"""Build-time trainer for the mu-OPT family and mu-VLM.
+
+Runs ONCE under `make artifacts` (python never appears on the request path).
+Trains each model on a mixed-domain stream of the three synthetic corpora
+(generalist pretraining, like OPT's corpus mix), and mu-VLM on SynthQA +
+SynthVQA jointly. Writes MUCK checkpoints plus a loss-curve log per model.
+
+Usage: python -m compile.train --out ../artifacts [--steps-scale 1.0]
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ckpt, data, model, vlm
+from .configs import MODEL_FAMILY, MU_VLM, MAX_SEQ_LEN, BOS_ID
+
+# Single-core sandbox: step counts sized to finish `make artifacts` in
+# ~30 min total; the synthetic grammars converge fast at byte level.
+TRAIN_STEPS = {"mu-opt-micro": 1000, "mu-opt-mini": 500, "mu-opt-small": 300}
+VLM_STEPS = 1600
+BATCH = 16
+LR_PEAK = 3e-3
+
+
+def _lr(step, total, peak=LR_PEAK, warmup=100):
+    """Linear warmup + cosine decay to 10% of peak."""
+    w = np.minimum(step / warmup, 1.0)
+    t = np.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return float(peak * w * (0.55 + 0.45 * np.cos(np.pi * t)))
+
+
+def _sample_windows(rng, corpus_bytes, b, t):
+    """(B, T) int32 windows + lengths; BOS-prefixed byte tokens."""
+    toks = np.empty((b, t), np.int32)
+    n = len(corpus_bytes)
+    for i in range(b):
+        off = int(rng.integers(0, n - t))
+        toks[i, 0] = BOS_ID
+        toks[i, 1:] = np.frombuffer(corpus_bytes[off : off + t - 1], np.uint8)
+    lens = np.full((b,), t, np.int32)
+    return jnp.asarray(toks), jnp.asarray(lens)
+
+
+def train_lm(cfg, corpora, out_dir, steps, seed=7, log_every=50):
+    """Train one mu-OPT model on the mixed corpus; returns final loss."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(cfg, key)
+    m, v = model.adam_init(params)
+    blobs = [c.encode("utf-8") for c in corpora]
+
+    log_path = f"{out_dir}/ckpt/{cfg.name}.train.log"
+    losses = []
+    t0 = time.time()
+    with open(log_path, "w") as log:
+        log.write("step\tloss\tlr\telapsed_s\n")
+        for step in range(steps):
+            blob = blobs[int(rng.integers(0, len(blobs)))]
+            toks, lens = _sample_windows(rng, blob, BATCH, MAX_SEQ_LEN)
+            lr = _lr(step, steps)
+            loss, params, m, v = model.train_step(
+                cfg, params, m, v, float(step), toks, lens, lr
+            )
+            losses.append(float(loss))
+            if step % log_every == 0 or step == steps - 1:
+                log.write(
+                    f"{step}\t{float(loss):.4f}\t{lr:.2e}\t{time.time()-t0:.1f}\n"
+                )
+                log.flush()
+                print(
+                    f"[{cfg.name}] step {step}/{steps} loss={float(loss):.4f}",
+                    flush=True,
+                )
+    ckpt.save(f"{out_dir}/ckpt/{cfg.name}.ckpt", params)
+    return losses[-1]
+
+
+def _qa_batch(rng, records, b, max_qlen):
+    """Training batch: question + " " + correct-choice text appended; the
+    loss covers only the appended continuation (LM-style MC scoring)."""
+    idx = rng.integers(0, len(records), size=b)
+    imgs = np.stack([records[i][0] for i in idx]).astype(np.float32)
+    toks = np.zeros((b, max_qlen), np.int32)
+    lens = np.zeros((b,), np.int32)
+    starts = np.zeros((b,), np.int32)
+    for j, i in enumerate(idx):
+        q, ans_idx = records[i][1], records[i][2]
+        choice = data.parse_choices(q)[ans_idx]
+        full = (q + " " + choice).encode("utf-8")[:max_qlen]
+        qlen = min(len(q.encode("utf-8")), max_qlen)
+        toks[j, : len(full)] = np.frombuffer(full, np.uint8)
+        lens[j] = len(full)
+        starts[j] = qlen  # first appended token (the space)
+    return (
+        jnp.asarray(imgs),
+        jnp.asarray(toks),
+        jnp.asarray(lens),
+        jnp.asarray(starts),
+    )
+
+
+def train_vlm(cfg, qa_train, vqa_train, out_dir, steps, seed=11, log_every=50):
+    rng = np.random.default_rng(seed)
+    params = vlm.init_params(cfg, jax.random.PRNGKey(seed))
+    m, v = {k: jnp.zeros_like(x) for k, x in params.items()}, {
+        k: jnp.zeros_like(x) for k, x in params.items()
+    }
+    step_fn = jax.jit(functools.partial(vlm.train_step, cfg))
+    max_qlen = cfg.text.max_seq_len - 1
+
+    log_path = f"{out_dir}/ckpt/{cfg.name}.train.log"
+    t0 = time.time()
+    loss = jnp.float32(0)
+    with open(log_path, "w") as log:
+        log.write("step\tloss\tlr\telapsed_s\n")
+        for step in range(steps):
+            # 70/30 mix of the two tasks (LLaVA trains on mixed instructions)
+            recs = qa_train if rng.random() < 0.7 else vqa_train
+            imgs, toks, lens, starts = _qa_batch(rng, recs, BATCH, max_qlen)
+            lr = _lr(step, steps, peak=1.5e-3)
+            loss, params, m, v = step_fn(
+                params, m, v, float(step), imgs, toks, lens, starts, lr
+            )
+            if step % log_every == 0 or step == steps - 1:
+                log.write(
+                    f"{step}\t{float(loss):.4f}\t{lr:.2e}\t{time.time()-t0:.1f}\n"
+                )
+                log.flush()
+                print(
+                    f"[{cfg.name}] step {step}/{steps} loss={float(loss):.4f}",
+                    flush=True,
+                )
+    ckpt.save(f"{out_dir}/ckpt/{cfg.name}.ckpt", params)
+    return float(loss)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps-scale", type=float, default=1.0)
+    ap.add_argument("--only", default=None, help="train a single model by name")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(f"{out}/ckpt", exist_ok=True)
+    os.makedirs(f"{out}/data", exist_ok=True)
+
+    print("generating corpora...", flush=True)
+    data.write_corpora(f"{out}/data")
+    print("generating QA sets...", flush=True)
+    data.write_qa_sets(f"{out}/data")
+
+    corpora = []
+    for name in sorted(data.CORPUS_GENERATORS):
+        with open(f"{out}/data/{name}.train.txt") as f:
+            corpora.append(f.read())
+
+    for cfg_name, cfg in MODEL_FAMILY.items():
+        if args.only and args.only != cfg_name:
+            continue
+        steps = max(int(TRAIN_STEPS[cfg_name] * args.steps_scale), 10)
+        print(f"training {cfg_name} ({cfg.n_params():,} params, {steps} steps)")
+        train_lm(cfg, corpora, out, steps)
+
+    if args.only in (None, MU_VLM.name):
+        qa = data.read_qa_bin(f"{out}/data/synthqa.train.bin")
+        vqa = data.read_qa_bin(f"{out}/data/synthvqa.train.bin")
+        steps = max(int(VLM_STEPS * args.steps_scale), 10)
+        print(f"training {MU_VLM.name} ({steps} steps)")
+        train_vlm(MU_VLM, qa, vqa, out, steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,329 @@
+"""L2: mu-VLM — a patch-embed vision tower feeding a mu-OPT text decoder.
+
+Stands in for LLaVA-7B (vision transformer tower + Vicuna LM) in the paper's
+Tables 2-3 multimodal experiments (DESIGN.md S2). Image patches are embedded,
+encoded by a small bidirectional transformer, projected into the text
+embedding space, and prepended as prefix tokens to the question; the answer
+is read from the logits at the last question position.
+
+The mu-MoE / dense / masked variant selection mirrors model.py: rho=None is
+the dense (or host-side offline-pruned) path, rho=scalar runs online Wanda
+through the L1 Pallas kernels on *every* linear in both towers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VlmConfig
+from .kernels import layernorm as kln
+from .kernels import ref as kref
+from .kernels import wanda as kwanda
+from .model import _kc_for, _mumoe_linear
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_order(cfg: VlmConfig) -> list:
+    names = ["patch_emb.w", "patch_emb.b", "vis_pos_emb"]
+    for i in range(cfg.vision_layers):
+        p = f"vision.{i}"
+        names += [f"{p}.ln1.g", f"{p}.ln1.b"]
+        for lin in ("q", "k", "v", "o"):
+            names += [f"{p}.{lin}.w", f"{p}.{lin}.b"]
+        names += [f"{p}.ln2.g", f"{p}.ln2.b"]
+        names += [f"{p}.fc1.w", f"{p}.fc1.b", f"{p}.fc2.w", f"{p}.fc2.b"]
+    names += ["vis_ln.g", "vis_ln.b", "proj.w", "proj.b"]
+
+    t = cfg.text
+    names += ["tok_emb", "pos_emb"]
+    for i in range(t.n_layers):
+        p = f"layers.{i}"
+        names += [f"{p}.ln1.g", f"{p}.ln1.b"]
+        for lin in ("q", "k", "v", "o"):
+            names += [f"{p}.{lin}.w", f"{p}.{lin}.b"]
+        names += [f"{p}.ln2.g", f"{p}.ln2.b"]
+        names += [f"{p}.fc1.w", f"{p}.fc1.b", f"{p}.fc2.w", f"{p}.fc2.b"]
+    names += ["ln_f.g", "ln_f.b"]
+    return names
+
+
+def param_shapes(cfg: VlmConfig) -> dict:
+    dv, di_v = cfg.vision_d, 4 * cfg.vision_d
+    t = cfg.text
+    d, di, v = t.d_model, t.d_inner, t.vocab_size
+    shapes = {
+        "patch_emb.w": (dv, cfg.patch_dim),
+        "patch_emb.b": (dv,),
+        "vis_pos_emb": (cfg.n_patches, dv),
+    }
+    for i in range(cfg.vision_layers):
+        p = f"vision.{i}"
+        shapes[f"{p}.ln1.g"] = (dv,)
+        shapes[f"{p}.ln1.b"] = (dv,)
+        for lin in ("q", "k", "v", "o"):
+            shapes[f"{p}.{lin}.w"] = (dv, dv)
+            shapes[f"{p}.{lin}.b"] = (dv,)
+        shapes[f"{p}.ln2.g"] = (dv,)
+        shapes[f"{p}.ln2.b"] = (dv,)
+        shapes[f"{p}.fc1.w"] = (di_v, dv)
+        shapes[f"{p}.fc1.b"] = (di_v,)
+        shapes[f"{p}.fc2.w"] = (dv, di_v)
+        shapes[f"{p}.fc2.b"] = (dv,)
+    shapes["vis_ln.g"] = (dv,)
+    shapes["vis_ln.b"] = (dv,)
+    shapes["proj.w"] = (d, dv)
+    shapes["proj.b"] = (d,)
+
+    shapes["tok_emb"] = (v, d)
+    # text positions: prefix patches + question tokens
+    shapes["pos_emb"] = (cfg.n_patches + t.max_seq_len, d)
+    for i in range(t.n_layers):
+        p = f"layers.{i}"
+        shapes[f"{p}.ln1.g"] = (d,)
+        shapes[f"{p}.ln1.b"] = (d,)
+        for lin in ("q", "k", "v", "o"):
+            shapes[f"{p}.{lin}.w"] = (d, d)
+            shapes[f"{p}.{lin}.b"] = (d,)
+        shapes[f"{p}.ln2.g"] = (d,)
+        shapes[f"{p}.ln2.b"] = (d,)
+        shapes[f"{p}.fc1.w"] = (di, d)
+        shapes[f"{p}.fc1.b"] = (di,)
+        shapes[f"{p}.fc2.w"] = (d, di)
+        shapes[f"{p}.fc2.b"] = (d,)
+    shapes["ln_f.g"] = (d,)
+    shapes["ln_f.b"] = (d,)
+    return shapes
+
+
+def init_params(cfg: VlmConfig, key) -> dict:
+    shapes = param_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(shapes))
+    for k, (name, shape) in zip(keys, sorted(shapes.items())):
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b") and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def params_to_list(cfg, params):
+    return [params[n] for n in param_order(cfg)]
+
+
+def params_from_list(cfg, flat):
+    return dict(zip(param_order(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _ln(x2d, g, b, use_kernels):
+    return kln.layernorm(x2d, g, b) if use_kernels else kref.layernorm(x2d, g, b)
+
+
+def _linear(params, name, x2d, mumoe, norms, kc):
+    w, b = params[f"{name}.w"], params[f"{name}.b"]
+    if mumoe:
+        return _mumoe_linear(x2d, w, b, norms, kc)
+    return x2d @ w.T + b
+
+
+def _block(params, prefix, h, heads, lengths, rho, causal, record=None):
+    """One pre-LN transformer block shared by both towers.
+
+    record(name, x2d): optional calibration-stat hook (see calib_stats).
+    """
+    b_, t_, d = h.shape
+    mumoe = rho is not None
+    hd = d // heads
+
+    x2d = h.reshape(b_ * t_, d)
+    y = _ln(x2d, params[f"{prefix}.ln1.g"], params[f"{prefix}.ln1.b"], mumoe)
+    norms = kc = None
+    if record is not None:
+        for lin in ("q", "k", "v"):
+            record(f"{prefix}.{lin}.w", y)
+    if mumoe:
+        norms = jnp.sqrt(kwanda.col_sq_sums(y))
+        kc = _kc_for(d, rho)
+    q = _linear(params, f"{prefix}.q", y, mumoe, norms, kc)
+    k = _linear(params, f"{prefix}.k", y, mumoe, norms, kc)
+    v = _linear(params, f"{prefix}.v", y, mumoe, norms, kc)
+    q = q.reshape(b_, t_, heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b_, t_, heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b_, t_, heads, hd).transpose(0, 2, 1, 3)
+    if causal:
+        attn = kref.causal_attention(q, k, v, lengths)
+    else:
+        # bidirectional (vision tower): all positions valid
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b_ * t_, d)
+    if record is not None:
+        record(f"{prefix}.o.w", attn)
+    norms_o = jnp.sqrt(kwanda.col_sq_sums(attn)) if mumoe else None
+    h = h + _linear(params, f"{prefix}.o", attn, mumoe, norms_o, kc).reshape(
+        b_, t_, d
+    )
+
+    x2d = h.reshape(b_ * t_, d)
+    y = _ln(x2d, params[f"{prefix}.ln2.g"], params[f"{prefix}.ln2.b"], mumoe)
+    if record is not None:
+        record(f"{prefix}.fc1.w", y)
+    norms1 = jnp.sqrt(kwanda.col_sq_sums(y)) if mumoe else None
+    z = jax.nn.relu(_linear(params, f"{prefix}.fc1", y, mumoe, norms1, kc))
+    if record is not None:
+        record(f"{prefix}.fc2.w", z)
+    norms2 = jnp.sqrt(kwanda.col_sq_sums(z)) if mumoe else None
+    kc2 = _kc_for(4 * d, rho) if mumoe else None
+    h = h + _linear(params, f"{prefix}.fc2", z, mumoe, norms2, kc2).reshape(
+        b_, t_, d
+    )
+    return h
+
+
+def patchify(cfg: VlmConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W) grayscale -> (B, n_patches, patch_dim)."""
+    b_ = images.shape[0]
+    p = cfg.patch_size
+    g = cfg.image_size // p
+    x = images.reshape(b_, g, p, g, p)
+    x = x.transpose(0, 1, 3, 2, 4)
+    return x.reshape(b_, g * g, p * p)
+
+
+def forward(cfg: VlmConfig, params, images, tokens, lengths, rho=None, record=None):
+    """images: (B, H, W) f32; tokens: (B, Tq) i32; lengths: (B,) i32.
+
+    Returns logits (B, n_patches + Tq, V). Answer logits live at position
+    n_patches + length - 1.
+    """
+    b_, t_q = tokens.shape
+    mumoe = rho is not None
+    t_text = cfg.text
+
+    # Vision tower
+    patches = patchify(cfg, images)  # (B, P, pd)
+    x2d = patches.reshape(b_ * cfg.n_patches, cfg.patch_dim)
+    if record is not None:
+        pass  # patch_emb is not in linear_names(); not pruned
+    h = (x2d @ params["patch_emb.w"].T + params["patch_emb.b"]).reshape(
+        b_, cfg.n_patches, cfg.vision_d
+    )
+    h = h + params["vis_pos_emb"][None]
+    vlen = jnp.full((b_,), cfg.n_patches, jnp.int32)
+    for i in range(cfg.vision_layers):
+        h = _block(
+            params, f"vision.{i}", h, cfg.vision_heads, vlen, rho, False, record
+        )
+    x2d = h.reshape(b_ * cfg.n_patches, cfg.vision_d)
+    x2d = _ln(x2d, params["vis_ln.g"], params["vis_ln.b"], mumoe)
+    if record is not None:
+        record("proj.w", x2d)
+    norms_p = jnp.sqrt(kwanda.col_sq_sums(x2d)) if mumoe else None
+    kc_p = _kc_for(cfg.vision_d, rho) if mumoe else None
+    prefix = _linear(params, "proj", x2d, mumoe, norms_p, kc_p).reshape(
+        b_, cfg.n_patches, t_text.d_model
+    )
+
+    # Text decoder with image prefix
+    tok = params["tok_emb"][tokens]
+    h = jnp.concatenate([prefix, tok], axis=1)
+    t_all = cfg.n_patches + t_q
+    h = h + params["pos_emb"][None, :t_all, :]
+    full_len = cfg.n_patches + lengths
+    for i in range(t_text.n_layers):
+        h = _block(
+            params, f"layers.{i}", h, t_text.n_heads, full_len, rho, True, record
+        )
+    x2d = h.reshape(b_ * t_all, t_text.d_model)
+    x2d = _ln(x2d, params["ln_f.g"], params["ln_f.b"], mumoe)
+    hidden = x2d.reshape(b_, t_all, t_text.d_model)
+    return hidden @ params["tok_emb"].T
+
+
+def answer_logits(cfg: VlmConfig, params, images, tokens, lengths, rho=None):
+    """Logits at the last question position: (B, V). The coordinator argmaxes
+    these over the choice-letter tokens to grade multiple choice."""
+    logits = forward(cfg, params, images, tokens, lengths, rho=rho)
+    idx = cfg.n_patches + jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+
+
+def calib_stats(cfg: VlmConfig, params, images, tokens, lengths, with_hessian=True):
+    """Dense forward recording per-linear activation stats (cfg.linear_names()
+    order): sum-of-squares per input feature, plus X^T X Hessians."""
+    sq, hess = {}, {}
+
+    def record(name, x2d):
+        sq[name] = jnp.sum(x2d * x2d, axis=0)
+        if with_hessian:
+            hess[name] = x2d.T @ x2d
+
+    forward(cfg, params, images, tokens, lengths, rho=None, record=record)
+    names = cfg.linear_names()
+    out = [sq[n] for n in names]
+    if with_hessian:
+        out += [hess[n] for n in names]
+    return tuple(out)
+
+
+def choice_nll(cfg: VlmConfig, params, images, tokens, lengths, ans_start, rho=None):
+    """Sum NLL of the answer-continuation tokens: positions ans_start <= t <
+    length of `tokens`, where the question ends with "Answer:" and the
+    candidate choice text is appended after it.
+
+    This is the standard LM multiple-choice scoring rule: grade each
+    choice by the likelihood of its continuation and pick the argmin
+    (rust/src/eval/vlm_harness.rs mirrors this). Returns (B,) sums.
+    """
+    logits = forward(cfg, params, images, tokens, lengths, rho=rho)
+    b_, t_q = tokens.shape
+    # position n_patches + t - 1 predicts text token t (t >= 1)
+    pred = logits[:, cfg.n_patches : cfg.n_patches + t_q - 1, :]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    targets = tokens[:, 1:]
+    tgt_lp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    t_idx = jnp.arange(1, t_q)
+    sel = (t_idx[None, :] >= ans_start[:, None]) & (
+        t_idx[None, :] < lengths[:, None]
+    )
+    return -jnp.sum(jnp.where(sel, tgt_lp, 0.0), axis=-1)
+
+
+def answer_loss(cfg: VlmConfig, params, images, tokens, lengths, ans_start):
+    """Mean per-token NLL of the correct answer continuation (training
+    objective — teaches the model to produce the right choice text)."""
+    sums = choice_nll(cfg, params, images, tokens, lengths, ans_start)
+    counts = jnp.maximum(lengths - ans_start, 1)
+    return jnp.mean(sums / counts)
+
+
+def train_step(cfg: VlmConfig, params, m, v, step, images, tokens, lengths, ans_start, lr):
+    loss, grads = jax.value_and_grad(
+        lambda p: answer_loss(cfg, p, images, tokens, lengths, ans_start)
+    )(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = b1 * m[k] + (1 - b1) * g
+        vk = b2 * v[k] + (1 - b2) * g * g
+        new_p[k] = params[k] - lr * (mk / (1 - b1**t)) / (
+            jnp.sqrt(vk / (1 - b2**t)) + eps
+        )
+        new_m[k], new_v[k] = mk, vk
+    return loss, new_p, new_m, new_v

@@ -1,0 +1,29 @@
+"""MUCK checkpoint format round-trip (python side; rust reads the same)."""
+
+import numpy as np
+
+from compile import ckpt
+
+
+def test_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a.w": rng.normal(size=(3, 5)).astype(np.float32),
+        "b": rng.normal(size=(7,)).astype(np.float32),
+        "scalar": np.float32(3.5),
+        "deep.nested.name.t": rng.normal(size=(2, 3, 4)).astype(np.float32),
+    }
+    p = str(tmp_path / "m.ckpt")
+    ckpt.save(p, tensors)
+    back = ckpt.load(p)
+    assert sorted(back) == sorted(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], np.asarray(tensors[k], np.float32))
+
+
+def test_deterministic_bytes(tmp_path):
+    t = {"x": np.ones((4, 4), np.float32)}
+    p1, p2 = str(tmp_path / "1.ckpt"), str(tmp_path / "2.ckpt")
+    ckpt.save(p1, t)
+    ckpt.save(p2, t)
+    assert open(p1, "rb").read() == open(p2, "rb").read()

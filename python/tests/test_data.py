@@ -1,0 +1,88 @@
+"""Synthetic data substrates: determinism, domain separation, formats."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_corpora_deterministic():
+    for gen in data.CORPUS_GENERATORS.values():
+        a = gen(np.random.default_rng(42), 5000)
+        b = gen(np.random.default_rng(42), 5000)
+        assert a == b
+
+
+def test_corpora_are_ascii():
+    for gen in data.CORPUS_GENERATORS.values():
+        text = gen(np.random.default_rng(1), 3000)
+        assert all(ord(c) < 128 for c in text)
+
+
+def test_corpora_domains_differ():
+    """The three grammars must have measurably different byte statistics —
+    this is what makes Table 1's calibration mismatch meaningful."""
+    def hist(text):
+        h = np.zeros(128)
+        for c in text.encode():
+            h[c] += 1
+        return h / h.sum()
+
+    texts = {
+        n: g(np.random.default_rng(3), 20000)
+        for n, g in data.CORPUS_GENERATORS.items()
+    }
+    hs = {n: hist(t) for n, t in texts.items()}
+    names = sorted(hs)
+    for i, a in enumerate(names):
+        for b in names[i + 1 :]:
+            tv = 0.5 * np.abs(hs[a] - hs[b]).sum()  # total variation
+            assert tv > 0.05, f"{a} vs {b} too similar ({tv:.3f})"
+
+
+def test_synthqa_strata_coverage():
+    rng = np.random.default_rng(5)
+    recs = [data.make_synthqa_record(rng) for _ in range(300)]
+    subjects = {r[3] for r in recs}
+    modalities = {r[4] for r in recs}
+    grades = {r[5] for r in recs}
+    assert subjects == {0, 1, 2}
+    assert modalities == {0, 1, 2}
+    assert grades == {0, 1}
+
+
+def test_synthqa_answers_valid():
+    rng = np.random.default_rng(6)
+    for _ in range(100):
+        img, q, a, *_ = data.make_synthqa_record(rng)
+        n_choices = q.count(") ")
+        assert 0 <= a < n_choices
+        assert img.shape == (data.IMG, data.IMG)
+        assert img.dtype == np.float32
+        assert q.endswith("Answer:")
+
+
+def test_synthvqa_glyphs_rendered():
+    rng = np.random.default_rng(7)
+    img, q, a, *_ = data.make_synthvqa_record(rng)
+    assert img.max() == 1.0  # glyph pixels at full intensity
+    assert "number" in q
+
+
+def test_qa_bin_roundtrip(tmp_path):
+    rng = np.random.default_rng(8)
+    recs = [data.make_synthqa_record(rng) for _ in range(10)]
+    p = str(tmp_path / "t.bin")
+    data.write_qa_bin(p, recs)
+    back = data.read_qa_bin(p)
+    assert len(back) == 10
+    for (i1, q1, a1, s1, m1, g1), (i2, q2, a2, s2, m2, g2) in zip(recs, back):
+        np.testing.assert_array_equal(i1, i2)
+        assert (q1, a1, s1, m1, g1) == (q2, a2, s2, m2, g2)
+
+
+def test_font_glyphs_distinct():
+    digits = list(data._FONT)
+    for i, a in enumerate(digits):
+        for b in digits[i + 1 :]:
+            assert data._FONT[a] != data._FONT[b], (a, b)

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and the sparsity scalar) so odd/non-power-of-two
+dims exercise the block-divisibility logic in kernels/wanda.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, ref, wanda
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+dims = st.integers(min_value=2, max_value=96)
+toks = st.integers(min_value=1, max_value=80)
+
+
+@settings(max_examples=12, deadline=None)
+@given(d_out=dims, d_in=dims, seed=st.integers(0, 2**31 - 1))
+def test_wanda_score_matches_ref(d_out, d_in, seed):
+    rng = np.random.default_rng(seed)
+    w = _arr(rng, d_out, d_in)
+    norms = jnp.abs(_arr(rng, d_in)) + 0.01
+    np.testing.assert_allclose(
+        wanda.wanda_score(w, norms), ref.wanda_score(w, norms), rtol=1e-6
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(t=toks, d=dims, seed=st.integers(0, 2**31 - 1))
+def test_col_sq_sums_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, t, d)
+    np.testing.assert_allclose(
+        wanda.col_sq_sums(x), jnp.sum(x * x, axis=0), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        wanda.col_l2_norms(x), ref.col_l2_norms(x), rtol=1e-4, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=toks,
+    d_out=dims,
+    d_in=dims,
+    rho=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prune_matmul_matches_masked_ref(m, d_out, d_in, rho, seed):
+    """The fused kernel must equal score->threshold->mask->matmul by ref."""
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, d_in), _arr(rng, d_out, d_in)
+    b = _arr(rng, d_out)
+    norms = ref.col_l2_norms(x)
+    s = ref.wanda_score(w, norms)
+    kc = jnp.int32(int(np.clip(int((1 - rho) * d_in), 0, d_in - 1)))
+    thr = ref.row_kth_threshold(s, kc)
+    got = wanda.prune_matmul(x, w, b, norms, thr)
+    want = ref.masked_linear(x, w, b, ref.prune_mask(s, thr))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=toks, d_out=dims, d_in=dims, seed=st.integers(0, 2**31 - 1))
+def test_masked_matmul_matches_ref(m, d_out, d_in, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, d_in), _arr(rng, d_out, d_in)
+    b = _arr(rng, d_out)
+    mask = jnp.asarray((rng.random((d_out, d_in)) > 0.5).astype(np.float32))
+    np.testing.assert_allclose(
+        wanda.masked_matmul(x, w, b, mask),
+        ref.masked_linear(x, w, b, mask),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=toks, d=dims, seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, m, d)
+    g, b = _arr(rng, d), _arr(rng, d)
+    np.testing.assert_allclose(
+        layernorm.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.integers(2, 40),
+    hd=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, t, hd, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, b, h, t, hd) for _ in range(3))
+    lens = jnp.asarray(rng.integers(1, t + 1, size=b), jnp.int32)
+    got = attention.causal_attention(q, k, v, lens)
+    want = ref.causal_attention(q, k, v, lens)
+    # only positions < length are meaningful downstream
+    for i in range(b):
+        li = int(lens[i])
+        np.testing.assert_allclose(
+            got[i, :, :li], want[i, :, :li], rtol=RTOL, atol=ATOL
+        )
+
+
+def test_row_kth_threshold_edges():
+    """kc=0 keeps everything; kc=d-1 keeps exactly one weight per row."""
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(np.abs(rng.normal(size=(5, 9))).astype(np.float32))
+    thr0 = ref.row_kth_threshold(s, jnp.int32(0))
+    assert float(jnp.min(ref.prune_mask(s, thr0))) == 1.0
+    thr_max = ref.row_kth_threshold(s, jnp.int32(8))
+    mask = ref.prune_mask(s, thr_max)
+    np.testing.assert_array_equal(np.asarray(jnp.sum(mask, axis=1)), np.ones(5))
+
+
+@pytest.mark.parametrize("rho", [0.25, 0.5, 0.75])
+def test_prune_mask_active_fraction(rho):
+    """With continuous scores, exactly d - kc weights survive per row."""
+    rng = np.random.default_rng(1)
+    d = 64
+    s = jnp.asarray(np.abs(rng.normal(size=(16, d))).astype(np.float32))
+    kc = int((1 - rho) * d)
+    thr = ref.row_kth_threshold(s, jnp.int32(kc))
+    mask = ref.prune_mask(s, thr)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sum(mask, axis=1)), np.full(16, d - kc)
+    )

@@ -1,0 +1,148 @@
+"""L2 correctness: mu-OPT model variants, shapes and cross-variant
+equivalences that the AOT artifacts rely on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.pruning import online_wanda_mask
+
+CFG = configs.ModelConfig("test-tiny", n_layers=2, n_heads=2, d_model=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(CFG, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 255, size=(2, 24)), jnp.int32)
+    lens = jnp.asarray([24, 15], jnp.int32)
+    return params, toks, lens
+
+
+def test_param_order_matches_shapes(setup):
+    order = model.param_order(CFG)
+    shapes = model.param_shapes(CFG)
+    assert sorted(order) == sorted(shapes)
+    params, *_ = setup
+    for n in order:
+        assert params[n].shape == shapes[n], n
+
+
+def test_n_params_formula():
+    shapes = model.param_shapes(CFG)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == CFG.n_params()
+
+
+def test_dense_forward_shapes(setup):
+    params, toks, lens = setup
+    hidden, logits = model.forward(CFG, params, toks, lens)
+    assert hidden.shape == (2, 24, 32)
+    assert logits.shape == (2, 24, configs.VOCAB_SIZE)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_mumoe_rho1_equals_dense(setup):
+    """rho=1.0 activates every micro-expert: identical to dense."""
+    params, toks, lens = setup
+    _, dense = model.forward(CFG, params, toks, lens)
+    _, moe = model.forward(CFG, params, toks, lens, rho=jnp.float32(1.0))
+    np.testing.assert_allclose(moe, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_mumoe_rho_monotone_divergence(setup):
+    """Lower rho prunes more -> output drifts further from dense."""
+    params, toks, lens = setup
+    _, dense = model.forward(CFG, params, toks, lens)
+    diffs = []
+    for rho in (0.9, 0.5, 0.2):
+        _, out = model.forward(CFG, params, toks, lens, rho=jnp.float32(rho))
+        diffs.append(float(jnp.mean(jnp.abs(out - dense))))
+    assert diffs[0] < diffs[1] < diffs[2]
+
+
+def test_masked_weights_equal_online_mask_single_linear(setup):
+    """Zeroing weights on the host with the oracle's online mask must equal
+    the in-graph mu-MoE result for a single linear layer."""
+    params, toks, lens = setup
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(40, 32)).astype(np.float32)
+    w = np.asarray(params["layers.0.q.w"])
+    b = np.asarray(params["layers.0.q.b"])
+    rho = 0.5
+    mask = online_wanda_mask(w, x, rho)
+    host = x @ (w * mask).T + b
+
+    from compile.kernels import ref, wanda
+
+    norms = ref.col_l2_norms(jnp.asarray(x))
+    s = ref.wanda_score(jnp.asarray(w), norms)
+    kc = jnp.int32(int((1 - rho) * 32))
+    thr = ref.row_kth_threshold(s, kc)
+    ingraph = wanda.prune_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), norms, thr
+    )
+    np.testing.assert_allclose(ingraph, host, rtol=1e-4, atol=1e-4)
+
+
+def test_nll_ignores_padding(setup):
+    """NLL sums must not change when padding content changes."""
+    params, toks, lens = setup
+    s1, c1 = model.nll_sums(CFG, params, toks, lens)
+    toks2 = np.asarray(toks).copy()
+    toks2[1, 20:] = 99  # beyond lens[1]=15 (+1 for shift)
+    s2, c2 = model.nll_sums(CFG, params, jnp.asarray(toks2), lens)
+    np.testing.assert_allclose(s1[1], s2[1], rtol=1e-5)
+    assert int(c1[1]) == 14  # length-1 predicted tokens
+
+
+def test_last_logits_picks_last_valid_position(setup):
+    params, toks, lens = setup
+    _, logits = model.forward(CFG, params, toks, lens)
+    out = model.last_logits(CFG, params, toks, lens)
+    np.testing.assert_allclose(out[0], logits[0, 23], rtol=1e-5)
+    np.testing.assert_allclose(out[1], logits[1, 14], rtol=1e-5)
+
+
+def test_calib_stats_match_manual(setup):
+    """Wanda sq-sums from calib_stats must equal a manual hook on the dense
+    forward for the first linear (ln1 output of layer 0)."""
+    params, toks, lens = setup
+    stats = model.calib_stats(CFG, params, toks, lens, with_hessian=True)
+    names = CFG.linear_names()
+    assert len(stats) == 2 * len(names)
+
+    from compile.kernels import ref
+
+    b_, t_ = toks.shape
+    h = params["tok_emb"][toks] + params["pos_emb"][None, :t_, :]
+    x2d = h.reshape(b_ * t_, CFG.d_model)
+    y = ref.layernorm(x2d, params["layers.0.ln1.g"], params["layers.0.ln1.b"])
+    pos = jnp.arange(t_)
+    vmask = (pos[None, :] < lens[:, None]).astype(jnp.float32).reshape(-1, 1)
+    y = y * vmask
+    np.testing.assert_allclose(stats[0], jnp.sum(y * y, axis=0), rtol=1e-3)
+    # Hessian block for the same linear
+    hidx = len(names)
+    np.testing.assert_allclose(stats[hidx], y.T @ y, rtol=1e-3, atol=1e-3)
+
+
+def test_train_step_reduces_loss(setup):
+    params, toks, lens = setup
+    m, v = model.adam_init(params)
+    l0, params, m, v = model.train_step(CFG, params, m, v, 0.0, toks, lens, 1e-3)
+    l_prev = float(l0)
+    for s in range(1, 6):
+        l, params, m, v = model.train_step(
+            CFG, params, m, v, float(s), toks, lens, 1e-3
+        )
+    assert float(l) < l_prev
+
+
+def test_pad_batch():
+    toks, lens = model.pad_batch([[1, 2, 3], [4]], 6)
+    assert toks.shape == (2, 6)
+    assert list(np.asarray(lens)) == [3, 1]
+    assert int(toks[0, 3]) == configs.PAD_ID

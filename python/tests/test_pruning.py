@@ -1,0 +1,117 @@
+"""Offline pruner reference implementations: invariants + known-answer
+properties that the rust engines (rust/src/pruning) mirror."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pruning
+
+
+def test_kc_for_bounds():
+    assert pruning.kc_for(10, 1.0) == 0
+    assert pruning.kc_for(10, 0.0) == 9  # always keep >= 1 per row
+    assert pruning.kc_for(100, 0.6) == 40
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d_out=st.integers(1, 40),
+    d_in=st.integers(2, 60),
+    rho=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_magnitude_mask_row_counts(d_out, d_in, rho, seed):
+    """Exactly d_in - kc survivors per row (semi-structured sparsity)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    mask = pruning.magnitude_mask(w, rho)
+    kc = pruning.kc_for(d_in, rho)
+    np.testing.assert_array_equal(mask.sum(axis=1), np.full(d_out, d_in - kc))
+
+
+def test_magnitude_mask_keeps_largest():
+    w = np.array([[1.0, -5.0, 0.1, 3.0]], np.float32)
+    mask = pruning.magnitude_mask(w, 0.5)
+    np.testing.assert_array_equal(mask, [[0, 1, 0, 1]])
+
+
+def test_wanda_mask_weights_by_activation():
+    """A small weight on a hot feature must beat a big weight on a cold one
+    (the whole point of activation-aware scoring)."""
+    w = np.array([[0.5, 1.0]], np.float32)
+    sq = np.array([100.0, 0.01], np.float32)  # feature 0 is hot
+    mask = pruning.wanda_mask(w, sq, 0.5)
+    np.testing.assert_array_equal(mask, [[1, 0]])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d_out=st.integers(1, 24),
+    d_in=st.integers(2, 48),
+    rho=st.floats(0.1, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wanda_equals_magnitude_under_uniform_activations(d_out, d_in, rho, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    sq = np.ones(d_in, np.float32)
+    np.testing.assert_array_equal(
+        pruning.wanda_mask(w, sq, rho), pruning.magnitude_mask(w, rho)
+    )
+
+
+def _rand_hessian(rng, d, t=256):
+    x = rng.normal(size=(d, t)).astype(np.float64)
+    x *= rng.uniform(0.2, 3.0, size=(d, 1))  # per-feature scale diversity
+    return (x @ x.T).astype(np.float32), x.astype(np.float32)
+
+
+@pytest.mark.parametrize("rho", [0.4, 0.6])
+def test_sparsegpt_beats_wanda_mask_on_loss(rho):
+    """SparseGPT's OBS update should achieve lower ||(W - What) X||^2 than
+    mask-only Wanda at the same sparsity (it compensates survivors)."""
+    rng = np.random.default_rng(7)
+    d_out, d_in = 24, 48
+    w = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    hess, x = _rand_hessian(rng, d_in)
+
+    w_gpt = pruning.sparsegpt_prune(w, hess, rho, blocksize=16)
+    sq = np.sum(x.astype(np.float64) ** 2, axis=1)
+    w_wanda = w * pruning.wanda_mask(w, sq, rho)
+
+    loss_gpt = np.linalg.norm((w - w_gpt) @ x) ** 2
+    loss_wanda = np.linalg.norm((w - w_wanda) @ x) ** 2
+    assert loss_gpt < loss_wanda
+
+
+@pytest.mark.parametrize("rho", [0.3, 0.5, 0.8])
+def test_sparsegpt_sparsity_close_to_target(rho):
+    rng = np.random.default_rng(11)
+    d_out, d_in = 16, 64
+    w = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    hess, _ = _rand_hessian(rng, d_in)
+    w_gpt = pruning.sparsegpt_prune(w, hess, rho, blocksize=16)
+    active = np.mean(np.abs(w_gpt) > 0)
+    # per-block rounding makes this approximate
+    assert abs(active - rho) < 0.12
+
+
+def test_sparsegpt_rho1_keeps_weights():
+    rng = np.random.default_rng(13)
+    w = rng.normal(size=(8, 32)).astype(np.float32)
+    hess, _ = _rand_hessian(rng, 32)
+    w_gpt = pruning.sparsegpt_prune(w, hess, 1.0)
+    np.testing.assert_allclose(w_gpt, w, rtol=1e-4, atol=1e-5)
+
+
+def test_online_wanda_mask_is_prompt_dependent():
+    """mu-MoE's premise: different prompts activate different micro-experts."""
+    rng = np.random.default_rng(17)
+    w = rng.normal(size=(16, 32)).astype(np.float32)
+    x1 = rng.normal(size=(40, 32)).astype(np.float32)
+    x2 = rng.normal(size=(40, 32)).astype(np.float32)
+    x2[:, :16] *= 10.0  # shift the activation distribution
+    m1 = pruning.online_wanda_mask(w, x1, 0.5)
+    m2 = pruning.online_wanda_mask(w, x2, 0.5)
+    assert np.any(m1 != m2)

@@ -1,0 +1,123 @@
+"""mu-VLM: shapes, rho=1 equivalence, patchify correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, vlm
+
+CFG = configs.VlmConfig(
+    name="test-vlm",
+    image_size=8,
+    patch_size=4,
+    vision_layers=1,
+    vision_heads=2,
+    vision_d=16,
+    text=configs.ModelConfig("test-vlm-text", n_layers=1, n_heads=2, d_model=16),
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = vlm.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(rng.random((2, 8, 8)).astype(np.float32))
+    toks = jnp.asarray(rng.integers(0, 255, size=(2, 12)), jnp.int32)
+    lens = jnp.asarray([12, 7], jnp.int32)
+    return params, images, toks, lens
+
+
+def test_param_order_matches_shapes():
+    order = vlm.param_order(CFG)
+    shapes = vlm.param_shapes(CFG)
+    assert sorted(order) == sorted(shapes)
+    assert len(order) == len(set(order))
+
+
+def test_patchify_layout():
+    img = jnp.arange(64, dtype=jnp.float32).reshape(1, 8, 8)
+    p = vlm.patchify(CFG, img)
+    assert p.shape == (1, 4, 16)
+    # first patch = top-left 4x4 block, row-major
+    np.testing.assert_array_equal(
+        np.asarray(p[0, 0]).reshape(4, 4), np.asarray(img[0, :4, :4])
+    )
+
+
+def test_forward_shapes(setup):
+    params, images, toks, lens = setup
+    logits = vlm.forward(CFG, params, images, toks, lens)
+    assert logits.shape == (2, CFG.n_patches + 12, configs.VOCAB_SIZE)
+
+
+def test_answer_logits_position(setup):
+    params, images, toks, lens = setup
+    logits = vlm.forward(CFG, params, images, toks, lens)
+    ans = vlm.answer_logits(CFG, params, images, toks, lens)
+    np.testing.assert_allclose(ans[1], logits[1, CFG.n_patches + 6], rtol=1e-5)
+
+
+def test_mumoe_rho1_equals_dense(setup):
+    params, images, toks, lens = setup
+    dense = vlm.answer_logits(CFG, params, images, toks, lens)
+    moe = vlm.answer_logits(CFG, params, images, toks, lens, rho=jnp.float32(1.0))
+    np.testing.assert_allclose(moe, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_mumoe_low_rho_changes_output(setup):
+    params, images, toks, lens = setup
+    dense = vlm.answer_logits(CFG, params, images, toks, lens)
+    moe = vlm.answer_logits(CFG, params, images, toks, lens, rho=jnp.float32(0.3))
+    assert float(jnp.max(jnp.abs(moe - dense))) > 1e-3
+
+
+def test_calib_stats_order(setup):
+    params, images, toks, lens = setup
+    stats = vlm.calib_stats(CFG, params, images, toks, lens)
+    names = CFG.linear_names()
+    assert len(stats) == 2 * len(names)
+    for i, n in enumerate(names):
+        d_in = vlm.param_shapes(CFG)[n][1]
+        assert stats[i].shape == (d_in,), n
+        assert stats[len(names) + i].shape == (d_in, d_in), n
+
+
+def test_choice_nll_scores_continuation_only(setup):
+    """Changing tokens before ans_start must not change the NLL sum... it
+    does change it (context!), but changing tokens *after* `lengths` must
+    not, and the count of scored positions is lengths - ans_start."""
+    params, images, toks, lens = setup
+    starts = jnp.asarray([8, 4], jnp.int32)
+    base = vlm.choice_nll(CFG, params, images, toks, lens, starts)
+    assert base.shape == (2,)
+    assert bool(jnp.all(base > 0))
+    # mutate padding beyond lengths: no effect
+    toks2 = np.asarray(toks).copy()
+    toks2[1, int(lens[1]):] = 77
+    after = vlm.choice_nll(CFG, params, images, jnp.asarray(toks2), lens, starts)
+    np.testing.assert_allclose(base, after, rtol=1e-5)
+
+
+def test_choice_nll_mumoe_rho1_matches_dense(setup):
+    params, images, toks, lens = setup
+    starts = jnp.asarray([8, 4], jnp.int32)
+    dense = vlm.choice_nll(CFG, params, images, toks, lens, starts)
+    moe = vlm.choice_nll(
+        CFG, params, images, toks, lens, starts, rho=jnp.float32(1.0)
+    )
+    np.testing.assert_allclose(dense, moe, rtol=1e-3, atol=1e-3)
+
+
+def test_train_step_runs(setup):
+    params, images, toks, lens = setup
+    m = {k: jnp.zeros_like(x) for k, x in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    starts = jnp.asarray([8, 4], jnp.int32)
+    loss, p2, *_ = vlm.train_step(
+        CFG, params, m, v, 0.0, images, toks, lens, starts, 1e-3
+    )
+    assert np.isfinite(float(loss))
+    assert any(
+        not np.allclose(p2[k], params[k]) for k in params
+    )

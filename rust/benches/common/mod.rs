@@ -1,0 +1,52 @@
+//! Shared plumbing for the paper-table benches.
+//!
+//! Environment knobs (all optional) keep full-table regeneration tractable
+//! on the single-core sandbox while allowing deeper runs:
+//!   MUMOE_ARTIFACTS       artifact dir (default "artifacts")
+//!   MUMOE_BENCH_MODELS    comma list (default "mu-opt-micro,mu-opt-mini,mu-opt-small")
+//!   MUMOE_BENCH_WINDOWS   eval windows per dataset (default 8)
+//!   MUMOE_BENCH_QA_LIMIT  eval records for Tables 2-3 (default 48)
+#![allow(dead_code)] // each bench links this module, using a subset
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(std::env::var("MUMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+pub fn bench_models() -> Vec<String> {
+    std::env::var("MUMOE_BENCH_MODELS")
+        .unwrap_or_else(|_| "mu-opt-micro,mu-opt-mini,mu-opt-small".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+pub fn bench_windows() -> usize {
+    std::env::var("MUMOE_BENCH_WINDOWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+}
+
+pub fn qa_limit() -> usize {
+    std::env::var("MUMOE_BENCH_QA_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48)
+}
+
+/// Artifacts present? Paper benches need `make artifacts` to have run;
+/// exit 0 with a notice instead of failing the whole bench suite.
+pub fn require_artifacts() -> bool {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        return true;
+    }
+    println!(
+        "SKIP: no artifacts at {} (run `make artifacts` first)",
+        dir.display()
+    );
+    false
+}

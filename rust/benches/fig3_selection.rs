@@ -1,0 +1,65 @@
+//! Paper Figure 3 / Appendix B: runtime of Wanda pruning with the three
+//! threshold-selection strategies (full sort / heap top-k / quickselect
+//! kth-value) across embedding sizes and active ratios, on the host CPU
+//! (stands in for the paper's M1 CPU + A100 panels; DESIGN.md §2).
+//!
+//! Expected shape: kthvalue <= topk <= sort, selection cost insensitive
+//! to rho, all growing ~d² (per-row work × row count).
+
+mod common;
+
+use mumoe::benchlib::{Bencher, Stats, Table};
+use mumoe::pruning::selection::{wanda_prune_with, Selector};
+use mumoe::util::rng::Pcg32;
+
+fn main() {
+    let dims: Vec<usize> = std::env::var("MUMOE_BENCH_DIMS")
+        .unwrap_or_else(|_| "256,512,1024,2048,4096".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let rhos = [0.25, 0.5, 0.75];
+    let bencher = Bencher {
+        budget: std::time::Duration::from_millis(400),
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        "Figure 3 — Wanda selection runtime, ms per (d x d) linear (CPU)",
+        &["d", "rho", "sort", "topk", "kthvalue", "best"],
+    );
+    for &d in &dims {
+        let mut rng = Pcg32::new(7, d as u64);
+        let w = rng.normal_vec(d * d);
+        let norms: Vec<f32> = (0..d).map(|_| rng.next_f32() + 0.1).collect();
+        for rho in rhos {
+            let mut means = Vec::new();
+            for sel in Selector::ALL {
+                let stats: Stats = bencher.run(|| {
+                    let mut wc = w.clone();
+                    let mut scratch = Vec::new();
+                    wanda_prune_with(sel, &mut wc, d, d, &norms, rho, &mut scratch);
+                    wc
+                });
+                means.push(stats.mean_ms());
+            }
+            let best = Selector::ALL
+                [means
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0]
+                .name();
+            table.row(vec![
+                format!("{d}"),
+                format!("{rho}"),
+                format!("{:.3}", means[0]),
+                format!("{:.3}", means[1]),
+                format!("{:.3}", means[2]),
+                best.to_string(),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,75 @@
+//! Paper Figure 4: average perplexity (over the three domains) vs active
+//! weight ratio, for each model size and method — the wide-ρ version of
+//! Table 1. The paper's shape: magnitude collapses below ~50%, offline
+//! Wanda degrades gracefully, μ-MoE tracks or beats Wanda with the gap
+//! widening at low ρ.
+
+mod common;
+
+use mumoe::benchlib::{fmt_f, Table};
+use mumoe::data::corpus::Corpus;
+use mumoe::data::DOMAINS;
+use mumoe::eval::harness::EvalStack;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let dir = common::artifacts_dir();
+    let n_windows = common::bench_windows();
+    let rhos: Vec<f64> = std::env::var("MUMOE_BENCH_RHOS")
+        .unwrap_or_else(|_| "0.2,0.3,0.4,0.5,0.6,0.8,1.0".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    for model in common::bench_models() {
+        let t0 = std::time::Instant::now();
+        let stack = EvalStack::open(&dir, &model).expect("stack");
+        let seq = stack.cfg.max_seq_len;
+        let tests: Vec<Vec<_>> = DOMAINS
+            .iter()
+            .map(|d| {
+                Corpus::load(&dir.join("data"), d, "test")
+                    .expect("corpus")
+                    .eval_windows(seq, n_windows)
+            })
+            .collect();
+        // offline wanda calibrates on synth_web (the C4 analogue, as the
+        // paper's default calibration set)
+        let calib_w = Corpus::load(&dir.join("data"), "synth_web", "train")
+            .expect("corpus")
+            .eval_windows(seq, n_windows.min(8));
+        let stats = stack.calibrate(&calib_w).expect("calibrate");
+
+        // μ-MoE session bound once; ρ is a runtime input, so the sweep
+        // reuses one executable + one weight upload (the AOT design win)
+        let moe_session = stack.session("mumoe_nll", &stack.ckpt).expect("bind");
+
+        let mut table = Table::new(
+            format!("Figure 4 — {model}: avg ppl vs active ratio ({n_windows} win/domain)"),
+            &["Active", "Magnitude", "Wanda(sC4)", "mu-MoE"],
+        );
+        for &rho in &rhos {
+            let mag = stack.variant_magnitude(rho).expect("magnitude");
+            let wan = stack.variant_wanda(&stats, rho).expect("wanda");
+            let mut sums = [0.0f64; 3];
+            for windows in &tests {
+                sums[0] += stack.perplexity(&mag, windows, None).expect("ppl").value();
+                sums[1] += stack.perplexity(&wan, windows, None).expect("ppl").value();
+                sums[2] += stack
+                    .perplexity_with(&moe_session, windows, Some(rho))
+                    .expect("ppl")
+                    .value();
+            }
+            table.row(vec![
+                format!("{:.0}%", rho * 100.0),
+                fmt_f(sums[0] / 3.0),
+                fmt_f(sums[1] / 3.0),
+                fmt_f(sums[2] / 3.0),
+            ]);
+        }
+        table.print();
+        println!("[{model} sweep in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,124 @@
+//! Paper Table 1: perplexity of the μ-OPT family under {magnitude, Wanda
+//! with each calibration corpus, μ-MoE} at 60/50/40% active weights,
+//! tested on all three synthetic domains.
+//!
+//! Red-cell analogue: Wanda rows where calibration == test domain are the
+//! paper's highlighted matched cells; the reproduction checks that
+//! (a) magnitude degrades fastest, (b) mismatched Wanda loses to matched,
+//! (c) μ-MoE — which never sees calibration data — is best or tied on
+//! average.
+
+mod common;
+
+use mumoe::benchlib::{fmt_f, Table};
+use mumoe::data::corpus::Corpus;
+use mumoe::data::{domain_label, DOMAINS};
+use mumoe::eval::harness::EvalStack;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let dir = common::artifacts_dir();
+    let n_windows = common::bench_windows();
+    let rhos = [0.6, 0.5, 0.4];
+
+    for model in common::bench_models() {
+        let t0 = std::time::Instant::now();
+        let stack = EvalStack::open(&dir, &model).expect("open eval stack");
+        let seq = stack.cfg.max_seq_len;
+
+        // eval windows per test domain
+        let tests: Vec<(String, Vec<_>)> = DOMAINS
+            .iter()
+            .map(|d| {
+                let c = Corpus::load(&dir.join("data"), d, "test").expect("corpus");
+                (d.to_string(), c.eval_windows(seq, n_windows))
+            })
+            .collect();
+
+        // calibration stats per calibration domain (train split)
+        let calibs: Vec<(String, _)> = DOMAINS
+            .iter()
+            .map(|d| {
+                let c = Corpus::load(&dir.join("data"), d, "train").expect("corpus");
+                let w = c.eval_windows(seq, n_windows.min(8));
+                (d.to_string(), stack.calibrate(&w).expect("calibrate"))
+            })
+            .collect();
+
+        // dense anchor row (paper prints it next to the model name)
+        let mut dense_cells = Vec::new();
+        for (_, windows) in &tests {
+            let p = stack
+                .perplexity(&stack.ckpt, windows, None)
+                .expect("dense ppl");
+            dense_cells.push(p.value());
+        }
+        let davg = dense_cells.iter().sum::<f64>() / dense_cells.len() as f64;
+        println!(
+            "\n=== {model} (dense: {} {} {} | Avg {}) ===",
+            fmt_f(dense_cells[0]),
+            fmt_f(dense_cells[1]),
+            fmt_f(dense_cells[2]),
+            fmt_f(davg)
+        );
+
+        let mut headers = vec!["Active", "Method"];
+        headers.extend(DOMAINS.iter().map(|d| domain_label(d)));
+        headers.push("Avg");
+        let mut table = Table::new(
+            format!("Table 1 — {model} perplexity (lower is better)"),
+            &headers,
+        );
+
+        for rho in rhos {
+            // magnitude
+            let mag = stack.variant_magnitude(rho).expect("magnitude");
+            add_row(&mut table, &stack, &tests, rho, "Magnitude", &mag, None);
+            // wanda per calibration domain
+            for (cd, stats) in &calibs {
+                let v = stack.variant_wanda(stats, rho).expect("wanda");
+                add_row(
+                    &mut table,
+                    &stack,
+                    &tests,
+                    rho,
+                    &format!("Wanda ({} calib)", domain_label(cd)),
+                    &v,
+                    None,
+                );
+            }
+            // mu-MoE: original weights, online pruning in-graph
+            add_row(&mut table, &stack, &tests, rho, "mu-MoE", &stack.ckpt, Some(rho));
+        }
+        table.print();
+        println!(
+            "[{model} done in {:.1}s, {} windows/domain]",
+            t0.elapsed().as_secs_f64(),
+            n_windows
+        );
+    }
+}
+
+fn add_row(
+    table: &mut Table,
+    stack: &EvalStack,
+    tests: &[(String, Vec<mumoe::data::corpus::Window>)],
+    rho: f64,
+    method: &str,
+    ckpt: &mumoe::model::checkpoint::Checkpoint,
+    online_rho: Option<f64>,
+) {
+    let mut cells = vec![format!("{:.0}%", rho * 100.0), method.to_string()];
+    let mut sum = 0.0;
+    for (_, windows) in tests {
+        let p = stack
+            .perplexity(ckpt, windows, online_rho)
+            .expect("perplexity");
+        sum += p.value();
+        cells.push(fmt_f(p.value()));
+    }
+    cells.push(fmt_f(sum / tests.len() as f64));
+    table.row(cells);
+}

@@ -1,0 +1,72 @@
+//! Paper Table 2: μ-VLM accuracy on SynthQA (ScienceQA stand-in) by
+//! subject / context-modality / grade strata, for each compression method
+//! at 60/50/40% active weights. Wanda and SparseGPT calibrate on SynthVQA
+//! — the *other* task — reproducing the paper's cross-task mismatch.
+
+mod common;
+
+use mumoe::benchlib::Table;
+use mumoe::data::qa::QaSet;
+use mumoe::eval::vlm_harness::VlmStack;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let dir = common::artifacts_dir();
+    let limit = common::qa_limit();
+    let t0 = std::time::Instant::now();
+
+    let stack = VlmStack::open(&dir).expect("open vlm stack");
+    let test = QaSet::load(&dir.join("data/synthqa.test.bin")).expect("synthqa");
+    let calib_set = QaSet::load(&dir.join("data/synthvqa.train.bin")).expect("synthvqa");
+    let calib = stack.calibrate(&calib_set, 32).expect("calibrate");
+
+    let headers = [
+        "Method", "Active", "NAT", "SOC", "LAN", "TXT", "IMG", "NO", "G1-6",
+        "G7-12", "Avg",
+    ];
+    let mut table = Table::new(
+        format!("Table 2 — SynthQA accuracy % ({limit} questions; calib=SynthVQA)"),
+        &headers,
+    );
+
+    // original full model anchor
+    let acc = stack
+        .accuracy(&stack.ckpt, &test, None, limit)
+        .expect("dense accuracy");
+    push_row(&mut table, "Original full", 1.0, &acc);
+
+    for rho in [0.6, 0.5, 0.4] {
+        let mag = stack.variant_magnitude(rho).expect("magnitude");
+        let acc = stack.accuracy(&mag, &test, None, limit).expect("acc");
+        push_row(&mut table, "Magnitude", rho, &acc);
+
+        let gpt = stack.variant_sparsegpt(&calib, rho).expect("sparsegpt");
+        let acc = stack.accuracy(&gpt, &test, None, limit).expect("acc");
+        push_row(&mut table, "SparseGPT", rho, &acc);
+
+        let wan = stack.variant_wanda(&calib, rho).expect("wanda");
+        let acc = stack.accuracy(&wan, &test, None, limit).expect("acc");
+        push_row(&mut table, "Wanda", rho, &acc);
+
+        let acc = stack
+            .accuracy(&stack.ckpt, &test, Some(rho), limit)
+            .expect("acc");
+        push_row(&mut table, "mu-MoE", rho, &acc);
+    }
+    table.print();
+    println!("[table2 done in {:.1}s]", t0.elapsed().as_secs_f64());
+}
+
+fn push_row(table: &mut Table, method: &str, rho: f64, acc: &mumoe::eval::StrataAccuracy) {
+    let mut cells = vec![method.to_string(), format!("{:.0}%", rho * 100.0)];
+    for (_, pct) in acc.row() {
+        cells.push(if pct.is_nan() {
+            "-".into()
+        } else {
+            format!("{pct:.2}")
+        });
+    }
+    table.row(cells);
+}

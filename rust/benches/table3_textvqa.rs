@@ -1,0 +1,75 @@
+//! Paper Table 3: μ-VLM accuracy on SynthVQA (TextVQA stand-in — the
+//! answer must be read from pixels) at 60/50/40% active weights; Wanda and
+//! SparseGPT calibrate on SynthQA (cross-task mismatch, as in the paper).
+
+mod common;
+
+use mumoe::benchlib::Table;
+use mumoe::data::qa::QaSet;
+use mumoe::eval::vlm_harness::VlmStack;
+
+fn main() {
+    if !common::require_artifacts() {
+        return;
+    }
+    let dir = common::artifacts_dir();
+    let limit = common::qa_limit();
+    let t0 = std::time::Instant::now();
+
+    let stack = VlmStack::open(&dir).expect("open vlm stack");
+    let test = QaSet::load(&dir.join("data/synthvqa.test.bin")).expect("synthvqa");
+    let calib_set = QaSet::load(&dir.join("data/synthqa.train.bin")).expect("synthqa");
+    let calib = stack.calibrate(&calib_set, 32).expect("calibrate");
+
+    let dense = stack
+        .accuracy(&stack.ckpt, &test, None, limit)
+        .expect("dense");
+    println!(
+        "\nFull-weight accuracy: {:.2}% ({} questions)",
+        dense.overall.pct(),
+        limit
+    );
+
+    let mut table = Table::new(
+        "Table 3 — SynthVQA accuracy % (calib=SynthQA)",
+        &["Method", "60%", "50%", "40%"],
+    );
+    let rhos = [0.6, 0.5, 0.4];
+
+    let mut rows: Vec<(String, Vec<f64>)> = vec![
+        ("Magnitude".into(), vec![]),
+        ("SparseGPT".into(), vec![]),
+        ("Wanda".into(), vec![]),
+        ("mu-MoE".into(), vec![]),
+    ];
+    for &rho in &rhos {
+        let mag = stack.variant_magnitude(rho).expect("magnitude");
+        rows[0]
+            .1
+            .push(stack.accuracy(&mag, &test, None, limit).expect("acc").overall.pct());
+        let gpt = stack.variant_sparsegpt(&calib, rho).expect("sparsegpt");
+        rows[1]
+            .1
+            .push(stack.accuracy(&gpt, &test, None, limit).expect("acc").overall.pct());
+        let wan = stack.variant_wanda(&calib, rho).expect("wanda");
+        rows[2]
+            .1
+            .push(stack.accuracy(&wan, &test, None, limit).expect("acc").overall.pct());
+        rows[3].1.push(
+            stack
+                .accuracy(&stack.ckpt, &test, Some(rho), limit)
+                .expect("acc")
+                .overall
+                .pct(),
+        );
+    }
+    for (name, vals) in rows {
+        table.row(
+            std::iter::once(name)
+                .chain(vals.iter().map(|v| format!("{v:.2}")))
+                .collect(),
+        );
+    }
+    table.print();
+    println!("[table3 done in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,223 @@
+//! Benchmark harness (criterion substitute): warmup, adaptive iteration
+//! count, robust statistics, and the table renderer every `benches/*` file
+//! uses to print paper tables/figures.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over one benchmark run.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            median_ns: ns[n / 2],
+            p95_ns: ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: ns[0],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-profile bencher for slow end-to-end cases.
+    pub fn coarse() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            budget: Duration::from_millis(200),
+            min_iters: 2,
+            max_iters: 50,
+        }
+    }
+
+    /// Run `f` repeatedly, returning timing stats. The closure's return
+    /// value is black-boxed to stop the optimizer deleting the work.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box exists on this toolchain but we
+/// keep a local alias so benches read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.into(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with sensible precision for perplexity-style tables.
+pub fn fmt_f(x: f64) -> String {
+    if x >= 1000.0 {
+        format!("{x:.0}")
+    } else if x >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert!((s.mean_ns - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bencher_measures_work() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["method", "ppl"]);
+        t.row(vec!["wanda".into(), "30.12".into()]);
+        t.row(vec!["mu-moe".into(), "28.90".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| method |"));
+        assert!(r.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_precision() {
+        assert_eq!(fmt_f(1234.6), "1235");
+        assert_eq!(fmt_f(123.45), "123.5");
+        assert_eq!(fmt_f(12.345), "12.35");
+    }
+}

@@ -1,0 +1,233 @@
+//! Command-line argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! args, typed accessors with defaults, and auto-generated usage text.
+
+use crate::util::error::Error;
+use std::collections::HashMap;
+
+/// Declarative spec for one option.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against a spec.
+    pub fn parse(
+        argv: &[String],
+        spec: &[OptSpec],
+    ) -> Result<Args, Error> {
+        let mut out = Args::default();
+        for s in spec {
+            if let (Some(d), false) = (s.default, s.is_flag) {
+                out.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| Error::config(format!("unknown option --{key}")))?;
+                if s.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::config(format!(
+                            "flag --{key} takes no value"
+                        )));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                Error::config(format!("--{key} needs a value"))
+                            })?
+                            .clone(),
+                    };
+                    out.values.insert(key, v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, Error> {
+        self.get(name)
+            .ok_or_else(|| Error::config(format!("missing required --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, Error> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, Error> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, Error> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be a number")))
+    }
+
+    /// Comma-separated f64 list (e.g. `--rhos 0.4,0.5,0.6`).
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, Error> {
+        self.req(name)?
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::config(format!("bad number in --{name}")))
+            })
+            .collect()
+    }
+
+    pub fn get_str_list(&self, name: &str) -> Result<Vec<String>, Error> {
+        Ok(self
+            .req(name)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in spec {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{head:26} {}{def}\n", o.help));
+    }
+    s
+}
+
+pub const fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: Some(default),
+        is_flag: false,
+    }
+}
+
+pub const fn req_opt(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: false,
+    }
+}
+
+pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPEC: &[OptSpec] = &[
+        opt("model", "model name", "mu-opt-micro"),
+        req_opt("rho", "active ratio"),
+        flag("verbose", "chatty"),
+    ];
+
+    #[test]
+    fn defaults_and_values() {
+        let a = Args::parse(&sv(&["--rho", "0.5"]), SPEC).unwrap();
+        assert_eq!(a.get("model"), Some("mu-opt-micro"));
+        assert_eq!(a.get_f64("rho").unwrap(), 0.5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = Args::parse(&sv(&["--rho=0.4", "--verbose", "pos1"]), SPEC).unwrap();
+        assert_eq!(a.get_f64("rho").unwrap(), 0.4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope", "1"]), SPEC).is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse(&sv(&[]), SPEC).unwrap();
+        assert!(a.req("rho").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let spec = &[opt("rhos", "list", "0.4,0.5")];
+        let a = Args::parse(&sv(&[]), spec).unwrap();
+        assert_eq!(a.get_f64_list("rhos").unwrap(), vec![0.4, 0.5]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=1", "--rho", "1"]), SPEC).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("eval", "run eval", SPEC);
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: mu-opt-micro"));
+    }
+}

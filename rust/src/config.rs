@@ -1,0 +1,336 @@
+//! Typed configuration + a TOML-subset parser (serde/toml substitute).
+//!
+//! The launcher reads `mumoe.toml` (see `examples/configs/serve.toml`) with
+//! sections for runtime, coordinator and eval. The subset: `[section]`
+//! headers, `key = value` with string/int/float/bool/arrays, `#` comments.
+
+use crate::util::error::Error;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One parsed TOML-ish value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> Value` map.
+#[derive(Debug, Default)]
+pub struct Toml {
+    map: HashMap<String, Value>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml, Error> {
+        let mut map = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::parse(format!("empty section at line {}", lineno + 1)));
+                }
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::parse(format!("expected key = value at line {}", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Toml { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Toml, Error> {
+        Toml::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(Value::Arr(xs)) => xs.iter().filter_map(Value::as_f64).collect(),
+            _ => default.to_vec(),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but adequate: '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, Error> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                out.push(parse_value(p, lineno)?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::parse(format!("bad value '{s}' at line {lineno}")))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Typed configs
+// ---------------------------------------------------------------------------
+
+/// Everything the `serve` subcommand needs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifact directory produced by `make artifacts`.
+    pub artifacts_dir: String,
+    /// Model to serve (mu-opt-micro|mini|small).
+    pub model: String,
+    /// Max microseconds a request may wait for batch-mates.
+    pub batch_window_us: u64,
+    /// Max requests queued before admission control sheds load.
+    pub queue_cap: usize,
+    /// Sparsity levels the router accepts (others are snapped).
+    pub rho_levels: Vec<f64>,
+    /// Default sparsity when a request does not specify one.
+    pub default_rho: f64,
+    /// Workers for host-side preprocessing.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            model: "mu-opt-micro".into(),
+            batch_window_us: 2_000,
+            queue_cap: 256,
+            rho_levels: vec![0.2, 0.4, 0.5, 0.6, 0.8, 1.0],
+            default_rho: 0.5,
+            workers: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(t: &Toml) -> Result<Self, Error> {
+        let d = ServeConfig::default();
+        let cfg = Self {
+            artifacts_dir: t.str_or("runtime.artifacts_dir", &d.artifacts_dir),
+            model: t.str_or("coordinator.model", &d.model),
+            batch_window_us: t.usize_or("coordinator.batch_window_us", 2_000) as u64,
+            queue_cap: t.usize_or("coordinator.queue_cap", d.queue_cap),
+            rho_levels: t.f64_list_or("coordinator.rho_levels", &d.rho_levels),
+            default_rho: t.f64_or("coordinator.default_rho", d.default_rho),
+            workers: t.usize_or("coordinator.workers", d.workers),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.rho_levels.is_empty() {
+            return Err(Error::config("rho_levels must be non-empty"));
+        }
+        for &r in &self.rho_levels {
+            if !(0.0..=1.0).contains(&r) {
+                return Err(Error::config(format!("rho {r} outside [0,1]")));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.default_rho) {
+            return Err(Error::config("default_rho outside [0,1]"));
+        }
+        if self.queue_cap == 0 {
+            return Err(Error::config("queue_cap must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[runtime]
+artifacts_dir = "artifacts"   # relative to cwd
+
+[coordinator]
+model = "mu-opt-small"
+batch_window_us = 500
+rho_levels = [0.4, 0.6, 1.0]
+default_rho = 0.6
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.str_or("coordinator.model", "x"), "mu-opt-small");
+        assert_eq!(t.usize_or("coordinator.batch_window_us", 0), 500);
+        assert_eq!(
+            t.f64_list_or("coordinator.rho_levels", &[]),
+            vec![0.4, 0.6, 1.0]
+        );
+    }
+
+    #[test]
+    fn serve_config_from_toml() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert_eq!(c.model, "mu-opt-small");
+        assert_eq!(c.default_rho, 0.6);
+        assert_eq!(c.queue_cap, 256); // default kept
+    }
+
+    #[test]
+    fn validation_rejects_bad_rho() {
+        let mut c = ServeConfig::default();
+        c.rho_levels = vec![1.5];
+        assert!(c.validate().is_err());
+        c.rho_levels = vec![];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let t = Toml::parse("# top\n\nkey = 3 # trailing\n").unwrap();
+        assert_eq!(t.get("key"), Some(&Value::Int(3)));
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Toml::parse("not a kv line").is_err());
+        assert!(Toml::parse("k = @bogus").is_err());
+    }
+
+    #[test]
+    fn nested_arrays_and_strings() {
+        let t = Toml::parse(r#"a = ["x, y", "z"]"#).unwrap();
+        match t.get("a").unwrap() {
+            Value::Arr(xs) => {
+                assert_eq!(xs[0].as_str(), Some("x, y"));
+                assert_eq!(xs.len(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Sparsity-aware dynamic batcher.
+//!
+//! Requests are keyed by snapped sparsity level (a batch shares one ρ —
+//! the μ-MoE artifact takes ρ as a runtime scalar). A batch fires when it
+//! reaches the artifact batch size, or when its oldest member has waited
+//! out the batching window. Pure data structure (no threads, no clocks of
+//! its own) so the policy is exhaustively testable; the server loop feeds
+//! it time.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Target (and maximum) batch size — the artifact's static batch dim.
+    pub batch_size: usize,
+    /// Max time the oldest request may wait for batch-mates.
+    pub window: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 4,
+            window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A batch ready for execution: requests + the shared sparsity level.
+#[derive(Debug)]
+pub struct Batch {
+    pub rho: f64,
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// ρ-keyed queues. Keys are level *indices* into the configured rho_levels
+/// so float identity never leaks into the map.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    levels: Vec<f64>,
+    queues: Vec<VecDeque<Request>>,
+    pending: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig, rho_levels: &[f64]) -> DynamicBatcher {
+        assert!(!rho_levels.is_empty());
+        assert!(cfg.batch_size > 0);
+        DynamicBatcher {
+            cfg,
+            levels: rho_levels.to_vec(),
+            queues: rho_levels.iter().map(|_| VecDeque::new()).collect(),
+            pending: 0,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn levels(&self) -> &[f64] {
+        &self.levels
+    }
+
+    /// Enqueue a request whose ρ has already been snapped to a level.
+    pub fn push(&mut self, req: Request) {
+        let idx = self
+            .levels
+            .iter()
+            .position(|&l| (l - req.rho).abs() < 1e-9)
+            .expect("router must snap rho before push");
+        self.queues[idx].push_back(req);
+        self.pending += 1;
+    }
+
+    /// The policy: pick the queue whose head has waited longest; fire if
+    /// it's full or its head has exceeded the window. `now` injected for
+    /// testability.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        let mut best: Option<(usize, Instant)> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                let t = head.enqueued_at;
+                let full = q.len() >= self.cfg.batch_size;
+                let expired = now.duration_since(t) >= self.cfg.window;
+                if full || expired {
+                    match best {
+                        Some((_, bt)) if bt <= t => {}
+                        _ => best = Some((i, t)),
+                    }
+                }
+            }
+        }
+        let (idx, _) = best?;
+        let q = &mut self.queues[idx];
+        let n = q.len().min(self.cfg.batch_size);
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            requests.push(q.pop_front().unwrap());
+        }
+        self.pending -= n;
+        Some(Batch {
+            rho: self.levels[idx],
+            requests,
+        })
+    }
+
+    /// Time until the earliest head expires (server loop sleep hint).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|r| {
+                self.cfg
+                    .window
+                    .saturating_sub(now.duration_since(r.enqueued_at))
+            })
+            .min()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (i, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let n = q.len().min(self.cfg.batch_size);
+                let mut requests = Vec::with_capacity(n);
+                for _ in 0..n {
+                    requests.push(q.pop_front().unwrap());
+                }
+                self.pending -= n;
+                out.push(Batch {
+                    rho: self.levels[i],
+                    requests,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, rho: f64) -> Request {
+        Request::new(id, vec![1, 2, 3], 3, rho, "synth_wiki", None)
+    }
+
+    fn mk() -> DynamicBatcher {
+        DynamicBatcher::new(
+            BatcherConfig {
+                batch_size: 4,
+                window: Duration::from_millis(10),
+            },
+            &[0.4, 1.0],
+        )
+    }
+
+    #[test]
+    fn full_batch_fires_immediately() {
+        let mut b = mk();
+        for i in 0..4 {
+            b.push(req(i, 0.4));
+        }
+        let batch = b.pop_ready(Instant::now()).expect("should fire");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.rho, 0.4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_window() {
+        let mut b = mk();
+        b.push(req(1, 0.4));
+        let now = Instant::now();
+        assert!(b.pop_ready(now).is_none(), "window not expired");
+        let later = now + Duration::from_millis(11);
+        let batch = b.pop_ready(later).expect("expired window fires");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn batches_never_mix_rho() {
+        let mut b = mk();
+        for i in 0..3 {
+            b.push(req(i, 0.4));
+        }
+        for i in 3..6 {
+            b.push(req(i, 1.0));
+        }
+        let later = Instant::now() + Duration::from_millis(20);
+        while let Some(batch) = b.pop_ready(later) {
+            let rhos: Vec<f64> = batch.requests.iter().map(|r| r.rho).collect();
+            assert!(rhos.iter().all(|&r| (r - batch.rho).abs() < 1e-9));
+        }
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn oldest_queue_first() {
+        let mut b = mk();
+        b.push(req(1, 0.4));
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(2, 1.0));
+        let later = Instant::now() + Duration::from_millis(30);
+        let first = b.pop_ready(later).unwrap();
+        assert_eq!(first.rho, 0.4, "older head must fire first");
+    }
+
+    #[test]
+    fn oversize_queue_splits_into_full_batches() {
+        let mut b = mk();
+        for i in 0..9 {
+            b.push(req(i, 1.0));
+        }
+        let later = Instant::now() + Duration::from_millis(30);
+        let b1 = b.pop_ready(later).unwrap();
+        let b2 = b.pop_ready(later).unwrap();
+        let b3 = b.pop_ready(later).unwrap();
+        assert_eq!((b1.len(), b2.len(), b3.len()), (4, 4, 1));
+        // FIFO within level
+        assert_eq!(b1.requests[0].id, 0);
+        assert_eq!(b3.requests[0].id, 8);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = mk();
+        let now = Instant::now();
+        b.push(req(1, 0.4));
+        let d = b.next_deadline(now + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(7), "{d:?}");
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = mk();
+        for i in 0..6 {
+            b.push(req(i, if i % 2 == 0 { 0.4 } else { 1.0 }));
+        }
+        let batches = b.drain();
+        let total: usize = batches.iter().map(Batch::len).sum();
+        assert_eq!(total, 6);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "snap")]
+    fn unsnapped_rho_panics() {
+        let mut b = mk();
+        b.push(req(1, 0.73));
+    }
+}

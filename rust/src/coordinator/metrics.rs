@@ -1,0 +1,209 @@
+//! Serving metrics: lock-free counters + a log₂-bucketed latency histogram
+//! good enough for p50/p95/p99 without allocation on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 40; // 2^0 .. 2^39 us (~9 minutes)
+
+/// Shared metrics sink (all methods take &self; safe across threads).
+#[derive(Debug)]
+pub struct Metrics {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_slots: AtomicU64,
+    pub batch_occupied: AtomicU64,
+    pub queue_peak: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_slots: AtomicU64::new(0),
+            batch_occupied: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+            latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency_sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_accept(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, occupied: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_occupied
+            .fetch_add(occupied as u64, Ordering::Relaxed);
+        self.batch_slots.fetch_add(capacity as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, latency_us: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let b = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of
+    /// the containing bucket).
+    pub fn latency_percentile_us(&self, pct: f64) -> u64 {
+        let total: u64 = self
+            .latency_us
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * pct / 100.0).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.latency_us.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Mean fraction of batch slots actually occupied.
+    pub fn batch_occupancy(&self) -> f64 {
+        let slots = self.batch_slots.load(Ordering::Relaxed);
+        if slots == 0 {
+            return 0.0;
+        }
+        self.batch_occupied.load(Ordering::Relaxed) as f64 / slots as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "accepted={} rejected={} completed={} batches={} occupancy={:.2} \
+             mean_lat={:.0}us p50={}us p95={}us p99={}us",
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.batch_occupancy(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+
+    /// JSON dump for machine consumers.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::HashMap::new();
+        let g = |k: &AtomicU64| Json::Num(k.load(Ordering::Relaxed) as f64);
+        m.insert("accepted".into(), g(&self.accepted));
+        m.insert("rejected".into(), g(&self.rejected));
+        m.insert("completed".into(), g(&self.completed));
+        m.insert("batches".into(), g(&self.batches));
+        m.insert("occupancy".into(), Json::Num(self.batch_occupancy()));
+        m.insert("mean_latency_us".into(), Json::Num(self.mean_latency_us()));
+        m.insert(
+            "p50_us".into(),
+            Json::Num(self.latency_percentile_us(50.0) as f64),
+        );
+        m.insert(
+            "p99_us".into(),
+            Json::Num(self.latency_percentile_us(99.0) as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_accept();
+        m.record_accept();
+        m.record_reject();
+        assert_eq!(m.accepted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn occupancy() {
+        let m = Metrics::new();
+        m.record_batch(4, 4);
+        m.record_batch(2, 4);
+        assert!((m.batch_occupancy() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [10, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            m.record_completion(us);
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        let p95 = m.latency_percentile_us(95.0);
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 >= 100_000);
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        assert_eq!(Metrics::new().latency_percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn summary_and_json() {
+        let m = Metrics::new();
+        m.record_accept();
+        m.record_completion(500);
+        m.record_batch(1, 4);
+        let s = m.summary();
+        assert!(s.contains("accepted=1"));
+        let j = m.to_json();
+        assert_eq!(j.req("completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn queue_peak_tracks_max() {
+        let m = Metrics::new();
+        m.record_queue_depth(3);
+        m.record_queue_depth(9);
+        m.record_queue_depth(5);
+        assert_eq!(m.queue_peak.load(Ordering::Relaxed), 9);
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator: the serving layer that turns μ-MoE into a system.
+//!
+//! ```text
+//!  clients ──> Router (admission control, ρ snapping)
+//!                │
+//!                ▼
+//!          DynamicBatcher (groups by sparsity level, window/size policy)
+//!                │ batches
+//!                ▼
+//!          Server loop ──> runtime::Session (PJRT execute_b)
+//!                │
+//!                ▼
+//!          replies + Metrics (throughput, latency percentiles, occupancy)
+//! ```
+//!
+//! Batching is *sparsity-aware*: the μ-MoE artifact takes ρ as a runtime
+//! scalar, so a batch shares one ρ. The router snaps client ρ requests to
+//! configured levels to keep the number of batch keys bounded — the same
+//! trick vLLM-style routers use for sampling-parameter compatibility.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use router::Router;
+pub use server::{Server, ServerHandle};

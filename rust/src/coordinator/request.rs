@@ -1,0 +1,112 @@
+//! Request/response types exchanged between clients and the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A next-token inference request (the serving unit of the paper's
+/// system: prompt in, last-position logits out, pruned on the fly).
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Token window (already padded to the artifact's seq_len).
+    pub tokens: Vec<i32>,
+    pub valid_len: usize,
+    /// Requested active-weight ratio; the router snaps it to a level.
+    pub rho: f64,
+    /// Originating domain (metrics breakdown only).
+    pub domain: String,
+    pub enqueued_at: Instant,
+    /// Where the response goes; `None` in tests that only exercise policy.
+    pub reply: Option<Sender<Response>>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        tokens: Vec<i32>,
+        valid_len: usize,
+        rho: f64,
+        domain: impl Into<String>,
+        reply: Option<Sender<Response>>,
+    ) -> Request {
+        Request {
+            id,
+            tokens,
+            valid_len,
+            rho,
+            domain: domain.into(),
+            enqueued_at: Instant::now(),
+            reply,
+        }
+    }
+}
+
+/// Outcome of one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// Next-token logits at the last valid position (vocab-sized), or
+    /// empty on rejection.
+    pub logits: Vec<f32>,
+    /// Argmax token (greedy decode convenience).
+    pub next_token: i32,
+    /// End-to-end latency.
+    pub latency_us: u64,
+    /// Size of the batch this request rode in (occupancy telemetry).
+    pub batch_size: usize,
+    /// The sparsity level actually used after snapping.
+    pub rho_used: f64,
+    /// Set if the request was shed by admission control.
+    pub rejected: Option<String>,
+}
+
+impl Response {
+    pub fn rejected(id: RequestId, reason: impl Into<String>) -> Response {
+        Response {
+            id,
+            logits: Vec::new(),
+            next_token: -1,
+            latency_us: 0,
+            batch_size: 0,
+            rho_used: 0.0,
+            rejected: Some(reason.into()),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.rejected.is_none()
+    }
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn rejected_response() {
+        let r = Response::rejected(7, "queue full");
+        assert!(!r.is_ok());
+        assert_eq!(r.id, 7);
+    }
+}

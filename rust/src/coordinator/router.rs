@@ -1,0 +1,145 @@
+//! Router: the coordinator's front door. Tokenizes/pads prompts, snaps the
+//! requested sparsity to a configured level, applies admission control and
+//! hands requests to the batcher queue.
+
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use crate::config::ServeConfig;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::moe::snap_rho;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+/// Stateless-ish router; shared across client threads.
+pub struct Router {
+    cfg: ServeConfig,
+    seq_len: usize,
+    tokenizer: ByteTokenizer,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    /// Live queue depth (approximate; maintained by the server loop).
+    depth: Arc<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(cfg: ServeConfig, seq_len: usize, metrics: Arc<Metrics>) -> Router {
+        Router {
+            cfg,
+            seq_len,
+            tokenizer: ByteTokenizer,
+            next_id: AtomicU64::new(1),
+            metrics,
+            depth: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn depth_handle(&self) -> Arc<AtomicU64> {
+        self.depth.clone()
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Admission decision + request construction. Returns `Err(Response)`
+    /// with a rejection when load must be shed (queue full, bad input).
+    pub fn admit(
+        &self,
+        prompt: &str,
+        rho: f64,
+        domain: &str,
+        reply: Option<Sender<Response>>,
+    ) -> Result<Request, Box<Response>> {
+        let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+
+        if prompt.is_empty() {
+            self.metrics.record_reject();
+            return Err(Box::new(Response::rejected(id, "empty prompt")));
+        }
+        let depth = self.depth.load(Ordering::Relaxed) as usize;
+        self.metrics.record_queue_depth(depth);
+        if depth >= self.cfg.queue_cap {
+            self.metrics.record_reject();
+            return Err(Box::new(Response::rejected(id, "queue full")));
+        }
+
+        let rho = if rho <= 0.0 { self.cfg.default_rho } else { rho };
+        let snapped = snap_rho(rho.clamp(0.0, 1.0), &self.cfg.rho_levels);
+
+        let ids = self.tokenizer.encode(prompt, true);
+        let (tokens, valid_len) = self.tokenizer.pad_to(ids, self.seq_len);
+
+        self.metrics.record_accept();
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        Ok(Request::new(id, tokens, valid_len, snapped, domain, reply))
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(queue_cap: usize) -> Router {
+        let cfg = ServeConfig {
+            queue_cap,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            default_rho: 0.6,
+            ..Default::default()
+        };
+        Router::new(cfg, 128, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn admits_and_snaps() {
+        let r = router(10);
+        let req = r.admit("hello world", 0.55, "synth_wiki", None).unwrap();
+        assert_eq!(req.rho, 0.6);
+        assert_eq!(req.tokens.len(), 128);
+        assert_eq!(req.valid_len, 12); // BOS + 11 bytes
+    }
+
+    #[test]
+    fn default_rho_when_unspecified() {
+        let r = router(10);
+        let req = r.admit("x", 0.0, "d", None).unwrap();
+        assert_eq!(req.rho, 0.6);
+    }
+
+    #[test]
+    fn rejects_empty_prompt() {
+        let r = router(10);
+        let rej = r.admit("", 0.5, "d", None).unwrap_err();
+        assert!(!rej.is_ok());
+    }
+
+    #[test]
+    fn sheds_load_at_cap() {
+        let r = router(2);
+        r.depth_handle().store(2, Ordering::Relaxed);
+        let rej = r.admit("hi", 0.5, "d", None).unwrap_err();
+        assert_eq!(rej.rejected.as_deref(), Some("queue full"));
+        assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn ids_unique_and_increasing() {
+        let r = router(10);
+        let a = r.admit("a", 0.5, "d", None).unwrap();
+        let b = r.admit("b", 0.5, "d", None).unwrap();
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn long_prompt_truncated_to_window() {
+        let r = router(10);
+        let long = "x".repeat(500);
+        let req = r.admit(&long, 1.0, "d", None).unwrap();
+        assert_eq!(req.tokens.len(), 128);
+        assert_eq!(req.valid_len, 128);
+    }
+}

@@ -1,0 +1,333 @@
+//! The serve loop: a dedicated runtime thread that owns every PJRT object
+//! (client, registry, sessions — they hold raw pointers and never cross
+//! threads), fed by an mpsc channel of admitted requests.
+//!
+//! Loop body: drain arrivals → batcher → fire ready batches → execute on
+//! the μ-MoE session (or the dense session when ρ = 1) → reply + metrics.
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{argmax, Request, Response};
+use crate::config::ServeConfig;
+use crate::model::checkpoint::Checkpoint;
+use crate::runtime::registry::Registry;
+use crate::runtime::session::{literal_f32, Input, Session};
+use crate::runtime::weights::DeviceWeights;
+use crate::runtime::Client;
+use crate::util::error::{Error, ResultExt};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Control-plane handle returned by [`Server::start`].
+pub struct ServerHandle {
+    tx: Option<Sender<Request>>,
+    join: Option<std::thread::JoinHandle<Result<(), Error>>>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Submit an admitted request (router output).
+    pub fn submit(&self, req: Request) -> Result<(), Error> {
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(req)
+            .map_err(|_| Error::coordinator("server loop exited"))
+    }
+
+    /// Graceful shutdown: flush queues, join the loop.
+    pub fn shutdown(mut self) -> Result<(), Error> {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx.take());
+        match self.join.take() {
+            Some(j) => j
+                .join()
+                .map_err(|_| Error::coordinator("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+/// Server configuration beyond ServeConfig: which artifact kinds to bind.
+pub struct Server;
+
+impl Server {
+    /// Spawn the runtime thread. Blocks until the model is loaded and the
+    /// sessions are compiled (so callers can fail fast), then returns the
+    /// handle plus the queue-depth cell the router decrements are tied to.
+    pub fn start(
+        cfg: ServeConfig,
+        depth: Arc<AtomicU64>,
+        metrics: Arc<Metrics>,
+    ) -> Result<ServerHandle, Error> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<usize, Error>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let metrics2 = metrics.clone();
+
+        let join = std::thread::Builder::new()
+            .name("mumoe-serve".into())
+            .spawn(move || serve_thread(cfg, rx, ready_tx, depth, metrics2, stop2))
+            .expect("spawn serve thread");
+
+        match ready_rx.recv() {
+            Ok(Ok(seq_len)) => {
+                crate::info!("server ready (seq_len={seq_len})");
+                Ok(ServerHandle {
+                    tx: Some(tx),
+                    join: Some(join),
+                    metrics,
+                    stop,
+                })
+            }
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => Err(Error::coordinator("server thread died during startup")),
+        }
+    }
+}
+
+fn serve_thread(
+    cfg: ServeConfig,
+    rx: Receiver<Request>,
+    ready_tx: Sender<Result<usize, Error>>,
+    depth: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<(), Error> {
+    // --- startup: all PJRT state lives and dies on this thread ---------
+    let setup = (|| -> Result<(Session, Session), Error> {
+        let client = Client::cpu()?;
+        let registry = Registry::open(Path::new(&cfg.artifacts_dir), client.clone())?;
+        let ckpt = Checkpoint::load(&registry.ckpt_path(&cfg.model))
+            .with_context(|| format!("loading checkpoint for {}", cfg.model))?;
+        let mumoe_meta = registry.meta_for("mumoe_logits", &cfg.model)?.name.clone();
+        let dense_meta = registry.meta_for("dense_logits", &cfg.model)?.name.clone();
+        let order = registry.meta(&mumoe_meta)?.params.clone();
+        let weights = Arc::new(DeviceWeights::upload(&client, &ckpt, &order)?);
+        let mumoe = Session::bind(&registry, &mumoe_meta, weights.clone())?;
+        let dense = Session::bind(&registry, &dense_meta, weights)?;
+        Ok((mumoe, dense))
+    })();
+
+    let (mumoe, dense) = match setup {
+        Ok(s) => {
+            let _ = ready_tx.send(Ok(s.0.meta.seq_len));
+            s
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Err(Error::coordinator("startup failed"));
+        }
+    };
+
+    let batch_size = mumoe.meta.batch;
+    let mut batcher = DynamicBatcher::new(
+        BatcherConfig {
+            batch_size,
+            window: Duration::from_micros(cfg.batch_window_us),
+        },
+        &cfg.rho_levels,
+    );
+
+    // --- event loop -----------------------------------------------------
+    loop {
+        let now = Instant::now();
+        let timeout = batcher
+            .next_deadline(now)
+            .unwrap_or(Duration::from_millis(5));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                batcher.push(req);
+                // opportunistically drain whatever else arrived
+                while let Ok(more) = rx.try_recv() {
+                    batcher.push(more);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        let now = Instant::now();
+        while let Some(batch) = batcher.pop_ready(now) {
+            execute_batch(&mumoe, &dense, batch, &depth, &metrics);
+        }
+        if stop.load(Ordering::SeqCst) && batcher.pending() == 0 {
+            break;
+        }
+    }
+    // flush remaining work on shutdown
+    for batch in batcher.drain() {
+        execute_batch(&mumoe, &dense, batch, &depth, &metrics);
+    }
+    Ok(())
+}
+
+/// End-to-end driver: generate a synthetic trace from the three test
+/// corpora, start the server, replay arrivals in (compressed) real time
+/// and report throughput / latency / occupancy / per-domain stats.
+/// Shared by `mumoe serve` and `examples/serve_trace.rs`.
+pub fn replay_trace(
+    cfg: ServeConfig,
+    n_requests: usize,
+    rate: f64,
+) -> Result<String, Error> {
+    use crate::data::corpus::Corpus;
+    use crate::data::trace::{generate, TraceConfig};
+
+    let data_dir = Path::new(&cfg.artifacts_dir).join("data");
+    let corpora: Vec<Corpus> = crate::data::DOMAINS
+        .iter()
+        .map(|d| Corpus::load(&data_dir, d, "test"))
+        .collect::<Result<_, _>>()?;
+    let trace = generate(
+        &TraceConfig {
+            rate,
+            n_requests,
+            rho_choices: cfg.rho_levels.clone(),
+            ..Default::default()
+        },
+        &corpora,
+    );
+
+    let metrics = Arc::new(Metrics::new());
+    let router = super::router::Router::new(cfg.clone(), crate::model::MAX_SEQ_LEN, metrics.clone());
+    let depth = router.depth_handle();
+    let handle = Server::start(cfg, depth, metrics.clone())?;
+
+    let (rtx, rrx) = channel::<Response>();
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    for entry in &trace {
+        // replay arrivals on the trace clock
+        let target = Duration::from_micros(entry.arrival_us);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        match router.admit(&entry.prompt, entry.rho, &entry.domain, Some(rtx.clone())) {
+            Ok(req) => {
+                handle.submit(req)?;
+                submitted += 1;
+            }
+            Err(_rej) => {} // metrics already counted the shed
+        }
+    }
+    drop(rtx);
+    let mut ok = 0usize;
+    let mut by_rho: std::collections::HashMap<u64, (usize, u64)> = Default::default();
+    for _ in 0..submitted {
+        let resp = rrx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| Error::coordinator("timed out waiting for responses"))?;
+        if resp.is_ok() {
+            ok += 1;
+            let key = (resp.rho_used * 100.0) as u64;
+            let e = by_rho.entry(key).or_default();
+            e.0 += 1;
+            e.1 += resp.latency_us;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    handle.shutdown()?;
+
+    let mut report = format!(
+        "replayed {} requests in {:.2}s -> {:.1} req/s completed ({} ok)\n{}\n",
+        trace.len(),
+        wall,
+        ok as f64 / wall,
+        ok,
+        metrics.summary()
+    );
+    let mut keys: Vec<_> = by_rho.keys().copied().collect();
+    keys.sort();
+    for k in keys {
+        let (n, lat) = by_rho[&k];
+        report.push_str(&format!(
+            "  rho={:.2}: {} reqs, mean latency {:.0}us\n",
+            k as f64 / 100.0,
+            n,
+            lat as f64 / n.max(1) as f64
+        ));
+    }
+    Ok(report)
+}
+
+/// Run one batch and deliver responses. Failures reject the whole batch.
+fn execute_batch(
+    mumoe: &Session,
+    dense: &Session,
+    batch: Batch,
+    depth: &AtomicU64,
+    metrics: &Metrics,
+) {
+    let n = batch.len();
+    let use_dense = batch.rho >= 0.999;
+    let session = if use_dense { dense } else { mumoe };
+    let cap = session.meta.batch;
+    metrics.record_batch(n, cap);
+    depth.fetch_sub(n as u64, Ordering::Relaxed);
+
+    let seq = session.meta.seq_len;
+    let mut tokens = Vec::with_capacity(cap * seq);
+    let mut lengths = Vec::with_capacity(cap);
+    for r in &batch.requests {
+        tokens.extend_from_slice(&r.tokens);
+        lengths.push(r.valid_len as i32);
+    }
+    // pad unused slots by replicating the first request (outputs ignored)
+    for _ in n..cap {
+        tokens.extend_from_slice(&batch.requests[0].tokens);
+        lengths.push(batch.requests[0].valid_len as i32);
+    }
+
+    let mut inputs = vec![
+        Input::I32(tokens, vec![cap, seq]),
+        Input::I32(lengths, vec![cap]),
+    ];
+    if !use_dense {
+        inputs.push(Input::ScalarF32(batch.rho as f32));
+    }
+
+    let result = session
+        .run(&inputs)
+        .and_then(|outs| literal_f32(&outs[0]));
+
+    match result {
+        Ok(flat) => {
+            let vocab = flat.len() / cap;
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let row = flat[i * vocab..(i + 1) * vocab].to_vec();
+                let latency = req.enqueued_at.elapsed().as_micros() as u64;
+                metrics.record_completion(latency);
+                let resp = Response {
+                    id: req.id,
+                    next_token: argmax(&row),
+                    logits: row,
+                    latency_us: latency,
+                    batch_size: n,
+                    rho_used: batch.rho,
+                    rejected: None,
+                };
+                if let Some(reply) = req.reply {
+                    let _ = reply.send(resp);
+                }
+            }
+        }
+        Err(e) => {
+            crate::error!("batch execution failed: {e}");
+            for req in batch.requests {
+                metrics.record_reject();
+                if let Some(reply) = req.reply {
+                    let _ = reply.send(Response::rejected(req.id, format!("exec: {e}")));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Corpus reader + window sampler over the synthetic text corpora written
+//! by python/compile/data.py into `artifacts/data/{domain}.{split}.txt`.
+
+use crate::model::{BOS_ID, MAX_SEQ_LEN, PAD_ID};
+use crate::util::error::{Error, ResultExt};
+use crate::util::rng::Pcg32;
+use std::path::Path;
+
+/// An in-memory corpus (raw bytes of one domain/split).
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub domain: String,
+    pub split: String,
+    pub bytes: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn load(dir: &Path, domain: &str, split: &str) -> Result<Corpus, Error> {
+        let path = dir.join(format!("{domain}.{split}.txt"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        if bytes.is_empty() {
+            return Err(Error::parse(format!("empty corpus {}", path.display())));
+        }
+        Ok(Corpus {
+            domain: domain.to_string(),
+            split: split.to_string(),
+            bytes,
+        })
+    }
+
+    /// Deterministic evaluation windows: BOS + (len-1) bytes, strided so
+    /// windows are disjoint; the same window set feeds every method in a
+    /// table row (paired comparison).
+    pub fn eval_windows(&self, window_len: usize, max_windows: usize) -> Vec<Window> {
+        let body = window_len - 1;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        while off + body <= self.bytes.len() && out.len() < max_windows {
+            let mut tokens = Vec::with_capacity(window_len);
+            tokens.push(BOS_ID);
+            tokens.extend(self.bytes[off..off + body].iter().map(|&b| b as i32));
+            out.push(Window {
+                tokens,
+                valid_len: window_len,
+            });
+            off += body;
+        }
+        out
+    }
+
+    /// Random training-style window (used by the rust-driven trainer
+    /// example): BOS + (len-1) bytes from a random offset.
+    pub fn sample_window(&self, rng: &mut Pcg32, window_len: usize) -> Window {
+        let body = window_len - 1;
+        let max_off = self.bytes.len().saturating_sub(body).max(1);
+        let off = rng.gen_range_usize(max_off);
+        let end = (off + body).min(self.bytes.len());
+        let mut tokens = Vec::with_capacity(window_len);
+        tokens.push(BOS_ID);
+        tokens.extend(self.bytes[off..end].iter().map(|&b| b as i32));
+        let valid = tokens.len();
+        tokens.resize(window_len, PAD_ID);
+        Window {
+            tokens,
+            valid_len: valid,
+        }
+    }
+
+    /// A short prompt snippet (serving workloads).
+    pub fn sample_prompt(&self, rng: &mut Pcg32, min_len: usize, max_len: usize) -> String {
+        let len = min_len + rng.gen_range_usize(max_len - min_len + 1);
+        let len = len.min(MAX_SEQ_LEN - 1);
+        let max_off = self.bytes.len().saturating_sub(len).max(1);
+        let off = rng.gen_range_usize(max_off);
+        String::from_utf8_lossy(&self.bytes[off..off + len]).into_owned()
+    }
+}
+
+/// A fixed-length token window with its valid prefix length.
+#[derive(Clone, Debug)]
+pub struct Window {
+    pub tokens: Vec<i32>,
+    pub valid_len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_corpus(n: usize) -> Corpus {
+        Corpus {
+            domain: "synth_wiki".into(),
+            split: "test".into(),
+            bytes: (0..n).map(|i| b'a' + (i % 26) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn eval_windows_disjoint_and_fixed() {
+        let c = fake_corpus(1000);
+        let ws = c.eval_windows(65, 10);
+        assert_eq!(ws.len(), 10);
+        for w in &ws {
+            assert_eq!(w.tokens.len(), 65);
+            assert_eq!(w.tokens[0], BOS_ID);
+            assert_eq!(w.valid_len, 65);
+        }
+        // disjoint: window i+1 starts exactly where i ended
+        assert_eq!(ws[1].tokens[1], ws[0].tokens[64] + 1);
+    }
+
+    #[test]
+    fn eval_windows_bounded_by_corpus() {
+        let c = fake_corpus(100);
+        let ws = c.eval_windows(65, 10);
+        assert_eq!(ws.len(), 1); // only one 64-byte body fits
+    }
+
+    #[test]
+    fn sample_window_pads() {
+        let c = fake_corpus(50);
+        let mut rng = Pcg32::new(1, 0);
+        let w = c.sample_window(&mut rng, 128);
+        assert_eq!(w.tokens.len(), 128);
+        assert!(w.valid_len <= 51);
+        assert!(w.tokens[w.valid_len..].iter().all(|&t| t == PAD_ID));
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mumoe-corpus-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("synth_wiki.test.txt")).unwrap();
+        f.write_all(b"hello corpus world").unwrap();
+        drop(f);
+        let c = Corpus::load(&dir, "synth_wiki", "test").unwrap();
+        assert_eq!(c.bytes, b"hello corpus world");
+        assert!(Corpus::load(&dir, "synth_news", "test").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sample_prompt_length_bounds() {
+        let c = fake_corpus(500);
+        let mut rng = Pcg32::new(2, 0);
+        for _ in 0..50 {
+            let p = c.sample_prompt(&mut rng, 10, 40);
+            assert!(p.len() >= 10 && p.len() <= 40);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Data plane: corpus readers, the SQAB multimodal eval-set format, and
+//! synthetic serving-workload traces.
+
+pub mod corpus;
+pub mod qa;
+pub mod trace;
+
+/// The three synthetic domains standing in for WT2 / PTB / C4 (DESIGN.md
+/// §2). Order matches the paper's Table 1 column order.
+pub const DOMAINS: [&str; 3] = ["synth_wiki", "synth_news", "synth_web"];
+
+/// Human-readable label used in table output (paper's WT2/PTB/C4 slots).
+pub fn domain_label(domain: &str) -> &'static str {
+    match domain {
+        "synth_wiki" => "sWT2",
+        "synth_news" => "sPTB",
+        "synth_web" => "sC4",
+        _ => "?",
+    }
+}

@@ -1,0 +1,160 @@
+//! SQAB reader: the binary multimodal eval-set format written by
+//! python/compile/data.py (`write_qa_bin`). Keep the layout in sync:
+//!
+//! ```text
+//! magic    8  b"SQAB0001"
+//! n,h,w,maxq  u32 x4
+//! per record:
+//!   subject u8, modality u8, grade u8, answer u8, qlen u32
+//!   question bytes (maxq, zero-padded)
+//!   image f32le (h*w)
+//! ```
+
+use crate::util::error::{Error, ResultExt};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SQAB0001";
+
+/// Strata codes (match python data.py).
+pub const SUBJECT_NAMES: [&str; 3] = ["NAT", "SOC", "LAN"];
+pub const MODALITY_NAMES: [&str; 3] = ["TXT", "IMG", "NO"];
+pub const GRADE_NAMES: [&str; 2] = ["G1-6", "G7-12"];
+
+/// One multimodal multiple-choice record.
+#[derive(Clone, Debug)]
+pub struct QaRecord {
+    pub subject: u8,
+    pub modality: u8,
+    pub grade: u8,
+    /// Correct choice index (0-based; choice letters are 'A' + idx).
+    pub answer: u8,
+    pub question: String,
+    /// Row-major (h, w) grayscale image in [0, 1].
+    pub image: Vec<f32>,
+}
+
+impl QaRecord {
+    /// Number of choices parsed from the question text ("A) .. B) ..").
+    pub fn n_choices(&self) -> usize {
+        self.question.matches(") ").count().max(2)
+    }
+
+    /// The byte token for the correct answer letter.
+    pub fn answer_token(&self) -> i32 {
+        (b'A' + self.answer) as i32
+    }
+}
+
+/// A loaded eval set.
+#[derive(Clone, Debug)]
+pub struct QaSet {
+    pub img_h: usize,
+    pub img_w: usize,
+    pub max_qlen: usize,
+    pub records: Vec<QaRecord>,
+}
+
+impl QaSet {
+    pub fn load(path: &Path) -> Result<QaSet, Error> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening qa set {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::parse(format!("bad SQAB magic in {}", path.display())));
+        }
+        let n = read_u32(&mut f)? as usize;
+        let h = read_u32(&mut f)? as usize;
+        let w = read_u32(&mut f)? as usize;
+        let max_qlen = read_u32(&mut f)? as usize;
+        if h * w > 1 << 20 || max_qlen > 1 << 16 {
+            return Err(Error::parse("absurd SQAB dimensions"));
+        }
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut hdr = [0u8; 8];
+            f.read_exact(&mut hdr)?;
+            let (subject, modality, grade, answer) = (hdr[0], hdr[1], hdr[2], hdr[3]);
+            let qlen = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+            if qlen > max_qlen {
+                return Err(Error::parse("qlen exceeds max_qlen"));
+            }
+            let mut qbuf = vec![0u8; max_qlen];
+            f.read_exact(&mut qbuf)?;
+            let question = String::from_utf8_lossy(&qbuf[..qlen]).into_owned();
+            let mut ibuf = vec![0u8; h * w * 4];
+            f.read_exact(&mut ibuf)?;
+            let image = ibuf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            records.push(QaRecord {
+                subject,
+                modality,
+                grade,
+                answer,
+                question,
+                image,
+            });
+        }
+        Ok(QaSet {
+            img_h: h,
+            img_w: w,
+            max_qlen,
+            records,
+        })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32, Error> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_sample(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        for v in [2u32, 2, 2, 16] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for (i, q) in ["Q: a?\nA) x B) y", "Q: b?"].iter().enumerate() {
+            f.write_all(&[i as u8, 1, 0, (1 - i) as u8]).unwrap();
+            f.write_all(&(q.len() as u32).to_le_bytes()).unwrap();
+            let mut qb = q.as_bytes().to_vec();
+            qb.resize(16, 0);
+            f.write_all(&qb).unwrap();
+            for p in 0..4 {
+                f.write_all(&(p as f32 * 0.25).to_le_bytes()).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn load_sample() {
+        let p = std::env::temp_dir().join(format!("mumoe-sqab-{}.bin", std::process::id()));
+        write_sample(&p);
+        let set = QaSet::load(&p).unwrap();
+        assert_eq!(set.records.len(), 2);
+        assert_eq!(set.img_h, 2);
+        assert_eq!(set.records[0].question, "Q: a?\nA) x B) y");
+        assert_eq!(set.records[0].answer_token(), 'B' as i32);
+        assert_eq!(set.records[0].n_choices(), 2);
+        assert_eq!(set.records[1].image[3], 0.75);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join(format!("mumoe-sqab-bad-{}.bin", std::process::id()));
+        std::fs::write(&p, b"WRONGMAGIC...").unwrap();
+        assert!(QaSet::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

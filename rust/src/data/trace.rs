@@ -1,0 +1,119 @@
+//! Synthetic serving-workload traces: Poisson arrivals of prompts drawn
+//! from the three domains at mixed target sparsities — the E2E workload
+//! `examples/serve_trace.rs` replays against the coordinator.
+
+use super::corpus::Corpus;
+use crate::util::rng::Pcg32;
+
+/// One trace entry: when the request arrives and what it asks for.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Arrival offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    pub prompt: String,
+    pub domain: String,
+    /// Requested active-weight ratio (the client's compute budget).
+    pub rho: f64,
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean request rate (requests/second).
+    pub rate: f64,
+    pub n_requests: usize,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    /// Sparsity levels clients ask for (sampled uniformly).
+    pub rho_choices: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            rate: 200.0,
+            n_requests: 200,
+            min_prompt: 24,
+            max_prompt: 100,
+            rho_choices: vec![0.4, 0.6, 1.0],
+            seed: 2028,
+        }
+    }
+}
+
+/// Build a trace from loaded corpora (one per domain).
+pub fn generate(cfg: &TraceConfig, corpora: &[Corpus]) -> Vec<TraceEntry> {
+    assert!(!corpora.is_empty());
+    let mut rng = Pcg32::new(cfg.seed, 0xAB);
+    let mut t_us = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        t_us += rng.next_exp(cfg.rate) * 1e6;
+        let c = &corpora[rng.gen_range_usize(corpora.len())];
+        let rho = cfg.rho_choices[rng.gen_range_usize(cfg.rho_choices.len())];
+        out.push(TraceEntry {
+            arrival_us: t_us as u64,
+            prompt: c.sample_prompt(&mut rng, cfg.min_prompt, cfg.max_prompt),
+            domain: c.domain.clone(),
+            rho,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpora() -> Vec<Corpus> {
+        super::super::DOMAINS
+            .iter()
+            .map(|d| Corpus {
+                domain: d.to_string(),
+                split: "test".into(),
+                bytes: (0..2000).map(|i| b'a' + (i % 26) as u8).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let trace = generate(&TraceConfig::default(), &corpora());
+        assert_eq!(trace.len(), 200);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+    }
+
+    #[test]
+    fn mean_rate_approx() {
+        let cfg = TraceConfig {
+            rate: 1000.0,
+            n_requests: 2000,
+            ..Default::default()
+        };
+        let trace = generate(&cfg, &corpora());
+        let total_s = trace.last().unwrap().arrival_us as f64 / 1e6;
+        let rate = trace.len() as f64 / total_s;
+        assert!((rate - 1000.0).abs() < 100.0, "rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&TraceConfig::default(), &corpora());
+        let b = generate(&TraceConfig::default(), &corpora());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].prompt, b[0].prompt);
+        assert_eq!(a[7].arrival_us, b[7].arrival_us);
+    }
+
+    #[test]
+    fn rhos_from_choices() {
+        let cfg = TraceConfig::default();
+        let trace = generate(&cfg, &corpora());
+        for e in &trace {
+            assert!(cfg.rho_choices.contains(&e.rho));
+        }
+    }
+}

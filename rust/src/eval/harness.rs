@@ -1,0 +1,228 @@
+//! Experiment harness: everything Table 1 / Tables 2-3 / Figure 4 need to
+//! run a (model × method × ρ × dataset) cell through the AOT artifacts.
+//!
+//! Methods map onto artifacts as:
+//! * dense            → `dense_nll` with the original checkpoint
+//! * magnitude        → `dense_nll` with host-pruned weights
+//! * Wanda (offline)  → `calib_stats` on the calibration corpus, then
+//!                      `dense_nll` with host-masked weights
+//! * SparseGPT        → `calib_stats` (Hessians) + host OBS, `dense_nll`
+//! * μ-MoE (online)   → `mumoe_nll` with the *original* weights — pruning
+//!                      happens in-graph per prompt; nothing is precomputed
+//!
+//! The μ-MoE row needing no calibration input is the paper's whole point.
+
+use crate::data::corpus::Window;
+use crate::eval::Perplexity;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::{config_by_name, ModelConfig};
+use crate::pruning::sparsegpt::{sparsegpt_prune, HessianCalibrator, SparseGptConfig};
+use crate::pruning::wanda::WandaCalibrator;
+use crate::pruning::{magnitude::magnitude_mask, wanda::wanda_mask};
+use crate::runtime::registry::Registry;
+use crate::runtime::session::{literal_f32, literal_i32, Input, Session};
+use crate::runtime::weights::DeviceWeights;
+use crate::runtime::Client;
+use crate::tensor::Mat;
+use crate::util::error::{Error, ResultExt};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Per-linear calibration statistics pulled from the `calib_stats`
+/// artifact: Wanda square-sums and SparseGPT Hessians.
+pub struct CalibStats {
+    pub wanda: HashMap<String, WandaCalibrator>,
+    pub hessians: HashMap<String, HessianCalibrator>,
+    pub tokens: usize,
+}
+
+/// One model's evaluation stack: client + registry + base checkpoint.
+pub struct EvalStack {
+    pub cfg: ModelConfig,
+    pub registry: Registry,
+    pub ckpt: Checkpoint,
+    client: Client,
+}
+
+impl EvalStack {
+    pub fn open(artifacts_dir: &Path, model: &str) -> Result<EvalStack, Error> {
+        let cfg = config_by_name(model)
+            .ok_or_else(|| Error::config(format!("unknown model '{model}'")))?;
+        let client = Client::cpu()?;
+        let registry = Registry::open(artifacts_dir, client.clone())?;
+        let ckpt = Checkpoint::load(&registry.ckpt_path(model))?;
+        ckpt.validate_for(&cfg)?;
+        Ok(EvalStack {
+            cfg,
+            registry,
+            ckpt,
+            client,
+        })
+    }
+
+    fn bind(&self, kind: &str, ckpt: &Checkpoint) -> Result<Session, Error> {
+        let meta = self.registry.meta_for(kind, &self.cfg.name)?;
+        let name = meta.name.clone();
+        let order = meta.params.clone();
+        let weights = Arc::new(DeviceWeights::upload(&self.client, ckpt, &order)?);
+        Session::bind(&self.registry, &name, weights)
+    }
+
+    /// Perplexity over eval windows through an `*_nll` artifact.
+    /// `rho = None` → dense artifact; `Some(r)` → μ-MoE artifact.
+    pub fn perplexity(
+        &self,
+        ckpt: &Checkpoint,
+        windows: &[Window],
+        rho: Option<f64>,
+    ) -> Result<Perplexity, Error> {
+        let kind = if rho.is_some() { "mumoe_nll" } else { "dense_nll" };
+        let session = self.bind(kind, ckpt)?;
+        self.perplexity_with(&session, windows, rho)
+    }
+
+    /// Same, but reusing an already-bound session (weight upload amortized
+    /// across sweeps — the Figure 4 loop uses this).
+    pub fn perplexity_with(
+        &self,
+        session: &Session,
+        windows: &[Window],
+        rho: Option<f64>,
+    ) -> Result<Perplexity, Error> {
+        let b = session.meta.batch;
+        let seq = session.meta.seq_len;
+        let mut ppl = Perplexity::new();
+        for chunk in windows.chunks(b) {
+            let mut tokens = Vec::with_capacity(b * seq);
+            let mut lengths = Vec::with_capacity(b);
+            for w in chunk {
+                assert_eq!(w.tokens.len(), seq, "window/artifact seq mismatch");
+                tokens.extend_from_slice(&w.tokens);
+                lengths.push(w.valid_len as i32);
+            }
+            let real = chunk.len();
+            for _ in real..b {
+                tokens.extend_from_slice(&chunk[0].tokens);
+                lengths.push(0); // zero-length padding rows predict nothing
+            }
+            let mut inputs = vec![
+                Input::I32(tokens, vec![b, seq]),
+                Input::I32(lengths, vec![b]),
+            ];
+            if let Some(r) = rho {
+                inputs.push(Input::ScalarF32(r as f32));
+            }
+            let outs = session.run(&inputs)?;
+            let sums = literal_f32(&outs[0])?;
+            let counts = literal_i32(&outs[1])?;
+            for i in 0..real {
+                ppl.update(sums[i] as f64, counts[i] as u64);
+            }
+        }
+        Ok(ppl)
+    }
+
+    /// Bind a session for repeated use (Figure 4 sweep).
+    pub fn session(&self, kind: &str, ckpt: &Checkpoint) -> Result<Session, Error> {
+        self.bind(kind, ckpt)
+    }
+
+    /// Run the `calib_stats` artifact over calibration windows and fold
+    /// the outputs into per-linear calibrators.
+    pub fn calibrate(&self, windows: &[Window]) -> Result<CalibStats, Error> {
+        let session = self.bind("calib_stats", &self.ckpt)?;
+        let linears = session.meta.linears.clone();
+        if linears.is_empty() {
+            return Err(Error::invariant("calib_stats artifact lists no linears"));
+        }
+        let b = session.meta.batch;
+        let seq = session.meta.seq_len;
+
+        let mut wanda: HashMap<String, WandaCalibrator> = HashMap::new();
+        let mut hess: HashMap<String, HessianCalibrator> = HashMap::new();
+        let mut total_tokens = 0usize;
+
+        for chunk in windows.chunks(b) {
+            let mut tokens = Vec::with_capacity(b * seq);
+            let mut lengths = Vec::with_capacity(b);
+            for w in chunk {
+                tokens.extend_from_slice(&w.tokens);
+                lengths.push(w.valid_len as i32);
+            }
+            for _ in chunk.len()..b {
+                tokens.extend_from_slice(&chunk[0].tokens);
+                lengths.push(0);
+            }
+            let outs = session.run(&[
+                Input::I32(tokens, vec![b, seq]),
+                Input::I32(lengths, vec![b]),
+            ])?;
+            let batch_tokens: usize = chunk.iter().map(|w| w.valid_len).sum();
+            total_tokens += batch_tokens;
+            let n = linears.len();
+            for (i, name) in linears.iter().enumerate() {
+                let sq = literal_f32(&outs[i])?;
+                wanda
+                    .entry(name.clone())
+                    .or_insert_with(|| WandaCalibrator::new(sq.len()))
+                    .update_from_sq_sums(&sq, batch_tokens);
+                let h = literal_f32(&outs[n + i])?;
+                let d = sq.len();
+                hess.entry(name.clone())
+                    .or_insert_with(|| HessianCalibrator::new(d))
+                    .update_from_gram(&Mat::from_vec(d, d, h), batch_tokens);
+            }
+        }
+        Ok(CalibStats {
+            wanda,
+            hessians: hess,
+            tokens: total_tokens,
+        })
+    }
+
+    // --- offline-pruned checkpoint variants -----------------------------
+
+    pub fn variant_magnitude(&self, rho: f64) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.cfg.linear_names() {
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = magnitude_mask(&w, rho).apply(&w);
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+
+    pub fn variant_wanda(&self, calib: &CalibStats, rho: f64) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.cfg.linear_names() {
+            let c = calib
+                .wanda
+                .get(&name)
+                .ok_or_else(|| Error::invariant(format!("no wanda calib for {name}")))?;
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = wanda_mask(&w, c, rho).apply(&w);
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+
+    pub fn variant_sparsegpt(
+        &self,
+        calib: &CalibStats,
+        rho: f64,
+    ) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.cfg.linear_names() {
+            let c = calib
+                .hessians
+                .get(&name)
+                .ok_or_else(|| Error::invariant(format!("no hessian for {name}")))?;
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = sparsegpt_prune(&w, c, rho, SparseGptConfig::default())
+                .with_context(|| format!("sparsegpt on {name}"))?;
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+}

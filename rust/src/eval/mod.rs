@@ -1,0 +1,196 @@
+//! Evaluators: perplexity (Table 1 / Figure 4) and strata accuracy
+//! (Tables 2-3). Both aggregate from per-sequence sufficient statistics so
+//! the same code consumes artifact outputs and host-model outputs.
+
+pub mod harness;
+pub mod vlm_harness;
+
+use crate::data::qa::{QaRecord, GRADE_NAMES, MODALITY_NAMES, SUBJECT_NAMES};
+
+/// Streaming perplexity aggregator: exp(Σ nll / Σ count).
+#[derive(Clone, Debug, Default)]
+pub struct Perplexity {
+    pub nll_sum: f64,
+    pub token_count: u64,
+}
+
+impl Perplexity {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, nll_sum: f64, token_count: u64) {
+        debug_assert!(nll_sum >= 0.0 || token_count == 0);
+        self.nll_sum += nll_sum;
+        self.token_count += token_count;
+    }
+
+    pub fn merge(&mut self, other: &Perplexity) {
+        self.nll_sum += other.nll_sum;
+        self.token_count += other.token_count;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.token_count == 0 {
+            return f64::NAN;
+        }
+        (self.nll_sum / self.token_count as f64).exp()
+    }
+}
+
+/// One accuracy cell: correct / total.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccCell {
+    pub correct: u64,
+    pub total: u64,
+}
+
+impl AccCell {
+    pub fn update(&mut self, correct: bool) {
+        self.total += 1;
+        if correct {
+            self.correct += 1;
+        }
+    }
+
+    pub fn pct(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            100.0 * self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// ScienceQA-style strata accuracy (paper Table 2 columns: subject ×
+/// context modality × grade, plus the overall average).
+#[derive(Clone, Debug, Default)]
+pub struct StrataAccuracy {
+    pub by_subject: [AccCell; 3],
+    pub by_modality: [AccCell; 3],
+    pub by_grade: [AccCell; 2],
+    pub overall: AccCell,
+}
+
+impl StrataAccuracy {
+    pub fn update(&mut self, rec: &QaRecord, correct: bool) {
+        self.overall.update(correct);
+        if let Some(c) = self.by_subject.get_mut(rec.subject as usize) {
+            c.update(correct);
+        }
+        if let Some(c) = self.by_modality.get_mut(rec.modality as usize) {
+            c.update(correct);
+        }
+        if let Some(c) = self.by_grade.get_mut(rec.grade as usize) {
+            c.update(correct);
+        }
+    }
+
+    /// Paper Table 2 row order: NAT SOC LAN | TXT IMG NO | G1-6 G7-12 | Avg.
+    pub fn row(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (i, n) in SUBJECT_NAMES.iter().enumerate() {
+            out.push((n.to_string(), self.by_subject[i].pct()));
+        }
+        for (i, n) in MODALITY_NAMES.iter().enumerate() {
+            out.push((n.to_string(), self.by_modality[i].pct()));
+        }
+        for (i, n) in GRADE_NAMES.iter().enumerate() {
+            out.push((n.to_string(), self.by_grade[i].pct()));
+        }
+        out.push(("Avg".to_string(), self.overall.pct()));
+        out
+    }
+}
+
+/// Pick the answer from choice-letter logits: argmax over 'A'..'A'+n.
+pub fn grade_answer(logits_row: &[f32], n_choices: usize, answer: u8) -> bool {
+    let base = b'A' as usize;
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for c in 0..n_choices.min(8) {
+        let v = logits_row[base + c];
+        if v > best_v {
+            best_v = v;
+            best = c;
+        }
+    }
+    best == answer as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(subject: u8, modality: u8, grade: u8, answer: u8) -> QaRecord {
+        QaRecord {
+            subject,
+            modality,
+            grade,
+            answer,
+            question: "Q: x?\nA) a B) b C) c D) d\nAnswer:".into(),
+            image: vec![],
+        }
+    }
+
+    #[test]
+    fn perplexity_uniform_model() {
+        // uniform over V=4 -> nll = ln 4 per token -> ppl = 4
+        let mut p = Perplexity::new();
+        p.update((4.0f64).ln() * 10.0, 10);
+        assert!((p.value() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_merge_equals_streaming() {
+        let mut a = Perplexity::new();
+        a.update(3.0, 2);
+        let mut b = Perplexity::new();
+        b.update(5.0, 3);
+        let mut m = a.clone();
+        m.merge(&b);
+        let mut s = Perplexity::new();
+        s.update(3.0, 2);
+        s.update(5.0, 3);
+        assert_eq!(m.value(), s.value());
+    }
+
+    #[test]
+    fn empty_perplexity_is_nan() {
+        assert!(Perplexity::new().value().is_nan());
+    }
+
+    #[test]
+    fn strata_routing() {
+        let mut s = StrataAccuracy::default();
+        s.update(&rec(0, 1, 0, 0), true);
+        s.update(&rec(2, 2, 1, 1), false);
+        assert_eq!(s.by_subject[0].total, 1);
+        assert_eq!(s.by_subject[0].correct, 1);
+        assert_eq!(s.by_subject[2].total, 1);
+        assert_eq!(s.by_grade[1].correct, 0);
+        assert_eq!(s.overall.total, 2);
+        assert!((s.overall.pct() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_order_matches_table2() {
+        let s = StrataAccuracy::default();
+        let names: Vec<String> = s.row().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(
+            names,
+            vec!["NAT", "SOC", "LAN", "TXT", "IMG", "NO", "G1-6", "G7-12", "Avg"]
+        );
+    }
+
+    #[test]
+    fn grade_answer_argmax() {
+        let mut logits = vec![0.0f32; 300];
+        logits[b'C' as usize] = 5.0;
+        assert!(grade_answer(&logits, 4, 2));
+        assert!(!grade_answer(&logits, 4, 0));
+        // out-of-range choices are ignored
+        logits[b'A' as usize + 6] = 99.0;
+        assert!(grade_answer(&logits, 4, 2));
+    }
+}

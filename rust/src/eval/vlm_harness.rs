@@ -1,0 +1,339 @@
+//! μ-VLM experiment harness for Tables 2-3: accuracy of the multimodal
+//! model under each compression method, with cross-task calibration
+//! (Wanda/SparseGPT calibrate on the *other* benchmark — exactly the
+//! paper's domain-shift setup).
+//!
+//! Grading is LM-style multiple choice: for each candidate, append its
+//! text after the question's trailing "Answer:" and score the
+//! continuation's NLL through the `vlm_*_nll` artifact; lowest NLL wins.
+//! (Mirrors python/compile/vlm.py::choice_nll.)
+
+use crate::data::qa::{QaRecord, QaSet};
+use crate::eval::StrataAccuracy;
+use crate::model::checkpoint::Checkpoint;
+use crate::pruning::sparsegpt::{sparsegpt_prune, HessianCalibrator, SparseGptConfig};
+use crate::pruning::wanda::WandaCalibrator;
+use crate::pruning::{magnitude::magnitude_mask, wanda::wanda_mask};
+use crate::runtime::registry::Registry;
+use crate::runtime::session::{literal_f32, Input, Session};
+use crate::runtime::weights::DeviceWeights;
+use crate::runtime::Client;
+use crate::tensor::Mat;
+use crate::util::error::{Error, ResultExt};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+pub const VLM_MODEL: &str = "mu-vlm";
+
+/// Recover choice texts from the canonical question format
+/// `"Q: ...\nA) x B) y C) z D) w\nAnswer:"` (data.py::parse_choices).
+pub fn parse_choices(question: &str) -> Vec<String> {
+    let letters = ["A", "B", "C", "D"];
+    let body = match question.split('\n').nth(1) {
+        Some(b) => b,
+        None => return Vec::new(),
+    };
+    let mut out = Vec::new();
+    for (i, l) in letters.iter().enumerate() {
+        let tag = format!("{l}) ");
+        let Some(start) = body.find(&tag) else { break };
+        let start = start + tag.len();
+        let mut end = body.len();
+        for l2 in &letters[i + 1..] {
+            if let Some(j) = body[start..].find(&format!(" {l2}) ")) {
+                end = start + j;
+                break;
+            }
+        }
+        out.push(body[start..end].to_string());
+    }
+    out
+}
+
+pub struct VlmCalib {
+    pub wanda: HashMap<String, WandaCalibrator>,
+    pub hessians: HashMap<String, HessianCalibrator>,
+}
+
+pub struct VlmStack {
+    pub registry: Registry,
+    pub ckpt: Checkpoint,
+    client: Client,
+}
+
+/// One scoring job: (record index, choice index, full tokens, ans_start).
+struct Job {
+    rec: usize,
+    choice: usize,
+    tokens: Vec<i32>,
+    len: i32,
+    start: i32,
+    image: Vec<f32>,
+}
+
+impl VlmStack {
+    pub fn open(artifacts_dir: &Path) -> Result<VlmStack, Error> {
+        let client = Client::cpu()?;
+        let registry = Registry::open(artifacts_dir, client.clone())?;
+        let ckpt = Checkpoint::load(&registry.ckpt_path(VLM_MODEL))?;
+        Ok(VlmStack {
+            registry,
+            ckpt,
+            client,
+        })
+    }
+
+    fn bind(&self, kind: &str, ckpt: &Checkpoint) -> Result<Session, Error> {
+        let meta = self.registry.meta_for(kind, VLM_MODEL)?;
+        let name = meta.name.clone();
+        let order = meta.params.clone();
+        let weights = Arc::new(DeviceWeights::upload(&self.client, ckpt, &order)?);
+        Session::bind(&self.registry, &name, weights)
+    }
+
+    pub fn linear_names(&self) -> Result<Vec<String>, Error> {
+        Ok(self
+            .registry
+            .meta_for("vlm_calib_stats", VLM_MODEL)?
+            .linears
+            .clone())
+    }
+
+    /// Strata accuracy of one checkpoint variant on (a prefix of) an eval
+    /// set. `rho = None` → dense artifact; `Some(r)` → μ-MoE artifact.
+    pub fn accuracy(
+        &self,
+        ckpt: &Checkpoint,
+        set: &QaSet,
+        rho: Option<f64>,
+        limit: usize,
+    ) -> Result<StrataAccuracy, Error> {
+        let kind = if rho.is_some() {
+            "vlm_mumoe_nll"
+        } else {
+            "vlm_dense_nll"
+        };
+        let session = self.bind(kind, ckpt)?;
+        let b = session.meta.batch;
+        let tq = session.meta.seq_len;
+
+        // expand records into per-choice scoring jobs
+        let records: Vec<&QaRecord> = set.records.iter().take(limit.max(1)).collect();
+        let mut jobs = Vec::new();
+        for (ri, rec) in records.iter().enumerate() {
+            let choices = parse_choices(&rec.question);
+            if choices.is_empty() {
+                return Err(Error::parse(format!(
+                    "unparseable choices in question: {}",
+                    rec.question
+                )));
+            }
+            let qb = rec.question.as_bytes();
+            for (ci, choice) in choices.iter().enumerate() {
+                let mut tokens: Vec<i32> = qb.iter().map(|&c| c as i32).collect();
+                tokens.push(b' ' as i32);
+                tokens.extend(choice.as_bytes().iter().map(|&c| c as i32));
+                tokens.truncate(tq);
+                let len = tokens.len() as i32;
+                let start = (qb.len().min(tq)) as i32;
+                tokens.resize(tq, 0);
+                jobs.push(Job {
+                    rec: ri,
+                    choice: ci,
+                    tokens,
+                    len,
+                    start,
+                    image: rec.image.clone(),
+                });
+            }
+        }
+
+        // score in artifact-sized batches
+        let mut scores: Vec<Vec<f64>> = records
+            .iter()
+            .map(|r| vec![f64::INFINITY; parse_choices(&r.question).len()])
+            .collect();
+        let hw = set.img_h;
+        for chunk in jobs.chunks(b) {
+            let mut images = Vec::with_capacity(b * hw * hw);
+            let mut tokens = Vec::with_capacity(b * tq);
+            let mut lens = Vec::with_capacity(b);
+            let mut starts = Vec::with_capacity(b);
+            for j in chunk {
+                images.extend_from_slice(&j.image);
+                tokens.extend_from_slice(&j.tokens);
+                lens.push(j.len);
+                starts.push(j.start);
+            }
+            for _ in chunk.len()..b {
+                images.extend(std::iter::repeat(0.0f32).take(hw * hw));
+                tokens.extend(std::iter::repeat(0i32).take(tq));
+                lens.push(2);
+                starts.push(1);
+            }
+            let mut inputs = vec![
+                Input::F32(images, vec![b, hw, hw]),
+                Input::I32(tokens, vec![b, tq]),
+                Input::I32(lens, vec![b]),
+                Input::I32(starts, vec![b]),
+            ];
+            if let Some(r) = rho {
+                inputs.push(Input::ScalarF32(r as f32));
+            }
+            let outs = session.run(&inputs)?;
+            let nll = literal_f32(&outs[0])?;
+            for (i, j) in chunk.iter().enumerate() {
+                // normalize by continuation length so longer choices
+                // aren't penalized (standard MC scoring)
+                let cont = (j.len - j.start).max(1) as f64;
+                scores[j.rec][j.choice] = nll[i] as f64 / cont;
+            }
+        }
+
+        let mut acc = StrataAccuracy::default();
+        for (ri, rec) in records.iter().enumerate() {
+            let best = scores[ri]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            acc.update(rec, best == rec.answer as usize);
+        }
+        Ok(acc)
+    }
+
+    /// Calibration statistics from (a prefix of) an eval set — paired with
+    /// the *other* task at the call site to reproduce the paper's
+    /// cross-task mismatch.
+    pub fn calibrate(&self, set: &QaSet, n_samples: usize) -> Result<VlmCalib, Error> {
+        let session = self.bind("vlm_calib_stats", &self.ckpt)?;
+        let linears = session.meta.linears.clone();
+        let b = session.meta.batch;
+        let tq = session.meta.seq_len;
+        let hw = set.img_h;
+        let mut wanda: HashMap<String, WandaCalibrator> = HashMap::new();
+        let mut hess: HashMap<String, HessianCalibrator> = HashMap::new();
+        let records: Vec<&QaRecord> =
+            set.records.iter().take(n_samples.max(1)).collect();
+        for chunk in records.chunks(b) {
+            let mut images = Vec::with_capacity(b * hw * hw);
+            let mut tokens = Vec::with_capacity(b * tq);
+            let mut lens = Vec::with_capacity(b);
+            for r in chunk {
+                images.extend_from_slice(&r.image);
+                let qb = r.question.as_bytes();
+                let mut toks: Vec<i32> =
+                    qb.iter().take(tq).map(|&c| c as i32).collect();
+                lens.push(toks.len() as i32);
+                toks.resize(tq, 0);
+                tokens.extend_from_slice(&toks);
+            }
+            for _ in chunk.len()..b {
+                images.extend(std::iter::repeat(0.0f32).take(hw * hw));
+                tokens.extend(std::iter::repeat(0i32).take(tq));
+                lens.push(1);
+            }
+            let outs = session.run(&[
+                Input::F32(images, vec![b, hw, hw]),
+                Input::I32(tokens, vec![b, tq]),
+                Input::I32(lens, vec![b]),
+            ])?;
+            let n = linears.len();
+            let toks: usize = chunk.iter().map(|r| r.question.len()).sum();
+            for (i, name) in linears.iter().enumerate() {
+                let sq = literal_f32(&outs[i])?;
+                wanda
+                    .entry(name.clone())
+                    .or_insert_with(|| WandaCalibrator::new(sq.len()))
+                    .update_from_sq_sums(&sq, toks);
+                let h = literal_f32(&outs[n + i])?;
+                let d = sq.len();
+                hess.entry(name.clone())
+                    .or_insert_with(|| HessianCalibrator::new(d))
+                    .update_from_gram(&Mat::from_vec(d, d, h), toks);
+            }
+        }
+        Ok(VlmCalib {
+            wanda,
+            hessians: hess,
+        })
+    }
+
+    // --- offline-pruned variants ----------------------------------------
+
+    pub fn variant_magnitude(&self, rho: f64) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.linear_names()? {
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = magnitude_mask(&w, rho).apply(&w);
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+
+    pub fn variant_wanda(&self, calib: &VlmCalib, rho: f64) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.linear_names()? {
+            let c = calib
+                .wanda
+                .get(&name)
+                .ok_or_else(|| Error::invariant(format!("no calib for {name}")))?;
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = wanda_mask(&w, c, rho).apply(&w);
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+
+    pub fn variant_sparsegpt(
+        &self,
+        calib: &VlmCalib,
+        rho: f64,
+    ) -> Result<Checkpoint, Error> {
+        let mut out = self.ckpt.clone();
+        for name in self.linear_names()? {
+            let c = calib
+                .hessians
+                .get(&name)
+                .ok_or_else(|| Error::invariant(format!("no hessian for {name}")))?;
+            let w = out.get(&name)?.as_mat()?;
+            let pruned = sparsegpt_prune(&w, c, rho, SparseGptConfig::default())
+                .with_context(|| format!("sparsegpt on {name}"))?;
+            out.tensors.get_mut(&name).unwrap().data = pruned.data;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_choices_roundtrip() {
+        let q = "Q: what is iron?\nA) metal B) rock C) tree D) gas\nAnswer:";
+        assert_eq!(parse_choices(q), vec!["metal", "rock", "tree", "gas"]);
+    }
+
+    #[test]
+    fn parse_choices_two_options() {
+        let q = "Q: x?\nA) yes B) no\nAnswer:";
+        assert_eq!(parse_choices(q), vec!["yes", "no"]);
+    }
+
+    #[test]
+    fn parse_choices_with_spaces() {
+        let q = "Q: which district?\nA) north-west B) south east C) a D) b\nAnswer:";
+        assert_eq!(
+            parse_choices(q),
+            vec!["north-west", "south east", "a", "b"]
+        );
+    }
+
+    #[test]
+    fn parse_choices_malformed() {
+        assert!(parse_choices("no newline here").is_empty());
+    }
+}

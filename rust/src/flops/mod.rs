@@ -1,0 +1,198 @@
+//! Analytical FLOPs/MACs counter — regenerates the paper's Table 4
+//! (complexity of OPT-scale models under μ-MoE at varying active ratios).
+//!
+//! The paper used the `calflops` library and *included* the pruning
+//! overhead — ℓ₂-norm, top-ρ search and comparators — in the counts. We
+//! count the same operation classes analytically from the architecture:
+//!
+//! * linear layers: `2·d_out·d_in·T` FLOPs (MACs = half), scaled by ρ for
+//!   the active-weight fraction (the μ-MoE saving);
+//! * attention score/value matmuls: `2·T²·d` per layer (not prunable);
+//! * Wanda overhead per linear: norms `2·d_in·T`, scoring `d_out·d_in`
+//!   (product; counted as MAC-free multiplies), selection ~`d_out·d_in`
+//!   comparisons, masking comparators `d_out·d_in`;
+//! * layernorm / softmax / embeddings: elementwise terms.
+//!
+//! Absolute numbers differ from calflops by bookkeeping conventions, but
+//! the Table-4 *shape* — FLOPs ≈ affine in ρ, MACs ≈ proportional to ρ —
+//! is what the reproduction checks.
+
+use crate::model::ModelConfig;
+
+/// FLOPs/MACs tally for one forward pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCount {
+    pub flops: f64,
+    pub macs: f64,
+}
+
+impl OpCount {
+    fn add_matmul(&mut self, m: f64, k: f64, n: f64, active: f64) {
+        // matmul (m,k)x(k,n): k MACs per output, 2k FLOPs
+        self.macs += m * k * n * active;
+        self.flops += 2.0 * m * k * n * active;
+    }
+
+    fn add_elementwise(&mut self, n: f64, flops_per: f64) {
+        self.flops += n * flops_per;
+    }
+
+    pub fn tflops(&self) -> f64 {
+        self.flops / 1e12
+    }
+
+    pub fn gmacs(&self) -> f64 {
+        self.macs / 1e9
+    }
+}
+
+/// Architecture shape for counting (decoupled from ModelConfig so paper
+/// scale OPT shapes can be evaluated without instantiating weights).
+#[derive(Clone, Copy, Debug)]
+pub struct ArchShape {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+}
+
+impl ArchShape {
+    pub fn of(cfg: &ModelConfig) -> ArchShape {
+        ArchShape {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            vocab: cfg.vocab_size,
+        }
+    }
+
+    /// Paper-scale OPT entry by (layers, d_model); vocab 50272 (OPT BPE).
+    pub fn opt(layers: usize, d_model: usize) -> ArchShape {
+        ArchShape {
+            n_layers: layers,
+            d_model,
+            vocab: 50_272,
+        }
+    }
+}
+
+/// Count one forward pass of `t` tokens at active ratio `rho`, including
+/// the instant-Wanda pruning overhead when `online_prune` is set.
+pub fn count_forward(shape: ArchShape, t: usize, rho: f64, online_prune: bool) -> OpCount {
+    let (d, di) = (shape.d_model as f64, 4.0 * shape.d_model as f64);
+    let tf = t as f64;
+    let mut c = OpCount::default();
+
+    // per layer
+    for _ in 0..shape.n_layers {
+        // q, k, v, o projections: (T, d) x (d, d), weights rho-active
+        for _ in 0..4 {
+            c.add_matmul(tf, d, d, rho);
+        }
+        // fc1 (T,d)x(d,4d) + fc2 (T,4d)x(4d,d)
+        c.add_matmul(tf, d, di, rho);
+        c.add_matmul(tf, di, d, rho);
+        // attention scores + weighted values: (T,hd)x(hd,T) per head = T^2 d
+        c.add_matmul(tf, d, tf, 1.0);
+        c.add_matmul(tf, tf, d, 1.0);
+        // softmax (~5 flops/elt) + 2 layernorms (~8 flops/elt) + relu
+        c.add_elementwise(tf * tf, 5.0);
+        c.add_elementwise(2.0 * tf * d, 8.0);
+        c.add_elementwise(tf * di, 1.0);
+
+        if online_prune {
+            // instant Wanda per linear (paper S2: O[3 d d' + d T]):
+            //   norms: 2 d_in T flops (square + accumulate; d_in T MACs)
+            //   score: d_out d_in multiplies
+            //   kth-value selection: ~d_out d_in comparisons
+            //   gate comparators: d_out d_in
+            let linears: [(f64, f64); 6] =
+                [(d, d), (d, d), (d, d), (d, d), (di, d), (d, di)];
+            for (d_out, d_in) in linears {
+                c.flops += 2.0 * d_in * tf; // norm accumulate
+                c.macs += d_in * tf;
+                c.flops += d_out * d_in; // scores
+                c.flops += d_out * d_in; // selection comparisons
+                c.flops += d_out * d_in; // gating comparators
+            }
+        }
+    }
+    // final layernorm + tied LM head (dense: the head is not pruned)
+    c.add_elementwise(tf * d, 8.0);
+    c.add_matmul(tf, d, shape.vocab as f64, 1.0);
+    c
+}
+
+/// Table 4 row: counts at a given active ratio for token length 128.
+pub fn table4_row(shape: ArchShape, rho: f64) -> OpCount {
+    count_forward(shape, 128, rho, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_17b_like() -> ArchShape {
+        // the paper's "OPT-17B" table; closest published config is 13B
+        // (40 layers, d=5120) — Table 4 scale is what matters
+        ArchShape::opt(40, 5120)
+    }
+
+    #[test]
+    fn macs_roughly_proportional_to_rho() {
+        // the paper's headline observation on Table 4
+        let s = paper_17b_like();
+        let full = table4_row(s, 1.0);
+        let half = table4_row(s, 0.5);
+        let fifth = table4_row(s, 0.2);
+        let r_half = half.macs / full.macs;
+        let r_fifth = fifth.macs / full.macs;
+        assert!((r_half - 0.5).abs() < 0.1, "{r_half}");
+        assert!((r_fifth - 0.2).abs() < 0.12, "{r_fifth}");
+    }
+
+    #[test]
+    fn flops_affine_in_rho_with_overhead_floor() {
+        let s = paper_17b_like();
+        let r100 = table4_row(s, 1.0).flops;
+        let r20 = table4_row(s, 0.2).flops;
+        // attention + overhead keep the floor well above 20%
+        assert!(r20 / r100 > 0.2);
+        assert!(r20 / r100 < 0.65);
+    }
+
+    #[test]
+    fn monotone_in_rho() {
+        let s = ArchShape::opt(12, 768);
+        let mut last = 0.0;
+        for rho in [0.2, 0.4, 0.6, 0.8, 1.0] {
+            let c = table4_row(s, rho);
+            assert!(c.flops > last);
+            last = c.flops;
+        }
+    }
+
+    #[test]
+    fn online_overhead_is_small_at_long_t() {
+        // paper S2: overhead ratio ~ 3/T + 1/d' -> negligible for T=128
+        let s = ArchShape::opt(24, 2048);
+        let with = count_forward(s, 128, 1.0, true);
+        let without = count_forward(s, 128, 1.0, false);
+        let overhead = (with.flops - without.flops) / without.flops;
+        assert!(overhead < 0.05, "overhead {overhead}");
+    }
+
+    #[test]
+    fn paper_scale_magnitudes() {
+        // Table 4 reports ~3.3 TFLOPs at 100% for "OPT-17B", T=128.
+        // Our conventions put a 40L/5120d model in the same ballpark.
+        let c = table4_row(paper_17b_like(), 1.0);
+        assert!(c.tflops() > 1.0 && c.tflops() < 8.0, "{}", c.tflops());
+    }
+
+    #[test]
+    fn micro_counts_positive() {
+        let cfg = crate::model::config_by_name("mu-opt-micro").unwrap();
+        let c = count_forward(ArchShape::of(&cfg), 128, 0.5, true);
+        assert!(c.flops > 0.0 && c.macs > 0.0);
+        assert!(c.macs < c.flops);
+    }
+}

@@ -1,0 +1,48 @@
+//! # mumoe — test-time pruning as micro-grained mixture-of-experts
+//!
+//! Production-shaped reproduction of *μ-MoE: Test-Time Pruning as
+//! Micro-Grained Mixture-of-Experts* (Koike-Akino, Liu, Wang; 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request router, dynamic
+//!   batcher, sparsity-aware scheduler, PJRT runtime sessions, metrics and
+//!   the model/pruning/eval substrates everything sits on.
+//! * **L2 (python/compile)** — the μ-OPT / μ-VLM compute graphs in JAX,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the μ-MoE hot
+//!   spot (Wanda scoring, micro-expert gating, fused prune+matmul).
+//!
+//! Python never runs at request time: the coordinator loads HLO text with
+//! the `xla` crate's PJRT CPU client and keeps model weights resident as
+//! device buffers.
+//!
+//! The crate is organised as substrates (bottom) to product (top):
+//!
+//! ```text
+//! util, cli, config, benchlib, proptest      substrates (std-only)
+//! tensor, nn                                 host math + reference model
+//! model, data                                model zoo, tokenizer, corpora
+//! pruning, moe                               pruning engines + μ-MoE lens
+//! flops, eval                                analytics + evaluators
+//! runtime                                    PJRT artifact execution
+//! coordinator                                router/batcher/scheduler/server
+//! ```
+
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flops;
+pub mod model;
+pub mod moe;
+pub mod nn;
+pub mod proptest;
+pub mod pruning;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (see [`util::error::Error`]).
+pub type Result<T> = std::result::Result<T, util::error::Error>;

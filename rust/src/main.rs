@@ -1,0 +1,519 @@
+//! mumoe — CLI launcher for the μ-MoE serving stack.
+//!
+//! Subcommands:
+//!   serve       replay a synthetic request trace through the coordinator
+//!   generate    autoregressive greedy decode with μ-MoE online pruning
+//!   eval        perplexity of one (model, method, ρ, dataset) cell
+//!   vlm-eval    strata accuracy of μ-VLM under one method/ρ
+//!   flops       Table-4 style FLOPs/MACs analysis
+//!   selection   Figure-3 style selection-algorithm timing
+//!   overlap     μ-MoE micro-expert overlap analysis across domains
+//!   inspect     print manifest / checkpoint summaries
+
+use mumoe::cli::{flag, opt, usage, Args, OptSpec};
+use mumoe::util::error::Error;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<(), Error> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
+        "eval" => cmd_eval(rest),
+        "vlm-eval" => cmd_vlm_eval(rest),
+        "flops" => cmd_flops(rest),
+        "selection" => cmd_selection(rest),
+        "overlap" => cmd_overlap(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mumoe — test-time pruning as micro-grained mixture-of-experts\n\n\
+         subcommands:\n\
+         \x20 serve      replay a request trace through the coordinator\n\
+         \x20 generate   autoregressive decode with mu-MoE pruning\n\
+         \x20 eval       perplexity of one (model, method, rho, dataset) cell\n\
+         \x20 vlm-eval   mu-VLM strata accuracy under one method/rho\n\
+         \x20 flops      Table-4 FLOPs/MACs analysis\n\
+         \x20 selection  Figure-3 selection-algorithm timing\n\
+         \x20 overlap    micro-expert overlap across domains\n\
+         \x20 inspect    print manifest / checkpoint summaries\n\n\
+         run `mumoe <cmd> --help` for options"
+    );
+}
+
+fn wants_help(rest: &[String]) -> bool {
+    rest.iter().any(|a| a == "--help" || a == "-h")
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+const SERVE_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    opt("model", "model to serve", "mu-opt-micro"),
+    opt("requests", "trace length", "64"),
+    opt("rate", "mean arrival rate (req/s)", "50"),
+    opt("rhos", "sparsity levels clients request", "0.4,0.6,1.0"),
+    opt("window-us", "batch window (microseconds)", "2000"),
+    opt("config", "optional mumoe.toml to load first", ""),
+];
+
+fn cmd_serve(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("serve", "replay a trace", SERVE_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, SERVE_SPEC)?;
+    let mut cfg = if a.get("config").map(|s| !s.is_empty()).unwrap_or(false) {
+        let t = mumoe::config::Toml::load(std::path::Path::new(a.req("config")?))?;
+        mumoe::config::ServeConfig::from_toml(&t)?
+    } else {
+        mumoe::config::ServeConfig::default()
+    };
+    cfg.artifacts_dir = a.req("artifacts")?.to_string();
+    cfg.model = a.req("model")?.to_string();
+    cfg.batch_window_us = a.get_u64("window-us")?;
+    cfg.rho_levels = a.get_f64_list("rhos")?;
+
+    let report = mumoe::coordinator::server::replay_trace(
+        cfg,
+        a.get_usize("requests")?,
+        a.get_f64("rate")?,
+    )?;
+    println!("{report}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// generate
+// ---------------------------------------------------------------------------
+
+const GEN_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    opt("model", "model name", "mu-opt-micro"),
+    opt("prompt", "prompt text", "The archive of northern tyrolia is a "),
+    opt("rho", "active-weight ratio", "0.6"),
+    opt("tokens", "tokens to generate", "48"),
+];
+
+/// Greedy autoregressive decoding through the mu-MoE serving head: each
+/// step re-runs online pruning against the *growing* context, so the
+/// active micro-expert set adapts as the generation unfolds.
+fn cmd_generate(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("generate", "mu-MoE greedy decode", GEN_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, GEN_SPEC)?;
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let model = a.req("model")?;
+    let rho = a.get_f64("rho")? as f32;
+    let n_new = a.get_usize("tokens")?;
+
+    use mumoe::model::tokenizer::ByteTokenizer;
+    use mumoe::runtime::registry::Registry;
+    use mumoe::runtime::session::{literal_f32, Input, Session};
+    use mumoe::runtime::weights::DeviceWeights;
+    use mumoe::runtime::Client;
+    use std::sync::Arc;
+
+    let client = Client::cpu()?;
+    let registry = Registry::open(&dir, client.clone())?;
+    let ckpt =
+        mumoe::model::checkpoint::Checkpoint::load(&registry.ckpt_path(model))?;
+    let meta = registry.meta_for("mumoe_logits", model)?;
+    let (name, order, batch, seq) =
+        (meta.name.clone(), meta.params.clone(), meta.batch, meta.seq_len);
+    let weights = Arc::new(DeviceWeights::upload(&client, &ckpt, &order)?);
+    let session = Session::bind(&registry, &name, weights)?;
+
+    let tok = ByteTokenizer;
+    let mut ids = tok.encode(a.req("prompt")?, true);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_new {
+        let start = ids.len().saturating_sub(seq); // sliding context window
+        let window = ids[start..].to_vec();
+        let (padded, valid) = tok.pad_to(window, seq);
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            tokens.extend_from_slice(&padded);
+        }
+        let outs = session.run(&[
+            Input::I32(tokens, vec![batch, seq]),
+            Input::I32(vec![valid as i32; batch], vec![batch]),
+            Input::ScalarF32(rho),
+        ])?;
+        let logits = literal_f32(&outs[0])?;
+        let vocab = logits.len() / batch;
+        let next = mumoe::coordinator::request::argmax(&logits[..vocab]);
+        if next == mumoe::model::EOS_ID {
+            break;
+        }
+        ids.push(next);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let text = tok.decode(&ids);
+    println!("{text}");
+    println!(
+        "
+[rho={rho}, {} new tokens in {dt:.1}s = {:.2} tok/s]",
+        n_new,
+        n_new as f64 / dt
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// eval
+// ---------------------------------------------------------------------------
+
+const EVAL_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    opt("model", "model name", "mu-opt-micro"),
+    opt("method", "dense|magnitude|wanda|sparsegpt|mumoe", "mumoe"),
+    opt("rho", "active-weight ratio", "0.5"),
+    opt("dataset", "test corpus", "synth_wiki"),
+    opt("calib", "calibration corpus (wanda/sparsegpt)", "synth_web"),
+    opt("windows", "max eval windows", "16"),
+    opt("calib-windows", "calibration windows", "8"),
+];
+
+fn cmd_eval(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("eval", "one perplexity cell", EVAL_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, EVAL_SPEC)?;
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let model = a.req("model")?;
+    let method = a.req("method")?;
+    let rho = a.get_f64("rho")?;
+
+    use mumoe::data::corpus::Corpus;
+    use mumoe::eval::harness::EvalStack;
+
+    let stack = EvalStack::open(&dir, model)?;
+    let test = Corpus::load(&dir.join("data"), a.req("dataset")?, "test")?;
+    let windows = test.eval_windows(stack.cfg.max_seq_len, a.get_usize("windows")?);
+
+    let ppl = match method {
+        "dense" => stack.perplexity(&stack.ckpt.clone(), &windows, None)?,
+        "mumoe" => stack.perplexity(&stack.ckpt.clone(), &windows, Some(rho))?,
+        "magnitude" => {
+            let v = stack.variant_magnitude(rho)?;
+            stack.perplexity(&v, &windows, None)?
+        }
+        "wanda" | "sparsegpt" => {
+            let calib_corpus =
+                Corpus::load(&dir.join("data"), a.req("calib")?, "train")?;
+            let cwin = calib_corpus
+                .eval_windows(stack.cfg.max_seq_len, a.get_usize("calib-windows")?);
+            let stats = stack.calibrate(&cwin)?;
+            let v = if method == "wanda" {
+                stack.variant_wanda(&stats, rho)?
+            } else {
+                stack.variant_sparsegpt(&stats, rho)?
+            };
+            stack.perplexity(&v, &windows, None)?
+        }
+        other => return Err(Error::config(format!("unknown method '{other}'"))),
+    };
+    println!(
+        "model={model} method={method} rho={rho} dataset={} ppl={:.2} \
+         (over {} tokens)",
+        a.req("dataset")?,
+        ppl.value(),
+        ppl.token_count
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// vlm-eval
+// ---------------------------------------------------------------------------
+
+const VLM_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    opt("method", "dense|magnitude|wanda|sparsegpt|mumoe", "mumoe"),
+    opt("rho", "active-weight ratio", "0.6"),
+    opt("dataset", "synthqa|synthvqa", "synthqa"),
+    opt("limit", "max eval records", "64"),
+    opt("calib-samples", "cross-task calibration samples", "32"),
+];
+
+fn cmd_vlm_eval(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("vlm-eval", "mu-VLM accuracy cell", VLM_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, VLM_SPEC)?;
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let method = a.req("method")?;
+    let rho = a.get_f64("rho")?;
+    let dataset = a.req("dataset")?;
+
+    use mumoe::data::qa::QaSet;
+    use mumoe::eval::vlm_harness::VlmStack;
+
+    let stack = VlmStack::open(&dir)?;
+    let test = QaSet::load(&dir.join("data").join(format!("{dataset}.test.bin")))?;
+    let limit = a.get_usize("limit")?;
+
+    let acc = match method {
+        "dense" => stack.accuracy(&stack.ckpt.clone(), &test, None, limit)?,
+        "mumoe" => stack.accuracy(&stack.ckpt.clone(), &test, Some(rho), limit)?,
+        "magnitude" => {
+            let v = stack.variant_magnitude(rho)?;
+            stack.accuracy(&v, &test, None, limit)?
+        }
+        "wanda" | "sparsegpt" => {
+            // cross-task calibration, as in the paper
+            let other = if dataset == "synthqa" { "synthvqa" } else { "synthqa" };
+            let calib_set =
+                QaSet::load(&dir.join("data").join(format!("{other}.train.bin")))?;
+            let calib = stack.calibrate(&calib_set, a.get_usize("calib-samples")?)?;
+            let v = if method == "wanda" {
+                stack.variant_wanda(&calib, rho)?
+            } else {
+                stack.variant_sparsegpt(&calib, rho)?
+            };
+            stack.accuracy(&v, &test, None, limit)?
+        }
+        other => return Err(Error::config(format!("unknown method '{other}'"))),
+    };
+    print!("method={method} rho={rho} dataset={dataset}:");
+    for (name, pct) in acc.row() {
+        print!(" {name}={pct:.2}");
+    }
+    println!();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// flops
+// ---------------------------------------------------------------------------
+
+const FLOPS_SPEC: &[OptSpec] = &[
+    opt("arch", "mu-opt-* name or opt:<layers>:<dmodel>", "opt:40:5120"),
+    opt("tokens", "sequence length", "128"),
+    opt("rhos", "active ratios", "1.0,0.8,0.6,0.4,0.2"),
+];
+
+fn cmd_flops(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("flops", "Table-4 analysis", FLOPS_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, FLOPS_SPEC)?;
+    let arch = parse_arch(a.req("arch")?)?;
+    let t = a.get_usize("tokens")?;
+    let mut table = mumoe::benchlib::Table::new(
+        format!("FLOPs/MACs at T={t} ({})", a.req("arch")?),
+        &["Active Weights", "FLOPs", "MACs"],
+    );
+    for rho in a.get_f64_list("rhos")? {
+        let c = mumoe::flops::count_forward(arch, t, rho, true);
+        table.row(vec![
+            format!("{:.0}%", rho * 100.0),
+            format!("{:.2}T", c.tflops()),
+            format!("{:.0}G", c.gmacs()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn parse_arch(s: &str) -> Result<mumoe::flops::ArchShape, Error> {
+    if let Some(cfg) = mumoe::model::config_by_name(s) {
+        return Ok(mumoe::flops::ArchShape::of(&cfg));
+    }
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() == 3 && parts[0] == "opt" {
+        let layers = parts[1]
+            .parse()
+            .map_err(|_| Error::config("bad layer count"))?;
+        let d = parts[2]
+            .parse()
+            .map_err(|_| Error::config("bad d_model"))?;
+        return Ok(mumoe::flops::ArchShape::opt(layers, d));
+    }
+    Err(Error::config(format!("unknown arch '{s}'")))
+}
+
+// ---------------------------------------------------------------------------
+// selection
+// ---------------------------------------------------------------------------
+
+const SEL_SPEC: &[OptSpec] = &[
+    opt("dims", "embedding sizes", "512,1024,2048,4096"),
+    opt("rhos", "active ratios", "0.25,0.5,0.75"),
+];
+
+fn cmd_selection(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("selection", "Figure-3 timing", SEL_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, SEL_SPEC)?;
+    use mumoe::benchlib::{Bencher, Table};
+    use mumoe::pruning::selection::{wanda_prune_with, Selector};
+    use mumoe::util::rng::Pcg32;
+
+    let bencher = Bencher::default();
+    let mut table = Table::new(
+        "Wanda selection runtime (ms, per (d x d) linear)",
+        &["d", "rho", "sort", "topk", "kthvalue"],
+    );
+    for d in a.get_str_list("dims")? {
+        let d: usize = d.parse().map_err(|_| Error::config("bad dim"))?;
+        let mut rng = Pcg32::new(7, d as u64);
+        let w = rng.normal_vec(d * d);
+        let norms: Vec<f32> = (0..d).map(|_| rng.next_f32() + 0.1).collect();
+        for rho in a.get_f64_list("rhos")? {
+            let mut cells = vec![format!("{d}"), format!("{rho}")];
+            for sel in Selector::ALL {
+                let stats = bencher.run(|| {
+                    let mut wc = w.clone();
+                    let mut scratch = Vec::new();
+                    wanda_prune_with(sel, &mut wc, d, d, &norms, rho, &mut scratch);
+                    wc
+                });
+                cells.push(format!("{:.3}", stats.mean_ms()));
+            }
+            table.row(cells);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// overlap
+// ---------------------------------------------------------------------------
+
+const OVERLAP_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    opt("model", "model name", "mu-opt-micro"),
+    opt("rho", "active ratio for the probe", "0.5"),
+    opt("prompts", "prompts per domain", "3"),
+];
+
+fn cmd_overlap(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("overlap", "expert overlap", OVERLAP_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, OVERLAP_SPEC)?;
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let model_name = a.req("model")?;
+    let rho = a.get_f64("rho")?;
+    let n = a.get_usize("prompts")?;
+
+    use mumoe::data::corpus::Corpus;
+    use mumoe::model::checkpoint::Checkpoint;
+    use mumoe::model::config_by_name;
+    use mumoe::nn::Model;
+    use mumoe::util::rng::Pcg32;
+
+    let cfg = config_by_name(model_name)
+        .ok_or_else(|| Error::config(format!("unknown model '{model_name}'")))?;
+    let ckpt =
+        Checkpoint::load(&dir.join("ckpt").join(format!("{model_name}.ckpt")))?;
+    let model = Model::from_checkpoint(&cfg, &ckpt)?;
+    let mut rng = Pcg32::new(99, 0);
+
+    let mut within = Vec::new();
+    let mut all = Vec::new();
+    for domain in mumoe::data::DOMAINS {
+        let corpus = Corpus::load(&dir.join("data"), domain, "test")?;
+        let sels: Vec<_> = (0..n)
+            .map(|_| {
+                let w = corpus.sample_window(&mut rng, 64);
+                mumoe::moe::select_experts(&model, &w.tokens, w.valid_len, rho)
+            })
+            .collect();
+        let st = mumoe::moe::overlap(&sels);
+        println!(
+            "domain {domain}: mean within-domain expert overlap {:.4}",
+            st.overall
+        );
+        within.push(st.overall);
+        all.extend(sels);
+    }
+    let cross = mumoe::moe::overlap(&all);
+    println!(
+        "cross-domain overlap {:.4} (within-domain mean {:.4}) — lower cross \
+         overlap = prompt-dependent micro-expert selection",
+        cross.overall,
+        within.iter().sum::<f64>() / within.len() as f64
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// inspect
+// ---------------------------------------------------------------------------
+
+const INSPECT_SPEC: &[OptSpec] = &[
+    opt("artifacts", "artifact directory", "artifacts"),
+    flag("ckpts", "also summarize checkpoints"),
+];
+
+fn cmd_inspect(rest: &[String]) -> Result<(), Error> {
+    if wants_help(rest) {
+        println!("{}", usage("inspect", "artifact summary", INSPECT_SPEC));
+        return Ok(());
+    }
+    let a = Args::parse(rest, INSPECT_SPEC)?;
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let client = mumoe::runtime::Client::cpu()?;
+    let reg = mumoe::runtime::registry::Registry::open(&dir, client)?;
+    let mut names = reg.names();
+    names.sort();
+    println!("{} artifacts:", names.len());
+    for n in names {
+        let m = reg.meta(n)?;
+        println!(
+            "  {:32} kind={:16} model={:12} batch={} seq={} outputs={}",
+            m.name, m.kind, m.model, m.batch, m.seq_len, m.outputs
+        );
+    }
+    if a.flag("ckpts") {
+        for model in ["mu-opt-micro", "mu-opt-mini", "mu-opt-small", "mu-vlm"] {
+            let p = reg.ckpt_path(model);
+            match mumoe::model::checkpoint::Checkpoint::load(&p) {
+                Ok(c) => println!(
+                    "  ckpt {model}: {} tensors, {} params",
+                    c.tensors.len(),
+                    c.total_params()
+                ),
+                Err(e) => println!("  ckpt {model}: unavailable ({e})"),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! MUCK checkpoint reader/writer — the binary weight format shared with
+//! python/compile/ckpt.py (see that file for the byte layout).
+
+use crate::util::error::{Error, ResultExt};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MUCKPT01";
+
+/// One named tensor: shape + row-major f32 data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorEntry {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// View as a 2-D matrix (errors on rank != 2).
+    pub fn as_mat(&self) -> Result<crate::tensor::Mat, Error> {
+        if self.dims.len() != 2 {
+            return Err(Error::invariant(format!(
+                "tensor rank {} != 2",
+                self.dims.len()
+            )));
+        }
+        Ok(crate::tensor::Mat::from_vec(
+            self.dims[0],
+            self.dims[1],
+            self.data.clone(),
+        ))
+    }
+}
+
+/// A loaded checkpoint: name → tensor.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: HashMap<String, TensorEntry>,
+}
+
+impl Checkpoint {
+    pub fn load(path: &Path) -> Result<Checkpoint, Error> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::parse(format!(
+                "bad checkpoint magic in {}",
+                path.display()
+            )));
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                return Err(Error::parse("absurd tensor name length"));
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|_| Error::parse("non-utf8 tensor name"))?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 8 {
+                return Err(Error::parse("absurd tensor rank"));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut f)? as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; count * 4];
+            f.read_exact(&mut raw)
+                .with_context(|| format!("reading tensor '{name}'"))?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, TensorEntry { dims, data });
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), Error> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let mut names: Vec<_> = self.tensors.keys().collect();
+        names.sort();
+        for name in names {
+            let t = &self.tensors[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorEntry, Error> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::parse(format!("checkpoint missing tensor '{name}'")))
+    }
+
+    /// Validate that the checkpoint covers a model's parameter list with
+    /// the right shapes (called at load time so failures are early+clear).
+    pub fn validate_for(&self, cfg: &super::ModelConfig) -> Result<(), Error> {
+        for name in cfg.param_order() {
+            let t = self.get(&name)?;
+            let want: Vec<usize> = expected_shape(cfg, &name);
+            if t.dims != want {
+                return Err(Error::parse(format!(
+                    "tensor '{name}' has shape {:?}, expected {:?}",
+                    t.dims, want
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(TensorEntry::numel).sum()
+    }
+}
+
+fn expected_shape(cfg: &super::ModelConfig, name: &str) -> Vec<usize> {
+    let (d, di) = (cfg.d_model, cfg.d_inner());
+    match name {
+        "tok_emb" => vec![cfg.vocab_size, d],
+        "pos_emb" => vec![cfg.max_seq_len, d],
+        n if n.ends_with(".fc1.w") => vec![di, d],
+        n if n.ends_with(".fc1.b") => vec![di],
+        n if n.ends_with(".fc2.w") => vec![d, di],
+        n if n.ends_with(".w") => vec![d, d],
+        _ => vec![d], // biases, LN scales
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32, Error> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64, Error> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("mumoe-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::default();
+        c.tensors.insert(
+            "a.w".into(),
+            TensorEntry {
+                dims: vec![2, 3],
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+        );
+        c.tensors.insert(
+            "scalar".into(),
+            TensorEntry {
+                dims: vec![],
+                data: vec![7.5],
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmpfile("roundtrip.ckpt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.tensors["a.w"], c.tensors["a.w"]);
+        assert_eq!(back.tensors["scalar"].data, vec![7.5]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("badmagic.ckpt");
+        std::fs::write(&p, b"NOTMAGIC????????").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = tmpfile("trunc.ckpt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn get_missing_is_error() {
+        assert!(sample().get("nope").is_err());
+    }
+
+    #[test]
+    fn as_mat_rank_check() {
+        let c = sample();
+        assert!(c.tensors["a.w"].as_mat().is_ok());
+        assert!(c.tensors["scalar"].as_mat().is_err());
+    }
+}

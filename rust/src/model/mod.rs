@@ -1,0 +1,164 @@
+//! Model zoo: μ-OPT family configs (mirroring paper Table 5's OPT ladder),
+//! the byte-level tokenizer and the MUCK checkpoint loader.
+
+pub mod checkpoint;
+pub mod tokenizer;
+
+/// Special token ids (shared with python/compile/configs.py).
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const VOCAB_SIZE: usize = 259;
+pub const MAX_SEQ_LEN: usize = 128;
+
+/// μ-OPT architecture hyperparameters (decoder-only, pre-LN, ReLU FFN,
+/// learned positional embeddings, d_inner = 4·d_model — the OPT recipe).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub max_seq_len: usize,
+    pub vocab_size: usize,
+}
+
+impl ModelConfig {
+    pub fn new(name: &str, n_layers: usize, n_heads: usize, d_model: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            n_layers,
+            n_heads,
+            d_model,
+            max_seq_len: MAX_SEQ_LEN,
+            vocab_size: VOCAB_SIZE,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_inner(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Total trainable parameters (embeddings tied to the LM head).
+    pub fn n_params(&self) -> usize {
+        let (d, di) = (self.d_model, self.d_inner());
+        let per_layer = 4 * (d * d + d) + (di * d + di) + (d * di + d) + 4 * d;
+        self.n_layers * per_layer
+            + self.vocab_size * d
+            + self.max_seq_len * d
+            + 2 * d
+    }
+
+    /// Canonical prunable-linear names, in artifact order (matches
+    /// python `ModelConfig.linear_names`).
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.n_layers * 6);
+        for i in 0..self.n_layers {
+            for lin in ["q", "k", "v", "o", "fc1", "fc2"] {
+                out.push(format!("layers.{i}.{lin}.w"));
+            }
+        }
+        out
+    }
+
+    /// (d_out, d_in) of a prunable linear by short name.
+    pub fn linear_shape(&self, lin: &str) -> (usize, usize) {
+        let d = self.d_model;
+        match lin {
+            "q" | "k" | "v" | "o" => (d, d),
+            "fc1" => (self.d_inner(), d),
+            "fc2" => (d, self.d_inner()),
+            _ => panic!("unknown linear {lin}"),
+        }
+    }
+
+    /// Canonical parameter order (matches python `model.param_order`;
+    /// the AOT artifacts take parameters as leading inputs in this order).
+    pub fn param_order(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}");
+            names.push(format!("{p}.ln1.g"));
+            names.push(format!("{p}.ln1.b"));
+            for lin in ["q", "k", "v", "o"] {
+                names.push(format!("{p}.{lin}.w"));
+                names.push(format!("{p}.{lin}.b"));
+            }
+            names.push(format!("{p}.ln2.g"));
+            names.push(format!("{p}.ln2.b"));
+            names.push(format!("{p}.fc1.w"));
+            names.push(format!("{p}.fc1.b"));
+            names.push(format!("{p}.fc2.w"));
+            names.push(format!("{p}.fc2.b"));
+        }
+        names.push("ln_f.g".to_string());
+        names.push("ln_f.b".to_string());
+        names
+    }
+}
+
+/// The μ-OPT family (stands in for OPT-125M…13B; DESIGN.md §2).
+pub fn model_family() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::new("mu-opt-micro", 4, 4, 128),
+        ModelConfig::new("mu-opt-mini", 6, 6, 192),
+        ModelConfig::new("mu-opt-small", 8, 8, 256),
+    ]
+}
+
+pub fn config_by_name(name: &str) -> Option<ModelConfig> {
+    model_family().into_iter().find(|c| c.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_sizes_ascend() {
+        let fam = model_family();
+        assert_eq!(fam.len(), 3);
+        for w in fam.windows(2) {
+            assert!(w[0].n_params() < w[1].n_params());
+        }
+    }
+
+    #[test]
+    fn param_order_shape() {
+        let c = config_by_name("mu-opt-micro").unwrap();
+        let order = c.param_order();
+        // 2 emb + L*(2 + 8 + 2 + 4) + 2
+        assert_eq!(order.len(), 2 + c.n_layers * 16 + 2);
+        assert_eq!(order[0], "tok_emb");
+        assert_eq!(order.last().unwrap(), "ln_f.b");
+        // no duplicates
+        let mut sorted = order.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), order.len());
+    }
+
+    #[test]
+    fn linear_names_count() {
+        let c = config_by_name("mu-opt-small").unwrap();
+        assert_eq!(c.linear_names().len(), 8 * 6);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for c in model_family() {
+            assert_eq!(c.d_model % c.n_heads, 0);
+        }
+    }
+
+    #[test]
+    fn micro_param_count_reasonable() {
+        let c = config_by_name("mu-opt-micro").unwrap();
+        let n = c.n_params();
+        assert!(n > 700_000 && n < 2_000_000, "{n}");
+    }
+}

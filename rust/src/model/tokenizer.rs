@@ -1,0 +1,80 @@
+//! Byte-level tokenizer: every UTF-8 byte is a token (0..=255), plus
+//! PAD/BOS/EOS specials. Matches the build-time python trainer exactly, so
+//! rust-side prompts hit the same distribution the model was trained on.
+
+use super::{BOS_ID, EOS_ID, PAD_ID};
+
+/// Stateless byte tokenizer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    /// Encode text; optionally BOS-prefixed (the trainer prefixes windows).
+    pub fn encode(&self, text: &str, with_bos: bool) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        if with_bos {
+            out.push(BOS_ID);
+        }
+        out.extend(text.as_bytes().iter().map(|&b| b as i32));
+        out
+    }
+
+    /// Decode token ids back to text; specials are dropped, non-UTF-8 byte
+    /// runs are replaced (lossy) — generation output is for humans.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Pad or truncate to a fixed window; returns (tokens, valid_len).
+    pub fn pad_to(&self, mut ids: Vec<i32>, len: usize) -> (Vec<i32>, usize) {
+        ids.truncate(len);
+        let valid = ids.len();
+        ids.resize(len, PAD_ID);
+        (ids, valid)
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id == PAD_ID || id == BOS_ID || id == EOS_ID
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello, μ-MoE", false);
+        assert_eq!(t.decode(&ids), "hello, μ-MoE");
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let t = ByteTokenizer;
+        let ids = t.encode("ab", true);
+        assert_eq!(ids, vec![BOS_ID, 97, 98]);
+    }
+
+    #[test]
+    fn decode_drops_specials() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[BOS_ID, 104, 105, EOS_ID, PAD_ID]), "hi");
+    }
+
+    #[test]
+    fn pad_to_fixed_window() {
+        let t = ByteTokenizer;
+        let (ids, valid) = t.pad_to(vec![1, 2, 3], 6);
+        assert_eq!(ids, vec![1, 2, 3, PAD_ID, PAD_ID, PAD_ID]);
+        assert_eq!(valid, 3);
+        let (ids, valid) = t.pad_to(vec![1; 10], 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(valid, 4);
+    }
+}

@@ -1,0 +1,168 @@
+//! μ-MoE analysis lens: treat each weight as a single-parameter
+//! micro-expert and measure how the active set behaves across prompts,
+//! domains and sparsity levels.
+//!
+//! This module backs the repo's "is the MoE view real?" ablations: if
+//! online pruning always picked the same experts, it would collapse to
+//! offline pruning and the paper's premise would be empty. The overlap
+//! statistics quantify prompt-dependence (paper §2, Figure 2).
+
+use crate::nn::Model;
+use crate::pruning::{wanda::online_wanda_mask, Mask};
+use std::collections::HashMap;
+
+/// Per-linear activation-statistics summary for one prompt.
+#[derive(Clone, Debug)]
+pub struct ExpertSelection {
+    /// Linear name → active-set mask at the probe sparsity.
+    pub masks: HashMap<String, Mask>,
+    pub rho: f64,
+}
+
+/// Compute the micro-expert selection a prompt induces on a host model.
+pub fn select_experts(model: &Model, tokens: &[i32], valid_len: usize, rho: f64) -> ExpertSelection {
+    let acts = model.collect_activations(tokens, valid_len);
+    let mut masks = HashMap::new();
+    for (name, w) in model.prunable() {
+        let x = &acts[&name];
+        masks.insert(name.clone(), online_wanda_mask(w, x, rho));
+    }
+    ExpertSelection { masks, rho }
+}
+
+/// Pairwise expert-overlap summary across a set of selections.
+#[derive(Clone, Debug)]
+pub struct OverlapStats {
+    /// Mean Jaccard overlap per linear across all pairs.
+    pub mean_jaccard: HashMap<String, f64>,
+    /// Grand mean over all linears.
+    pub overall: f64,
+}
+
+/// Mean pairwise Jaccard overlap of the active micro-expert sets.
+pub fn overlap(selections: &[ExpertSelection]) -> OverlapStats {
+    let mut mean_jaccard = HashMap::new();
+    let mut total = 0.0;
+    let mut n_lin = 0usize;
+    if selections.len() < 2 {
+        return OverlapStats {
+            mean_jaccard,
+            overall: 1.0,
+        };
+    }
+    let names: Vec<String> = selections[0].masks.keys().cloned().collect();
+    for name in &names {
+        let mut acc = 0.0;
+        let mut pairs = 0usize;
+        for i in 0..selections.len() {
+            for j in i + 1..selections.len() {
+                acc += selections[i].masks[name].jaccard(&selections[j].masks[name]);
+                pairs += 1;
+            }
+        }
+        let mean = acc / pairs as f64;
+        mean_jaccard.insert(name.clone(), mean);
+        total += mean;
+        n_lin += 1;
+    }
+    OverlapStats {
+        mean_jaccard,
+        overall: total / n_lin.max(1) as f64,
+    }
+}
+
+/// Expert-utilization histogram: how often each micro-expert of one linear
+/// is activated across prompts (dead-expert / hot-expert analysis).
+pub fn utilization(selections: &[ExpertSelection], linear: &str) -> Vec<f64> {
+    assert!(!selections.is_empty());
+    let mask0 = &selections[0].masks[linear];
+    let mut counts = vec![0u32; mask0.bits.len()];
+    for s in selections {
+        for (c, &b) in counts.iter_mut().zip(&s.masks[linear].bits) {
+            *c += b as u32;
+        }
+    }
+    counts
+        .into_iter()
+        .map(|c| c as f64 / selections.len() as f64)
+        .collect()
+}
+
+/// Snap a requested sparsity to the closest supported level — the router
+/// uses this to keep the number of distinct batch keys bounded.
+pub fn snap_rho(rho: f64, levels: &[f64]) -> f64 {
+    assert!(!levels.is_empty());
+    let mut best = levels[0];
+    let mut best_d = (rho - best).abs();
+    for &l in &levels[1..] {
+        let d = (rho - l).abs();
+        if d < best_d {
+            best = l;
+            best_d = d;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::nn::random_model;
+
+    fn model() -> Model {
+        random_model(&ModelConfig::new("t", 2, 2, 16), 11)
+    }
+
+    #[test]
+    fn selection_covers_all_linears() {
+        let m = model();
+        let sel = select_experts(&m, &[1, 2, 3, 4, 5], 5, 0.5);
+        assert_eq!(sel.masks.len(), m.cfg.linear_names().len());
+        for mask in sel.masks.values() {
+            let f = mask.active_fraction();
+            assert!(f > 0.4 && f < 0.6, "{f}");
+        }
+    }
+
+    #[test]
+    fn identical_prompts_full_overlap() {
+        let m = model();
+        let a = select_experts(&m, &[9, 8, 7, 6], 4, 0.5);
+        let b = select_experts(&m, &[9, 8, 7, 6], 4, 0.5);
+        let st = overlap(&[a, b]);
+        assert!((st.overall - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_prompts_partial_overlap() {
+        let m = model();
+        let a = select_experts(&m, &[1, 2, 3, 4, 5, 6], 6, 0.5);
+        let b = select_experts(&m, &[200, 210, 220, 230, 240, 250], 6, 0.5);
+        let st = overlap(&[a, b]);
+        assert!(st.overall < 1.0, "expected prompt-dependent selection");
+        assert!(st.overall > 0.2, "masks should still share hot experts");
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let m = model();
+        let sels: Vec<_> = (0..3)
+            .map(|i| {
+                select_experts(&m, &[i * 10 + 1, i * 10 + 2, i * 10 + 3], 3, 0.5)
+            })
+            .collect();
+        let u = utilization(&sels, "layers.0.q.w");
+        assert!(u.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let mean: f64 = u.iter().sum::<f64>() / u.len() as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean utilization {mean}");
+    }
+
+    #[test]
+    fn snap_rho_picks_nearest() {
+        let levels = [0.2, 0.5, 1.0];
+        assert_eq!(snap_rho(0.55, &levels), 0.5);
+        assert_eq!(snap_rho(0.9, &levels), 1.0);
+        assert_eq!(snap_rho(0.0, &levels), 0.2);
+    }
+}

@@ -1,0 +1,460 @@
+//! Host-side reference μ-OPT forward pass (pure rust, no XLA).
+//!
+//! Three jobs:
+//! 1. **Oracle** — integration tests cross-check the PJRT artifacts against
+//!    this implementation on the same checkpoint (tests/runtime_oracle.rs).
+//! 2. **CPU baseline** — the Figure 4 / Table 1 benches can run host-side
+//!    when artifacts are absent, and `moe` uses it to extract per-layer
+//!    activations for micro-expert analysis.
+//! 3. **Offline-pruning substrate** — pruned-weight variants are plain
+//!    weight edits before calling [`Model::forward`].
+//!
+//! Numerics mirror python/compile/model.py exactly: pre-LN blocks, causal
+//! attention with right-padding masked, ReLU FFN, tied LM head.
+
+use crate::model::checkpoint::Checkpoint;
+use crate::model::{ModelConfig, PAD_ID};
+use crate::pruning::wanda;
+use crate::tensor::{layernorm_rows, log_softmax, relu, Mat};
+use crate::util::error::Error;
+use std::collections::HashMap;
+
+/// Pruning mode for a host-side forward.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PruneMode {
+    /// Full weights.
+    Dense,
+    /// μ-MoE: online Wanda per linear at the given active ratio.
+    OnlineWanda { rho: f64 },
+}
+
+/// A loaded host model: config + named weight matrices/vectors.
+pub struct Model {
+    pub cfg: ModelConfig,
+    mats: HashMap<String, Mat>,
+    vecs: HashMap<String, Vec<f32>>,
+}
+
+impl Model {
+    pub fn from_checkpoint(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<Model, Error> {
+        ckpt.validate_for(cfg)?;
+        let mut mats = HashMap::new();
+        let mut vecs = HashMap::new();
+        for name in cfg.param_order() {
+            let t = ckpt.get(&name)?;
+            if t.dims.len() == 2 {
+                mats.insert(name.clone(), t.as_mat()?);
+            } else {
+                vecs.insert(name.clone(), t.data.clone());
+            }
+        }
+        Ok(Model {
+            cfg: cfg.clone(),
+            mats,
+            vecs,
+        })
+    }
+
+    pub fn mat(&self, name: &str) -> &Mat {
+        &self.mats[name]
+    }
+
+    pub fn vec(&self, name: &str) -> &[f32] {
+        &self.vecs[name]
+    }
+
+    /// Replace a weight matrix (offline pruning writes pruned copies here).
+    pub fn set_mat(&mut self, name: &str, m: Mat) {
+        assert!(self.mats.contains_key(name), "unknown weight {name}");
+        self.mats.insert(name.to_string(), m);
+    }
+
+    fn linear(&self, x: &Mat, name: &str, mode: PruneMode) -> Mat {
+        let w = &self.mats[&format!("{name}.w")];
+        let b = &self.vecs[&format!("{name}.b")];
+        let mut y = match mode {
+            PruneMode::Dense => x.matmul_nt(w),
+            PruneMode::OnlineWanda { rho } => {
+                // score against *this prompt's* activations, prune, apply —
+                // the host mirror of the L1 fused kernel
+                let mask = wanda::online_wanda_mask(w, x, rho);
+                x.matmul_nt(&mask.apply(w))
+            }
+        };
+        y.add_row_vec(b);
+        y
+    }
+
+    /// Forward one sequence (no batching host-side): returns per-position
+    /// logits (T, V). `tokens` may include PAD; `valid_len` marks the
+    /// boundary of real tokens.
+    pub fn forward(&self, tokens: &[i32], valid_len: usize, mode: PruneMode) -> Mat {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        assert!(t <= cfg.max_seq_len, "sequence too long");
+        assert!(valid_len <= t);
+        let d = cfg.d_model;
+        let tok_emb = &self.mats["tok_emb"];
+        let pos_emb = &self.mats["pos_emb"];
+
+        let mut h = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = tok_emb.row(tok.clamp(0, cfg.vocab_size as i32 - 1) as usize);
+            for j in 0..d {
+                h.data[i * d + j] = row[j] + pos_emb.at(i, j);
+            }
+        }
+
+        for l in 0..cfg.n_layers {
+            let p = format!("layers.{l}");
+            let y = layernorm_rows(
+                &h,
+                &self.vecs[&format!("{p}.ln1.g")],
+                &self.vecs[&format!("{p}.ln1.b")],
+                1e-5,
+            );
+            let q = self.linear(&y, &format!("{p}.q"), mode);
+            let k = self.linear(&y, &format!("{p}.k"), mode);
+            let v = self.linear(&y, &format!("{p}.v"), mode);
+            let attn = self.attention(&q, &k, &v, valid_len);
+            let o = self.linear(&attn, &format!("{p}.o"), mode);
+            h.add_assign(&o);
+
+            let y = layernorm_rows(
+                &h,
+                &self.vecs[&format!("{p}.ln2.g")],
+                &self.vecs[&format!("{p}.ln2.b")],
+                1e-5,
+            );
+            let mut z = self.linear(&y, &format!("{p}.fc1"), mode);
+            relu(&mut z);
+            let out = self.linear(&z, &format!("{p}.fc2"), mode);
+            h.add_assign(&out);
+        }
+
+        let hidden = layernorm_rows(&h, &self.vecs["ln_f.g"], &self.vecs["ln_f.b"], 1e-5);
+        hidden.matmul_nt(tok_emb) // tied head -> (T, V)
+    }
+
+    fn attention(&self, q: &Mat, k: &Mat, v: &Mat, valid_len: usize) -> Mat {
+        let cfg = &self.cfg;
+        let (t, d) = (q.rows, cfg.d_model);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Mat::zeros(t, d);
+        let mut logits = vec![0.0f32; t];
+        for h in 0..nh {
+            let off = h * hd;
+            for i in 0..t {
+                let klim = (i + 1).min(t); // causal
+                let qi = &q.row(i)[off..off + hd];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, logit) in logits.iter_mut().enumerate().take(klim) {
+                    if j >= valid_len && j != i {
+                        *logit = f32::NEG_INFINITY;
+                        continue;
+                    }
+                    let kj = &k.row(j)[off..off + hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += qi[c] * kj[c];
+                    }
+                    *logit = acc * scale;
+                    mx = mx.max(*logit);
+                }
+                // softmax over 0..klim (padding rows attend to themselves)
+                let mut denom = 0.0f32;
+                for logit in logits.iter_mut().take(klim) {
+                    if logit.is_finite() {
+                        *logit = (*logit - mx).exp();
+                        denom += *logit;
+                    } else {
+                        *logit = 0.0;
+                    }
+                }
+                if denom <= 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * d + off..i * d + off + hd];
+                for j in 0..klim {
+                    let p = logits[j] / denom;
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vj = &v.row(j)[off..off + hd];
+                    for c in 0..hd {
+                        orow[c] += p * vj[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Sum of next-token NLL + predicted count over the valid prefix —
+    /// identical semantics to the `*_nll` artifacts.
+    pub fn nll_sum(&self, tokens: &[i32], valid_len: usize, mode: PruneMode) -> (f64, usize) {
+        let logits = self.forward(tokens, valid_len, mode);
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for t in 0..valid_len.saturating_sub(1) {
+            let target = tokens[t + 1];
+            if target == PAD_ID {
+                break;
+            }
+            let ls = log_softmax(logits.row(t));
+            sum -= ls[target as usize] as f64;
+            count += 1;
+        }
+        (sum, count)
+    }
+
+    /// All prunable linears' (name, weight) pairs — pruning engines iterate
+    /// this to produce offline-pruned model variants.
+    pub fn prunable(&self) -> Vec<(String, &Mat)> {
+        self.cfg
+            .linear_names()
+            .into_iter()
+            .map(|n| {
+                let m = &self.mats[&n];
+                (n, m)
+            })
+            .collect()
+    }
+
+    /// Apply offline Wanda pruning in place given per-linear calibrators.
+    pub fn apply_offline_wanda(
+        &mut self,
+        calibs: &HashMap<String, wanda::WandaCalibrator>,
+        rho: f64,
+    ) -> Result<(), Error> {
+        for name in self.cfg.linear_names() {
+            let calib = calibs.get(&name).ok_or_else(|| {
+                Error::invariant(format!("missing calibrator for {name}"))
+            })?;
+            let w = &self.mats[&name];
+            let pruned = wanda::wanda_mask(w, calib, rho).apply(w);
+            self.mats.insert(name, pruned);
+        }
+        Ok(())
+    }
+
+    /// Apply magnitude pruning in place.
+    pub fn apply_magnitude(&mut self, rho: f64) {
+        for name in self.cfg.linear_names() {
+            let w = &self.mats[&name];
+            let pruned = crate::pruning::magnitude::magnitude_prune(w, rho);
+            self.mats.insert(name, pruned);
+        }
+    }
+
+    /// Collect per-linear input activations on a prompt (dense forward) —
+    /// feeds host-side calibration and the μ-MoE overlap analysis.
+    pub fn collect_activations(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+    ) -> HashMap<String, Mat> {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        let d = cfg.d_model;
+        let mut acts = HashMap::new();
+        let tok_emb = &self.mats["tok_emb"];
+        let pos_emb = &self.mats["pos_emb"];
+        let mut h = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = tok_emb.row(tok.clamp(0, cfg.vocab_size as i32 - 1) as usize);
+            for j in 0..d {
+                h.data[i * d + j] = row[j] + pos_emb.at(i, j);
+            }
+        }
+        let zero_pad = |m: &mut Mat| {
+            for i in valid_len..t {
+                m.row_mut(i).fill(0.0);
+            }
+        };
+        for l in 0..cfg.n_layers {
+            let p = format!("layers.{l}");
+            let y = layernorm_rows(
+                &h,
+                &self.vecs[&format!("{p}.ln1.g")],
+                &self.vecs[&format!("{p}.ln1.b")],
+                1e-5,
+            );
+            let mut yc = y.clone();
+            zero_pad(&mut yc);
+            for lin in ["q", "k", "v"] {
+                acts.insert(format!("{p}.{lin}.w"), yc.clone());
+            }
+            let q = self.linear(&y, &format!("{p}.q"), PruneMode::Dense);
+            let k = self.linear(&y, &format!("{p}.k"), PruneMode::Dense);
+            let v = self.linear(&y, &format!("{p}.v"), PruneMode::Dense);
+            let attn = self.attention(&q, &k, &v, valid_len);
+            let mut ac = attn.clone();
+            zero_pad(&mut ac);
+            acts.insert(format!("{p}.o.w"), ac);
+            let o = self.linear(&attn, &format!("{p}.o"), PruneMode::Dense);
+            h.add_assign(&o);
+
+            let y = layernorm_rows(
+                &h,
+                &self.vecs[&format!("{p}.ln2.g")],
+                &self.vecs[&format!("{p}.ln2.b")],
+                1e-5,
+            );
+            let mut yc = y.clone();
+            zero_pad(&mut yc);
+            acts.insert(format!("{p}.fc1.w"), yc);
+            let mut z = self.linear(&y, &format!("{p}.fc1"), PruneMode::Dense);
+            relu(&mut z);
+            let mut zc = z.clone();
+            zero_pad(&mut zc);
+            acts.insert(format!("{p}.fc2.w"), zc);
+            let out = self.linear(&z, &format!("{p}.fc2"), PruneMode::Dense);
+            h.add_assign(&out);
+        }
+        acts
+    }
+}
+
+/// Deterministic random model for tests (no checkpoint needed).
+pub fn random_model(cfg: &ModelConfig, seed: u64) -> Model {
+    use crate::util::rng::Pcg32;
+    let mut rng = Pcg32::new(seed, 99);
+    let mut mats = HashMap::new();
+    let mut vecs = HashMap::new();
+    let (d, di) = (cfg.d_model, cfg.d_inner());
+    for name in cfg.param_order() {
+        if name.ends_with(".w") || name == "tok_emb" || name == "pos_emb" {
+            let (r, c) = if name == "tok_emb" {
+                (cfg.vocab_size, d)
+            } else if name == "pos_emb" {
+                (cfg.max_seq_len, d)
+            } else if name.ends_with("fc1.w") {
+                (di, d)
+            } else if name.ends_with("fc2.w") {
+                (d, di)
+            } else {
+                (d, d)
+            };
+            let mut data = rng.normal_vec(r * c);
+            for x in &mut data {
+                *x *= 0.05;
+            }
+            mats.insert(name, Mat::from_vec(r, c, data));
+        } else if name.ends_with(".g") {
+            vecs.insert(name.clone(), vec![1.0; ln_dim(cfg, &name)]);
+        } else {
+            vecs.insert(name.clone(), vec![0.0; bias_dim(cfg, &name)]);
+        }
+    }
+    Model {
+        cfg: cfg.clone(),
+        mats,
+        vecs,
+    }
+}
+
+fn ln_dim(cfg: &ModelConfig, _name: &str) -> usize {
+    cfg.d_model
+}
+
+fn bias_dim(cfg: &ModelConfig, name: &str) -> usize {
+    if name.ends_with("fc1.b") {
+        cfg.d_inner()
+    } else {
+        cfg.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::new("test-tiny", 2, 2, 16)
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = random_model(&tiny(), 1);
+        let toks: Vec<i32> = vec![10, 20, 30, 40, PAD_ID, PAD_ID];
+        let logits = m.forward(&toks, 4, PruneMode::Dense);
+        assert_eq!(logits.rows, 6);
+        assert_eq!(logits.cols, m.cfg.vocab_size);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn padding_does_not_change_valid_logits() {
+        let m = random_model(&tiny(), 2);
+        let a: Vec<i32> = vec![5, 6, 7, PAD_ID];
+        let b: Vec<i32> = vec![5, 6, 7, 200];
+        let la = m.forward(&a, 3, PruneMode::Dense);
+        let lb = m.forward(&b, 3, PruneMode::Dense);
+        for t in 0..3 {
+            for v in 0..m.cfg.vocab_size {
+                assert!((la.at(t, v) - lb.at(t, v)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn online_rho1_matches_dense() {
+        let m = random_model(&tiny(), 3);
+        let toks: Vec<i32> = vec![1, 2, 3, 4, 5];
+        let d = m.forward(&toks, 5, PruneMode::Dense);
+        let p = m.forward(&toks, 5, PruneMode::OnlineWanda { rho: 1.0 });
+        for (x, y) in d.data.iter().zip(&p.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn online_pruning_changes_output() {
+        let m = random_model(&tiny(), 4);
+        let toks: Vec<i32> = vec![1, 2, 3, 4, 5];
+        let d = m.forward(&toks, 5, PruneMode::Dense);
+        let p = m.forward(&toks, 5, PruneMode::OnlineWanda { rho: 0.4 });
+        let diff: f32 = d
+            .data
+            .iter()
+            .zip(&p.data)
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn nll_counts_valid_predictions() {
+        let m = random_model(&tiny(), 5);
+        let toks: Vec<i32> = vec![1, 2, 3, 4, PAD_ID, PAD_ID];
+        let (sum, count) = m.nll_sum(&toks, 4, PruneMode::Dense);
+        assert_eq!(count, 3);
+        assert!(sum > 0.0);
+    }
+
+    #[test]
+    fn magnitude_pruning_applies() {
+        let mut m = random_model(&tiny(), 6);
+        m.apply_magnitude(0.5);
+        for (name, w) in m.prunable() {
+            assert!(
+                (w.sparsity() - 0.5).abs() < 0.1,
+                "{name}: {}",
+                w.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn collect_activations_covers_all_linears() {
+        let m = random_model(&tiny(), 7);
+        let acts = m.collect_activations(&[1, 2, 3, 4], 4);
+        for n in m.cfg.linear_names() {
+            assert!(acts.contains_key(&n), "{n}");
+        }
+        // activation width matches the linear's input dim
+        assert_eq!(acts["layers.0.fc2.w"].cols, m.cfg.d_inner());
+    }
+}

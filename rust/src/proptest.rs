@@ -1,0 +1,186 @@
+//! Mini property-testing framework (proptest substitute).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` random inputs and,
+//! on failure, greedily shrinks via the input's [`Shrink`] implementation
+//! before panicking with the minimal counterexample. Coordinator invariants
+//! (routing, batching, queue state) are tested with this.
+
+use crate::util::rng::Pcg32;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halve
+        out.push(self[..self.len() / 2].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        // shrink each element (first few only, to bound work)
+        for i in 0..self.len().min(4) {
+            for cand in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: turn a bool into a PropResult.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run a property over random inputs, shrinking failures.
+///
+/// Panics with the minimal counterexample found (bounded shrink passes).
+pub fn check<T, G, P>(seed: u64, cases: usize, mut generate: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Pcg32::new(seed, 0xC0FFEE);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}, seed {seed}): {min_msg}\n\
+                 minimal counterexample: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + Debug, P: Fn(&T) -> PropResult>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // up to 200 successful shrink steps
+    'outer: for _ in 0..200 {
+        for cand in cur.shrink() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(1, 50, |r| r.gen_range(100) as usize, |&x| {
+            ensure(x < 100, "out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check(
+            2,
+            100,
+            |r| r.gen_range(1000) as usize,
+            |&x| ensure(x < 500, format!("x={x} too big")),
+        );
+    }
+
+    #[test]
+    fn shrink_reaches_small_values() {
+        // failure iff x >= 500; the greedy shrinker steps down to exactly
+        // 500 when the boundary is within its step budget
+        let start = 650usize;
+        let prop = |x: &usize| ensure(*x < 500, "big");
+        let (min, _) = shrink_loop(start, "big".into(), &prop);
+        assert_eq!(min, 500);
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5usize, 6, 7, 8];
+        let cands = v.shrink();
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+}

@@ -1,0 +1,61 @@
+//! Magnitude pruning (Han et al., 2015) — the paper's weakest baseline.
+//! Score is `|W|` alone; no activation awareness, hence the collapse the
+//! paper shows below ~50% active weights.
+
+use super::{mask_from_scores, selection::Selector, Mask};
+use crate::tensor::Mat;
+
+/// Per-row top-ρ mask from weight magnitudes.
+pub fn magnitude_mask(w: &Mat, rho: f64) -> Mask {
+    let scores = Mat {
+        rows: w.rows,
+        cols: w.cols,
+        data: w.data.iter().map(|x| x.abs()).collect(),
+    };
+    mask_from_scores(&scores, rho, Selector::KthValue)
+}
+
+/// Convenience: return the pruned weight copy directly.
+pub fn magnitude_prune(w: &Mat, rho: f64) -> Mat {
+    magnitude_mask(w, rho).apply(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::kc_for;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn keeps_largest_by_row() {
+        let w = Mat::from_vec(2, 4, vec![1.0, -5.0, 0.1, 3.0, -2.0, 0.5, 4.0, -0.2]);
+        let m = magnitude_mask(&w, 0.5);
+        assert_eq!(m.bits, vec![0, 1, 0, 1, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn row_counts_exact() {
+        let mut rng = Pcg32::new(1, 0);
+        let w = Mat::from_vec(16, 48, rng.normal_vec(16 * 48));
+        let m = magnitude_mask(&w, 0.4);
+        let keep = 48 - kc_for(48, 0.4);
+        assert!(m.row_active_counts().iter().all(|&c| c == keep));
+    }
+
+    #[test]
+    fn pruned_weights_match_mask() {
+        let mut rng = Pcg32::new(2, 0);
+        let w = Mat::from_vec(4, 8, rng.normal_vec(32));
+        let pruned = magnitude_prune(&w, 0.5);
+        let m = magnitude_mask(&w, 0.5);
+        for i in 0..4 {
+            for j in 0..8 {
+                if m.at(i, j) {
+                    assert_eq!(pruned.at(i, j), w.at(i, j));
+                } else {
+                    assert_eq!(pruned.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+}

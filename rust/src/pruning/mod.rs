@@ -1,0 +1,187 @@
+//! Pruning engines: the paper's methods as host-side reference
+//! implementations.
+//!
+//! The runtime path executes μ-MoE pruning *inside* the AOT artifact
+//! (L1/L2); these engines exist to (a) produce offline-pruned weights for
+//! the baseline methods (magnitude / Wanda / SparseGPT feed host-modified
+//! weights into the dense artifact), (b) oracle the in-graph behaviour, and
+//! (c) regenerate the paper's Figure 3 selection-algorithm study.
+//!
+//! Scoring (paper eq. 2/3):
+//! * magnitude:  `S = |W|`
+//! * Wanda:      `S = |W| · ‖X_j‖₂`
+//! * SparseGPT:  `S = W² / diag(Chol[(XXᵀ+λI)⁻¹])²` with OBS updates
+//!
+//! All produce per-output-row semi-structured sparsity: exactly
+//! `k_c = ⌊(1−ρ)·d_in⌋` zeros per row.
+
+pub mod magnitude;
+pub mod selection;
+pub mod sparsegpt;
+pub mod wanda;
+
+use crate::tensor::Mat;
+
+/// Number of *inactive* weights per row for active ratio `rho`, clipped so
+/// at least one weight per row survives (mirrors python `pruning.kc_for`).
+pub fn kc_for(d_in: usize, rho: f64) -> usize {
+    let kc = ((1.0 - rho) * d_in as f64).floor() as i64;
+    kc.clamp(0, d_in as i64 - 1) as usize
+}
+
+/// A binary micro-expert activation mask with the same shape as a weight.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    /// 1 = micro-expert active, 0 = pruned. Stored as u8 to keep large
+    /// masks cheap (the mask for mu-opt-small's fc1 is 1024x256).
+    pub bits: Vec<u8>,
+}
+
+impl Mask {
+    pub fn ones(rows: usize, cols: usize) -> Mask {
+        Mask {
+            rows,
+            cols,
+            bits: vec![1; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.cols + j] != 0
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.bits.iter().filter(|b| **b != 0).count()
+    }
+
+    pub fn active_fraction(&self) -> f64 {
+        self.active_count() as f64 / self.bits.len() as f64
+    }
+
+    pub fn row_active_counts(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                self.bits[i * self.cols..(i + 1) * self.cols]
+                    .iter()
+                    .filter(|b| **b != 0)
+                    .count()
+            })
+            .collect()
+    }
+
+    /// Apply to a weight matrix (returns the pruned copy).
+    pub fn apply(&self, w: &Mat) -> Mat {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        let mut out = w.clone();
+        for (x, &b) in out.data.iter_mut().zip(&self.bits) {
+            if b == 0 {
+                *x = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Jaccard overlap of active sets — used by `moe::overlap` to show how
+    /// prompt-dependent the micro-expert selection is.
+    pub fn jaccard(&self, other: &Mask) -> f64 {
+        assert_eq!(self.bits.len(), other.bits.len());
+        let mut inter = 0usize;
+        let mut union = 0usize;
+        for (&a, &b) in self.bits.iter().zip(&other.bits) {
+            if a != 0 || b != 0 {
+                union += 1;
+                if a != 0 && b != 0 {
+                    inter += 1;
+                }
+            }
+        }
+        if union == 0 {
+            1.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+}
+
+/// Build a mask keeping, per row, the weights with score *strictly above*
+/// the row's `k_c`-th smallest score. Mirrors the kthvalue formulation
+/// used by the L1 kernel (`kernels/ref.py::row_kth_threshold`).
+pub fn mask_from_scores(scores: &Mat, rho: f64, sel: selection::Selector) -> Mask {
+    let kc = kc_for(scores.cols, rho);
+    let mut bits = vec![0u8; scores.rows * scores.cols];
+    let mut scratch = vec![0.0f32; scores.cols];
+    for i in 0..scores.rows {
+        let row = scores.row(i);
+        if kc == 0 {
+            bits[i * scores.cols..(i + 1) * scores.cols].fill(1);
+            continue;
+        }
+        let thr = sel.kth_smallest(row, kc, &mut scratch);
+        for (j, &s) in row.iter().enumerate() {
+            if s > thr {
+                bits[i * scores.cols + j] = 1;
+            }
+        }
+    }
+    Mask {
+        rows: scores.rows,
+        cols: scores.cols,
+        bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn kc_matches_python_reference() {
+        assert_eq!(kc_for(10, 1.0), 0);
+        assert_eq!(kc_for(10, 0.0), 9);
+        assert_eq!(kc_for(100, 0.6), 40);
+        assert_eq!(kc_for(128, 0.5), 64);
+    }
+
+    #[test]
+    fn mask_row_counts_exact_without_ties() {
+        let mut rng = Pcg32::new(1, 0);
+        let s = Mat::from_vec(8, 32, rng.normal_vec(256).iter().map(|x| x.abs()).collect());
+        let mask = mask_from_scores(&s, 0.5, selection::Selector::KthValue);
+        let kc = kc_for(32, 0.5);
+        for c in mask.row_active_counts() {
+            assert_eq!(c, 32 - kc);
+        }
+    }
+
+    #[test]
+    fn rho_one_keeps_all() {
+        let mut rng = Pcg32::new(2, 0);
+        let s = Mat::from_vec(4, 16, rng.normal_vec(64));
+        let mask = mask_from_scores(&s, 1.0, selection::Selector::Sort);
+        assert_eq!(mask.active_count(), 64);
+    }
+
+    #[test]
+    fn jaccard_bounds() {
+        let a = Mask::ones(2, 4);
+        let mut b = Mask::ones(2, 4);
+        assert_eq!(a.jaccard(&b), 1.0);
+        b.bits.fill(0);
+        assert_eq!(a.jaccard(&b), 0.0);
+    }
+
+    #[test]
+    fn apply_zeroes_pruned() {
+        let w = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let mask = Mask {
+            rows: 1,
+            cols: 4,
+            bits: vec![1, 0, 1, 0],
+        };
+        assert_eq!(mask.apply(&w).data, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+}

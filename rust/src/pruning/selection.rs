@@ -1,0 +1,202 @@
+//! Top-ρ selection strategies — the paper's Appendix B / Figure 3 study.
+//!
+//! The paper compares `torch.sort` (O(d log d)), `torch.topk`
+//! (heap, O(d log k_c)) and `torch.kthvalue` (quickselect, O(d) average)
+//! for finding the per-row threshold. We implement all three natively so
+//! `benches/fig3_selection.rs` regenerates the runtime comparison on this
+//! host, and the coordinator can pick a strategy per layer shape.
+
+/// Which algorithm finds the k-th smallest score of a row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// Full sort, then index — `torch.sort`.
+    Sort,
+    /// Binary max-heap of the k smallest — `torch.topk` on the complement.
+    TopK,
+    /// Quickselect (`select_nth_unstable`) — `torch.kthvalue`.
+    KthValue,
+}
+
+impl Selector {
+    pub const ALL: [Selector; 3] = [Selector::Sort, Selector::TopK, Selector::KthValue];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Selector::Sort => "sort",
+            Selector::TopK => "topk",
+            Selector::KthValue => "kthvalue",
+        }
+    }
+
+    /// The `k`-th smallest value of `row` (1-indexed semantics: `k >= 1`;
+    /// `k = row.len()` is the maximum). `scratch` must be at least
+    /// `row.len()` long and is clobbered — callers reuse it across rows to
+    /// keep the hot loop allocation-free.
+    pub fn kth_smallest(self, row: &[f32], k: usize, scratch: &mut [f32]) -> f32 {
+        debug_assert!(k >= 1 && k <= row.len());
+        let buf = &mut scratch[..row.len()];
+        buf.copy_from_slice(row);
+        match self {
+            Selector::Sort => {
+                buf.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                buf[k - 1]
+            }
+            Selector::TopK => kth_via_heap(buf, k),
+            Selector::KthValue => {
+                let (_, v, _) =
+                    buf.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+                *v
+            }
+        }
+    }
+}
+
+/// Max-heap of size k over the k smallest elements; the root is the k-th
+/// smallest. Mirrors the heap strategy behind `torch.topk`.
+fn kth_via_heap(vals: &[f32], k: usize) -> f32 {
+    // Build heap over the first k values.
+    let mut heap: Vec<f32> = vals[..k].to_vec();
+    for i in (0..k / 2).rev() {
+        sift_down(&mut heap, i);
+    }
+    for &v in &vals[k..] {
+        if v < heap[0] {
+            heap[0] = v;
+            sift_down(&mut heap, 0);
+        }
+    }
+    heap[0]
+}
+
+fn sift_down(heap: &mut [f32], mut i: usize) {
+    let n = heap.len();
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut largest = i;
+        if l < n && heap[l] > heap[largest] {
+            largest = l;
+        }
+        if r < n && heap[r] > heap[largest] {
+            largest = r;
+        }
+        if largest == i {
+            return;
+        }
+        heap.swap(i, largest);
+        i = largest;
+    }
+}
+
+/// One full Wanda pruning pass over a weight matrix with the given
+/// selector: score, per-row threshold, zero-out. This is the exact
+/// operation Figure 3 times (it excludes the downstream matmul).
+pub fn wanda_prune_with(
+    sel: Selector,
+    w: &mut [f32],
+    d_out: usize,
+    d_in: usize,
+    col_norms: &[f32],
+    rho: f64,
+    scratch: &mut Vec<f32>,
+) {
+    let kc = super::kc_for(d_in, rho);
+    if kc == 0 {
+        return;
+    }
+    scratch.resize(2 * d_in, 0.0);
+    let (scores, tmp) = scratch.split_at_mut(d_in);
+    for r in 0..d_out {
+        let row = &mut w[r * d_in..(r + 1) * d_in];
+        for j in 0..d_in {
+            scores[j] = row[j].abs() * col_norms[j];
+        }
+        let thr = sel.kth_smallest(scores, kc, tmp);
+        for j in 0..d_in {
+            if scores[j] <= thr {
+                row[j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn selectors_agree_on_random_rows() {
+        let mut rng = Pcg32::new(3, 1);
+        let mut scratch = vec![0.0; 257];
+        for _ in 0..50 {
+            let n = 2 + rng.gen_range_usize(255);
+            let row = rng.normal_vec(n);
+            let k = 1 + rng.gen_range_usize(n);
+            let a = Selector::Sort.kth_smallest(&row, k, &mut scratch);
+            let b = Selector::TopK.kth_smallest(&row, k, &mut scratch);
+            let c = Selector::KthValue.kth_smallest(&row, k, &mut scratch);
+            assert_eq!(a, b);
+            assert_eq!(a, c);
+        }
+    }
+
+    #[test]
+    fn kth_smallest_known() {
+        let row = [5.0f32, 1.0, 4.0, 2.0, 3.0];
+        let mut scratch = vec![0.0; 5];
+        for sel in Selector::ALL {
+            assert_eq!(sel.kth_smallest(&row, 1, &mut scratch), 1.0);
+            assert_eq!(sel.kth_smallest(&row, 3, &mut scratch), 3.0);
+            assert_eq!(sel.kth_smallest(&row, 5, &mut scratch), 5.0);
+        }
+    }
+
+    #[test]
+    fn wanda_prune_zeroes_kc_per_row() {
+        let mut rng = Pcg32::new(4, 0);
+        let (d_out, d_in) = (8, 64);
+        let orig = rng.normal_vec(d_out * d_in);
+        let norms: Vec<f32> = (0..d_in).map(|_| rng.next_f32() + 0.1).collect();
+        for sel in Selector::ALL {
+            let mut w = orig.clone();
+            let mut scratch = Vec::new();
+            wanda_prune_with(sel, &mut w, d_out, d_in, &norms, 0.6, &mut scratch);
+            let kc = super::super::kc_for(d_in, 0.6);
+            for r in 0..d_out {
+                let zeros = w[r * d_in..(r + 1) * d_in]
+                    .iter()
+                    .filter(|x| **x == 0.0)
+                    .count();
+                assert_eq!(zeros, kc, "{}", sel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn selectors_give_identical_pruning() {
+        let mut rng = Pcg32::new(5, 0);
+        let (d_out, d_in) = (4, 32);
+        let orig = rng.normal_vec(d_out * d_in);
+        let norms: Vec<f32> = (0..d_in).map(|_| rng.next_f32() + 0.1).collect();
+        let mut results = Vec::new();
+        for sel in Selector::ALL {
+            let mut w = orig.clone();
+            let mut scratch = Vec::new();
+            wanda_prune_with(sel, &mut w, d_out, d_in, &norms, 0.5, &mut scratch);
+            results.push(w);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0], results[2]);
+    }
+
+    #[test]
+    fn rho_one_is_noop() {
+        let mut rng = Pcg32::new(6, 0);
+        let orig = rng.normal_vec(32);
+        let mut w = orig.clone();
+        let norms = vec![1.0; 8];
+        let mut scratch = Vec::new();
+        wanda_prune_with(Selector::KthValue, &mut w, 4, 8, &norms, 1.0, &mut scratch);
+        assert_eq!(w, orig);
+    }
+}

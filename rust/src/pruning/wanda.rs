@@ -1,0 +1,161 @@
+//! Wanda pruning (Sun et al., 2023) — paper eq. 3: `S = |W| · ‖X_j‖₂`.
+//!
+//! Two deployment modes, matching the paper's Figure 2:
+//! * **offline** — [`WandaCalibrator`] accumulates per-feature activation
+//!   square-sums over a calibration set (via the `calib_stats` artifact);
+//!   the resulting mask is frozen and applied to the weights once.
+//! * **online (μ-MoE)** — the same scoring runs per prompt *inside* the
+//!   AOT artifact; [`online_wanda_mask`] is the host-side oracle used in
+//!   tests and in `moe::overlap` analysis.
+
+use super::{mask_from_scores, selection::Selector, Mask};
+use crate::tensor::Mat;
+
+/// Accumulates activation statistics for one linear layer across
+/// calibration batches: `sq_sums[j] = Σ_t X[t,j]²`.
+#[derive(Clone, Debug)]
+pub struct WandaCalibrator {
+    pub sq_sums: Vec<f64>,
+    pub tokens_seen: usize,
+}
+
+impl WandaCalibrator {
+    pub fn new(d_in: usize) -> Self {
+        Self {
+            sq_sums: vec![0.0; d_in],
+            tokens_seen: 0,
+        }
+    }
+
+    /// Fold in one batch of activations (tokens, d_in).
+    pub fn update(&mut self, x: &Mat) {
+        assert_eq!(x.cols, self.sq_sums.len());
+        for t in 0..x.rows {
+            for (j, &v) in x.row(t).iter().enumerate() {
+                self.sq_sums[j] += (v as f64) * (v as f64);
+            }
+        }
+        self.tokens_seen += x.rows;
+    }
+
+    /// Fold in pre-reduced square-sums (what the `calib_stats` artifact
+    /// returns — the activations themselves never leave the device).
+    pub fn update_from_sq_sums(&mut self, sq: &[f32], tokens: usize) {
+        assert_eq!(sq.len(), self.sq_sums.len());
+        for (a, &b) in self.sq_sums.iter_mut().zip(sq) {
+            *a += b as f64;
+        }
+        self.tokens_seen += tokens;
+    }
+
+    /// `‖X_j‖₂` per input feature.
+    pub fn col_norms(&self) -> Vec<f32> {
+        self.sq_sums.iter().map(|s| s.sqrt() as f32).collect()
+    }
+}
+
+/// Wanda scores for a weight matrix given per-feature activation norms.
+pub fn wanda_scores(w: &Mat, col_norms: &[f32]) -> Mat {
+    assert_eq!(col_norms.len(), w.cols);
+    Mat::from_fn(w.rows, w.cols, |i, j| {
+        w.at(i, j).abs() * col_norms[j]
+    })
+}
+
+/// Offline Wanda mask from accumulated calibration statistics.
+pub fn wanda_mask(w: &Mat, calib: &WandaCalibrator, rho: f64) -> Mask {
+    mask_from_scores(&wanda_scores(w, &calib.col_norms()), rho, Selector::KthValue)
+}
+
+/// Online (test-time / μ-MoE) Wanda mask straight from prompt activations.
+pub fn online_wanda_mask(w: &Mat, x: &Mat, rho: f64) -> Mask {
+    let mut calib = WandaCalibrator::new(w.cols);
+    calib.update(x);
+    wanda_mask(w, &calib, rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::kc_for;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn hot_feature_beats_large_weight() {
+        // small weight on a hot feature survives; big weight on a cold one dies
+        let w = Mat::from_vec(1, 2, vec![0.5, 1.0]);
+        let x = Mat::from_vec(4, 2, vec![10.0, 0.01, 10.0, 0.01, 10.0, 0.0, 10.0, 0.0]);
+        let m = online_wanda_mask(&w, &x, 0.5);
+        assert_eq!(m.bits, vec![1, 0]);
+    }
+
+    #[test]
+    fn uniform_activations_reduce_to_magnitude() {
+        let mut rng = Pcg32::new(1, 0);
+        let w = Mat::from_vec(6, 24, rng.normal_vec(6 * 24));
+        let ones = Mat::from_vec(1, 24, vec![1.0; 24]);
+        let m_wanda = online_wanda_mask(&w, &ones, 0.5);
+        let m_mag = super::super::magnitude::magnitude_mask(&w, 0.5);
+        assert_eq!(m_wanda.bits, m_mag.bits);
+    }
+
+    #[test]
+    fn calibrator_accumulates_across_batches() {
+        let mut rng = Pcg32::new(2, 0);
+        let x1 = Mat::from_vec(5, 8, rng.normal_vec(40));
+        let x2 = Mat::from_vec(3, 8, rng.normal_vec(24));
+        let mut c_inc = WandaCalibrator::new(8);
+        c_inc.update(&x1);
+        c_inc.update(&x2);
+        let mut all = x1.data.clone();
+        all.extend_from_slice(&x2.data);
+        let mut c_once = WandaCalibrator::new(8);
+        c_once.update(&Mat::from_vec(8, 8, all));
+        for (a, b) in c_inc.col_norms().iter().zip(c_once.col_norms()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(c_inc.tokens_seen, 8);
+    }
+
+    #[test]
+    fn update_from_sq_sums_matches_update() {
+        let mut rng = Pcg32::new(3, 0);
+        let x = Mat::from_vec(10, 6, rng.normal_vec(60));
+        let mut a = WandaCalibrator::new(6);
+        a.update(&x);
+        let mut b = WandaCalibrator::new(6);
+        b.update_from_sq_sums(&x.col_sq_sums(), 10);
+        for (p, q) in a.col_norms().iter().zip(b.col_norms()) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mask_respects_rho() {
+        let mut rng = Pcg32::new(4, 0);
+        let w = Mat::from_vec(12, 64, rng.normal_vec(12 * 64));
+        let x = Mat::from_vec(32, 64, rng.normal_vec(32 * 64));
+        for rho in [0.25, 0.5, 0.75] {
+            let m = online_wanda_mask(&w, &x, rho);
+            let keep = 64 - kc_for(64, rho);
+            assert!(m.row_active_counts().iter().all(|&c| c == keep));
+        }
+    }
+
+    #[test]
+    fn different_prompts_different_masks() {
+        // mu-MoE's premise: micro-expert selection is prompt-dependent
+        let mut rng = Pcg32::new(5, 0);
+        let w = Mat::from_vec(16, 32, rng.normal_vec(512));
+        let x1 = Mat::from_vec(20, 32, rng.normal_vec(640));
+        let mut x2 = Mat::from_vec(20, 32, rng.normal_vec(640));
+        for t in 0..20 {
+            for j in 0..16 {
+                *x2.at_mut(t, j) *= 8.0;
+            }
+        }
+        let m1 = online_wanda_mask(&w, &x1, 0.5);
+        let m2 = online_wanda_mask(&w, &x2, 0.5);
+        assert!(m1.jaccard(&m2) < 0.999);
+    }
+}

@@ -1,0 +1,81 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them with model
+//! weights held resident as device buffers.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the minimal pattern):
+//! ```text
+//! manifest.json ──> Registry (artifact metadata, lazy executable cache)
+//! *.hlo.txt     ──> HloModuleProto::from_text_file -> compile (once)
+//! *.ckpt        ──> WeightStore (host + device-buffer copies, upload once)
+//! Session::run(tokens, lengths, rho) -> outputs (Literals -> Vec<f32>)
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits 64-bit instruction
+//! ids in serialized protos which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py docstring).
+
+pub mod registry;
+pub mod session;
+pub mod weights;
+
+use crate::util::error::Error;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. One per process; cheap to clone (Arc inside the
+/// xla crate's wrapper is not public, so we wrap in our own Arc).
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client, Error> {
+        let inner = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            inner.platform_name(),
+            inner.device_count()
+        );
+        Ok(Client {
+            inner: Arc::new(inner),
+        })
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Compile HLO text from a file into a loaded executable.
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable, Error> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::config("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.inner.compile(&comp)?)
+    }
+
+    /// Upload a host f32 tensor as a device buffer.
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer, Error> {
+        Ok(self
+            .inner
+            .buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host i32 tensor as a device buffer.
+    pub fn upload_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer, Error> {
+        Ok(self
+            .inner
+            .buffer_from_host_buffer(data, dims, None)?)
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) and lazily compiles executables on first use.
+
+use super::Client;
+use crate::util::error::{Error, ResultExt};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Static metadata for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub model: String,
+    /// Ordered parameter-tensor names fed as leading inputs.
+    pub params: Vec<String>,
+    /// Names of the trailing runtime inputs (tokens, lengths, rho, ...).
+    pub extra_inputs: Vec<String>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub outputs: usize,
+    /// For calib_stats artifacts: linear names in output order.
+    pub linears: Vec<String>,
+}
+
+/// The registry: manifest metadata + executable cache + model configs.
+pub struct Registry {
+    pub dir: PathBuf,
+    artifacts: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    client: Client,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json` and bind to a PJRT client.
+    pub fn open(dir: &Path, client: Client) -> Result<Registry, Error> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = HashMap::new();
+        for a in json
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::parse("manifest artifacts not an array"))?
+        {
+            let name = a
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::parse("artifact name"))?
+                .to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                path: dir.join(
+                    a.req("path")?
+                        .as_str()
+                        .ok_or_else(|| Error::parse("artifact path"))?,
+                ),
+                kind: a
+                    .req("kind")?
+                    .as_str()
+                    .ok_or_else(|| Error::parse("artifact kind"))?
+                    .to_string(),
+                model: a
+                    .req("model")?
+                    .as_str()
+                    .ok_or_else(|| Error::parse("artifact model"))?
+                    .to_string(),
+                params: a
+                    .req("params")?
+                    .str_arr()
+                    .ok_or_else(|| Error::parse("artifact params"))?,
+                extra_inputs: a
+                    .get("extra_inputs")
+                    .and_then(Json::str_arr)
+                    .unwrap_or_default(),
+                batch: a.req("batch")?.as_usize().unwrap_or(0),
+                seq_len: a.req("seq_len")?.as_usize().unwrap_or(0),
+                outputs: a.req("outputs")?.as_usize().unwrap_or(1),
+                linears: a.get("linears").and_then(Json::str_arr).unwrap_or_default(),
+            };
+            artifacts.insert(name, meta);
+        }
+        crate::info!(
+            "registry: {} artifacts from {}",
+            artifacts.len(),
+            dir.display()
+        );
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+            client,
+        })
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta, Error> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::config(format!("unknown artifact '{name}'")))
+    }
+
+    /// Find the artifact of a kind for a model (e.g. "mumoe_nll").
+    pub fn meta_for(&self, kind: &str, model: &str) -> Result<&ArtifactMeta, Error> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == kind && a.model == model)
+            .ok_or_else(|| {
+                Error::config(format!("no artifact kind={kind} model={model}"))
+            })
+    }
+
+    /// Compile (or fetch cached) an executable.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, Error> {
+        {
+            let cache = self.cache.lock().expect("registry cache poisoned");
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let meta = self.meta(name)?;
+        let t0 = std::time::Instant::now();
+        let exe = self
+            .client
+            .compile_hlo_file(&meta.path)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        crate::info!(
+            "compiled {name} in {:.1}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .expect("registry cache poisoned")
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Path to a data file under the artifact dir.
+    pub fn data_path(&self, file: &str) -> PathBuf {
+        self.dir.join("data").join(file)
+    }
+
+    /// Path to a checkpoint under the artifact dir.
+    pub fn ckpt_path(&self, model: &str) -> PathBuf {
+        self.dir.join("ckpt").join(format!("{model}.ckpt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Registry parsing is unit-tested on a synthetic manifest; executing
+    // real artifacts is covered by tests/runtime_oracle.rs (integration).
+    fn fake_manifest_dir() -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mumoe-registry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[
+                {"name":"dense_nll_x","path":"hlo/dense_nll_x.hlo.txt",
+                 "kind":"dense_nll","model":"x","params":["tok_emb"],
+                 "extra_inputs":["tokens","lengths"],
+                 "batch":8,"seq_len":128,"outputs":2}]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = fake_manifest_dir();
+        let client = Client::cpu().unwrap();
+        let reg = Registry::open(&dir, client).unwrap();
+        let m = reg.meta("dense_nll_x").unwrap();
+        assert_eq!(m.kind, "dense_nll");
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.params, vec!["tok_emb"]);
+        assert!(reg.meta("nope").is_err());
+        assert_eq!(reg.meta_for("dense_nll", "x").unwrap().name, "dense_nll_x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

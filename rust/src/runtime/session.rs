@@ -1,0 +1,116 @@
+//! Session: one compiled artifact bound to resident device weights —
+//! the unit the coordinator schedules batches onto.
+
+use super::registry::{ArtifactMeta, Registry};
+use super::weights::DeviceWeights;
+use crate::util::error::{Error, ResultExt};
+use std::sync::Arc;
+
+/// A runtime input appended after the weight buffers.
+#[derive(Clone, Debug)]
+pub enum Input {
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    ScalarF32(f32),
+}
+
+/// One executable + its weights, ready to run batches.
+pub struct Session {
+    pub meta: ArtifactMeta,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    weights: Arc<DeviceWeights>,
+    client: super::Client,
+}
+
+impl Session {
+    /// Bind `artifact` (by name) to uploaded weights. Validates that the
+    /// weight set matches the artifact's parameter signature.
+    pub fn bind(
+        registry: &Registry,
+        artifact: &str,
+        weights: Arc<DeviceWeights>,
+    ) -> Result<Session, Error> {
+        let meta = registry.meta(artifact)?.clone();
+        if meta.params != weights.param_names {
+            return Err(Error::invariant(format!(
+                "weight set ({} tensors) does not match artifact '{}' params \
+                 ({} tensors)",
+                weights.param_names.len(),
+                artifact,
+                meta.params.len()
+            )));
+        }
+        let exe = registry.executable(artifact)?;
+        Ok(Session {
+            meta,
+            exe,
+            weights,
+            client: registry.client().clone(),
+        })
+    }
+
+    /// Execute with the given extra inputs; returns the flattened output
+    /// tuple as literals.
+    pub fn run(&self, extras: &[Input]) -> Result<Vec<xla::Literal>, Error> {
+        if extras.len() != self.meta.extra_inputs.len() {
+            return Err(Error::invariant(format!(
+                "artifact '{}' wants {} extra inputs ({:?}), got {}",
+                self.meta.name,
+                self.meta.extra_inputs.len(),
+                self.meta.extra_inputs,
+                extras.len()
+            )));
+        }
+        // upload extras (small: tokens/lengths/rho)
+        let mut extra_bufs = Vec::with_capacity(extras.len());
+        for (i, e) in extras.iter().enumerate() {
+            let buf = match e {
+                Input::I32(data, dims) => self.client.upload_i32(data, dims),
+                Input::F32(data, dims) => self.client.upload_f32(data, dims),
+                Input::ScalarF32(x) => self.client.upload_f32(&[*x], &[]),
+            }
+            .with_context(|| {
+                format!("uploading extra input {i} for '{}'", self.meta.name)
+            })?;
+            extra_bufs.push(buf);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.len() + extra_bufs.len());
+        args.extend(self.weights.buffers().iter());
+        args.extend(extra_bufs.iter());
+
+        let outs = self
+            .exe
+            .execute_b(&args)
+            .with_context(|| format!("executing '{}'", self.meta.name))?;
+        let lit = outs
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::invariant("no output buffer"))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.meta.outputs {
+            return Err(Error::invariant(format!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs
+            )));
+        }
+        Ok(parts)
+    }
+
+    pub fn weights(&self) -> &Arc<DeviceWeights> {
+        &self.weights
+    }
+}
+
+/// Decode helpers for artifact outputs.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>, Error> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_i32(lit: &xla::Literal) -> Result<Vec<i32>, Error> {
+    Ok(lit.to_vec::<i32>()?)
+}

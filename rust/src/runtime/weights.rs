@@ -1,0 +1,172 @@
+//! Weight store: host checkpoint tensors mirrored as device buffers,
+//! uploaded once per (model, variant) and reused across every request —
+//! weights never cross the host/device boundary on the hot path.
+//!
+//! Offline-pruned variants (magnitude / Wanda / SparseGPT) are host-side
+//! weight edits followed by a fresh `upload`, served through the *dense*
+//! artifact; μ-MoE needs no variant at all (pruning happens in-graph).
+
+use super::Client;
+use crate::model::checkpoint::{Checkpoint, TensorEntry};
+use crate::util::error::{Error, ResultExt};
+
+/// One uploaded weight set, ready to splice into `execute_b` calls.
+pub struct DeviceWeights {
+    /// Buffers in artifact parameter order.
+    buffers: Vec<xla::PjRtBuffer>,
+    pub param_names: Vec<String>,
+    pub total_params: usize,
+}
+
+impl DeviceWeights {
+    /// Upload `ckpt` tensors in `param_order` to the device.
+    pub fn upload(
+        client: &Client,
+        ckpt: &Checkpoint,
+        param_order: &[String],
+    ) -> Result<DeviceWeights, Error> {
+        let mut buffers = Vec::with_capacity(param_order.len());
+        let mut total = 0usize;
+        for name in param_order {
+            let t = ckpt.get(name)?;
+            total += t.numel();
+            buffers.push(
+                client
+                    .upload_f32(&t.data, &t.dims)
+                    .with_context(|| format!("uploading '{name}'"))?,
+            );
+        }
+        Ok(DeviceWeights {
+            buffers,
+            param_names: param_order.to_vec(),
+            total_params: total,
+        })
+    }
+
+    pub fn buffers(&self) -> &[xla::PjRtBuffer] {
+        &self.buffers
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}
+
+/// Host-side weight editing for the offline-pruned baselines.
+pub struct VariantBuilder {
+    pub base: Checkpoint,
+}
+
+impl VariantBuilder {
+    pub fn new(base: Checkpoint) -> Self {
+        Self { base }
+    }
+
+    /// Produce a checkpoint with `edit` applied to each named 2-D weight.
+    pub fn with_edits(
+        &self,
+        names: &[String],
+        mut edit: impl FnMut(&str, &TensorEntry) -> Result<TensorEntry, Error>,
+    ) -> Result<Checkpoint, Error> {
+        let mut out = self.base.clone();
+        for n in names {
+            let t = out.get(n)?.clone();
+            let new = edit(n, &t)?;
+            if new.dims != t.dims {
+                return Err(Error::invariant(format!(
+                    "edit changed shape of '{n}'"
+                )));
+            }
+            out.tensors.insert(n.clone(), new);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt() -> Checkpoint {
+        let mut c = Checkpoint::default();
+        c.tensors.insert(
+            "w".into(),
+            TensorEntry {
+                dims: vec![2, 2],
+                data: vec![1.0, -2.0, 3.0, -4.0],
+            },
+        );
+        c.tensors.insert(
+            "b".into(),
+            TensorEntry {
+                dims: vec![2],
+                data: vec![0.5, 0.5],
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn upload_roundtrip_via_execute() {
+        // identity executable isn't available standalone; assert the
+        // upload path produces buffers with the right count/shape instead.
+        let client = Client::cpu().unwrap();
+        let dw = DeviceWeights::upload(
+            &client,
+            &ckpt(),
+            &["w".to_string(), "b".to_string()],
+        )
+        .unwrap();
+        assert_eq!(dw.len(), 2);
+        assert_eq!(dw.total_params, 6);
+        let shape = dw.buffers()[0].on_device_shape().unwrap();
+        let dims = match shape {
+            xla::Shape::Array(a) => a.dims().to_vec(),
+            _ => vec![],
+        };
+        assert_eq!(dims, vec![2i64, 2]);
+    }
+
+    #[test]
+    fn upload_missing_tensor_errors() {
+        let client = Client::cpu().unwrap();
+        assert!(
+            DeviceWeights::upload(&client, &ckpt(), &["nope".to_string()]).is_err()
+        );
+    }
+
+    #[test]
+    fn variant_builder_edits() {
+        let vb = VariantBuilder::new(ckpt());
+        let out = vb
+            .with_edits(&["w".to_string()], |_, t| {
+                let mut t2 = t.clone();
+                for x in &mut t2.data {
+                    if x.abs() < 2.5 {
+                        *x = 0.0;
+                    }
+                }
+                Ok(t2)
+            })
+            .unwrap();
+        assert_eq!(out.tensors["w"].data, vec![0.0, 0.0, 3.0, -4.0]);
+        // base untouched
+        assert_eq!(vb.base.tensors["w"].data[0], 1.0);
+    }
+
+    #[test]
+    fn variant_builder_rejects_shape_change() {
+        let vb = VariantBuilder::new(ckpt());
+        let r = vb.with_edits(&["w".to_string()], |_, t| {
+            Ok(TensorEntry {
+                dims: vec![4],
+                data: t.data.clone(),
+            })
+        });
+        assert!(r.is_err());
+    }
+}

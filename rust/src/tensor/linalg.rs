@@ -1,0 +1,178 @@
+//! Dense linear algebra for SparseGPT: Cholesky factorization, triangular
+//! solves and SPD inversion, in f64 for numerical headroom (the paper's
+//! eq. 2 needs Chol[(X X^T + λI)^-1]).
+
+use super::Mat;
+use crate::util::error::Error;
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+///
+/// `a` must be symmetric positive-definite (damping upstream guarantees
+/// this for calibration Hessians). Returns an error on a non-positive
+/// pivot so callers can increase damping instead of getting NaNs.
+pub fn cholesky_lower(a: &Mat) -> Result<Mat, Error> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::invariant(format!(
+                        "cholesky: non-positive pivot {sum:.3e} at {i} — \
+                         increase damping"
+                    )));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(Mat::from_vec(
+        n,
+        n,
+        l.into_iter().map(|x| x as f32).collect(),
+    ))
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for j in 0..i {
+            sum -= l.at(i, j) as f64 * y[j];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|x| x as f32).collect()
+}
+
+/// Solve `L^T x = y` for lower-triangular `L` (back substitution).
+pub fn solve_upper(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for j in i + 1..n {
+            sum -= l.at(j, i) as f64 * x[j];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|x| x as f32).collect()
+}
+
+/// Invert a symmetric positive-definite matrix via Cholesky.
+pub fn invert_spd(a: &Mat) -> Result<Mat, Error> {
+    let n = a.rows;
+    let l = cholesky_lower(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for col in 0..n {
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&l, &y);
+        for i in 0..n {
+            *inv.at_mut(i, col) = x[i];
+        }
+        e[col] = 0.0;
+    }
+    // symmetrize against float drift
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (inv.at(i, j) + inv.at(j, i));
+            *inv.at_mut(i, j) = avg;
+            *inv.at_mut(j, i) = avg;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn spd(rng: &mut Pcg32, n: usize) -> Mat {
+        // A = B B^T + n*I is SPD
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b.matmul(&b.t());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg32::new(1, 0);
+        let a = spd(&mut rng, 8);
+        let l = cholesky_lower(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
+        }
+        // strictly lower-triangular zero pattern above diagonal
+        for i in 0..8 {
+            for j in i + 1..8 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalue -1
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves_invert_l() {
+        let mut rng = Pcg32::new(2, 0);
+        let a = spd(&mut rng, 6);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f32> = rng.normal_vec(6);
+        let y = solve_lower(&l, &b);
+        // L y must equal b
+        for i in 0..6 {
+            let mut acc = 0.0f32;
+            for j in 0..=i {
+                acc += l.at(i, j) * y[j];
+            }
+            assert!((acc - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn invert_spd_gives_identity() {
+        let mut rng = Pcg32::new(3, 0);
+        let a = spd(&mut rng, 10);
+        let inv = invert_spd(&a).unwrap();
+        let id = a.matmul(&inv);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.at(i, j) - want).abs() < 1e-2, "at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn invert_identity_is_identity() {
+        let inv = invert_spd(&Mat::eye(5)).unwrap();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((inv.at(i, j) - want).abs() < 1e-5);
+            }
+        }
+    }
+}

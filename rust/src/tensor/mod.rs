@@ -1,0 +1,357 @@
+//! Minimal dense f32 tensor substrate for host-side math.
+//!
+//! Powers the reference transformer ([`crate::nn`]), the pruning engines
+//! ([`crate::pruning`]) and the evaluators. Row-major 2-D matrices plus the
+//! linear-algebra the paper needs (matmul, softmax, layernorm, Cholesky for
+//! SparseGPT's damped-Hessian inverse). No broadcasting zoo — just the ops
+//! the stack actually uses, each carefully tested.
+
+mod linalg;
+
+pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose (copy).
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// `self @ other` — blocked i-k-j loop (cache-friendly row-major form).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue; // pruned-weight fast path
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` — the natural layout for `x @ W^T` linears.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            for j in 0..n {
+                let b_row = other.row(j);
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a_row[kk] * b_row[kk];
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Add a row vector to every row (bias add).
+    pub fn add_row_vec(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            for (a, b) in self.row_mut(i).iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+    }
+
+    /// Elementwise product with a same-shape mask.
+    pub fn hadamard(&self, mask: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (mask.rows, mask.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&mask.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Row-wise softmax in place.
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            if sum > 0.0 {
+                for x in row.iter_mut() {
+                    *x /= sum;
+                }
+            }
+        }
+    }
+
+    /// Per-column sum of squares (the Wanda activation statistic over a
+    /// (tokens, features) activation matrix).
+    pub fn col_sq_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                out[j] += x * x;
+            }
+        }
+        out
+    }
+
+    /// `X^T X` over a (tokens, features) matrix — SparseGPT's Hessian.
+    pub fn gram(&self) -> Mat {
+        let d = self.cols;
+        let mut out = Mat::zeros(d, d);
+        for t in 0..self.rows {
+            let row = self.row(t);
+            for i in 0..d {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let o_row = &mut out.data[i * d..(i + 1) * d];
+                for j in 0..d {
+                    o_row[j] += xi * row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|x| **x == 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+/// Layer-norm over the last axis of a (rows, features) matrix.
+pub fn layernorm_rows(x: &Mat, g: &[f32], b: &[f32], eps: f32) -> Mat {
+    assert_eq!(g.len(), x.cols);
+    assert_eq!(b.len(), x.cols);
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..x.cols {
+            out.data[i * x.cols + j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut Mat) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Numerically-stable log-softmax of one row (for NLL evaluation).
+pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+    row.iter().map(|x| x - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randmat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_of_transpose() {
+        let mut rng = Pcg32::new(1, 0);
+        let a = randmat(&mut rng, 5, 7);
+        let b = randmat(&mut rng, 4, 7);
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.t());
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Pcg32::new(2, 0);
+        let a = randmat(&mut rng, 6, 6);
+        let got = a.matmul(&Mat::eye(6));
+        for (x, y) in got.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg32::new(3, 0);
+        let mut a = randmat(&mut rng, 4, 9);
+        a.softmax_rows();
+        for i in 0..4 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(a.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn col_sq_sums_known() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 0.0, 3.0, 0.0, 4.0]);
+        assert_eq!(a.col_sq_sums(), vec![10.0, 4.0, 16.0]);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg32::new(4, 0);
+        let x = randmat(&mut rng, 20, 6);
+        let g = x.gram();
+        for i in 0..6 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..6 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-4);
+            }
+        }
+        // diag equals col_sq_sums
+        let sq = x.col_sq_sums();
+        for i in 0..6 {
+            assert!((g.at(i, i) - sq[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Pcg32::new(5, 0);
+        let x = randmat(&mut rng, 3, 32);
+        let g = vec![1.0; 32];
+        let b = vec![0.0; 32];
+        let y = layernorm_rows(&x, &g, &b, 1e-5);
+        for i in 0..3 {
+            let m: f32 = y.row(i).iter().sum::<f32>() / 32.0;
+            let v: f32 = y.row(i).iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 32.0;
+            assert!(m.abs() < 1e-4);
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let ls = log_softmax(&row);
+        let total: f32 = ls.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let a = Mat::from_vec(1, 4, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(a.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn hadamard_masks() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let m = Mat::from_vec(1, 3, vec![1.0, 0.0, 1.0]);
+        assert_eq!(a.hadamard(&m).data, vec![1.0, 0.0, 3.0]);
+    }
+}

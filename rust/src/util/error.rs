@@ -1,0 +1,127 @@
+//! Crate error type: one enum, `From` conversions from everything the
+//! stack touches (IO, XLA/PJRT, parsing), with context chaining.
+
+use std::fmt;
+
+/// Unified error for the mumoe crate.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem / IO failures (artifact files, checkpoints, corpora).
+    Io(std::io::Error),
+    /// Errors surfaced by the `xla` crate (PJRT compile/execute).
+    Xla(String),
+    /// Malformed input formats: manifest JSON, MUCK checkpoints, SQAB sets.
+    Parse(String),
+    /// Configuration errors (bad CLI flag, invalid config value).
+    Config(String),
+    /// Coordinator-level failures (queue closed, request rejected).
+    Coordinator(String),
+    /// Invariant violation — a bug, not an environment problem.
+    Invariant(String),
+    /// Context wrapper: what we were doing when the inner error happened.
+    Context(String, Box<Error>),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Parse(m) => write!(f, "parse: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+            Error::Context(ctx, inner) => write!(f, "{ctx}: {inner}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Context(_, inner) => Some(inner.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Xla(format!("{e:#}"))
+    }
+}
+
+impl Error {
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn invariant(msg: impl Into<String>) -> Self {
+        Error::Invariant(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+}
+
+/// Context-chaining, mirroring `anyhow::Context`.
+pub trait ResultExt<T> {
+    fn context(self, ctx: impl Into<String>) -> Result<T, Error>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> ResultExt<T> for Result<T, E> {
+    fn context(self, ctx: impl Into<String>) -> Result<T, Error> {
+        self.map_err(|e| Error::Context(ctx.into(), Box::new(e.into())))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T, Error> {
+        self.map_err(|e| Error::Context(f(), Box::new(e.into())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_context() {
+        let inner: Result<(), Error> =
+            Err(Error::parse("bad magic")).context("loading ckpt");
+        let msg = inner.unwrap_err().to_string();
+        assert!(msg.contains("loading ckpt"));
+        assert!(msg.contains("bad magic"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let e: Error =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn source_chain() {
+        use std::error::Error as _;
+        let e = Error::Context(
+            "outer".into(),
+            Box::new(Error::parse("inner")),
+        );
+        assert!(e.source().is_some());
+    }
+}

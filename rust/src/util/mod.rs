@@ -1,0 +1,15 @@
+//! Foundation substrates: error type, logging, RNG, threadpool, JSON.
+//!
+//! The sandbox carries no crates beyond `xla`/`anyhow`, so everything here
+//! is built on std (DESIGN.md §2 substitution table).
+
+pub mod error;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod threadpool;
+
+/// Monotonic wall-clock helper used across metrics and benches.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

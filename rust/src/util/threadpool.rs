@@ -1,0 +1,181 @@
+//! Fixed-size threadpool (tokio/rayon substitute) built on std mpsc.
+//!
+//! The coordinator uses it for calibration jobs and corpus preprocessing;
+//! the serve loop itself is a single event thread (the PJRT CPU client is
+//! effectively serial on this box anyway). `scope_map` provides the one
+//! parallel primitive the rest of the code wants: map a function over a
+//! slice with worker threads and collect results in order.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads pulling jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("mumoe-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx, workers, size }
+    }
+
+    /// Pool sized to the machine (at least 1).
+    pub fn for_host() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .send(Msg::Run(Box::new(job)))
+            .expect("threadpool queue closed");
+    }
+
+    /// Run `f` over each item, returning results in input order. Panics in
+    /// workers are converted to a panic here (fail loud, not silent loss).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, ResultSlot<R>)>, Receiver<_>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let slot = match out {
+                    Ok(v) => ResultSlot::Ok(v),
+                    Err(_) => ResultSlot::Panicked,
+                };
+                let _ = rtx.send((i, slot));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, slot) = rrx.recv().expect("worker result channel closed");
+            match slot {
+                ResultSlot::Ok(v) => slots[i] = Some(v),
+                ResultSlot::Panicked => panic!("threadpool job {i} panicked"),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+enum ResultSlot<R> {
+    Ok(R),
+    Panicked,
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("poisoned queue lock");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                // Swallow panics at the worker level; map() re-raises.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..32 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..100).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![1, 2, 3], |x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn shutdown_joins() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,155 @@
+//! Property tests over coordinator policy (mini-proptest; no XLA needed):
+//! batching invariants, router snapping, and metrics consistency under
+//! arbitrary request interleavings.
+
+use mumoe::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use mumoe::coordinator::request::Request;
+use mumoe::moe::snap_rho;
+use mumoe::proptest::{check, ensure, PropResult};
+use std::time::{Duration, Instant};
+
+const LEVELS: [f64; 3] = [0.4, 0.6, 1.0];
+
+fn req(id: u64, rho: f64) -> Request {
+    Request::new(id, vec![1, 2], 2, rho, "d", None)
+}
+
+/// Arbitrary interleavings of pushes never lose or duplicate requests,
+/// batches never mix ρ, and never exceed the configured size.
+#[test]
+fn batcher_conserves_requests() {
+    check(
+        11,
+        60,
+        |rng| {
+            let n = 1 + rng.gen_range_usize(40);
+            (0..n)
+                .map(|_| rng.gen_range_usize(LEVELS.len()))
+                .collect::<Vec<usize>>()
+        },
+        |level_idxs: &Vec<usize>| -> PropResult {
+            let mut b = DynamicBatcher::new(
+                BatcherConfig {
+                    batch_size: 4,
+                    window: Duration::from_millis(5),
+                },
+                &LEVELS,
+            );
+            for (i, &li) in level_idxs.iter().enumerate() {
+                b.push(req(i as u64, LEVELS[li]));
+            }
+            ensure(
+                b.pending() == level_idxs.len(),
+                format!("pending {} != {}", b.pending(), level_idxs.len()),
+            )?;
+            let later = Instant::now() + Duration::from_millis(50);
+            let mut ids = Vec::new();
+            while let Some(batch) = b.pop_ready(later) {
+                ensure(batch.len() <= 4, "oversized batch")?;
+                ensure(!batch.is_empty(), "empty batch")?;
+                for r in &batch.requests {
+                    ensure(
+                        (r.rho - batch.rho).abs() < 1e-9,
+                        "mixed-rho batch",
+                    )?;
+                    ids.push(r.id);
+                }
+            }
+            ensure(b.pending() == 0, "requests left behind")?;
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..level_idxs.len() as u64).collect();
+            ensure(ids == want, "lost or duplicated request ids")
+        },
+    );
+}
+
+/// FIFO within a sparsity level, for any arrival pattern.
+#[test]
+fn batcher_fifo_within_level() {
+    check(
+        13,
+        40,
+        |rng| {
+            let n = 1 + rng.gen_range_usize(30);
+            (0..n)
+                .map(|_| rng.gen_range_usize(LEVELS.len()))
+                .collect::<Vec<usize>>()
+        },
+        |level_idxs: &Vec<usize>| -> PropResult {
+            let mut b = DynamicBatcher::new(BatcherConfig::default(), &LEVELS);
+            for (i, &li) in level_idxs.iter().enumerate() {
+                b.push(req(i as u64, LEVELS[li]));
+            }
+            let later = Instant::now() + Duration::from_secs(1);
+            let mut last_seen: std::collections::HashMap<u64, u64> = Default::default();
+            while let Some(batch) = b.pop_ready(later) {
+                let key = (batch.rho * 100.0) as u64;
+                for r in &batch.requests {
+                    if let Some(&prev) = last_seen.get(&key) {
+                        ensure(r.id > prev, format!("FIFO violated at {}", r.id))?;
+                    }
+                    last_seen.insert(key, r.id);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// snap_rho always returns a configured level, and it's the closest one.
+#[test]
+fn snap_rho_is_nearest_level() {
+    check(
+        17,
+        200,
+        |rng| rng.next_f64(),
+        |&rho: &f64| -> PropResult {
+            let snapped = snap_rho(rho, &LEVELS);
+            ensure(LEVELS.contains(&snapped), "snap left the level set")?;
+            for &l in &LEVELS {
+                ensure(
+                    (rho - snapped).abs() <= (rho - l).abs() + 1e-12,
+                    format!("{l} closer than {snapped} for {rho}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Drain returns everything exactly once regardless of prior pops.
+#[test]
+fn drain_after_partial_pops_conserves() {
+    check(
+        19,
+        40,
+        |rng| {
+            let n = 1 + rng.gen_range_usize(25);
+            let pops = rng.gen_range_usize(4);
+            (n, pops)
+        },
+        |&(n, pops): &(usize, usize)| -> PropResult {
+            let mut b = DynamicBatcher::new(
+                BatcherConfig {
+                    batch_size: 3,
+                    window: Duration::from_millis(0), // everything ready
+                },
+                &LEVELS,
+            );
+            for i in 0..n {
+                b.push(req(i as u64, LEVELS[i % LEVELS.len()]));
+            }
+            let now = Instant::now() + Duration::from_millis(1);
+            let mut got = 0usize;
+            for _ in 0..pops {
+                if let Some(batch) = b.pop_ready(now) {
+                    got += batch.len();
+                }
+            }
+            for batch in b.drain() {
+                got += batch.len();
+            }
+            ensure(got == n, format!("{got} != {n}"))
+        },
+    );
+}

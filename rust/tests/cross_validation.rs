@@ -1,0 +1,144 @@
+//! Cross-implementation validation without XLA: the rust pruning engines
+//! vs hand-computed fixtures and vs each other at scale, plus the Figure-3
+//! selector equivalence on production-sized rows.
+
+use mumoe::pruning::selection::{wanda_prune_with, Selector};
+use mumoe::pruning::sparsegpt::{
+    reconstruction_loss, sparsegpt_prune, HessianCalibrator, SparseGptConfig,
+};
+use mumoe::pruning::wanda::{online_wanda_mask, WandaCalibrator};
+use mumoe::pruning::{kc_for, magnitude::magnitude_mask};
+use mumoe::tensor::Mat;
+use mumoe::util::rng::Pcg32;
+
+/// Fixture mirrored in python/tests/test_pruning.py — the two language
+/// implementations must agree on this exact case.
+#[test]
+fn wanda_fixture_matches_python() {
+    // w = [[0.5, 1.0]]; feature 0 hot -> keep (0,0), drop (0,1)
+    let w = Mat::from_vec(1, 2, vec![0.5, 1.0]);
+    let mut calib = WandaCalibrator::new(2);
+    calib.update_from_sq_sums(&[100.0, 0.01], 4);
+    let mask = mumoe::pruning::wanda::wanda_mask(&w, &calib, 0.5);
+    assert_eq!(mask.bits, vec![1, 0]);
+}
+
+#[test]
+fn magnitude_fixture_matches_python() {
+    let w = Mat::from_vec(1, 4, vec![1.0, -5.0, 0.1, 3.0]);
+    let mask = magnitude_mask(&w, 0.5);
+    assert_eq!(mask.bits, vec![0, 1, 0, 1]);
+}
+
+#[test]
+fn kc_matches_python_kc_for() {
+    for (d, rho, want) in [
+        (10usize, 1.0, 0usize),
+        (10, 0.0, 9),
+        (100, 0.6, 40),
+        (128, 0.5, 64),
+        (48, 0.4, 28),
+    ] {
+        assert_eq!(kc_for(d, rho), want, "d={d} rho={rho}");
+    }
+}
+
+/// All three selectors produce the *same pruning* on production-shaped
+/// rows (d up to 4096), not just the toy sizes in unit tests.
+#[test]
+fn selectors_agree_at_scale() {
+    let mut rng = Pcg32::new(31, 0);
+    for d in [512usize, 1024, 4096] {
+        let d_out = 8;
+        let orig = rng.normal_vec(d_out * d);
+        let norms: Vec<f32> = (0..d).map(|_| rng.next_f32() + 0.05).collect();
+        let mut outs = Vec::new();
+        for sel in Selector::ALL {
+            let mut w = orig.clone();
+            let mut scratch = Vec::new();
+            wanda_prune_with(sel, &mut w, d_out, d, &norms, 0.5, &mut scratch);
+            outs.push(w);
+        }
+        assert_eq!(outs[0], outs[1], "sort vs topk at d={d}");
+        assert_eq!(outs[0], outs[2], "sort vs kthvalue at d={d}");
+    }
+}
+
+/// SparseGPT's compensated loss beats mask-only Wanda across seeds
+/// (statistical, not single-shot: 5 seeds, all must hold at blocksize =
+/// d_in = canonical OBS).
+#[test]
+fn sparsegpt_dominates_wanda_across_seeds() {
+    for seed in 0..5u64 {
+        let mut rng = Pcg32::new(100 + seed, 0);
+        let (d_out, d_in, t) = (16usize, 32usize, 256usize);
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let mut x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
+        let scales: Vec<f32> = (0..d_in).map(|_| 0.2 + 2.8 * rng.next_f32()).collect();
+        for tt in 0..t {
+            for j in 0..d_in {
+                *x.at_mut(tt, j) *= scales[j];
+            }
+        }
+        let mut c = HessianCalibrator::new(d_in);
+        c.update(&x);
+        let cfg = SparseGptConfig {
+            blocksize: d_in,
+            ..Default::default()
+        };
+        let w_gpt = sparsegpt_prune(&w, &c, 0.5, cfg).expect("sparsegpt");
+        let w_wanda = online_wanda_mask(&w, &x, 0.5).apply(&w);
+        let lg = reconstruction_loss(&w, &w_gpt, &x);
+        let lw = reconstruction_loss(&w, &w_wanda, &x);
+        assert!(lg < lw, "seed {seed}: {lg} !< {lw}");
+    }
+}
+
+/// The micro-expert premise at engine level: masks differ across shifted
+/// activation distributions but row counts stay exact.
+#[test]
+fn online_masks_shift_with_distribution() {
+    let mut rng = Pcg32::new(77, 0);
+    let (d_out, d_in) = (32usize, 64usize);
+    let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+    let base = Mat::from_vec(48, d_in, rng.normal_vec(48 * d_in));
+    let mut shifted = Mat::from_vec(48, d_in, rng.normal_vec(48 * d_in));
+    for t in 0..48 {
+        for j in 0..d_in / 2 {
+            *shifted.at_mut(t, j) *= 6.0;
+        }
+    }
+    for rho in [0.25, 0.5, 0.75] {
+        let m1 = online_wanda_mask(&w, &base, rho);
+        let m2 = online_wanda_mask(&w, &shifted, rho);
+        let keep = d_in - kc_for(d_in, rho);
+        assert!(m1.row_active_counts().iter().all(|&c| c == keep));
+        assert!(m2.row_active_counts().iter().all(|&c| c == keep));
+        let j = m1.jaccard(&m2);
+        assert!(j < 0.999, "rho={rho}: masks identical under shift");
+        assert!(j > 0.05, "rho={rho}: masks unrealistically disjoint");
+    }
+}
+
+/// Host reference model: online-Wanda rho sweep degrades monotonically
+/// on a random (untrained) model w.r.t. dense output distance.
+#[test]
+fn host_model_prune_distance_monotone() {
+    use mumoe::model::ModelConfig;
+    use mumoe::nn::{random_model, PruneMode};
+    let m = random_model(&ModelConfig::new("t", 2, 2, 32), 5);
+    let toks: Vec<i32> = (1..40).collect();
+    let dense = m.forward(&toks, toks.len(), PruneMode::Dense);
+    let mut last = 0.0;
+    for rho in [0.9, 0.6, 0.3] {
+        let out = m.forward(&toks, toks.len(), PruneMode::OnlineWanda { rho });
+        let dist: f32 = dense
+            .data
+            .iter()
+            .zip(&out.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(dist >= last * 0.9, "distance collapsed at rho={rho}");
+        last = dist;
+    }
+}
