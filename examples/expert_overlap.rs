@@ -46,7 +46,7 @@ fn main() -> Result<(), mumoe::util::error::Error> {
 
     // utilization histogram for one attention projection and one FFN layer
     for lin in ["layers.0.q.w", "layers.2.fc1.w"] {
-        let u = utilization(&all, lin);
+        let u = utilization(&all, lin)?;
         let always = u.iter().filter(|&&x| x == 1.0).count();
         let never = u.iter().filter(|&&x| x == 0.0).count();
         let sometimes = u.len() - always - never;

@@ -22,10 +22,12 @@ pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
+#[cfg(feature = "pjrt")]
 pub mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
+#[cfg(feature = "pjrt")]
 pub use server::{Server, ServerHandle};

@@ -1,0 +1,76 @@
+//! Host-side evaluation: perplexity through the pure-rust reference model.
+//!
+//! Always available (no artifacts, no `pjrt` feature) — this is what the
+//! sparse-speedup bench and artifact-free environments use. It consumes
+//! the same shared traversal ([`crate::nn::Model::forward_with`]) as the
+//! μ-MoE analysis code, so dense, offline-pruned and online-sparse
+//! evaluation all exercise the identical execution engine.
+
+use crate::data::corpus::Window;
+use crate::eval::Perplexity;
+use crate::nn::{Model, PruneMode};
+use crate::util::threadpool::ThreadPool;
+
+/// Perplexity of a host model over eval windows under one prune mode.
+pub fn host_perplexity(model: &Model, windows: &[Window], mode: PruneMode) -> Perplexity {
+    let mut ppl = Perplexity::new();
+    for w in windows {
+        let (nll, count) = model.nll_sum(&w.tokens, w.valid_len, mode);
+        ppl.update(nll, count as u64);
+    }
+    ppl
+}
+
+/// Same, with windows fanned out across a threadpool (windows are
+/// independent; the merge is exact because [`Perplexity`] aggregates
+/// sufficient statistics).
+pub fn host_perplexity_par(
+    model: &Model,
+    windows: &[Window],
+    mode: PruneMode,
+    pool: &ThreadPool,
+) -> Perplexity {
+    let stats = pool.scope_map(windows.iter().collect::<Vec<_>>(), |w| {
+        model.nll_sum(&w.tokens, w.valid_len, mode)
+    });
+    let mut ppl = Perplexity::new();
+    for (nll, count) in stats {
+        ppl.update(nll, count as u64);
+    }
+    ppl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::nn::random_model;
+
+    fn windows() -> Vec<Window> {
+        (0..4i32)
+            .map(|i| Window {
+                tokens: (1..9).map(|t| t * (i + 1)).collect(),
+                valid_len: 8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn perplexity_positive_and_finite() {
+        let m = random_model(&ModelConfig::new("t", 2, 2, 16), 21);
+        let ppl = host_perplexity(&m, &windows(), PruneMode::Dense);
+        assert!(ppl.value().is_finite() && ppl.value() > 1.0);
+        assert_eq!(ppl.token_count, 4 * 7);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let m = random_model(&ModelConfig::new("t", 2, 2, 16), 22);
+        let pool = ThreadPool::new(3);
+        let mode = PruneMode::OnlineWanda { rho: 0.6 };
+        let a = host_perplexity(&m, &windows(), mode);
+        let b = host_perplexity_par(&m, &windows(), mode, &pool);
+        assert_eq!(a.token_count, b.token_count);
+        assert!((a.value() - b.value()).abs() < 1e-12);
+    }
+}

@@ -1,8 +1,15 @@
 //! Evaluators: perplexity (Table 1 / Figure 4) and strata accuracy
 //! (Tables 2-3). Both aggregate from per-sequence sufficient statistics so
 //! the same code consumes artifact outputs and host-model outputs.
+//!
+//! The artifact-driven harnesses need the PJRT runtime and are gated
+//! behind the `pjrt` feature; [`host`] evaluates through the pure-rust
+//! reference model and is always available.
 
+#[cfg(feature = "pjrt")]
 pub mod harness;
+pub mod host;
+#[cfg(feature = "pjrt")]
 pub mod vlm_harness;
 
 use crate::data::qa::{QaRecord, GRADE_NAMES, MODALITY_NAMES, SUBJECT_NAMES};

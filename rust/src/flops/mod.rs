@@ -18,6 +18,8 @@
 //! is what the reproduction checks.
 
 use crate::model::ModelConfig;
+use crate::pruning::Mask;
+use std::collections::HashMap;
 
 /// FLOPs/MACs tally for one forward pass.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -81,15 +83,35 @@ pub fn count_forward(shape: ArchShape, t: usize, rho: f64, online_prune: bool) -
     let tf = t as f64;
     let mut c = OpCount::default();
 
-    // per layer
+    // per layer: the prunable linears, rho-active
     for _ in 0..shape.n_layers {
-        // q, k, v, o projections: (T, d) x (d, d), weights rho-active
+        // q, k, v, o projections: (T, d) x (d, d)
         for _ in 0..4 {
             c.add_matmul(tf, d, d, rho);
         }
         // fc1 (T,d)x(d,4d) + fc2 (T,4d)x(4d,d)
         c.add_matmul(tf, d, di, rho);
         c.add_matmul(tf, di, d, rho);
+
+        if online_prune {
+            let linears: [(f64, f64); 6] =
+                [(d, d), (d, d), (d, d), (d, d), (di, d), (d, di)];
+            for (d_out, d_in) in linears {
+                add_wanda_overhead(&mut c, d_out, d_in, tf);
+            }
+        }
+    }
+    add_non_prunable_terms(&mut c, shape, tf);
+    c
+}
+
+/// Everything a forward pass spends outside the prunable linears:
+/// attention score/value matmuls, softmax, layernorms, relu, final LN and
+/// the tied LM head. Shared by the analytic and the achieved counters so
+/// the two can never drift apart.
+fn add_non_prunable_terms(c: &mut OpCount, shape: ArchShape, tf: f64) {
+    let (d, di) = (shape.d_model as f64, 4.0 * shape.d_model as f64);
+    for _ in 0..shape.n_layers {
         // attention scores + weighted values: (T,hd)x(hd,T) per head = T^2 d
         c.add_matmul(tf, d, tf, 1.0);
         c.add_matmul(tf, tf, d, 1.0);
@@ -97,27 +119,55 @@ pub fn count_forward(shape: ArchShape, t: usize, rho: f64, online_prune: bool) -
         c.add_elementwise(tf * tf, 5.0);
         c.add_elementwise(2.0 * tf * d, 8.0);
         c.add_elementwise(tf * di, 1.0);
-
-        if online_prune {
-            // instant Wanda per linear (paper S2: O[3 d d' + d T]):
-            //   norms: 2 d_in T flops (square + accumulate; d_in T MACs)
-            //   score: d_out d_in multiplies
-            //   kth-value selection: ~d_out d_in comparisons
-            //   gate comparators: d_out d_in
-            let linears: [(f64, f64); 6] =
-                [(d, d), (d, d), (d, d), (d, d), (di, d), (d, di)];
-            for (d_out, d_in) in linears {
-                c.flops += 2.0 * d_in * tf; // norm accumulate
-                c.macs += d_in * tf;
-                c.flops += d_out * d_in; // scores
-                c.flops += d_out * d_in; // selection comparisons
-                c.flops += d_out * d_in; // gating comparators
-            }
-        }
     }
     // final layernorm + tied LM head (dense: the head is not pruned)
     c.add_elementwise(tf * d, 8.0);
     c.add_matmul(tf, d, shape.vocab as f64, 1.0);
+}
+
+/// Instant-Wanda pruning overhead for one linear (paper S2:
+/// O[3 d d' + d T]):
+///   norms: 2 d_in T flops (square + accumulate; d_in T MACs)
+///   score: d_out d_in multiplies
+///   kth-value selection: ~d_out d_in comparisons
+///   gate comparators: d_out d_in
+fn add_wanda_overhead(c: &mut OpCount, d_out: f64, d_in: f64, tf: f64) {
+    c.flops += 2.0 * d_in * tf; // norm accumulate
+    c.macs += d_in * tf;
+    c.flops += d_out * d_in; // scores
+    c.flops += d_out * d_in; // selection comparisons
+    c.flops += d_out * d_in; // gating comparators
+}
+
+/// *Achieved* op counts of one forward pass given the micro-expert masks a
+/// prompt actually induced (e.g. `moe::select_experts(..).masks`), rather
+/// than the analytic `rho`-scaled estimate. The non-prunable terms
+/// (attention, softmax, layernorms, embeddings, LM head) and the pruning
+/// overhead come from the architecture exactly as in [`count_forward`];
+/// the linear-layer terms charge `t · active_count` MACs per linear.
+///
+/// `benches/sparse_speedup.rs` reports achieved vs theoretical FLOP
+/// reduction from this — the gap quantifies how much of the paper's
+/// complexity claim the sparse execution engine actually realizes.
+pub fn achieved_forward(
+    shape: ArchShape,
+    t: usize,
+    masks: &HashMap<String, Mask>,
+    online_prune: bool,
+) -> OpCount {
+    let tf = t as f64;
+    let mut c = OpCount::default();
+
+    // prunable linears: exact active-weight counts from the masks
+    for mask in masks.values() {
+        let active = mask.active_count() as f64;
+        c.macs += tf * active;
+        c.flops += 2.0 * tf * active;
+        if online_prune {
+            add_wanda_overhead(&mut c, mask.rows as f64, mask.cols as f64, tf);
+        }
+    }
+    add_non_prunable_terms(&mut c, shape, tf);
     c
 }
 
@@ -186,6 +236,62 @@ mod tests {
         // Our conventions put a 40L/5120d model in the same ballpark.
         let c = table4_row(paper_17b_like(), 1.0);
         assert!(c.tflops() > 1.0 && c.tflops() < 8.0, "{}", c.tflops());
+    }
+
+    #[test]
+    fn achieved_matches_analytic_at_exact_rho() {
+        // masks with exactly rho-active rows must reproduce count_forward
+        use crate::pruning::Mask;
+        let cfg = crate::model::config_by_name("mu-opt-micro").unwrap();
+        let shape = ArchShape::of(&cfg);
+        let t = 32;
+        // rho = 0.5 divides every linear width evenly -> analytic == exact
+        let mut masks = HashMap::new();
+        for name in cfg.linear_names() {
+            let lin = name.split('.').nth(2).unwrap();
+            let (d_out, d_in) = cfg.linear_shape(lin);
+            let mut m = Mask::zeros(d_out, d_in);
+            for i in 0..d_out {
+                for j in 0..d_in / 2 {
+                    m.set(i, j, true);
+                }
+            }
+            masks.insert(name, m);
+        }
+        let achieved = achieved_forward(shape, t, &masks, true);
+        let analytic = count_forward(shape, t, 0.5, true);
+        assert!(
+            (achieved.macs - analytic.macs).abs() / analytic.macs < 1e-9,
+            "{} vs {}",
+            achieved.macs,
+            analytic.macs
+        );
+        assert!((achieved.flops - analytic.flops).abs() / analytic.flops < 1e-9);
+    }
+
+    #[test]
+    fn achieved_from_real_selection_tracks_rho() {
+        use crate::moe::select_experts;
+        use crate::nn::random_model;
+        let cfg = crate::model::config_by_name("mu-opt-micro").unwrap();
+        let model = random_model(&cfg, 3);
+        let toks: Vec<i32> = (1..17).collect();
+        let shape = ArchShape::of(&cfg);
+        let dense = achieved_forward(
+            shape,
+            16,
+            &select_experts(&model, &toks, 16, 1.0).masks,
+            false,
+        );
+        let half = achieved_forward(
+            shape,
+            16,
+            &select_experts(&model, &toks, 16, 0.5).masks,
+            false,
+        );
+        let ratio = half.macs / dense.macs;
+        // linear MACs halve; attention/head floor keeps the ratio above 0.5
+        assert!(ratio > 0.45 && ratio < 0.95, "{ratio}");
     }
 
     #[test]

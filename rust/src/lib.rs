@@ -16,6 +16,13 @@
 //! the `xla` crate's PJRT CPU client and keeps model weights resident as
 //! device buffers.
 //!
+//! Everything PJRT-dependent (`runtime`, `eval::harness`,
+//! `eval::vlm_harness`, `coordinator::server`) is gated behind the
+//! optional `pjrt` cargo feature so the default build is pure std-Rust:
+//! the host execution engine (dense + row-sparse μ-MoE kernels), pruning
+//! engines, analysis lenses and benches all work without an XLA
+//! toolchain.
+//!
 //! The crate is organised as substrates (bottom) to product (top):
 //!
 //! ```text
@@ -40,6 +47,7 @@ pub mod moe;
 pub mod nn;
 pub mod proptest;
 pub mod pruning;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
 pub mod util;

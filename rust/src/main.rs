@@ -10,8 +10,21 @@
 //!   overlap     μ-MoE micro-expert overlap analysis across domains
 //!   inspect     print manifest / checkpoint summaries
 
-use mumoe::cli::{flag, opt, usage, Args, OptSpec};
+use mumoe::cli::{opt, usage, Args, OptSpec};
+#[cfg(feature = "pjrt")]
+use mumoe::cli::flag;
 use mumoe::util::error::Error;
+
+/// Subcommands that execute PJRT artifacts are only available when the
+/// crate is built with `--features pjrt`; without it they fail with a
+/// pointer instead of being silently absent.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<(), Error> {
+    Err(Error::config(format!(
+        "'{cmd}' needs the PJRT runtime; rebuild with `--features pjrt` \
+         (requires the xla toolchain — see rust/Cargo.toml)"
+    )))
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -72,6 +85,12 @@ fn wants_help(rest: &[String]) -> bool {
 // serve
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_rest: &[String]) -> Result<(), Error> {
+    pjrt_unavailable("serve")
+}
+
+#[cfg(feature = "pjrt")]
 const SERVE_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     opt("model", "model to serve", "mu-opt-micro"),
@@ -82,6 +101,7 @@ const SERVE_SPEC: &[OptSpec] = &[
     opt("config", "optional mumoe.toml to load first", ""),
 ];
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("serve", "replay a trace", SERVE_SPEC));
@@ -112,6 +132,12 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
 // generate
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_generate(_rest: &[String]) -> Result<(), Error> {
+    pjrt_unavailable("generate")
+}
+
+#[cfg(feature = "pjrt")]
 const GEN_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     opt("model", "model name", "mu-opt-micro"),
@@ -123,6 +149,7 @@ const GEN_SPEC: &[OptSpec] = &[
 /// Greedy autoregressive decoding through the mu-MoE serving head: each
 /// step re-runs online pruning against the *growing* context, so the
 /// active micro-expert set adapts as the generation unfolds.
+#[cfg(feature = "pjrt")]
 fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("generate", "mu-MoE greedy decode", GEN_SPEC));
@@ -191,6 +218,12 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
 // eval
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_rest: &[String]) -> Result<(), Error> {
+    pjrt_unavailable("eval")
+}
+
+#[cfg(feature = "pjrt")]
 const EVAL_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     opt("model", "model name", "mu-opt-micro"),
@@ -202,6 +235,7 @@ const EVAL_SPEC: &[OptSpec] = &[
     opt("calib-windows", "calibration windows", "8"),
 ];
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("eval", "one perplexity cell", EVAL_SPEC));
@@ -256,6 +290,12 @@ fn cmd_eval(rest: &[String]) -> Result<(), Error> {
 // vlm-eval
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_vlm_eval(_rest: &[String]) -> Result<(), Error> {
+    pjrt_unavailable("vlm-eval")
+}
+
+#[cfg(feature = "pjrt")]
 const VLM_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     opt("method", "dense|magnitude|wanda|sparsegpt|mumoe", "mumoe"),
@@ -265,6 +305,7 @@ const VLM_SPEC: &[OptSpec] = &[
     opt("calib-samples", "cross-task calibration samples", "32"),
 ];
 
+#[cfg(feature = "pjrt")]
 fn cmd_vlm_eval(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("vlm-eval", "mu-VLM accuracy cell", VLM_SPEC));
@@ -478,11 +519,18 @@ fn cmd_overlap(rest: &[String]) -> Result<(), Error> {
 // inspect
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_inspect(_rest: &[String]) -> Result<(), Error> {
+    pjrt_unavailable("inspect")
+}
+
+#[cfg(feature = "pjrt")]
 const INSPECT_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     flag("ckpts", "also summarize checkpoints"),
 ];
 
+#[cfg(feature = "pjrt")]
 fn cmd_inspect(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("inspect", "artifact summary", INSPECT_SPEC));

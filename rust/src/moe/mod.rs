@@ -9,6 +9,7 @@
 
 use crate::nn::Model;
 use crate::pruning::{wanda::online_wanda_mask, Mask};
+use crate::util::error::Error;
 use std::collections::HashMap;
 
 /// Per-linear activation-statistics summary for one prompt.
@@ -40,6 +41,11 @@ pub struct OverlapStats {
 }
 
 /// Mean pairwise Jaccard overlap of the active micro-expert sets.
+///
+/// Robust to ragged inputs: a linear that is missing from some selection,
+/// or whose mask shape disagrees across selections, is skipped with a
+/// warning instead of panicking (selections may come from different model
+/// snapshots when replaying mixed traces).
 pub fn overlap(selections: &[ExpertSelection]) -> OverlapStats {
     let mut mean_jaccard = HashMap::new();
     let mut total = 0.0;
@@ -50,8 +56,29 @@ pub fn overlap(selections: &[ExpertSelection]) -> OverlapStats {
             overall: 1.0,
         };
     }
-    let names: Vec<String> = selections[0].masks.keys().cloned().collect();
+    let mut names: Vec<String> = selections[0].masks.keys().cloned().collect();
+    names.sort();
+    let mut extras: Vec<&String> = selections[1..]
+        .iter()
+        .flat_map(|s| s.masks.keys())
+        .filter(|k| !selections[0].masks.contains_key(*k))
+        .collect();
+    extras.sort();
+    extras.dedup();
+    for extra in extras {
+        crate::warn_!("overlap: '{extra}' absent from the first selection; skipping it");
+    }
     for name in &names {
+        let consistent = selections.iter().all(|s| {
+            s.masks.get(name).is_some_and(|m| {
+                (m.rows, m.cols)
+                    == (selections[0].masks[name].rows, selections[0].masks[name].cols)
+            })
+        });
+        if !consistent {
+            crate::warn_!("overlap: '{name}' missing or mismatched in some selections; skipping");
+            continue;
+        }
         let mut acc = 0.0;
         let mut pairs = 0usize;
         for i in 0..selections.len() {
@@ -65,27 +92,58 @@ pub fn overlap(selections: &[ExpertSelection]) -> OverlapStats {
         total += mean;
         n_lin += 1;
     }
+    if n_lin == 0 {
+        // nothing was comparable — 'no data' must not read as 'disjoint'
+        crate::warn_!("overlap: no linear was comparable across all selections");
+        return OverlapStats {
+            mean_jaccard,
+            overall: f64::NAN,
+        };
+    }
     OverlapStats {
         mean_jaccard,
-        overall: total / n_lin.max(1) as f64,
+        overall: total / n_lin as f64,
     }
 }
 
 /// Expert-utilization histogram: how often each micro-expert of one linear
 /// is activated across prompts (dead-expert / hot-expert analysis).
-pub fn utilization(selections: &[ExpertSelection], linear: &str) -> Vec<f64> {
-    assert!(!selections.is_empty());
-    let mask0 = &selections[0].masks[linear];
-    let mut counts = vec![0u32; mask0.bits.len()];
-    for s in selections {
-        for (c, &b) in counts.iter_mut().zip(&s.masks[linear].bits) {
-            *c += b as u32;
+///
+/// Errors (instead of panicking) when the selection set is empty, the
+/// linear is absent from any selection, or mask shapes disagree.
+pub fn utilization(selections: &[ExpertSelection], linear: &str) -> Result<Vec<f64>, Error> {
+    if selections.is_empty() {
+        return Err(Error::invariant("utilization over an empty selection set"));
+    }
+    let mask0 = selections[0]
+        .masks
+        .get(linear)
+        .ok_or_else(|| Error::invariant(format!("utilization: no mask for '{linear}'")))?;
+    let (rows, cols) = (mask0.rows, mask0.cols);
+    let mut counts = vec![0u32; rows * cols];
+    for (si, s) in selections.iter().enumerate() {
+        let m = s.masks.get(linear).ok_or_else(|| {
+            Error::invariant(format!("utilization: selection {si} has no mask for '{linear}'"))
+        })?;
+        if (m.rows, m.cols) != (rows, cols) {
+            return Err(Error::invariant(format!(
+                "utilization: mask shape mismatch for '{linear}': \
+                 ({rows},{cols}) vs ({},{})",
+                m.rows, m.cols
+            )));
+        }
+        for i in 0..rows {
+            for j in 0..cols {
+                if m.at(i, j) {
+                    counts[i * cols + j] += 1;
+                }
+            }
         }
     }
-    counts
+    Ok(counts
         .into_iter()
         .map(|c| c as f64 / selections.len() as f64)
-        .collect()
+        .collect())
 }
 
 /// Snap a requested sparsity to the closest supported level — the router
@@ -152,10 +210,36 @@ mod tests {
                 select_experts(&m, &[i * 10 + 1, i * 10 + 2, i * 10 + 3], 3, 0.5)
             })
             .collect();
-        let u = utilization(&sels, "layers.0.q.w");
+        let u = utilization(&sels, "layers.0.q.w").expect("utilization");
         assert!(u.iter().all(|&x| (0.0..=1.0).contains(&x)));
         let mean: f64 = u.iter().sum::<f64>() / u.len() as f64;
         assert!((mean - 0.5).abs() < 0.05, "mean utilization {mean}");
+    }
+
+    #[test]
+    fn utilization_rejects_bad_inputs() {
+        let m = model();
+        let sels = vec![select_experts(&m, &[1, 2, 3], 3, 0.5)];
+        assert!(utilization(&[], "layers.0.q.w").is_err());
+        assert!(utilization(&sels, "no.such.linear").is_err());
+        // a selection missing the linear errors instead of panicking
+        let mut broken = sels.clone();
+        broken.push(sels[0].clone());
+        broken[1].masks.remove("layers.0.q.w");
+        assert!(utilization(&broken, "layers.0.q.w").is_err());
+    }
+
+    #[test]
+    fn overlap_skips_inconsistent_linears() {
+        let m = model();
+        let a = select_experts(&m, &[1, 2, 3, 4], 4, 0.5);
+        let mut b = select_experts(&m, &[1, 2, 3, 4], 4, 0.5);
+        b.masks.remove("layers.0.q.w");
+        let st = overlap(&[a, b]);
+        // the dropped linear is skipped, the rest still report full overlap
+        assert!(!st.mean_jaccard.contains_key("layers.0.q.w"));
+        assert_eq!(st.mean_jaccard.len(), m.cfg.linear_names().len() - 1);
+        assert!((st.overall - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //!
 //! Numerics mirror python/compile/model.py exactly: pre-LN blocks, causal
 //! attention with right-padding masked, ReLU FFN, tied LM head.
+//!
+//! There is exactly one traversal, [`Model::forward_with`]; plain forwards
+//! and activation collection are thin wrappers over it, so the two can
+//! never drift apart. Parameter names are resolved once at construction
+//! ([`LayerNames`]) — the hot loop allocates no format strings. The
+//! `OnlineWanda` mode routes through the row-sparse kernels: score → mask
+//! → [`crate::pruning::Mask::compress`] → `matmul_nt_sparse`, with no
+//! dense zeroed weight copy anywhere.
 
 use crate::model::checkpoint::Checkpoint;
 use crate::model::{ModelConfig, PAD_ID};
@@ -24,18 +32,89 @@ use std::collections::HashMap;
 pub enum PruneMode {
     /// Full weights.
     Dense,
-    /// μ-MoE: online Wanda per linear at the given active ratio.
+    /// μ-MoE: online Wanda per linear at the given active ratio, executed
+    /// on the compressed row-sparse layout.
     OnlineWanda { rho: f64 },
 }
+
+/// Pre-resolved parameter names of one linear (`{prefix}.w` / `{prefix}.b`).
+#[derive(Clone, Debug)]
+pub struct LinearNames {
+    pub w: String,
+    pub b: String,
+}
+
+impl LinearNames {
+    fn new(prefix: &str, lin: &str) -> LinearNames {
+        LinearNames {
+            w: format!("{prefix}.{lin}.w"),
+            b: format!("{prefix}.{lin}.b"),
+        }
+    }
+}
+
+/// All parameter names of one transformer block, built once per model so
+/// the forward loop never formats strings.
+#[derive(Clone, Debug)]
+struct LayerNames {
+    ln1_g: String,
+    ln1_b: String,
+    ln2_g: String,
+    ln2_b: String,
+    q: LinearNames,
+    k: LinearNames,
+    v: LinearNames,
+    o: LinearNames,
+    fc1: LinearNames,
+    fc2: LinearNames,
+}
+
+impl LayerNames {
+    fn new(layer: usize) -> LayerNames {
+        let p = format!("layers.{layer}");
+        LayerNames {
+            ln1_g: format!("{p}.ln1.g"),
+            ln1_b: format!("{p}.ln1.b"),
+            ln2_g: format!("{p}.ln2.g"),
+            ln2_b: format!("{p}.ln2.b"),
+            q: LinearNames::new(&p, "q"),
+            k: LinearNames::new(&p, "k"),
+            v: LinearNames::new(&p, "v"),
+            o: LinearNames::new(&p, "o"),
+            fc1: LinearNames::new(&p, "fc1"),
+            fc2: LinearNames::new(&p, "fc2"),
+        }
+    }
+}
+
+/// Optional per-linear activation taps for [`Model::forward_with`]: maps
+/// linear weight name → the (zero-padded) input activations that reached
+/// that linear. Calibration and the μ-MoE overlap analysis consume this.
+pub type ActivationTaps = HashMap<String, Mat>;
 
 /// A loaded host model: config + named weight matrices/vectors.
 pub struct Model {
     pub cfg: ModelConfig,
     mats: HashMap<String, Mat>,
     vecs: HashMap<String, Vec<f32>>,
+    layer_names: Vec<LayerNames>,
 }
 
 impl Model {
+    fn assemble(
+        cfg: ModelConfig,
+        mats: HashMap<String, Mat>,
+        vecs: HashMap<String, Vec<f32>>,
+    ) -> Model {
+        let layer_names = (0..cfg.n_layers).map(LayerNames::new).collect();
+        Model {
+            cfg,
+            mats,
+            vecs,
+            layer_names,
+        }
+    }
+
     pub fn from_checkpoint(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<Model, Error> {
         ckpt.validate_for(cfg)?;
         let mut mats = HashMap::new();
@@ -48,11 +127,7 @@ impl Model {
                 vecs.insert(name.clone(), t.data.clone());
             }
         }
-        Ok(Model {
-            cfg: cfg.clone(),
-            mats,
-            vecs,
-        })
+        Ok(Model::assemble(cfg.clone(), mats, vecs))
     }
 
     pub fn mat(&self, name: &str) -> &Mat {
@@ -69,71 +144,138 @@ impl Model {
         self.mats.insert(name.to_string(), m);
     }
 
-    fn linear(&self, x: &Mat, name: &str, mode: PruneMode) -> Mat {
-        let w = &self.mats[&format!("{name}.w")];
-        let b = &self.vecs[&format!("{name}.b")];
+    fn linear(&self, x: &Mat, names: &LinearNames, mode: PruneMode) -> Mat {
+        self.linear_with_t(x, None, names, mode)
+    }
+
+    /// One linear under `mode`. `xt` may carry `x` already transposed so
+    /// callers feeding several linears from the same activations (q/k/v)
+    /// pay for one transpose instead of three on the sparse path.
+    fn linear_with_t(
+        &self,
+        x: &Mat,
+        xt: Option<&Mat>,
+        names: &LinearNames,
+        mode: PruneMode,
+    ) -> Mat {
+        let w = &self.mats[&names.w];
+        let b = &self.vecs[&names.b];
         let mut y = match mode {
             PruneMode::Dense => x.matmul_nt(w),
             PruneMode::OnlineWanda { rho } => {
-                // score against *this prompt's* activations, prune, apply —
-                // the host mirror of the L1 fused kernel
+                // score against *this prompt's* activations, prune, and run
+                // the compressed layout — the host mirror of the L1 fused
+                // kernel. No dense zeroed copy of w is ever built.
                 let mask = wanda::online_wanda_mask(w, x, rho);
-                x.matmul_nt(&mask.apply(w))
+                let rs = mask.compress(w);
+                match xt {
+                    Some(xt) => crate::tensor::matmul_tn_sparse(xt, &rs),
+                    None => x.matmul_nt_sparse(&rs),
+                }
             }
         };
         y.add_row_vec(b);
         y
     }
 
-    /// Forward one sequence (no batching host-side): returns per-position
-    /// logits (T, V). `tokens` may include PAD; `valid_len` marks the
-    /// boundary of real tokens.
-    pub fn forward(&self, tokens: &[i32], valid_len: usize, mode: PruneMode) -> Mat {
-        let cfg = &self.cfg;
-        let t = tokens.len();
-        assert!(t <= cfg.max_seq_len, "sequence too long");
-        assert!(valid_len <= t);
-        let d = cfg.d_model;
+    /// Token + position embedding for a padded sequence.
+    fn embed(&self, tokens: &[i32]) -> Mat {
+        let d = self.cfg.d_model;
         let tok_emb = &self.mats["tok_emb"];
         let pos_emb = &self.mats["pos_emb"];
-
-        let mut h = Mat::zeros(t, d);
+        let mut h = Mat::zeros(tokens.len(), d);
         for (i, &tok) in tokens.iter().enumerate() {
-            let row = tok_emb.row(tok.clamp(0, cfg.vocab_size as i32 - 1) as usize);
+            let row = tok_emb.row(tok.clamp(0, self.cfg.vocab_size as i32 - 1) as usize);
             for j in 0..d {
                 h.data[i * d + j] = row[j] + pos_emb.at(i, j);
             }
         }
+        h
+    }
 
-        for l in 0..cfg.n_layers {
-            let p = format!("layers.{l}");
-            let y = layernorm_rows(
-                &h,
-                &self.vecs[&format!("{p}.ln1.g")],
-                &self.vecs[&format!("{p}.ln1.b")],
-                1e-5,
-            );
-            let q = self.linear(&y, &format!("{p}.q"), mode);
-            let k = self.linear(&y, &format!("{p}.k"), mode);
-            let v = self.linear(&y, &format!("{p}.v"), mode);
+    /// The single instrumented traversal every consumer shares.
+    ///
+    /// Runs one sequence through the model under `mode` and returns
+    /// per-position logits (T, V). When `taps` is provided, the input
+    /// activations of every prunable linear are recorded under the
+    /// linear's weight name, zero-padded past `valid_len` — exactly what
+    /// calibration and micro-expert selection need. Instrumentation costs
+    /// nothing when `taps` is `None`.
+    pub fn forward_with(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+        mode: PruneMode,
+        mut taps: Option<&mut ActivationTaps>,
+    ) -> Mat {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        assert!(t <= cfg.max_seq_len, "sequence too long");
+        assert!(valid_len <= t);
+        let mut h = self.embed(tokens);
+
+        let record = |taps: &mut ActivationTaps, key: &str, x: &Mat| {
+            let mut padded = x.clone();
+            for i in valid_len..t {
+                padded.row_mut(i).fill(0.0);
+            }
+            taps.insert(key.to_string(), padded);
+        };
+
+        for names in &self.layer_names {
+            let y = layernorm_rows(&h, &self.vecs[&names.ln1_g], &self.vecs[&names.ln1_b], 1e-5);
+            if let Some(taps) = taps.as_deref_mut() {
+                for lin in [&names.q, &names.k, &names.v] {
+                    record(taps, &lin.w, &y);
+                }
+            }
+            // q/k/v consume the same activations: on the sparse path,
+            // transpose y once and share it across the three linears
+            let yt = match mode {
+                PruneMode::OnlineWanda { .. } => Some(y.t()),
+                PruneMode::Dense => None,
+            };
+            let q = self.linear_with_t(&y, yt.as_ref(), &names.q, mode);
+            let k = self.linear_with_t(&y, yt.as_ref(), &names.k, mode);
+            let v = self.linear_with_t(&y, yt.as_ref(), &names.v, mode);
             let attn = self.attention(&q, &k, &v, valid_len);
-            let o = self.linear(&attn, &format!("{p}.o"), mode);
+            if let Some(taps) = taps.as_deref_mut() {
+                record(taps, &names.o.w, &attn);
+            }
+            let o = self.linear(&attn, &names.o, mode);
             h.add_assign(&o);
 
-            let y = layernorm_rows(
-                &h,
-                &self.vecs[&format!("{p}.ln2.g")],
-                &self.vecs[&format!("{p}.ln2.b")],
-                1e-5,
-            );
-            let mut z = self.linear(&y, &format!("{p}.fc1"), mode);
+            let y = layernorm_rows(&h, &self.vecs[&names.ln2_g], &self.vecs[&names.ln2_b], 1e-5);
+            if let Some(taps) = taps.as_deref_mut() {
+                record(taps, &names.fc1.w, &y);
+            }
+            let mut z = self.linear(&y, &names.fc1, mode);
             relu(&mut z);
-            let out = self.linear(&z, &format!("{p}.fc2"), mode);
+            if let Some(taps) = taps.as_deref_mut() {
+                record(taps, &names.fc2.w, &z);
+            }
+            let out = self.linear(&z, &names.fc2, mode);
             h.add_assign(&out);
         }
 
         let hidden = layernorm_rows(&h, &self.vecs["ln_f.g"], &self.vecs["ln_f.b"], 1e-5);
-        hidden.matmul_nt(tok_emb) // tied head -> (T, V)
+        // tied head -> (T, V); the largest matmul of the pass, worth the pool
+        hidden.matmul_nt_auto(&self.mats["tok_emb"])
+    }
+
+    /// Forward one sequence (no batching host-side): returns per-position
+    /// logits (T, V). `tokens` may include PAD; `valid_len` marks the
+    /// boundary of real tokens.
+    pub fn forward(&self, tokens: &[i32], valid_len: usize, mode: PruneMode) -> Mat {
+        self.forward_with(tokens, valid_len, mode, None)
+    }
+
+    /// Collect per-linear input activations on a prompt (dense forward) —
+    /// feeds host-side calibration and the μ-MoE overlap analysis.
+    pub fn collect_activations(&self, tokens: &[i32], valid_len: usize) -> ActivationTaps {
+        let mut taps = ActivationTaps::new();
+        self.forward_with(tokens, valid_len, PruneMode::Dense, Some(&mut taps));
+        taps
     }
 
     fn attention(&self, q: &Mat, k: &Mat, v: &Mat, valid_len: usize) -> Mat {
@@ -229,12 +371,12 @@ impl Model {
         rho: f64,
     ) -> Result<(), Error> {
         for name in self.cfg.linear_names() {
-            let calib = calibs.get(&name).ok_or_else(|| {
-                Error::invariant(format!("missing calibrator for {name}"))
-            })?;
-            let w = &self.mats[&name];
-            let pruned = wanda::wanda_mask(w, calib, rho).apply(w);
-            self.mats.insert(name, pruned);
+            let calib = calibs
+                .get(&name)
+                .ok_or_else(|| Error::invariant(format!("missing calibrator for {name}")))?;
+            let w = self.mats.get_mut(&name).expect("linear weight present");
+            let mask = wanda::wanda_mask(w, calib, rho);
+            mask.apply_in_place(w);
         }
         Ok(())
     }
@@ -242,78 +384,10 @@ impl Model {
     /// Apply magnitude pruning in place.
     pub fn apply_magnitude(&mut self, rho: f64) {
         for name in self.cfg.linear_names() {
-            let w = &self.mats[&name];
-            let pruned = crate::pruning::magnitude::magnitude_prune(w, rho);
-            self.mats.insert(name, pruned);
+            let w = self.mats.get_mut(&name).expect("linear weight present");
+            let mask = crate::pruning::magnitude::magnitude_mask(w, rho);
+            mask.apply_in_place(w);
         }
-    }
-
-    /// Collect per-linear input activations on a prompt (dense forward) —
-    /// feeds host-side calibration and the μ-MoE overlap analysis.
-    pub fn collect_activations(
-        &self,
-        tokens: &[i32],
-        valid_len: usize,
-    ) -> HashMap<String, Mat> {
-        let cfg = &self.cfg;
-        let t = tokens.len();
-        let d = cfg.d_model;
-        let mut acts = HashMap::new();
-        let tok_emb = &self.mats["tok_emb"];
-        let pos_emb = &self.mats["pos_emb"];
-        let mut h = Mat::zeros(t, d);
-        for (i, &tok) in tokens.iter().enumerate() {
-            let row = tok_emb.row(tok.clamp(0, cfg.vocab_size as i32 - 1) as usize);
-            for j in 0..d {
-                h.data[i * d + j] = row[j] + pos_emb.at(i, j);
-            }
-        }
-        let zero_pad = |m: &mut Mat| {
-            for i in valid_len..t {
-                m.row_mut(i).fill(0.0);
-            }
-        };
-        for l in 0..cfg.n_layers {
-            let p = format!("layers.{l}");
-            let y = layernorm_rows(
-                &h,
-                &self.vecs[&format!("{p}.ln1.g")],
-                &self.vecs[&format!("{p}.ln1.b")],
-                1e-5,
-            );
-            let mut yc = y.clone();
-            zero_pad(&mut yc);
-            for lin in ["q", "k", "v"] {
-                acts.insert(format!("{p}.{lin}.w"), yc.clone());
-            }
-            let q = self.linear(&y, &format!("{p}.q"), PruneMode::Dense);
-            let k = self.linear(&y, &format!("{p}.k"), PruneMode::Dense);
-            let v = self.linear(&y, &format!("{p}.v"), PruneMode::Dense);
-            let attn = self.attention(&q, &k, &v, valid_len);
-            let mut ac = attn.clone();
-            zero_pad(&mut ac);
-            acts.insert(format!("{p}.o.w"), ac);
-            let o = self.linear(&attn, &format!("{p}.o"), PruneMode::Dense);
-            h.add_assign(&o);
-
-            let y = layernorm_rows(
-                &h,
-                &self.vecs[&format!("{p}.ln2.g")],
-                &self.vecs[&format!("{p}.ln2.b")],
-                1e-5,
-            );
-            let mut yc = y.clone();
-            zero_pad(&mut yc);
-            acts.insert(format!("{p}.fc1.w"), yc);
-            let mut z = self.linear(&y, &format!("{p}.fc1"), PruneMode::Dense);
-            relu(&mut z);
-            let mut zc = z.clone();
-            zero_pad(&mut zc);
-            acts.insert(format!("{p}.fc2.w"), zc);
-            let out = self.linear(&z, &format!("{p}.fc2"), PruneMode::Dense);
-            h.add_assign(&out);
-        }
-        acts
     }
 }
 
@@ -348,11 +422,7 @@ pub fn random_model(cfg: &ModelConfig, seed: u64) -> Model {
             vecs.insert(name.clone(), vec![0.0; bias_dim(cfg, &name)]);
         }
     }
-    Model {
-        cfg: cfg.clone(),
-        mats,
-        vecs,
-    }
+    Model::assemble(cfg.clone(), mats, vecs)
 }
 
 fn ln_dim(cfg: &ModelConfig, _name: &str) -> usize {
@@ -426,6 +496,25 @@ mod tests {
     }
 
     #[test]
+    fn online_sparse_path_matches_masked_dense_reference() {
+        // the sparse execution engine must be numerically identical to the
+        // old dense-masked formulation, layer by layer
+        use crate::pruning::wanda::online_wanda_mask;
+        let m = random_model(&tiny(), 8);
+        let toks: Vec<i32> = vec![3, 1, 4, 1, 5, 9];
+        let acts = m.collect_activations(&toks, 6);
+        for (name, w) in m.prunable() {
+            let x = &acts[&name];
+            let mask = online_wanda_mask(w, x, 0.5);
+            let dense_ref = x.matmul_nt(&mask.apply(w));
+            let sparse = x.matmul_nt_sparse(&mask.compress(w));
+            for (a, b) in sparse.data.iter().zip(&dense_ref.data) {
+                assert!((a - b).abs() < 1e-5, "{name}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn nll_counts_valid_predictions() {
         let m = random_model(&tiny(), 5);
         let toks: Vec<i32> = vec![1, 2, 3, 4, PAD_ID, PAD_ID];
@@ -456,5 +545,21 @@ mod tests {
         }
         // activation width matches the linear's input dim
         assert_eq!(acts["layers.0.fc2.w"].cols, m.cfg.d_inner());
+    }
+
+    #[test]
+    fn instrumented_forward_matches_plain_forward() {
+        // taps must be observation-only: same logits with and without
+        let m = random_model(&tiny(), 9);
+        let toks: Vec<i32> = vec![1, 2, 3, 4, 5, PAD_ID];
+        let plain = m.forward(&toks, 5, PruneMode::Dense);
+        let mut taps = ActivationTaps::new();
+        let tapped = m.forward_with(&toks, 5, PruneMode::Dense, Some(&mut taps));
+        assert_eq!(plain.data, tapped.data);
+        assert_eq!(taps.len(), m.cfg.linear_names().len());
+        // taps are zero-padded past valid_len
+        for (name, x) in &taps {
+            assert!(x.row(5).iter().all(|&v| v == 0.0), "{name}");
+        }
     }
 }

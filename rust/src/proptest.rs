@@ -145,6 +145,130 @@ fn shrink_loop<T: Shrink + Debug, P: Fn(&T) -> PropResult>(
     (cur, msg)
 }
 
+/// Properties of the sparse execution engine: for arbitrary shapes,
+/// active ratios and (deliberately tie-heavy) score matrices, the
+/// compressed row-sparse kernel must be numerically indistinguishable
+/// from the masked-dense reference, and the bitset mask bookkeeping must
+/// be self-consistent. These are the contracts `nn::linear`'s OnlineWanda
+/// path relies on.
+#[cfg(test)]
+mod sparse_props {
+    use super::{check, ensure, PropResult};
+    use crate::pruning::{kc_for, mask_from_scores, selection::Selector};
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg32;
+    use crate::util::threadpool::ThreadPool;
+
+    /// Derive a full test case from a (seed, rho) pair. Odd seeds build
+    /// tie-heavy scores (values quantized to {0, 0.5, 1.0}) so threshold
+    /// ties — the classic off-by-one breeding ground — are exercised hard.
+    fn case(seed: u64, rho: f64) -> (Mat, Mat, Mat, f64) {
+        let mut rng = Pcg32::new(seed, 17);
+        let d_out = 1 + rng.gen_range_usize(24);
+        let d_in = 1 + rng.gen_range_usize(80);
+        let t = 1 + rng.gen_range_usize(12);
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
+        let scores = if seed % 2 == 0 {
+            Mat::from_vec(d_out, d_in, w.data.iter().map(|v| v.abs()).collect())
+        } else {
+            Mat::from_fn(d_out, d_in, |_, _| {
+                (rng.gen_range(3) as f32) * 0.5
+            })
+        };
+        let rho = rho.clamp(0.0, 1.0);
+        (w, x, scores, rho)
+    }
+
+    fn prop_sparse_equals_masked_dense(input: &(u64, f64)) -> PropResult {
+        let (w, x, scores, rho) = case(input.0, input.1);
+        let mask = mask_from_scores(&scores, rho, Selector::KthValue);
+        let dense = x.matmul_nt(&mask.apply(&w));
+        let sparse = x.matmul_nt_sparse(&mask.compress(&w));
+        ensure(
+            (dense.rows, dense.cols) == (sparse.rows, sparse.cols),
+            "shape mismatch",
+        )?;
+        for (i, (a, b)) in sparse.data.iter().zip(&dense.data).enumerate() {
+            ensure(
+                (a - b).abs() < 1e-5,
+                format!("elt {i}: sparse {a} vs dense {b} (rho={rho})"),
+            )?;
+        }
+        Ok(())
+    }
+
+    fn prop_mask_bookkeeping(input: &(u64, f64)) -> PropResult {
+        let (w, _x, scores, rho) = case(input.0, input.1);
+        let mask = mask_from_scores(&scores, rho, Selector::KthValue);
+        let rs = mask.compress(&w);
+        let counts = mask.row_active_counts();
+        ensure(
+            counts.iter().sum::<usize>() == mask.active_count(),
+            "row counts disagree with popcount",
+        )?;
+        ensure(
+            rs.nnz() == mask.active_count(),
+            format!("compress nnz {} != mask count {}", rs.nnz(), mask.active_count()),
+        )?;
+        ensure(
+            rs.row_nnz_counts() == counts,
+            "compress row counts disagree with mask",
+        )?;
+        // ties at the threshold can only make a row keep *fewer* weights
+        // than the tie-free count d_in - kc, never more
+        let keep_max = scores.cols - kc_for(scores.cols, rho);
+        ensure(
+            counts.iter().all(|&c| c <= keep_max),
+            format!("a row keeps more than {keep_max} weights"),
+        )?;
+        // apply and apply_in_place agree exactly
+        let a = mask.apply(&w);
+        let mut b = w.clone();
+        mask.apply_in_place(&mut b);
+        ensure(a.data == b.data, "apply != apply_in_place")?;
+        // and the sparse layout expands back to the masked weights
+        ensure(rs.to_dense().data == a.data, "to_dense != apply")?;
+        Ok(())
+    }
+
+    fn prop_parallel_matmul_bit_identical(input: &(u64, f64)) -> PropResult {
+        let (w, x, _scores, _rho) = case(input.0, input.1);
+        let pool = ThreadPool::new(3);
+        let serial = x.matmul_nt(&w);
+        let par = x.matmul_nt_par(&w, &pool);
+        ensure(
+            serial.data == par.data,
+            "parallel matmul diverged from serial",
+        )
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        // bias toward the boundary rhos where tie handling matters most
+        let rho = match r.gen_range(5) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => r.next_f64(),
+        };
+        (r.next_u64(), rho)
+    }
+
+    #[test]
+    fn sparse_kernel_equivalent_to_masked_dense() {
+        check(101, 60, gen_seed_rho, prop_sparse_equals_masked_dense);
+    }
+
+    #[test]
+    fn mask_bookkeeping_consistent() {
+        check(102, 60, gen_seed_rho, prop_mask_bookkeeping);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        check(103, 25, gen_seed_rho, prop_parallel_matmul_bit_identical);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,7 +15,9 @@ pub fn magnitude_mask(w: &Mat, rho: f64) -> Mask {
     mask_from_scores(&scores, rho, Selector::KthValue)
 }
 
-/// Convenience: return the pruned weight copy directly.
+/// Convenience: return the pruned weight copy directly. Reference form
+/// only — hot paths use `magnitude_mask` + `Mask::apply_in_place` (or
+/// `Mask::compress`) to avoid the dense copy this allocates.
 pub fn magnitude_prune(w: &Mat, rho: f64) -> Mat {
     magnitude_mask(w, rho).apply(w)
 }
@@ -30,7 +32,7 @@ mod tests {
     fn keeps_largest_by_row() {
         let w = Mat::from_vec(2, 4, vec![1.0, -5.0, 0.1, 3.0, -2.0, 0.5, 4.0, -0.2]);
         let m = magnitude_mask(&w, 0.5);
-        assert_eq!(m.bits, vec![0, 1, 0, 1, 1, 0, 1, 0]);
+        assert_eq!(m.dense_bits(), vec![0, 1, 0, 1, 1, 0, 1, 0]);
     }
 
     #[test]

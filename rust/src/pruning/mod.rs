@@ -14,13 +14,19 @@
 //!
 //! All produce per-output-row semi-structured sparsity: exactly
 //! `k_c = ⌊(1−ρ)·d_in⌋` zeros per row.
+//!
+//! Execution pipeline: a [`Mask`] (one bit per micro-expert) is either
+//! applied destructively to dense weights ([`Mask::apply_in_place`], the
+//! offline path) or compressed to a [`crate::tensor::RowSparse`] layout
+//! ([`Mask::compress`]) that the sparse matmul kernels consume directly —
+//! the online μ-MoE path never materializes a zeroed dense copy.
 
 pub mod magnitude;
 pub mod selection;
 pub mod sparsegpt;
 pub mod wanda;
 
-use crate::tensor::Mat;
+use crate::tensor::{Mat, RowSparse};
 
 /// Number of *inactive* weights per row for active ratio `rho`, clipped so
 /// at least one weight per row survives (mirrors python `pruning.kc_for`).
@@ -30,73 +36,206 @@ pub fn kc_for(d_in: usize, rho: f64) -> usize {
 }
 
 /// A binary micro-expert activation mask with the same shape as a weight.
-#[derive(Clone, Debug)]
+///
+/// Bitset-backed: one bit per weight, rows padded to whole 64-bit words so
+/// per-row operations (popcount, AND/OR for Jaccard) run word-at-a-time.
+/// mu-opt-small's fc1 mask is 1024x256 = 32 KiB of words instead of the
+/// 256 KiB the old byte-per-weight layout used.
+///
+/// Invariant: padding bits past `cols` in each row's last word are zero —
+/// all constructors and [`Mask::set`] maintain this, which is what lets
+/// the popcount-based queries skip per-bit bounds checks.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Mask {
     pub rows: usize,
     pub cols: usize,
-    /// 1 = micro-expert active, 0 = pruned. Stored as u8 to keep large
-    /// masks cheap (the mask for mu-opt-small's fc1 is 1024x256).
-    pub bits: Vec<u8>,
+    words_per_row: usize,
+    words: Vec<u64>,
 }
 
 impl Mask {
-    pub fn ones(rows: usize, cols: usize) -> Mask {
-        Mask {
-            rows,
-            cols,
-            bits: vec![1; rows * cols],
+    fn words_per_row_for(cols: usize) -> usize {
+        cols.max(1).div_ceil(64)
+    }
+
+    /// Value of a row's word `jw` when every in-bounds bit is set.
+    fn full_word(&self, jw: usize) -> u64 {
+        let base = jw * 64;
+        let width = (self.cols - base).min(64);
+        if width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
         }
     }
 
-    #[inline]
-    pub fn at(&self, i: usize, j: usize) -> bool {
-        self.bits[i * self.cols + j] != 0
+    pub fn zeros(rows: usize, cols: usize) -> Mask {
+        let wpr = Self::words_per_row_for(cols);
+        Mask {
+            rows,
+            cols,
+            words_per_row: wpr,
+            words: vec![0; rows * wpr],
+        }
     }
 
-    pub fn active_count(&self) -> usize {
-        self.bits.iter().filter(|b| **b != 0).count()
+    pub fn ones(rows: usize, cols: usize) -> Mask {
+        let mut m = Mask::zeros(rows, cols);
+        for i in 0..rows {
+            for jw in 0..m.words_per_row {
+                let full = m.full_word(jw);
+                m.words[i * m.words_per_row + jw] = full;
+            }
+        }
+        m
     }
 
-    pub fn active_fraction(&self) -> f64 {
-        self.active_count() as f64 / self.bits.len() as f64
+    /// Build from a dense byte mask (1 = active) — the interchange form
+    /// shared with the python fixtures.
+    pub fn from_bits(rows: usize, cols: usize, bits: &[u8]) -> Mask {
+        assert_eq!(bits.len(), rows * cols, "mask shape/data mismatch");
+        let mut m = Mask::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                if bits[i * cols + j] != 0 {
+                    m.set(i, j, true);
+                }
+            }
+        }
+        m
     }
 
-    pub fn row_active_counts(&self) -> Vec<usize> {
-        (0..self.rows)
-            .map(|i| {
-                self.bits[i * self.cols..(i + 1) * self.cols]
-                    .iter()
-                    .filter(|b| **b != 0)
-                    .count()
-            })
-            .collect()
-    }
-
-    /// Apply to a weight matrix (returns the pruned copy).
-    pub fn apply(&self, w: &Mat) -> Mat {
-        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
-        let mut out = w.clone();
-        for (x, &b) in out.data.iter_mut().zip(&self.bits) {
-            if b == 0 {
-                *x = 0.0;
+    /// Expand to the dense byte form (1 = active).
+    pub fn dense_bits(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.at(i, j) {
+                    out[i * self.cols + j] = 1;
+                }
             }
         }
         out
     }
 
+    fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = self.words[i * self.words_per_row + j / 64];
+        w >> (j % 64) & 1 != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, active: bool) {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = &mut self.words[i * self.words_per_row + j / 64];
+        if active {
+            *w |= 1u64 << (j % 64);
+        } else {
+            *w &= !(1u64 << (j % 64));
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn active_fraction(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.active_count() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn row_active_counts(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                self.row_words(i)
+                    .iter()
+                    .map(|w| w.count_ones() as usize)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Apply to a weight matrix (returns the pruned copy). Prefer
+    /// [`Mask::apply_in_place`] or [`Mask::compress`] on hot paths.
+    pub fn apply(&self, w: &Mat) -> Mat {
+        let mut out = w.clone();
+        self.apply_in_place(&mut out);
+        out
+    }
+
+    /// Zero the pruned weights of `w` in place — no allocation.
+    pub fn apply_in_place(&self, w: &mut Mat) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        for i in 0..self.rows {
+            let row = w.row_mut(i);
+            for (jw, &word) in self.row_words(i).iter().enumerate() {
+                if word == self.full_word(jw) {
+                    continue; // fully-active word: nothing to zero
+                }
+                let base = jw * 64;
+                let end = (base + 64).min(self.cols);
+                for (b, x) in row[base..end].iter_mut().enumerate() {
+                    if word >> b & 1 == 0 {
+                        *x = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Compress the active weights of `w` into the row-sparse layout the
+    /// sparse matmul kernels execute — the mask → layout → kernel handoff.
+    pub fn compress(&self, w: &Mat) -> RowSparse {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        assert!(self.cols <= u32::MAX as usize, "cols overflow u32 index");
+        let nnz = self.active_count();
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        row_ptr.push(0);
+        for i in 0..self.rows {
+            let w_row = w.row(i);
+            for (jw, &word) in self.row_words(i).iter().enumerate() {
+                let base = jw * 64;
+                let mut rest = word;
+                while rest != 0 {
+                    let j = base + rest.trailing_zeros() as usize;
+                    col_idx.push(j as u32);
+                    values.push(w_row[j]);
+                    rest &= rest - 1;
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        RowSparse {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
     /// Jaccard overlap of active sets — used by `moe::overlap` to show how
     /// prompt-dependent the micro-expert selection is.
     pub fn jaccard(&self, other: &Mask) -> f64 {
-        assert_eq!(self.bits.len(), other.bits.len());
-        let mut inter = 0usize;
-        let mut union = 0usize;
-        for (&a, &b) in self.bits.iter().zip(&other.bits) {
-            if a != 0 || b != 0 {
-                union += 1;
-                if a != 0 && b != 0 {
-                    inter += 1;
-                }
-            }
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "jaccard shape mismatch"
+        );
+        let mut inter = 0u64;
+        let mut union = 0u64;
+        for (&a, &b) in self.words.iter().zip(&other.words) {
+            inter += (a & b).count_ones() as u64;
+            union += (a | b).count_ones() as u64;
         }
         if union == 0 {
             1.0
@@ -111,26 +250,21 @@ impl Mask {
 /// used by the L1 kernel (`kernels/ref.py::row_kth_threshold`).
 pub fn mask_from_scores(scores: &Mat, rho: f64, sel: selection::Selector) -> Mask {
     let kc = kc_for(scores.cols, rho);
-    let mut bits = vec![0u8; scores.rows * scores.cols];
+    if kc == 0 {
+        return Mask::ones(scores.rows, scores.cols);
+    }
+    let mut mask = Mask::zeros(scores.rows, scores.cols);
     let mut scratch = vec![0.0f32; scores.cols];
     for i in 0..scores.rows {
         let row = scores.row(i);
-        if kc == 0 {
-            bits[i * scores.cols..(i + 1) * scores.cols].fill(1);
-            continue;
-        }
         let thr = sel.kth_smallest(row, kc, &mut scratch);
         for (j, &s) in row.iter().enumerate() {
             if s > thr {
-                bits[i * scores.cols + j] = 1;
+                mask.set(i, j, true);
             }
         }
     }
-    Mask {
-        rows: scores.rows,
-        cols: scores.cols,
-        bits,
-    }
+    mask
 }
 
 #[cfg(test)]
@@ -170,18 +304,83 @@ mod tests {
         let a = Mask::ones(2, 4);
         let mut b = Mask::ones(2, 4);
         assert_eq!(a.jaccard(&b), 1.0);
-        b.bits.fill(0);
+        b = Mask::zeros(2, 4);
         assert_eq!(a.jaccard(&b), 0.0);
     }
 
     #[test]
     fn apply_zeroes_pruned() {
         let w = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
-        let mask = Mask {
-            rows: 1,
-            cols: 4,
-            bits: vec![1, 0, 1, 0],
-        };
+        let mask = Mask::from_bits(1, 4, &[1, 0, 1, 0]);
         assert_eq!(mask.apply(&w).data, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn apply_in_place_matches_apply() {
+        let mut rng = Pcg32::new(3, 0);
+        let w = Mat::from_vec(6, 70, rng.normal_vec(6 * 70)); // spans word tail
+        let s = Mat::from_vec(6, 70, rng.normal_vec(6 * 70));
+        let mask = mask_from_scores(&s, 0.4, selection::Selector::KthValue);
+        let a = mask.apply(&w);
+        let mut b = w.clone();
+        mask.apply_in_place(&mut b);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn bitset_roundtrip_and_counts() {
+        let mut rng = Pcg32::new(4, 0);
+        for cols in [1usize, 63, 64, 65, 130] {
+            let bits: Vec<u8> = (0..3 * cols).map(|_| (rng.next_u32() & 1) as u8).collect();
+            let m = Mask::from_bits(3, cols, &bits);
+            assert_eq!(m.dense_bits(), bits, "cols={cols}");
+            let want: usize = bits.iter().map(|&b| b as usize).sum();
+            assert_eq!(m.active_count(), want, "cols={cols}");
+            assert_eq!(
+                m.row_active_counts().iter().sum::<usize>(),
+                want,
+                "cols={cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn set_and_at_agree_across_word_boundaries() {
+        let mut m = Mask::zeros(2, 100);
+        m.set(0, 0, true);
+        m.set(0, 63, true);
+        m.set(0, 64, true);
+        m.set(1, 99, true);
+        assert!(m.at(0, 0) && m.at(0, 63) && m.at(0, 64) && m.at(1, 99));
+        assert!(!m.at(0, 1) && !m.at(1, 0));
+        m.set(0, 63, false);
+        assert!(!m.at(0, 63));
+        assert_eq!(m.active_count(), 3);
+    }
+
+    #[test]
+    fn compress_preserves_active_weights_in_order() {
+        let w = Mat::from_vec(2, 5, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        let mask = Mask::from_bits(2, 5, &[1, 0, 0, 1, 1, 0, 1, 0, 1, 0]);
+        let rs = mask.compress(&w);
+        assert_eq!(rs.row_ptr, vec![0, 3, 5]);
+        assert_eq!(rs.col_idx, vec![0, 3, 4, 1, 3]);
+        assert_eq!(rs.values, vec![1.0, 4.0, 5.0, 7.0, 9.0]);
+        // explicit zeros that are *active* must survive compression
+        let w2 = Mat::from_vec(1, 2, vec![0.0, 3.0]);
+        let m2 = Mask::from_bits(1, 2, &[1, 0]);
+        let rs2 = m2.compress(&w2);
+        assert_eq!(rs2.values, vec![0.0]);
+        assert_eq!(rs2.nnz(), 1);
+    }
+
+    #[test]
+    fn ones_padding_bits_are_clear() {
+        // active_count over a ones mask must equal rows*cols even when
+        // cols is not a multiple of 64 (padding must stay zero)
+        for cols in [1usize, 5, 64, 65, 127, 128] {
+            let m = Mask::ones(3, cols);
+            assert_eq!(m.active_count(), 3 * cols, "cols={cols}");
+        }
     }
 }

@@ -86,7 +86,7 @@ mod tests {
         let w = Mat::from_vec(1, 2, vec![0.5, 1.0]);
         let x = Mat::from_vec(4, 2, vec![10.0, 0.01, 10.0, 0.01, 10.0, 0.0, 10.0, 0.0]);
         let m = online_wanda_mask(&w, &x, 0.5);
-        assert_eq!(m.bits, vec![1, 0]);
+        assert_eq!(m.dense_bits(), vec![1, 0]);
     }
 
     #[test]
@@ -96,7 +96,7 @@ mod tests {
         let ones = Mat::from_vec(1, 24, vec![1.0; 24]);
         let m_wanda = online_wanda_mask(&w, &ones, 0.5);
         let m_mag = super::super::magnitude::magnitude_mask(&w, 0.5);
-        assert_eq!(m_wanda.bits, m_mag.bits);
+        assert_eq!(m_wanda, m_mag);
     }
 
     #[test]

@@ -7,8 +7,17 @@
 //! the stack actually uses, each carefully tested.
 
 mod linalg;
+mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
+pub use sparse::{matmul_tn_sparse, RowSparse};
+
+use crate::util::threadpool::{self, ThreadPool};
+
+/// Work threshold (in multiply-adds) above which `matmul_nt_auto` fans out
+/// to the shared threadpool. Below it, threadpool hand-off costs more than
+/// the matmul itself.
+const PAR_MIN_MACS: usize = 1 << 21;
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,7 +77,14 @@ impl Mat {
 
     /// Transpose (copy).
     pub fn t(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                out.data[j * self.rows + i] = v;
+            }
+        }
+        out
     }
 
     /// `self @ other` — blocked i-k-j loop (cache-friendly row-major form).
@@ -93,22 +109,52 @@ impl Mat {
     }
 
     /// `self @ other^T` — the natural layout for `x @ W^T` linears.
+    /// Blocked over output columns so each activation row is reused across
+    /// four weight rows per pass.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let (m, n) = (self.rows, other.rows);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            for j in 0..n {
-                let b_row = other.row(j);
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += a_row[kk] * b_row[kk];
-                }
-                out.data[i * n + j] = acc;
-            }
+        matmul_nt_rows(self, other, 0, m, &mut out.data);
+        out
+    }
+
+    /// `self @ other^T` with output rows partitioned across the pool's
+    /// workers. Bit-identical to [`Mat::matmul_nt`]: every output element
+    /// is accumulated by exactly one worker in the same k-order.
+    pub fn matmul_nt_par(&self, other: &Mat, pool: &ThreadPool) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        if pool.size() <= 1 || m <= 1 {
+            return self.matmul_nt(other);
+        }
+        // ~2 chunks per worker for load balance without oversplitting
+        let chunks = (pool.size() * 2).min(m);
+        let step = m.div_ceil(chunks);
+        let ranges: Vec<(usize, usize)> = (0..m)
+            .step_by(step)
+            .map(|lo| (lo, (lo + step).min(m)))
+            .collect();
+        let parts = pool.scope_map(ranges.clone(), |(lo, hi)| {
+            let mut part = vec![0.0f32; (hi - lo) * n];
+            matmul_nt_rows(self, other, lo, hi, &mut part);
+            part
+        });
+        let mut out = Mat::zeros(m, n);
+        for ((lo, hi), part) in ranges.into_iter().zip(parts) {
+            out.data[lo * n..hi * n].copy_from_slice(&part);
         }
         out
+    }
+
+    /// `self @ other^T`, choosing serial or pooled execution by work size.
+    pub fn matmul_nt_auto(&self, other: &Mat) -> Mat {
+        let macs = self.rows * self.cols * other.rows;
+        if macs >= PAR_MIN_MACS {
+            self.matmul_nt_par(other, threadpool::global())
+        } else {
+            self.matmul_nt(other)
+        }
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
@@ -212,6 +258,48 @@ impl Mat {
     }
 }
 
+/// Compute output rows `lo..hi` of `a @ b^T` into `out` (length
+/// `(hi - lo) * b.rows`). Four output columns share one pass over each
+/// activation row, and every `(i, j)` accumulator sums k in ascending
+/// order — the same order the naive kernel used, so results are
+/// bit-identical however the rows are partitioned.
+fn matmul_nt_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    for i in lo..hi {
+        let a_row = a.row(i);
+        let o_row = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b.row(j)[..k];
+            let b1 = &b.row(j + 1)[..k];
+            let b2 = &b.row(j + 2)[..k];
+            let b3 = &b.row(j + 3)[..k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (kk, &av) in a_row.iter().enumerate() {
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            o_row[j] = s0;
+            o_row[j + 1] = s1;
+            o_row[j + 2] = s2;
+            o_row[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let b_row = &b.row(j)[..k];
+            let mut acc = 0.0f32;
+            for (kk, &av) in a_row.iter().enumerate() {
+                acc += av * b_row[kk];
+            }
+            o_row[j] = acc;
+            j += 1;
+        }
+    }
+}
+
 /// Layer-norm over the last axis of a (rows, features) matrix.
 pub fn layernorm_rows(x: &Mat, g: &[f32], b: &[f32], eps: f32) -> Mat {
     assert_eq!(g.len(), x.cols);
@@ -266,6 +354,40 @@ mod tests {
         let mut rng = Pcg32::new(1, 0);
         let a = randmat(&mut rng, 5, 7);
         let b = randmat(&mut rng, 4, 7);
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.t());
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_par_bit_identical_to_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg32::new(8, 0);
+        for (m, k, n) in [(1, 5, 3), (7, 16, 9), (33, 24, 17)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let serial = a.matmul_nt(&b);
+            let par = a.matmul_nt_par(&b, &pool);
+            assert_eq!(serial.data, par.data, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_auto_matches_serial() {
+        let mut rng = Pcg32::new(9, 0);
+        let a = randmat(&mut rng, 40, 64);
+        let b = randmat(&mut rng, 50, 64);
+        assert_eq!(a.matmul_nt_auto(&b).data, a.matmul_nt(&b).data);
+    }
+
+    #[test]
+    fn matmul_nt_odd_tail_columns() {
+        // n not divisible by the 4-wide column block
+        let mut rng = Pcg32::new(10, 0);
+        let a = randmat(&mut rng, 3, 11);
+        let b = randmat(&mut rng, 6, 11);
         let got = a.matmul_nt(&b);
         let want = a.matmul(&b.t());
         for (x, y) in got.data.iter().zip(&want.data) {

@@ -1,0 +1,214 @@
+//! Row-sparse weight layout: the executable form of a μ-MoE micro-expert
+//! selection.
+//!
+//! [`crate::pruning::Mask`] decides *which* weights are active;
+//! `RowSparse` stores *only* those weights (CSR over the rows of a
+//! `(d_out, d_in)` linear) so the matmul skips pruned work instead of
+//! multiplying by zeros. This is the layer boundary the execution stack is
+//! organised around:
+//!
+//! ```text
+//! scores ──> Mask (bitset) ──> Mask::compress(&w) ──> RowSparse
+//!                                                        │
+//!                       x.matmul_nt_sparse(&rs)  <───────┘
+//! ```
+//!
+//! The kernel runs on a transposed copy of the activations so every active
+//! weight contributes a contiguous length-T AXPY — that keeps the
+//! per-active-MAC rate close to the dense kernel's (a gather formulation
+//! is 3-6x slower per MAC and would erase the sparsity win entirely).
+
+use super::Mat;
+
+/// CSR weight matrix: per output row, the surviving column indices
+/// (ascending) and their values. Shape is `(rows, cols) = (d_out, d_in)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowSparse {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `col_idx`/`values`.
+    pub row_ptr: Vec<usize>,
+    /// Active column indices, strictly ascending within each row.
+    pub col_idx: Vec<u32>,
+    /// Weight values, parallel to `col_idx`.
+    pub values: Vec<f32>,
+}
+
+impl RowSparse {
+    /// Compress a dense matrix by dropping exact zeros (offline-pruned
+    /// weights arrive in this form). For mask-driven compression use
+    /// [`crate::pruning::Mask::compress`], which preserves explicit zeros
+    /// that happen to be active.
+    pub fn from_dense(w: &Mat) -> RowSparse {
+        assert!(w.cols <= u32::MAX as usize, "cols overflow u32 index");
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for i in 0..w.rows {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        RowSparse {
+            rows: w.rows,
+            cols: w.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Number of stored (active) weights.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Active weights in one output row.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Per-row active counts (feeds the achieved-FLOPs accounting).
+    pub fn row_nnz_counts(&self) -> Vec<usize> {
+        (0..self.rows).map(|i| self.row_nnz(i)).collect()
+    }
+
+    /// Stored fraction of the dense size.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Expand back to a dense matrix (testing / interop).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                row[self.col_idx[p] as usize] = self.values[p];
+            }
+        }
+        out
+    }
+}
+
+impl Mat {
+    /// `self @ W^T` with a row-sparse `W` — the μ-MoE linear. Exactly the
+    /// masked-dense result (same per-element accumulation order, so the
+    /// outputs agree bit-for-bit with `matmul_nt(mask.apply(w))` for
+    /// finite inputs), at cost proportional to the active weights.
+    pub fn matmul_nt_sparse(&self, w: &RowSparse) -> Mat {
+        // Transposed activations: feature j is a contiguous length-m run,
+        // so each active weight contributes one vectorizable AXPY.
+        matmul_tn_sparse(&self.t(), w)
+    }
+}
+
+/// `xt^T @ W^T` with `xt` the *already transposed* (d_in, T) activations —
+/// callers that feed several linears from the same activation matrix
+/// (q/k/v in a transformer block) transpose once and reuse it.
+pub fn matmul_tn_sparse(xt: &Mat, w: &RowSparse) -> Mat {
+    assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
+    let (m, n) = (xt.cols, w.rows);
+    let mut out_t = Mat::zeros(n, m);
+    for j in 0..n {
+        let acc = out_t.row_mut(j);
+        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
+            let v = w.values[p];
+            let xr = xt.row(w.col_idx[p] as usize);
+            for (a, &x) in acc.iter_mut().zip(xr) {
+                *a += v * x;
+            }
+        }
+    }
+    out_t.t()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randmat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let w = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let rs = RowSparse::from_dense(&w);
+        assert_eq!(rs.nnz(), 3);
+        assert_eq!(rs.row_nnz_counts(), vec![2, 1]);
+        assert_eq!(rs.col_idx, vec![0, 2, 2]);
+        assert_eq!(rs.to_dense(), w);
+    }
+
+    #[test]
+    fn sparse_matmul_matches_dense_on_sparse_weights() {
+        let mut rng = Pcg32::new(1, 0);
+        let x = randmat(&mut rng, 5, 16);
+        let mut w = randmat(&mut rng, 7, 16);
+        // zero out ~half the weights
+        for (i, v) in w.data.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        let want = x.matmul_nt(&w);
+        let got = x.matmul_nt_sparse(&RowSparse::from_dense(&w));
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_produce_zero_outputs() {
+        let mut rng = Pcg32::new(2, 0);
+        let x = randmat(&mut rng, 3, 8);
+        let w = Mat::zeros(4, 8);
+        let got = x.matmul_nt_sparse(&RowSparse::from_dense(&w));
+        assert!(got.data.iter().all(|&v| v == 0.0));
+        assert_eq!((got.rows, got.cols), (3, 4));
+    }
+
+    #[test]
+    fn density_and_counts() {
+        let w = Mat::from_vec(2, 4, vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0]);
+        let rs = RowSparse::from_dense(&w);
+        assert_eq!(rs.row_nnz(0), 1);
+        assert_eq!(rs.row_nnz(1), 3);
+        assert!((rs.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pretransposed_kernel_matches_untransposed() {
+        let mut rng = Pcg32::new(4, 0);
+        let x = randmat(&mut rng, 9, 20);
+        let w = randmat(&mut rng, 5, 20);
+        let rs = RowSparse::from_dense(&w);
+        let a = x.matmul_nt_sparse(&rs);
+        let b = matmul_tn_sparse(&x.t(), &rs);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn single_token_row() {
+        // T=1 (autoregressive decode shape) must work
+        let mut rng = Pcg32::new(3, 0);
+        let x = randmat(&mut rng, 1, 12);
+        let w = randmat(&mut rng, 6, 12);
+        let want = x.matmul_nt(&w);
+        let got = x.matmul_nt_sparse(&RowSparse::from_dense(&w));
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -52,12 +52,14 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<anyhow::Error> for Error {
     fn from(e: anyhow::Error) -> Self {
         Error::Xla(format!("{e:#}"))

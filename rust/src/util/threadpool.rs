@@ -8,8 +8,28 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Process-wide shared pool, sized to the machine on first use. The
+/// parallel tensor kernels draw from this so callers don't thread a pool
+/// handle through every matmul.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(ThreadPool::for_host)
+}
+
+thread_local! {
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True on threads that are themselves pool workers. Blocking fan-out
+/// from inside a worker can deadlock a saturated pool, so `scope_map`
+/// degrades to inline execution there.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -19,8 +39,13 @@ enum Msg {
 }
 
 /// A fixed pool of worker threads pulling jobs from a shared queue.
+///
+/// The submit side is mutex-wrapped so the pool is `Sync` (shareable by
+/// reference across threads and storable in the `global()` OnceLock) on
+/// every supported toolchain — `mpsc::Sender` itself only became `Sync`
+/// in Rust 1.72.
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    tx: Mutex<Sender<Msg>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
 }
@@ -39,7 +64,11 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx, workers, size }
+        Self {
+            tx: Mutex::new(tx),
+            workers,
+            size,
+        }
     }
 
     /// Pool sized to the machine (at least 1).
@@ -57,43 +86,98 @@ impl ThreadPool {
     /// Fire-and-forget.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
+            .lock()
+            .expect("poisoned submit lock")
             .send(Msg::Run(Box::new(job)))
             .expect("threadpool queue closed");
     }
 
     /// Run `f` over each item, returning results in input order. Panics in
     /// workers are converted to a panic here (fail loud, not silent loss).
+    /// `'static` captures trivially satisfy [`ThreadPool::scope_map`]'s
+    /// drain-before-return protocol, so this is just the owning special
+    /// case of it.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.scope_map(items, f)
+    }
+
+    /// Like [`ThreadPool::map`], but the closure and items may borrow from
+    /// the caller's stack (the primitive the parallel matmul kernels
+    /// need: workers read the input matrices in place, no copies).
+    ///
+    /// Unlike `map`, a panicking job does not abort the collection early:
+    /// every job is drained before the panic is re-raised, which is what
+    /// makes lending stack references to the workers sound.
+    pub fn scope_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Sync + 'env,
+    {
         let n = items.len();
-        let f = Arc::new(f);
-        let (rtx, rrx): (Sender<(usize, ResultSlot<R>)>, Receiver<_>) = channel();
+        if n == 0 {
+            return Vec::new();
+        }
+        if in_pool_worker() {
+            // A worker blocking on sub-jobs it queued behind itself can
+            // deadlock a saturated pool — run nested fan-out inline.
+            return items.into_iter().map(f).collect();
+        }
+        let f = &f;
+        let (rtx, rrx) = channel::<(usize, ResultSlot<R>)>();
         for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
             let rtx = rtx.clone();
-            self.execute(move || {
+            self.submit_scoped(Box::new(move || {
                 let out = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let slot = match out {
                     Ok(v) => ResultSlot::Ok(v),
                     Err(_) => ResultSlot::Panicked,
                 };
                 let _ = rtx.send((i, slot));
-            });
+            }));
         }
         drop(rtx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panicked = false;
         for _ in 0..n {
+            // Block until *every* job has reported; each job sends exactly
+            // one slot (after `f` returned or unwound), so no borrow handed
+            // to a worker can outlive this call.
             let (i, slot) = rrx.recv().expect("worker result channel closed");
             match slot {
                 ResultSlot::Ok(v) => slots[i] = Some(v),
-                ResultSlot::Panicked => panic!("threadpool job {i} panicked"),
+                ResultSlot::Panicked => panicked = true,
             }
         }
+        if panicked {
+            panic!("threadpool scope_map job panicked");
+        }
         slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Enqueue a job that may borrow non-`'static` data.
+    ///
+    /// SAFETY: the lifetime is erased here and re-established by the
+    /// caller's protocol: `scope_map` does not return (normally or by
+    /// unwinding) until every submitted job has sent its result slot, and
+    /// a job sends only after its closure has finished running. Workers
+    /// never drop the queue receiver while the pool is alive, and the pool
+    /// cannot be dropped while `&self` is borrowed, so a queued job is
+    /// always executed (never silently discarded with live borrows).
+    fn submit_scoped<'env>(&self, job: Box<dyn FnOnce() + Send + 'env>) {
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        self.tx
+            .lock()
+            .expect("poisoned submit lock")
+            .send(Msg::Run(job))
+            .expect("threadpool queue closed");
     }
 }
 
@@ -103,6 +187,7 @@ enum ResultSlot<R> {
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    IN_POOL_WORKER.with(|c| c.set(true));
     loop {
         let msg = {
             let guard = rx.lock().expect("poisoned queue lock");
@@ -120,8 +205,10 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        if let Ok(tx) = self.tx.lock() {
+            for _ in &self.workers {
+                let _ = tx.send(Msg::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -170,6 +257,44 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn scope_map_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<i64> = (0..64).collect();
+        let out = pool.scope_map((0..64usize).collect(), |i| data[i] * 2);
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "scope_map job panicked")]
+    fn scope_map_drains_then_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scope_map(vec![1, 2, 3], |x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        assert!(std::ptr::eq(global(), global()));
+        assert!(global().size() >= 1);
+    }
+
+    #[test]
+    fn nested_scope_map_runs_inline_without_deadlock() {
+        // every worker fans out again on the same pool; the nested calls
+        // must degrade to inline execution instead of deadlocking
+        let pool = ThreadPool::new(2);
+        let outer = pool.scope_map((0..8i64).collect(), |x| {
+            let inner = pool.scope_map((0..4i64).collect(), |y| y + 1);
+            x + inner.iter().sum::<i64>()
+        });
+        assert_eq!(outer, (0..8).map(|x| x + 10).collect::<Vec<i64>>());
     }
 
     #[test]

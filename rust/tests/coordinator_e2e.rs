@@ -1,6 +1,9 @@
 //! Integration: the full coordinator (router → batcher → serve loop →
 //! PJRT μ-MoE session) under concurrent client load, plus failure
-//! injection at the admission layer.
+//! injection at the admission layer. Needs the PJRT runtime, so it only
+//! exists under `--features pjrt`.
+
+#![cfg(feature = "pjrt")]
 
 use mumoe::config::ServeConfig;
 use mumoe::coordinator::{Metrics, Router, Server};

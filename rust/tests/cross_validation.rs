@@ -20,14 +20,14 @@ fn wanda_fixture_matches_python() {
     let mut calib = WandaCalibrator::new(2);
     calib.update_from_sq_sums(&[100.0, 0.01], 4);
     let mask = mumoe::pruning::wanda::wanda_mask(&w, &calib, 0.5);
-    assert_eq!(mask.bits, vec![1, 0]);
+    assert_eq!(mask.dense_bits(), vec![1, 0]);
 }
 
 #[test]
 fn magnitude_fixture_matches_python() {
     let w = Mat::from_vec(1, 4, vec![1.0, -5.0, 0.1, 3.0]);
     let mask = magnitude_mask(&w, 0.5);
-    assert_eq!(mask.bits, vec![0, 1, 0, 1]);
+    assert_eq!(mask.dense_bits(), vec![0, 1, 0, 1]);
 }
 
 #[test]
@@ -117,6 +117,55 @@ fn online_masks_shift_with_distribution() {
         let j = m1.jaccard(&m2);
         assert!(j < 0.999, "rho={rho}: masks identical under shift");
         assert!(j > 0.05, "rho={rho}: masks unrealistically disjoint");
+    }
+}
+
+/// The three executable forms of one Wanda selection agree: the in-place
+/// dense prune (`wanda_prune_with`), the bitset mask applied to a dense
+/// copy, and the compressed row-sparse layout expanded back to dense.
+#[test]
+fn mask_sparse_and_inplace_prune_agree() {
+    let mut rng = Pcg32::new(55, 0);
+    let (d_out, d_in) = (24usize, 100usize); // crosses a 64-bit word boundary
+    let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+    let x = Mat::from_vec(32, d_in, rng.normal_vec(32 * d_in));
+    let mut calib = WandaCalibrator::new(d_in);
+    calib.update(&x);
+    let norms = calib.col_norms();
+    for rho in [0.3, 0.5, 0.7] {
+        let mask = online_wanda_mask(&w, &x, rho);
+        let masked = mask.apply(&w);
+        let mut inplace = w.data.clone();
+        let mut scratch = Vec::new();
+        wanda_prune_with(
+            Selector::KthValue,
+            &mut inplace,
+            d_out,
+            d_in,
+            &norms,
+            rho,
+            &mut scratch,
+        );
+        assert_eq!(masked.data, inplace, "rho={rho}: mask vs in-place prune");
+        let dense_again = mask.compress(&w).to_dense();
+        assert_eq!(masked.data, dense_again.data, "rho={rho}: mask vs sparse");
+    }
+}
+
+/// The sparse kernel and the masked-dense matmul agree on
+/// production-shaped linears, not just the toy sizes in unit tests.
+#[test]
+fn sparse_kernel_matches_masked_dense_at_scale() {
+    let mut rng = Pcg32::new(56, 0);
+    for (d_out, d_in, t) in [(256usize, 256usize, 64usize), (512, 128, 48)] {
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
+        let mask = online_wanda_mask(&w, &x, 0.5);
+        let want = x.matmul_nt(&mask.apply(&w));
+        let got = x.matmul_nt_sparse(&mask.compress(&w));
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "({d_out},{d_in},{t}): {a} vs {b}");
+        }
     }
 }
 

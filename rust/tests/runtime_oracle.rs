@@ -4,7 +4,10 @@
 //! have to agree with an independent implementation).
 //!
 //! Requires `make artifacts`; tests no-op politely when absent so
-//! `cargo test` works on a fresh clone.
+//! `cargo test` works on a fresh clone. The whole suite needs the PJRT
+//! runtime, so it only exists under `--features pjrt`.
+
+#![cfg(feature = "pjrt")]
 
 use mumoe::data::corpus::Corpus;
 use mumoe::eval::harness::EvalStack;
