@@ -1,0 +1,208 @@
+//! Decode-reuse bench: tokens/sec vs quality drift per mask plan.
+//!
+//! The μ-MoE decode loop can re-select micro-experts every step
+//! (`every-step`), once on the prompt (`prune-once`), or periodically
+//! (`refresh:k`). Reuse trades selection cost for logit drift; this bench
+//! puts numbers on both sides at ρ ∈ {0.3, 0.5, 0.7}:
+//!
+//! * **tokens/sec** per plan (cold layout cache), best of `reps` runs;
+//! * **warm-cache hit rate** — a repeated identical request, showing the
+//!   `(linear, level, fingerprint)` cache skipping recompression;
+//! * **drift vs `every-step`** — mean per-step KL of the next-token
+//!   distribution and greedy-token agreement
+//!   (`eval::host::decode_drift`).
+//!
+//! Emits `BENCH_decode_reuse.json`. Acceptance: `prune-once` tokens/sec
+//! must beat `every-step` at every ρ (reuse must actually pay).
+//!
+//! `--smoke`: tiny dims, 1 rep, single ρ — CI runs this so the bench code
+//! cannot bit-rot.
+
+use mumoe::decode::{decode_greedy, DecodeConfig, DecodeOutput};
+use mumoe::eval::host::decode_drift;
+use mumoe::model::config_by_name;
+use mumoe::model::ModelConfig;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use mumoe::tensor::LayoutCache;
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn jstr(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+struct BenchShape {
+    model: Model,
+    model_name: String,
+    rhos: Vec<f64>,
+    n_new: usize,
+    reps: usize,
+    cache_cap: usize,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            model: random_model(&ModelConfig::new("smoke-tiny", 2, 2, 16), 7),
+            model_name: "smoke-tiny(2x2x16)".into(),
+            rhos: vec![0.5],
+            n_new: 4,
+            reps: 1,
+            cache_cap: 256,
+        }
+    } else {
+        let cfg = config_by_name("mu-opt-micro").expect("known model");
+        BenchShape {
+            model: random_model(&cfg, 7),
+            model_name: cfg.name.clone(),
+            rhos: vec![0.3, 0.5, 0.7],
+            n_new: 32,
+            reps: 3,
+            cache_cap: 2048,
+        }
+    }
+}
+
+struct PlanRun {
+    plan: MaskPlan,
+    tok_per_sec: f64,
+    out: DecodeOutput,
+    warm_hits: u64,
+    warm_misses: u64,
+}
+
+fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan) -> PlanRun {
+    let cfg = DecodeConfig {
+        rho,
+        plan,
+        max_new: sh.n_new,
+        stop_at_eos: false,
+    };
+    // timed cold-cache runs (fresh cache each rep so every rep pays the
+    // same compression bill); keep the fastest
+    let mut best_tps = 0.0f64;
+    let mut best_out: Option<DecodeOutput> = None;
+    for _ in 0..sh.reps {
+        let mut cache = LayoutCache::new(sh.cache_cap);
+        let t0 = Instant::now();
+        let out = decode_greedy(&sh.model, prompt, &cfg, Some(&mut cache));
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let tps = out.steps.len() as f64 / dt;
+        if tps > best_tps {
+            best_tps = tps;
+            best_out = Some(out);
+        }
+    }
+    // warm-cache pass: the same request again through a cache primed by
+    // one cold run — the coordinator's repeated-prefix case
+    let mut cache = LayoutCache::new(sh.cache_cap);
+    decode_greedy(&sh.model, prompt, &cfg, Some(&mut cache));
+    let warm = decode_greedy(&sh.model, prompt, &cfg, Some(&mut cache));
+    PlanRun {
+        plan,
+        tok_per_sec: best_tps,
+        out: best_out.expect("at least one rep"),
+        warm_hits: warm.cache_hits,
+        warm_misses: warm.cache_misses,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sh = shape(smoke);
+    let plans = [MaskPlan::EveryStep, MaskPlan::Refresh(4), MaskPlan::PruneOnce];
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 53 + 19) % 256).collect();
+
+    let mut table = mumoe::benchlib::Table::new(
+        format!(
+            "Decode reuse: {} new tokens, {} ({})",
+            sh.n_new,
+            sh.model_name,
+            if smoke { "smoke" } else { "full" }
+        ),
+        &[
+            "rho", "plan", "tok/s", "vs every-step", "refreshes", "mean KL", "tok agree",
+            "warm hit%",
+        ],
+    );
+    let mut results = Vec::new();
+    let mut accept = true;
+
+    for &rho in &sh.rhos {
+        let runs: Vec<PlanRun> = plans
+            .iter()
+            .map(|&plan| run_plan(&sh, &prompt, rho, plan))
+            .collect();
+        let base_tps = runs[0].tok_per_sec; // plans[0] is EveryStep
+        let baseline = runs[0].out.clone();
+        for run in &runs {
+            let drift = decode_drift(&baseline, &run.out);
+            let speedup = run.tok_per_sec / base_tps.max(1e-12);
+            let warm_total = run.warm_hits + run.warm_misses;
+            let warm_hit_pct = if warm_total == 0 {
+                0.0
+            } else {
+                100.0 * run.warm_hits as f64 / warm_total as f64
+            };
+            table.row(vec![
+                format!("{rho:.1}"),
+                run.plan.label(),
+                format!("{:.2}", run.tok_per_sec),
+                format!("{speedup:.2}x"),
+                format!("{}", run.out.refresh_count),
+                format!("{:.4}", drift.mean_kl),
+                format!("{:.2}", drift.token_agreement),
+                format!("{warm_hit_pct:.0}"),
+            ]);
+            if run.plan == MaskPlan::PruneOnce && run.tok_per_sec <= base_tps {
+                accept = false;
+            }
+            results.push(Json::Obj(HashMap::from([
+                ("rho".into(), jnum(rho)),
+                ("plan".into(), jstr(run.plan.label())),
+                ("tokens_per_sec".into(), jnum(run.tok_per_sec)),
+                ("speedup_vs_every_step".into(), jnum(speedup)),
+                ("refresh_count".into(), jnum(run.out.refresh_count as f64)),
+                ("mean_kl".into(), jnum(drift.mean_kl)),
+                ("max_abs_logit_delta".into(), jnum(drift.max_abs_logit_delta)),
+                ("token_agreement".into(), jnum(drift.token_agreement)),
+                ("warm_cache_hits".into(), jnum(run.warm_hits as f64)),
+                ("warm_cache_misses".into(), jnum(run.warm_misses as f64)),
+            ])));
+        }
+    }
+    table.print();
+
+    println!(
+        "\nACCEPTANCE: prune-once tok/s > every-step tok/s at every rho \
+         ({}).",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        // smoke exists to execute the code, not to gate on 1-rep timings
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), jstr("decode_reuse")),
+        ("model".into(), jstr(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("n_new_tokens".into(), jnum(sh.n_new as f64)),
+        ("plans".into(), Json::Arr(results)),
+        ("accept_prune_once_faster".into(), Json::Bool(accept)),
+    ]));
+    let path = "BENCH_decode_reuse.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    if !accept && !smoke {
+        std::process::exit(1);
+    }
+}

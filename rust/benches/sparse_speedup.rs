@@ -17,6 +17,9 @@
 //!
 //! Acceptance: the rho=0.5 online forward must beat the dense forward —
 //! before the sparse engine it was strictly slower.
+//!
+//! `--smoke`: tiny dims, 1 rep, no acceptance gate — CI runs this so the
+//! bench code cannot bit-rot.
 
 use mumoe::benchlib::{black_box, Bencher, Stats, Table};
 use mumoe::flops::{achieved_forward, count_forward, ArchShape};
@@ -44,8 +47,22 @@ fn stats_ms(s: &Stats) -> f64 {
     s.mean_ms()
 }
 
-fn kernel_section(results: &mut Vec<Json>) {
-    let bencher = Bencher::default();
+/// One-iteration bencher for `--smoke` runs.
+fn smoke_bencher() -> Bencher {
+    Bencher {
+        warmup: std::time::Duration::from_millis(0),
+        budget: std::time::Duration::from_millis(0),
+        min_iters: 1,
+        max_iters: 1,
+    }
+}
+
+fn kernel_section(results: &mut Vec<Json>, smoke: bool) {
+    let bencher = if smoke {
+        smoke_bencher()
+    } else {
+        Bencher::default()
+    };
     let mut table = Table::new(
         "Kernel: x @ W^T under one online-Wanda selection (ms)",
         &[
@@ -58,11 +75,17 @@ fn kernel_section(results: &mut Vec<Json>) {
             "new/dense",
         ],
     );
-    // mu-opt-small's attention and fc1 shapes, T = max_seq_len
-    for (d_out, d_in) in [(256usize, 256usize), (1024, 256)] {
+    // mu-opt-small's attention and fc1 shapes, T = max_seq_len (smoke:
+    // one tiny shape, enough to execute every code path once)
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(32, 16, 8)]
+    } else {
+        &[(256, 256, 128), (1024, 256, 128)]
+    };
+    for &(d_out, d_in, t) in shapes {
         let mut rng = Pcg32::new(42, (d_out * d_in) as u64);
         let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
-        let x = Mat::from_vec(128, d_in, rng.normal_vec(128 * d_in));
+        let x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
         for rho in RHOS {
             let dense = bencher.run(|| x.matmul_nt(&w));
             // the pre-refactor online path: zeroed dense copy, dense matmul
@@ -90,7 +113,7 @@ fn kernel_section(results: &mut Vec<Json>) {
             results.push(Json::Obj(HashMap::from([
                 ("d_out".into(), jnum(d_out as f64)),
                 ("d_in".into(), jnum(d_in as f64)),
-                ("t".into(), jnum(128.0)),
+                ("t".into(), jnum(t as f64)),
                 ("rho".into(), jnum(rho)),
                 ("dense_ms".into(), jnum(stats_ms(&dense))),
                 ("masked_total_ms".into(), jnum(stats_ms(&masked))),
@@ -103,16 +126,27 @@ fn kernel_section(results: &mut Vec<Json>) {
     table.print();
 }
 
-fn forward_section(results: &mut Vec<Json>) -> Option<f64> {
-    let bencher = Bencher::coarse();
+fn forward_section(results: &mut Vec<Json>, smoke: bool) -> Option<f64> {
+    let bencher = if smoke {
+        smoke_bencher()
+    } else {
+        Bencher::coarse()
+    };
     let mut table = Table::new(
         "Forward: host model, dense vs online mu-MoE (ms / pass)",
         &["model", "rho", "dense", "online", "speedup", "flops thy", "flops ach"],
     );
     let mut accept_speedup = None;
-    let t = 128usize;
+    let t = if smoke { 16usize } else { 128usize };
     let tokens: Vec<i32> = (0..t as i32).map(|i| (i * 37 + 11) % 256).collect();
-    for name in ["mu-opt-micro", "mu-opt-small"] {
+    // the acceptance model (mu-opt-small) only runs in full mode — smoke
+    // exercises the code path, it does not gate on 1-iteration timings
+    let models: &[&str] = if smoke {
+        &["mu-opt-micro"]
+    } else {
+        &["mu-opt-micro", "mu-opt-small"]
+    };
+    for &name in models {
         let cfg = config_by_name(name).expect("known model");
         let model = random_model(&cfg, 7);
         let shape = ArchShape::of(&cfg);
@@ -154,14 +188,16 @@ fn forward_section(results: &mut Vec<Json>) -> Option<f64> {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
-        "sparse_speedup: host threads = {}",
-        threadpool::global().size()
+        "sparse_speedup: host threads = {}{}",
+        threadpool::global().size(),
+        if smoke { " (smoke mode)" } else { "" }
     );
     let mut kernel = Vec::new();
     let mut forward = Vec::new();
-    kernel_section(&mut kernel);
-    let accept = forward_section(&mut forward);
+    kernel_section(&mut kernel, smoke);
+    let accept = forward_section(&mut forward, smoke);
 
     if let Some(s) = accept {
         println!(
@@ -173,6 +209,7 @@ fn main() {
 
     let out = Json::Obj(HashMap::from([
         ("bench".into(), jstr("sparse_speedup")),
+        ("smoke".into(), Json::Bool(smoke)),
         (
             "host_threads".into(),
             jnum(threadpool::global().size() as f64),
@@ -191,4 +228,9 @@ fn main() {
     }
     // keep the optimizer honest about the bench results living to the end
     black_box(());
+    // full runs gate on the acceptance criterion (smoke never evaluates
+    // it: mu-opt-small doesn't run there), matching decode_reuse.rs
+    if accept.is_some_and(|s| s <= 1.0) {
+        std::process::exit(1);
+    }
 }

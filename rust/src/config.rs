@@ -208,12 +208,17 @@ pub struct ServeConfig {
     pub batch_window_us: u64,
     /// Max requests queued before admission control sheds load.
     pub queue_cap: usize,
-    /// Sparsity levels the router accepts (others are snapped).
+    /// Sparsity levels the router accepts (others are snapped). Must be
+    /// non-empty and strictly ascending — `validate` rejects anything else
+    /// at config load so `snap_rho`/batch keying never see a bad table.
     pub rho_levels: Vec<f64>,
     /// Default sparsity when a request does not specify one.
     pub default_rho: f64,
     /// Workers for host-side preprocessing.
     pub workers: usize,
+    /// Capacity (entries) of the shared compressed-layout cache keyed by
+    /// `(model weights, linear, snapped-ρ level, mask fingerprint)`.
+    pub layout_cache_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -226,6 +231,7 @@ impl Default for ServeConfig {
             rho_levels: vec![0.2, 0.4, 0.5, 0.6, 0.8, 1.0],
             default_rho: 0.5,
             workers: 2,
+            layout_cache_cap: 512,
         }
     }
 }
@@ -241,6 +247,7 @@ impl ServeConfig {
             rho_levels: t.f64_list_or("coordinator.rho_levels", &d.rho_levels),
             default_rho: t.f64_or("coordinator.default_rho", d.default_rho),
             workers: t.usize_or("coordinator.workers", d.workers),
+            layout_cache_cap: t.usize_or("coordinator.layout_cache_cap", d.layout_cache_cap),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -255,11 +262,24 @@ impl ServeConfig {
                 return Err(Error::config(format!("rho {r} outside [0,1]")));
             }
         }
+        // strictly ascending (so also duplicate-free): snapping, batch
+        // keying and cache keys all assume one canonical ordered table
+        for w in self.rho_levels.windows(2) {
+            if w[0] >= w[1] {
+                return Err(Error::config(format!(
+                    "rho_levels must be strictly ascending: {} then {}",
+                    w[0], w[1]
+                )));
+            }
+        }
         if !(0.0..=1.0).contains(&self.default_rho) {
             return Err(Error::config("default_rho outside [0,1]"));
         }
         if self.queue_cap == 0 {
             return Err(Error::config("queue_cap must be > 0"));
+        }
+        if self.layout_cache_cap == 0 {
+            return Err(Error::config("layout_cache_cap must be > 0"));
         }
         Ok(())
     }
@@ -308,6 +328,53 @@ default_rho = 0.6
         assert!(c.validate().is_err());
         c.rho_levels = vec![];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_unsorted_or_duplicate_levels() {
+        let with_levels = |levels: Vec<f64>| ServeConfig {
+            rho_levels: levels,
+            ..ServeConfig::default()
+        };
+        assert!(
+            with_levels(vec![0.6, 0.4, 1.0]).validate().is_err(),
+            "unsorted levels must be rejected"
+        );
+        assert!(
+            with_levels(vec![0.4, 0.4, 1.0]).validate().is_err(),
+            "duplicate levels must be rejected"
+        );
+        assert!(with_levels(vec![0.4, 0.6, 1.0]).validate().is_ok());
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_levels_with_typed_error() {
+        // regression: a bad rho_levels table used to survive config load
+        // and only blow up later inside snap_rho / the batcher
+        for bad in ["rho_levels = [0.6, 0.4]", "rho_levels = []"] {
+            let t = Toml::parse(&format!("[coordinator]\n{bad}\n")).unwrap();
+            let err = ServeConfig::from_toml(&t).unwrap_err();
+            assert!(
+                err.to_string().contains("rho_levels"),
+                "error should name rho_levels: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_rejects_zero_cache_cap() {
+        let c = ServeConfig {
+            layout_cache_cap: 0,
+            ..ServeConfig::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn layout_cache_cap_from_toml() {
+        let t = Toml::parse("[coordinator]\nlayout_cache_cap = 64\n").unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert_eq!(c.layout_cache_cap, 64);
     }
 
     #[test]

@@ -7,9 +7,11 @@ use super::request::{Request, RequestId, Response};
 use crate::config::ServeConfig;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::moe::snap_rho;
+use crate::tensor::LayoutCache;
+use crate::util::error::Error;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Stateless-ish router; shared across client threads.
 pub struct Router {
@@ -20,18 +22,34 @@ pub struct Router {
     metrics: Arc<Metrics>,
     /// Live queue depth (approximate; maintained by the server loop).
     depth: Arc<AtomicU64>,
+    /// Shared compressed-layout cache keyed by
+    /// `(model weights, linear, snapped-ρ level, mask fingerprint)`.
+    /// Because `admit` snaps every request's ρ to a configured level,
+    /// batch-mates and repeated prefixes at the same level share cache
+    /// keys. This handle is the integration point for host-side batch
+    /// execution (`decode::decode_greedy` takes `&mut LayoutCache`); the
+    /// host server loop that drains the batcher through it is a ROADMAP
+    /// open item — today only per-request host decode (`generate`) and
+    /// tests consume layout caches.
+    layout_cache: Arc<Mutex<LayoutCache>>,
 }
 
 impl Router {
-    pub fn new(cfg: ServeConfig, seq_len: usize, metrics: Arc<Metrics>) -> Router {
-        Router {
+    /// Build a router, rejecting invalid configs (empty/unsorted
+    /// `rho_levels`, zero caps) with a typed error instead of panicking
+    /// later inside `snap_rho` or the batcher.
+    pub fn new(cfg: ServeConfig, seq_len: usize, metrics: Arc<Metrics>) -> Result<Router, Error> {
+        cfg.validate()?;
+        let layout_cache = Arc::new(Mutex::new(LayoutCache::new(cfg.layout_cache_cap)));
+        Ok(Router {
             cfg,
             seq_len,
             tokenizer: ByteTokenizer,
             next_id: AtomicU64::new(1),
             metrics,
             depth: Arc::new(AtomicU64::new(0)),
-        }
+            layout_cache,
+        })
     }
 
     pub fn depth_handle(&self) -> Arc<AtomicU64> {
@@ -40,6 +58,11 @@ impl Router {
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// Handle to the shared level-keyed layout cache.
+    pub fn layout_cache(&self) -> Arc<Mutex<LayoutCache>> {
+        self.layout_cache.clone()
     }
 
     /// Admission decision + request construction. Returns `Err(Response)`
@@ -91,7 +114,34 @@ mod tests {
             default_rho: 0.6,
             ..Default::default()
         };
-        Router::new(cfg, 128, Arc::new(Metrics::new()))
+        Router::new(cfg, 128, Arc::new(Metrics::new())).expect("valid config")
+    }
+
+    #[test]
+    fn new_rejects_invalid_rho_levels() {
+        // regression: these used to be accepted here and only explode
+        // later inside snap_rho / DynamicBatcher::new
+        for levels in [vec![], vec![0.6, 0.4], vec![0.5, 0.5]] {
+            let cfg = ServeConfig {
+                rho_levels: levels.clone(),
+                ..Default::default()
+            };
+            let err = Router::new(cfg, 128, Arc::new(Metrics::new()));
+            assert!(err.is_err(), "levels {levels:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn layout_cache_shared_and_sized_from_config() {
+        let cfg = ServeConfig {
+            layout_cache_cap: 32,
+            ..Default::default()
+        };
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        let a = r.layout_cache();
+        let b = r.layout_cache();
+        assert!(Arc::ptr_eq(&a, &b), "handles must share one cache");
+        assert_eq!(a.lock().unwrap().capacity(), 32);
     }
 
     #[test]

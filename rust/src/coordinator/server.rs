@@ -197,7 +197,8 @@ pub fn replay_trace(
     );
 
     let metrics = Arc::new(Metrics::new());
-    let router = super::router::Router::new(cfg.clone(), crate::model::MAX_SEQ_LEN, metrics.clone());
+    let router =
+        super::router::Router::new(cfg.clone(), crate::model::MAX_SEQ_LEN, metrics.clone())?;
     let depth = router.depth_handle();
     let handle = Server::start(cfg, depth, metrics.clone())?;
 

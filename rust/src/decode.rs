@@ -1,0 +1,216 @@
+//! Host-side autoregressive decode engine with mask-plan reuse.
+//!
+//! The μ-MoE serving question this module answers: *how often must the
+//! micro-expert selection be refreshed while decoding?* Each refresh costs
+//! a selection pass (a dense forward to collect activations plus Wanda
+//! scoring per linear) and a recompression per linear; each reused step
+//! costs only one sparse forward over the cached
+//! [`crate::tensor::RowSparse`] layouts. [`MaskPlan`] names the policy:
+//!
+//! * `EveryStep` — re-select per token (adaptive baseline, no reuse);
+//! * `PruneOnce` — select on the prompt, reuse for the whole generation;
+//! * `Refresh(k)` — re-select every `k` tokens.
+//!
+//! Layout compression goes through an optional [`LayoutCache`], keyed by
+//! `(model weights, linear, snapped-ρ level, mask fingerprint)`, so a
+//! repeated prompt — or the unchanged selection of a `PruneOnce`
+//! generation — skips recompression entirely. The cache is *transparent*: decoding with or
+//! without it is bit-identical (`proptest.rs::decode_props` proves this).
+//!
+//! Quality cost of reuse is measured by
+//! [`crate::eval::host::decode_drift`] and tracked by
+//! `benches/decode_reuse.rs`.
+
+use crate::coordinator::request::argmax;
+use crate::model::EOS_ID;
+use crate::moe::{self, layouts_for};
+use crate::nn::{FixedLayouts, Model};
+use crate::pruning::MaskPlan;
+use crate::tensor::LayoutCache;
+
+/// Knobs of one greedy decode.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeConfig {
+    /// Active-weight ratio for micro-expert selection.
+    pub rho: f64,
+    /// When to re-run selection (see [`MaskPlan`]).
+    pub plan: MaskPlan,
+    /// Maximum new tokens to generate.
+    pub max_new: usize,
+    /// Stop when the model emits EOS (off for benches so every plan
+    /// generates exactly `max_new` steps).
+    pub stop_at_eos: bool,
+}
+
+/// One decode step's observable state (drift analysis consumes the
+/// logits; everything downstream of them is deterministic).
+#[derive(Clone, Debug)]
+pub struct StepTrace {
+    /// Greedy-argmax token of this step.
+    pub token: i32,
+    /// Next-token logits at the last valid position (vocab-sized).
+    pub logits: Vec<f32>,
+    /// Whether this step re-ran micro-expert selection.
+    pub refreshed: bool,
+}
+
+/// Result of one greedy decode.
+#[derive(Clone, Debug)]
+pub struct DecodeOutput {
+    /// Prompt followed by generated tokens (EOS, if hit, is not appended).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Per-step traces, in generation order.
+    pub steps: Vec<StepTrace>,
+    /// How many steps re-ran selection (1 for `PruneOnce`, `steps.len()`
+    /// for `EveryStep`).
+    pub refresh_count: usize,
+    /// Layout-cache hits/misses attributable to this decode (0/0 when no
+    /// cache was supplied).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl DecodeOutput {
+    /// The generated suffix (without the prompt).
+    pub fn new_tokens(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+}
+
+/// Greedy autoregressive decode under a mask plan.
+///
+/// Each step runs the model over a sliding window of the most recent
+/// `max_seq_len` tokens. On refresh steps the current window's selection
+/// is computed ([`moe::select_experts`]) and compressed to per-linear
+/// layouts (through `cache` when given); all other steps reuse the held
+/// layouts and pay only one fixed-selection sparse forward with a
+/// last-row-only LM head ([`Model::forward_fixed_last`]).
+pub fn decode_greedy(
+    model: &Model,
+    prompt: &[i32],
+    cfg: &DecodeConfig,
+    mut cache: Option<&mut LayoutCache>,
+) -> DecodeOutput {
+    assert!(!prompt.is_empty(), "decode needs a non-empty prompt");
+    let seq = model.cfg.max_seq_len;
+    let (hits0, misses0) = cache
+        .as_deref()
+        .map_or((0, 0), |c| (c.hits(), c.misses()));
+
+    let mut tokens = prompt.to_vec();
+    let mut steps: Vec<StepTrace> = Vec::with_capacity(cfg.max_new);
+    let mut refresh_count = 0usize;
+    let mut layouts = FixedLayouts::new();
+
+    for step in 0..cfg.max_new {
+        let start = tokens.len().saturating_sub(seq);
+        let window = &tokens[start..];
+        let valid = window.len();
+        let refreshed = cfg.plan.refreshes_at(step);
+        if refreshed {
+            let sel = moe::select_experts(model, window, valid, cfg.rho);
+            layouts = layouts_for(model, &sel, cache.as_deref_mut());
+            refresh_count += 1;
+        }
+        let logits = model.forward_fixed_last(window, valid, &layouts);
+        let token = argmax(&logits);
+        steps.push(StepTrace {
+            token,
+            logits,
+            refreshed,
+        });
+        if cfg.stop_at_eos && token == EOS_ID {
+            break;
+        }
+        tokens.push(token);
+    }
+
+    let (hits1, misses1) = cache
+        .as_deref()
+        .map_or((0, 0), |c| (c.hits(), c.misses()));
+    DecodeOutput {
+        tokens,
+        prompt_len: prompt.len(),
+        steps,
+        refresh_count,
+        cache_hits: hits1 - hits0,
+        cache_misses: misses1 - misses0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::nn::random_model;
+
+    fn tiny_model() -> Model {
+        random_model(&ModelConfig::new("dec-tiny", 2, 2, 16), 41)
+    }
+
+    fn cfg(plan: MaskPlan, max_new: usize) -> DecodeConfig {
+        DecodeConfig {
+            rho: 0.5,
+            plan,
+            max_new,
+            stop_at_eos: false,
+        }
+    }
+
+    #[test]
+    fn decode_extends_prompt_by_max_new() {
+        let m = tiny_model();
+        let out = decode_greedy(&m, &[1, 2, 3], &cfg(MaskPlan::PruneOnce, 5), None);
+        assert_eq!(out.tokens.len(), 8);
+        assert_eq!(out.new_tokens().len(), 5);
+        assert_eq!(out.steps.len(), 5);
+        for (s, &t) in out.steps.iter().zip(out.new_tokens()) {
+            assert_eq!(s.token, t);
+            assert_eq!(s.logits.len(), m.cfg.vocab_size);
+        }
+    }
+
+    #[test]
+    fn refresh_counts_follow_plan() {
+        let m = tiny_model();
+        let every = decode_greedy(&m, &[5, 6], &cfg(MaskPlan::EveryStep, 4), None);
+        assert_eq!(every.refresh_count, 4);
+        assert!(every.steps.iter().all(|s| s.refreshed));
+        let once = decode_greedy(&m, &[5, 6], &cfg(MaskPlan::PruneOnce, 4), None);
+        assert_eq!(once.refresh_count, 1);
+        assert!(once.steps[0].refreshed);
+        assert!(once.steps[1..].iter().all(|s| !s.refreshed));
+        let periodic = decode_greedy(&m, &[5, 6], &cfg(MaskPlan::Refresh(2), 4), None);
+        assert_eq!(periodic.refresh_count, 2);
+    }
+
+    #[test]
+    fn prune_once_reuses_cache_across_identical_requests() {
+        let m = tiny_model();
+        let n_linears = m.cfg.linear_names().len() as u64;
+        let mut cache = crate::tensor::LayoutCache::new(64);
+        let cold = decode_greedy(&m, &[9, 1, 7], &cfg(MaskPlan::PruneOnce, 3), Some(&mut cache));
+        assert_eq!(cold.cache_misses, n_linears);
+        assert_eq!(cold.cache_hits, 0);
+        let warm = decode_greedy(&m, &[9, 1, 7], &cfg(MaskPlan::PruneOnce, 3), Some(&mut cache));
+        assert_eq!(warm.cache_misses, 0, "repeated prompt must not recompress");
+        assert_eq!(warm.cache_hits, n_linears);
+        assert_eq!(cold.tokens, warm.tokens);
+    }
+
+    #[test]
+    fn window_slides_past_max_seq_len() {
+        let m = tiny_model();
+        let long: Vec<i32> = (0..m.cfg.max_seq_len as i32 + 5).map(|i| i % 250).collect();
+        let out = decode_greedy(&m, &long, &cfg(MaskPlan::PruneOnce, 2), None);
+        assert_eq!(out.new_tokens().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty prompt")]
+    fn empty_prompt_panics() {
+        let m = tiny_model();
+        decode_greedy(&m, &[], &cfg(MaskPlan::PruneOnce, 1), None);
+    }
+}

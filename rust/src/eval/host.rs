@@ -7,8 +7,11 @@
 //! evaluation all exercise the identical execution engine.
 
 use crate::data::corpus::Window;
+use crate::decode::{decode_greedy, DecodeConfig, DecodeOutput};
 use crate::eval::Perplexity;
 use crate::nn::{Model, PruneMode};
+use crate::pruning::MaskPlan;
+use crate::tensor::log_softmax;
 use crate::util::threadpool::ThreadPool;
 
 /// Perplexity of a host model over eval windows under one prune mode.
@@ -40,6 +43,95 @@ pub fn host_perplexity_par(
     ppl
 }
 
+/// Quality drift of a mask-reuse decode against its adaptive baseline:
+/// per-step divergence of the next-token distributions.
+#[derive(Clone, Debug)]
+pub struct DecodeDrift {
+    /// Steps compared (min of the two generations' lengths).
+    pub steps: usize,
+    /// Mean per-step KL(baseline ‖ plan) of the next-token distributions,
+    /// in nats. 0 ⇔ identical distributions at every compared step.
+    pub mean_kl: f64,
+    /// Largest absolute logit difference seen at any compared step.
+    pub max_abs_logit_delta: f64,
+    /// Fraction of compared steps whose greedy token agreed.
+    pub token_agreement: f64,
+}
+
+/// Compare two decodes step by step (typically: a reuse plan against
+/// `EveryStep` on the same prompt/ρ). Once the greedy tokens diverge the
+/// contexts differ too, so later-step divergence *includes* the compounding
+/// effect of reuse — which is exactly the serving-relevant quantity.
+pub fn decode_drift(baseline: &DecodeOutput, other: &DecodeOutput) -> DecodeDrift {
+    let n = baseline.steps.len().min(other.steps.len());
+    if n == 0 {
+        return DecodeDrift {
+            steps: 0,
+            mean_kl: 0.0,
+            max_abs_logit_delta: 0.0,
+            token_agreement: 1.0,
+        };
+    }
+    let mut kl_sum = 0.0f64;
+    let mut max_delta = 0.0f64;
+    let mut agree = 0usize;
+    for (a, b) in baseline.steps.iter().zip(&other.steps) {
+        let lp = log_softmax(&a.logits);
+        let lq = log_softmax(&b.logits);
+        let mut kl = 0.0f64;
+        for (&p, &q) in lp.iter().zip(&lq) {
+            kl += (p as f64).exp() * (p as f64 - q as f64);
+        }
+        kl_sum += kl.max(0.0); // clamp float-noise negatives
+        for (&x, &y) in a.logits.iter().zip(&b.logits) {
+            max_delta = max_delta.max((x - y).abs() as f64);
+        }
+        if a.token == b.token {
+            agree += 1;
+        }
+    }
+    DecodeDrift {
+        steps: n,
+        mean_kl: kl_sum / n as f64,
+        max_abs_logit_delta: max_delta,
+        token_agreement: agree as f64 / n as f64,
+    }
+}
+
+/// Convenience: decode `prompt` under `plan` and under `EveryStep` (both
+/// without EOS stopping so the step counts align) and report the drift.
+pub fn decode_drift_vs_every_step(
+    model: &Model,
+    prompt: &[i32],
+    rho: f64,
+    plan: MaskPlan,
+    max_new: usize,
+) -> DecodeDrift {
+    let base = decode_greedy(
+        model,
+        prompt,
+        &DecodeConfig {
+            rho,
+            plan: MaskPlan::EveryStep,
+            max_new,
+            stop_at_eos: false,
+        },
+        None,
+    );
+    let other = decode_greedy(
+        model,
+        prompt,
+        &DecodeConfig {
+            rho,
+            plan,
+            max_new,
+            stop_at_eos: false,
+        },
+        None,
+    );
+    decode_drift(&base, &other)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,6 +153,26 @@ mod tests {
         let ppl = host_perplexity(&m, &windows(), PruneMode::Dense);
         assert!(ppl.value().is_finite() && ppl.value() > 1.0);
         assert_eq!(ppl.token_count, 4 * 7);
+    }
+
+    #[test]
+    fn drift_of_plan_against_itself_is_zero() {
+        let m = random_model(&ModelConfig::new("t", 2, 2, 16), 23);
+        let drift = decode_drift_vs_every_step(&m, &[3, 1, 4, 1], 0.5, MaskPlan::Refresh(1), 4);
+        assert_eq!(drift.steps, 4);
+        assert_eq!(drift.mean_kl, 0.0);
+        assert_eq!(drift.max_abs_logit_delta, 0.0);
+        assert_eq!(drift.token_agreement, 1.0);
+    }
+
+    #[test]
+    fn drift_of_prune_once_is_finite_and_bounded() {
+        let m = random_model(&ModelConfig::new("t", 2, 2, 16), 24);
+        let drift = decode_drift_vs_every_step(&m, &[9, 2, 6, 5], 0.4, MaskPlan::PruneOnce, 5);
+        assert_eq!(drift.steps, 5);
+        assert!(drift.mean_kl.is_finite() && drift.mean_kl >= 0.0);
+        assert!(drift.max_abs_logit_delta.is_finite());
+        assert!((0.0..=1.0).contains(&drift.token_agreement));
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! tensor, nn                                 host math + reference model
 //! model, data                                model zoo, tokenizer, corpora
 //! pruning, moe                               pruning engines + μ-MoE lens
+//! decode                                     host decode engine (mask-plan reuse)
 //! flops, eval                                analytics + evaluators
 //! runtime                                    PJRT artifact execution
 //! coordinator                                router/batcher/scheduler/server
@@ -40,6 +41,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod eval;
 pub mod flops;
 pub mod model;

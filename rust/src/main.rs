@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   serve       replay a synthetic request trace through the coordinator
-//!   generate    autoregressive greedy decode with μ-MoE online pruning
+//!   generate    autoregressive greedy decode on the host engine, with a
+//!               mask plan (every-step | prune-once | refresh:<k>) and a
+//!               compressed-layout cache — no artifacts or `pjrt` needed;
+//!               `--device` decodes through the PJRT artifact instead
 //!   eval        perplexity of one (model, method, ρ, dataset) cell
 //!   vlm-eval    strata accuracy of μ-VLM under one method/ρ
 //!   flops       Table-4 style FLOPs/MACs analysis
@@ -10,9 +13,7 @@
 //!   overlap     μ-MoE micro-expert overlap analysis across domains
 //!   inspect     print manifest / checkpoint summaries
 
-use mumoe::cli::{opt, usage, Args, OptSpec};
-#[cfg(feature = "pjrt")]
-use mumoe::cli::flag;
+use mumoe::cli::{flag, opt, usage, Args, OptSpec};
 use mumoe::util::error::Error;
 
 /// Subcommands that execute PJRT artifacts are only available when the
@@ -66,7 +67,7 @@ fn print_help() {
         "mumoe — test-time pruning as micro-grained mixture-of-experts\n\n\
          subcommands:\n\
          \x20 serve      replay a request trace through the coordinator\n\
-         \x20 generate   autoregressive decode with mu-MoE pruning\n\
+         \x20 generate   host greedy decode with mask-plan reuse (no pjrt)\n\
          \x20 eval       perplexity of one (model, method, rho, dataset) cell\n\
          \x20 vlm-eval   mu-VLM strata accuracy under one method/rho\n\
          \x20 flops      Table-4 FLOPs/MACs analysis\n\
@@ -132,30 +133,111 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
 // generate
 // ---------------------------------------------------------------------------
 
-#[cfg(not(feature = "pjrt"))]
-fn cmd_generate(_rest: &[String]) -> Result<(), Error> {
-    pjrt_unavailable("generate")
-}
-
-#[cfg(feature = "pjrt")]
 const GEN_SPEC: &[OptSpec] = &[
-    opt("artifacts", "artifact directory", "artifacts"),
+    opt("artifacts", "artifact directory (checkpoint source)", "artifacts"),
     opt("model", "model name", "mu-opt-micro"),
     opt("prompt", "prompt text", "The archive of northern tyrolia is a "),
     opt("rho", "active-weight ratio", "0.6"),
     opt("tokens", "tokens to generate", "48"),
+    opt("plan", "mask plan: every-step | prune-once | refresh:<k> (host engine)", "prune-once"),
+    opt("cache-cap", "layout cache capacity (entries, host engine)", "512"),
+    flag(
+        "device",
+        "decode through the PJRT artifact session instead of the host \
+         engine (needs --features pjrt; re-prunes every step in-graph)",
+    ),
 ];
 
-/// Greedy autoregressive decoding through the mu-MoE serving head: each
-/// step re-runs online pruning against the *growing* context, so the
-/// active micro-expert set adapts as the generation unfolds.
-#[cfg(feature = "pjrt")]
+/// Greedy autoregressive decoding through the host decode engine: the mask
+/// plan decides when micro-expert selection is refreshed against the
+/// growing context, and the layout cache skips recompression when the
+/// selection repeats. Runs without artifacts or the `pjrt` feature — a
+/// missing checkpoint falls back to a deterministic random model so the
+/// pipeline stays demonstrable anywhere.
 fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
-        println!("{}", usage("generate", "mu-MoE greedy decode", GEN_SPEC));
+        println!("{}", usage("generate", "mu-MoE greedy decode (host engine)", GEN_SPEC));
         return Ok(());
     }
     let a = Args::parse(rest, GEN_SPEC)?;
+    if a.flag("device") {
+        return cmd_generate_device(&a);
+    }
+    let dir = std::path::PathBuf::from(a.req("artifacts")?);
+    let model_name = a.req("model")?;
+    let rho = a.get_f64("rho")?;
+    let n_new = a.get_usize("tokens")?;
+    let plan = mumoe::pruning::MaskPlan::parse(a.req("plan")?)?;
+    let cache_cap = a.get_usize("cache-cap")?;
+    if cache_cap == 0 {
+        return Err(Error::config("--cache-cap must be > 0"));
+    }
+
+    use mumoe::decode::{decode_greedy, DecodeConfig};
+    use mumoe::model::checkpoint::Checkpoint;
+    use mumoe::model::config_by_name;
+    use mumoe::model::tokenizer::ByteTokenizer;
+    use mumoe::nn::{random_model, Model};
+    use mumoe::tensor::LayoutCache;
+
+    let cfg = config_by_name(model_name)
+        .ok_or_else(|| Error::config(format!("unknown model '{model_name}'")))?;
+    let ckpt_path = dir.join("ckpt").join(format!("{model_name}.ckpt"));
+    // only a *missing* checkpoint falls back to the demo model — a present
+    // but unreadable/corrupt one must fail loudly, not generate garbage
+    let model = if ckpt_path.exists() {
+        let ckpt = Checkpoint::load(&ckpt_path)?;
+        Model::from_checkpoint(&cfg, &ckpt)?
+    } else {
+        mumoe::warn_!(
+            "no checkpoint at {}; decoding with a deterministic random model",
+            ckpt_path.display()
+        );
+        random_model(&cfg, 7)
+    };
+
+    let tok = ByteTokenizer;
+    let prompt_ids = tok.encode(a.req("prompt")?, true);
+    let mut cache = LayoutCache::new(cache_cap);
+    let dcfg = DecodeConfig {
+        rho,
+        plan,
+        max_new: n_new,
+        stop_at_eos: true,
+    };
+    let t0 = std::time::Instant::now();
+    let out = decode_greedy(&model, &prompt_ids, &dcfg, Some(&mut cache));
+    let dt = t0.elapsed().as_secs_f64();
+    let generated = out.new_tokens().len();
+
+    println!("{}", tok.decode(&out.tokens));
+    println!(
+        "\n[host decode: model={model_name} plan={} rho={rho}: {generated} new tokens \
+         in {dt:.2}s = {:.2} tok/s; {} selection refreshes, layout cache {} hits / {} \
+         misses]",
+        plan.label(),
+        generated as f64 / dt.max(1e-9),
+        out.refresh_count,
+        out.cache_hits,
+        out.cache_misses
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_generate_device(_a: &Args) -> Result<(), Error> {
+    Err(Error::config(
+        "--device needs the PJRT runtime; rebuild with `--features pjrt` \
+         (requires the xla toolchain — see rust/Cargo.toml), or drop \
+         --device to use the host engine",
+    ))
+}
+
+/// Device-executed decode through the mu-MoE serving artifact: each step
+/// re-runs online pruning *inside* the AOT graph against the growing
+/// context (the in-graph analogue of the host engine's `every-step` plan).
+#[cfg(feature = "pjrt")]
+fn cmd_generate_device(a: &Args) -> Result<(), Error> {
     let dir = std::path::PathBuf::from(a.req("artifacts")?);
     let model = a.req("model")?;
     let rho = a.get_f64("rho")? as f32;
@@ -170,8 +252,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
 
     let client = Client::cpu()?;
     let registry = Registry::open(&dir, client.clone())?;
-    let ckpt =
-        mumoe::model::checkpoint::Checkpoint::load(&registry.ckpt_path(model))?;
+    let ckpt = mumoe::model::checkpoint::Checkpoint::load(&registry.ckpt_path(model))?;
     let meta = registry.meta_for("mumoe_logits", model)?;
     let (name, order, batch, seq) =
         (meta.name.clone(), meta.params.clone(), meta.batch, meta.seq_len);
@@ -203,13 +284,10 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
         ids.push(next);
     }
     let dt = t0.elapsed().as_secs_f64();
-    let text = tok.decode(&ids);
-    println!("{text}");
+    println!("{}", tok.decode(&ids));
     println!(
-        "
-[rho={rho}, {} new tokens in {dt:.1}s = {:.2} tok/s]",
-        n_new,
-        n_new as f64 / dt
+        "\n[device decode: rho={rho}, {n_new} new tokens in {dt:.1}s = {:.2} tok/s]",
+        n_new as f64 / dt.max(1e-9)
     );
     Ok(())
 }

@@ -7,10 +7,12 @@
 //! offline pruning and the paper's premise would be empty. The overlap
 //! statistics quantify prompt-dependence (paper §2, Figure 2).
 
-use crate::nn::Model;
+use crate::nn::{FixedLayouts, Model};
 use crate::pruning::{wanda::online_wanda_mask, Mask};
+use crate::tensor::{LayoutCache, LayoutKey};
 use crate::util::error::Error;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Per-linear activation-statistics summary for one prompt.
 #[derive(Clone, Debug)]
@@ -29,6 +31,36 @@ pub fn select_experts(model: &Model, tokens: &[i32], valid_len: usize, rho: f64)
         masks.insert(name.clone(), online_wanda_mask(w, x, rho));
     }
     ExpertSelection { masks, rho }
+}
+
+/// Turn a selection into executable per-linear [`crate::tensor::RowSparse`]
+/// layouts, compressing through the layout cache when one is supplied.
+///
+/// The cache key is `(model weights, linear, snapped-ρ level, mask
+/// fingerprint)`: two prompts (or two decode steps, or two batch-mates at
+/// the same snapped level) that select the same micro-experts on the same
+/// model share one compressed layout instead of recompressing, while two
+/// models sharing one cache can never collide. Without a cache every
+/// linear is compressed directly — same result, no reuse.
+pub fn layouts_for(
+    model: &Model,
+    sel: &ExpertSelection,
+    mut cache: Option<&mut LayoutCache>,
+) -> FixedLayouts {
+    let mut out = FixedLayouts::new();
+    for (name, w) in model.prunable() {
+        let mask = &sel.masks[&name];
+        let layout = match cache.as_deref_mut() {
+            Some(c) => {
+                let key =
+                    LayoutKey::new(model.weights_id(), &*name, sel.rho, mask.fingerprint());
+                c.get_or_insert_with(key, || mask.compress(w))
+            }
+            None => Arc::new(mask.compress(w)),
+        };
+        out.insert(name, layout);
+    }
+    out
 }
 
 /// Pairwise expert-overlap summary across a set of selections.
@@ -180,6 +212,52 @@ mod tests {
         for mask in sel.masks.values() {
             let f = mask.active_fraction();
             assert!(f > 0.4 && f < 0.6, "{f}");
+        }
+    }
+
+    #[test]
+    fn layouts_for_matches_direct_compression_and_caches() {
+        let m = model();
+        let sel = select_experts(&m, &[4, 2, 9, 7], 4, 0.5);
+        let direct = layouts_for(&m, &sel, None);
+        let mut cache = LayoutCache::new(64);
+        let cached = layouts_for(&m, &sel, Some(&mut cache));
+        assert_eq!(direct.len(), m.cfg.linear_names().len());
+        for (name, a) in &direct {
+            let b = &cached[name];
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{name}");
+        }
+        // first pass was all misses; an identical selection is all hits
+        let n = m.cfg.linear_names().len() as u64;
+        assert_eq!((cache.hits(), cache.misses()), (0, n));
+        let again = layouts_for(&m, &sel, Some(&mut cache));
+        assert_eq!((cache.hits(), cache.misses()), (n, n));
+        for (name, a) in &cached {
+            // cache hit returns the same Arc, not a recompression
+            assert!(Arc::ptr_eq(a, &again[name]), "{name}");
+        }
+    }
+
+    #[test]
+    fn shared_cache_never_mixes_models() {
+        // regression: at rho=1.0 every mask is all-ones, so without weight
+        // identity in the key two same-architecture models would collide
+        // on every cache entry and one would execute the other's weights
+        let m1 = random_model(&ModelConfig::new("t", 2, 2, 16), 11);
+        let m2 = random_model(&ModelConfig::new("t", 2, 2, 16), 12);
+        assert_ne!(m1.weights_id(), m2.weights_id());
+        let s1 = select_experts(&m1, &[1, 2, 3], 3, 1.0);
+        let s2 = select_experts(&m2, &[1, 2, 3], 3, 1.0);
+        let mut cache = LayoutCache::new(128);
+        let l1 = layouts_for(&m1, &s1, Some(&mut cache));
+        let l2 = layouts_for(&m2, &s2, Some(&mut cache));
+        assert_eq!(cache.hits(), 0, "distinct models must not share entries");
+        for (name, a) in &l1 {
+            assert_ne!(
+                a.fingerprint(),
+                l2[name].fingerprint(),
+                "{name}: model B served model A's layout"
+            );
         }
     }
 

@@ -23,9 +23,20 @@
 use crate::model::checkpoint::Checkpoint;
 use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
-use crate::tensor::{layernorm_rows, log_softmax, relu, Mat};
+use crate::tensor::{layernorm_rows, log_softmax, matmul_tn_sparse, relu, Mat, RowSparse};
 use crate::util::error::Error;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-unique id generator for weight-set identity (see
+/// [`Model::weights_id`]). Starts at 1 so 0 can serve as a "no model"
+/// sentinel in tests.
+static WEIGHTS_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_weights_id() -> u64 {
+    WEIGHTS_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Pruning mode for a host-side forward.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -35,6 +46,42 @@ pub enum PruneMode {
     /// μ-MoE: online Wanda per linear at the given active ratio, executed
     /// on the compressed row-sparse layout.
     OnlineWanda { rho: f64 },
+}
+
+/// Per-linear compressed layouts for a fixed-selection forward — what the
+/// decode engine reuses across steps (see [`Model::forward_fixed`]).
+pub type FixedLayouts = HashMap<String, Arc<RowSparse>>;
+
+/// Internal execution mode of the single traversal: how each prunable
+/// linear runs. `PruneMode` is the stable public surface; `Exec` adds the
+/// fixed-layout form the decode engine needs without making the public
+/// enum carry lifetimes.
+enum Exec<'a> {
+    Dense,
+    Online { rho: f64 },
+    Fixed { layouts: &'a FixedLayouts },
+}
+
+impl Exec<'_> {
+    /// Sparse-path linears consume pre-transposed activations.
+    fn is_sparse(&self) -> bool {
+        !matches!(self, Exec::Dense)
+    }
+}
+
+/// Which logits rows the head computes. The LM head is the largest
+/// matmul of the pass, so traversals that don't consume logits must not
+/// pay for it.
+#[derive(Clone, Copy, PartialEq)]
+enum Head {
+    /// Full (T, V) logits — evaluation and calibration.
+    All,
+    /// Only the last valid position's (1, V) row — the decode hot path.
+    LastValid,
+    /// No logits at all — taps-only traversals (activation collection for
+    /// micro-expert selection) return an empty matrix and skip the final
+    /// layernorm + head matmul entirely.
+    None,
 }
 
 /// Pre-resolved parameter names of one linear (`{prefix}.w` / `{prefix}.b`).
@@ -98,6 +145,7 @@ pub struct Model {
     mats: HashMap<String, Mat>,
     vecs: HashMap<String, Vec<f32>>,
     layer_names: Vec<LayerNames>,
+    weights_id: u64,
 }
 
 impl Model {
@@ -112,7 +160,18 @@ impl Model {
             mats,
             vecs,
             layer_names,
+            weights_id: next_weights_id(),
         }
+    }
+
+    /// Identity of this model's current weight values, for use in
+    /// weight-derived cache keys ([`crate::tensor::LayoutKey`]): unique
+    /// per live model and refreshed by every weight mutation, so a shared
+    /// [`crate::tensor::LayoutCache`] can never serve one model's
+    /// compressed layouts to another (or stale layouts after offline
+    /// pruning edited the weights in place).
+    pub fn weights_id(&self) -> u64 {
+        self.weights_id
     }
 
     pub fn from_checkpoint(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<Model, Error> {
@@ -142,36 +201,46 @@ impl Model {
     pub fn set_mat(&mut self, name: &str, m: Mat) {
         assert!(self.mats.contains_key(name), "unknown weight {name}");
         self.mats.insert(name.to_string(), m);
+        self.weights_id = next_weights_id();
     }
 
-    fn linear(&self, x: &Mat, names: &LinearNames, mode: PruneMode) -> Mat {
-        self.linear_with_t(x, None, names, mode)
+    fn linear(&self, x: &Mat, names: &LinearNames, exec: &Exec) -> Mat {
+        self.linear_with_t(x, None, names, exec)
     }
 
-    /// One linear under `mode`. `xt` may carry `x` already transposed so
+    /// One linear under `exec`. `xt` may carry `x` already transposed so
     /// callers feeding several linears from the same activations (q/k/v)
     /// pay for one transpose instead of three on the sparse path.
-    fn linear_with_t(
-        &self,
-        x: &Mat,
-        xt: Option<&Mat>,
-        names: &LinearNames,
-        mode: PruneMode,
-    ) -> Mat {
+    fn linear_with_t(&self, x: &Mat, xt: Option<&Mat>, names: &LinearNames, exec: &Exec) -> Mat {
         let w = &self.mats[&names.w];
         let b = &self.vecs[&names.b];
-        let mut y = match mode {
-            PruneMode::Dense => x.matmul_nt(w),
-            PruneMode::OnlineWanda { rho } => {
-                // score against *this prompt's* activations, prune, and run
-                // the compressed layout — the host mirror of the L1 fused
-                // kernel. No dense zeroed copy of w is ever built.
-                let mask = wanda::online_wanda_mask(w, x, rho);
-                let rs = mask.compress(w);
-                match xt {
-                    Some(xt) => crate::tensor::matmul_tn_sparse(xt, &rs),
-                    None => x.matmul_nt_sparse(&rs),
+        let sparse_mm = |rs: &RowSparse| match xt {
+            Some(xt) => matmul_tn_sparse(xt, rs),
+            None => x.matmul_nt_sparse(rs),
+        };
+        let mut y = match exec {
+            Exec::Dense => x.matmul_nt(w),
+            Exec::Online { rho } => {
+                if crate::pruning::kc_for(w.cols, *rho) == 0 {
+                    // full-density selection (rho=1.0 is a standard level):
+                    // the mask would be all-ones whatever the scores, so
+                    // skip scoring + compression and run the dense kernel
+                    x.matmul_nt(w)
+                } else {
+                    // score against *this prompt's* activations, prune, and
+                    // run the compressed layout — the host mirror of the L1
+                    // fused kernel. No dense zeroed copy of w is ever built.
+                    let mask = wanda::online_wanda_mask(w, x, *rho);
+                    sparse_mm(&mask.compress(w))
                 }
+            }
+            Exec::Fixed { layouts } => {
+                // selection already happened (and was possibly cached);
+                // execute the reused layout directly
+                let rs = layouts
+                    .get(&names.w)
+                    .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
+                sparse_mm(rs)
             }
         };
         y.add_row_vec(b);
@@ -206,12 +275,60 @@ impl Model {
         tokens: &[i32],
         valid_len: usize,
         mode: PruneMode,
+        taps: Option<&mut ActivationTaps>,
+    ) -> Mat {
+        let exec = match mode {
+            PruneMode::Dense => Exec::Dense,
+            PruneMode::OnlineWanda { rho } => Exec::Online { rho },
+        };
+        self.forward_exec(tokens, valid_len, &exec, taps, Head::All)
+    }
+
+    /// Forward under a *fixed* per-linear selection: every prunable linear
+    /// executes a prebuilt [`RowSparse`] layout (see
+    /// [`crate::decode`] for how these are selected and cached). Panics if
+    /// a prunable linear has no layout — a partial map is a caller bug.
+    pub fn forward_fixed(&self, tokens: &[i32], valid_len: usize, layouts: &FixedLayouts) -> Mat {
+        self.forward_exec(tokens, valid_len, &Exec::Fixed { layouts }, None, Head::All)
+    }
+
+    /// [`Model::forward_fixed`] computing only the last valid position's
+    /// logits row — the decode hot path. Row-for-row identical to slicing
+    /// the full logits (each output row of the head matmul is accumulated
+    /// independently, in the same k-order).
+    pub fn forward_fixed_last(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+        layouts: &FixedLayouts,
+    ) -> Vec<f32> {
+        self.forward_exec(
+            tokens,
+            valid_len,
+            &Exec::Fixed { layouts },
+            None,
+            Head::LastValid,
+        )
+        .data
+    }
+
+    /// The worker behind every public forward: one traversal, any exec
+    /// mode, optional taps, full or last-row head.
+    fn forward_exec(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+        exec: &Exec,
         mut taps: Option<&mut ActivationTaps>,
+        head: Head,
     ) -> Mat {
         let cfg = &self.cfg;
         let t = tokens.len();
         assert!(t <= cfg.max_seq_len, "sequence too long");
         assert!(valid_len <= t);
+        if head == Head::LastValid {
+            assert!(valid_len >= 1, "last-row head needs a valid token");
+        }
         let mut h = self.embed(tokens);
 
         let record = |taps: &mut ActivationTaps, key: &str, x: &Mat| {
@@ -231,36 +348,47 @@ impl Model {
             }
             // q/k/v consume the same activations: on the sparse path,
             // transpose y once and share it across the three linears
-            let yt = match mode {
-                PruneMode::OnlineWanda { .. } => Some(y.t()),
-                PruneMode::Dense => None,
-            };
-            let q = self.linear_with_t(&y, yt.as_ref(), &names.q, mode);
-            let k = self.linear_with_t(&y, yt.as_ref(), &names.k, mode);
-            let v = self.linear_with_t(&y, yt.as_ref(), &names.v, mode);
+            let yt = if exec.is_sparse() { Some(y.t()) } else { None };
+            let q = self.linear_with_t(&y, yt.as_ref(), &names.q, exec);
+            let k = self.linear_with_t(&y, yt.as_ref(), &names.k, exec);
+            let v = self.linear_with_t(&y, yt.as_ref(), &names.v, exec);
             let attn = self.attention(&q, &k, &v, valid_len);
             if let Some(taps) = taps.as_deref_mut() {
                 record(taps, &names.o.w, &attn);
             }
-            let o = self.linear(&attn, &names.o, mode);
+            let o = self.linear(&attn, &names.o, exec);
             h.add_assign(&o);
 
             let y = layernorm_rows(&h, &self.vecs[&names.ln2_g], &self.vecs[&names.ln2_b], 1e-5);
             if let Some(taps) = taps.as_deref_mut() {
                 record(taps, &names.fc1.w, &y);
             }
-            let mut z = self.linear(&y, &names.fc1, mode);
+            let mut z = self.linear(&y, &names.fc1, exec);
             relu(&mut z);
             if let Some(taps) = taps.as_deref_mut() {
                 record(taps, &names.fc2.w, &z);
             }
-            let out = self.linear(&z, &names.fc2, mode);
+            let out = self.linear(&z, &names.fc2, exec);
             h.add_assign(&out);
         }
 
+        // taps-only traversals are done: everything past here exists only
+        // to produce logits
+        if matches!(head, Head::None) {
+            return Mat::zeros(0, 0);
+        }
         let hidden = layernorm_rows(&h, &self.vecs["ln_f.g"], &self.vecs["ln_f.b"], 1e-5);
-        // tied head -> (T, V); the largest matmul of the pass, worth the pool
-        hidden.matmul_nt_auto(&self.mats["tok_emb"])
+        // tied head; the largest matmul of the pass, worth the pool
+        match head {
+            // full (T, V)
+            Head::All => hidden.matmul_nt_auto(&self.mats["tok_emb"]),
+            // decode only consumes the next-token row: (1, V)
+            Head::LastValid => {
+                let last = Mat::from_vec(1, hidden.cols, hidden.row(valid_len - 1).to_vec());
+                last.matmul_nt_auto(&self.mats["tok_emb"])
+            }
+            Head::None => unreachable!("handled above"),
+        }
     }
 
     /// Forward one sequence (no batching host-side): returns per-position
@@ -271,10 +399,14 @@ impl Model {
     }
 
     /// Collect per-linear input activations on a prompt (dense forward) —
-    /// feeds host-side calibration and the μ-MoE overlap analysis.
+    /// feeds host-side calibration and the μ-MoE overlap analysis. Skips
+    /// the LM head (`Head::None`): every tap is recorded before the final
+    /// layernorm, and selection never consumes logits — this keeps the
+    /// decode engine's per-refresh selection pass from paying the pass's
+    /// largest matmul just to discard it.
     pub fn collect_activations(&self, tokens: &[i32], valid_len: usize) -> ActivationTaps {
         let mut taps = ActivationTaps::new();
-        self.forward_with(tokens, valid_len, PruneMode::Dense, Some(&mut taps));
+        self.forward_exec(tokens, valid_len, &Exec::Dense, Some(&mut taps), Head::None);
         taps
     }
 
@@ -370,14 +502,22 @@ impl Model {
         calibs: &HashMap<String, wanda::WandaCalibrator>,
         rho: f64,
     ) -> Result<(), Error> {
+        // validate before touching any weight: an early error must not
+        // leave the model half-pruned (nor half-pruned under an unchanged
+        // weights_id, which would let a shared LayoutCache serve stale
+        // layouts for the mutated weights)
         for name in self.cfg.linear_names() {
-            let calib = calibs
-                .get(&name)
-                .ok_or_else(|| Error::invariant(format!("missing calibrator for {name}")))?;
+            if !calibs.contains_key(&name) {
+                return Err(Error::invariant(format!("missing calibrator for {name}")));
+            }
+        }
+        for name in self.cfg.linear_names() {
+            let calib = &calibs[&name];
             let w = self.mats.get_mut(&name).expect("linear weight present");
             let mask = wanda::wanda_mask(w, calib, rho);
             mask.apply_in_place(w);
         }
+        self.weights_id = next_weights_id();
         Ok(())
     }
 
@@ -388,6 +528,7 @@ impl Model {
             let mask = crate::pruning::magnitude::magnitude_mask(w, rho);
             mask.apply_in_place(w);
         }
+        self.weights_id = next_weights_id();
     }
 }
 
@@ -515,6 +656,75 @@ mod tests {
     }
 
     #[test]
+    fn headless_activation_collection_matches_instrumented_forward() {
+        // collect_activations skips the LM head; the taps it records must
+        // be exactly the ones a full instrumented forward records
+        let m = random_model(&tiny(), 12);
+        let toks: Vec<i32> = vec![4, 5, 6, 7, PAD_ID];
+        let a = m.collect_activations(&toks, 4);
+        let mut taps = ActivationTaps::new();
+        m.forward_with(&toks, 4, PruneMode::Dense, Some(&mut taps));
+        assert_eq!(a.len(), taps.len());
+        for (name, x) in &a {
+            assert_eq!(x.data, taps[name].data, "{name}");
+        }
+    }
+
+    #[test]
+    fn fixed_forward_matches_direct_compression() {
+        // forward_fixed over layouts compressed from a selection must equal
+        // running those same compressed layouts inline — the layouts fully
+        // determine the pruned computation
+        use crate::moe::select_experts;
+        let m = random_model(&tiny(), 10);
+        let toks: Vec<i32> = vec![2, 7, 1, 8, 2, 8];
+        let sel = select_experts(&m, &toks, 6, 0.5);
+        let layouts: FixedLayouts = m
+            .prunable()
+            .into_iter()
+            .map(|(name, w)| {
+                let rs = Arc::new(sel.masks[&name].compress(w));
+                (name, rs)
+            })
+            .collect();
+        let logits = m.forward_fixed(&toks, 6, &layouts);
+        assert_eq!((logits.rows, logits.cols), (6, m.cfg.vocab_size));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+        // at rho=1.0 the selection keeps everything: fixed == dense
+        let sel_full = select_experts(&m, &toks, 6, 1.0);
+        let full: FixedLayouts = m
+            .prunable()
+            .into_iter()
+            .map(|(name, w)| {
+                let rs = Arc::new(sel_full.masks[&name].compress(w));
+                (name, rs)
+            })
+            .collect();
+        let fixed = m.forward_fixed(&toks, 6, &full);
+        let dense = m.forward(&toks, 6, PruneMode::Dense);
+        for (a, b) in fixed.data.iter().zip(&dense.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn last_row_head_bit_identical_to_full_head() {
+        use crate::moe::select_experts;
+        let m = random_model(&tiny(), 11);
+        let toks: Vec<i32> = vec![5, 9, 3, 6, 4];
+        let sel = select_experts(&m, &toks, 5, 0.6);
+        let layouts: FixedLayouts = m
+            .prunable()
+            .into_iter()
+            .map(|(name, w)| (name.clone(), Arc::new(sel.masks[&name].compress(w))))
+            .collect();
+        let full = m.forward_fixed(&toks, 5, &layouts);
+        let last = m.forward_fixed_last(&toks, 5, &layouts);
+        assert_eq!(last.len(), m.cfg.vocab_size);
+        assert_eq!(last.as_slice(), full.row(4));
+    }
+
+    #[test]
     fn nll_counts_valid_predictions() {
         let m = random_model(&tiny(), 5);
         let toks: Vec<i32> = vec![1, 2, 3, 4, PAD_ID, PAD_ID];
@@ -534,6 +744,29 @@ mod tests {
                 w.sparsity()
             );
         }
+    }
+
+    #[test]
+    fn failed_offline_wanda_mutates_nothing() {
+        // missing calibrators must be detected before any weight is pruned
+        let mut m = random_model(&tiny(), 13);
+        let before = m.mat("layers.0.q.w").data.clone();
+        let id = m.weights_id();
+        let calibs: HashMap<String, wanda::WandaCalibrator> = HashMap::new();
+        assert!(m.apply_offline_wanda(&calibs, 0.5).is_err());
+        assert_eq!(m.mat("layers.0.q.w").data, before);
+        assert_eq!(m.weights_id(), id);
+    }
+
+    #[test]
+    fn weight_mutations_refresh_weights_id() {
+        let mut m = random_model(&tiny(), 14);
+        let id0 = m.weights_id();
+        m.apply_magnitude(0.5);
+        let id1 = m.weights_id();
+        assert_ne!(id0, id1);
+        m.set_mat("layers.0.q.w", Mat::zeros(16, 16));
+        assert_ne!(m.weights_id(), id1);
     }
 
     #[test]

@@ -269,6 +269,128 @@ mod sparse_props {
     }
 }
 
+/// Properties of the decode engine (see `crate::decode`): the layout
+/// cache must be *transparent* (decoding through it is bit-identical to
+/// compressing directly, cold or warm), and the `Refresh(k)` plan must
+/// degenerate to `EveryStep` at k=1 and to `PruneOnce` at k=∞ —
+/// token-for-token and logit-for-logit. Checked over random model shapes,
+/// prompts and active ratios.
+#[cfg(test)]
+mod decode_props {
+    use super::{check, ensure, PropResult};
+    use crate::decode::{decode_greedy, DecodeConfig, DecodeOutput};
+    use crate::model::ModelConfig;
+    use crate::nn::{random_model, Model};
+    use crate::pruning::MaskPlan;
+    use crate::tensor::LayoutCache;
+    use crate::util::rng::Pcg32;
+
+    /// Derive a random tiny model + prompt + ρ + generation length from a
+    /// (seed, rho) pair. Shapes stay small so each case (several decodes,
+    /// each a handful of forwards) is fast.
+    fn case(seed: u64, rho: f64) -> (Model, Vec<i32>, f64, usize) {
+        let mut rng = Pcg32::new(seed, 31);
+        let n_layers = 1 + rng.gen_range_usize(2);
+        let n_heads = 1 + rng.gen_range_usize(2);
+        let head_dim = 4 + 4 * rng.gen_range_usize(2); // 4 or 8
+        let cfg = ModelConfig::new("prop-tiny", n_layers, n_heads, n_heads * head_dim);
+        let model = random_model(&cfg, seed ^ 0xABCD);
+        let plen = 2 + rng.gen_range_usize(6);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+        // keep rho off the degenerate extremes but spanning wide
+        let rho = 0.05 + 0.9 * rho.clamp(0.0, 1.0);
+        let max_new = 3 + rng.gen_range_usize(3);
+        (model, prompt, rho, max_new)
+    }
+
+    fn dcfg(rho: f64, plan: MaskPlan, max_new: usize) -> DecodeConfig {
+        DecodeConfig {
+            rho,
+            plan,
+            max_new,
+            stop_at_eos: false,
+        }
+    }
+
+    fn bit_identical(label: &str, a: &DecodeOutput, b: &DecodeOutput) -> PropResult {
+        ensure(a.tokens == b.tokens, format!("{label}: tokens diverged"))?;
+        ensure(
+            a.steps.len() == b.steps.len(),
+            format!("{label}: step counts diverged"),
+        )?;
+        for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            ensure(
+                sa.token == sb.token,
+                format!("{label}: step {i} token {} vs {}", sa.token, sb.token),
+            )?;
+            ensure(
+                sa.logits == sb.logits,
+                format!("{label}: step {i} logits not bit-identical"),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Satellite 1: cache transparency. A `PruneOnce` decode through a
+    /// cold cache, through a warm cache (round-trip: the second decode
+    /// reads back what the first inserted), and with no cache at all must
+    /// be bit-identical — the cache may only skip recompression, never
+    /// change what executes.
+    fn prop_cache_round_trip_transparent(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let cfg = dcfg(rho, MaskPlan::PruneOnce, max_new);
+        let direct = decode_greedy(&model, &prompt, &cfg, None);
+        let mut cache = LayoutCache::new(64);
+        let cold = decode_greedy(&model, &prompt, &cfg, Some(&mut cache));
+        let warm = decode_greedy(&model, &prompt, &cfg, Some(&mut cache));
+        bit_identical("cold cache vs direct", &cold, &direct)?;
+        bit_identical("warm cache vs direct", &warm, &direct)?;
+        ensure(
+            warm.cache_misses == 0,
+            format!("round-trip recompressed {} layouts", warm.cache_misses),
+        )?;
+        ensure(warm.cache_hits > 0, "warm decode never hit the cache")?;
+        Ok(())
+    }
+
+    /// Satellite 2: plan degeneration. `Refresh(1)` ≡ `EveryStep` and
+    /// `Refresh(∞)` ≡ `PruneOnce`, token-for-token on random prompts.
+    fn prop_refresh_degenerates_to_endpoints(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let every = decode_greedy(&model, &prompt, &dcfg(rho, MaskPlan::EveryStep, max_new), None);
+        let r1 = decode_greedy(&model, &prompt, &dcfg(rho, MaskPlan::Refresh(1), max_new), None);
+        bit_identical("Refresh(1) vs EveryStep", &r1, &every)?;
+        let once = decode_greedy(&model, &prompt, &dcfg(rho, MaskPlan::PruneOnce, max_new), None);
+        let rinf = decode_greedy(
+            &model,
+            &prompt,
+            &dcfg(rho, MaskPlan::Refresh(usize::MAX), max_new),
+            None,
+        );
+        bit_identical("Refresh(MAX) vs PruneOnce", &rinf, &once)?;
+        ensure(
+            every.refresh_count == every.steps.len(),
+            "EveryStep must refresh every step",
+        )?;
+        ensure(once.refresh_count == 1, "PruneOnce must refresh exactly once")?;
+        Ok(())
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        (r.next_u64(), r.next_f64())
+    }
+
+    #[test]
+    fn decode_cache_round_trip_is_transparent() {
+        check(201, 10, gen_seed_rho, prop_cache_round_trip_transparent);
+    }
+
+    #[test]
+    fn refresh_plan_degenerates_to_every_step_and_prune_once() {
+        check(202, 10, gen_seed_rho, prop_refresh_degenerates_to_endpoints);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -22,11 +22,14 @@
 //! the online μ-MoE path never materializes a zeroed dense copy.
 
 pub mod magnitude;
+pub mod plan;
 pub mod selection;
 pub mod sparsegpt;
 pub mod wanda;
 
-use crate::tensor::{Mat, RowSparse};
+pub use plan::MaskPlan;
+
+use crate::tensor::{fnv1a64, Mat, RowSparse};
 
 /// Number of *inactive* weights per row for active ratio `rho`, clipped so
 /// at least one weight per row survives (mirrors python `pruning.kc_for`).
@@ -223,6 +226,20 @@ impl Mask {
         }
     }
 
+    /// Content hash of the active set (shape + bit words). Two masks with
+    /// equal fingerprints select (collision aside) the same micro-experts,
+    /// which is what makes the fingerprint a valid
+    /// [`crate::tensor::LayoutKey`] component: same mask + same weights ⇒
+    /// same compressed layout. The padding-bits-are-zero invariant keeps
+    /// the word hash canonical.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(
+            [self.rows as u64, self.cols as u64]
+                .into_iter()
+                .chain(self.words.iter().copied()),
+        )
+    }
+
     /// Jaccard overlap of active sets — used by `moe::overlap` to show how
     /// prompt-dependent the micro-expert selection is.
     pub fn jaccard(&self, other: &Mask) -> f64 {
@@ -372,6 +389,26 @@ mod tests {
         let rs2 = m2.compress(&w2);
         assert_eq!(rs2.values, vec![0.0]);
         assert_eq!(rs2.nnz(), 1);
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let mut rng = Pcg32::new(9, 0);
+        let s = Mat::from_vec(4, 70, rng.normal_vec(4 * 70)); // spans word tail
+        let a = mask_from_scores(&s, 0.5, selection::Selector::KthValue);
+        let b = mask_from_scores(&s, 0.5, selection::Selector::Sort);
+        // same scores, same rho, any selector: same active set, same hash
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // flip one bit: different hash
+        let mut c = a.clone();
+        let flip = c.at(0, 0);
+        c.set(0, 0, !flip);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // same bits, different shape: different hash
+        let ones_a = Mask::ones(2, 64);
+        let ones_b = Mask::ones(1, 128);
+        assert_ne!(ones_a.fingerprint(), ones_b.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Mask reuse policy for autoregressive decode.
+//!
+//! μ-MoE selects micro-experts per prompt; during decode the question is
+//! *when to re-select* as the context grows. Re-selecting every step tracks
+//! the context exactly but pays a full selection pass per token;
+//! prune-once reuses the prompt's selection (and its compressed layouts)
+//! for the whole generation. `MaskPlan` names the policy; the decode
+//! engine ([`crate::decode`]) executes it and
+//! [`crate::eval::host::decode_drift`] measures what the reuse costs in
+//! logit divergence.
+
+use crate::util::error::Error;
+
+/// When the decode loop re-runs micro-expert selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskPlan {
+    /// Re-select on every decode step (the adaptive baseline — maximal
+    /// quality tracking, no reuse).
+    EveryStep,
+    /// Select once on the prompt and reuse the compressed layouts for the
+    /// whole generation (maximal reuse).
+    PruneOnce,
+    /// Re-select every `k` steps (`k >= 1`). `Refresh(1)` is equivalent to
+    /// [`MaskPlan::EveryStep`]; `Refresh(usize::MAX)` is equivalent to
+    /// [`MaskPlan::PruneOnce`] for any practical generation length.
+    Refresh(usize),
+}
+
+impl MaskPlan {
+    /// Does step `step` (0-based; step 0 is the prompt) re-run selection?
+    /// Every plan refreshes at step 0 — there is nothing to reuse yet.
+    pub fn refreshes_at(&self, step: usize) -> bool {
+        match *self {
+            MaskPlan::EveryStep => true,
+            MaskPlan::PruneOnce => step == 0,
+            // k = 0 is not constructible via parse(); treat it as 1 rather
+            // than dividing by zero if someone builds it by hand
+            MaskPlan::Refresh(k) => step % k.max(1) == 0,
+        }
+    }
+
+    /// Parse a CLI/config spelling: `every-step`, `prune-once` or
+    /// `refresh:<k>` with `k >= 1`.
+    pub fn parse(s: &str) -> Result<MaskPlan, Error> {
+        match s {
+            "every-step" => Ok(MaskPlan::EveryStep),
+            "prune-once" => Ok(MaskPlan::PruneOnce),
+            _ => {
+                if let Some(k) = s.strip_prefix("refresh:") {
+                    let k: usize = k.parse().map_err(|_| {
+                        Error::config(format!("bad refresh interval in plan '{s}'"))
+                    })?;
+                    if k == 0 {
+                        return Err(Error::config("refresh interval must be >= 1"));
+                    }
+                    return Ok(MaskPlan::Refresh(k));
+                }
+                Err(Error::config(format!(
+                    "unknown mask plan '{s}' (expected every-step | prune-once | refresh:<k>)"
+                )))
+            }
+        }
+    }
+
+    /// Stable display name (bench tables, JSON dumps).
+    pub fn label(&self) -> String {
+        match *self {
+            MaskPlan::EveryStep => "every-step".to_string(),
+            MaskPlan::PruneOnce => "prune-once".to_string(),
+            MaskPlan::Refresh(k) => format!("refresh:{k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refresh_schedule() {
+        assert!(MaskPlan::EveryStep.refreshes_at(0));
+        assert!(MaskPlan::EveryStep.refreshes_at(7));
+        assert!(MaskPlan::PruneOnce.refreshes_at(0));
+        assert!(!MaskPlan::PruneOnce.refreshes_at(1));
+        let r3 = MaskPlan::Refresh(3);
+        assert!(r3.refreshes_at(0));
+        assert!(!r3.refreshes_at(1));
+        assert!(!r3.refreshes_at(2));
+        assert!(r3.refreshes_at(3));
+        assert!(r3.refreshes_at(6));
+    }
+
+    #[test]
+    fn refresh_one_is_every_step_and_max_is_prune_once() {
+        for step in 0..50 {
+            assert_eq!(
+                MaskPlan::Refresh(1).refreshes_at(step),
+                MaskPlan::EveryStep.refreshes_at(step)
+            );
+            assert_eq!(
+                MaskPlan::Refresh(usize::MAX).refreshes_at(step),
+                MaskPlan::PruneOnce.refreshes_at(step)
+            );
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for plan in [MaskPlan::EveryStep, MaskPlan::PruneOnce, MaskPlan::Refresh(4)] {
+            assert_eq!(MaskPlan::parse(&plan.label()).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(MaskPlan::parse("refresh:0").is_err());
+        assert!(MaskPlan::parse("refresh:x").is_err());
+        assert!(MaskPlan::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn hand_built_refresh_zero_does_not_panic() {
+        assert!(MaskPlan::Refresh(0).refreshes_at(0));
+        assert!(MaskPlan::Refresh(0).refreshes_at(5));
+    }
+}

@@ -10,7 +10,7 @@ mod linalg;
 mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
-pub use sparse::{matmul_tn_sparse, RowSparse};
+pub use sparse::{fnv1a64, matmul_tn_sparse, rho_milli, LayoutCache, LayoutKey, RowSparse};
 
 use crate::util::threadpool::{self, ThreadPool};
 

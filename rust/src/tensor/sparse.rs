@@ -19,6 +19,8 @@
 //! is 3-6x slower per MAC and would erase the sparsity win entirely).
 
 use super::Mat;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// CSR weight matrix: per output row, the surviving column indices
 /// (ascending) and their values. Shape is `(rows, cols) = (d_out, d_in)`.
@@ -96,6 +98,178 @@ impl RowSparse {
             }
         }
         out
+    }
+
+    /// Content hash over shape, structure and value bits — two layouts with
+    /// equal fingerprints are (collision aside) the same compressed matrix.
+    /// Used by cache-transparency checks; the *cache key* hashes the mask
+    /// (cheaper, available before compression), not the layout.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(
+            [self.rows as u64, self.cols as u64]
+                .into_iter()
+                .chain(self.row_ptr.iter().map(|&p| p as u64))
+                .chain(self.col_idx.iter().map(|&c| c as u64))
+                .chain(self.values.iter().map(|v| v.to_bits() as u64)),
+        )
+    }
+}
+
+/// FNV-1a over a stream of u64 words (byte-at-a-time, little-endian).
+/// Shared by [`RowSparse::fingerprint`] and
+/// [`crate::pruning::Mask::fingerprint`] so every layer of the cache speaks
+/// the same hash.
+pub fn fnv1a64<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Snap an active ratio to integer milli-units for use in hashable cache
+/// keys — the router already snaps ρ to configured levels, so distinct
+/// levels stay distinct keys and float identity never leaks into the map.
+pub fn rho_milli(rho: f64) -> u32 {
+    (rho.clamp(0.0, 1.0) * 1000.0).round() as u32
+}
+
+/// Cache key for one compressed layout: which model's weights, which
+/// linear, at which snapped sparsity level, under which micro-expert
+/// selection.
+///
+/// The weights id matters because the mask fingerprint hashes only the
+/// *selection bits* — at ρ=1.0 every mask is all-ones, so without weight
+/// identity two same-architecture models would collide on every key and a
+/// shared cache would serve one model's values to the other.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct LayoutKey {
+    /// Weight-set identity ([`crate::nn::Model::weights_id`]; 0 in tests
+    /// that exercise the cache without a model).
+    pub weights: u64,
+    /// Prunable linear name (e.g. `layers.3.fc1.w`).
+    pub linear: String,
+    /// Snapped active ratio in milli-units (see [`rho_milli`]).
+    pub rho_milli: u32,
+    /// Mask fingerprint ([`crate::pruning::Mask::fingerprint`]).
+    pub fingerprint: u64,
+}
+
+impl LayoutKey {
+    pub fn new(weights: u64, linear: impl Into<String>, rho: f64, fingerprint: u64) -> LayoutKey {
+        LayoutKey {
+            weights,
+            linear: linear.into(),
+            rho_milli: rho_milli(rho),
+            fingerprint,
+        }
+    }
+}
+
+/// LRU cache of compressed [`RowSparse`] layouts.
+///
+/// Compression walks every active weight of a linear; for a repeated
+/// (prompt, ρ-level) — the autoregressive decode loop, batch-mates at the
+/// same snapped level, repeated prefixes — the selection produces the same
+/// mask, so the layout can be reused instead of rebuilt. Entries are
+/// handed out as `Arc` so a hit is one clone, and eviction is
+/// least-recently-used once `capacity` is exceeded.
+///
+/// Not internally synchronized: wrap in a `Mutex` to share across threads
+/// (the coordinator's router does).
+pub struct LayoutCache {
+    cap: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    entries: HashMap<LayoutKey, (Arc<RowSparse>, u64)>,
+}
+
+impl LayoutCache {
+    pub fn new(capacity: usize) -> LayoutCache {
+        assert!(capacity > 0, "layout cache capacity must be > 0");
+        LayoutCache {
+            cap: capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Non-counting, non-bumping presence check (tests / introspection).
+    pub fn contains(&self, key: &LayoutKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Look up a layout, counting a hit (and refreshing recency) or a miss.
+    pub fn get(&mut self, key: &LayoutKey) -> Option<Arc<RowSparse>> {
+        self.tick += 1;
+        match self.entries.get_mut(key) {
+            Some((arc, tick)) => {
+                *tick = self.tick;
+                self.hits += 1;
+                Some(arc.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// The cache's primary operation: return the cached layout for `key`,
+    /// or build, insert and return it (evicting the least-recently-used
+    /// entry if over capacity). The just-inserted entry is never the
+    /// eviction victim.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: LayoutKey,
+        build: impl FnOnce() -> RowSparse,
+    ) -> Arc<RowSparse> {
+        self.tick += 1;
+        if let Some((arc, tick)) = self.entries.get_mut(&key) {
+            *tick = self.tick;
+            self.hits += 1;
+            return arc.clone();
+        }
+        self.misses += 1;
+        let arc = Arc::new(build());
+        self.entries.insert(key, (arc.clone(), self.tick));
+        if self.entries.len() > self.cap {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, tick))| *tick)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                self.entries.remove(&k);
+            }
+        }
+        arc
     }
 }
 
@@ -197,6 +371,104 @@ mod tests {
         let a = x.matmul_nt_sparse(&rs);
         let b = matmul_tn_sparse(&x.t(), &rs);
         assert_eq!(a.data, b.data);
+    }
+
+    fn key(name: &str, fp: u64) -> LayoutKey {
+        LayoutKey::new(0, name, 0.5, fp)
+    }
+
+    fn layout(seed: u64) -> RowSparse {
+        let mut rng = Pcg32::new(seed, 7);
+        let w = randmat(&mut rng, 3, 8);
+        RowSparse::from_dense(&w)
+    }
+
+    #[test]
+    fn cache_capacity_bound_respected() {
+        let mut c = LayoutCache::new(2);
+        for i in 0..5u64 {
+            c.get_or_insert_with(key("a", i), || layout(i));
+            assert!(c.len() <= 2, "len {} exceeds capacity", c.len());
+        }
+        assert_eq!(c.misses(), 5);
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let mut c = LayoutCache::new(2);
+        c.get_or_insert_with(key("a", 1), || layout(1));
+        c.get_or_insert_with(key("b", 2), || layout(2));
+        // touch "a" so "b" becomes the LRU entry
+        assert!(c.get(&key("a", 1)).is_some());
+        c.get_or_insert_with(key("c", 3), || layout(3));
+        assert!(c.contains(&key("a", 1)), "recently-used entry evicted");
+        assert!(!c.contains(&key("b", 2)), "LRU entry survived");
+        assert!(c.contains(&key("c", 3)));
+    }
+
+    #[test]
+    fn cache_hit_returns_cached_layout_without_rebuilding() {
+        let mut c = LayoutCache::new(4);
+        let first = c.get_or_insert_with(key("a", 9), || layout(9));
+        let again = c.get_or_insert_with(key("a", 9), || panic!("must not rebuild on hit"));
+        assert_eq!(first.fingerprint(), again.fingerprint());
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn cache_counters_consistent_under_interleaved_keys() {
+        let mut c = LayoutCache::new(3);
+        let seq: [(u64, bool); 8] = [
+            (1, false), // miss
+            (2, false), // miss
+            (1, true),  // hit
+            (3, false), // miss
+            (2, true),  // hit
+            (4, false), // miss -> evicts fp=1 (LRU after the hits above)
+            (1, false), // miss again (was evicted) -> evicts fp=3
+            (2, true),  // hit (fp=2 was refreshed at step 4)
+        ];
+        for (i, &(fp, expect_hit)) in seq.iter().enumerate() {
+            let h0 = c.hits();
+            c.get_or_insert_with(key("x", fp), || layout(fp));
+            assert_eq!(c.hits() > h0, expect_hit, "step {i} (fp={fp})");
+        }
+        assert_eq!(c.hits() + c.misses(), seq.len() as u64);
+        assert_eq!((c.hits(), c.misses()), (3, 5));
+        assert!(c.len() <= 3);
+    }
+
+    #[test]
+    fn cache_distinguishes_weights_linear_rho_and_fingerprint() {
+        let mut c = LayoutCache::new(8);
+        c.get_or_insert_with(LayoutKey::new(0, "a", 0.5, 1), || layout(1));
+        // same fingerprint, different linear / level / weight set:
+        // all distinct keys
+        c.get_or_insert_with(LayoutKey::new(0, "b", 0.5, 1), || layout(2));
+        c.get_or_insert_with(LayoutKey::new(0, "a", 0.7, 1), || layout(3));
+        c.get_or_insert_with(LayoutKey::new(9, "a", 0.5, 1), || layout(4));
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.misses(), 4);
+    }
+
+    #[test]
+    fn rho_milli_snaps_levels_distinctly() {
+        assert_eq!(rho_milli(0.5), 500);
+        assert_eq!(rho_milli(0.55), 550);
+        assert_eq!(rho_milli(1.0), 1000);
+        assert_eq!(rho_milli(-0.1), 0);
+        assert_eq!(rho_milli(1.5), 1000);
+        assert_ne!(rho_milli(0.4), rho_milli(0.6));
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = layout(1);
+        let b = layout(1);
+        let c = layout(2);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

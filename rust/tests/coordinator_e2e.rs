@@ -34,7 +34,8 @@ fn serves_concurrent_mixed_sparsity_requests() {
     }
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone());
+    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
+        .expect("router config");
     let depth = router.depth_handle();
     let handle = Server::start(cfg, depth, metrics.clone()).expect("server");
 
@@ -81,7 +82,8 @@ fn same_prompt_same_rho_is_deterministic() {
     }
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone());
+    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
+        .expect("router config");
     let handle = Server::start(cfg, router.depth_handle(), metrics).expect("server");
 
     let mut toks = Vec::new();
@@ -111,7 +113,8 @@ fn dense_route_taken_for_rho_one() {
     // produce sane logits through that route
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone());
+    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
+        .expect("router config");
     let handle = Server::start(cfg, router.depth_handle(), metrics).expect("server");
     let (tx, rx) = channel();
     let req = router
@@ -133,7 +136,8 @@ fn admission_control_sheds_overload() {
     let mut cfg = serve_cfg();
     cfg.queue_cap = 4;
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone());
+    let router =
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config");
     // simulate a stuck server: depth never decremented
     router.depth_handle().store(4, Ordering::Relaxed);
     for _ in 0..5 {
@@ -156,7 +160,8 @@ fn server_rejects_unknown_model_at_startup() {
     let mut cfg = serve_cfg();
     cfg.model = "mu-opt-nonexistent".into();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone());
+    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
+        .expect("router config");
     let r = Server::start(cfg, router.depth_handle(), metrics);
     assert!(r.is_err(), "startup must fail fast on unknown model");
 }
