@@ -1,19 +1,27 @@
 //! E2E serving validation (DESIGN.md §7): start the full coordinator
-//! (router → sparsity-aware dynamic batcher → PJRT μ-MoE session), replay
-//! a Poisson trace of mixed-domain, mixed-sparsity prompts in real time,
-//! and report throughput, latency percentiles and batch occupancy.
+//! (router → sparsity-aware dynamic batcher → serve loop on the engine
+//! the config selects), replay a Poisson trace of mixed-domain,
+//! mixed-sparsity prompts in real time, and report throughput, latency
+//! percentiles and batch occupancy.
 //!
 //!     make artifacts && cargo run --release --example serve_trace
 //!
-//! The numbers printed here are the repo's serving headline and are
-//! recorded in EXPERIMENTS.md.
+//! The default `host` engine needs no `pjrt` feature (only the data
+//! corpora under artifacts/data); set MUMOE_SERVE_ENGINE=pjrt on a
+//! `--features pjrt` build to drive the artifact sessions instead. The
+//! numbers printed here are the repo's serving headline and are recorded
+//! in EXPERIMENTS.md.
 
-use mumoe::config::ServeConfig;
+use mumoe::config::{EngineKind, ServeConfig};
 use mumoe::coordinator::server::replay_trace;
 
 fn main() -> Result<(), mumoe::util::error::Error> {
     let model =
         std::env::var("MUMOE_SERVE_MODEL").unwrap_or_else(|_| "mu-opt-micro".into());
+    let engine = match std::env::var("MUMOE_SERVE_ENGINE") {
+        Ok(s) => EngineKind::parse(&s)?,
+        Err(_) => EngineKind::Host,
+    };
     let n: usize = std::env::var("MUMOE_SERVE_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -25,13 +33,17 @@ fn main() -> Result<(), mumoe::util::error::Error> {
 
     let cfg = ServeConfig {
         model,
+        engine,
         rho_levels: vec![0.4, 0.6, 1.0],
         batch_window_us: 4_000,
         ..Default::default()
     };
     println!(
-        "serving {} — replaying {n} requests @ {rate}/s over rho levels {:?}",
-        cfg.model, cfg.rho_levels
+        "serving {} on the {} engine — replaying {n} requests @ {rate}/s \
+         over rho levels {:?}",
+        cfg.model,
+        cfg.engine.label(),
+        cfg.rho_levels
     );
     let report = replay_trace(cfg, n, rate)?;
     println!("{report}");

@@ -1,0 +1,241 @@
+//! Serve-throughput bench: batched host decode (the `Engine` path) vs
+//! the pre-engine per-request path.
+//!
+//! * **batched** — one `decode::decode_batch` over the whole batch
+//!   through one shared `LayoutCache` (what `HostEngine::execute` runs
+//!   per `DecodeBatch`);
+//! * **per-request** — N independent `decode_greedy` calls, each with its
+//!   own fresh cache (how `generate` drove the host engine before the
+//!   serving redesign: no state shared between requests).
+//!
+//! The workload cycles two distinct prompts across the batch — the
+//! repeated-prefix case serving actually sees — so at batch > 1 the
+//! batched path compresses each selection once and batch-mates hit the
+//! shared cache. Measured at batch ∈ {1, 4, 8} × ρ ∈ {0.3, 0.5, 0.7},
+//! best of `reps` runs, emitting `BENCH_serve_throughput.json`.
+//!
+//! Acceptance (non-smoke):
+//! * every cell: batched tok/s ≥ 0.9 × per-request tok/s (identical work
+//!   at batch = 1, so the bound only filters timing noise);
+//! * every batch > 1 cell: batched cache misses < per-request total
+//!   misses — the structural proof that batch-mates shared layouts,
+//!   immune to timer jitter.
+//!
+//! `--smoke`: tiny model, 1 rep, single (batch, ρ) cell — CI runs this so
+//! the bench cannot bit-rot.
+
+use mumoe::decode::{decode_batch, decode_greedy, BatchRequest, DecodeConfig};
+use mumoe::model::config_by_name;
+use mumoe::model::ModelConfig;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use mumoe::tensor::LayoutCache;
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+struct BenchShape {
+    model: Model,
+    model_name: String,
+    batches: Vec<usize>,
+    rhos: Vec<f64>,
+    n_new: usize,
+    reps: usize,
+    cache_cap: usize,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            model: random_model(&ModelConfig::new("smoke-tiny", 2, 2, 16), 7),
+            model_name: "smoke-tiny(2x2x16)".into(),
+            batches: vec![4],
+            rhos: vec![0.5],
+            n_new: 2,
+            reps: 1,
+            cache_cap: 512,
+        }
+    } else {
+        let cfg = config_by_name("mu-opt-micro").expect("known model");
+        BenchShape {
+            model: random_model(&cfg, 7),
+            model_name: cfg.name.clone(),
+            batches: vec![1, 4, 8],
+            rhos: vec![0.3, 0.5, 0.7],
+            n_new: 16,
+            reps: 3,
+            cache_cap: 4096,
+        }
+    }
+}
+
+/// The serving workload: `batch` prompts cycling two distinct bases.
+fn prompts(batch: usize) -> Vec<Vec<i32>> {
+    (0..batch)
+        .map(|i| {
+            let base = if i % 2 == 0 { 19 } else { 101 };
+            (0..20).map(|j| (j * 53 + base) % 256).collect()
+        })
+        .collect()
+}
+
+struct Cell {
+    batched_tps: f64,
+    per_request_tps: f64,
+    batched_misses: u64,
+    per_request_misses: u64,
+}
+
+fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
+    let prompts = prompts(batch);
+    let plan = MaskPlan::PruneOnce;
+
+    // batched: one decode_batch through one shared cache (fresh per rep so
+    // every rep pays the same compression bill)
+    let mut batched_tps = 0.0f64;
+    let mut batched_misses = 0u64;
+    for _ in 0..sh.reps {
+        let items: Vec<BatchRequest> = prompts
+            .iter()
+            .map(|p| BatchRequest {
+                prompt: p,
+                max_new: sh.n_new,
+                plan,
+            })
+            .collect();
+        let mut cache = LayoutCache::new(sh.cache_cap);
+        let t0 = Instant::now();
+        let outs = decode_batch(&sh.model, &items, rho, false, Some(&mut cache));
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let tokens: usize = outs.iter().map(|o| o.steps.len()).sum();
+        batched_tps = batched_tps.max(tokens as f64 / dt);
+        batched_misses = cache.misses();
+    }
+
+    // per-request: N independent decode_greedy calls, fresh cache each
+    let mut per_request_tps = 0.0f64;
+    let mut per_request_misses = 0u64;
+    for _ in 0..sh.reps {
+        let t0 = Instant::now();
+        let mut tokens = 0usize;
+        let mut misses = 0u64;
+        for p in &prompts {
+            let mut cache = LayoutCache::new(sh.cache_cap);
+            let out = decode_greedy(
+                &sh.model,
+                p,
+                &DecodeConfig {
+                    rho,
+                    plan,
+                    max_new: sh.n_new,
+                    stop_at_eos: false,
+                },
+                Some(&mut cache),
+            );
+            tokens += out.steps.len();
+            misses += cache.misses();
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        per_request_tps = per_request_tps.max(tokens as f64 / dt);
+        per_request_misses = misses;
+    }
+
+    Cell {
+        batched_tps,
+        per_request_tps,
+        batched_misses,
+        per_request_misses,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sh = shape(smoke);
+
+    let mut table = mumoe::benchlib::Table::new(
+        format!(
+            "Serve throughput: batched vs per-request host decode, {} new \
+             tokens, {} ({})",
+            sh.n_new,
+            sh.model_name,
+            if smoke { "smoke" } else { "full" }
+        ),
+        &[
+            "batch",
+            "rho",
+            "batched tok/s",
+            "per-req tok/s",
+            "speedup",
+            "batched misses",
+            "per-req misses",
+        ],
+    );
+
+    let mut results = Vec::new();
+    let mut accept = true;
+    for &batch in &sh.batches {
+        for &rho in &sh.rhos {
+            let c = run_cell(&sh, batch, rho);
+            let speedup = c.batched_tps / c.per_request_tps.max(1e-12);
+            table.row(vec![
+                format!("{batch}"),
+                format!("{rho:.1}"),
+                format!("{:.2}", c.batched_tps),
+                format!("{:.2}", c.per_request_tps),
+                format!("{speedup:.2}x"),
+                format!("{}", c.batched_misses),
+                format!("{}", c.per_request_misses),
+            ]);
+            if c.batched_tps < 0.9 * c.per_request_tps {
+                accept = false;
+            }
+            if batch > 1 && c.batched_misses >= c.per_request_misses {
+                accept = false;
+            }
+            results.push(Json::Obj(HashMap::from([
+                ("batch".into(), jnum(batch as f64)),
+                ("rho".into(), jnum(rho)),
+                ("batched_tokens_per_sec".into(), jnum(c.batched_tps)),
+                ("per_request_tokens_per_sec".into(), jnum(c.per_request_tps)),
+                ("speedup".into(), jnum(speedup)),
+                ("batched_cache_misses".into(), jnum(c.batched_misses as f64)),
+                (
+                    "per_request_cache_misses".into(),
+                    jnum(c.per_request_misses as f64),
+                ),
+            ])));
+        }
+    }
+    table.print();
+
+    println!(
+        "\nACCEPTANCE: batched >= per-request tok/s (0.9x noise floor) and \
+         fewer compressions at batch > 1 ({}).",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        // smoke exists to execute the code, not to gate on 1-rep timings
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), Json::Str("serve_throughput".into())),
+        ("model".into(), Json::Str(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("n_new_tokens".into(), jnum(sh.n_new as f64)),
+        ("cells".into(), Json::Arr(results)),
+        ("accept_batched_at_least_per_request".into(), Json::Bool(accept)),
+    ]));
+    let path = "BENCH_serve_throughput.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    if !accept && !smoke {
+        std::process::exit(1);
+    }
+}

@@ -21,6 +21,10 @@ pub struct Args {
     pub cmd: String,
     values: HashMap<String, String>,
     flags: Vec<String>,
+    /// Option names the user actually typed (either spelling), as opposed
+    /// to spec defaults — lets config-file merging distinguish "explicit
+    /// override" from "untouched default".
+    given: Vec<String>,
     pub positional: Vec<String>,
 }
 
@@ -53,6 +57,7 @@ impl Args {
                             "flag --{key} takes no value"
                         )));
                     }
+                    out.given.push(key.clone());
                     out.flags.push(key);
                 } else {
                     let v = match inline_val {
@@ -64,6 +69,7 @@ impl Args {
                             })?
                             .clone(),
                     };
+                    out.given.push(key.clone());
                     out.values.insert(key, v);
                 }
             } else {
@@ -75,6 +81,12 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Was this option explicitly provided (either `--name value` or
+    /// `--name=value`), rather than filled from its spec default?
+    pub fn given(&self, name: &str) -> bool {
+        self.given.iter().any(|g| g == name)
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -191,6 +203,21 @@ mod tests {
         assert_eq!(a.get("model"), Some("mu-opt-micro"));
         assert_eq!(a.get_f64("rho").unwrap(), 0.5);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn given_tracks_explicit_options_in_both_spellings() {
+        let a = Args::parse(&sv(&["--rho", "0.5", "--model=mu-opt-mini"]), SPEC).unwrap();
+        assert!(a.given("rho"), "space spelling");
+        assert!(a.given("model"), "equals spelling");
+        assert!(!a.given("verbose"), "untyped flag is not given");
+        // defaulted option has a value but was never given
+        let b = Args::parse(&sv(&["--rho", "0.5"]), SPEC).unwrap();
+        assert_eq!(b.get("model"), Some("mu-opt-micro"));
+        assert!(!b.given("model"));
+        assert!(Args::parse(&sv(&["--verbose", "--rho", "1"]), SPEC)
+            .unwrap()
+            .given("verbose"));
     }
 
     #[test]

@@ -197,6 +197,79 @@ fn split_top_level(s: &str) -> Vec<String> {
 // Typed configs
 // ---------------------------------------------------------------------------
 
+/// Which execution backend the serve loop drives — the selector behind the
+/// `coordinator::engine::Engine` trait. Lives here (not in `coordinator`)
+/// because it is pure configuration: picking `Pjrt` in a build without the
+/// `pjrt` feature is a config error surfaced at `Server::start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Batched greedy decode on the host model through the router's shared
+    /// layout cache. Works in the default (no-`pjrt`) build.
+    Host,
+    /// The PJRT artifact session path (single-token batches). Needs
+    /// `--features pjrt`.
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse a CLI/config spelling: `host` | `pjrt`.
+    pub fn parse(s: &str) -> Result<EngineKind, Error> {
+        match s {
+            "host" => Ok(EngineKind::Host),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            other => Err(Error::config(format!(
+                "unknown engine '{other}' (expected host | pjrt)"
+            ))),
+        }
+    }
+
+    /// Stable display name (logs, bench tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Host => "host",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Whether the backend honours `Request::max_new > 1`. The PJRT
+    /// artifact computes one last-position logits row per request, so the
+    /// router rejects multi-token requests bound for it at admission.
+    pub fn supports_multi_token(&self) -> bool {
+        matches!(self, EngineKind::Host)
+    }
+}
+
+/// Multi-token decode knobs for the serving path (the `[decode]` config
+/// section). The host engine honours all of them; the pjrt engine is
+/// single-token, which `Router::admit` enforces via
+/// [`EngineKind::supports_multi_token`].
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeKnobs {
+    /// New tokens generated for a request that does not ask for a count.
+    pub default_max_new: usize,
+    /// Upper bound on per-request `max_new`; admission rejects above it.
+    pub max_new_cap: usize,
+    /// Mask-reuse plan applied to requests that do not carry one.
+    pub plan: crate::pruning::MaskPlan,
+    /// Stop a request's generation at EOS (off ⇒ always `max_new` steps).
+    pub stop_at_eos: bool,
+    /// Host-engine batch capacity (the pjrt engine's capacity comes from
+    /// the artifact's static batch dim instead).
+    pub batch_size: usize,
+}
+
+impl Default for DecodeKnobs {
+    fn default() -> Self {
+        Self {
+            default_max_new: 1,
+            max_new_cap: 64,
+            plan: crate::pruning::MaskPlan::PruneOnce,
+            stop_at_eos: true,
+            batch_size: 8,
+        }
+    }
+}
+
 /// Everything the `serve` subcommand needs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -204,6 +277,8 @@ pub struct ServeConfig {
     pub artifacts_dir: String,
     /// Model to serve (mu-opt-micro|mini|small).
     pub model: String,
+    /// Execution backend the serve loop drives.
+    pub engine: EngineKind,
     /// Max microseconds a request may wait for batch-mates.
     pub batch_window_us: u64,
     /// Max requests queued before admission control sheds load.
@@ -219,6 +294,8 @@ pub struct ServeConfig {
     /// Capacity (entries) of the shared compressed-layout cache keyed by
     /// `(model weights, linear, snapped-ρ level, mask fingerprint)`.
     pub layout_cache_cap: usize,
+    /// Multi-token decode knobs (see [`DecodeKnobs`]).
+    pub decode: DecodeKnobs,
 }
 
 impl Default for ServeConfig {
@@ -226,12 +303,14 @@ impl Default for ServeConfig {
         Self {
             artifacts_dir: "artifacts".into(),
             model: "mu-opt-micro".into(),
+            engine: EngineKind::Host,
             batch_window_us: 2_000,
             queue_cap: 256,
             rho_levels: vec![0.2, 0.4, 0.5, 0.6, 0.8, 1.0],
             default_rho: 0.5,
             workers: 2,
             layout_cache_cap: 512,
+            decode: DecodeKnobs::default(),
         }
     }
 }
@@ -239,15 +318,31 @@ impl Default for ServeConfig {
 impl ServeConfig {
     pub fn from_toml(t: &Toml) -> Result<Self, Error> {
         let d = ServeConfig::default();
+        let engine = match t.get("coordinator.engine").and_then(Value::as_str) {
+            Some(s) => EngineKind::parse(s)?,
+            None => d.engine,
+        };
+        let plan = match t.get("decode.plan").and_then(Value::as_str) {
+            Some(s) => crate::pruning::MaskPlan::parse(s)?,
+            None => d.decode.plan,
+        };
         let cfg = Self {
             artifacts_dir: t.str_or("runtime.artifacts_dir", &d.artifacts_dir),
             model: t.str_or("coordinator.model", &d.model),
+            engine,
             batch_window_us: t.usize_or("coordinator.batch_window_us", 2_000) as u64,
             queue_cap: t.usize_or("coordinator.queue_cap", d.queue_cap),
             rho_levels: t.f64_list_or("coordinator.rho_levels", &d.rho_levels),
             default_rho: t.f64_or("coordinator.default_rho", d.default_rho),
             workers: t.usize_or("coordinator.workers", d.workers),
             layout_cache_cap: t.usize_or("coordinator.layout_cache_cap", d.layout_cache_cap),
+            decode: DecodeKnobs {
+                default_max_new: t.usize_or("decode.default_max_new", d.decode.default_max_new),
+                max_new_cap: t.usize_or("decode.max_new_cap", d.decode.max_new_cap),
+                plan,
+                stop_at_eos: t.bool_or("decode.stop_at_eos", d.decode.stop_at_eos),
+                batch_size: t.usize_or("decode.batch_size", d.decode.batch_size),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -280,6 +375,18 @@ impl ServeConfig {
         }
         if self.layout_cache_cap == 0 {
             return Err(Error::config("layout_cache_cap must be > 0"));
+        }
+        if self.decode.default_max_new == 0 {
+            return Err(Error::config("decode.default_max_new must be >= 1"));
+        }
+        if self.decode.max_new_cap < self.decode.default_max_new {
+            return Err(Error::config(format!(
+                "decode.max_new_cap ({}) must be >= decode.default_max_new ({})",
+                self.decode.max_new_cap, self.decode.default_max_new
+            )));
+        }
+        if self.decode.batch_size == 0 {
+            return Err(Error::config("decode.batch_size must be > 0"));
         }
         Ok(())
     }
@@ -375,6 +482,74 @@ default_rho = 0.6
         let t = Toml::parse("[coordinator]\nlayout_cache_cap = 64\n").unwrap();
         let c = ServeConfig::from_toml(&t).unwrap();
         assert_eq!(c.layout_cache_cap, 64);
+    }
+
+    #[test]
+    fn engine_kind_parses_and_labels() {
+        assert_eq!(EngineKind::parse("host").unwrap(), EngineKind::Host);
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert!(EngineKind::parse("gpu").is_err());
+        assert_eq!(EngineKind::Host.label(), "host");
+        assert!(EngineKind::Host.supports_multi_token());
+        assert!(!EngineKind::Pjrt.supports_multi_token());
+    }
+
+    #[test]
+    fn engine_and_decode_knobs_from_toml() {
+        let t = Toml::parse(
+            "[coordinator]\nengine = \"pjrt\"\n\
+             [decode]\ndefault_max_new = 4\nmax_new_cap = 16\n\
+             plan = \"refresh:2\"\nstop_at_eos = false\nbatch_size = 2\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert_eq!(c.engine, EngineKind::Pjrt);
+        assert_eq!(c.decode.default_max_new, 4);
+        assert_eq!(c.decode.max_new_cap, 16);
+        assert_eq!(c.decode.plan, crate::pruning::MaskPlan::Refresh(2));
+        assert!(!c.decode.stop_at_eos);
+        assert_eq!(c.decode.batch_size, 2);
+        // defaults when the sections are absent
+        let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.engine, EngineKind::Host);
+        assert_eq!(d.decode.default_max_new, 1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_decode_knobs() {
+        let with_knobs = |decode: DecodeKnobs| ServeConfig {
+            decode,
+            ..ServeConfig::default()
+        };
+        let bad = [
+            DecodeKnobs {
+                default_max_new: 0,
+                ..Default::default()
+            },
+            DecodeKnobs {
+                default_max_new: 8,
+                max_new_cap: 4, // cap below default
+                ..Default::default()
+            },
+            DecodeKnobs {
+                batch_size: 0,
+                ..Default::default()
+            },
+        ];
+        for knobs in bad {
+            assert!(with_knobs(knobs).validate().is_err(), "{knobs:?}");
+        }
+        assert!(with_knobs(DecodeKnobs::default()).validate().is_ok());
+    }
+
+    #[test]
+    fn bad_engine_or_plan_in_toml_is_typed_error() {
+        for bad in [
+            "[coordinator]\nengine = \"tpu\"\n",
+            "[decode]\nplan = \"sometimes\"\n",
+        ] {
+            assert!(ServeConfig::from_toml(&Toml::parse(bad).unwrap()).is_err());
+        }
     }
 
     #[test]

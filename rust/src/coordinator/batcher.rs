@@ -1,11 +1,12 @@
 //! Sparsity-aware dynamic batcher.
 //!
 //! Requests are keyed by snapped sparsity level (a batch shares one ρ —
-//! the μ-MoE artifact takes ρ as a runtime scalar). A batch fires when it
-//! reaches the artifact batch size, or when its oldest member has waited
-//! out the batching window. Pure data structure (no threads, no clocks of
-//! its own) so the policy is exhaustively testable; the server loop feeds
-//! it time.
+//! both backends execute one ρ per batch). A batch fires when it reaches
+//! the engine's batch capacity, or when its oldest member has waited out
+//! the batching window; eligible levels are served round-robin from a
+//! rotating cursor so a hot level's backlog cannot starve the others.
+//! Pure data structure (no threads, no clocks of its own) so the policy
+//! is exhaustively testable; the server loop feeds it time.
 
 use super::request::Request;
 use std::collections::VecDeque;
@@ -29,13 +30,14 @@ impl Default for BatcherConfig {
 }
 
 /// A batch ready for execution: requests + the shared sparsity level.
+/// This is the unit `coordinator::engine::Engine::execute` consumes.
 #[derive(Debug)]
-pub struct Batch {
+pub struct DecodeBatch {
     pub rho: f64,
     pub requests: Vec<Request>,
 }
 
-impl Batch {
+impl DecodeBatch {
     pub fn len(&self) -> usize {
         self.requests.len()
     }
@@ -51,6 +53,12 @@ pub struct DynamicBatcher {
     levels: Vec<f64>,
     queues: Vec<VecDeque<Request>>,
     pending: usize,
+    /// Rotating scan cursor: the level after the last one that fired.
+    /// Scanning from here (not from index 0, and not oldest-head-first)
+    /// bounds how long an eligible level can wait: a hot level with a
+    /// standing backlog of old requests can win at most one pop before
+    /// every other eligible level gets its turn.
+    next_level: usize,
 }
 
 impl DynamicBatcher {
@@ -62,6 +70,7 @@ impl DynamicBatcher {
             levels: rho_levels.to_vec(),
             queues: rho_levels.iter().map(|_| VecDeque::new()).collect(),
             pending: 0,
+            next_level: 0,
         }
     }
 
@@ -84,25 +93,34 @@ impl DynamicBatcher {
         self.pending += 1;
     }
 
-    /// The policy: pick the queue whose head has waited longest; fire if
-    /// it's full or its head has exceeded the window. `now` injected for
-    /// testability.
-    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
-        let mut best: Option<(usize, Instant)> = None;
-        for (i, q) in self.queues.iter().enumerate() {
-            if let Some(head) = q.front() {
-                let t = head.enqueued_at;
-                let full = q.len() >= self.cfg.batch_size;
-                let expired = now.duration_since(t) >= self.cfg.window;
-                if full || expired {
-                    match best {
-                        Some((_, bt)) if bt <= t => {}
-                        _ => best = Some((i, t)),
-                    }
-                }
+    /// The policy: scan levels round-robin from the rotating cursor and
+    /// fire the first queue that is full or whose head has exceeded the
+    /// window. `now` injected for testability.
+    ///
+    /// The rotation is the fairness guarantee. The previous policy fired
+    /// the *oldest* eligible head, which sounds fair but starves: a hot
+    /// level with a standing backlog always holds the oldest head, so a
+    /// waiting level never won a pop until the backlog fully drained.
+    /// Round-robin over eligible levels bounds the wait to one batch per
+    /// other level instead.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<DecodeBatch> {
+        let n_levels = self.queues.len();
+        for off in 0..n_levels {
+            let i = (self.next_level + off) % n_levels;
+            let q = &self.queues[i];
+            let Some(head) = q.front() else { continue };
+            let full = q.len() >= self.cfg.batch_size;
+            let expired = now.duration_since(head.enqueued_at) >= self.cfg.window;
+            if full || expired {
+                self.next_level = (i + 1) % n_levels;
+                return Some(self.take_batch(i));
             }
         }
-        let (idx, _) = best?;
+        None
+    }
+
+    /// Pop up to one batch_size worth of requests off level `idx`.
+    fn take_batch(&mut self, idx: usize) -> DecodeBatch {
         let q = &mut self.queues[idx];
         let n = q.len().min(self.cfg.batch_size);
         let mut requests = Vec::with_capacity(n);
@@ -110,10 +128,10 @@ impl DynamicBatcher {
             requests.push(q.pop_front().unwrap());
         }
         self.pending -= n;
-        Some(Batch {
+        DecodeBatch {
             rho: self.levels[idx],
             requests,
-        })
+        }
     }
 
     /// Time until the earliest head expires (server loop sleep hint).
@@ -130,20 +148,11 @@ impl DynamicBatcher {
     }
 
     /// Drain everything (shutdown path).
-    pub fn drain(&mut self) -> Vec<Batch> {
+    pub fn drain(&mut self) -> Vec<DecodeBatch> {
         let mut out = Vec::new();
-        for (i, q) in self.queues.iter_mut().enumerate() {
-            while !q.is_empty() {
-                let n = q.len().min(self.cfg.batch_size);
-                let mut requests = Vec::with_capacity(n);
-                for _ in 0..n {
-                    requests.push(q.pop_front().unwrap());
-                }
-                self.pending -= n;
-                out.push(Batch {
-                    rho: self.levels[i],
-                    requests,
-                });
+        for i in 0..self.queues.len() {
+            while !self.queues[i].is_empty() {
+                out.push(self.take_batch(i));
             }
         }
         out
@@ -209,14 +218,35 @@ mod tests {
     }
 
     #[test]
-    fn oldest_queue_first() {
+    fn eligible_levels_fire_in_rotation() {
         let mut b = mk();
         b.push(req(1, 0.4));
-        std::thread::sleep(Duration::from_millis(2));
         b.push(req(2, 1.0));
         let later = Instant::now() + Duration::from_millis(30);
         let first = b.pop_ready(later).unwrap();
-        assert_eq!(first.rho, 0.4, "older head must fire first");
+        assert_eq!(first.rho, 0.4, "cursor starts at level 0");
+        let second = b.pop_ready(later).unwrap();
+        assert_eq!(second.rho, 1.0, "cursor advanced past the fired level");
+    }
+
+    #[test]
+    fn rotation_prevents_hot_level_starving_others() {
+        // A hot level with a standing backlog of *older* requests must not
+        // monopolize consecutive pops while another level has an expired
+        // head. Under the old oldest-head-first policy the second pop
+        // below picked 0.4 again (its backlog head predates the 1.0
+        // request), starving 1.0 until the backlog drained.
+        let mut b = mk();
+        for i in 0..12 {
+            b.push(req(i, 0.4)); // three full batches of backlog
+        }
+        b.push(req(100, 1.0)); // one waiting request at another level
+        let later = Instant::now() + Duration::from_millis(30); // all expired
+        assert_eq!(b.pop_ready(later).unwrap().rho, 0.4);
+        let second = b.pop_ready(later).unwrap();
+        assert_eq!(second.rho, 1.0, "waiting level must get the next turn");
+        assert_eq!(second.requests[0].id, 100);
+        assert_eq!(b.pop_ready(later).unwrap().rho, 0.4, "rotation wraps");
     }
 
     #[test]
@@ -251,7 +281,7 @@ mod tests {
             b.push(req(i, if i % 2 == 0 { 0.4 } else { 1.0 }));
         }
         let batches = b.drain();
-        let total: usize = batches.iter().map(Batch::len).sum();
+        let total: usize = batches.iter().map(DecodeBatch::len).sum();
         assert_eq!(total, 6);
         assert_eq!(b.pending(), 0);
     }

@@ -1,0 +1,414 @@
+//! The execution boundary of the serving stack: one [`Engine`] trait the
+//! serve loop is generic over, with two backends behind it.
+//!
+//! * [`HostEngine`] — batched greedy decode on the host model
+//!   ([`crate::decode::decode_batch`]) through the **router's shared
+//!   [`LayoutCache`]**: batch-mates at one snapped ρ whose refresh steps
+//!   select the same micro-experts share one set of compressed
+//!   [`crate::tensor::RowSparse`] layouts. Works in the default
+//!   (no-`pjrt`) build and honours multi-token requests.
+//! * [`PjrtEngine`] (`--features pjrt`) — the PJRT artifact-session path:
+//!   single-token batches against the AOT-compiled μ-MoE/dense graphs,
+//!   exactly the loop body `coordinator::server` used to hard-code.
+//!
+//! The contract: [`Engine::prepare`] runs **on the serve thread** (PJRT
+//! objects hold raw pointers and never cross threads; the host model just
+//! doesn't need to) and returns a [`Prepared`] carrying the engine plus
+//! the startup facts the loop needs (seq_len for the ready signal, batch
+//! capacity for the batcher); capability introspection lives on
+//! [`EngineKind`], where the router's admission check reads it.
+//! [`Engine::execute`] consumes one ρ-keyed [`DecodeBatch`] and returns
+//! exactly one [`Response`] per request, in request order; the loop owns
+//! reply delivery, latency stamping and metrics, so engines stay pure
+//! compute.
+
+use super::batcher::DecodeBatch;
+use super::request::Response;
+use crate::config::{EngineKind, ServeConfig};
+use crate::decode::{decode_batch, BatchRequest};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::config_by_name;
+use crate::nn::{random_model, Model};
+use crate::tensor::LayoutCache;
+use crate::util::error::Error;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Seed of the deterministic fallback model used when no checkpoint
+/// exists under the artifacts dir — shared by `serve`, `generate`, the
+/// host-serve e2e test and the serve-throughput bench so they all decode
+/// the same weights.
+pub const HOST_FALLBACK_SEED: u64 = 7;
+
+/// Load the host model a [`ServeConfig`] names: the checkpoint if one
+/// exists, else the deterministic random fallback (a *present but
+/// corrupt* checkpoint is an error, never a silent fallback).
+pub fn host_model(cfg: &ServeConfig) -> Result<Model, Error> {
+    let mcfg = config_by_name(&cfg.model)
+        .ok_or_else(|| Error::config(format!("unknown model '{}'", cfg.model)))?;
+    let ckpt_path = Path::new(&cfg.artifacts_dir)
+        .join("ckpt")
+        .join(format!("{}.ckpt", cfg.model));
+    if ckpt_path.exists() {
+        let ckpt = Checkpoint::load(&ckpt_path)?;
+        Model::from_checkpoint(&mcfg, &ckpt)
+    } else {
+        crate::warn_!(
+            "no checkpoint at {}; serving a deterministic random model",
+            ckpt_path.display()
+        );
+        Ok(random_model(&mcfg, HOST_FALLBACK_SEED))
+    }
+}
+
+/// A ready engine plus the startup facts the serve loop needs before the
+/// first batch. Capability introspection (multi-token support) lives on
+/// [`EngineKind`] instead — one source of truth, and it's the form the
+/// router's admission check consumes.
+pub struct Prepared<E> {
+    pub engine: E,
+    /// Token window requests are padded to (the ready-signal payload).
+    pub seq_len: usize,
+    /// Max requests per executed batch (sizes the batcher).
+    pub batch_capacity: usize,
+}
+
+/// A serving backend. See the module docs for the contract.
+pub trait Engine: Sized {
+    /// Which config selector picks this engine.
+    fn kind() -> EngineKind;
+
+    /// Build the engine on the calling (serve) thread. `cache` is the
+    /// router's shared layout cache; backends that don't compress
+    /// layouts ignore it.
+    fn prepare(cfg: &ServeConfig, cache: Arc<Mutex<LayoutCache>>) -> Result<Prepared<Self>, Error>;
+
+    /// Execute one ρ-keyed batch: exactly one [`Response`] per request,
+    /// in request order. `latency_us`/`batch_size` are stamped by the
+    /// serve loop afterwards.
+    fn execute(&mut self, batch: DecodeBatch) -> Result<Vec<Response>, Error>;
+}
+
+// ---------------------------------------------------------------------------
+// HostEngine
+// ---------------------------------------------------------------------------
+
+/// Batched host decode through the shared layout cache.
+pub struct HostEngine {
+    model: Model,
+    cache: Arc<Mutex<LayoutCache>>,
+    stop_at_eos: bool,
+}
+
+impl HostEngine {
+    /// Build directly from parts (tests and `generate` use this to supply
+    /// their own model/cache; the serve loop goes through `prepare`).
+    pub fn with_model(model: Model, cache: Arc<Mutex<LayoutCache>>, stop_at_eos: bool) -> Self {
+        HostEngine {
+            model,
+            cache,
+            stop_at_eos,
+        }
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Engine for HostEngine {
+    fn kind() -> EngineKind {
+        EngineKind::Host
+    }
+
+    fn prepare(cfg: &ServeConfig, cache: Arc<Mutex<LayoutCache>>) -> Result<Prepared<Self>, Error> {
+        let model = host_model(cfg)?;
+        let seq_len = model.cfg.max_seq_len;
+        Ok(Prepared {
+            engine: HostEngine::with_model(model, cache, cfg.decode.stop_at_eos),
+            seq_len,
+            batch_capacity: cfg.decode.batch_size,
+        })
+    }
+
+    fn execute(&mut self, batch: DecodeBatch) -> Result<Vec<Response>, Error> {
+        let rho = batch.rho;
+        let items: Vec<BatchRequest> = batch
+            .requests
+            .iter()
+            .map(|r| BatchRequest {
+                // the router pads to seq_len; decode wants the real prompt
+                prompt: &r.tokens[..r.valid_len],
+                max_new: r.max_new,
+                plan: r.plan,
+            })
+            .collect();
+        // one lock per batch: the whole point is that batch-mates share
+        // compressed layouts, and the serve loop is the only writer
+        let mut cache = self
+            .cache
+            .lock()
+            .map_err(|_| Error::coordinator("layout cache poisoned"))?;
+        let outs = decode_batch(&self.model, &items, rho, self.stop_at_eos, Some(&mut cache));
+        drop(cache);
+
+        Ok(batch
+            .requests
+            .iter()
+            .zip(outs)
+            .map(|(req, out)| {
+                let last = out.steps.last();
+                Response {
+                    id: req.id,
+                    logits: last.map(|s| s.logits.clone()).unwrap_or_default(),
+                    next_token: out.steps.first().map_or(-1, |s| s.token),
+                    tokens: out.new_tokens().to_vec(),
+                    steps: out.steps.len(),
+                    latency_us: 0, // stamped by the serve loop
+                    batch_size: 0, // stamped by the serve loop
+                    rho_used: rho,
+                    rejected: None,
+                }
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtEngine
+// ---------------------------------------------------------------------------
+
+/// The PJRT artifact-session backend: one `execute` runs a padded
+/// single-token batch through the μ-MoE session (or the dense session at
+/// ρ = 1). Multi-token requests never reach it — `Router::admit` rejects
+/// `max_new > 1` when the configured engine lacks the capability.
+#[cfg(feature = "pjrt")]
+pub struct PjrtEngine {
+    mumoe: crate::runtime::session::Session,
+    dense: crate::runtime::session::Session,
+}
+
+#[cfg(feature = "pjrt")]
+impl Engine for PjrtEngine {
+    fn kind() -> EngineKind {
+        EngineKind::Pjrt
+    }
+
+    fn prepare(
+        cfg: &ServeConfig,
+        _cache: Arc<Mutex<LayoutCache>>,
+    ) -> Result<Prepared<Self>, Error> {
+        use crate::runtime::registry::Registry;
+        use crate::runtime::session::Session;
+        use crate::runtime::weights::DeviceWeights;
+        use crate::runtime::Client;
+        use crate::util::error::ResultExt;
+
+        let client = Client::cpu()?;
+        let registry = Registry::open(Path::new(&cfg.artifacts_dir), client.clone())?;
+        let ckpt = Checkpoint::load(&registry.ckpt_path(&cfg.model))
+            .with_context(|| format!("loading checkpoint for {}", cfg.model))?;
+        let mumoe_meta = registry.meta_for("mumoe_logits", &cfg.model)?.name.clone();
+        let dense_meta = registry.meta_for("dense_logits", &cfg.model)?.name.clone();
+        let order = registry.meta(&mumoe_meta)?.params.clone();
+        let weights = Arc::new(DeviceWeights::upload(&client, &ckpt, &order)?);
+        let mumoe = Session::bind(&registry, &mumoe_meta, weights.clone())?;
+        let dense = Session::bind(&registry, &dense_meta, weights)?;
+        let (seq_len, batch_capacity) = (mumoe.meta.seq_len, mumoe.meta.batch);
+        Ok(Prepared {
+            engine: PjrtEngine { mumoe, dense },
+            seq_len,
+            batch_capacity,
+        })
+    }
+
+    fn execute(&mut self, batch: DecodeBatch) -> Result<Vec<Response>, Error> {
+        use crate::runtime::session::{literal_f32, Input};
+        use super::request::argmax;
+
+        let n = batch.len();
+        let use_dense = batch.rho >= 0.999;
+        let session = if use_dense { &self.dense } else { &self.mumoe };
+        let cap = session.meta.batch;
+        let seq = session.meta.seq_len;
+
+        let mut tokens = Vec::with_capacity(cap * seq);
+        let mut lengths = Vec::with_capacity(cap);
+        for r in &batch.requests {
+            tokens.extend_from_slice(&r.tokens);
+            lengths.push(r.valid_len as i32);
+        }
+        // pad unused slots by replicating the first request (outputs ignored)
+        for _ in n..cap {
+            tokens.extend_from_slice(&batch.requests[0].tokens);
+            lengths.push(batch.requests[0].valid_len as i32);
+        }
+
+        let mut inputs = vec![
+            Input::I32(tokens, vec![cap, seq]),
+            Input::I32(lengths, vec![cap]),
+        ];
+        if !use_dense {
+            inputs.push(Input::ScalarF32(batch.rho as f32));
+        }
+
+        let flat = session.run(&inputs).and_then(|outs| literal_f32(&outs[0]))?;
+        let vocab = flat.len() / cap;
+        Ok(batch
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let row = flat[i * vocab..(i + 1) * vocab].to_vec();
+                let next = argmax(&row);
+                Response {
+                    id: req.id,
+                    next_token: next,
+                    tokens: vec![next],
+                    steps: 1,
+                    logits: row,
+                    latency_us: 0,
+                    batch_size: 0,
+                    rho_used: batch.rho,
+                    rejected: None,
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::decode::{decode_greedy, DecodeConfig};
+    use crate::model::ModelConfig;
+    use crate::pruning::MaskPlan;
+
+    fn tiny_model() -> Model {
+        random_model(&ModelConfig::new("eng-tiny", 2, 2, 16), 41)
+    }
+
+    fn engine_with(cache_cap: usize) -> (HostEngine, Arc<Mutex<LayoutCache>>) {
+        let cache = Arc::new(Mutex::new(LayoutCache::new(cache_cap)));
+        (
+            HostEngine::with_model(tiny_model(), cache.clone(), false),
+            cache,
+        )
+    }
+
+    fn req(id: u64, prompt: &[i32], rho: f64, max_new: usize) -> Request {
+        Request::new(id, prompt.to_vec(), prompt.len(), rho, "d", None)
+            .with_decode(max_new, MaskPlan::PruneOnce)
+    }
+
+    #[test]
+    fn host_engine_matches_direct_decode_greedy() {
+        let (mut eng, _cache) = engine_with(64);
+        let batch = DecodeBatch {
+            rho: 0.5,
+            requests: vec![req(1, &[1, 2, 3], 0.5, 4), req(2, &[9, 8], 0.5, 2)],
+        };
+        let responses = eng.execute(batch).expect("execute");
+        assert_eq!(responses.len(), 2);
+        let reference = tiny_model();
+        for (resp, (prompt, max_new)) in responses
+            .iter()
+            .zip([(vec![1, 2, 3], 4usize), (vec![9, 8], 2)])
+        {
+            let out = decode_greedy(
+                &reference,
+                &prompt,
+                &DecodeConfig {
+                    rho: 0.5,
+                    plan: MaskPlan::PruneOnce,
+                    max_new,
+                    stop_at_eos: false,
+                },
+                None,
+            );
+            assert_eq!(resp.tokens, out.new_tokens());
+            assert_eq!(resp.steps, max_new);
+            assert_eq!(resp.next_token, out.new_tokens()[0]);
+            assert_eq!(resp.logits, out.steps.last().unwrap().logits);
+            assert_eq!(resp.rho_used, 0.5);
+            assert!(resp.is_ok());
+        }
+    }
+
+    #[test]
+    fn host_engine_batch_mates_share_cache() {
+        let (mut eng, cache) = engine_with(64);
+        let n_linears = eng.model().cfg.linear_names().len() as u64;
+        let batch = DecodeBatch {
+            rho: 0.5,
+            requests: vec![req(1, &[4, 2, 9], 0.5, 3), req(2, &[4, 2, 9], 0.5, 3)],
+        };
+        let responses = eng.execute(batch).expect("execute");
+        assert_eq!(responses[0].tokens, responses[1].tokens);
+        let c = cache.lock().unwrap();
+        assert_eq!(c.misses(), n_linears, "one compression for the pair");
+        assert_eq!(c.hits(), n_linears, "second lane must hit, not rebuild");
+    }
+
+    #[test]
+    fn host_engine_respects_valid_len_padding() {
+        // a request padded to seq_len must decode exactly like its
+        // unpadded prompt
+        let (mut eng, _cache) = engine_with(64);
+        let mut padded = vec![5, 6, 7];
+        padded.resize(16, crate::model::PAD_ID);
+        let mut r = Request::new(1, padded, 3, 0.6, "d", None);
+        r = r.with_decode(3, MaskPlan::PruneOnce);
+        let responses = eng
+            .execute(DecodeBatch {
+                rho: 0.6,
+                requests: vec![r],
+            })
+            .expect("execute");
+        let out = decode_greedy(
+            &tiny_model(),
+            &[5, 6, 7],
+            &DecodeConfig {
+                rho: 0.6,
+                plan: MaskPlan::PruneOnce,
+                max_new: 3,
+                stop_at_eos: false,
+            },
+            None,
+        );
+        assert_eq!(responses[0].tokens, out.new_tokens());
+    }
+
+    #[test]
+    fn prepare_falls_back_to_deterministic_model() {
+        let cfg = ServeConfig {
+            artifacts_dir: "definitely-absent-artifacts-dir".into(),
+            model: "mu-opt-micro".into(),
+            ..Default::default()
+        };
+        let cache = Arc::new(Mutex::new(LayoutCache::new(cfg.layout_cache_cap)));
+        let prepared = HostEngine::prepare(&cfg, cache).expect("prepare");
+        assert_eq!(prepared.seq_len, crate::model::MAX_SEQ_LEN);
+        assert_eq!(prepared.batch_capacity, cfg.decode.batch_size);
+        assert_eq!(HostEngine::kind(), EngineKind::Host);
+        assert!(HostEngine::kind().supports_multi_token());
+        // the fallback is deterministic: same weights every prepare
+        let m = host_model(&cfg).unwrap();
+        let reference = random_model(
+            &config_by_name("mu-opt-micro").unwrap(),
+            HOST_FALLBACK_SEED,
+        );
+        assert_eq!(m.mat("tok_emb").data, reference.mat("tok_emb").data);
+    }
+
+    #[test]
+    fn prepare_rejects_unknown_model() {
+        let cfg = ServeConfig {
+            model: "mu-opt-nonexistent".into(),
+            ..Default::default()
+        };
+        let cache = Arc::new(Mutex::new(LayoutCache::new(8)));
+        assert!(HostEngine::prepare(&cfg, cache).is_err());
+    }
+}

@@ -1,9 +1,24 @@
 //! Serving metrics: lock-free counters + a log₂-bucketed latency histogram
-//! good enough for p50/p95/p99 without allocation on the hot path.
+//! good enough for p50/p95/p99 without allocation on the hot path, plus a
+//! per-ρ-level decode breakdown (batches / requests / tokens per snapped
+//! level, and aggregate decode tokens/sec) so host serving is observable
+//! per level. The per-level map is the one mutex-guarded piece — it is
+//! touched once per *batch*, not per request, and only by the serve loop.
 
+use crate::tensor::rho_milli;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 const BUCKETS: usize = 40; // 2^0 .. 2^39 us (~9 minutes)
+
+/// Per-ρ-level decode counters (keyed by snapped level).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LevelStats {
+    pub batches: u64,
+    pub requests: u64,
+    pub tokens: u64,
+}
 
 /// Shared metrics sink (all methods take &self; safe across threads).
 #[derive(Debug)]
@@ -17,6 +32,9 @@ pub struct Metrics {
     pub queue_peak: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    decode_tokens: AtomicU64,
+    decode_time_us: AtomicU64,
+    levels: Mutex<HashMap<u32, LevelStats>>,
 }
 
 impl Default for Metrics {
@@ -37,6 +55,9 @@ impl Metrics {
             queue_peak: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
+            decode_tokens: AtomicU64::new(0),
+            decode_time_us: AtomicU64::new(0),
+            levels: Mutex::new(HashMap::new()),
         }
     }
 
@@ -57,6 +78,39 @@ impl Metrics {
         self.batch_occupied
             .fetch_add(occupied as u64, Ordering::Relaxed);
         self.batch_slots.fetch_add(capacity as u64, Ordering::Relaxed);
+    }
+
+    /// One executed decode batch at a snapped level: how many requests it
+    /// carried, how many tokens it generated and how long execution took.
+    pub fn record_decode(&self, rho: f64, requests: usize, tokens: u64, elapsed_us: u64) {
+        self.decode_tokens.fetch_add(tokens, Ordering::Relaxed);
+        self.decode_time_us.fetch_add(elapsed_us, Ordering::Relaxed);
+        let mut levels = self.levels.lock().expect("metrics level map poisoned");
+        let e = levels.entry(rho_milli(rho)).or_default();
+        e.batches += 1;
+        e.requests += requests as u64;
+        e.tokens += tokens;
+    }
+
+    /// Aggregate decode throughput over execution time (not wall time —
+    /// idle batching windows don't dilute it).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let us = self.decode_time_us.load(Ordering::Relaxed);
+        if us == 0 {
+            return 0.0;
+        }
+        self.decode_tokens.load(Ordering::Relaxed) as f64 * 1e6 / us as f64
+    }
+
+    /// Per-level decode counters, ascending by level.
+    pub fn level_stats(&self) -> Vec<(f64, LevelStats)> {
+        let levels = self.levels.lock().expect("metrics level map poisoned");
+        let mut out: Vec<(f64, LevelStats)> = levels
+            .iter()
+            .map(|(&milli, &stats)| (milli as f64 / 1000.0, stats))
+            .collect();
+        out.sort_by(|a, b| a.0.total_cmp(&b.0));
+        out
     }
 
     pub fn record_completion(&self, latency_us: u64) {
@@ -105,11 +159,11 @@ impl Metrics {
         self.batch_occupied.load(Ordering::Relaxed) as f64 / slots as f64
     }
 
-    /// One-line human summary.
+    /// One-line human summary (plus one line per active ρ level).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "accepted={} rejected={} completed={} batches={} occupancy={:.2} \
-             mean_lat={:.0}us p50={}us p95={}us p99={}us",
+             mean_lat={:.0}us p50={}us p95={}us p99={}us decode_tok_s={:.1}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -119,7 +173,15 @@ impl Metrics {
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
             self.latency_percentile_us(99.0),
-        )
+            self.decode_tokens_per_sec(),
+        );
+        for (rho, st) in self.level_stats() {
+            s.push_str(&format!(
+                "\n  level rho={rho:.2}: batches={} requests={} tokens={}",
+                st.batches, st.requests, st.tokens
+            ));
+        }
+        s
     }
 
     /// JSON dump for machine consumers.
@@ -141,6 +203,23 @@ impl Metrics {
             "p99_us".into(),
             Json::Num(self.latency_percentile_us(99.0) as f64),
         );
+        m.insert("decode_tokens".into(), g(&self.decode_tokens));
+        m.insert(
+            "decode_tokens_per_sec".into(),
+            Json::Num(self.decode_tokens_per_sec()),
+        );
+        let mut levels = std::collections::HashMap::new();
+        for (rho, st) in self.level_stats() {
+            levels.insert(
+                format!("{rho:.2}"),
+                Json::Obj(std::collections::HashMap::from([
+                    ("batches".into(), Json::Num(st.batches as f64)),
+                    ("requests".into(), Json::Num(st.requests as f64)),
+                    ("tokens".into(), Json::Num(st.tokens as f64)),
+                ])),
+            );
+        }
+        m.insert("levels".into(), Json::Obj(levels));
         Json::Obj(m)
     }
 }
@@ -196,6 +275,50 @@ mod tests {
         assert!(s.contains("accepted=1"));
         let j = m.to_json();
         assert_eq!(j.req("completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn per_level_decode_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_decode(0.4, 3, 12, 1_000);
+        m.record_decode(0.4, 1, 4, 500);
+        m.record_decode(1.0, 2, 2, 250);
+        let levels = m.level_stats();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].0, 0.4);
+        assert_eq!(
+            levels[0].1,
+            LevelStats {
+                batches: 2,
+                requests: 4,
+                tokens: 16
+            }
+        );
+        assert_eq!(levels[1].0, 1.0);
+        assert_eq!(levels[1].1.tokens, 2);
+        // 18 tokens over 1750us
+        let tps = m.decode_tokens_per_sec();
+        assert!((tps - 18.0 * 1e6 / 1750.0).abs() < 1e-6, "{tps}");
+    }
+
+    #[test]
+    fn decode_rate_zero_before_any_batch() {
+        assert_eq!(Metrics::new().decode_tokens_per_sec(), 0.0);
+        assert!(Metrics::new().level_stats().is_empty());
+    }
+
+    #[test]
+    fn summary_and_json_carry_levels() {
+        let m = Metrics::new();
+        m.record_decode(0.6, 2, 8, 1_000);
+        let s = m.summary();
+        assert!(s.contains("decode_tok_s="), "{s}");
+        assert!(s.contains("level rho=0.60"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.req("decode_tokens").unwrap().as_f64(), Some(8.0));
+        let levels = j.req("levels").unwrap();
+        let l = levels.req("0.60").unwrap();
+        assert_eq!(l.req("requests").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

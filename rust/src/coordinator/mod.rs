@@ -1,33 +1,42 @@
 //! L3 coordinator: the serving layer that turns μ-MoE into a system.
 //!
 //! ```text
-//!  clients ──> Router (admission control, ρ snapping)
+//!  clients ──> Router (admission control, ρ snapping, decode validation)
 //!                │
 //!                ▼
-//!          DynamicBatcher (groups by sparsity level, window/size policy)
-//!                │ batches
+//!          DynamicBatcher (ρ-keyed queues, rotating-fairness pop)
+//!                │ DecodeBatch
 //!                ▼
-//!          Server loop ──> runtime::Session (PJRT execute_b)
+//!          Serve loop — generic over engine::Engine
+//!            ├── HostEngine   decode::decode_batch through the router's
+//!            │                shared LayoutCache (default build,
+//!            │                multi-token)
+//!            └── PjrtEngine   AOT artifact sessions (--features pjrt,
+//!                             single-token)
 //!                │
 //!                ▼
-//!          replies + Metrics (throughput, latency percentiles, occupancy)
+//!          replies + Metrics (throughput, latency percentiles,
+//!                             occupancy, per-ρ-level decode counters)
 //! ```
 //!
-//! Batching is *sparsity-aware*: the μ-MoE artifact takes ρ as a runtime
-//! scalar, so a batch shares one ρ. The router snaps client ρ requests to
-//! configured levels to keep the number of batch keys bounded — the same
-//! trick vLLM-style routers use for sampling-parameter compatibility.
+//! Batching is *sparsity-aware*: both backends execute one ρ per batch
+//! (the μ-MoE artifact takes ρ as a runtime scalar; the host engine
+//! shares one snapped level's compressed layouts across batch-mates). The
+//! router snaps client ρ requests to configured levels to keep the number
+//! of batch keys bounded — the same trick vLLM-style routers use for
+//! sampling-parameter compatibility — which is also what makes the
+//! level-keyed layout cache hit across requests.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod router;
-#[cfg(feature = "pjrt")]
 pub mod server;
 
-pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use batcher::{BatcherConfig, DecodeBatch, DynamicBatcher};
+pub use engine::{Engine, HostEngine, Prepared};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
-#[cfg(feature = "pjrt")]
 pub use server::{Server, ServerHandle};

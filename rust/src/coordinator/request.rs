@@ -1,12 +1,15 @@
 //! Request/response types exchanged between clients and the coordinator.
 
+use crate::pruning::MaskPlan;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 pub type RequestId = u64;
 
-/// A next-token inference request (the serving unit of the paper's
-/// system: prompt in, last-position logits out, pruned on the fly).
+/// A decode request (the serving unit of the paper's system: prompt in,
+/// pruned on the fly, greedy tokens out). `max_new = 1` degenerates to the
+/// classic next-token form every backend supports; larger values ask the
+/// host engine for a full multi-token generation under `plan`.
 #[derive(Debug)]
 pub struct Request {
     pub id: RequestId,
@@ -15,6 +18,12 @@ pub struct Request {
     pub valid_len: usize,
     /// Requested active-weight ratio; the router snaps it to a level.
     pub rho: f64,
+    /// New tokens to decode (validated against the config cap by
+    /// `Router::admit`; the pjrt backend only accepts 1).
+    pub max_new: usize,
+    /// When micro-expert selection is refreshed during this request's
+    /// generation (host engine; ignored by the single-token pjrt path).
+    pub plan: MaskPlan,
     /// Originating domain (metrics breakdown only).
     pub domain: String,
     pub enqueued_at: Instant,
@@ -36,10 +45,20 @@ impl Request {
             tokens,
             valid_len,
             rho,
+            max_new: 1,
+            plan: MaskPlan::PruneOnce,
             domain: domain.into(),
             enqueued_at: Instant::now(),
             reply,
         }
+    }
+
+    /// Attach multi-token decode parameters (builder form so the many
+    /// policy-only constructions stay one line).
+    pub fn with_decode(mut self, max_new: usize, plan: MaskPlan) -> Request {
+        self.max_new = max_new;
+        self.plan = plan;
+        self
     }
 }
 
@@ -47,11 +66,17 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
-    /// Next-token logits at the last valid position (vocab-sized), or
-    /// empty on rejection.
+    /// Logits at the final decode step (vocab-sized), or empty on
+    /// rejection. For `max_new = 1` these are exactly the next-token
+    /// logits the pre-engine API returned.
     pub logits: Vec<f32>,
-    /// Argmax token (greedy decode convenience).
+    /// First generated token (greedy decode convenience; `tokens[0]`).
     pub next_token: i32,
+    /// Generated tokens, in order (EOS, if hit, is not included).
+    pub tokens: Vec<i32>,
+    /// Decode steps this request actually ran (≤ `max_new`; may stop
+    /// early at EOS).
+    pub steps: usize,
     /// End-to-end latency.
     pub latency_us: u64,
     /// Size of the batch this request rode in (occupancy telemetry).
@@ -68,6 +93,8 @@ impl Response {
             id,
             logits: Vec::new(),
             next_token: -1,
+            tokens: Vec::new(),
+            steps: 0,
             latency_us: 0,
             batch_size: 0,
             rho_used: 0.0,
@@ -108,5 +135,17 @@ mod tests {
         let r = Response::rejected(7, "queue full");
         assert!(!r.is_ok());
         assert_eq!(r.id, 7);
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.steps, 0);
+    }
+
+    #[test]
+    fn request_defaults_to_single_token_and_builder_overrides() {
+        let r = Request::new(1, vec![1, 2], 2, 0.5, "d", None);
+        assert_eq!(r.max_new, 1);
+        assert_eq!(r.plan, MaskPlan::PruneOnce);
+        let r = r.with_decode(8, MaskPlan::Refresh(4));
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.plan, MaskPlan::Refresh(4));
     }
 }

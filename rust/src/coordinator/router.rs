@@ -26,11 +26,10 @@ pub struct Router {
     /// `(model weights, linear, snapped-ρ level, mask fingerprint)`.
     /// Because `admit` snaps every request's ρ to a configured level,
     /// batch-mates and repeated prefixes at the same level share cache
-    /// keys. This handle is the integration point for host-side batch
-    /// execution (`decode::decode_greedy` takes `&mut LayoutCache`); the
-    /// host server loop that drains the batcher through it is a ROADMAP
-    /// open item — today only per-request host decode (`generate`) and
-    /// tests consume layout caches.
+    /// keys. `Server::start` hands this to `Engine::prepare`, so the
+    /// host serve loop drains the batcher through it: every
+    /// `HostEngine::execute` compresses through (and reuses from) this
+    /// one cache.
     layout_cache: Arc<Mutex<LayoutCache>>,
 }
 
@@ -65,8 +64,10 @@ impl Router {
         self.layout_cache.clone()
     }
 
-    /// Admission decision + request construction. Returns `Err(Response)`
-    /// with a rejection when load must be shed (queue full, bad input).
+    /// Admission with the config's decode defaults (`max_new` from
+    /// `decode.default_max_new`, plan from `decode.plan`). Returns
+    /// `Err(Response)` with a rejection when load must be shed (queue
+    /// full, bad input).
     pub fn admit(
         &self,
         prompt: &str,
@@ -74,11 +75,54 @@ impl Router {
         domain: &str,
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
+        self.admit_decode(prompt, rho, domain, 0, None, reply)
+    }
+
+    /// Admission decision + request construction with explicit decode
+    /// parameters. `max_new = 0` means "use the config default"; an
+    /// explicit value is validated against `decode.max_new_cap` and the
+    /// configured engine's capability (the pjrt backend is single-token),
+    /// so invalid decode work is shed here instead of failing a whole
+    /// batch at execution.
+    pub fn admit_decode(
+        &self,
+        prompt: &str,
+        rho: f64,
+        domain: &str,
+        max_new: usize,
+        plan: Option<crate::pruning::MaskPlan>,
+        reply: Option<Sender<Response>>,
+    ) -> Result<Request, Box<Response>> {
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
 
         if prompt.is_empty() {
             self.metrics.record_reject();
             return Err(Box::new(Response::rejected(id, "empty prompt")));
+        }
+        let max_new = if max_new == 0 {
+            self.cfg.decode.default_max_new
+        } else {
+            max_new
+        };
+        if max_new > self.cfg.decode.max_new_cap {
+            self.metrics.record_reject();
+            return Err(Box::new(Response::rejected(
+                id,
+                format!(
+                    "max_new {max_new} exceeds cap {}",
+                    self.cfg.decode.max_new_cap
+                ),
+            )));
+        }
+        if max_new > 1 && !self.cfg.engine.supports_multi_token() {
+            self.metrics.record_reject();
+            return Err(Box::new(Response::rejected(
+                id,
+                format!(
+                    "engine '{}' is single-token (max_new {max_new} > 1)",
+                    self.cfg.engine.label()
+                ),
+            )));
         }
         let depth = self.depth.load(Ordering::Relaxed) as usize;
         self.metrics.record_queue_depth(depth);
@@ -95,7 +139,10 @@ impl Router {
 
         self.metrics.record_accept();
         self.depth.fetch_add(1, Ordering::Relaxed);
-        Ok(Request::new(id, tokens, valid_len, snapped, domain, reply))
+        Ok(
+            Request::new(id, tokens, valid_len, snapped, domain, reply)
+                .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan)),
+        )
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -174,6 +221,50 @@ mod tests {
         let rej = r.admit("hi", 0.5, "d", None).unwrap_err();
         assert_eq!(rej.rejected.as_deref(), Some("queue full"));
         assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn admit_applies_decode_defaults() {
+        let r = router(10);
+        let req = r.admit("hello", 0.5, "d", None).unwrap();
+        assert_eq!(req.max_new, 1, "config default");
+        assert_eq!(req.plan, crate::pruning::MaskPlan::PruneOnce);
+    }
+
+    #[test]
+    fn admit_decode_validates_max_new_and_plan() {
+        let mut cfg = ServeConfig {
+            queue_cap: 10,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            default_rho: 0.6,
+            ..Default::default()
+        };
+        cfg.decode.max_new_cap = 8;
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        let req = r
+            .admit_decode("hi", 0.5, "d", 4, Some(crate::pruning::MaskPlan::Refresh(2)), None)
+            .unwrap();
+        assert_eq!(req.max_new, 4);
+        assert_eq!(req.plan, crate::pruning::MaskPlan::Refresh(2));
+        // above the cap: shed with a named reason
+        let rej = r.admit_decode("hi", 0.5, "d", 9, None, None).unwrap_err();
+        assert!(rej.rejected.as_deref().unwrap().contains("exceeds cap"));
+        assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn single_token_engine_rejects_multi_token_requests() {
+        let cfg = ServeConfig {
+            engine: crate::config::EngineKind::Pjrt,
+            queue_cap: 10,
+            rho_levels: vec![0.4, 1.0],
+            ..Default::default()
+        };
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        // max_new = 1 is always fine
+        assert!(r.admit_decode("hi", 0.4, "d", 1, None, None).is_ok());
+        let rej = r.admit_decode("hi", 0.4, "d", 2, None, None).unwrap_err();
+        assert!(rej.rejected.as_deref().unwrap().contains("single-token"));
     }
 
     #[test]

@@ -1,24 +1,26 @@
-//! The serve loop: a dedicated runtime thread that owns every PJRT object
-//! (client, registry, sessions — they hold raw pointers and never cross
-//! threads), fed by an mpsc channel of admitted requests.
+//! The serve loop: a dedicated runtime thread generic over the
+//! [`Engine`](super::engine::Engine) backend, fed by an mpsc channel of
+//! admitted requests. All backend state (the host model, or every PJRT
+//! object — client, registry, sessions) lives and dies on this thread:
+//! [`Engine::prepare`] runs here, never on the caller.
 //!
-//! Loop body: drain arrivals → batcher → fire ready batches → execute on
-//! the μ-MoE session (or the dense session when ρ = 1) → reply + metrics.
+//! Loop body: drain arrivals → batcher (ρ-keyed, rotating fairness) →
+//! fire ready batches → `engine.execute` → stamp latency, reply, metrics.
+//! The loop owns everything that is not compute: reply delivery, latency
+//! stamping, per-level decode metrics and queue-depth bookkeeping — so a
+//! backend is just `prepare` + `execute`.
 
-use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::batcher::{BatcherConfig, DecodeBatch, DynamicBatcher};
+use super::engine::{Engine, HostEngine, Prepared};
 use super::metrics::Metrics;
-use super::request::{argmax, Request, Response};
-use crate::config::ServeConfig;
-use crate::model::checkpoint::Checkpoint;
-use crate::runtime::registry::Registry;
-use crate::runtime::session::{literal_f32, Input, Session};
-use crate::runtime::weights::DeviceWeights;
-use crate::runtime::Client;
-use crate::util::error::{Error, ResultExt};
-use std::path::Path;
+use super::request::{Request, RequestId, Response};
+use super::router::Router;
+use crate::config::{EngineKind, ServeConfig};
+use crate::tensor::LayoutCache;
+use crate::util::error::Error;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Control-plane handle returned by [`Server::start`].
@@ -52,18 +54,37 @@ impl ServerHandle {
     }
 }
 
-/// Server configuration beyond ServeConfig: which artifact kinds to bind.
+/// The serve-loop launcher. `start` dispatches on the config's engine
+/// selector; `start_engine` pins a backend at compile time (tests and
+/// benches use it to force one).
 pub struct Server;
 
 impl Server {
-    /// Spawn the runtime thread. Blocks until the model is loaded and the
-    /// sessions are compiled (so callers can fail fast), then returns the
-    /// handle plus the queue-depth cell the router decrements are tied to.
-    pub fn start(
-        cfg: ServeConfig,
-        depth: Arc<AtomicU64>,
-        metrics: Arc<Metrics>,
-    ) -> Result<ServerHandle, Error> {
+    /// Spawn the serve loop for the engine `router.config().engine`
+    /// selects, wired to the router's shared state (queue depth, metrics
+    /// and — for the host backend — the layout cache).
+    pub fn start(router: &Router) -> Result<ServerHandle, Error> {
+        match router.config().engine {
+            EngineKind::Host => Self::start_engine::<HostEngine>(router),
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt => Self::start_engine::<super::engine::PjrtEngine>(router),
+            #[cfg(not(feature = "pjrt"))]
+            EngineKind::Pjrt => Err(Error::config(
+                "engine 'pjrt' needs the PJRT runtime; rebuild with \
+                 `--features pjrt` or set engine = \"host\"",
+            )),
+        }
+    }
+
+    /// Spawn the serve loop for a specific backend. Blocks until
+    /// [`Engine::prepare`] finishes on the serve thread (so callers fail
+    /// fast on a bad model/artifact), then returns the handle.
+    pub fn start_engine<E: Engine + 'static>(router: &Router) -> Result<ServerHandle, Error> {
+        let cfg = router.config().clone();
+        let depth = router.depth_handle();
+        let metrics = router.metrics().clone();
+        let cache = router.layout_cache();
+
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<usize, Error>>();
         let stop = Arc::new(AtomicBool::new(false));
@@ -72,12 +93,15 @@ impl Server {
 
         let join = std::thread::Builder::new()
             .name("mumoe-serve".into())
-            .spawn(move || serve_thread(cfg, rx, ready_tx, depth, metrics2, stop2))
+            .spawn(move || serve_thread::<E>(cfg, cache, rx, ready_tx, depth, metrics2, stop2))
             .expect("spawn serve thread");
 
         match ready_rx.recv() {
             Ok(Ok(seq_len)) => {
-                crate::info!("server ready (seq_len={seq_len})");
+                crate::info!(
+                    "server ready (engine={}, seq_len={seq_len})",
+                    E::kind().label()
+                );
                 Ok(ServerHandle {
                     tx: Some(tx),
                     join: Some(join),
@@ -94,44 +118,32 @@ impl Server {
     }
 }
 
-fn serve_thread(
+fn serve_thread<E: Engine>(
     cfg: ServeConfig,
+    cache: Arc<Mutex<LayoutCache>>,
     rx: Receiver<Request>,
     ready_tx: Sender<Result<usize, Error>>,
     depth: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) -> Result<(), Error> {
-    // --- startup: all PJRT state lives and dies on this thread ---------
-    let setup = (|| -> Result<(Session, Session), Error> {
-        let client = Client::cpu()?;
-        let registry = Registry::open(Path::new(&cfg.artifacts_dir), client.clone())?;
-        let ckpt = Checkpoint::load(&registry.ckpt_path(&cfg.model))
-            .with_context(|| format!("loading checkpoint for {}", cfg.model))?;
-        let mumoe_meta = registry.meta_for("mumoe_logits", &cfg.model)?.name.clone();
-        let dense_meta = registry.meta_for("dense_logits", &cfg.model)?.name.clone();
-        let order = registry.meta(&mumoe_meta)?.params.clone();
-        let weights = Arc::new(DeviceWeights::upload(&client, &ckpt, &order)?);
-        let mumoe = Session::bind(&registry, &mumoe_meta, weights.clone())?;
-        let dense = Session::bind(&registry, &dense_meta, weights)?;
-        Ok((mumoe, dense))
-    })();
-
-    let (mumoe, dense) = match setup {
-        Ok(s) => {
-            let _ = ready_tx.send(Ok(s.0.meta.seq_len));
-            s
+    // --- startup: all backend state lives and dies on this thread ------
+    let prepared: Prepared<E> = match E::prepare(&cfg, cache) {
+        Ok(p) => {
+            let _ = ready_tx.send(Ok(p.seq_len));
+            p
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e));
             return Err(Error::coordinator("startup failed"));
         }
     };
+    let mut engine = prepared.engine;
+    let batch_capacity = prepared.batch_capacity;
 
-    let batch_size = mumoe.meta.batch;
     let mut batcher = DynamicBatcher::new(
         BatcherConfig {
-            batch_size,
+            batch_size: batch_capacity,
             window: Duration::from_micros(cfg.batch_window_us),
         },
         &cfg.rho_levels,
@@ -156,7 +168,7 @@ fn serve_thread(
         }
         let now = Instant::now();
         while let Some(batch) = batcher.pop_ready(now) {
-            execute_batch(&mumoe, &dense, batch, &depth, &metrics);
+            run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
         }
         if stop.load(Ordering::SeqCst) && batcher.pending() == 0 {
             break;
@@ -164,22 +176,85 @@ fn serve_thread(
     }
     // flush remaining work on shutdown
     for batch in batcher.drain() {
-        execute_batch(&mumoe, &dense, batch, &depth, &metrics);
+        run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
     }
     Ok(())
 }
 
+/// Run one batch through the engine and deliver responses. The engine
+/// returns pure compute results (tokens/logits/steps, in request order);
+/// this stamps latency + occupancy, updates the per-level decode metrics
+/// and sends each reply. An engine error — or a response-count mismatch,
+/// which would silently drop repliers — rejects the whole batch.
+fn run_batch<E: Engine>(
+    engine: &mut E,
+    mut batch: DecodeBatch,
+    capacity: usize,
+    depth: &AtomicU64,
+    metrics: &Metrics,
+) {
+    let n = batch.len();
+    let rho = batch.rho;
+    metrics.record_batch(n, capacity);
+    depth.fetch_sub(n as u64, Ordering::Relaxed);
+
+    // strip delivery state before the engine consumes the batch
+    type ReplySlot = (RequestId, Instant, Option<Sender<Response>>);
+    let meta: Vec<ReplySlot> = batch
+        .requests
+        .iter_mut()
+        .map(|r| (r.id, r.enqueued_at, r.reply.take()))
+        .collect();
+
+    let t0 = Instant::now();
+    let result = engine.execute(batch).and_then(|responses| {
+        if responses.len() == meta.len() {
+            Ok(responses)
+        } else {
+            Err(Error::coordinator(format!(
+                "engine returned {} responses for {} requests",
+                responses.len(),
+                meta.len()
+            )))
+        }
+    });
+
+    match result {
+        Ok(responses) => {
+            let elapsed_us = t0.elapsed().as_micros() as u64;
+            let tokens: u64 = responses.iter().map(|r| r.steps as u64).sum();
+            metrics.record_decode(rho, n, tokens, elapsed_us);
+            for (mut resp, (id, enqueued_at, reply)) in responses.into_iter().zip(meta) {
+                debug_assert_eq!(resp.id, id, "engine must keep request order");
+                resp.latency_us = enqueued_at.elapsed().as_micros() as u64;
+                resp.batch_size = n;
+                metrics.record_completion(resp.latency_us);
+                if let Some(reply) = reply {
+                    let _ = reply.send(resp);
+                }
+            }
+        }
+        Err(e) => {
+            crate::error!("batch execution failed: {e}");
+            for (id, _, reply) in meta {
+                metrics.record_reject();
+                if let Some(reply) = reply {
+                    let _ = reply.send(Response::rejected(id, format!("exec: {e}")));
+                }
+            }
+        }
+    }
+}
+
 /// End-to-end driver: generate a synthetic trace from the three test
-/// corpora, start the server, replay arrivals in (compressed) real time
-/// and report throughput / latency / occupancy / per-domain stats.
-/// Shared by `mumoe serve` and `examples/serve_trace.rs`.
-pub fn replay_trace(
-    cfg: ServeConfig,
-    n_requests: usize,
-    rate: f64,
-) -> Result<String, Error> {
+/// corpora, start the server (whichever engine the config selects),
+/// replay arrivals in (compressed) real time and report throughput /
+/// latency / occupancy / per-domain stats. Shared by `mumoe serve` and
+/// `examples/serve_trace.rs`.
+pub fn replay_trace(cfg: ServeConfig, n_requests: usize, rate: f64) -> Result<String, Error> {
     use crate::data::corpus::Corpus;
     use crate::data::trace::{generate, TraceConfig};
+    use std::path::Path;
 
     let data_dir = Path::new(&cfg.artifacts_dir).join("data");
     let corpora: Vec<Corpus> = crate::data::DOMAINS
@@ -197,10 +272,8 @@ pub fn replay_trace(
     );
 
     let metrics = Arc::new(Metrics::new());
-    let router =
-        super::router::Router::new(cfg.clone(), crate::model::MAX_SEQ_LEN, metrics.clone())?;
-    let depth = router.depth_handle();
-    let handle = Server::start(cfg, depth, metrics.clone())?;
+    let router = Router::new(cfg, crate::model::MAX_SEQ_LEN, metrics.clone())?;
+    let handle = Server::start(&router)?;
 
     let (rtx, rrx) = channel::<Response>();
     let t0 = Instant::now();
@@ -258,77 +331,4 @@ pub fn replay_trace(
         ));
     }
     Ok(report)
-}
-
-/// Run one batch and deliver responses. Failures reject the whole batch.
-fn execute_batch(
-    mumoe: &Session,
-    dense: &Session,
-    batch: Batch,
-    depth: &AtomicU64,
-    metrics: &Metrics,
-) {
-    let n = batch.len();
-    let use_dense = batch.rho >= 0.999;
-    let session = if use_dense { dense } else { mumoe };
-    let cap = session.meta.batch;
-    metrics.record_batch(n, cap);
-    depth.fetch_sub(n as u64, Ordering::Relaxed);
-
-    let seq = session.meta.seq_len;
-    let mut tokens = Vec::with_capacity(cap * seq);
-    let mut lengths = Vec::with_capacity(cap);
-    for r in &batch.requests {
-        tokens.extend_from_slice(&r.tokens);
-        lengths.push(r.valid_len as i32);
-    }
-    // pad unused slots by replicating the first request (outputs ignored)
-    for _ in n..cap {
-        tokens.extend_from_slice(&batch.requests[0].tokens);
-        lengths.push(batch.requests[0].valid_len as i32);
-    }
-
-    let mut inputs = vec![
-        Input::I32(tokens, vec![cap, seq]),
-        Input::I32(lengths, vec![cap]),
-    ];
-    if !use_dense {
-        inputs.push(Input::ScalarF32(batch.rho as f32));
-    }
-
-    let result = session
-        .run(&inputs)
-        .and_then(|outs| literal_f32(&outs[0]));
-
-    match result {
-        Ok(flat) => {
-            let vocab = flat.len() / cap;
-            for (i, req) in batch.requests.into_iter().enumerate() {
-                let row = flat[i * vocab..(i + 1) * vocab].to_vec();
-                let latency = req.enqueued_at.elapsed().as_micros() as u64;
-                metrics.record_completion(latency);
-                let resp = Response {
-                    id: req.id,
-                    next_token: argmax(&row),
-                    logits: row,
-                    latency_us: latency,
-                    batch_size: n,
-                    rho_used: batch.rho,
-                    rejected: None,
-                };
-                if let Some(reply) = req.reply {
-                    let _ = reply.send(resp);
-                }
-            }
-        }
-        Err(e) => {
-            crate::error!("batch execution failed: {e}");
-            for req in batch.requests {
-                metrics.record_reject();
-                if let Some(reply) = req.reply {
-                    let _ = reply.send(Response::rejected(req.id, format!("exec: {e}")));
-                }
-            }
-        }
-    }
 }

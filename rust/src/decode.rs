@@ -20,6 +20,12 @@
 //! Quality cost of reuse is measured by
 //! [`crate::eval::host::decode_drift`] and tracked by
 //! `benches/decode_reuse.rs`.
+//!
+//! Two entry points share these semantics: [`decode_greedy`] (one
+//! request, the reference implementation) and [`decode_batch`] (the
+//! serving form: N requests at one snapped ρ through one shared cache,
+//! per-request bit-identical to `decode_greedy` — this is what
+//! `coordinator::engine::HostEngine` executes).
 
 use crate::coordinator::request::argmax;
 use crate::model::EOS_ID;
@@ -139,6 +145,116 @@ pub fn decode_greedy(
     }
 }
 
+/// One request of a batched decode: its prompt and per-request knobs. The
+/// batch-level invariant (one snapped ρ per batch) lives on the
+/// [`decode_batch`] call instead.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchRequest<'a> {
+    pub prompt: &'a [i32],
+    /// Maximum new tokens for this request (may differ across batch-mates).
+    pub max_new: usize,
+    /// Refresh policy for this request.
+    pub plan: MaskPlan,
+}
+
+/// Per-lane state of a batched decode (one lane per [`BatchRequest`]).
+struct Lane {
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    steps: Vec<StepTrace>,
+    refresh_count: usize,
+    layouts: FixedLayouts,
+    cache_hits: u64,
+    cache_misses: u64,
+    done: bool,
+}
+
+/// Batched greedy decode: every request shares one snapped ρ (the
+/// coordinator's batch key) and one [`LayoutCache`], so batch-mates whose
+/// refresh steps select the same micro-experts share one set of
+/// compressed [`crate::tensor::RowSparse`] layouts instead of each
+/// recompressing. Per request, the result is **bit-identical** to an
+/// independent [`decode_greedy`] call (`proptest.rs::decode_props` proves
+/// this): the loop is step-major across lanes, but each lane's forwards
+/// run in the same order, over the same windows, with the same kernels —
+/// the batching only changes *when* work happens and *how often* layouts
+/// are compressed, never what executes.
+pub fn decode_batch(
+    model: &Model,
+    items: &[BatchRequest<'_>],
+    rho: f64,
+    stop_at_eos: bool,
+    mut cache: Option<&mut LayoutCache>,
+) -> Vec<DecodeOutput> {
+    let seq = model.cfg.max_seq_len;
+    let mut lanes: Vec<Lane> = items
+        .iter()
+        .map(|it| {
+            assert!(!it.prompt.is_empty(), "decode needs a non-empty prompt");
+            Lane {
+                tokens: it.prompt.to_vec(),
+                prompt_len: it.prompt.len(),
+                steps: Vec::with_capacity(it.max_new),
+                refresh_count: 0,
+                layouts: FixedLayouts::new(),
+                cache_hits: 0,
+                cache_misses: 0,
+                done: false,
+            }
+        })
+        .collect();
+
+    let max_steps = items.iter().map(|it| it.max_new).max().unwrap_or(0);
+    for step in 0..max_steps {
+        for (lane, item) in lanes.iter_mut().zip(items) {
+            if lane.done || step >= item.max_new {
+                continue;
+            }
+            let start = lane.tokens.len().saturating_sub(seq);
+            let window = &lane.tokens[start..];
+            let valid = window.len();
+            let refreshed = item.plan.refreshes_at(step);
+            if refreshed {
+                let (h0, m0) = cache
+                    .as_deref()
+                    .map_or((0, 0), |c| (c.hits(), c.misses()));
+                let sel = moe::select_experts(model, window, valid, rho);
+                lane.layouts = layouts_for(model, &sel, cache.as_deref_mut());
+                let (h1, m1) = cache
+                    .as_deref()
+                    .map_or((0, 0), |c| (c.hits(), c.misses()));
+                lane.cache_hits += h1 - h0;
+                lane.cache_misses += m1 - m0;
+                lane.refresh_count += 1;
+            }
+            let logits = model.forward_fixed_last(window, valid, &lane.layouts);
+            let token = argmax(&logits);
+            lane.steps.push(StepTrace {
+                token,
+                logits,
+                refreshed,
+            });
+            if stop_at_eos && token == EOS_ID {
+                lane.done = true;
+                continue;
+            }
+            lane.tokens.push(token);
+        }
+    }
+
+    lanes
+        .into_iter()
+        .map(|lane| DecodeOutput {
+            tokens: lane.tokens,
+            prompt_len: lane.prompt_len,
+            steps: lane.steps,
+            refresh_count: lane.refresh_count,
+            cache_hits: lane.cache_hits,
+            cache_misses: lane.cache_misses,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +328,109 @@ mod tests {
     fn empty_prompt_panics() {
         let m = tiny_model();
         decode_greedy(&m, &[], &cfg(MaskPlan::PruneOnce, 1), None);
+    }
+
+    // ---- decode_batch -----------------------------------------------------
+
+    fn batch_item(prompt: &[i32], max_new: usize, plan: MaskPlan) -> BatchRequest<'_> {
+        BatchRequest {
+            prompt,
+            max_new,
+            plan,
+        }
+    }
+
+    #[test]
+    fn batch_matches_independent_greedy_mixed_max_new() {
+        let m = tiny_model();
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[9, 1, 7, 4], &[5, 6]];
+        let plans = [MaskPlan::PruneOnce, MaskPlan::EveryStep, MaskPlan::Refresh(2)];
+        let max_news = [4usize, 2, 5];
+        let items: Vec<BatchRequest> = prompts
+            .iter()
+            .zip(plans)
+            .zip(max_news)
+            .map(|((&p, plan), max_new)| batch_item(p, max_new, plan))
+            .collect();
+        let mut cache = crate::tensor::LayoutCache::new(128);
+        let batched = decode_batch(&m, &items, 0.5, false, Some(&mut cache));
+        assert_eq!(batched.len(), 3);
+        for (i, item) in items.iter().enumerate() {
+            let single = decode_greedy(
+                &m,
+                item.prompt,
+                &DecodeConfig {
+                    rho: 0.5,
+                    plan: item.plan,
+                    max_new: item.max_new,
+                    stop_at_eos: false,
+                },
+                None,
+            );
+            assert_eq!(batched[i].tokens, single.tokens, "lane {i} tokens");
+            assert_eq!(batched[i].refresh_count, single.refresh_count, "lane {i}");
+            assert_eq!(batched[i].steps.len(), single.steps.len(), "lane {i}");
+            for (s, (a, b)) in batched[i].steps.iter().zip(&single.steps).enumerate() {
+                assert_eq!(a.logits, b.logits, "lane {i} step {s} logits");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_batch_mates_share_compressed_layouts() {
+        let m = tiny_model();
+        let n_linears = m.cfg.linear_names().len() as u64;
+        let prompt: &[i32] = &[9, 1, 7];
+        let items = [
+            batch_item(prompt, 3, MaskPlan::PruneOnce),
+            batch_item(prompt, 3, MaskPlan::PruneOnce),
+        ];
+        let mut cache = crate::tensor::LayoutCache::new(64);
+        let outs = decode_batch(&m, &items, 0.5, false, Some(&mut cache));
+        // lane 0 compresses every linear once; lane 1's identical prompt
+        // selection hits every one of those entries instead
+        assert_eq!(outs[0].cache_misses, n_linears);
+        assert_eq!(outs[1].cache_misses, 0, "batch-mate recompressed");
+        assert_eq!(outs[1].cache_hits, n_linears);
+        assert_eq!(outs[0].tokens, outs[1].tokens);
+    }
+
+    #[test]
+    fn batch_eos_stop_mirrors_greedy() {
+        // with stop_at_eos on, batch lanes must stop exactly where the
+        // single-request engine stops
+        let m = tiny_model();
+        let prompt: &[i32] = &[3, 1, 4, 1, 5];
+        let single = decode_greedy(
+            &m,
+            prompt,
+            &DecodeConfig {
+                rho: 0.6,
+                plan: MaskPlan::PruneOnce,
+                max_new: 6,
+                stop_at_eos: true,
+            },
+            None,
+        );
+        let outs = decode_batch(
+            &m,
+            &[batch_item(prompt, 6, MaskPlan::PruneOnce)],
+            0.6,
+            true,
+            None,
+        );
+        assert_eq!(outs[0].tokens, single.tokens);
+        assert_eq!(outs[0].steps.len(), single.steps.len());
+    }
+
+    #[test]
+    fn empty_batch_and_zero_max_new() {
+        let m = tiny_model();
+        assert!(decode_batch(&m, &[], 0.5, false, None).is_empty());
+        let items = [batch_item(&[1, 2], 0, MaskPlan::PruneOnce)];
+        let outs = decode_batch(&m, &items, 0.5, false, None);
+        assert_eq!(outs[0].new_tokens().len(), 0);
+        assert_eq!(outs[0].steps.len(), 0);
+        assert_eq!(outs[0].refresh_count, 0);
     }
 }

@@ -17,11 +17,12 @@
 //! device buffers.
 //!
 //! Everything PJRT-dependent (`runtime`, `eval::harness`,
-//! `eval::vlm_harness`, `coordinator::server`) is gated behind the
-//! optional `pjrt` cargo feature so the default build is pure std-Rust:
-//! the host execution engine (dense + row-sparse μ-MoE kernels), pruning
-//! engines, analysis lenses and benches all work without an XLA
-//! toolchain.
+//! `eval::vlm_harness`, `coordinator::engine::PjrtEngine`) is gated
+//! behind the optional `pjrt` cargo feature so the default build is pure
+//! std-Rust: the serving coordinator (router → batcher → `HostEngine`
+//! batched decode through the shared layout cache), the host execution
+//! engine (dense + row-sparse μ-MoE kernels), pruning engines, analysis
+//! lenses and benches all work without an XLA toolchain.
 //!
 //! The crate is organised as substrates (bottom) to product (top):
 //!

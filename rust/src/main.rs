@@ -1,11 +1,15 @@
 //! mumoe — CLI launcher for the μ-MoE serving stack.
 //!
 //! Subcommands:
-//!   serve       replay a synthetic request trace through the coordinator
-//!   generate    autoregressive greedy decode on the host engine, with a
-//!               mask plan (every-step | prune-once | refresh:<k>) and a
-//!               compressed-layout cache — no artifacts or `pjrt` needed;
-//!               `--device` decodes through the PJRT artifact instead
+//!   serve       replay a synthetic request trace through the coordinator;
+//!               `--engine host` (default, no pjrt needed) runs batched
+//!               multi-token decode through the shared layout cache,
+//!               `--engine pjrt` drives the AOT artifact sessions
+//!   generate    autoregressive greedy decode through the same HostEngine
+//!               the server uses, with a mask plan (every-step |
+//!               prune-once | refresh:<k>) and a compressed-layout cache —
+//!               no artifacts or `pjrt` needed; `--device` decodes through
+//!               the PJRT artifact instead
 //!   eval        perplexity of one (model, method, ρ, dataset) cell
 //!   vlm-eval    strata accuracy of μ-VLM under one method/ρ
 //!   flops       Table-4 style FLOPs/MACs analysis
@@ -66,7 +70,8 @@ fn print_help() {
     println!(
         "mumoe — test-time pruning as micro-grained mixture-of-experts\n\n\
          subcommands:\n\
-         \x20 serve      replay a request trace through the coordinator\n\
+         \x20 serve      replay a request trace (host engine by default;\n\
+         \x20            --engine pjrt needs --features pjrt)\n\
          \x20 generate   host greedy decode with mask-plan reuse (no pjrt)\n\
          \x20 eval       perplexity of one (model, method, rho, dataset) cell\n\
          \x20 vlm-eval   mu-VLM strata accuracy under one method/rho\n\
@@ -86,23 +91,23 @@ fn wants_help(rest: &[String]) -> bool {
 // serve
 // ---------------------------------------------------------------------------
 
-#[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_rest: &[String]) -> Result<(), Error> {
-    pjrt_unavailable("serve")
-}
-
-#[cfg(feature = "pjrt")]
 const SERVE_SPEC: &[OptSpec] = &[
     opt("artifacts", "artifact directory", "artifacts"),
     opt("model", "model to serve", "mu-opt-micro"),
+    opt("engine", "execution backend: host | pjrt", "host"),
     opt("requests", "trace length", "64"),
     opt("rate", "mean arrival rate (req/s)", "50"),
     opt("rhos", "sparsity levels clients request", "0.4,0.6,1.0"),
     opt("window-us", "batch window (microseconds)", "2000"),
+    opt("max-new", "new tokens per request (host engine)", "1"),
     opt("config", "optional mumoe.toml to load first", ""),
 ];
 
-#[cfg(feature = "pjrt")]
+/// Replay a synthetic trace through the full coordinator. The default
+/// `host` engine runs batched multi-token decode through the router's
+/// shared layout cache and needs no `pjrt` feature (a missing checkpoint
+/// falls back to a deterministic random model); `--engine pjrt` drives
+/// the AOT artifact sessions instead.
 fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("serve", "replay a trace", SERVE_SPEC));
@@ -115,10 +120,29 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     } else {
         mumoe::config::ServeConfig::default()
     };
-    cfg.artifacts_dir = a.req("artifacts")?.to_string();
-    cfg.model = a.req("model")?.to_string();
-    cfg.batch_window_us = a.get_u64("window-us")?;
-    cfg.rho_levels = a.get_f64_list("rhos")?;
+    // Args pre-fills every option with its spec default, so a blanket
+    // overwrite would silently undo whatever the TOML just loaded; only
+    // options the user actually typed (either spelling) override it.
+    if a.given("artifacts") || !a.given("config") {
+        cfg.artifacts_dir = a.req("artifacts")?.to_string();
+    }
+    if a.given("model") || !a.given("config") {
+        cfg.model = a.req("model")?.to_string();
+    }
+    if a.given("engine") {
+        cfg.engine = mumoe::config::EngineKind::parse(a.req("engine")?)?;
+    }
+    if a.given("window-us") {
+        cfg.batch_window_us = a.get_u64("window-us")?;
+    }
+    if a.given("rhos") || !a.given("config") {
+        cfg.rho_levels = a.get_f64_list("rhos")?;
+    }
+    if a.given("max-new") {
+        cfg.decode.default_max_new = a.get_usize("max-new")?;
+        cfg.decode.max_new_cap = cfg.decode.max_new_cap.max(cfg.decode.default_max_new);
+    }
+    cfg.validate()?;
 
     let report = mumoe::coordinator::server::replay_trace(
         cfg,
@@ -148,7 +172,9 @@ const GEN_SPEC: &[OptSpec] = &[
     ),
 ];
 
-/// Greedy autoregressive decoding through the host decode engine: the mask
+/// Greedy autoregressive decoding through the serving engine path: the
+/// same `HostEngine` the server loop drives, fed one single-request
+/// `DecodeBatch` (so `generate` and `serve` cannot drift apart). The mask
 /// plan decides when micro-expert selection is refreshed against the
 /// growing context, and the layout cache skips recompression when the
 /// selection repeats. Runs without artifacts or the `pjrt` feature — a
@@ -163,7 +189,6 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     if a.flag("device") {
         return cmd_generate_device(&a);
     }
-    let dir = std::path::PathBuf::from(a.req("artifacts")?);
     let model_name = a.req("model")?;
     let rho = a.get_f64("rho")?;
     let n_new = a.get_usize("tokens")?;
@@ -173,53 +198,52 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
         return Err(Error::config("--cache-cap must be > 0"));
     }
 
-    use mumoe::decode::{decode_greedy, DecodeConfig};
-    use mumoe::model::checkpoint::Checkpoint;
-    use mumoe::model::config_by_name;
+    use mumoe::coordinator::engine::{host_model, Engine, HostEngine};
+    use mumoe::coordinator::request::Request;
+    use mumoe::coordinator::DecodeBatch;
     use mumoe::model::tokenizer::ByteTokenizer;
-    use mumoe::nn::{random_model, Model};
     use mumoe::tensor::LayoutCache;
+    use std::sync::{Arc, Mutex};
 
-    let cfg = config_by_name(model_name)
-        .ok_or_else(|| Error::config(format!("unknown model '{model_name}'")))?;
-    let ckpt_path = dir.join("ckpt").join(format!("{model_name}.ckpt"));
-    // only a *missing* checkpoint falls back to the demo model — a present
-    // but unreadable/corrupt one must fail loudly, not generate garbage
-    let model = if ckpt_path.exists() {
-        let ckpt = Checkpoint::load(&ckpt_path)?;
-        Model::from_checkpoint(&cfg, &ckpt)?
-    } else {
-        mumoe::warn_!(
-            "no checkpoint at {}; decoding with a deterministic random model",
-            ckpt_path.display()
-        );
-        random_model(&cfg, 7)
+    let serve_cfg = mumoe::config::ServeConfig {
+        artifacts_dir: a.req("artifacts")?.to_string(),
+        model: model_name.to_string(),
+        ..Default::default()
     };
+    let model = host_model(&serve_cfg)?;
+    let cache = Arc::new(Mutex::new(LayoutCache::new(cache_cap)));
+    let mut engine = HostEngine::with_model(model, cache.clone(), true);
 
     let tok = ByteTokenizer;
     let prompt_ids = tok.encode(a.req("prompt")?, true);
-    let mut cache = LayoutCache::new(cache_cap);
-    let dcfg = DecodeConfig {
-        rho,
-        plan,
-        max_new: n_new,
-        stop_at_eos: true,
-    };
+    let prompt_len = prompt_ids.len();
+    let request = Request::new(1, prompt_ids.clone(), prompt_len, rho, "cli", None)
+        .with_decode(n_new, plan);
     let t0 = std::time::Instant::now();
-    let out = decode_greedy(&model, &prompt_ids, &dcfg, Some(&mut cache));
+    let responses = engine.execute(DecodeBatch {
+        rho,
+        requests: vec![request],
+    })?;
     let dt = t0.elapsed().as_secs_f64();
-    let generated = out.new_tokens().len();
+    let resp = &responses[0];
 
-    println!("{}", tok.decode(&out.tokens));
+    let mut text_ids = prompt_ids;
+    text_ids.extend_from_slice(&resp.tokens);
+    println!("{}", tok.decode(&text_ids));
+    let (hits, misses) = {
+        let c = cache.lock().expect("cache lock");
+        (c.hits(), c.misses())
+    };
+    // tokens, not steps: an EOS-terminated generation runs one more step
+    // than it emits tokens, and the count must match the printed text
+    let generated = resp.tokens.len();
     println!(
-        "\n[host decode: model={model_name} plan={} rho={rho}: {generated} new tokens \
-         in {dt:.2}s = {:.2} tok/s; {} selection refreshes, layout cache {} hits / {} \
-         misses]",
+        "\n[host engine: model={model_name} plan={} rho={rho}: {generated} new tokens \
+         in {dt:.2}s = {:.2} tok/s ({} decode steps); layout cache {hits} hits / \
+         {misses} misses]",
         plan.label(),
         generated as f64 / dt.max(1e-9),
-        out.refresh_count,
-        out.cache_hits,
-        out.cache_misses
+        resp.steps,
     );
     Ok(())
 }

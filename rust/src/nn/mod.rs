@@ -23,7 +23,7 @@
 use crate::model::checkpoint::Checkpoint;
 use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
-use crate::tensor::{layernorm_rows, log_softmax, matmul_tn_sparse, relu, Mat, RowSparse};
+use crate::tensor::{layernorm_rows, log_softmax, matmul_tn_sparse_auto, relu, Mat, RowSparse};
 use crate::util::error::Error;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -214,9 +214,11 @@ impl Model {
     fn linear_with_t(&self, x: &Mat, xt: Option<&Mat>, names: &LinearNames, exec: &Exec) -> Mat {
         let w = &self.mats[&names.w];
         let b = &self.vecs[&names.b];
+        // auto kernels: serial for decode-sized work, W-row-parallel for
+        // prefill-sized layouts (bit-identical either way)
         let sparse_mm = |rs: &RowSparse| match xt {
-            Some(xt) => matmul_tn_sparse(xt, rs),
-            None => x.matmul_nt_sparse(rs),
+            Some(xt) => matmul_tn_sparse_auto(xt, rs),
+            None => x.matmul_nt_sparse_auto(rs),
         };
         let mut y = match exec {
             Exec::Dense => x.matmul_nt(w),

@@ -243,6 +243,27 @@ mod sparse_props {
         )
     }
 
+    /// The W-row-parallel sparse kernel (and its auto dispatch) must be
+    /// bit-identical to the serial sparse kernel over arbitrary masked
+    /// layouts — including tie-heavy masks with raggedly-sized rows.
+    fn prop_parallel_sparse_bit_identical(input: &(u64, f64)) -> PropResult {
+        let (w, x, scores, rho) = case(input.0, input.1);
+        let mask = mask_from_scores(&scores, rho, Selector::KthValue);
+        let rs = mask.compress(&w);
+        let pool = ThreadPool::new(3);
+        let serial = x.matmul_nt_sparse(&rs);
+        let par = x.matmul_nt_sparse_par(&rs, &pool);
+        ensure(
+            serial.data == par.data,
+            "parallel sparse kernel diverged from serial",
+        )?;
+        let auto = x.matmul_nt_sparse_auto(&rs);
+        ensure(
+            serial.data == auto.data,
+            "auto sparse dispatch diverged from serial",
+        )
+    }
+
     fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
         // bias toward the boundary rhos where tie handling matters most
         let rho = match r.gen_range(5) {
@@ -266,6 +287,11 @@ mod sparse_props {
     #[test]
     fn parallel_matmul_matches_serial() {
         check(103, 25, gen_seed_rho, prop_parallel_matmul_bit_identical);
+    }
+
+    #[test]
+    fn parallel_sparse_matmul_matches_serial() {
+        check(104, 25, gen_seed_rho, prop_parallel_sparse_bit_identical);
     }
 }
 
@@ -376,6 +402,55 @@ mod decode_props {
         Ok(())
     }
 
+    /// Tentpole property: `decode_batch` over N requests at one snapped ρ
+    /// — sharing one layout cache across batch-mates — is bit-identical,
+    /// per request, to N independent `decode_greedy` calls. Batches
+    /// deliberately include duplicated prompts (the coordinator's
+    /// repeated-prefix case): for those the batch must also *reuse* the
+    /// first lane's compressed layouts rather than recompress.
+    fn prop_batch_matches_independent_greedy(input: &(u64, f64)) -> PropResult {
+        use crate::decode::{decode_batch, BatchRequest};
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let mut rng = Pcg32::new(input.0 ^ 0x5EED, 13);
+        let plans = [MaskPlan::EveryStep, MaskPlan::PruneOnce, MaskPlan::Refresh(2)];
+        let plan = plans[rng.gen_range_usize(3)];
+        // lanes: the base prompt, a variant, and an exact duplicate of the
+        // base (cache-sharing case), with ragged max_new
+        let variant: Vec<i32> = prompt.iter().map(|&t| (t + 7) % 256).collect();
+        let lanes: [(&[i32], usize); 3] = [
+            (&prompt, max_new),
+            (&variant, 1 + max_new / 2),
+            (&prompt, max_new),
+        ];
+        let items: Vec<BatchRequest> = lanes
+            .iter()
+            .map(|&(p, m)| BatchRequest {
+                prompt: p,
+                max_new: m,
+                plan,
+            })
+            .collect();
+        let mut cache = LayoutCache::new(256);
+        let batched = decode_batch(&model, &items, rho, false, Some(&mut cache));
+        for (i, &(p, m)) in lanes.iter().enumerate() {
+            let single = decode_greedy(&model, p, &dcfg(rho, plan, m), None);
+            bit_identical(&format!("lane {i} vs independent greedy"), &batched[i], &single)?;
+        }
+        // duplicate-prompt lanes decode the same windows, so the third
+        // lane must never compress a layout the first already built
+        ensure(
+            batched[2].cache_misses == 0,
+            format!(
+                "duplicate batch-mate recompressed {} layouts",
+                batched[2].cache_misses
+            ),
+        )?;
+        ensure(
+            batched[2].cache_hits > 0,
+            "duplicate batch-mate never hit the shared cache",
+        )
+    }
+
     fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
         (r.next_u64(), r.next_f64())
     }
@@ -388,6 +463,11 @@ mod decode_props {
     #[test]
     fn refresh_plan_degenerates_to_every_step_and_prune_once() {
         check(202, 10, gen_seed_rho, prop_refresh_degenerates_to_endpoints);
+    }
+
+    #[test]
+    fn batched_decode_matches_independent_greedy() {
+        check(203, 8, gen_seed_rho, prop_batch_matches_independent_greedy);
     }
 }
 

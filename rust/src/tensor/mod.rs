@@ -10,14 +10,18 @@ mod linalg;
 mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
-pub use sparse::{fnv1a64, matmul_tn_sparse, rho_milli, LayoutCache, LayoutKey, RowSparse};
+pub use sparse::{
+    fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_par, rho_milli,
+    LayoutCache, LayoutKey, RowSparse,
+};
 
 use crate::util::threadpool::{self, ThreadPool};
 
-/// Work threshold (in multiply-adds) above which `matmul_nt_auto` fans out
-/// to the shared threadpool. Below it, threadpool hand-off costs more than
-/// the matmul itself.
-const PAR_MIN_MACS: usize = 1 << 21;
+/// Work threshold (in multiply-adds) above which the `*_auto` matmuls fan
+/// out to the shared threadpool. Below it, threadpool hand-off costs more
+/// than the matmul itself. Shared with the sparse kernels (their MACs are
+/// `nnz · T`).
+pub(crate) const PAR_MIN_MACS: usize = 1 << 21;
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]

@@ -17,8 +17,12 @@
 //! weight contributes a contiguous length-T AXPY — that keeps the
 //! per-active-MAC rate close to the dense kernel's (a gather formulation
 //! is 3-6x slower per MAC and would erase the sparsity win entirely).
+//! For large layouts a W-row-partitioned parallel variant
+//! ([`matmul_tn_sparse_par`]) runs on the shared threadpool, bit-identical
+//! to the serial kernel; the `*_auto` forms dispatch by `nnz · T` work.
 
 use super::Mat;
+use crate::util::threadpool::{self, ThreadPool};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -283,6 +287,39 @@ impl Mat {
         // so each active weight contributes one vectorizable AXPY.
         matmul_tn_sparse(&self.t(), w)
     }
+
+    /// [`Mat::matmul_nt_sparse`] with the W-rows partitioned across the
+    /// pool's workers. Bit-identical to the serial kernel.
+    pub fn matmul_nt_sparse_par(&self, w: &RowSparse, pool: &ThreadPool) -> Mat {
+        matmul_tn_sparse_par(&self.t(), w, pool)
+    }
+
+    /// [`Mat::matmul_nt_sparse`], choosing serial or pooled execution by
+    /// active-weight work size.
+    pub fn matmul_nt_sparse_auto(&self, w: &RowSparse) -> Mat {
+        matmul_tn_sparse_auto(&self.t(), w)
+    }
+}
+
+/// Accumulate output rows `lo..hi` of the transposed product into `out`
+/// (length `(hi - lo) * xt.cols`, zero-initialized). Row `j` of the
+/// transposed output depends only on W-row `j`, and every accumulator sums
+/// the row's active weights in ascending stored order — the same order the
+/// serial kernel uses — so results are bit-identical however the rows are
+/// partitioned.
+fn tn_sparse_rows(xt: &Mat, w: &RowSparse, lo: usize, hi: usize, out: &mut [f32]) {
+    let m = xt.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * m);
+    for j in lo..hi {
+        let acc = &mut out[(j - lo) * m..(j - lo + 1) * m];
+        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
+            let v = w.values[p];
+            let xr = xt.row(w.col_idx[p] as usize);
+            for (a, &x) in acc.iter_mut().zip(xr) {
+                *a += v * x;
+            }
+        }
+    }
 }
 
 /// `xt^T @ W^T` with `xt` the *already transposed* (d_in, T) activations —
@@ -292,17 +329,47 @@ pub fn matmul_tn_sparse(xt: &Mat, w: &RowSparse) -> Mat {
     assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
     let (m, n) = (xt.cols, w.rows);
     let mut out_t = Mat::zeros(n, m);
-    for j in 0..n {
-        let acc = out_t.row_mut(j);
-        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
-            let v = w.values[p];
-            let xr = xt.row(w.col_idx[p] as usize);
-            for (a, &x) in acc.iter_mut().zip(xr) {
-                *a += v * x;
-            }
-        }
+    tn_sparse_rows(xt, w, 0, n, &mut out_t.data);
+    out_t.t()
+}
+
+/// [`matmul_tn_sparse`] with the W-rows partitioned across the pool's
+/// workers (each output row is owned by exactly one worker, accumulated in
+/// the same order as the serial kernel — bit-identical results).
+pub fn matmul_tn_sparse_par(xt: &Mat, w: &RowSparse, pool: &ThreadPool) -> Mat {
+    assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
+    let (m, n) = (xt.cols, w.rows);
+    if pool.size() <= 1 || n <= 1 {
+        return matmul_tn_sparse(xt, w);
+    }
+    // ~2 chunks per worker for load balance without oversplitting
+    let chunks = (pool.size() * 2).min(n);
+    let step = n.div_ceil(chunks);
+    let ranges: Vec<(usize, usize)> = (0..n)
+        .step_by(step)
+        .map(|lo| (lo, (lo + step).min(n)))
+        .collect();
+    let parts = pool.scope_map(ranges.clone(), |(lo, hi)| {
+        let mut part = vec![0.0f32; (hi - lo) * m];
+        tn_sparse_rows(xt, w, lo, hi, &mut part);
+        part
+    });
+    let mut out_t = Mat::zeros(n, m);
+    for ((lo, hi), part) in ranges.into_iter().zip(parts) {
+        out_t.data[lo * m..hi * m].copy_from_slice(&part);
     }
     out_t.t()
+}
+
+/// [`matmul_tn_sparse`], choosing serial or pooled execution by work size
+/// (`nnz · T` multiply-adds, same threshold as the dense auto kernel).
+pub fn matmul_tn_sparse_auto(xt: &Mat, w: &RowSparse) -> Mat {
+    let macs = w.nnz() * xt.cols;
+    if macs >= super::PAR_MIN_MACS {
+        matmul_tn_sparse_par(xt, w, threadpool::global())
+    } else {
+        matmul_tn_sparse(xt, w)
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +438,43 @@ mod tests {
         let a = x.matmul_nt_sparse(&rs);
         let b = matmul_tn_sparse(&x.t(), &rs);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn parallel_sparse_kernel_bit_identical_to_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg32::new(11, 0);
+        for (t, d_in, d_out) in [(1, 12, 7), (9, 33, 17), (24, 40, 31)] {
+            let x = randmat(&mut rng, t, d_in);
+            let mut w = randmat(&mut rng, d_out, d_in);
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let rs = RowSparse::from_dense(&w);
+            let serial = x.matmul_nt_sparse(&rs);
+            let par = x.matmul_nt_sparse_par(&rs, &pool);
+            assert_eq!(serial.data, par.data, "({t},{d_in},{d_out})");
+            assert_eq!(serial.data, x.matmul_nt_sparse_auto(&rs).data);
+        }
+    }
+
+    #[test]
+    fn parallel_sparse_handles_degenerate_shapes() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg32::new(12, 0);
+        // single output row (no partitioning possible) and all-zero W
+        let x = randmat(&mut rng, 4, 8);
+        let one_row = RowSparse::from_dense(&randmat(&mut rng, 1, 8));
+        assert_eq!(
+            x.matmul_nt_sparse_par(&one_row, &pool).data,
+            x.matmul_nt_sparse(&one_row).data
+        );
+        let empty = RowSparse::from_dense(&Mat::zeros(5, 8));
+        let out = x.matmul_nt_sparse_par(&empty, &pool);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        assert_eq!((out.rows, out.cols), (4, 5));
     }
 
     fn key(name: &str, fp: u64) -> LayoutKey {

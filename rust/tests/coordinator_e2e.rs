@@ -19,6 +19,7 @@ fn artifacts_available() -> bool {
 fn serve_cfg() -> ServeConfig {
     ServeConfig {
         model: "mu-opt-micro".into(),
+        engine: mumoe::config::EngineKind::Pjrt,
         rho_levels: vec![0.4, 1.0],
         batch_window_us: 1_000,
         queue_cap: 64,
@@ -34,10 +35,9 @@ fn serves_concurrent_mixed_sparsity_requests() {
     }
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone())
         .expect("router config");
-    let depth = router.depth_handle();
-    let handle = Server::start(cfg, depth, metrics.clone()).expect("server");
+    let handle = Server::start(&router).expect("server");
 
     let (tx, rx) = channel();
     let n = 12;
@@ -82,9 +82,8 @@ fn same_prompt_same_rho_is_deterministic() {
     }
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
-        .expect("router config");
-    let handle = Server::start(cfg, router.depth_handle(), metrics).expect("server");
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router config");
+    let handle = Server::start(&router).expect("server");
 
     let mut toks = Vec::new();
     for _ in 0..2 {
@@ -113,9 +112,8 @@ fn dense_route_taken_for_rho_one() {
     // produce sane logits through that route
     let cfg = serve_cfg();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
-        .expect("router config");
-    let handle = Server::start(cfg, router.depth_handle(), metrics).expect("server");
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router config");
+    let handle = Server::start(&router).expect("server");
     let (tx, rx) = channel();
     let req = router
         .admit("the quarterly earnings of", 1.0, "synth_news", Some(tx))
@@ -160,8 +158,7 @@ fn server_rejects_unknown_model_at_startup() {
     let mut cfg = serve_cfg();
     cfg.model = "mu-opt-nonexistent".into();
     let metrics = Arc::new(Metrics::new());
-    let router = Router::new(cfg.clone(), mumoe::model::MAX_SEQ_LEN, metrics.clone())
-        .expect("router config");
-    let r = Server::start(cfg, router.depth_handle(), metrics);
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router config");
+    let r = Server::start(&router);
     assert!(r.is_err(), "startup must fail fast on unknown model");
 }

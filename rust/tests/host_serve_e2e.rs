@@ -1,0 +1,193 @@
+//! Integration: the full coordinator on the **host engine** — router →
+//! rotating batcher → serve loop → `HostEngine` batched decode through
+//! the router's shared layout cache. No artifacts, no `pjrt` feature:
+//! the engine falls back to the deterministic random model, so every
+//! response can be cross-checked token-for-token against a direct
+//! `decode_greedy` on the same weights.
+
+use mumoe::config::{EngineKind, ServeConfig};
+use mumoe::coordinator::engine::HOST_FALLBACK_SEED;
+use mumoe::coordinator::{Metrics, Router, Server};
+use mumoe::decode::{decode_greedy, DecodeConfig};
+use mumoe::model::config_by_name;
+use mumoe::model::tokenizer::ByteTokenizer;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn serve_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig {
+        model: "mu-opt-micro".into(),
+        // point at nothing so the engine deterministically falls back to
+        // the random model regardless of whether artifacts were built
+        artifacts_dir: "host-serve-e2e-no-artifacts".into(),
+        engine: EngineKind::Host,
+        rho_levels: vec![0.4, 0.6, 1.0],
+        batch_window_us: 500,
+        queue_cap: 64,
+        ..Default::default()
+    };
+    cfg.decode.default_max_new = 2;
+    cfg.decode.max_new_cap = 8;
+    cfg.decode.batch_size = 4;
+    // benches/tests compare against decode_greedy with a fixed step count
+    cfg.decode.stop_at_eos = false;
+    cfg
+}
+
+/// The exact model the engine's fallback path builds.
+fn reference_model() -> Model {
+    random_model(
+        &config_by_name("mu-opt-micro").expect("known model"),
+        HOST_FALLBACK_SEED,
+    )
+}
+
+#[test]
+fn batched_host_serving_matches_direct_decode() {
+    let cfg = serve_cfg();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone())
+        .expect("router config");
+    let handle = Server::start(&router).expect("host server");
+
+    // mixed ρ, mixed max_new — all at configured levels so the reference
+    // decode sees exactly the snapped ρ the engine executed (kept small:
+    // every request pays real host forwards in a debug-profile test)
+    let cases: Vec<(String, f64, usize)> = (0..6)
+        .map(|i| {
+            let rho = [0.4, 0.6, 1.0][i % 3];
+            let max_new = 1 + (i % 3);
+            (format!("tyrolia record {i} is "), rho, max_new)
+        })
+        .collect();
+
+    let (tx, rx) = channel();
+    let mut submitted = Vec::new();
+    for (prompt, rho, max_new) in &cases {
+        let req = router
+            .admit_decode(prompt, *rho, "synth_wiki", *max_new, None, Some(tx.clone()))
+            .expect("admit");
+        submitted.push(req.id);
+        handle.submit(req).expect("submit");
+    }
+    drop(tx);
+
+    let model = reference_model();
+    let tok = ByteTokenizer;
+    let mut seen = 0usize;
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
+        assert!(resp.is_ok(), "rejected: {:?}", resp.rejected);
+        let idx = submitted
+            .iter()
+            .position(|&id| id == resp.id)
+            .expect("known id");
+        let (prompt, rho, max_new) = &cases[idx];
+        let prompt_ids = tok.encode(prompt, true);
+        let reference = decode_greedy(
+            &model,
+            &prompt_ids,
+            &DecodeConfig {
+                rho: *rho,
+                plan: MaskPlan::PruneOnce,
+                max_new: *max_new,
+                stop_at_eos: false,
+            },
+            None,
+        );
+        assert_eq!(
+            resp.tokens,
+            reference.new_tokens(),
+            "request {idx} diverged from direct decode_greedy"
+        );
+        assert_eq!(resp.steps, *max_new);
+        assert_eq!(resp.next_token, reference.new_tokens()[0]);
+        assert_eq!(resp.logits, reference.steps.last().unwrap().logits);
+        assert!((resp.rho_used - rho).abs() < 1e-9);
+        assert!(resp.batch_size >= 1);
+        seen += 1;
+    }
+    assert_eq!(seen, cases.len());
+    handle.shutdown().expect("shutdown");
+
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), cases.len() as u64);
+    let total_tokens: usize = cases.iter().map(|c| c.2).sum();
+    let levels = metrics.level_stats();
+    assert_eq!(levels.len(), 3, "all three ρ levels served");
+    let level_tokens: u64 = levels.iter().map(|(_, st)| st.tokens).sum();
+    assert_eq!(level_tokens, total_tokens as u64);
+    assert!(metrics.decode_tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn warm_cache_hits_rise_across_repeated_requests() {
+    let cfg = serve_cfg();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router");
+    let handle = Server::start(&router).expect("host server");
+    let cache = router.layout_cache();
+
+    let send_one = || {
+        let (tx, rx) = channel();
+        let req = router
+            .admit_decode("a repeated prompt", 0.6, "synth_wiki", 2, None, Some(tx))
+            .expect("admit");
+        handle.submit(req).expect("submit");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("response");
+        assert!(resp.is_ok());
+        resp
+    };
+
+    let first = send_one();
+    let (hits_cold, misses_cold) = {
+        let c = cache.lock().unwrap();
+        (c.hits(), c.misses())
+    };
+    assert!(misses_cold > 0, "cold request must compress layouts");
+
+    let second = send_one();
+    let (hits_warm, misses_warm) = {
+        let c = cache.lock().unwrap();
+        (c.hits(), c.misses())
+    };
+    assert_eq!(first.tokens, second.tokens, "deterministic decode");
+    assert!(
+        hits_warm > hits_cold,
+        "repeated request must hit the shared layout cache"
+    );
+    assert_eq!(
+        misses_warm, misses_cold,
+        "repeated request must not recompress anything"
+    );
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn host_server_rejects_unknown_model_at_startup() {
+    let mut cfg = serve_cfg();
+    cfg.model = "mu-opt-nonexistent".into();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router");
+    assert!(
+        Server::start(&router).is_err(),
+        "startup must fail fast on unknown model"
+    );
+}
+
+#[test]
+fn pjrt_engine_selector_fails_cleanly_without_feature() {
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let mut cfg = serve_cfg();
+        cfg.engine = EngineKind::Pjrt;
+        let metrics = Arc::new(Metrics::new());
+        let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router");
+        let err = Server::start(&router).expect_err("must not start");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}
