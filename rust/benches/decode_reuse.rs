@@ -1,22 +1,37 @@
-//! Decode-reuse bench: tokens/sec vs quality drift per mask plan.
+//! Decode-reuse bench: tokens/sec vs quality drift per mask plan, with a
+//! KV-cache on/off axis and a per-step-latency-vs-position curve.
 //!
 //! The μ-MoE decode loop can re-select micro-experts every step
 //! (`every-step`), once on the prompt (`prune-once`), or periodically
 //! (`refresh:k`). Reuse trades selection cost for logit drift; this bench
 //! puts numbers on both sides at ρ ∈ {0.3, 0.5, 0.7}:
 //!
-//! * **tokens/sec** per plan (cold layout cache), best of `reps` runs;
+//! * **tokens/sec** per (plan, kv) cell (cold layout cache), best of
+//!   `reps` runs — `kv=on` runs prefill-then-step
+//!   ([`mumoe::nn::Model::forward_step`]), `kv=off` re-runs the full
+//!   window every step;
 //! * **warm-cache hit rate** — a repeated identical request, showing the
 //!   `(linear, level, fingerprint)` cache skipping recompression;
-//! * **drift vs `every-step`** — mean per-step KL of the next-token
-//!   distribution and greedy-token agreement
-//!   (`eval::host::decode_drift`).
+//! * **drift vs `every-step`** (the kv=off baseline run) — mean per-step
+//!   KL of the next-token distribution and greedy-token agreement
+//!   (`eval::host::decode_drift`), reported per (plan, kv) row. KV state
+//!   never affects drift — the two paths are bit-identical
+//!   (property-tested) — so a plan's kv=on and kv=off rows carry equal
+//!   drift numbers; rows in the JSON are keyed by (rho, plan, kv).
 //!
 //! Emits `BENCH_decode_reuse.json`. Acceptance: `prune-once` tokens/sec
-//! must beat `every-step` at every ρ (reuse must actually pay).
+//! must beat `every-step` at every ρ (reuse must actually pay), on the
+//! like-for-like `kv=off` rows.
 //!
-//! `--smoke`: tiny dims, 1 rep, single ρ — CI runs this so the bench code
-//! cannot bit-rot.
+//! The **KV curve** section decodes one long `prune-once` generation with
+//! the cache on and off and records every step's latency against its
+//! position (window length). Emits `BENCH_kv_decode.json`. Acceptance:
+//! per-step cost with the cache stays ~flat in position (late/early
+//! growth strictly below the no-kv growth) and late-position kv steps are
+//! faster than late-position no-kv steps — O(T) vs O(T²) made visible.
+//!
+//! `--smoke`: tiny dims, 1 rep, single ρ, short curve — CI runs this so
+//! the bench code cannot bit-rot (acceptance informational in smoke).
 
 use mumoe::decode::{decode_greedy, DecodeConfig, DecodeOutput};
 use mumoe::eval::host::decode_drift;
@@ -42,6 +57,9 @@ struct BenchShape {
     model_name: String,
     rhos: Vec<f64>,
     n_new: usize,
+    /// New tokens for the per-step-latency-vs-position curve (long, so
+    /// the no-kv window growth is visible).
+    curve_new: usize,
     reps: usize,
     cache_cap: usize,
 }
@@ -53,6 +71,7 @@ fn shape(smoke: bool) -> BenchShape {
             model_name: "smoke-tiny(2x2x16)".into(),
             rhos: vec![0.5],
             n_new: 4,
+            curve_new: 8,
             reps: 1,
             cache_cap: 256,
         }
@@ -63,6 +82,7 @@ fn shape(smoke: bool) -> BenchShape {
             model_name: cfg.name.clone(),
             rhos: vec![0.3, 0.5, 0.7],
             n_new: 32,
+            curve_new: 96,
             reps: 3,
             cache_cap: 2048,
         }
@@ -71,18 +91,20 @@ fn shape(smoke: bool) -> BenchShape {
 
 struct PlanRun {
     plan: MaskPlan,
+    kv: bool,
     tok_per_sec: f64,
     out: DecodeOutput,
     warm_hits: u64,
     warm_misses: u64,
 }
 
-fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan) -> PlanRun {
+fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan, kv: bool) -> PlanRun {
     let cfg = DecodeConfig {
         rho,
         plan,
         max_new: sh.n_new,
         stop_at_eos: false,
+        kv_cache: kv,
     };
     // timed cold-cache runs (fresh cache each rep so every rep pays the
     // same compression bill); keep the fastest
@@ -106,11 +128,82 @@ fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan) -> PlanRu
     let warm = decode_greedy(&sh.model, prompt, &cfg, Some(&mut cache));
     PlanRun {
         plan,
+        kv,
         tok_per_sec: best_tps,
         out: best_out.expect("at least one rep"),
         warm_hits: warm.cache_hits,
         warm_misses: warm.cache_misses,
     }
+}
+
+/// One arm of the KV curve: per-step latency against window position.
+struct CurveArm {
+    /// (window length at that step, elapsed µs), reused steps only —
+    /// step 0 is the selection+prefill and belongs to the other bucket.
+    points: Vec<(usize, u64)>,
+    early_us: f64,
+    late_us: f64,
+    /// late/early per-step cost growth (1.0 ⇔ flat in position).
+    growth: f64,
+    prefill_us: u64,
+    step_us: u64,
+}
+
+fn curve_arm(sh: &BenchShape, prompt: &[i32], kv: bool) -> CurveArm {
+    let cfg = DecodeConfig {
+        rho: 0.5,
+        plan: MaskPlan::PruneOnce,
+        max_new: sh.curve_new,
+        stop_at_eos: false,
+        kv_cache: kv,
+    };
+    let out = decode_greedy(&sh.model, prompt, &cfg, None);
+    let points: Vec<(usize, u64)> = out
+        .steps
+        .iter()
+        .enumerate()
+        .skip(1) // step 0 = selection + prefill
+        .map(|(i, s)| (prompt.len() + i, s.elapsed_us))
+        .collect();
+    let quarter = (points.len() / 4).max(1);
+    let mean = |pts: &[(usize, u64)]| {
+        pts.iter().map(|&(_, us)| us as f64).sum::<f64>() / pts.len().max(1) as f64
+    };
+    let early_us = mean(&points[..quarter]);
+    let late_us = mean(&points[points.len() - quarter..]);
+    CurveArm {
+        points,
+        early_us,
+        late_us,
+        growth: late_us / early_us.max(1e-9),
+        prefill_us: out.prefill_us,
+        step_us: out.step_us,
+    }
+}
+
+fn curve_json(arm: &CurveArm, kv: bool) -> Json {
+    Json::Obj(HashMap::from([
+        ("kv".into(), Json::Bool(kv)),
+        (
+            "per_step".into(),
+            Json::Arr(
+                arm.points
+                    .iter()
+                    .map(|&(pos, us)| {
+                        Json::Obj(HashMap::from([
+                            ("position".into(), jnum(pos as f64)),
+                            ("us".into(), jnum(us as f64)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+        ("early_mean_us".into(), jnum(arm.early_us)),
+        ("late_mean_us".into(), jnum(arm.late_us)),
+        ("late_over_early".into(), jnum(arm.growth)),
+        ("prefill_us".into(), jnum(arm.prefill_us as f64)),
+        ("step_us".into(), jnum(arm.step_us as f64)),
+    ]))
 }
 
 fn main() {
@@ -127,7 +220,7 @@ fn main() {
             if smoke { "smoke" } else { "full" }
         ),
         &[
-            "rho", "plan", "tok/s", "vs every-step", "refreshes", "mean KL", "tok agree",
+            "rho", "plan", "kv", "tok/s", "vs every-step", "refreshes", "mean KL", "tok agree",
             "warm hit%",
         ],
     );
@@ -137,9 +230,13 @@ fn main() {
     for &rho in &sh.rhos {
         let runs: Vec<PlanRun> = plans
             .iter()
-            .map(|&plan| run_plan(&sh, &prompt, rho, plan))
+            .flat_map(|&plan| {
+                [false, true].map(|kv| run_plan(&sh, &prompt, rho, plan, kv))
+            })
             .collect();
-        let base_tps = runs[0].tok_per_sec; // plans[0] is EveryStep
+        // runs[0] is (EveryStep, kv=off): the like-for-like baseline for
+        // both drift and speedups
+        let base_tps = runs[0].tok_per_sec;
         let baseline = runs[0].out.clone();
         for run in &runs {
             let drift = decode_drift(&baseline, &run.out);
@@ -153,6 +250,7 @@ fn main() {
             table.row(vec![
                 format!("{rho:.1}"),
                 run.plan.label(),
+                (if run.kv { "on" } else { "off" }).to_string(),
                 format!("{:.2}", run.tok_per_sec),
                 format!("{speedup:.2}x"),
                 format!("{}", run.out.refresh_count),
@@ -160,12 +258,13 @@ fn main() {
                 format!("{:.2}", drift.token_agreement),
                 format!("{warm_hit_pct:.0}"),
             ]);
-            if run.plan == MaskPlan::PruneOnce && run.tok_per_sec <= base_tps {
+            if run.plan == MaskPlan::PruneOnce && !run.kv && run.tok_per_sec <= base_tps {
                 accept = false;
             }
             results.push(Json::Obj(HashMap::from([
                 ("rho".into(), jnum(rho)),
                 ("plan".into(), jstr(run.plan.label())),
+                ("kv".into(), Json::Bool(run.kv)),
                 ("tokens_per_sec".into(), jnum(run.tok_per_sec)),
                 ("speedup_vs_every_step".into(), jnum(speedup)),
                 ("refresh_count".into(), jnum(run.out.refresh_count as f64)),
@@ -174,6 +273,8 @@ fn main() {
                 ("token_agreement".into(), jnum(drift.token_agreement)),
                 ("warm_cache_hits".into(), jnum(run.warm_hits as f64)),
                 ("warm_cache_misses".into(), jnum(run.warm_misses as f64)),
+                ("prefill_us".into(), jnum(run.out.prefill_us as f64)),
+                ("step_us".into(), jnum(run.out.step_us as f64)),
             ])));
         }
     }
@@ -181,8 +282,27 @@ fn main() {
 
     println!(
         "\nACCEPTANCE: prune-once tok/s > every-step tok/s at every rho \
-         ({}).",
+         (kv=off rows) ({}).",
         if accept { "PASS" } else { "FAIL" }
+    );
+
+    // ---- KV per-step-latency-vs-position curve ----------------------------
+    let curve_prompt: Vec<i32> = (0..8).map(|i| (i * 31 + 3) % 256).collect();
+    let no_kv = curve_arm(&sh, &curve_prompt, false);
+    let with_kv = curve_arm(&sh, &curve_prompt, true);
+    // kv per-step cost must stay ~flat in position while no-kv grows with
+    // the window; and by the last quarter kv must be strictly cheaper
+    let kv_accept = with_kv.growth < no_kv.growth && with_kv.late_us < no_kv.late_us;
+    println!(
+        "\nKV curve ({} steps, prune-once, rho 0.5): per-step late/early \
+         growth kv={:.2}x vs no-kv={:.2}x; late-position step kv={:.0}us \
+         vs no-kv={:.0}us",
+        sh.curve_new, with_kv.growth, no_kv.growth, with_kv.late_us, no_kv.late_us
+    );
+    println!(
+        "ACCEPTANCE: kv per-step cost flat in position (growth below \
+         no-kv) and cheaper late ({}).",
+        if kv_accept { "PASS" } else { "FAIL" }
     );
     if smoke {
         // smoke exists to execute the code, not to gate on 1-rep timings
@@ -202,7 +322,30 @@ fn main() {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
-    if !accept && !smoke {
+
+    let kv_out = Json::Obj(HashMap::from([
+        ("bench".into(), jstr("kv_decode")),
+        ("model".into(), jstr(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("plan".into(), jstr("prune-once")),
+        ("rho".into(), jnum(0.5)),
+        ("prompt_len".into(), jnum(curve_prompt.len() as f64)),
+        ("curve_new_tokens".into(), jnum(sh.curve_new as f64)),
+        ("arms".into(), Json::Arr(vec![
+            curve_json(&no_kv, false),
+            curve_json(&with_kv, true),
+        ])),
+        ("kv_growth_late_over_early".into(), jnum(with_kv.growth)),
+        ("no_kv_growth_late_over_early".into(), jnum(no_kv.growth)),
+        ("accept_kv_step_cost_flat".into(), Json::Bool(kv_accept)),
+    ]));
+    let kv_path = "BENCH_kv_decode.json";
+    match std::fs::write(kv_path, kv_out.dump()) {
+        Ok(()) => println!("wrote {kv_path}"),
+        Err(e) => eprintln!("could not write {kv_path}: {e}"),
+    }
+
+    if !(accept && kv_accept) && !smoke {
         std::process::exit(1);
     }
 }

@@ -109,7 +109,7 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
             .collect();
         let mut cache = LayoutCache::new(sh.cache_cap);
         let t0 = Instant::now();
-        let outs = decode_batch(&sh.model, &items, rho, false, Some(&mut cache));
+        let outs = decode_batch(&sh.model, &items, rho, false, true, Some(&mut cache));
         let dt = t0.elapsed().as_secs_f64().max(1e-9);
         let tokens: usize = outs.iter().map(|o| o.steps.len()).sum();
         batched_tps = batched_tps.max(tokens as f64 / dt);
@@ -133,6 +133,7 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
                     plan,
                     max_new: sh.n_new,
                     stop_at_eos: false,
+                    kv_cache: true,
                 },
                 Some(&mut cache),
             );

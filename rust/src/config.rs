@@ -256,6 +256,11 @@ pub struct DecodeKnobs {
     /// Host-engine batch capacity (the pjrt engine's capacity comes from
     /// the artifact's static batch dim instead).
     pub batch_size: usize,
+    /// Per-lane KV cache: reused decode steps run a single-token forward
+    /// against cached per-layer K/V instead of re-running the full window
+    /// (bit-identical outputs; `false` keeps the non-cached path
+    /// selectable for A/B benching). CLI: `--kv` / `--no-kv`.
+    pub kv_cache: bool,
 }
 
 impl Default for DecodeKnobs {
@@ -266,6 +271,7 @@ impl Default for DecodeKnobs {
             plan: crate::pruning::MaskPlan::PruneOnce,
             stop_at_eos: true,
             batch_size: 8,
+            kv_cache: true,
         }
     }
 }
@@ -289,6 +295,12 @@ pub struct ServeConfig {
     pub rho_levels: Vec<f64>,
     /// Default sparsity when a request does not specify one.
     pub default_rho: f64,
+    /// Override the served model's EOS token id (`coordinator.eos_id`).
+    /// `None` keeps the model family's default
+    /// ([`crate::model::EOS_ID`] for the byte-tokenizer models) — set
+    /// this when serving a checkpoint whose vocabulary ends sequences
+    /// with a different id, so `stop_at_eos` halts at *its* EOS.
+    pub eos_id: Option<i32>,
     /// Workers for host-side preprocessing.
     pub workers: usize,
     /// Capacity (entries) of the shared compressed-layout cache keyed by
@@ -308,6 +320,7 @@ impl Default for ServeConfig {
             queue_cap: 256,
             rho_levels: vec![0.2, 0.4, 0.5, 0.6, 0.8, 1.0],
             default_rho: 0.5,
+            eos_id: None,
             workers: 2,
             layout_cache_cap: 512,
             decode: DecodeKnobs::default(),
@@ -334,6 +347,10 @@ impl ServeConfig {
             queue_cap: t.usize_or("coordinator.queue_cap", d.queue_cap),
             rho_levels: t.f64_list_or("coordinator.rho_levels", &d.rho_levels),
             default_rho: t.f64_or("coordinator.default_rho", d.default_rho),
+            eos_id: t
+                .get("coordinator.eos_id")
+                .and_then(Value::as_i64)
+                .map(|i| i as i32),
             workers: t.usize_or("coordinator.workers", d.workers),
             layout_cache_cap: t.usize_or("coordinator.layout_cache_cap", d.layout_cache_cap),
             decode: DecodeKnobs {
@@ -342,6 +359,7 @@ impl ServeConfig {
                 plan,
                 stop_at_eos: t.bool_or("decode.stop_at_eos", d.decode.stop_at_eos),
                 batch_size: t.usize_or("decode.batch_size", d.decode.batch_size),
+                kv_cache: t.bool_or("decode.kv_cache", d.decode.kv_cache),
             },
         };
         cfg.validate()?;
@@ -369,6 +387,11 @@ impl ServeConfig {
         }
         if !(0.0..=1.0).contains(&self.default_rho) {
             return Err(Error::config("default_rho outside [0,1]"));
+        }
+        // the upper bound is model-dependent (vocab size); host_model
+        // checks it against the loaded model at prepare time
+        if matches!(self.eos_id, Some(e) if e < 0) {
+            return Err(Error::config("eos_id must be >= 0"));
         }
         if self.queue_cap == 0 {
             return Err(Error::config("queue_cap must be > 0"));
@@ -469,6 +492,16 @@ default_rho = 0.6
     }
 
     #[test]
+    fn eos_override_from_toml() {
+        let t = Toml::parse("[coordinator]\neos_id = 7\n").unwrap();
+        assert_eq!(ServeConfig::from_toml(&t).unwrap().eos_id, Some(7));
+        // absent ⇒ keep the model family default
+        assert_eq!(ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap().eos_id, None);
+        let bad = Toml::parse("[coordinator]\neos_id = -2\n").unwrap();
+        assert!(ServeConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
     fn validation_rejects_zero_cache_cap() {
         let c = ServeConfig {
             layout_cache_cap: 0,
@@ -499,7 +532,8 @@ default_rho = 0.6
         let t = Toml::parse(
             "[coordinator]\nengine = \"pjrt\"\n\
              [decode]\ndefault_max_new = 4\nmax_new_cap = 16\n\
-             plan = \"refresh:2\"\nstop_at_eos = false\nbatch_size = 2\n",
+             plan = \"refresh:2\"\nstop_at_eos = false\nbatch_size = 2\n\
+             kv_cache = false\n",
         )
         .unwrap();
         let c = ServeConfig::from_toml(&t).unwrap();
@@ -509,10 +543,12 @@ default_rho = 0.6
         assert_eq!(c.decode.plan, crate::pruning::MaskPlan::Refresh(2));
         assert!(!c.decode.stop_at_eos);
         assert_eq!(c.decode.batch_size, 2);
+        assert!(!c.decode.kv_cache);
         // defaults when the sections are absent
         let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(d.engine, EngineKind::Host);
         assert_eq!(d.decode.default_max_new, 1);
+        assert!(d.decode.kv_cache, "KV decode is the default");
     }
 
     #[test]

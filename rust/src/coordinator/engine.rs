@@ -42,10 +42,23 @@ pub const HOST_FALLBACK_SEED: u64 = 7;
 
 /// Load the host model a [`ServeConfig`] names: the checkpoint if one
 /// exists, else the deterministic random fallback (a *present but
-/// corrupt* checkpoint is an error, never a silent fallback).
+/// corrupt* checkpoint is an error, never a silent fallback). A
+/// `coordinator.eos_id` config override replaces the family default so
+/// checkpoints whose vocabulary ends sequences differently stop at
+/// *their* EOS (validated against the model's vocab here, where the
+/// vocab size is known).
 pub fn host_model(cfg: &ServeConfig) -> Result<Model, Error> {
-    let mcfg = config_by_name(&cfg.model)
+    let mut mcfg = config_by_name(&cfg.model)
         .ok_or_else(|| Error::config(format!("unknown model '{}'", cfg.model)))?;
+    if let Some(eos) = cfg.eos_id {
+        if eos < 0 || eos as usize >= mcfg.vocab_size {
+            return Err(Error::config(format!(
+                "eos_id {eos} outside vocab (0..{})",
+                mcfg.vocab_size
+            )));
+        }
+        mcfg.eos_id = eos;
+    }
     let ckpt_path = Path::new(&cfg.artifacts_dir)
         .join("ckpt")
         .join(format!("{}.ckpt", cfg.model));
@@ -98,16 +111,25 @@ pub struct HostEngine {
     model: Model,
     cache: Arc<Mutex<LayoutCache>>,
     stop_at_eos: bool,
+    /// Per-lane KV caches inside `decode_batch` (`[decode] kv_cache`,
+    /// default on; outputs are bit-identical either way).
+    kv_cache: bool,
 }
 
 impl HostEngine {
     /// Build directly from parts (tests and `generate` use this to supply
     /// their own model/cache; the serve loop goes through `prepare`).
-    pub fn with_model(model: Model, cache: Arc<Mutex<LayoutCache>>, stop_at_eos: bool) -> Self {
+    pub fn with_model(
+        model: Model,
+        cache: Arc<Mutex<LayoutCache>>,
+        stop_at_eos: bool,
+        kv_cache: bool,
+    ) -> Self {
         HostEngine {
             model,
             cache,
             stop_at_eos,
+            kv_cache,
         }
     }
 
@@ -125,7 +147,12 @@ impl Engine for HostEngine {
         let model = host_model(cfg)?;
         let seq_len = model.cfg.max_seq_len;
         Ok(Prepared {
-            engine: HostEngine::with_model(model, cache, cfg.decode.stop_at_eos),
+            engine: HostEngine::with_model(
+                model,
+                cache,
+                cfg.decode.stop_at_eos,
+                cfg.decode.kv_cache,
+            ),
             seq_len,
             batch_capacity: cfg.decode.batch_size,
         })
@@ -149,7 +176,14 @@ impl Engine for HostEngine {
             .cache
             .lock()
             .map_err(|_| Error::coordinator("layout cache poisoned"))?;
-        let outs = decode_batch(&self.model, &items, rho, self.stop_at_eos, Some(&mut cache));
+        let outs = decode_batch(
+            &self.model,
+            &items,
+            rho,
+            self.stop_at_eos,
+            self.kv_cache,
+            Some(&mut cache),
+        );
         drop(cache);
 
         Ok(batch
@@ -166,6 +200,8 @@ impl Engine for HostEngine {
                     steps: out.steps.len(),
                     latency_us: 0, // stamped by the serve loop
                     batch_size: 0, // stamped by the serve loop
+                    prefill_us: out.prefill_us,
+                    step_us: out.step_us,
                     rho_used: rho,
                     rejected: None,
                 }
@@ -269,6 +305,9 @@ impl Engine for PjrtEngine {
                     logits: row,
                     latency_us: 0,
                     batch_size: 0,
+                    // single-token graph execution: no prefill/step split
+                    prefill_us: 0,
+                    step_us: 0,
                     rho_used: batch.rho,
                     rejected: None,
                 }
@@ -292,7 +331,7 @@ mod tests {
     fn engine_with(cache_cap: usize) -> (HostEngine, Arc<Mutex<LayoutCache>>) {
         let cache = Arc::new(Mutex::new(LayoutCache::new(cache_cap)));
         (
-            HostEngine::with_model(tiny_model(), cache.clone(), false),
+            HostEngine::with_model(tiny_model(), cache.clone(), false, true),
             cache,
         )
     }
@@ -316,6 +355,8 @@ mod tests {
             .iter()
             .zip([(vec![1, 2, 3], 4usize), (vec![9, 8], 2)])
         {
+            // reference decodes without kv: the engine's KV path must
+            // reproduce the plain full-window semantics exactly
             let out = decode_greedy(
                 &reference,
                 &prompt,
@@ -324,6 +365,7 @@ mod tests {
                     plan: MaskPlan::PruneOnce,
                     max_new,
                     stop_at_eos: false,
+                    kv_cache: false,
                 },
                 None,
             );
@@ -333,6 +375,28 @@ mod tests {
             assert_eq!(resp.logits, out.steps.last().unwrap().logits);
             assert_eq!(resp.rho_used, 0.5);
             assert!(resp.is_ok());
+        }
+    }
+
+    #[test]
+    fn kv_toggle_does_not_change_responses() {
+        // --kv / --no-kv is a performance knob, never a semantics knob
+        let run = |kv: bool| {
+            let cache = Arc::new(Mutex::new(LayoutCache::new(64)));
+            let mut eng = HostEngine::with_model(tiny_model(), cache, false, kv);
+            eng.execute(DecodeBatch {
+                rho: 0.5,
+                requests: vec![req(1, &[1, 2, 3], 0.5, 4), req(2, &[9, 8], 0.5, 2)],
+            })
+            .expect("execute")
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.len(), off.len());
+        for (a, b) in on.iter().zip(&off) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.steps, b.steps);
         }
     }
 
@@ -374,6 +438,7 @@ mod tests {
                 plan: MaskPlan::PruneOnce,
                 max_new: 3,
                 stop_at_eos: false,
+                kv_cache: false,
             },
             None,
         );
@@ -410,5 +475,31 @@ mod tests {
         };
         let cache = Arc::new(Mutex::new(LayoutCache::new(8)));
         assert!(HostEngine::prepare(&cfg, cache).is_err());
+    }
+
+    #[test]
+    fn eos_override_reaches_the_served_model() {
+        // the production path of the configurable-EOS fix: a
+        // coordinator.eos_id override must land on the model the engine
+        // decodes with, and out-of-vocab ids must fail at load
+        let base = ServeConfig {
+            artifacts_dir: "definitely-absent-artifacts-dir".into(),
+            ..Default::default()
+        };
+        assert_eq!(
+            host_model(&base).unwrap().cfg.eos_id,
+            crate::model::EOS_ID,
+            "no override keeps the family default"
+        );
+        let overridden = ServeConfig {
+            eos_id: Some(42),
+            ..base.clone()
+        };
+        assert_eq!(host_model(&overridden).unwrap().cfg.eos_id, 42);
+        let out_of_vocab = ServeConfig {
+            eos_id: Some(crate::model::VOCAB_SIZE as i32),
+            ..base
+        };
+        assert!(host_model(&out_of_vocab).is_err());
     }
 }

@@ -2,8 +2,13 @@
 //! good enough for p50/p95/p99 without allocation on the hot path, plus a
 //! per-ρ-level decode breakdown (batches / requests / tokens per snapped
 //! level, and aggregate decode tokens/sec) so host serving is observable
-//! per level. The per-level map is the one mutex-guarded piece — it is
-//! touched once per *batch*, not per request, and only by the serve loop.
+//! per level. Decode execution time is split into **prefill** (selection
+//! passes + full-window KV prefill/rebuild forwards) vs **per-step**
+//! (reused incremental steps) — the attribution that tells you whether
+//! serve throughput is bound by selection/prefill cost or by steady-state
+//! token stepping. The per-level map is the one mutex-guarded piece — it
+//! is touched once per *batch*, not per request, and only by the serve
+//! loop.
 
 use crate::tensor::rho_milli;
 use std::collections::HashMap;
@@ -18,6 +23,10 @@ pub struct LevelStats {
     pub batches: u64,
     pub requests: u64,
     pub tokens: u64,
+    /// Execution time in full-window work (selection + prefill/rebuild).
+    pub prefill_us: u64,
+    /// Execution time in reused decode steps.
+    pub step_us: u64,
 }
 
 /// Shared metrics sink (all methods take &self; safe across threads).
@@ -34,6 +43,8 @@ pub struct Metrics {
     latency_sum_us: AtomicU64,
     decode_tokens: AtomicU64,
     decode_time_us: AtomicU64,
+    decode_prefill_us: AtomicU64,
+    decode_step_us: AtomicU64,
     levels: Mutex<HashMap<u32, LevelStats>>,
 }
 
@@ -57,6 +68,8 @@ impl Metrics {
             latency_sum_us: AtomicU64::new(0),
             decode_tokens: AtomicU64::new(0),
             decode_time_us: AtomicU64::new(0),
+            decode_prefill_us: AtomicU64::new(0),
+            decode_step_us: AtomicU64::new(0),
             levels: Mutex::new(HashMap::new()),
         }
     }
@@ -81,15 +94,29 @@ impl Metrics {
     }
 
     /// One executed decode batch at a snapped level: how many requests it
-    /// carried, how many tokens it generated and how long execution took.
-    pub fn record_decode(&self, rho: f64, requests: usize, tokens: u64, elapsed_us: u64) {
+    /// carried, how many tokens it generated, how long execution took and
+    /// how that time splits into prefill-class (selection + full-window
+    /// prefill/rebuild) vs per-step (reused incremental) work.
+    pub fn record_decode(
+        &self,
+        rho: f64,
+        requests: usize,
+        tokens: u64,
+        elapsed_us: u64,
+        prefill_us: u64,
+        step_us: u64,
+    ) {
         self.decode_tokens.fetch_add(tokens, Ordering::Relaxed);
         self.decode_time_us.fetch_add(elapsed_us, Ordering::Relaxed);
+        self.decode_prefill_us.fetch_add(prefill_us, Ordering::Relaxed);
+        self.decode_step_us.fetch_add(step_us, Ordering::Relaxed);
         let mut levels = self.levels.lock().expect("metrics level map poisoned");
         let e = levels.entry(rho_milli(rho)).or_default();
         e.batches += 1;
         e.requests += requests as u64;
         e.tokens += tokens;
+        e.prefill_us += prefill_us;
+        e.step_us += step_us;
     }
 
     /// Aggregate decode throughput over execution time (not wall time —
@@ -100,6 +127,14 @@ impl Metrics {
             return 0.0;
         }
         self.decode_tokens.load(Ordering::Relaxed) as f64 * 1e6 / us as f64
+    }
+
+    /// Aggregate (prefill_us, step_us) decode-time split.
+    pub fn decode_time_split_us(&self) -> (u64, u64) {
+        (
+            self.decode_prefill_us.load(Ordering::Relaxed),
+            self.decode_step_us.load(Ordering::Relaxed),
+        )
     }
 
     /// Per-level decode counters, ascending by level.
@@ -175,10 +210,13 @@ impl Metrics {
             self.latency_percentile_us(99.0),
             self.decode_tokens_per_sec(),
         );
+        let (prefill, step) = self.decode_time_split_us();
+        s.push_str(&format!(" prefill_us={prefill} step_us={step}"));
         for (rho, st) in self.level_stats() {
             s.push_str(&format!(
-                "\n  level rho={rho:.2}: batches={} requests={} tokens={}",
-                st.batches, st.requests, st.tokens
+                "\n  level rho={rho:.2}: batches={} requests={} tokens={} \
+                 prefill_us={} step_us={}",
+                st.batches, st.requests, st.tokens, st.prefill_us, st.step_us
             ));
         }
         s
@@ -208,6 +246,8 @@ impl Metrics {
             "decode_tokens_per_sec".into(),
             Json::Num(self.decode_tokens_per_sec()),
         );
+        m.insert("decode_prefill_us".into(), g(&self.decode_prefill_us));
+        m.insert("decode_step_us".into(), g(&self.decode_step_us));
         let mut levels = std::collections::HashMap::new();
         for (rho, st) in self.level_stats() {
             levels.insert(
@@ -216,6 +256,8 @@ impl Metrics {
                     ("batches".into(), Json::Num(st.batches as f64)),
                     ("requests".into(), Json::Num(st.requests as f64)),
                     ("tokens".into(), Json::Num(st.tokens as f64)),
+                    ("prefill_us".into(), Json::Num(st.prefill_us as f64)),
+                    ("step_us".into(), Json::Num(st.step_us as f64)),
                 ])),
             );
         }
@@ -280,9 +322,9 @@ mod tests {
     #[test]
     fn per_level_decode_counters_accumulate() {
         let m = Metrics::new();
-        m.record_decode(0.4, 3, 12, 1_000);
-        m.record_decode(0.4, 1, 4, 500);
-        m.record_decode(1.0, 2, 2, 250);
+        m.record_decode(0.4, 3, 12, 1_000, 700, 300);
+        m.record_decode(0.4, 1, 4, 500, 400, 100);
+        m.record_decode(1.0, 2, 2, 250, 250, 0);
         let levels = m.level_stats();
         assert_eq!(levels.len(), 2);
         assert_eq!(levels[0].0, 0.4);
@@ -291,14 +333,18 @@ mod tests {
             LevelStats {
                 batches: 2,
                 requests: 4,
-                tokens: 16
+                tokens: 16,
+                prefill_us: 1_100,
+                step_us: 400,
             }
         );
         assert_eq!(levels[1].0, 1.0);
         assert_eq!(levels[1].1.tokens, 2);
+        assert_eq!(levels[1].1.step_us, 0);
         // 18 tokens over 1750us
         let tps = m.decode_tokens_per_sec();
         assert!((tps - 18.0 * 1e6 / 1750.0).abs() < 1e-6, "{tps}");
+        assert_eq!(m.decode_time_split_us(), (1_350, 400));
     }
 
     #[test]
@@ -310,15 +356,21 @@ mod tests {
     #[test]
     fn summary_and_json_carry_levels() {
         let m = Metrics::new();
-        m.record_decode(0.6, 2, 8, 1_000);
+        m.record_decode(0.6, 2, 8, 1_000, 900, 100);
         let s = m.summary();
         assert!(s.contains("decode_tok_s="), "{s}");
         assert!(s.contains("level rho=0.60"), "{s}");
+        assert!(s.contains("prefill_us=900"), "{s}");
+        assert!(s.contains("step_us=100"), "{s}");
         let j = m.to_json();
         assert_eq!(j.req("decode_tokens").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.req("decode_prefill_us").unwrap().as_f64(), Some(900.0));
+        assert_eq!(j.req("decode_step_us").unwrap().as_f64(), Some(100.0));
         let levels = j.req("levels").unwrap();
         let l = levels.req("0.60").unwrap();
         assert_eq!(l.req("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(l.req("prefill_us").unwrap().as_f64(), Some(900.0));
+        assert_eq!(l.req("step_us").unwrap().as_f64(), Some(100.0));
     }
 
     #[test]

@@ -70,7 +70,10 @@ pub struct Response {
     /// rejection. For `max_new = 1` these are exactly the next-token
     /// logits the pre-engine API returned.
     pub logits: Vec<f32>,
-    /// First generated token (greedy decode convenience; `tokens[0]`).
+    /// First generated token (greedy decode convenience). Equals
+    /// `tokens[0]` when `tokens` is non-empty; when the very first step
+    /// emits EOS, `tokens` is empty (EOS is never included) while this
+    /// still carries the EOS id; `-1` when no step ran at all.
     pub next_token: i32,
     /// Generated tokens, in order (EOS, if hit, is not included).
     pub tokens: Vec<i32>,
@@ -81,6 +84,14 @@ pub struct Response {
     pub latency_us: u64,
     /// Size of the batch this request rode in (occupancy telemetry).
     pub batch_size: usize,
+    /// Execution time spent in full-window work for this request:
+    /// selection passes + KV prefill/rebuild forwards (host engine;
+    /// 0 on the single-token pjrt path).
+    pub prefill_us: u64,
+    /// Execution time spent in reused decode steps (single-token
+    /// `forward_step`s with the KV cache on). The serve loop aggregates
+    /// the split per ρ level in `Metrics`.
+    pub step_us: u64,
     /// The sparsity level actually used after snapping.
     pub rho_used: f64,
     /// Set if the request was shed by admission control.
@@ -97,6 +108,8 @@ impl Response {
             steps: 0,
             latency_us: 0,
             batch_size: 0,
+            prefill_us: 0,
+            step_us: 0,
             rho_used: 0.0,
             rejected: Some(reason.into()),
         }

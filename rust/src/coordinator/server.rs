@@ -223,7 +223,12 @@ fn run_batch<E: Engine>(
         Ok(responses) => {
             let elapsed_us = t0.elapsed().as_micros() as u64;
             let tokens: u64 = responses.iter().map(|r| r.steps as u64).sum();
-            metrics.record_decode(rho, n, tokens, elapsed_us);
+            // the engine attributes its own execution time; the loop only
+            // aggregates (prefill = selection + full-window forwards,
+            // step = reused incremental steps)
+            let prefill_us: u64 = responses.iter().map(|r| r.prefill_us).sum();
+            let step_us: u64 = responses.iter().map(|r| r.step_us).sum();
+            metrics.record_decode(rho, n, tokens, elapsed_us, prefill_us, step_us);
             for (mut resp, (id, enqueued_at, reply)) in responses.into_iter().zip(meta) {
                 debug_assert_eq!(resp.id, id, "engine must keep request order");
                 resp.latency_us = enqueued_at.elapsed().as_micros() as u64;

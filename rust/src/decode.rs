@@ -1,4 +1,5 @@
-//! Host-side autoregressive decode engine with mask-plan reuse.
+//! Host-side autoregressive decode engine with mask-plan reuse and
+//! KV-cached incremental attention.
 //!
 //! The μ-MoE serving question this module answers: *how often must the
 //! micro-expert selection be refreshed while decoding?* Each refresh costs
@@ -14,25 +15,54 @@
 //! Layout compression goes through an optional [`LayoutCache`], keyed by
 //! `(model weights, linear, snapped-ρ level, mask fingerprint)`, so a
 //! repeated prompt — or the unchanged selection of a `PruneOnce`
-//! generation — skips recompression entirely. The cache is *transparent*: decoding with or
-//! without it is bit-identical (`proptest.rs::decode_props` proves this).
+//! generation — skips recompression entirely. The cache is *transparent*:
+//! decoding with or without it is bit-identical
+//! (`proptest.rs::decode_props` proves this).
+//!
+//! # Prefill-then-step (the KV cache)
+//!
+//! With `DecodeConfig::kv_cache` on (the default), reused steps no longer
+//! re-run the model over the whole sliding window. Instead each lane
+//! carries a per-layer [`KvCache`]: one full
+//! [`crate::nn::Model::forward_prefill_last`] populates it (the
+//! *prefill*), then every subsequent step is a single-token
+//! [`crate::nn::Model::forward_step`] — O(T) attention against the cached
+//! prefix instead of the full window's O(T²). The cache is **rebuilt**
+//! (a fresh prefill) whenever its rows would go stale:
+//!
+//! * on every refresh step — new layouts mean every cached K/V row was
+//!   computed by the wrong weights;
+//! * on every window slide — μ-OPT's learned absolute position
+//!   embeddings shift with the window, so every row changes.
+//!
+//! Rebuild-on-refresh keeps KV decode **bit-identical** to the non-cached
+//! path under `EveryStep`, `PruneOnce` and `Refresh(k)` alike, including
+//! across the slide boundary (`proptest.rs::kv_props`); `EveryStep`
+//! rebuilds every step, so the cache could buy it nothing — by design it
+//! is the no-reuse baseline, and lanes that can never read a cached row
+//! (`EveryStep`, or `max_new <= 1`) skip allocating one entirely
+//! ([`lane_wants_kv`]).
 //!
 //! Quality cost of reuse is measured by
 //! [`crate::eval::host::decode_drift`] and tracked by
-//! `benches/decode_reuse.rs`.
+//! `benches/decode_reuse.rs`; per-step cost vs position (flat with the
+//! cache, growing without) by the same bench's `BENCH_kv_decode.json`.
 //!
 //! Two entry points share these semantics: [`decode_greedy`] (one
 //! request, the reference implementation) and [`decode_batch`] (the
-//! serving form: N requests at one snapped ρ through one shared cache,
-//! per-request bit-identical to `decode_greedy` — this is what
-//! `coordinator::engine::HostEngine` executes).
+//! serving form: N requests at one snapped ρ through one shared layout
+//! cache, each lane owning its private `KvCache`, per-request
+//! bit-identical to `decode_greedy` — this is what
+//! `coordinator::engine::HostEngine` executes). Both run every lane's
+//! steps through one internal stepper ([`Lane::step`]), so the two can
+//! never drift apart.
 
 use crate::coordinator::request::argmax;
-use crate::model::EOS_ID;
 use crate::moe::{self, layouts_for};
-use crate::nn::{FixedLayouts, Model};
+use crate::nn::{FixedLayouts, KvCache, Model};
 use crate::pruning::MaskPlan;
 use crate::tensor::LayoutCache;
+use std::time::Instant;
 
 /// Knobs of one greedy decode.
 #[derive(Clone, Copy, Debug)]
@@ -43,9 +73,15 @@ pub struct DecodeConfig {
     pub plan: MaskPlan,
     /// Maximum new tokens to generate.
     pub max_new: usize,
-    /// Stop when the model emits EOS (off for benches so every plan
-    /// generates exactly `max_new` steps).
+    /// Stop when the model emits its configured EOS
+    /// ([`crate::model::ModelConfig::eos_id`]; off for benches so every
+    /// plan generates exactly `max_new` steps).
     pub stop_at_eos: bool,
+    /// Reuse per-layer K/V of the unchanged window prefix across steps
+    /// (prefill-then-step; see the module docs). Off re-runs the full
+    /// window every step — kept selectable for A/B benching; outputs are
+    /// bit-identical either way.
+    pub kv_cache: bool,
 }
 
 /// One decode step's observable state (drift analysis consumes the
@@ -58,6 +94,9 @@ pub struct StepTrace {
     pub logits: Vec<f32>,
     /// Whether this step re-ran micro-expert selection.
     pub refreshed: bool,
+    /// Wall time of this step (selection + forward). Feeds the per-step
+    /// latency-vs-position curve in `benches/decode_reuse.rs`.
+    pub elapsed_us: u64,
 }
 
 /// Result of one greedy decode.
@@ -71,6 +110,15 @@ pub struct DecodeOutput {
     /// How many steps re-ran selection (1 for `PruneOnce`, `steps.len()`
     /// for `EveryStep`).
     pub refresh_count: usize,
+    /// Time spent in full-window work: selection passes plus prefill /
+    /// rebuild forwards (and, with the KV cache off, every refresh step's
+    /// forward).
+    pub prefill_us: u64,
+    /// Time spent in reused steps: single-token `forward_step`s with the
+    /// cache on, full-window reused forwards with it off. The
+    /// prefill/step split is surfaced per ρ level by
+    /// `coordinator::metrics`.
+    pub step_us: u64,
     /// Layout-cache hits/misses attributable to this decode (0/0 when no
     /// cache was supplied).
     pub cache_hits: u64,
@@ -84,70 +132,170 @@ impl DecodeOutput {
     }
 }
 
+/// Per-lane state of a decode: one lane per request. `decode_greedy` is a
+/// single lane driven to completion; `decode_batch` drives N lanes
+/// step-major. All stepping logic lives in [`Lane::step`] so the two
+/// entry points cannot diverge.
+struct Lane {
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    steps: Vec<StepTrace>,
+    refresh_count: usize,
+    layouts: FixedLayouts,
+    /// Per-layer K/V of the current window prefix (`None` ⇒ kv disabled:
+    /// reused steps re-run the full window).
+    kv: Option<KvCache>,
+    /// Window start of the previous step — a change means the window
+    /// slid, so every cached position embedding (and thus K/V row) is
+    /// stale and the cache must be rebuilt.
+    prev_start: usize,
+    prefill_us: u64,
+    step_us: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    done: bool,
+}
+
+impl Lane {
+    fn new(model: &Model, prompt: &[i32], use_kv: bool) -> Lane {
+        assert!(!prompt.is_empty(), "decode needs a non-empty prompt");
+        Lane {
+            tokens: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            steps: Vec::new(),
+            refresh_count: 0,
+            layouts: FixedLayouts::new(),
+            kv: use_kv.then(|| KvCache::new(&model.cfg)),
+            // "no previous window": the first step always prefills
+            prev_start: usize::MAX,
+            prefill_us: 0,
+            step_us: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            done: false,
+        }
+    }
+
+    /// Run decode step `step` for this lane: refresh selection if the
+    /// plan says so, produce the next-token logits (incrementally when
+    /// the KV cache is valid, via full-window prefill otherwise), record
+    /// the trace and return the greedy token. The caller decides EOS
+    /// stopping and appends the token.
+    fn step(
+        &mut self,
+        model: &Model,
+        step: usize,
+        rho: f64,
+        plan: MaskPlan,
+        cache: &mut Option<&mut LayoutCache>,
+    ) -> i32 {
+        let seq = model.cfg.max_seq_len;
+        let start = self.tokens.len().saturating_sub(seq);
+        let window = &self.tokens[start..];
+        let valid = window.len();
+        let refreshed = plan.refreshes_at(step);
+        let t0 = Instant::now();
+        if refreshed {
+            let (h0, m0) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
+            let sel = moe::select_experts(model, window, valid, rho);
+            self.layouts = layouts_for(model, &sel, cache.as_deref_mut());
+            let (h1, m1) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
+            self.cache_hits += h1 - h0;
+            self.cache_misses += m1 - m0;
+            self.refresh_count += 1;
+        }
+        let (logits, full_window) = match self.kv.as_mut() {
+            Some(kv) => {
+                // the cache is reusable only if the layouts are unchanged
+                // (no refresh), the window grew by exactly the one token
+                // the last step appended, and it did not slide
+                let stale = refreshed || start != self.prev_start || kv.len() + 1 != valid;
+                if stale {
+                    let logits = model.forward_prefill_last(window, valid, &self.layouts, kv);
+                    (logits, true)
+                } else {
+                    let newest = *window.last().expect("non-empty window");
+                    (model.forward_step(newest, &self.layouts, kv), false)
+                }
+            }
+            // kv disabled: every step is a full-window forward; refresh
+            // steps count as prefill-class work, reused steps as step work
+            None => (model.forward_fixed_last(window, valid, &self.layouts), refreshed),
+        };
+        self.prev_start = start;
+        let elapsed_us = t0.elapsed().as_micros() as u64;
+        if full_window {
+            self.prefill_us += elapsed_us;
+        } else {
+            self.step_us += elapsed_us;
+        }
+        let token = argmax(&logits);
+        self.steps.push(StepTrace {
+            token,
+            logits,
+            refreshed,
+            elapsed_us,
+        });
+        token
+    }
+
+    fn into_output(self) -> DecodeOutput {
+        DecodeOutput {
+            tokens: self.tokens,
+            prompt_len: self.prompt_len,
+            steps: self.steps,
+            refresh_count: self.refresh_count,
+            prefill_us: self.prefill_us,
+            step_us: self.step_us,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+        }
+    }
+}
+
+/// Should a lane carry a [`KvCache`]? A cache that can never be *read*
+/// is pure overhead (allocation + per-prefill K/V copies): a `<= 1`-step
+/// lane only ever prefills, and a plan that refreshes every step
+/// (`EveryStep`, `Refresh(1)`) rebuilds every step by construction —
+/// `refreshes_at(1)` identifies exactly those plans. Skipping the cache
+/// for them is output-identical (the stale path and the no-kv path run
+/// the same full-window forward and classify its time the same way).
+fn lane_wants_kv(use_kv: bool, max_new: usize, plan: MaskPlan) -> bool {
+    use_kv && max_new > 1 && !plan.refreshes_at(1)
+}
+
 /// Greedy autoregressive decode under a mask plan.
 ///
-/// Each step runs the model over a sliding window of the most recent
+/// Each step operates on a sliding window of the most recent
 /// `max_seq_len` tokens. On refresh steps the current window's selection
 /// is computed ([`moe::select_experts`]) and compressed to per-linear
-/// layouts (through `cache` when given); all other steps reuse the held
-/// layouts and pay only one fixed-selection sparse forward with a
-/// last-row-only LM head ([`Model::forward_fixed_last`]).
+/// layouts (through `cache` when given). With the KV cache on, refresh
+/// steps (and window slides) run one full prefill that repopulates the
+/// lane's per-layer K/V; every other step is a single-token
+/// [`Model::forward_step`]. With it off, all other steps reuse the held
+/// layouts and pay one fixed-selection full-window forward with a
+/// last-row-only LM head ([`Model::forward_fixed_last`]). Token-for-token
+/// and logit-for-logit identical either way.
 pub fn decode_greedy(
     model: &Model,
     prompt: &[i32],
     cfg: &DecodeConfig,
     mut cache: Option<&mut LayoutCache>,
 ) -> DecodeOutput {
-    assert!(!prompt.is_empty(), "decode needs a non-empty prompt");
-    let seq = model.cfg.max_seq_len;
-    let (hits0, misses0) = cache
-        .as_deref()
-        .map_or((0, 0), |c| (c.hits(), c.misses()));
-
-    let mut tokens = prompt.to_vec();
-    let mut steps: Vec<StepTrace> = Vec::with_capacity(cfg.max_new);
-    let mut refresh_count = 0usize;
-    let mut layouts = FixedLayouts::new();
-
+    let mut lane = Lane::new(model, prompt, lane_wants_kv(cfg.kv_cache, cfg.max_new, cfg.plan));
     for step in 0..cfg.max_new {
-        let start = tokens.len().saturating_sub(seq);
-        let window = &tokens[start..];
-        let valid = window.len();
-        let refreshed = cfg.plan.refreshes_at(step);
-        if refreshed {
-            let sel = moe::select_experts(model, window, valid, cfg.rho);
-            layouts = layouts_for(model, &sel, cache.as_deref_mut());
-            refresh_count += 1;
-        }
-        let logits = model.forward_fixed_last(window, valid, &layouts);
-        let token = argmax(&logits);
-        steps.push(StepTrace {
-            token,
-            logits,
-            refreshed,
-        });
-        if cfg.stop_at_eos && token == EOS_ID {
+        let token = lane.step(model, step, cfg.rho, cfg.plan, &mut cache);
+        if cfg.stop_at_eos && token == model.cfg.eos_id {
             break;
         }
-        tokens.push(token);
+        lane.tokens.push(token);
     }
-
-    let (hits1, misses1) = cache
-        .as_deref()
-        .map_or((0, 0), |c| (c.hits(), c.misses()));
-    DecodeOutput {
-        tokens,
-        prompt_len: prompt.len(),
-        steps,
-        refresh_count,
-        cache_hits: hits1 - hits0,
-        cache_misses: misses1 - misses0,
-    }
+    lane.into_output()
 }
 
 /// One request of a batched decode: its prompt and per-request knobs. The
-/// batch-level invariant (one snapped ρ per batch) lives on the
-/// [`decode_batch`] call instead.
+/// batch-level invariants (one snapped ρ, one KV on/off mode per batch)
+/// live on the [`decode_batch`] call instead.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchRequest<'a> {
     pub prompt: &'a [i32],
@@ -157,26 +305,15 @@ pub struct BatchRequest<'a> {
     pub plan: MaskPlan,
 }
 
-/// Per-lane state of a batched decode (one lane per [`BatchRequest`]).
-struct Lane {
-    tokens: Vec<i32>,
-    prompt_len: usize,
-    steps: Vec<StepTrace>,
-    refresh_count: usize,
-    layouts: FixedLayouts,
-    cache_hits: u64,
-    cache_misses: u64,
-    done: bool,
-}
-
 /// Batched greedy decode: every request shares one snapped ρ (the
 /// coordinator's batch key) and one [`LayoutCache`], so batch-mates whose
 /// refresh steps select the same micro-experts share one set of
 /// compressed [`crate::tensor::RowSparse`] layouts instead of each
-/// recompressing. Per request, the result is **bit-identical** to an
-/// independent [`decode_greedy`] call (`proptest.rs::decode_props` proves
-/// this): the loop is step-major across lanes, but each lane's forwards
-/// run in the same order, over the same windows, with the same kernels —
+/// recompressing — while each lane owns a private [`KvCache`] (cached K/V
+/// rows encode one lane's window and are never shareable). Per request,
+/// the result is **bit-identical** to an independent [`decode_greedy`]
+/// call (`proptest.rs::decode_props` proves this): the loop is step-major
+/// across lanes, but both entry points drive the same [`Lane::step`], so
 /// the batching only changes *when* work happens and *how often* layouts
 /// are compressed, never what executes.
 pub fn decode_batch(
@@ -184,24 +321,12 @@ pub fn decode_batch(
     items: &[BatchRequest<'_>],
     rho: f64,
     stop_at_eos: bool,
+    use_kv: bool,
     mut cache: Option<&mut LayoutCache>,
 ) -> Vec<DecodeOutput> {
-    let seq = model.cfg.max_seq_len;
     let mut lanes: Vec<Lane> = items
         .iter()
-        .map(|it| {
-            assert!(!it.prompt.is_empty(), "decode needs a non-empty prompt");
-            Lane {
-                tokens: it.prompt.to_vec(),
-                prompt_len: it.prompt.len(),
-                steps: Vec::with_capacity(it.max_new),
-                refresh_count: 0,
-                layouts: FixedLayouts::new(),
-                cache_hits: 0,
-                cache_misses: 0,
-                done: false,
-            }
-        })
+        .map(|it| Lane::new(model, it.prompt, lane_wants_kv(use_kv, it.max_new, it.plan)))
         .collect();
 
     let max_steps = items.iter().map(|it| it.max_new).max().unwrap_or(0);
@@ -210,31 +335,8 @@ pub fn decode_batch(
             if lane.done || step >= item.max_new {
                 continue;
             }
-            let start = lane.tokens.len().saturating_sub(seq);
-            let window = &lane.tokens[start..];
-            let valid = window.len();
-            let refreshed = item.plan.refreshes_at(step);
-            if refreshed {
-                let (h0, m0) = cache
-                    .as_deref()
-                    .map_or((0, 0), |c| (c.hits(), c.misses()));
-                let sel = moe::select_experts(model, window, valid, rho);
-                lane.layouts = layouts_for(model, &sel, cache.as_deref_mut());
-                let (h1, m1) = cache
-                    .as_deref()
-                    .map_or((0, 0), |c| (c.hits(), c.misses()));
-                lane.cache_hits += h1 - h0;
-                lane.cache_misses += m1 - m0;
-                lane.refresh_count += 1;
-            }
-            let logits = model.forward_fixed_last(window, valid, &lane.layouts);
-            let token = argmax(&logits);
-            lane.steps.push(StepTrace {
-                token,
-                logits,
-                refreshed,
-            });
-            if stop_at_eos && token == EOS_ID {
+            let token = lane.step(model, step, rho, item.plan, &mut cache);
+            if stop_at_eos && token == model.cfg.eos_id {
                 lane.done = true;
                 continue;
             }
@@ -242,23 +344,13 @@ pub fn decode_batch(
         }
     }
 
-    lanes
-        .into_iter()
-        .map(|lane| DecodeOutput {
-            tokens: lane.tokens,
-            prompt_len: lane.prompt_len,
-            steps: lane.steps,
-            refresh_count: lane.refresh_count,
-            cache_hits: lane.cache_hits,
-            cache_misses: lane.cache_misses,
-        })
-        .collect()
+    lanes.into_iter().map(Lane::into_output).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::ModelConfig;
+    use crate::model::{ModelConfig, EOS_ID};
     use crate::nn::random_model;
 
     fn tiny_model() -> Model {
@@ -271,6 +363,25 @@ mod tests {
             plan,
             max_new,
             stop_at_eos: false,
+            kv_cache: true,
+        }
+    }
+
+    fn cfg_nokv(plan: MaskPlan, max_new: usize) -> DecodeConfig {
+        DecodeConfig {
+            kv_cache: false,
+            ..cfg(plan, max_new)
+        }
+    }
+
+    fn assert_outputs_identical(label: &str, a: &DecodeOutput, b: &DecodeOutput) {
+        assert_eq!(a.tokens, b.tokens, "{label}: tokens");
+        assert_eq!(a.steps.len(), b.steps.len(), "{label}: step count");
+        assert_eq!(a.refresh_count, b.refresh_count, "{label}: refreshes");
+        for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            assert_eq!(sa.token, sb.token, "{label}: step {i} token");
+            assert_eq!(sa.logits, sb.logits, "{label}: step {i} logits");
+            assert_eq!(sa.refreshed, sb.refreshed, "{label}: step {i} refreshed");
         }
     }
 
@@ -299,6 +410,101 @@ mod tests {
         assert!(once.steps[1..].iter().all(|s| !s.refreshed));
         let periodic = decode_greedy(&m, &[5, 6], &cfg(MaskPlan::Refresh(2), 4), None);
         assert_eq!(periodic.refresh_count, 2);
+    }
+
+    #[test]
+    fn kv_decode_bit_identical_to_full_window_decode() {
+        // the tentpole contract, unit form: prefill-then-step equals the
+        // non-cached path token-for-token and logit-for-logit under every
+        // plan (the property test widens this over random shapes)
+        let m = tiny_model();
+        let prompt: &[i32] = &[9, 1, 7, 4];
+        for plan in [MaskPlan::EveryStep, MaskPlan::PruneOnce, MaskPlan::Refresh(2)] {
+            let with_kv = decode_greedy(&m, prompt, &cfg(plan, 6), None);
+            let without = decode_greedy(&m, prompt, &cfg_nokv(plan, 6), None);
+            assert_outputs_identical(&plan.label(), &with_kv, &without);
+        }
+    }
+
+    #[test]
+    fn refresh_rebuilds_cache_bit_identically() {
+        // Refresh(k)'s cache rebuild must reproduce the PR-2 (full
+        // re-forward) semantics exactly: steps after a refresh see
+        // layouts *and* K/V consistent with the refreshed selection
+        let m = tiny_model();
+        let prompt: &[i32] = &[3, 1, 4, 1, 5];
+        let with_kv = decode_greedy(&m, prompt, &cfg(MaskPlan::Refresh(3), 9), None);
+        let without = decode_greedy(&m, prompt, &cfg_nokv(MaskPlan::Refresh(3), 9), None);
+        assert_outputs_identical("refresh:3 rebuild", &with_kv, &without);
+        assert_eq!(with_kv.refresh_count, 3);
+    }
+
+    #[test]
+    fn kv_decode_identical_across_window_slide() {
+        // shrink the window so the generation slides it: every sliding
+        // step must rebuild (absolute positions shift) and still match
+        // the non-cached path bit for bit
+        let mut mc = ModelConfig::new("dec-slide", 2, 2, 16);
+        mc.max_seq_len = 6;
+        let m = random_model(&mc, 43);
+        let prompt: &[i32] = &[8, 6, 7, 5];
+        for plan in [MaskPlan::PruneOnce, MaskPlan::Refresh(2)] {
+            let with_kv = decode_greedy(&m, prompt, &cfg(plan, 8), None);
+            let without = decode_greedy(&m, prompt, &cfg_nokv(plan, 8), None);
+            assert_outputs_identical(&format!("slide {}", plan.label()), &with_kv, &without);
+            assert!(with_kv.tokens.len() > mc.max_seq_len, "generation must slide");
+        }
+    }
+
+    #[test]
+    fn timing_split_partitions_step_time() {
+        // every step's elapsed time lands in exactly one bucket, so the
+        // two buckets must sum to the per-step total (timers on a tiny
+        // debug-profile model may legitimately read 0µs, so the test is
+        // structural, not threshold-based)
+        let m = tiny_model();
+        let out = decode_greedy(&m, &[2, 4, 6], &cfg(MaskPlan::PruneOnce, 5), None);
+        assert_eq!(out.refresh_count, 1);
+        let total: u64 = out.steps.iter().map(|s| s.elapsed_us).sum();
+        assert_eq!(out.prefill_us + out.step_us, total);
+        // no-kv EveryStep: every step refreshes, so all work is
+        // prefill-class and nothing may be classified as a reused step
+        let every = decode_greedy(&m, &[2, 4, 6], &cfg_nokv(MaskPlan::EveryStep, 3), None);
+        assert_eq!(every.step_us, 0);
+        let total: u64 = every.steps.iter().map(|s| s.elapsed_us).sum();
+        assert_eq!(every.prefill_us, total);
+    }
+
+    #[test]
+    fn eos_id_comes_from_model_config() {
+        // regression: EOS used to be the hard-coded constant; a checkpoint
+        // with a different vocabulary must stop at *its* EOS. Same
+        // weights, different configured eos_id ⇒ different stopping.
+        let mc = ModelConfig::new("dec-eos", 2, 2, 16);
+        assert_eq!(mc.eos_id, EOS_ID, "random-model default keeps the constant");
+        let m = random_model(&mc, 41);
+        // what this model actually emits in 3 unstopped steps
+        let probe = decode_greedy(&m, &[1, 2, 3], &cfg(MaskPlan::PruneOnce, 3), None);
+        let first = probe.steps[0].token;
+        let unused = (0..mc.vocab_size as i32)
+            .find(|t| !probe.steps.iter().any(|s| s.token == *t))
+            .expect("some token is never emitted");
+        let stopping = DecodeConfig {
+            stop_at_eos: true,
+            ..cfg(MaskPlan::PruneOnce, 3)
+        };
+        // same weights, but the config declares the first emission as EOS
+        let mut mc_hit = mc.clone();
+        mc_hit.eos_id = first;
+        let out = decode_greedy(&random_model(&mc_hit, 41), &[1, 2, 3], &stopping, None);
+        assert_eq!(out.steps.len(), 1, "must stop at the configured EOS");
+        assert!(out.new_tokens().is_empty(), "EOS is not appended");
+        // same weights, EOS set to a token never emitted: runs all steps
+        let mut mc_miss = mc.clone();
+        mc_miss.eos_id = unused;
+        let out = decode_greedy(&random_model(&mc_miss, 41), &[1, 2, 3], &stopping, None);
+        assert_eq!(out.steps.len(), 3);
+        assert_eq!(out.tokens, probe.tokens);
     }
 
     #[test]
@@ -353,9 +559,11 @@ mod tests {
             .map(|((&p, plan), max_new)| batch_item(p, max_new, plan))
             .collect();
         let mut cache = crate::tensor::LayoutCache::new(128);
-        let batched = decode_batch(&m, &items, 0.5, false, Some(&mut cache));
+        let batched = decode_batch(&m, &items, 0.5, false, true, Some(&mut cache));
         assert_eq!(batched.len(), 3);
         for (i, item) in items.iter().enumerate() {
+            // reference lanes run without kv: the batch must match the
+            // plain full-window semantics, not just its own code path
             let single = decode_greedy(
                 &m,
                 item.prompt,
@@ -364,6 +572,7 @@ mod tests {
                     plan: item.plan,
                     max_new: item.max_new,
                     stop_at_eos: false,
+                    kv_cache: false,
                 },
                 None,
             );
@@ -386,7 +595,7 @@ mod tests {
             batch_item(prompt, 3, MaskPlan::PruneOnce),
         ];
         let mut cache = crate::tensor::LayoutCache::new(64);
-        let outs = decode_batch(&m, &items, 0.5, false, Some(&mut cache));
+        let outs = decode_batch(&m, &items, 0.5, false, true, Some(&mut cache));
         // lane 0 compresses every linear once; lane 1's identical prompt
         // selection hits every one of those entries instead
         assert_eq!(outs[0].cache_misses, n_linears);
@@ -409,6 +618,7 @@ mod tests {
                 plan: MaskPlan::PruneOnce,
                 max_new: 6,
                 stop_at_eos: true,
+                kv_cache: true,
             },
             None,
         );
@@ -417,6 +627,7 @@ mod tests {
             &[batch_item(prompt, 6, MaskPlan::PruneOnce)],
             0.6,
             true,
+            true,
             None,
         );
         assert_eq!(outs[0].tokens, single.tokens);
@@ -424,11 +635,25 @@ mod tests {
     }
 
     #[test]
+    fn batch_kv_off_matches_kv_on() {
+        let m = tiny_model();
+        let items = [
+            batch_item(&[1, 2, 3], 4, MaskPlan::PruneOnce),
+            batch_item(&[7, 7], 3, MaskPlan::Refresh(2)),
+        ];
+        let on = decode_batch(&m, &items, 0.5, false, true, None);
+        let off = decode_batch(&m, &items, 0.5, false, false, None);
+        for (i, (a, b)) in on.iter().zip(&off).enumerate() {
+            assert_outputs_identical(&format!("lane {i}"), a, b);
+        }
+    }
+
+    #[test]
     fn empty_batch_and_zero_max_new() {
         let m = tiny_model();
-        assert!(decode_batch(&m, &[], 0.5, false, None).is_empty());
+        assert!(decode_batch(&m, &[], 0.5, false, true, None).is_empty());
         let items = [batch_item(&[1, 2], 0, MaskPlan::PruneOnce)];
-        let outs = decode_batch(&m, &items, 0.5, false, None);
+        let outs = decode_batch(&m, &items, 0.5, false, true, None);
         assert_eq!(outs[0].new_tokens().len(), 0);
         assert_eq!(outs[0].steps.len(), 0);
         assert_eq!(outs[0].refresh_count, 0);

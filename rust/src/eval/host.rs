@@ -115,6 +115,7 @@ pub fn decode_drift_vs_every_step(
             plan: MaskPlan::EveryStep,
             max_new,
             stop_at_eos: false,
+            kv_cache: true,
         },
         None,
     );
@@ -126,6 +127,7 @@ pub fn decode_drift_vs_every_step(
             plan,
             max_new,
             stop_at_eos: false,
+            kv_cache: true,
         },
         None,
     );

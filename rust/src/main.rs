@@ -100,8 +100,21 @@ const SERVE_SPEC: &[OptSpec] = &[
     opt("rhos", "sparsity levels clients request", "0.4,0.6,1.0"),
     opt("window-us", "batch window (microseconds)", "2000"),
     opt("max-new", "new tokens per request (host engine)", "1"),
+    flag("kv", "force the per-lane KV decode cache on (host engine)"),
+    flag("no-kv", "full-window decode every step (A/B baseline)"),
     opt("config", "optional mumoe.toml to load first", ""),
 ];
+
+/// Resolve the `--kv` / `--no-kv` pair against a config default. Typing
+/// both is contradictory and rejected rather than silently picked.
+fn kv_override(a: &Args, default: bool) -> Result<bool, Error> {
+    match (a.flag("kv"), a.flag("no-kv")) {
+        (true, true) => Err(Error::config("--kv and --no-kv are mutually exclusive")),
+        (true, false) => Ok(true),
+        (false, true) => Ok(false),
+        (false, false) => Ok(default),
+    }
+}
 
 /// Replay a synthetic trace through the full coordinator. The default
 /// `host` engine runs batched multi-token decode through the router's
@@ -142,6 +155,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
         cfg.decode.default_max_new = a.get_usize("max-new")?;
         cfg.decode.max_new_cap = cfg.decode.max_new_cap.max(cfg.decode.default_max_new);
     }
+    cfg.decode.kv_cache = kv_override(&a, cfg.decode.kv_cache)?;
     cfg.validate()?;
 
     let report = mumoe::coordinator::server::replay_trace(
@@ -165,6 +179,8 @@ const GEN_SPEC: &[OptSpec] = &[
     opt("tokens", "tokens to generate", "48"),
     opt("plan", "mask plan: every-step | prune-once | refresh:<k> (host engine)", "prune-once"),
     opt("cache-cap", "layout cache capacity (entries, host engine)", "512"),
+    flag("kv", "force the per-lane KV decode cache on (default)"),
+    flag("no-kv", "full-window decode every step (A/B baseline)"),
     flag(
         "device",
         "decode through the PJRT artifact session instead of the host \
@@ -197,6 +213,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     if cache_cap == 0 {
         return Err(Error::config("--cache-cap must be > 0"));
     }
+    let kv = kv_override(&a, mumoe::config::DecodeKnobs::default().kv_cache)?;
 
     use mumoe::coordinator::engine::{host_model, Engine, HostEngine};
     use mumoe::coordinator::request::Request;
@@ -212,7 +229,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     };
     let model = host_model(&serve_cfg)?;
     let cache = Arc::new(Mutex::new(LayoutCache::new(cache_cap)));
-    let mut engine = HostEngine::with_model(model, cache.clone(), true);
+    let mut engine = HostEngine::with_model(model, cache.clone(), true, kv);
 
     let tok = ByteTokenizer;
     let prompt_ids = tok.encode(a.req("prompt")?, true);
@@ -238,12 +255,15 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     // than it emits tokens, and the count must match the printed text
     let generated = resp.tokens.len();
     println!(
-        "\n[host engine: model={model_name} plan={} rho={rho}: {generated} new tokens \
-         in {dt:.2}s = {:.2} tok/s ({} decode steps); layout cache {hits} hits / \
-         {misses} misses]",
+        "\n[host engine: model={model_name} plan={} rho={rho} kv={}: {generated} new \
+         tokens in {dt:.2}s = {:.2} tok/s ({} decode steps, prefill {}us + steps \
+         {}us); layout cache {hits} hits / {misses} misses]",
         plan.label(),
+        if kv { "on" } else { "off" },
         generated as f64 / dt.max(1e-9),
         resp.steps,
+        resp.prefill_us,
+        resp.step_us,
     );
     Ok(())
 }
@@ -284,6 +304,11 @@ fn cmd_generate_device(a: &Args) -> Result<(), Error> {
     let session = Session::bind(&registry, &name, weights)?;
 
     let tok = ByteTokenizer;
+    // EOS from the model config (mirrors the host engine; checkpoints
+    // with another vocabulary stop at their own id, not the constant)
+    let eos = mumoe::model::config_by_name(model)
+        .map(|c| c.eos_id)
+        .unwrap_or(mumoe::model::EOS_ID);
     let mut ids = tok.encode(a.req("prompt")?, true);
     let t0 = std::time::Instant::now();
     for _ in 0..n_new {
@@ -302,7 +327,7 @@ fn cmd_generate_device(a: &Args) -> Result<(), Error> {
         let logits = literal_f32(&outs[0])?;
         let vocab = logits.len() / batch;
         let next = mumoe::coordinator::request::argmax(&logits[..vocab]);
-        if next == mumoe::model::EOS_ID {
+        if next == eos {
             break;
         }
         ids.push(next);

@@ -21,6 +21,11 @@ pub struct ModelConfig {
     pub d_model: usize,
     pub max_seq_len: usize,
     pub vocab_size: usize,
+    /// End-of-sequence token the decode engine stops at. Defaults to the
+    /// byte-tokenizer constant [`EOS_ID`]; checkpoints with a different
+    /// vocabulary override it here so `stop_at_eos` halts at *their* EOS
+    /// rather than an arbitrary id.
+    pub eos_id: i32,
 }
 
 impl ModelConfig {
@@ -32,6 +37,7 @@ impl ModelConfig {
             d_model,
             max_seq_len: MAX_SEQ_LEN,
             vocab_size: VOCAB_SIZE,
+            eos_id: EOS_ID,
         }
     }
 
@@ -153,6 +159,18 @@ mod tests {
         for c in model_family() {
             assert_eq!(c.d_model % c.n_heads, 0);
         }
+    }
+
+    #[test]
+    fn eos_defaults_to_tokenizer_constant() {
+        // the constant stays the random-model/byte-tokenizer default;
+        // checkpoints with other vocabularies override the field
+        for c in model_family() {
+            assert_eq!(c.eos_id, EOS_ID);
+        }
+        let mut c = ModelConfig::new("custom-vocab", 2, 2, 16);
+        c.eos_id = 3;
+        assert_eq!(c.eos_id, 3);
     }
 
     #[test]

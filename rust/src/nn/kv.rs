@@ -1,0 +1,177 @@
+//! Per-layer K/V cache for incremental decode.
+//!
+//! The decode engine's reused steps used to re-run the model over the
+//! whole sliding window — O(T²) attention plus O(T·d) sparse matmul per
+//! token for rows whose outputs never change. A [`KvCache`] holds every
+//! block's key/value matrices for the already-processed window prefix so
+//! a step only computes the *new* token's row through each linear
+//! ([`crate::nn::Model::forward_step`]) and attends against the cached
+//! rows: O(T) attention work per step.
+//!
+//! Why this composes exactly with prune-once layout reuse: a cached K/V
+//! row is valid only while (a) the [`crate::tensor::RowSparse`] layouts
+//! that produced it are still the ones executing — a mask-plan refresh
+//! swaps layouts, so every cached row is stale — and (b) the token's
+//! window-relative position is unchanged, because μ-OPT uses learned
+//! absolute position embeddings, so a sliding window shifts every
+//! position and invalidates every row (unlike rotary embeddings, there is
+//! no cheap re-basing). The decode engine therefore rebuilds the cache
+//! with one full prefill ([`crate::nn::Model::forward_prefill_last`]) on
+//! refresh steps and window slides, and steps incrementally everywhere
+//! else — keeping KV decode **bit-identical** to the non-cached path
+//! under every [`crate::pruning::MaskPlan`] (`proptest.rs::kv_props`
+//! proves this) rather than approximately right.
+//!
+//! Buffers are preallocated at `[max_seq_len × d_model]` per layer so the
+//! steady-state step path never allocates for cache writes.
+
+use crate::model::ModelConfig;
+use crate::tensor::Mat;
+
+/// Preallocated per-layer K/V buffers plus shared valid-length tracking.
+///
+/// One instance belongs to one decode lane (requests never share a cache
+/// — cached rows encode one lane's window). Construction sizes it for a
+/// specific model config; [`crate::nn::Model::forward_step`] asserts the
+/// shape matches the model it runs on.
+pub struct KvCache {
+    /// Per layer: (max_seq_len, d_model) key rows.
+    k: Vec<Mat>,
+    /// Per layer: (max_seq_len, d_model) value rows.
+    v: Vec<Mat>,
+    /// Cached positions valid in every layer (rows `0..len`).
+    len: usize,
+}
+
+impl KvCache {
+    /// Preallocate for `cfg`'s layer count, window and width.
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            k: (0..cfg.n_layers)
+                .map(|_| Mat::zeros(cfg.max_seq_len, cfg.d_model))
+                .collect(),
+            v: (0..cfg.n_layers)
+                .map(|_| Mat::zeros(cfg.max_seq_len, cfg.d_model))
+                .collect(),
+            len: 0,
+        }
+    }
+
+    /// Cached positions (valid rows per layer).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum cacheable positions (the model's window).
+    pub fn capacity(&self) -> usize {
+        self.k.first().map_or(0, |m| m.rows)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Invalidate every cached row (refresh / window-slide rebuild; the
+    /// buffers stay allocated — rows are overwritten before reuse).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Does this cache match `cfg`'s shape?
+    pub fn fits(&self, cfg: &ModelConfig) -> bool {
+        self.n_layers() == cfg.n_layers
+            && self.capacity() == cfg.max_seq_len
+            && self.k.iter().all(|m| m.cols == cfg.d_model)
+    }
+
+    /// Cached K/V matrices of one layer (rows `0..len()` are valid).
+    pub(crate) fn layer(&self, layer: usize) -> (&Mat, &Mat) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// Copy a prefill's first `t` K/V rows for `layer` into the cache.
+    pub(crate) fn record_prefill(&mut self, layer: usize, k: &Mat, v: &Mat, t: usize) {
+        assert!(t <= self.capacity(), "prefill exceeds cache capacity");
+        let d = self.k[layer].cols;
+        self.k[layer].data[..t * d].copy_from_slice(&k.data[..t * d]);
+        self.v[layer].data[..t * d].copy_from_slice(&v.data[..t * d]);
+    }
+
+    /// Write one new position's K/V row for `layer` at `pos`.
+    pub(crate) fn write_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.k[layer].row_mut(pos).copy_from_slice(k);
+        self.v[layer].row_mut(pos).copy_from_slice(v);
+    }
+
+    /// Commit the valid length after all layers recorded (prefill sets
+    /// `t`; a step sets `pos + 1`).
+    pub(crate) fn set_len(&mut self, len: usize) {
+        assert!(len <= self.capacity(), "cache length exceeds capacity");
+        self.len = len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        let mut c = ModelConfig::new("kv-tiny", 2, 2, 8);
+        c.max_seq_len = 6;
+        c
+    }
+
+    #[test]
+    fn preallocates_model_shape() {
+        let kv = KvCache::new(&cfg());
+        assert_eq!(kv.n_layers(), 2);
+        assert_eq!(kv.capacity(), 6);
+        assert_eq!(kv.len(), 0);
+        assert!(kv.is_empty());
+        assert!(kv.fits(&cfg()));
+        assert!(!kv.fits(&ModelConfig::new("other", 3, 2, 8)));
+    }
+
+    #[test]
+    fn record_write_and_clear_track_len() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let k = Mat::from_fn(c.max_seq_len, c.d_model, |i, j| (i * 10 + j) as f32);
+        let v = Mat::from_fn(c.max_seq_len, c.d_model, |i, j| -((i * 10 + j) as f32));
+        for l in 0..c.n_layers {
+            kv.record_prefill(l, &k, &v, 3);
+        }
+        kv.set_len(3);
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.layer(1).0.row(2), k.row(2));
+        assert_eq!(kv.layer(0).1.row(1), v.row(1));
+
+        let new_k = vec![7.0f32; c.d_model];
+        let new_v = vec![9.0f32; c.d_model];
+        for l in 0..c.n_layers {
+            kv.write_row(l, 3, &new_k, &new_v);
+        }
+        kv.set_len(4);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.layer(0).0.row(3), new_k.as_slice());
+        assert_eq!(kv.layer(1).1.row(3), new_v.as_slice());
+
+        kv.clear();
+        assert!(kv.is_empty());
+        // buffers survive a clear: the next prefill overwrites in place
+        assert_eq!(kv.capacity(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cache capacity")]
+    fn overlong_prefill_rejected() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let k = Mat::zeros(c.max_seq_len + 2, c.d_model);
+        kv.record_prefill(0, &k, &k, c.max_seq_len + 1);
+    }
+}

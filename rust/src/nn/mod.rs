@@ -20,11 +20,17 @@
 //! → [`crate::pruning::Mask::compress`] → `matmul_nt_sparse`, with no
 //! dense zeroed weight copy anywhere.
 
+pub mod kv;
+
 use crate::model::checkpoint::Checkpoint;
 use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
-use crate::tensor::{layernorm_rows, log_softmax, matmul_tn_sparse_auto, relu, Mat, RowSparse};
+use crate::tensor::{
+    layernorm_row, layernorm_rows, log_softmax, matmul_tn_sparse_auto, matvec_nt_sparse, relu,
+    Mat, RowSparse,
+};
 use crate::util::error::Error;
+pub use kv::KvCache;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -283,7 +289,7 @@ impl Model {
             PruneMode::Dense => Exec::Dense,
             PruneMode::OnlineWanda { rho } => Exec::Online { rho },
         };
-        self.forward_exec(tokens, valid_len, &exec, taps, Head::All)
+        self.forward_exec(tokens, valid_len, &exec, taps, Head::All, None)
     }
 
     /// Forward under a *fixed* per-linear selection: every prunable linear
@@ -291,7 +297,7 @@ impl Model {
     /// [`crate::decode`] for how these are selected and cached). Panics if
     /// a prunable linear has no layout — a partial map is a caller bug.
     pub fn forward_fixed(&self, tokens: &[i32], valid_len: usize, layouts: &FixedLayouts) -> Mat {
-        self.forward_exec(tokens, valid_len, &Exec::Fixed { layouts }, None, Head::All)
+        self.forward_exec(tokens, valid_len, &Exec::Fixed { layouts }, None, Head::All, None)
     }
 
     /// [`Model::forward_fixed`] computing only the last valid position's
@@ -310,12 +316,147 @@ impl Model {
             &Exec::Fixed { layouts },
             None,
             Head::LastValid,
+            None,
         )
         .data
     }
 
+    /// [`Model::forward_fixed_last`] that additionally records every
+    /// block's K/V rows into `kv` — the *prefill* of an incremental
+    /// decode. The cache is cleared first, so this is also how the decode
+    /// engine **rebuilds** after a mask-plan refresh (new layouts ⇒ every
+    /// cached row stale) or a window slide (absolute position embeddings
+    /// ⇒ every cached row stale). Logits are bit-identical to
+    /// `forward_fixed_last`: the recording only observes the k/v
+    /// matrices the traversal already computed.
+    ///
+    /// `tokens` must be an unpadded window (`valid_len == tokens.len()`)
+    /// — cached rows past the valid boundary would poison later steps.
+    pub fn forward_prefill_last(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+        layouts: &FixedLayouts,
+        kv: &mut KvCache,
+    ) -> Vec<f32> {
+        assert_eq!(valid_len, tokens.len(), "prefill caches only unpadded windows");
+        assert!(kv.fits(&self.cfg), "KvCache shape does not match model");
+        kv.clear();
+        self.forward_exec(
+            tokens,
+            valid_len,
+            &Exec::Fixed { layouts },
+            None,
+            Head::LastValid,
+            Some(kv),
+        )
+        .data
+    }
+
+    /// One incremental decode step: run a *single token* through every
+    /// block, reading the window prefix's K/V from `kv` (populated by
+    /// [`Model::forward_prefill_last`] and prior steps) and appending the
+    /// new position's rows. Returns the next-token logits row.
+    ///
+    /// Bit-identical to `forward_fixed_last` over the grown window: every
+    /// per-row operation (embedding add, layernorm, the
+    /// [`crate::tensor::matvec_nt_sparse`] linears, the causal attention
+    /// row, residual adds, the last-row LM head) accumulates in exactly
+    /// the order the full traversal uses for its last row, and cached K/V
+    /// rows are exactly what the full traversal would recompute for the
+    /// unchanged prefix (`proptest.rs::kv_props` proves the composition).
+    ///
+    /// Cost: O(T) attention + O(nnz) linears per step, vs the full
+    /// window's O(T²) + O(T·nnz).
+    pub fn forward_step(&self, token: i32, layouts: &FixedLayouts, kv: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let pos = kv.len();
+        assert!(pos >= 1, "forward_step needs a prefilled cache");
+        assert!(
+            pos < cfg.max_seq_len,
+            "cache full: the window must slide — rebuild via forward_prefill_last"
+        );
+        assert!(kv.fits(cfg), "KvCache shape does not match model");
+
+        // embed the one new token at its window-relative position
+        let tok_row = self.mats["tok_emb"].row(token.clamp(0, cfg.vocab_size as i32 - 1) as usize);
+        let pos_row = self.mats["pos_emb"].row(pos);
+        let mut h: Vec<f32> = tok_row.iter().zip(pos_row).map(|(a, b)| a + b).collect();
+
+        for (li, names) in self.layer_names.iter().enumerate() {
+            let y = layernorm_row(&h, &self.vecs[&names.ln1_g], &self.vecs[&names.ln1_b], 1e-5);
+            let q = self.linear_row(&y, &names.q, layouts);
+            let k = self.linear_row(&y, &names.k, layouts);
+            let v = self.linear_row(&y, &names.v, layouts);
+            // the new row joins the cache first so attention sees
+            // positions 0..=pos, exactly the full pass's causal row
+            kv.write_row(li, pos, &k, &v);
+            let attn = self.attention_row(kv, li, pos, &q);
+            let o = self.linear_row(&attn, &names.o, layouts);
+            for (a, b) in h.iter_mut().zip(&o) {
+                *a += b;
+            }
+
+            let y = layernorm_row(&h, &self.vecs[&names.ln2_g], &self.vecs[&names.ln2_b], 1e-5);
+            let mut z = self.linear_row(&y, &names.fc1, layouts);
+            for x in &mut z {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+            }
+            let out = self.linear_row(&z, &names.fc2, layouts);
+            for (a, b) in h.iter_mut().zip(&out) {
+                *a += b;
+            }
+        }
+        kv.set_len(pos + 1);
+
+        let hidden = layernorm_row(&h, &self.vecs["ln_f.g"], &self.vecs["ln_f.b"], 1e-5);
+        // same last-row tied head as forward_fixed_last
+        let last = Mat::from_vec(1, cfg.d_model, hidden);
+        last.matmul_nt_auto(&self.mats["tok_emb"]).data
+    }
+
+    /// One linear on a single activation row under fixed layouts — the
+    /// decode-step mirror of `linear_with_t` (same `Exec::Fixed` lookup,
+    /// same missing-layout panic, bias added in the same element order).
+    fn linear_row(&self, x: &[f32], names: &LinearNames, layouts: &FixedLayouts) -> Vec<f32> {
+        let rs = layouts
+            .get(&names.w)
+            .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
+        let mut y = matvec_nt_sparse(x, rs);
+        for (a, b) in y.iter_mut().zip(&self.vecs[&names.b]) {
+            *a += b;
+        }
+        y
+    }
+
+    /// The causal attention row for the newest position, reading K/V from
+    /// the cache: the same [`attention_head_pos`] worker the full
+    /// traversal runs, called at `i = pos` over a fully-valid window
+    /// (decode windows are unpadded, so the padding mask can never
+    /// trigger) — bit-identical outputs by construction.
+    fn attention_row(&self, kv: &KvCache, layer: usize, pos: usize, q: &[f32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t = pos + 1;
+        let (kmat, vmat) = kv.layer(layer);
+        let mut out = vec![0.0f32; d];
+        let mut logits = vec![0.0f32; t];
+        for h in 0..nh {
+            let off = h * hd;
+            let qi = &q[off..off + hd];
+            let orow = &mut out[off..off + hd];
+            attention_head_pos(qi, kmat, vmat, off, pos, t, scale, &mut logits, orow);
+        }
+        out
+    }
+
     /// The worker behind every public forward: one traversal, any exec
-    /// mode, optional taps, full or last-row head.
+    /// mode, optional taps, full or last-row head, optional K/V capture
+    /// (`kv_out`, the prefill of an incremental decode — recording only
+    /// copies matrices the pass computed anyway).
     fn forward_exec(
         &self,
         tokens: &[i32],
@@ -323,6 +464,7 @@ impl Model {
         exec: &Exec,
         mut taps: Option<&mut ActivationTaps>,
         head: Head,
+        mut kv_out: Option<&mut KvCache>,
     ) -> Mat {
         let cfg = &self.cfg;
         let t = tokens.len();
@@ -341,7 +483,7 @@ impl Model {
             taps.insert(key.to_string(), padded);
         };
 
-        for names in &self.layer_names {
+        for (li, names) in self.layer_names.iter().enumerate() {
             let y = layernorm_rows(&h, &self.vecs[&names.ln1_g], &self.vecs[&names.ln1_b], 1e-5);
             if let Some(taps) = taps.as_deref_mut() {
                 for lin in [&names.q, &names.k, &names.v] {
@@ -354,6 +496,9 @@ impl Model {
             let q = self.linear_with_t(&y, yt.as_ref(), &names.q, exec);
             let k = self.linear_with_t(&y, yt.as_ref(), &names.k, exec);
             let v = self.linear_with_t(&y, yt.as_ref(), &names.v, exec);
+            if let Some(kv) = kv_out.as_deref_mut() {
+                kv.record_prefill(li, &k, &v, t);
+            }
             let attn = self.attention(&q, &k, &v, valid_len);
             if let Some(taps) = taps.as_deref_mut() {
                 record(taps, &names.o.w, &attn);
@@ -374,6 +519,9 @@ impl Model {
             h.add_assign(&out);
         }
 
+        if let Some(kv) = kv_out {
+            kv.set_len(t);
+        }
         // taps-only traversals are done: everything past here exists only
         // to produce logits
         if matches!(head, Head::None) {
@@ -408,7 +556,14 @@ impl Model {
     /// largest matmul just to discard it.
     pub fn collect_activations(&self, tokens: &[i32], valid_len: usize) -> ActivationTaps {
         let mut taps = ActivationTaps::new();
-        self.forward_exec(tokens, valid_len, &Exec::Dense, Some(&mut taps), Head::None);
+        self.forward_exec(
+            tokens,
+            valid_len,
+            &Exec::Dense,
+            Some(&mut taps),
+            Head::None,
+            None,
+        );
         taps
     }
 
@@ -422,46 +577,9 @@ impl Model {
         for h in 0..nh {
             let off = h * hd;
             for i in 0..t {
-                let klim = (i + 1).min(t); // causal
                 let qi = &q.row(i)[off..off + hd];
-                let mut mx = f32::NEG_INFINITY;
-                for (j, logit) in logits.iter_mut().enumerate().take(klim) {
-                    if j >= valid_len && j != i {
-                        *logit = f32::NEG_INFINITY;
-                        continue;
-                    }
-                    let kj = &k.row(j)[off..off + hd];
-                    let mut acc = 0.0f32;
-                    for c in 0..hd {
-                        acc += qi[c] * kj[c];
-                    }
-                    *logit = acc * scale;
-                    mx = mx.max(*logit);
-                }
-                // softmax over 0..klim (padding rows attend to themselves)
-                let mut denom = 0.0f32;
-                for logit in logits.iter_mut().take(klim) {
-                    if logit.is_finite() {
-                        *logit = (*logit - mx).exp();
-                        denom += *logit;
-                    } else {
-                        *logit = 0.0;
-                    }
-                }
-                if denom <= 0.0 {
-                    continue;
-                }
                 let orow = &mut out.data[i * d + off..i * d + off + hd];
-                for j in 0..klim {
-                    let p = logits[j] / denom;
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vj = &v.row(j)[off..off + hd];
-                    for c in 0..hd {
-                        orow[c] += p * vj[c];
-                    }
-                }
+                attention_head_pos(qi, k, v, off, i, valid_len, scale, &mut logits, orow);
             }
         }
         out
@@ -531,6 +649,70 @@ impl Model {
             mask.apply_in_place(w);
         }
         self.weights_id = next_weights_id();
+    }
+}
+
+/// One (head, position) of causal attention: scores `qi` (the position's
+/// query slice for head offset `off`) against K rows `0..=i`, masking
+/// padded positions past `valid_len` (padding rows attend to themselves),
+/// softmaxes, and accumulates the matching V row slices into `orow`.
+/// `logits` is caller-provided scratch of length ≥ `i + 1`.
+///
+/// This is THE attention inner loop: both the full traversal
+/// ([`Model::forward_with`] via `attention`) and the KV-decode step path
+/// (`attention_row`, reading K/V from the cache) call it, so the two can
+/// never drift numerically — the KV path's bit-identical contract is
+/// structural, not maintained by hand.
+#[allow(clippy::too_many_arguments)]
+fn attention_head_pos(
+    qi: &[f32],
+    k: &Mat,
+    v: &Mat,
+    off: usize,
+    i: usize,
+    valid_len: usize,
+    scale: f32,
+    logits: &mut [f32],
+    orow: &mut [f32],
+) {
+    let hd = qi.len();
+    let klim = i + 1; // causal
+    let mut mx = f32::NEG_INFINITY;
+    for (j, logit) in logits.iter_mut().enumerate().take(klim) {
+        if j >= valid_len && j != i {
+            *logit = f32::NEG_INFINITY;
+            continue;
+        }
+        let kj = &k.row(j)[off..off + hd];
+        let mut acc = 0.0f32;
+        for c in 0..hd {
+            acc += qi[c] * kj[c];
+        }
+        *logit = acc * scale;
+        mx = mx.max(*logit);
+    }
+    // softmax over 0..klim
+    let mut denom = 0.0f32;
+    for logit in logits.iter_mut().take(klim) {
+        if logit.is_finite() {
+            *logit = (*logit - mx).exp();
+            denom += *logit;
+        } else {
+            *logit = 0.0;
+        }
+    }
+    if denom <= 0.0 {
+        return;
+    }
+    for j in 0..klim {
+        let p = logits[j] / denom;
+        if p == 0.0 {
+            continue;
+        }
+        let vj = &v.row(j)[off..off + hd];
+        for c in 0..hd {
+            orow[c] += p * vj[c];
+        }
     }
 }
 
@@ -724,6 +906,100 @@ mod tests {
         let last = m.forward_fixed_last(&toks, 5, &layouts);
         assert_eq!(last.len(), m.cfg.vocab_size);
         assert_eq!(last.as_slice(), full.row(4));
+    }
+
+    fn fixed_layouts(m: &Model, toks: &[i32], rho: f64) -> FixedLayouts {
+        let sel = crate::moe::select_experts(m, toks, toks.len(), rho);
+        m.prunable()
+            .into_iter()
+            .map(|(name, w)| {
+                let rs = Arc::new(sel.masks[&name].compress(w));
+                (name, rs)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefill_logits_bit_identical_to_fixed_last() {
+        // K/V capture must be observation-only
+        let m = random_model(&tiny(), 15);
+        let toks: Vec<i32> = vec![3, 9, 27, 81, 243 % 256];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        let prefill = m.forward_prefill_last(&toks, 5, &layouts, &mut kv);
+        let plain = m.forward_fixed_last(&toks, 5, &layouts);
+        assert_eq!(prefill, plain);
+        assert_eq!(kv.len(), 5);
+    }
+
+    #[test]
+    fn forward_step_bit_identical_to_full_window_forward() {
+        // prefill on the prefix + one step on the last token must equal
+        // the full-window fixed forward, logit for logit — the core
+        // contract of the KV-decode subsystem
+        let m = random_model(&tiny(), 16);
+        let toks: Vec<i32> = vec![5, 11, 23, 47, 95, 191];
+        let layouts = fixed_layouts(&m, &toks, 0.6);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks[..3], 3, &layouts, &mut kv);
+        // step the remaining tokens one at a time, checking each against
+        // the non-cached full-window forward
+        for n in 4..=toks.len() {
+            let stepped = m.forward_step(toks[n - 1], &layouts, &mut kv);
+            let full = m.forward_fixed_last(&toks[..n], n, &layouts);
+            assert_eq!(stepped, full, "position {n}");
+            assert_eq!(kv.len(), n);
+        }
+    }
+
+    #[test]
+    fn prefill_rebuild_overwrites_stale_rows() {
+        // after a clear + re-prefill on a different window the step path
+        // must track the new window, not the old one
+        let m = random_model(&tiny(), 17);
+        let a: Vec<i32> = vec![1, 2, 3, 4];
+        let b: Vec<i32> = vec![9, 8, 7];
+        let layouts = fixed_layouts(&m, &a, 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&a, 4, &layouts, &mut kv);
+        m.forward_prefill_last(&b, 3, &layouts, &mut kv);
+        assert_eq!(kv.len(), 3);
+        let stepped = m.forward_step(42, &layouts, &mut kv);
+        let mut grown = b.clone();
+        grown.push(42);
+        assert_eq!(stepped, m.forward_fixed_last(&grown, 4, &layouts));
+    }
+
+    #[test]
+    #[should_panic(expected = "prefilled cache")]
+    fn forward_step_rejects_empty_cache() {
+        let m = random_model(&tiny(), 18);
+        let layouts = fixed_layouts(&m, &[1, 2], 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_step(1, &layouts, &mut kv);
+    }
+
+    #[test]
+    #[should_panic(expected = "unpadded windows")]
+    fn prefill_rejects_padded_windows() {
+        let m = random_model(&tiny(), 19);
+        let toks: Vec<i32> = vec![1, 2, 3, PAD_ID];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks, 3, &layouts, &mut kv);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn forward_step_rejects_full_cache() {
+        let mut cfg = tiny();
+        cfg.max_seq_len = 4;
+        let m = random_model(&cfg, 20);
+        let toks: Vec<i32> = vec![1, 2, 3, 4];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks, 4, &layouts, &mut kv);
+        m.forward_step(5, &layouts, &mut kv);
     }
 
     #[test]

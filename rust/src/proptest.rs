@@ -335,6 +335,9 @@ mod decode_props {
             plan,
             max_new,
             stop_at_eos: false,
+            // these properties pin the full-window reference semantics;
+            // kv_props proves the KV path equals them bit-for-bit
+            kv_cache: false,
         }
     }
 
@@ -431,7 +434,10 @@ mod decode_props {
             })
             .collect();
         let mut cache = LayoutCache::new(256);
-        let batched = decode_batch(&model, &items, rho, false, Some(&mut cache));
+        // the batch runs the KV path (the serving default) while the
+        // reference lanes run the full-window path: the comparison spans
+        // both the batching and the caching dimension at once
+        let batched = decode_batch(&model, &items, rho, false, true, Some(&mut cache));
         for (i, &(p, m)) in lanes.iter().enumerate() {
             let single = decode_greedy(&model, p, &dcfg(rho, plan, m), None);
             bit_identical(&format!("lane {i} vs independent greedy"), &batched[i], &single)?;
@@ -468,6 +474,161 @@ mod decode_props {
     #[test]
     fn batched_decode_matches_independent_greedy() {
         check(203, 8, gen_seed_rho, prop_batch_matches_independent_greedy);
+    }
+}
+
+/// Properties of the KV-cache incremental decode subsystem
+/// (`nn::kv` + `Model::forward_step`): prefill-then-step must be
+/// **bit-identical** to the full-window forward at every position, and
+/// KV-cached decode must equal non-cached decode token-for-token and
+/// logit-for-logit under every mask plan — including across the
+/// sliding-window boundary, where the cache must rebuild (absolute
+/// position embeddings shift with the window). Checked over random model
+/// shapes, window lengths, prompts, plans and active ratios.
+#[cfg(test)]
+mod kv_props {
+    use super::{check, ensure, PropResult};
+    use crate::decode::{decode_greedy, DecodeConfig, DecodeOutput};
+    use crate::model::ModelConfig;
+    use crate::moe;
+    use crate::nn::{random_model, KvCache, Model};
+    use crate::pruning::MaskPlan;
+    use crate::util::rng::Pcg32;
+
+    /// Random tiny model with a deliberately *small* window so every
+    /// generated case crosses the slide boundary, plus prompt/ρ/plan.
+    fn case(seed: u64, rho: f64) -> (Model, Vec<i32>, f64, MaskPlan, usize) {
+        let mut rng = Pcg32::new(seed, 47);
+        let n_layers = 1 + rng.gen_range_usize(2);
+        let n_heads = 1 + rng.gen_range_usize(2);
+        let head_dim = 4 + 4 * rng.gen_range_usize(2); // 4 or 8
+        let mut cfg = ModelConfig::new("kv-prop-tiny", n_layers, n_heads, n_heads * head_dim);
+        cfg.max_seq_len = 5 + rng.gen_range_usize(5); // 5..=9
+        let model = random_model(&cfg, seed ^ 0xBEEF);
+        // prompt from 2 tokens up to a full window
+        let plen = 2 + rng.gen_range_usize(cfg.max_seq_len - 1);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+        let rho = 0.05 + 0.9 * rho.clamp(0.0, 1.0);
+        let plans = [
+            MaskPlan::EveryStep,
+            MaskPlan::PruneOnce,
+            MaskPlan::Refresh(2),
+            MaskPlan::Refresh(3),
+        ];
+        let plan = plans[rng.gen_range_usize(4)];
+        // enough new tokens that the window always slides
+        let max_new = cfg.max_seq_len + 2;
+        (model, prompt, rho, plan, max_new)
+    }
+
+    fn bit_identical(label: &str, a: &DecodeOutput, b: &DecodeOutput) -> PropResult {
+        ensure(a.tokens == b.tokens, format!("{label}: tokens diverged"))?;
+        ensure(
+            a.steps.len() == b.steps.len(),
+            format!("{label}: step counts diverged"),
+        )?;
+        ensure(
+            a.refresh_count == b.refresh_count,
+            format!("{label}: refresh counts diverged"),
+        )?;
+        for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            ensure(
+                sa.token == sb.token,
+                format!("{label}: step {i} token {} vs {}", sa.token, sb.token),
+            )?;
+            ensure(
+                sa.logits == sb.logits,
+                format!("{label}: step {i} logits not bit-identical"),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Tentpole property: KV-cached decode is bit-identical to the
+    /// non-cached full-window decode under every plan, with every case
+    /// generating past the slide boundary (rebuild-on-slide) and every
+    /// `Refresh(k)` case exercising rebuild-on-refresh.
+    fn prop_kv_decode_bit_identical(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, plan, max_new) = case(input.0, input.1);
+        let base = DecodeConfig {
+            rho,
+            plan,
+            max_new,
+            stop_at_eos: false,
+            kv_cache: false,
+        };
+        let without = decode_greedy(&model, &prompt, &base, None);
+        let with_kv = decode_greedy(
+            &model,
+            &prompt,
+            &DecodeConfig {
+                kv_cache: true,
+                ..base
+            },
+            None,
+        );
+        bit_identical(&format!("kv vs full ({})", plan.label()), &with_kv, &without)?;
+        ensure(
+            without.tokens.len() > model.cfg.max_seq_len,
+            "case must cross the window-slide boundary",
+        )
+    }
+
+    /// Unit-level form of the same contract: `forward_step` equals
+    /// `forward_fixed_last` at every position from one prefill up to a
+    /// full window, and the forced rebuild after a slide repopulates the
+    /// cache to the same logits the full forward produces.
+    fn prop_forward_step_matches_fixed_last(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, _plan, _max_new) = case(input.0, input.1);
+        let seq = model.cfg.max_seq_len;
+        let mut tokens = prompt;
+        tokens.truncate(seq - 1); // room to step at least once
+        let sel = moe::select_experts(&model, &tokens, tokens.len(), rho);
+        let layouts = moe::layouts_for(&model, &sel, None);
+
+        let mut kv = KvCache::new(&model.cfg);
+        let prefill = model.forward_prefill_last(&tokens, tokens.len(), &layouts, &mut kv);
+        ensure(
+            prefill == model.forward_fixed_last(&tokens, tokens.len(), &layouts),
+            "prefill logits diverged from forward_fixed_last",
+        )?;
+        let mut rng = Pcg32::new(input.0 ^ 0x5A5A, 5);
+        while tokens.len() < seq {
+            let next = rng.gen_range(256) as i32;
+            tokens.push(next);
+            let stepped = model.forward_step(next, &layouts, &mut kv);
+            let full = model.forward_fixed_last(&tokens, tokens.len(), &layouts);
+            ensure(
+                stepped == full,
+                format!("forward_step diverged at window length {}", tokens.len()),
+            )?;
+            ensure(kv.len() == tokens.len(), "cache length out of sync")?;
+        }
+        // the window now slides: the step path is invalid (positions
+        // shifted) and the engine rebuilds — the rebuilt prefill must
+        // match the full forward on the slid window
+        tokens.push(rng.gen_range(256) as i32);
+        let window = &tokens[tokens.len() - seq..];
+        let rebuilt = model.forward_prefill_last(window, seq, &layouts, &mut kv);
+        ensure(
+            rebuilt == model.forward_fixed_last(window, seq, &layouts),
+            "slide rebuild diverged from the full forward",
+        )?;
+        ensure(kv.len() == seq, "rebuild must repopulate the full window")
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        (r.next_u64(), r.next_f64())
+    }
+
+    #[test]
+    fn kv_decode_bit_identical_to_full_window_decode() {
+        check(301, 10, gen_seed_rho, prop_kv_decode_bit_identical);
+    }
+
+    #[test]
+    fn forward_step_equivalent_to_forward_fixed_last() {
+        check(302, 10, gen_seed_rho, prop_forward_step_matches_fixed_last);
     }
 }
 

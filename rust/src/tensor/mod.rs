@@ -11,8 +11,8 @@ mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
 pub use sparse::{
-    fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_par, rho_milli,
-    LayoutCache, LayoutKey, RowSparse,
+    fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_par, matvec_nt_sparse,
+    rho_milli, LayoutCache, LayoutKey, RowSparse,
 };
 
 use crate::util::threadpool::{self, ThreadPool};
@@ -310,15 +310,30 @@ pub fn layernorm_rows(x: &Mat, g: &[f32], b: &[f32], eps: f32) -> Mat {
     assert_eq!(b.len(), x.cols);
     let mut out = Mat::zeros(x.rows, x.cols);
     for i in 0..x.rows {
-        let row = x.row(i);
-        let mean = row.iter().sum::<f32>() / x.cols as f32;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
-        let inv = 1.0 / (var + eps).sqrt();
-        for j in 0..x.cols {
-            out.data[i * x.cols + j] = (row[j] - mean) * inv * g[j] + b[j];
-        }
+        layernorm_row_into(x.row(i), g, b, eps, out.row_mut(i));
     }
     out
+}
+
+/// Layer-norm of a single row — the KV-decode step form. Delegating both
+/// this and [`layernorm_rows`] to one worker keeps the step path
+/// bit-identical to the full traversal by construction.
+pub fn layernorm_row(row: &[f32], g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
+    assert_eq!(g.len(), row.len());
+    assert_eq!(b.len(), row.len());
+    let mut out = vec![0.0f32; row.len()];
+    layernorm_row_into(row, g, b, eps, &mut out);
+    out
+}
+
+fn layernorm_row_into(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+    let n = row.len();
+    let mean = row.iter().sum::<f32>() / n as f32;
+    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+    let inv = 1.0 / (var + eps).sqrt();
+    for j in 0..n {
+        out[j] = (row[j] - mean) * inv * g[j] + b[j];
+    }
 }
 
 /// ReLU in place.
@@ -457,6 +472,18 @@ mod tests {
             let v: f32 = y.row(i).iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 32.0;
             assert!(m.abs() < 1e-4);
             assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_row_matches_matrix_form() {
+        let mut rng = Pcg32::new(6, 0);
+        let x = randmat(&mut rng, 3, 16);
+        let g: Vec<f32> = rng.normal_vec(16);
+        let b: Vec<f32> = rng.normal_vec(16);
+        let full = layernorm_rows(&x, &g, &b, 1e-5);
+        for i in 0..3 {
+            assert_eq!(layernorm_row(x.row(i), &g, &b, 1e-5), full.row(i));
         }
     }
 

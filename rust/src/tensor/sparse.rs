@@ -372,6 +372,24 @@ pub fn matmul_tn_sparse_auto(xt: &Mat, w: &RowSparse) -> Mat {
     }
 }
 
+/// `x @ W^T` for a single activation row — the KV-decode step form of
+/// [`Mat::matmul_nt_sparse`]. `y[j] = Σ_p values[p] · x[col_idx[p]]` over
+/// row `j`'s active weights in ascending stored order: exactly the
+/// accumulation sequence [`tn_sparse_rows`] performs for a T=1 matrix, so
+/// the result is bit-identical to the matrix kernels (and to the masked
+/// dense product) without paying a transpose, a `Mat` allocation or the
+/// dispatch bookkeeping per decode step.
+pub fn matvec_nt_sparse(x: &[f32], w: &RowSparse) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols, "matvec_nt_sparse shape mismatch");
+    let mut out = vec![0.0f32; w.rows];
+    for (j, acc) in out.iter_mut().enumerate() {
+        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
+            *acc += w.values[p] * x[w.col_idx[p] as usize];
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -586,5 +604,39 @@ mod tests {
         for (a, b) in got.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn matvec_bit_identical_to_single_row_matmul() {
+        // the decode-step kernel must agree bit-for-bit with the matrix
+        // kernel it replaces, including over ragged masked layouts
+        let mut rng = Pcg32::new(21, 0);
+        for (d_in, d_out) in [(1, 1), (12, 6), (33, 17), (64, 5)] {
+            let x = randmat(&mut rng, 1, d_in);
+            let mut w = randmat(&mut rng, d_out, d_in);
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let rs = RowSparse::from_dense(&w);
+            let mm = x.matmul_nt_sparse(&rs);
+            let mv = matvec_nt_sparse(&x.data, &rs);
+            assert_eq!(mm.data, mv, "({d_in},{d_out})");
+        }
+    }
+
+    #[test]
+    fn matvec_zero_rows_and_empty_layout() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let empty = RowSparse::from_dense(&Mat::zeros(4, 3));
+        assert_eq!(matvec_nt_sparse(&x, &empty), vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn matvec_rejects_wrong_width() {
+        let rs = RowSparse::from_dense(&Mat::zeros(2, 5));
+        matvec_nt_sparse(&[1.0, 2.0], &rs);
     }
 }

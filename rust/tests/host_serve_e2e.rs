@@ -87,6 +87,8 @@ fn batched_host_serving_matches_direct_decode() {
             .expect("known id");
         let (prompt, rho, max_new) = &cases[idx];
         let prompt_ids = tok.encode(prompt, true);
+        // reference decodes without kv: the serve path's KV decode must
+        // reproduce the plain full-window semantics token-for-token
         let reference = decode_greedy(
             &model,
             &prompt_ids,
@@ -95,6 +97,7 @@ fn batched_host_serving_matches_direct_decode() {
                 plan: MaskPlan::PruneOnce,
                 max_new: *max_new,
                 stop_at_eos: false,
+                kv_cache: false,
             },
             None,
         );
@@ -120,6 +123,15 @@ fn batched_host_serving_matches_direct_decode() {
     let level_tokens: u64 = levels.iter().map(|(_, st)| st.tokens).sum();
     assert_eq!(level_tokens, total_tokens as u64);
     assert!(metrics.decode_tokens_per_sec() > 0.0);
+    // the prefill/step attribution flows engine → response → metrics;
+    // every request pays at least a selection pass (mu-opt-micro at
+    // these prompt lengths is far above timer resolution)
+    let level_prefill: u64 = levels.iter().map(|(_, st)| st.prefill_us).sum();
+    assert!(level_prefill > 0, "prefill time must be attributed per level");
+    let (prefill_total, step_total) = metrics.decode_time_split_us();
+    assert_eq!(prefill_total, level_prefill);
+    let level_step: u64 = levels.iter().map(|(_, st)| st.step_us).sum();
+    assert_eq!(step_total, level_step);
 }
 
 #[test]
