@@ -1,0 +1,293 @@
+//! Continuous batching vs drain-to-completion: the occupancy bench.
+//!
+//! The workload continuous batching exists for is **mixed `max_new`**: in
+//! drain mode a batch runs until its slowest lane finishes, so a lane
+//! whose request wanted 4 tokens idles while a 64-token batch-mate keeps
+//! stepping, and queued requests wait outside. The continuous pool admits
+//! the oldest queued same-ρ request into a lane the moment it frees.
+//!
+//! Both modes drive the same `decode::LanePool` (drain via
+//! `decode_batch`, continuous via direct sweeps with refills), so tokens
+//! are identical by construction — this bench measures the *scheduling*
+//! difference:
+//!
+//! * **tok/s** — total generated tokens over wall time for the whole
+//!   workload (the host steps lanes serially, so total compute is equal
+//!   and throughput should match within noise; the gate uses a 0.9×
+//!   floor exactly like `serve_throughput.rs`);
+//! * **mean lane occupancy** — active lanes / pool slots, summed over
+//!   sweeps. This is deterministic (no timers) and is where continuous
+//!   must win: the gate requires **strictly higher occupancy at every
+//!   mixed-`max_new` cell**.
+//!
+//! Cells: workload ∈ {uniform 4, uniform 16, uniform 64, mixed
+//! {4,16,64}} × ρ ∈ {0.3, 0.5, 0.7}, pool of 4 lanes, 12 requests
+//! cycling two prompt bases. Uniform cells are the control — both modes
+//! keep lanes full there, so occupancy ties and the mixed-cell advantage
+//! can't be an artifact of the driver. Emits
+//! `BENCH_serve_continuous.json`.
+//!
+//! `--smoke`: tiny model, one ρ, shortened mixed workload — CI runs this
+//! so the bench cannot bit-rot (gates informational only).
+
+use mumoe::decode::{decode_batch, BatchRequest, LaneEvent, LanePool};
+use mumoe::model::config_by_name;
+use mumoe::model::ModelConfig;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use mumoe::tensor::LayoutCache;
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+struct BenchShape {
+    model: Model,
+    model_name: String,
+    rhos: Vec<f64>,
+    /// (label, per-request max_new cycle) workloads.
+    workloads: Vec<(&'static str, Vec<usize>)>,
+    n_requests: usize,
+    lanes: usize,
+    reps: usize,
+    cache_cap: usize,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            model: random_model(&ModelConfig::new("smoke-tiny", 2, 2, 16), 7),
+            model_name: "smoke-tiny(2x2x16)".into(),
+            rhos: vec![0.5],
+            workloads: vec![("mixed", vec![1, 2, 4])],
+            n_requests: 6,
+            lanes: 2,
+            reps: 1,
+            cache_cap: 512,
+        }
+    } else {
+        let cfg = config_by_name("mu-opt-micro").expect("known model");
+        BenchShape {
+            model: random_model(&cfg, 7),
+            model_name: cfg.name.clone(),
+            rhos: vec![0.3, 0.5, 0.7],
+            workloads: vec![
+                ("uniform-4", vec![4]),
+                ("uniform-16", vec![16]),
+                ("uniform-64", vec![64]),
+                ("mixed", vec![4, 16, 64]),
+            ],
+            n_requests: 12,
+            lanes: 4,
+            reps: 3,
+            cache_cap: 4096,
+        }
+    }
+}
+
+/// The serving workload: request i cycles two prompt bases (the
+/// repeated-prefix case) and the workload's max_new cycle.
+fn requests(sh: &BenchShape, cycle: &[usize]) -> Vec<(Vec<i32>, usize)> {
+    (0..sh.n_requests)
+        .map(|i| {
+            let base = if i % 2 == 0 { 19 } else { 101 };
+            let prompt: Vec<i32> = (0..20).map(|j| (j * 53 + base) % 256).collect();
+            (prompt, cycle[i % cycle.len()])
+        })
+        .collect()
+}
+
+struct ModeRun {
+    tps: f64,
+    /// Mean lane occupancy: active-lane-steps / (sweeps × lanes).
+    occupancy: f64,
+    tokens: usize,
+}
+
+/// Drain mode: FIFO batches of `lanes` requests, each run to completion
+/// by `decode_batch` before the next starts (the pre-continuous serve
+/// loop). Occupancy per batch step is how many lanes still decode at
+/// that step — computable exactly from the max_new mix.
+fn run_drain(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> ModeRun {
+    let mut cache = LayoutCache::new(sh.cache_cap);
+    let mut tokens = 0usize;
+    let mut lane_steps = 0usize;
+    let mut lane_slots = 0usize;
+    let t0 = Instant::now();
+    for chunk in reqs.chunks(sh.lanes) {
+        let items: Vec<BatchRequest> = chunk
+            .iter()
+            .map(|(p, max_new)| BatchRequest {
+                prompt: p,
+                max_new: *max_new,
+                plan: MaskPlan::PruneOnce,
+            })
+            .collect();
+        let outs = decode_batch(&sh.model, &items, rho, false, true, Some(&mut cache));
+        tokens += outs.iter().map(|o| o.steps.len()).sum::<usize>();
+        // occupancy of this batch: at sweep s, lanes with max_new > s are
+        // active; the batch runs max(max_new) sweeps over `lanes` slots
+        let steps = chunk.iter().map(|(_, m)| *m).max().unwrap_or(0);
+        for s in 0..steps {
+            lane_steps += chunk.iter().filter(|(_, m)| *m > s).count();
+            lane_slots += sh.lanes;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    ModeRun {
+        tps: tokens as f64 / dt,
+        occupancy: lane_steps as f64 / lane_slots.max(1) as f64,
+        tokens,
+    }
+}
+
+/// Continuous mode: one persistent pool; every freed lane is refilled
+/// with the oldest queued request before the next sweep (exactly the
+/// serve loop's policy, minus channels).
+fn run_continuous(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> ModeRun {
+    let mut cache = LayoutCache::new(sh.cache_cap);
+    let mut queue: VecDeque<&(Vec<i32>, usize)> = reqs.iter().collect();
+    let mut pool = LanePool::new(sh.lanes);
+    let mut tokens = 0usize;
+    let mut lane_steps = 0usize;
+    let mut lane_slots = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < reqs.len() {
+        while pool.free_slot().is_some() {
+            let Some((prompt, max_new)) = queue.pop_front() else {
+                break;
+            };
+            pool.admit(&sh.model, prompt, *max_new, MaskPlan::PruneOnce, true);
+        }
+        lane_steps += pool.active();
+        lane_slots += sh.lanes;
+        let mut copt = Some(&mut cache);
+        for ev in pool.sweep(&sh.model, rho, false, &mut copt) {
+            if let LaneEvent::Done { output, .. } = ev {
+                tokens += output.steps.len();
+                done += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    ModeRun {
+        tps: tokens as f64 / dt,
+        occupancy: lane_steps as f64 / lane_slots.max(1) as f64,
+        tokens,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sh = shape(smoke);
+
+    let mut table = mumoe::benchlib::Table::new(
+        format!(
+            "Continuous batching vs drain-to-completion, {} requests over \
+             {} lanes, {} ({})",
+            sh.n_requests,
+            sh.lanes,
+            sh.model_name,
+            if smoke { "smoke" } else { "full" }
+        ),
+        &[
+            "workload",
+            "rho",
+            "cont tok/s",
+            "drain tok/s",
+            "speedup",
+            "cont occ",
+            "drain occ",
+        ],
+    );
+
+    let mut results = Vec::new();
+    let mut accept = true;
+    for (label, cycle) in &sh.workloads {
+        let mixed = cycle.len() > 1;
+        for &rho in &sh.rhos {
+            let reqs = requests(&sh, cycle);
+            // best-of-reps wall numbers; occupancy is deterministic
+            let mut cont = run_continuous(&sh, &reqs, rho);
+            let mut drain = run_drain(&sh, &reqs, rho);
+            for _ in 1..sh.reps {
+                let c = run_continuous(&sh, &reqs, rho);
+                if c.tps > cont.tps {
+                    cont = c;
+                }
+                let d = run_drain(&sh, &reqs, rho);
+                if d.tps > drain.tps {
+                    drain = d;
+                }
+            }
+            assert_eq!(cont.tokens, drain.tokens, "modes must decode the same work");
+            let speedup = cont.tps / drain.tps.max(1e-12);
+            table.row(vec![
+                (*label).into(),
+                format!("{rho:.1}"),
+                format!("{:.2}", cont.tps),
+                format!("{:.2}", drain.tps),
+                format!("{speedup:.2}x"),
+                format!("{:.3}", cont.occupancy),
+                format!("{:.3}", drain.occupancy),
+            ]);
+            // gates: continuous >= drain throughput (0.9x noise floor on
+            // the timed axis) and strictly higher occupancy wherever the
+            // max_new mix leaves drain lanes idle (deterministic axis)
+            if cont.tps < 0.9 * drain.tps {
+                accept = false;
+            }
+            if mixed && cont.occupancy <= drain.occupancy {
+                accept = false;
+            }
+            results.push(Json::Obj(HashMap::from([
+                ("workload".into(), Json::Str((*label).into())),
+                ("mixed_max_new".into(), Json::Bool(mixed)),
+                ("rho".into(), jnum(rho)),
+                ("continuous_tokens_per_sec".into(), jnum(cont.tps)),
+                ("drain_tokens_per_sec".into(), jnum(drain.tps)),
+                ("speedup".into(), jnum(speedup)),
+                ("continuous_lane_occupancy".into(), jnum(cont.occupancy)),
+                ("drain_lane_occupancy".into(), jnum(drain.occupancy)),
+                ("tokens".into(), jnum(cont.tokens as f64)),
+            ])));
+        }
+    }
+    table.print();
+
+    println!(
+        "\nACCEPTANCE: continuous >= drain tok/s (0.9x noise floor) and \
+         strictly higher lane occupancy at mixed max_new ({}).",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        // smoke exists to execute the code, not to gate on 1-rep timings
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), Json::Str("serve_continuous".into())),
+        ("model".into(), Json::Str(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("lanes".into(), jnum(sh.lanes as f64)),
+        ("n_requests".into(), jnum(sh.n_requests as f64)),
+        ("cells".into(), Json::Arr(results)),
+        (
+            "accept_continuous_throughput_and_occupancy".into(),
+            Json::Bool(accept),
+        ),
+    ]));
+    let path = "BENCH_serve_continuous.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    if !accept && !smoke {
+        std::process::exit(1);
+    }
+}

@@ -261,6 +261,22 @@ pub struct DecodeKnobs {
     /// (bit-identical outputs; `false` keeps the non-cached path
     /// selectable for A/B benching). CLI: `--kv` / `--no-kv`.
     pub kv_cache: bool,
+    /// Continuous batching (host engine): the serve loop holds a
+    /// persistent lane pool and admits the oldest queued same-ρ request
+    /// into a lane the moment it frees (EOS, `max_new` or cancellation),
+    /// instead of draining the whole batch first. `false` keeps the
+    /// drain-to-completion loop selectable for A/B benching
+    /// (`--continuous` / `--drain`). Token-identical either way —
+    /// scheduling can never change decoded output
+    /// (`proptest.rs::continuous_props`). The pjrt backend is
+    /// single-token, so every batch already frees all lanes per execute;
+    /// the knob is a no-op there.
+    pub continuous: bool,
+    /// Honour per-request `Request::stream` channels with one `StepEvent`
+    /// per generated token (live from the lane in continuous mode,
+    /// replayed post-execution on the drain path). `false` drops stream
+    /// senders at admission-pop time. CLI: `--stream` / `--no-stream`.
+    pub stream: bool,
 }
 
 impl Default for DecodeKnobs {
@@ -272,6 +288,8 @@ impl Default for DecodeKnobs {
             stop_at_eos: true,
             batch_size: 8,
             kv_cache: true,
+            continuous: true,
+            stream: true,
         }
     }
 }
@@ -360,6 +378,8 @@ impl ServeConfig {
                 stop_at_eos: t.bool_or("decode.stop_at_eos", d.decode.stop_at_eos),
                 batch_size: t.usize_or("decode.batch_size", d.decode.batch_size),
                 kv_cache: t.bool_or("decode.kv_cache", d.decode.kv_cache),
+                continuous: t.bool_or("decode.continuous", d.decode.continuous),
+                stream: t.bool_or("decode.stream", d.decode.stream),
             },
         };
         cfg.validate()?;
@@ -549,6 +569,16 @@ default_rho = 0.6
         assert_eq!(d.engine, EngineKind::Host);
         assert_eq!(d.decode.default_max_new, 1);
         assert!(d.decode.kv_cache, "KV decode is the default");
+        assert!(d.decode.continuous, "continuous batching is the default");
+        assert!(d.decode.stream, "streaming is honoured by default");
+    }
+
+    #[test]
+    fn continuous_and_stream_knobs_from_toml() {
+        let t = Toml::parse("[decode]\ncontinuous = false\nstream = false\n").unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert!(!c.decode.continuous, "drain-to-completion A/B baseline");
+        assert!(!c.decode.stream);
     }
 
     #[test]

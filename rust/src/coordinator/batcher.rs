@@ -119,6 +119,26 @@ impl DynamicBatcher {
         None
     }
 
+    /// Admission pop for continuous batching: the oldest queued request
+    /// at the given snapped level (`None` if that level's queue is empty
+    /// or `rho` is not a configured level). Two deliberate differences
+    /// from the batch pop:
+    ///
+    /// * **no window check** — a freed lane is capacity *right now*, so
+    ///   the oldest same-ρ request rides immediately instead of waiting
+    ///   for batch-mates;
+    /// * **the rotating cursor is untouched** — lane refills are pinned
+    ///   to the running pool's ρ, not a scheduling choice among levels.
+    ///   If refills spun the cursor, a hot level's admission traffic
+    ///   would hand it extra (or cost it owed) `pop_ready` turns and
+    ///   break the PR-3 fairness bound; the regression tests pin this.
+    pub fn pop_admission(&mut self, rho: f64) -> Option<Request> {
+        let idx = self.levels.iter().position(|&l| (l - rho).abs() < 1e-9)?;
+        let req = self.queues[idx].pop_front()?;
+        self.pending -= 1;
+        Some(req)
+    }
+
     /// Pop up to one batch_size worth of requests off level `idx`.
     fn take_batch(&mut self, idx: usize) -> DecodeBatch {
         let q = &mut self.queues[idx];
@@ -247,6 +267,46 @@ mod tests {
         assert_eq!(second.rho, 1.0, "waiting level must get the next turn");
         assert_eq!(second.requests[0].id, 100);
         assert_eq!(b.pop_ready(later).unwrap().rho, 0.4, "rotation wraps");
+    }
+
+    #[test]
+    fn admission_pop_is_fifo_and_window_free() {
+        let mut b = mk();
+        b.push(req(1, 0.4));
+        b.push(req(2, 0.4));
+        // no window has expired and the queue is not full, yet admission
+        // pops deliver immediately, oldest first
+        assert!(b.pop_ready(Instant::now()).is_none());
+        assert_eq!(b.pop_admission(0.4).unwrap().id, 1);
+        assert_eq!(b.pop_admission(0.4).unwrap().id, 2);
+        assert!(b.pop_admission(0.4).is_none(), "level drained");
+        assert!(b.pop_admission(0.73).is_none(), "unknown level");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn admission_pops_preserve_rotating_cursor_fairness() {
+        // Regression for the PR-3 starvation fix under continuous
+        // batching: a backlogged hot level whose lane refills go through
+        // pop_admission must not gain (or lose) batch-pop turns — the
+        // waiting level still wins the very next pop_ready after the hot
+        // level fires once, no matter how many admission pops interleave.
+        let mut b = mk();
+        for i in 0..12 {
+            b.push(req(i, 0.4)); // hot backlog
+        }
+        b.push(req(100, 1.0)); // one waiting request at another level
+        let later = Instant::now() + Duration::from_millis(30);
+        assert_eq!(b.pop_ready(later).unwrap().rho, 0.4, "cursor starts at 0.4");
+        // continuous serving refills freed 0.4 lanes straight off the queue
+        for _ in 0..3 {
+            assert_eq!(b.pop_admission(0.4).unwrap().rho, 0.4);
+        }
+        // ...but the rotation still owes 1.0 the next batch pop
+        let second = b.pop_ready(later).unwrap();
+        assert_eq!(second.rho, 1.0, "admission pops must not spin the cursor");
+        assert_eq!(second.requests[0].id, 100);
+        assert_eq!(b.pop_ready(later).unwrap().rho, 0.4, "rotation wraps back");
     }
 
     #[test]

@@ -190,22 +190,9 @@ impl Engine for HostEngine {
             .requests
             .iter()
             .zip(outs)
-            .map(|(req, out)| {
-                let last = out.steps.last();
-                Response {
-                    id: req.id,
-                    logits: last.map(|s| s.logits.clone()).unwrap_or_default(),
-                    next_token: out.steps.first().map_or(-1, |s| s.token),
-                    tokens: out.new_tokens().to_vec(),
-                    steps: out.steps.len(),
-                    latency_us: 0, // stamped by the serve loop
-                    batch_size: 0, // stamped by the serve loop
-                    prefill_us: out.prefill_us,
-                    step_us: out.step_us,
-                    rho_used: rho,
-                    rejected: None,
-                }
-            })
+            // latency/batch_size are stamped by the serve loop; the
+            // mapping itself is shared with the continuous path
+            .map(|(req, out)| Response::from_decode(req.id, rho, &out, None))
             .collect())
     }
 }

@@ -27,6 +27,26 @@ pub struct LevelStats {
     pub prefill_us: u64,
     /// Execution time in reused decode steps.
     pub step_us: u64,
+    /// Requests admitted into a *running* lane pool (continuous batching:
+    /// a freed lane was refilled mid-run instead of waiting for the pool
+    /// to drain). Seed admissions — lanes filled when the pool starts —
+    /// are not counted.
+    pub admitted_running: u64,
+    /// Lane-occupancy numerator: active lanes summed over sweeps.
+    pub lane_steps: u64,
+    /// Lane-occupancy denominator: pool capacity summed over sweeps.
+    pub lane_slots: u64,
+}
+
+impl LevelStats {
+    /// Mean fraction of lane-pool slots occupied per sweep (continuous
+    /// serving's occupancy measure; 0 before any sweep was recorded).
+    pub fn lane_occupancy(&self) -> f64 {
+        if self.lane_slots == 0 {
+            return 0.0;
+        }
+        self.lane_steps as f64 / self.lane_slots as f64
+    }
 }
 
 /// Shared metrics sink (all methods take &self; safe across threads).
@@ -35,6 +55,10 @@ pub struct Metrics {
     pub accepted: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests that ended in a client cancellation (lane freed mid-flight
+    /// or shed from the queue at admission-pop time). Disjoint from
+    /// `completed` and `rejected`.
+    pub cancelled: AtomicU64,
     pub batches: AtomicU64,
     pub batch_slots: AtomicU64,
     pub batch_occupied: AtomicU64,
@@ -60,6 +84,7 @@ impl Metrics {
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_slots: AtomicU64::new(0),
             batch_occupied: AtomicU64::new(0),
@@ -82,6 +107,39 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_cancel(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request admitted into a *running* lane pool at a snapped level
+    /// (continuous batching's refill path).
+    pub fn record_admitted_running(&self, rho: f64) {
+        let mut levels = self.levels.lock().expect("metrics level map poisoned");
+        levels.entry(rho_milli(rho)).or_default().admitted_running += 1;
+    }
+
+    /// One lane-pool sweep at a snapped level: `active` lanes stepped out
+    /// of `capacity` slots. The per-level ratio of the two sums is the
+    /// mean lane occupancy continuous batching exists to lift.
+    pub fn record_lane_sweep(&self, rho: f64, active: usize, capacity: usize) {
+        let mut levels = self.levels.lock().expect("metrics level map poisoned");
+        let e = levels.entry(rho_milli(rho)).or_default();
+        e.lane_steps += active as u64;
+        e.lane_slots += capacity as u64;
+    }
+
+    /// Aggregate mean lane occupancy across levels (0 before any sweep).
+    pub fn lane_occupancy(&self) -> f64 {
+        let levels = self.levels.lock().expect("metrics level map poisoned");
+        let (steps, slots) = levels
+            .values()
+            .fold((0u64, 0u64), |(a, b), s| (a + s.lane_steps, b + s.lane_slots));
+        if slots == 0 {
+            return 0.0;
+        }
+        steps as f64 / slots as f64
+    }
+
     pub fn record_queue_depth(&self, depth: usize) {
         self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
     }
@@ -93,14 +151,57 @@ impl Metrics {
         self.batch_slots.fetch_add(capacity as u64, Ordering::Relaxed);
     }
 
-    /// One executed decode batch at a snapped level: how many requests it
-    /// carried, how many tokens it generated, how long execution took and
-    /// how that time splits into prefill-class (selection + full-window
-    /// prefill/rebuild) vs per-step (reused incremental) work.
+    /// One executed decode batch at a snapped level (drain path): how
+    /// many requests it carried, how many tokens it generated, how long
+    /// execution took and how that time splits into prefill-class
+    /// (selection + full-window prefill/rebuild) vs per-step (reused
+    /// incremental) work.
     pub fn record_decode(
         &self,
         rho: f64,
         requests: usize,
+        tokens: u64,
+        elapsed_us: u64,
+        prefill_us: u64,
+        step_us: u64,
+    ) {
+        self.record_decode_parts(rho, 1, requests as u64, tokens, elapsed_us, prefill_us, step_us);
+    }
+
+    /// One lane-pool run starting at a snapped level (continuous path):
+    /// counts one batch globally and per level, with the *seed* occupancy
+    /// (how full the pool started; the per-sweep refill behaviour is what
+    /// [`Metrics::record_lane_sweep`] measures).
+    pub fn record_pool_run(&self, rho: f64, seeded: usize, capacity: usize) {
+        self.record_batch(seeded, capacity);
+        let mut levels = self.levels.lock().expect("metrics level map poisoned");
+        levels.entry(rho_milli(rho)).or_default().batches += 1;
+    }
+
+    /// One finished — or cancelled-mid-flight — lane of a continuous
+    /// pool: request/token/time accounting without a batch increment —
+    /// its pool run was already counted once by
+    /// [`Metrics::record_pool_run`], so `batches` keeps meaning
+    /// "scheduling units" in both serve modes. Cancelled lanes report the
+    /// steps they actually ran (that compute happened; capacity numbers
+    /// must see it).
+    pub fn record_lane_decode(
+        &self,
+        rho: f64,
+        tokens: u64,
+        elapsed_us: u64,
+        prefill_us: u64,
+        step_us: u64,
+    ) {
+        self.record_decode_parts(rho, 0, 1, tokens, elapsed_us, prefill_us, step_us);
+    }
+
+    #[allow(clippy::too_many_arguments)] // private accumulator behind the two public forms
+    fn record_decode_parts(
+        &self,
+        rho: f64,
+        batches: u64,
+        requests: u64,
         tokens: u64,
         elapsed_us: u64,
         prefill_us: u64,
@@ -112,8 +213,8 @@ impl Metrics {
         self.decode_step_us.fetch_add(step_us, Ordering::Relaxed);
         let mut levels = self.levels.lock().expect("metrics level map poisoned");
         let e = levels.entry(rho_milli(rho)).or_default();
-        e.batches += 1;
-        e.requests += requests as u64;
+        e.batches += batches;
+        e.requests += requests;
         e.tokens += tokens;
         e.prefill_us += prefill_us;
         e.step_us += step_us;
@@ -197,13 +298,16 @@ impl Metrics {
     /// One-line human summary (plus one line per active ρ level).
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "accepted={} rejected={} completed={} batches={} occupancy={:.2} \
-             mean_lat={:.0}us p50={}us p95={}us p99={}us decode_tok_s={:.1}",
+            "accepted={} rejected={} completed={} cancelled={} batches={} \
+             occupancy={:.2} lane_occ={:.2} mean_lat={:.0}us p50={}us \
+             p95={}us p99={}us decode_tok_s={:.1}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
+            self.lane_occupancy(),
             self.mean_latency_us(),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
@@ -215,8 +319,14 @@ impl Metrics {
         for (rho, st) in self.level_stats() {
             s.push_str(&format!(
                 "\n  level rho={rho:.2}: batches={} requests={} tokens={} \
-                 prefill_us={} step_us={}",
-                st.batches, st.requests, st.tokens, st.prefill_us, st.step_us
+                 prefill_us={} step_us={} admitted_running={} lane_occ={:.2}",
+                st.batches,
+                st.requests,
+                st.tokens,
+                st.prefill_us,
+                st.step_us,
+                st.admitted_running,
+                st.lane_occupancy(),
             ));
         }
         s
@@ -230,8 +340,10 @@ impl Metrics {
         m.insert("accepted".into(), g(&self.accepted));
         m.insert("rejected".into(), g(&self.rejected));
         m.insert("completed".into(), g(&self.completed));
+        m.insert("cancelled".into(), g(&self.cancelled));
         m.insert("batches".into(), g(&self.batches));
         m.insert("occupancy".into(), Json::Num(self.batch_occupancy()));
+        m.insert("lane_occupancy".into(), Json::Num(self.lane_occupancy()));
         m.insert("mean_latency_us".into(), Json::Num(self.mean_latency_us()));
         m.insert(
             "p50_us".into(),
@@ -258,6 +370,11 @@ impl Metrics {
                     ("tokens".into(), Json::Num(st.tokens as f64)),
                     ("prefill_us".into(), Json::Num(st.prefill_us as f64)),
                     ("step_us".into(), Json::Num(st.step_us as f64)),
+                    (
+                        "admitted_running".into(),
+                        Json::Num(st.admitted_running as f64),
+                    ),
+                    ("lane_occupancy".into(), Json::Num(st.lane_occupancy())),
                 ])),
             );
         }
@@ -336,6 +453,7 @@ mod tests {
                 tokens: 16,
                 prefill_us: 1_100,
                 step_us: 400,
+                ..Default::default()
             }
         );
         assert_eq!(levels[1].0, 1.0);
@@ -371,6 +489,49 @@ mod tests {
         assert_eq!(l.req("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(l.req("prefill_us").unwrap().as_f64(), Some(900.0));
         assert_eq!(l.req("step_us").unwrap().as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn lane_occupancy_and_continuous_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.lane_occupancy(), 0.0, "no sweeps yet");
+        // 4-slot pool: three sweeps at 4/4, 2/4, 2/4 active
+        m.record_lane_sweep(0.4, 4, 4);
+        m.record_lane_sweep(0.4, 2, 4);
+        m.record_lane_sweep(0.6, 2, 4);
+        m.record_admitted_running(0.4);
+        m.record_admitted_running(0.4);
+        m.record_cancel();
+        // one pool run seeded 3/4 full, finishing four lanes: batches
+        // counts scheduling units (1), not completed lanes (4)
+        m.record_pool_run(0.4, 3, 4);
+        for _ in 0..4 {
+            m.record_lane_decode(0.4, 2, 100, 80, 20);
+        }
+        assert!((m.lane_occupancy() - 8.0 / 12.0).abs() < 1e-9);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+        assert!((m.batch_occupancy() - 0.75).abs() < 1e-9, "seed occupancy");
+        let levels = m.level_stats();
+        assert_eq!(levels[0].0, 0.4);
+        assert_eq!(levels[0].1.admitted_running, 2);
+        assert_eq!(levels[0].1.batches, 1, "one pool run, not four lanes");
+        assert_eq!(levels[0].1.requests, 4);
+        assert_eq!(levels[0].1.tokens, 8);
+        assert_eq!(levels[0].1.prefill_us, 320);
+        assert_eq!(levels[0].1.step_us, 80);
+        assert!((levels[0].1.lane_occupancy() - 6.0 / 8.0).abs() < 1e-9);
+        assert_eq!(levels[1].1.admitted_running, 0);
+        let s = m.summary();
+        assert!(s.contains("cancelled=1"), "{s}");
+        assert!(s.contains("lane_occ="), "{s}");
+        assert!(s.contains("admitted_running=2"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.req("cancelled").unwrap().as_f64(), Some(1.0));
+        assert!((j.req("lane_occupancy").unwrap().as_f64().unwrap() - 8.0 / 12.0).abs() < 1e-9);
+        let l = j.req("levels").unwrap().req("0.40").unwrap();
+        assert_eq!(l.req("admitted_running").unwrap().as_f64(), Some(2.0));
+        assert!((l.req("lane_occupancy").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
     }
 
     #[test]

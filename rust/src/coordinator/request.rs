@@ -1,10 +1,51 @@
 //! Request/response types exchanged between clients and the coordinator.
 
 use crate::pruning::MaskPlan;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub type RequestId = u64;
+
+/// Cooperative cancellation handle for an in-flight request. The client
+/// keeps a clone and calls [`CancelToken::cancel`]; the continuous serve
+/// loop observes it **between decode sweeps**, frees the request's lane
+/// mid-flight and delivers a terminal [`Response::cancelled`]. Queued
+/// (not-yet-admitted) requests are shed at admission-pop time in both
+/// serve modes; the drain-to-completion path cannot observe a cancel once
+/// its batch is executing.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (sticky; observed between decode steps).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// One streamed decode step of a request, sent on `Request::stream` as
+/// the token is produced. A request's events concatenate — in `index`
+/// order, which is also delivery order — to exactly the terminal
+/// [`Response::tokens`] (EOS, if hit, ends the stream without an event;
+/// a cancelled request's events are the `tokens` of its terminal
+/// cancelled response).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepEvent {
+    pub id: RequestId,
+    /// 0-based position of this token within the generation.
+    pub index: usize,
+    pub token: i32,
+}
 
 /// A decode request (the serving unit of the paper's system: prompt in,
 /// pruned on the fly, greedy tokens out). `max_new = 1` degenerates to the
@@ -29,6 +70,14 @@ pub struct Request {
     pub enqueued_at: Instant,
     /// Where the response goes; `None` in tests that only exercise policy.
     pub reply: Option<Sender<Response>>,
+    /// Optional per-token streaming channel: the serve loop sends one
+    /// [`StepEvent`] per generated token (live from the lane in
+    /// continuous mode; replayed post-execution on the drain path), then
+    /// the terminal [`Response`] on `reply`. Honoured only when
+    /// `decode.stream` is on.
+    pub stream: Option<Sender<StepEvent>>,
+    /// Cancellation token; the client clones it before submitting.
+    pub cancel: CancelToken,
 }
 
 impl Request {
@@ -50,6 +99,8 @@ impl Request {
             domain: domain.into(),
             enqueued_at: Instant::now(),
             reply,
+            stream: None,
+            cancel: CancelToken::new(),
         }
     }
 
@@ -58,6 +109,12 @@ impl Request {
     pub fn with_decode(mut self, max_new: usize, plan: MaskPlan) -> Request {
         self.max_new = max_new;
         self.plan = plan;
+        self
+    }
+
+    /// Attach a per-token streaming channel.
+    pub fn with_stream(mut self, stream: Sender<StepEvent>) -> Request {
+        self.stream = Some(stream);
         self
     }
 }
@@ -82,7 +139,8 @@ pub struct Response {
     pub steps: usize,
     /// End-to-end latency.
     pub latency_us: u64,
-    /// Size of the batch this request rode in (occupancy telemetry).
+    /// Occupancy telemetry: the executed batch's size on the drain path,
+    /// or the lane-pool capacity under continuous batching.
     pub batch_size: usize,
     /// Execution time spent in full-window work for this request:
     /// selection passes + KV prefill/rebuild forwards (host engine;
@@ -97,6 +155,11 @@ pub struct Response {
     /// Set if the request was shed by admission control.
     pub rejected: Option<String>,
 }
+
+/// Terminal-state marker of a cancelled request (the `rejected` reason
+/// the serve loop uses, so clients can tell shed load from their own
+/// cancellations).
+pub const CANCELLED: &str = "cancelled";
 
 impl Response {
     pub fn rejected(id: RequestId, reason: impl Into<String>) -> Response {
@@ -115,8 +178,53 @@ impl Response {
         }
     }
 
+    /// The terminal response of a cancelled request: carries whatever was
+    /// decoded before the cancel was observed (matching any `StepEvent`s
+    /// already streamed), marked `rejected = "cancelled"`.
+    pub fn cancelled(id: RequestId, rho: f64, partial: &crate::decode::DecodeOutput) -> Response {
+        Response::from_decode(id, rho, partial, Some(CANCELLED.into()))
+    }
+
+    /// Terminal response for a request cancelled while still queued (no
+    /// lane ever ran, so there is no partial output).
+    pub fn cancelled_before_start(id: RequestId, rho: f64) -> Response {
+        Response {
+            rho_used: rho,
+            ..Response::rejected(id, CANCELLED)
+        }
+    }
+
+    /// Map one lane's [`crate::decode::DecodeOutput`] to the wire form —
+    /// shared by `HostEngine::execute` (drain) and the continuous serve
+    /// loop so the two paths cannot diverge in how a generation is
+    /// reported. `latency_us`/`batch_size` are stamped by the serve loop.
+    pub fn from_decode(
+        id: RequestId,
+        rho: f64,
+        out: &crate::decode::DecodeOutput,
+        rejected: Option<String>,
+    ) -> Response {
+        Response {
+            id,
+            logits: out.steps.last().map(|s| s.logits.clone()).unwrap_or_default(),
+            next_token: out.steps.first().map_or(-1, |s| s.token),
+            tokens: out.new_tokens().to_vec(),
+            steps: out.steps.len(),
+            latency_us: 0,
+            batch_size: 0,
+            prefill_us: out.prefill_us,
+            step_us: out.step_us,
+            rho_used: rho,
+            rejected,
+        }
+    }
+
     pub fn is_ok(&self) -> bool {
         self.rejected.is_none()
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.rejected.as_deref() == Some(CANCELLED)
     }
 }
 
@@ -157,8 +265,48 @@ mod tests {
         let r = Request::new(1, vec![1, 2], 2, 0.5, "d", None);
         assert_eq!(r.max_new, 1);
         assert_eq!(r.plan, MaskPlan::PruneOnce);
+        assert!(r.stream.is_none());
+        assert!(!r.cancel.is_cancelled());
         let r = r.with_decode(8, MaskPlan::Refresh(4));
         assert_eq!(r.max_new, 8);
         assert_eq!(r.plan, MaskPlan::Refresh(4));
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let r = r.with_stream(tx);
+        assert!(r.stream.is_some());
+    }
+
+    #[test]
+    fn cancel_token_is_sticky_and_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!clone.is_cancelled());
+        t.cancel();
+        assert!(clone.is_cancelled(), "clones observe the cancel");
+        assert!(t.is_cancelled(), "cancellation is sticky");
+    }
+
+    #[test]
+    fn cancelled_responses_are_terminal_and_carry_partials() {
+        let partial = crate::decode::DecodeOutput {
+            tokens: vec![1, 2, 3, 40, 41],
+            prompt_len: 3,
+            steps: Vec::new(),
+            refresh_count: 1,
+            prefill_us: 10,
+            step_us: 5,
+            cache_hits: 0,
+            cache_misses: 0,
+        };
+        let r = Response::cancelled(9, 0.6, &partial);
+        assert!(!r.is_ok());
+        assert!(r.is_cancelled());
+        assert_eq!(r.tokens, vec![40, 41], "partial tokens survive");
+        assert_eq!(r.rho_used, 0.6);
+        let q = Response::cancelled_before_start(3, 0.4);
+        assert!(q.is_cancelled());
+        assert!(q.tokens.is_empty());
+        assert_eq!(q.rho_used, 0.4);
+        // a plain shed is not a cancellation
+        assert!(!Response::rejected(1, "queue full").is_cancelled());
     }
 }

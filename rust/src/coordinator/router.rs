@@ -3,7 +3,7 @@
 //! hands requests to the batcher queue.
 
 use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response};
+use super::request::{Request, RequestId, Response, StepEvent};
 use crate::config::ServeConfig;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::moe::snap_rho;
@@ -75,7 +75,7 @@ impl Router {
         domain: &str,
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
-        self.admit_decode(prompt, rho, domain, 0, None, reply)
+        self.admit_decode(prompt, rho, domain, 0, None, None, reply)
     }
 
     /// Admission decision + request construction with explicit decode
@@ -83,7 +83,12 @@ impl Router {
     /// explicit value is validated against `decode.max_new_cap` and the
     /// configured engine's capability (the pjrt backend is single-token),
     /// so invalid decode work is shed here instead of failing a whole
-    /// batch at execution.
+    /// batch at execution. `stream` receives one `StepEvent` per
+    /// generated token (dropped here when `decode.stream` is off, so a
+    /// disabled knob is enforced at the front door); the returned
+    /// request's `cancel` token is the client's mid-flight cancellation
+    /// handle — clone it before submitting.
+    #[allow(clippy::too_many_arguments)] // the request's full client surface
     pub fn admit_decode(
         &self,
         prompt: &str,
@@ -91,6 +96,7 @@ impl Router {
         domain: &str,
         max_new: usize,
         plan: Option<crate::pruning::MaskPlan>,
+        stream: Option<Sender<StepEvent>>,
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -139,10 +145,14 @@ impl Router {
 
         self.metrics.record_accept();
         self.depth.fetch_add(1, Ordering::Relaxed);
-        Ok(
-            Request::new(id, tokens, valid_len, snapped, domain, reply)
-                .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan)),
-        )
+        let mut req = Request::new(id, tokens, valid_len, snapped, domain, reply)
+            .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan));
+        if self.cfg.decode.stream {
+            if let Some(stream) = stream {
+                req = req.with_stream(stream);
+            }
+        }
+        Ok(req)
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -242,14 +252,40 @@ mod tests {
         cfg.decode.max_new_cap = 8;
         let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
         let req = r
-            .admit_decode("hi", 0.5, "d", 4, Some(crate::pruning::MaskPlan::Refresh(2)), None)
+            .admit_decode("hi", 0.5, "d", 4, Some(crate::pruning::MaskPlan::Refresh(2)), None, None)
             .unwrap();
         assert_eq!(req.max_new, 4);
         assert_eq!(req.plan, crate::pruning::MaskPlan::Refresh(2));
         // above the cap: shed with a named reason
-        let rej = r.admit_decode("hi", 0.5, "d", 9, None, None).unwrap_err();
+        let rej = r.admit_decode("hi", 0.5, "d", 9, None, None, None).unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("exceeds cap"));
         assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stream_knob_gates_stream_attachment_at_admission() {
+        // stream on (the default): the sender rides the request
+        let r = router(10);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = r
+            .admit_decode("hi", 0.5, "d", 1, None, Some(tx), None)
+            .unwrap();
+        assert!(req.stream.is_some());
+        assert!(!req.cancel.is_cancelled(), "fresh token");
+        // stream off: the sender is dropped at the front door
+        let mut cfg = ServeConfig {
+            queue_cap: 10,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            default_rho: 0.6,
+            ..Default::default()
+        };
+        cfg.decode.stream = false;
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = r
+            .admit_decode("hi", 0.5, "d", 1, None, Some(tx), None)
+            .unwrap();
+        assert!(req.stream.is_none(), "disabled knob must drop the sender");
     }
 
     #[test]
@@ -262,8 +298,8 @@ mod tests {
         };
         let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
         // max_new = 1 is always fine
-        assert!(r.admit_decode("hi", 0.4, "d", 1, None, None).is_ok());
-        let rej = r.admit_decode("hi", 0.4, "d", 2, None, None).unwrap_err();
+        assert!(r.admit_decode("hi", 0.4, "d", 1, None, None, None).is_ok());
+        let rej = r.admit_decode("hi", 0.4, "d", 2, None, None, None).unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("single-token"));
     }
 

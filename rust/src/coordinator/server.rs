@@ -1,21 +1,39 @@
-//! The serve loop: a dedicated runtime thread generic over the
-//! [`Engine`](super::engine::Engine) backend, fed by an mpsc channel of
+//! The serve loop: a dedicated runtime thread fed by an mpsc channel of
 //! admitted requests. All backend state (the host model, or every PJRT
 //! object — client, registry, sessions) lives and dies on this thread:
 //! [`Engine::prepare`] runs here, never on the caller.
 //!
-//! Loop body: drain arrivals → batcher (ρ-keyed, rotating fairness) →
-//! fire ready batches → `engine.execute` → stamp latency, reply, metrics.
-//! The loop owns everything that is not compute: reply delivery, latency
-//! stamping, per-level decode metrics and queue-depth bookkeeping — so a
-//! backend is just `prepare` + `execute`.
+//! Two loop shapes share the launcher, the batcher and all delivery
+//! logic:
+//!
+//! * **Continuous batching** (`decode.continuous = true`, host engine) —
+//!   the loop holds a persistent [`LanePool`]: the moment a lane finishes
+//!   (EOS, `max_new`) or is cancelled mid-flight, the oldest queued
+//!   same-ρ request is admitted into the freed lane
+//!   ([`DynamicBatcher::pop_admission`]) while in-flight lanes keep
+//!   stepping — the occupancy fix for mixed-`max_new` traffic. Per-token
+//!   [`StepEvent`]s stream live from the lane.
+//! * **Drain-to-completion** (`continuous = false`, and always for the
+//!   single-token pjrt backend, where every batch frees all lanes per
+//!   execute anyway) — generic over [`Engine`]: fire ready batches,
+//!   `engine.execute`, deliver. Kept selectable for A/B benching
+//!   (`benches/serve_continuous.rs`); stream events are replayed
+//!   post-execution so client semantics match.
+//!
+//! Scheduling is never allowed to change tokens: both shapes decode
+//! through the same `Lane::step`, proven admission-order-invariant in
+//! `proptest.rs::continuous_props`. The loop owns everything that is not
+//! compute: reply/stream delivery, cancellation, latency stamping,
+//! per-level decode metrics and queue-depth bookkeeping.
 
 use super::batcher::{BatcherConfig, DecodeBatch, DynamicBatcher};
-use super::engine::{Engine, HostEngine, Prepared};
+use super::engine::{host_model, Engine, HostEngine, Prepared};
 use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response};
+use super::request::{CancelToken, Request, RequestId, Response, StepEvent};
 use super::router::Router;
 use crate::config::{EngineKind, ServeConfig};
+use crate::decode::{DecodeOutput, LaneEvent, LanePool};
+use crate::nn::Model;
 use crate::tensor::LayoutCache;
 use crate::util::error::Error;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -62,9 +80,15 @@ pub struct Server;
 impl Server {
     /// Spawn the serve loop for the engine `router.config().engine`
     /// selects, wired to the router's shared state (queue depth, metrics
-    /// and — for the host backend — the layout cache).
+    /// and — for the host backend — the layout cache). The host engine
+    /// runs the continuous-batching loop unless `decode.continuous` is
+    /// off; the single-token pjrt backend always drains (every execute
+    /// frees all its lanes, so there is nothing to refill mid-batch).
     pub fn start(router: &Router) -> Result<ServerHandle, Error> {
         match router.config().engine {
+            EngineKind::Host if router.config().decode.continuous => {
+                Self::start_continuous(router)
+            }
             EngineKind::Host => Self::start_engine::<HostEngine>(router),
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => Self::start_engine::<super::engine::PjrtEngine>(router),
@@ -76,10 +100,37 @@ impl Server {
         }
     }
 
-    /// Spawn the serve loop for a specific backend. Blocks until
-    /// [`Engine::prepare`] finishes on the serve thread (so callers fail
-    /// fast on a bad model/artifact), then returns the handle.
+    /// Spawn the drain-to-completion serve loop for a specific backend.
+    /// Blocks until [`Engine::prepare`] finishes on the serve thread (so
+    /// callers fail fast on a bad model/artifact), then returns the
+    /// handle.
     pub fn start_engine<E: Engine + 'static>(router: &Router) -> Result<ServerHandle, Error> {
+        Self::start_with(router, E::kind().label(), serve_thread::<E>)
+    }
+
+    /// Spawn the continuous-batching host serve loop: a persistent lane
+    /// pool with immediate same-ρ admission into freed lanes, live
+    /// per-token streaming and between-step cancellation.
+    pub fn start_continuous(router: &Router) -> Result<ServerHandle, Error> {
+        Self::start_with(router, "host-continuous", serve_thread_continuous)
+    }
+
+    /// Shared launcher: wire the router's state to a serve-thread body
+    /// and block on its ready signal.
+    fn start_with<F>(router: &Router, label: &str, thread: F) -> Result<ServerHandle, Error>
+    where
+        F: FnOnce(
+                ServeConfig,
+                Arc<Mutex<LayoutCache>>,
+                Receiver<Request>,
+                Sender<Result<usize, Error>>,
+                Arc<AtomicU64>,
+                Arc<Metrics>,
+                Arc<AtomicBool>,
+            ) -> Result<(), Error>
+            + Send
+            + 'static,
+    {
         let cfg = router.config().clone();
         let depth = router.depth_handle();
         let metrics = router.metrics().clone();
@@ -93,15 +144,12 @@ impl Server {
 
         let join = std::thread::Builder::new()
             .name("mumoe-serve".into())
-            .spawn(move || serve_thread::<E>(cfg, cache, rx, ready_tx, depth, metrics2, stop2))
+            .spawn(move || thread(cfg, cache, rx, ready_tx, depth, metrics2, stop2))
             .expect("spawn serve thread");
 
         match ready_rx.recv() {
             Ok(Ok(seq_len)) => {
-                crate::info!(
-                    "server ready (engine={}, seq_len={seq_len})",
-                    E::kind().label()
-                );
+                crate::info!("server ready (engine={label}, seq_len={seq_len})");
                 Ok(ServerHandle {
                     tx: Some(tx),
                     join: Some(join),
@@ -141,15 +189,33 @@ fn serve_thread<E: Engine>(
     let mut engine = prepared.engine;
     let batch_capacity = prepared.batch_capacity;
 
+    pump_batches(&cfg, batch_capacity, &rx, &stop, |_batcher, batch| {
+        run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
+    });
+    Ok(())
+}
+
+/// The outer event loop both serve-thread shapes share: drain arrivals
+/// into a ρ-keyed batcher on a deadline-aware timeout, hand every ready
+/// batch to `fire` (drain: `run_batch` to completion; continuous:
+/// `run_pool`, which keeps pulling from the batcher itself), honour the
+/// stop flag once the queues are empty, and flush whatever remains after
+/// the submit channel disconnects. One body, so the two modes can never
+/// diverge in queueing/shutdown behaviour.
+fn pump_batches(
+    cfg: &ServeConfig,
+    batch_size: usize,
+    rx: &Receiver<Request>,
+    stop: &AtomicBool,
+    mut fire: impl FnMut(&mut DynamicBatcher, DecodeBatch),
+) {
     let mut batcher = DynamicBatcher::new(
         BatcherConfig {
-            batch_size: batch_capacity,
+            batch_size,
             window: Duration::from_micros(cfg.batch_window_us),
         },
         &cfg.rho_levels,
     );
-
-    // --- event loop -----------------------------------------------------
     loop {
         let now = Instant::now();
         let timeout = batcher
@@ -166,9 +232,8 @@ fn serve_thread<E: Engine>(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
-        let now = Instant::now();
-        while let Some(batch) = batcher.pop_ready(now) {
-            run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
+        while let Some(batch) = batcher.pop_ready(Instant::now()) {
+            fire(&mut batcher, batch);
         }
         if stop.load(Ordering::SeqCst) && batcher.pending() == 0 {
             break;
@@ -176,16 +241,17 @@ fn serve_thread<E: Engine>(
     }
     // flush remaining work on shutdown
     for batch in batcher.drain() {
-        run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
+        fire(&mut batcher, batch);
     }
-    Ok(())
 }
 
 /// Run one batch through the engine and deliver responses. The engine
 /// returns pure compute results (tokens/logits/steps, in request order);
-/// this stamps latency + occupancy, updates the per-level decode metrics
-/// and sends each reply. An engine error — or a response-count mismatch,
-/// which would silently drop repliers — rejects the whole batch.
+/// this sheds requests cancelled while queued, stamps latency +
+/// occupancy, updates the per-level decode metrics, replays stream
+/// events (the drain path has no live lane to stream from) and sends
+/// each reply. An engine error — or a response-count mismatch, which
+/// would silently drop repliers — rejects the whole batch.
 fn run_batch<E: Engine>(
     engine: &mut E,
     mut batch: DecodeBatch,
@@ -193,17 +259,39 @@ fn run_batch<E: Engine>(
     depth: &AtomicU64,
     metrics: &Metrics,
 ) {
-    let n = batch.len();
     let rho = batch.rho;
+    depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+
+    // shed requests cancelled while they queued: the batch must not
+    // spend decode steps on clients that already hung up
+    let (live, gone): (Vec<Request>, Vec<Request>) = batch
+        .requests
+        .drain(..)
+        .partition(|r| !r.cancel.is_cancelled());
+    for r in gone {
+        metrics.record_cancel();
+        if let Some(reply) = r.reply {
+            let _ = reply.send(Response::cancelled_before_start(r.id, rho));
+        }
+    }
+    batch.requests = live;
+    if batch.is_empty() {
+        return;
+    }
+    let n = batch.len();
     metrics.record_batch(n, capacity);
-    depth.fetch_sub(n as u64, Ordering::Relaxed);
 
     // strip delivery state before the engine consumes the batch
-    type ReplySlot = (RequestId, Instant, Option<Sender<Response>>);
+    type ReplySlot = (
+        RequestId,
+        Instant,
+        Option<Sender<Response>>,
+        Option<Sender<StepEvent>>,
+    );
     let meta: Vec<ReplySlot> = batch
         .requests
         .iter_mut()
-        .map(|r| (r.id, r.enqueued_at, r.reply.take()))
+        .map(|r| (r.id, r.enqueued_at, r.reply.take(), r.stream.take()))
         .collect();
 
     let t0 = Instant::now();
@@ -229,11 +317,19 @@ fn run_batch<E: Engine>(
             let prefill_us: u64 = responses.iter().map(|r| r.prefill_us).sum();
             let step_us: u64 = responses.iter().map(|r| r.step_us).sum();
             metrics.record_decode(rho, n, tokens, elapsed_us, prefill_us, step_us);
-            for (mut resp, (id, enqueued_at, reply)) in responses.into_iter().zip(meta) {
+            for (mut resp, (id, enqueued_at, reply, stream)) in responses.into_iter().zip(meta) {
                 debug_assert_eq!(resp.id, id, "engine must keep request order");
                 resp.latency_us = enqueued_at.elapsed().as_micros() as u64;
                 resp.batch_size = n;
                 metrics.record_completion(resp.latency_us);
+                if let Some(stream) = stream {
+                    // drained batches finished before delivery: replay the
+                    // per-token events so streams concatenate to
+                    // Response::tokens exactly like the continuous loop's
+                    for (index, &token) in resp.tokens.iter().enumerate() {
+                        let _ = stream.send(StepEvent { id, index, token });
+                    }
+                }
                 if let Some(reply) = reply {
                     let _ = reply.send(resp);
                 }
@@ -241,13 +337,237 @@ fn run_batch<E: Engine>(
         }
         Err(e) => {
             crate::error!("batch execution failed: {e}");
-            for (id, _, reply) in meta {
+            for (id, _, reply, _) in meta {
                 metrics.record_reject();
                 if let Some(reply) = reply {
                     let _ = reply.send(Response::rejected(id, format!("exec: {e}")));
                 }
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous batching
+// ---------------------------------------------------------------------------
+
+/// The continuous-batching serve thread (host engine only): same startup
+/// contract as [`HostEngine::prepare`] — the model lives and dies here —
+/// and the same outer event loop as the generic thread, but a ready
+/// batch *seeds a persistent lane pool* instead of draining to
+/// completion: [`run_pool`] keeps refilling freed lanes from the same-ρ
+/// queue until both the pool and the queue are empty.
+fn serve_thread_continuous(
+    cfg: ServeConfig,
+    cache: Arc<Mutex<LayoutCache>>,
+    rx: Receiver<Request>,
+    ready_tx: Sender<Result<usize, Error>>,
+    depth: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<(), Error> {
+    let model = match host_model(&cfg) {
+        Ok(m) => {
+            let _ = ready_tx.send(Ok(m.cfg.max_seq_len));
+            m
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Err(Error::coordinator("startup failed"));
+        }
+    };
+
+    pump_batches(&cfg, cfg.decode.batch_size, &rx, &stop, |batcher, batch| {
+        let mut ctx = ContinuousCtx {
+            cfg: &cfg,
+            model: &model,
+            cache: &cache,
+            batcher,
+            rx: &rx,
+            depth: &depth,
+            metrics: &metrics,
+        };
+        run_pool(&mut ctx, batch);
+    });
+    Ok(())
+}
+
+/// Everything one lane pool run needs from the serve loop, bundled so the
+/// hot functions have one home for delivery + bookkeeping state.
+struct ContinuousCtx<'a> {
+    cfg: &'a ServeConfig,
+    model: &'a Model,
+    cache: &'a Mutex<LayoutCache>,
+    batcher: &'a mut DynamicBatcher,
+    rx: &'a Receiver<Request>,
+    depth: &'a AtomicU64,
+    metrics: &'a Metrics,
+}
+
+/// Delivery-side state of one occupied lane (the pool holds the compute
+/// state; the loop holds who to tell about it).
+struct LiveLane {
+    id: RequestId,
+    enqueued_at: Instant,
+    reply: Option<Sender<Response>>,
+    stream: Option<Sender<StepEvent>>,
+    cancel: CancelToken,
+}
+
+/// Drive one lane pool at one snapped ρ until it drains. Per sweep:
+///
+/// 1. **cancellation** — lanes whose token was cancelled are evicted
+///    (freed mid-flight) and their clients get a terminal
+///    [`Response::cancelled`] carrying the partial generation;
+/// 2. **admission** — arrivals are drained into the batcher, then every
+///    free lane is refilled with the oldest queued same-ρ request
+///    (fresh lane: selection + `KvCache` prefill on its first step;
+///    in-flight lanes untouched). Refills land *within one sweep* of the
+///    lane freeing;
+/// 3. **step** — one step-major [`LanePool::sweep`] through the shared
+///    layout cache; `Token` events stream live, `Done` lanes deliver.
+fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
+    let rho = seed.rho;
+    let capacity = ctx.cfg.decode.batch_size;
+    let mut pool = LanePool::new(capacity);
+    let mut live: Vec<Option<LiveLane>> = (0..capacity).map(|_| None).collect();
+    for req in seed.requests {
+        admit_lane(ctx, &mut pool, &mut live, req, rho, false);
+    }
+    // one scheduling unit: `batches`/`occupancy` count pool runs and how
+    // full they start; the refill behaviour shows up in lane occupancy
+    ctx.metrics.record_pool_run(rho, pool.active(), capacity);
+
+    while !pool.is_idle() {
+        // 1. cancellations are observed between sweeps
+        for slot in 0..capacity {
+            if live[slot].as_ref().is_some_and(|l| l.cancel.is_cancelled()) {
+                let partial = pool.evict(slot);
+                let lane = live[slot].take().expect("cancelled lane is live");
+                ctx.metrics.record_cancel();
+                // the steps that ran before the cancel are real compute:
+                // they must show up in decode tokens/time like any lane's,
+                // or cancellation-heavy traffic underreports capacity
+                ctx.metrics.record_lane_decode(
+                    rho,
+                    partial.steps.len() as u64,
+                    partial.prefill_us + partial.step_us,
+                    partial.prefill_us,
+                    partial.step_us,
+                );
+                let mut resp = Response::cancelled(lane.id, rho, &partial);
+                resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
+                resp.batch_size = capacity;
+                if let Some(reply) = lane.reply {
+                    let _ = reply.send(resp);
+                }
+            }
+        }
+        // 2. top freed lanes up from the same-ρ queue
+        while let Ok(more) = ctx.rx.try_recv() {
+            ctx.batcher.push(more);
+        }
+        while pool.free_slot().is_some() {
+            let Some(req) = ctx.batcher.pop_admission(rho) else {
+                break;
+            };
+            admit_lane(ctx, &mut pool, &mut live, req, rho, true);
+        }
+        if pool.is_idle() {
+            break;
+        }
+        // 3. one step-major sweep through the shared layout cache
+        ctx.metrics.record_lane_sweep(rho, pool.active(), capacity);
+        let events = {
+            let mut guard = ctx.cache.lock().expect("layout cache poisoned");
+            let mut copt = Some(&mut *guard);
+            pool.sweep(ctx.model, rho, ctx.cfg.decode.stop_at_eos, &mut copt)
+        };
+        for ev in events {
+            match ev {
+                LaneEvent::Token { slot, index, token } => {
+                    if let Some(lane) = live[slot].as_ref() {
+                        if let Some(stream) = &lane.stream {
+                            let _ = stream.send(StepEvent {
+                                id: lane.id,
+                                index,
+                                token,
+                            });
+                        }
+                    }
+                }
+                LaneEvent::Done { slot, output } => {
+                    let lane = live[slot].take().expect("done lane is live");
+                    finish_lane(ctx, lane, &output, rho, capacity);
+                }
+            }
+        }
+    }
+}
+
+/// Admit one popped request into a free lane (or shed it terminally if it
+/// was cancelled while queued — the lane stays free for the next pop).
+fn admit_lane(
+    ctx: &mut ContinuousCtx<'_>,
+    pool: &mut LanePool,
+    live: &mut [Option<LiveLane>],
+    mut req: Request,
+    rho: f64,
+    into_running: bool,
+) {
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    debug_assert!((req.rho - rho).abs() < 1e-9, "pool/request rho mismatch");
+    if req.cancel.is_cancelled() {
+        ctx.metrics.record_cancel();
+        if let Some(reply) = req.reply.take() {
+            let _ = reply.send(Response::cancelled_before_start(req.id, rho));
+        }
+        return;
+    }
+    let slot = pool.admit(
+        ctx.model,
+        &req.tokens[..req.valid_len],
+        req.max_new,
+        req.plan,
+        ctx.cfg.decode.kv_cache,
+    );
+    if into_running {
+        ctx.metrics.record_admitted_running(rho);
+    }
+    live[slot] = Some(LiveLane {
+        id: req.id,
+        enqueued_at: req.enqueued_at,
+        reply: req.reply.take(),
+        stream: req.stream.take(),
+        cancel: req.cancel.clone(),
+    });
+}
+
+/// Deliver one finished lane: latency + per-level decode metrics + reply.
+fn finish_lane(
+    ctx: &mut ContinuousCtx<'_>,
+    lane: LiveLane,
+    output: &DecodeOutput,
+    rho: f64,
+    capacity: usize,
+) {
+    // execution attribution is the lane's own prefill/step time — wall
+    // time is shared with pool-mates and would double-count
+    let exec_us = output.prefill_us + output.step_us;
+    ctx.metrics.record_lane_decode(
+        rho,
+        output.steps.len() as u64,
+        exec_us,
+        output.prefill_us,
+        output.step_us,
+    );
+    let mut resp = Response::from_decode(lane.id, rho, output, None);
+    resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
+    // occupancy telemetry: the lane-pool size this request rode in
+    resp.batch_size = capacity;
+    ctx.metrics.record_completion(resp.latency_us);
+    if let Some(reply) = lane.reply {
+        let _ = reply.send(resp);
     }
 }
 

@@ -48,18 +48,23 @@
 //! `benches/decode_reuse.rs`; per-step cost vs position (flat with the
 //! cache, growing without) by the same bench's `BENCH_kv_decode.json`.
 //!
-//! Two entry points share these semantics: [`decode_greedy`] (one
-//! request, the reference implementation) and [`decode_batch`] (the
-//! serving form: N requests at one snapped ρ through one shared layout
-//! cache, each lane owning its private `KvCache`, per-request
-//! bit-identical to `decode_greedy` — this is what
-//! `coordinator::engine::HostEngine` executes). Both run every lane's
-//! steps through one internal stepper ([`Lane::step`]), so the two can
-//! never drift apart.
+//! Three entry points share these semantics: [`decode_greedy`] (one
+//! request, the reference implementation), [`decode_batch`] (the
+//! drain-to-completion serving form: N requests at one snapped ρ through
+//! one shared layout cache, each lane owning its private `KvCache`,
+//! per-request bit-identical to `decode_greedy` — what
+//! `coordinator::engine::HostEngine` executes), and the [`LanePool`]
+//! both are built on (the continuous-batching form: the serve loop holds
+//! the pool across requests, admitting a queued request into a freed
+//! lane between sweeps and evicting cancelled lanes mid-flight). All of
+//! them run every lane's steps through one internal stepper
+//! ([`Lane::step`]), so none can drift apart — admission order and lane
+//! reuse are invisible in the decoded tokens
+//! (`proptest.rs::continuous_props`).
 
 use crate::coordinator::request::argmax;
 use crate::moe::{self, layouts_for};
-use crate::nn::{FixedLayouts, KvCache, Model};
+use crate::nn::{FixedLayouts, KvCache, Model, StepScratch};
 use crate::pruning::MaskPlan;
 use crate::tensor::LayoutCache;
 use std::time::Instant;
@@ -145,6 +150,9 @@ struct Lane {
     /// Per-layer K/V of the current window prefix (`None` ⇒ kv disabled:
     /// reused steps re-run the full window).
     kv: Option<KvCache>,
+    /// Reused per-step row buffers (allocated iff `kv` is — only the
+    /// incremental step path consumes them).
+    scratch: Option<StepScratch>,
     /// Window start of the previous step — a change means the window
     /// slid, so every cached position embedding (and thus K/V row) is
     /// stale and the cache must be rebuilt.
@@ -153,7 +161,6 @@ struct Lane {
     step_us: u64,
     cache_hits: u64,
     cache_misses: u64,
-    done: bool,
 }
 
 impl Lane {
@@ -166,13 +173,13 @@ impl Lane {
             refresh_count: 0,
             layouts: FixedLayouts::new(),
             kv: use_kv.then(|| KvCache::new(&model.cfg)),
+            scratch: use_kv.then(|| StepScratch::new(&model.cfg)),
             // "no previous window": the first step always prefills
             prev_start: usize::MAX,
             prefill_us: 0,
             step_us: 0,
             cache_hits: 0,
             cache_misses: 0,
-            done: false,
         }
     }
 
@@ -215,7 +222,11 @@ impl Lane {
                     (logits, true)
                 } else {
                     let newest = *window.last().expect("non-empty window");
-                    (model.forward_step(newest, &self.layouts, kv), false)
+                    let scratch = self.scratch.as_mut().expect("kv lanes carry scratch");
+                    (
+                        model.forward_step_with(newest, &self.layouts, kv, scratch),
+                        false,
+                    )
                 }
             }
             // kv disabled: every step is a full-window forward; refresh
@@ -305,6 +316,178 @@ pub struct BatchRequest<'a> {
     pub plan: MaskPlan,
 }
 
+/// A persistent pool of decode lanes — the unit of **continuous
+/// batching**. Where [`decode_batch`] admits a fixed set of requests and
+/// runs the pool until it drains, a caller holding a `LanePool` directly
+/// (the continuous serve loop, `generate --stream`) can [`admit`]
+/// requests into freed slots *between sweeps* while other lanes are
+/// mid-generation, and [`evict`] a lane mid-flight (cancellation).
+///
+/// Invariants that make admission-order invisible in the tokens:
+///
+/// * every lane owns all of its decode state (tokens, layouts, `KvCache`,
+///   scratch, per-lane step counter) — admitting a newcomer touches no
+///   in-flight lane;
+/// * the only shared state is the optional [`LayoutCache`], which is
+///   *transparent* (hit counters may rise, outputs cannot change —
+///   `proptest.rs::decode_props`);
+/// * every slot runs the same [`Lane::step`] as [`decode_greedy`], with a
+///   per-lane step index starting at 0 on admission, so a lane admitted
+///   into a running pool refreshes/prefills exactly like a fresh
+///   single-request decode.
+///
+/// Hence the pool contract, property-tested over random arrival schedules
+/// in `proptest.rs::continuous_props`: **for any admission order, lane
+/// count and sweep interleaving, each request's output is bit-identical
+/// to an independent `decode_greedy` call**. One pool runs one snapped ρ
+/// (the coordinator's batch key); the caller passes it to every
+/// [`sweep`].
+///
+/// [`admit`]: LanePool::admit
+/// [`evict`]: LanePool::evict
+/// [`sweep`]: LanePool::sweep
+pub struct LanePool {
+    slots: Vec<Option<PoolLane>>,
+}
+
+/// One occupied slot: the lane plus its per-request knobs and private
+/// step counter.
+struct PoolLane {
+    lane: Lane,
+    plan: MaskPlan,
+    max_new: usize,
+    /// Next step index *for this lane* (0 = its first decode step,
+    /// regardless of how long the pool has been running).
+    step: usize,
+}
+
+/// What one [`LanePool::sweep`] observed on one lane.
+#[derive(Clone, Debug)]
+pub enum LaneEvent {
+    /// One decode step ran on `slot` and `token` was appended. `index` is
+    /// the token's 0-based position in the generation: a request's
+    /// `Token` events concatenate, in order, to exactly the final
+    /// output's `new_tokens()`. An EOS-stopped step emits no `Token`
+    /// (EOS is never part of the output tokens) — its trace is still in
+    /// the final [`DecodeOutput::steps`].
+    Token {
+        slot: usize,
+        index: usize,
+        token: i32,
+    },
+    /// Lane `slot` finished (reached `max_new` or stopped at EOS) and its
+    /// slot is free for the next admission.
+    Done { slot: usize, output: DecodeOutput },
+}
+
+impl LanePool {
+    /// An empty pool with `capacity` lanes.
+    pub fn new(capacity: usize) -> LanePool {
+        assert!(capacity > 0, "a lane pool needs at least one lane");
+        LanePool {
+            slots: (0..capacity).map(|_| None).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Occupied lanes.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0
+    }
+
+    /// Lowest-index free slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Admit a request into the lowest free slot (fresh lane: its first
+    /// sweep step runs selection + a full `KvCache` prefill, exactly like
+    /// a fresh `decode_greedy` — in-flight lanes are untouched). Returns
+    /// the slot. Panics if the pool is full; callers gate on
+    /// [`LanePool::free_slot`].
+    pub fn admit(
+        &mut self,
+        model: &Model,
+        prompt: &[i32],
+        max_new: usize,
+        plan: MaskPlan,
+        use_kv: bool,
+    ) -> usize {
+        let slot = self.free_slot().expect("admit into a full lane pool");
+        self.slots[slot] = Some(PoolLane {
+            lane: Lane::new(model, prompt, lane_wants_kv(use_kv, max_new, plan)),
+            plan,
+            max_new,
+            step: 0,
+        });
+        slot
+    }
+
+    /// Remove a lane mid-flight (cancellation), freeing its slot and
+    /// returning the partial output (tokens decoded so far). Panics on an
+    /// empty slot — cancelling nothing is a caller bug.
+    pub fn evict(&mut self, slot: usize) -> DecodeOutput {
+        let pl = self.slots[slot].take().expect("evict from an empty lane");
+        pl.lane.into_output()
+    }
+
+    /// One step-major sweep: run one decode step on every active lane (in
+    /// slot order), emitting a [`LaneEvent::Token`] per appended token and
+    /// a [`LaneEvent::Done`] for each lane that finished — finished slots
+    /// are free for admission as soon as `sweep` returns. All lanes run
+    /// at one snapped `rho` (the pool's batch key) through one shared
+    /// `cache`.
+    pub fn sweep(
+        &mut self,
+        model: &Model,
+        rho: f64,
+        stop_at_eos: bool,
+        cache: &mut Option<&mut LayoutCache>,
+    ) -> Vec<LaneEvent> {
+        let mut events = Vec::new();
+        for slot in 0..self.slots.len() {
+            let Some(pl) = self.slots[slot].as_mut() else {
+                continue;
+            };
+            // zero-step lanes (max_new = 0) finish without ever stepping
+            if pl.step >= pl.max_new {
+                let pl = self.slots[slot].take().expect("occupied slot");
+                events.push(LaneEvent::Done {
+                    slot,
+                    output: pl.lane.into_output(),
+                });
+                continue;
+            }
+            let token = pl.lane.step(model, pl.step, rho, pl.plan, cache);
+            pl.step += 1;
+            let mut finished = pl.step >= pl.max_new;
+            if stop_at_eos && token == model.cfg.eos_id {
+                // EOS terminates the lane and is not appended: no Token
+                finished = true;
+            } else {
+                let index = pl.lane.tokens.len() - pl.lane.prompt_len;
+                pl.lane.tokens.push(token);
+                events.push(LaneEvent::Token { slot, index, token });
+            }
+            if finished {
+                let pl = self.slots[slot].take().expect("occupied slot");
+                events.push(LaneEvent::Done {
+                    slot,
+                    output: pl.lane.into_output(),
+                });
+            }
+        }
+        events
+    }
+}
+
 /// Batched greedy decode: every request shares one snapped ρ (the
 /// coordinator's batch key) and one [`LayoutCache`], so batch-mates whose
 /// refresh steps select the same micro-experts share one set of
@@ -312,10 +495,13 @@ pub struct BatchRequest<'a> {
 /// recompressing — while each lane owns a private [`KvCache`] (cached K/V
 /// rows encode one lane's window and are never shareable). Per request,
 /// the result is **bit-identical** to an independent [`decode_greedy`]
-/// call (`proptest.rs::decode_props` proves this): the loop is step-major
-/// across lanes, but both entry points drive the same [`Lane::step`], so
-/// the batching only changes *when* work happens and *how often* layouts
-/// are compressed, never what executes.
+/// call (`proptest.rs::decode_props` proves this).
+///
+/// This is the **drain-to-completion** form: it admits all of `items`
+/// into a [`LanePool`] up front and sweeps until every lane finishes
+/// (what `HostEngine::execute` runs per `DecodeBatch`, and the
+/// `continuous = false` A/B baseline of the continuous serve loop, which
+/// drives the same pool but refills freed lanes between sweeps).
 pub fn decode_batch(
     model: &Model,
     items: &[BatchRequest<'_>],
@@ -324,27 +510,24 @@ pub fn decode_batch(
     use_kv: bool,
     mut cache: Option<&mut LayoutCache>,
 ) -> Vec<DecodeOutput> {
-    let mut lanes: Vec<Lane> = items
-        .iter()
-        .map(|it| Lane::new(model, it.prompt, lane_wants_kv(use_kv, it.max_new, it.plan)))
-        .collect();
-
-    let max_steps = items.iter().map(|it| it.max_new).max().unwrap_or(0);
-    for step in 0..max_steps {
-        for (lane, item) in lanes.iter_mut().zip(items) {
-            if lane.done || step >= item.max_new {
-                continue;
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let mut pool = LanePool::new(items.len());
+    for it in items {
+        pool.admit(model, it.prompt, it.max_new, it.plan, use_kv);
+    }
+    let mut outs: Vec<Option<DecodeOutput>> = items.iter().map(|_| None).collect();
+    while !pool.is_idle() {
+        for ev in pool.sweep(model, rho, stop_at_eos, &mut cache) {
+            if let LaneEvent::Done { slot, output } = ev {
+                outs[slot] = Some(output);
             }
-            let token = lane.step(model, step, rho, item.plan, &mut cache);
-            if stop_at_eos && token == model.cfg.eos_id {
-                lane.done = true;
-                continue;
-            }
-            lane.tokens.push(token);
         }
     }
-
-    lanes.into_iter().map(Lane::into_output).collect()
+    outs.into_iter()
+        .map(|o| o.expect("every admitted lane finishes"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -657,5 +840,122 @@ mod tests {
         assert_eq!(outs[0].new_tokens().len(), 0);
         assert_eq!(outs[0].steps.len(), 0);
         assert_eq!(outs[0].refresh_count, 0);
+    }
+
+    // ---- LanePool (continuous batching) -----------------------------------
+
+    fn greedy_ref(m: &Model, prompt: &[i32], max_new: usize) -> DecodeOutput {
+        decode_greedy(m, prompt, &cfg_nokv(MaskPlan::PruneOnce, max_new), None)
+    }
+
+    #[test]
+    fn pool_admission_into_running_pool_matches_greedy() {
+        // B is admitted while A is mid-generation; both must still equal
+        // their independent decode_greedy outputs, and each lane's Token
+        // events must concatenate to exactly its new_tokens()
+        let m = tiny_model();
+        let mut cache = crate::tensor::LayoutCache::new(64);
+        let mut copt = Some(&mut cache);
+        let mut pool = LanePool::new(1);
+        let a_slot = pool.admit(&m, &[1, 2, 3], 3, MaskPlan::PruneOnce, true);
+        assert_eq!(a_slot, 0);
+        assert_eq!(pool.active(), 1);
+        assert!(pool.free_slot().is_none());
+
+        let mut outputs: Vec<(usize, DecodeOutput)> = Vec::new();
+        let mut streamed: std::collections::HashMap<usize, Vec<i32>> = Default::default();
+        let mut admitted_b = false;
+        let mut guard = 0;
+        while !pool.is_idle() || !admitted_b {
+            if !admitted_b && pool.free_slot().is_some() {
+                // the slot A finishes in is immediately reusable
+                let b_slot = pool.admit(&m, &[9, 8], 2, MaskPlan::PruneOnce, true);
+                assert_eq!(b_slot, 0, "freed lane must be reused");
+                admitted_b = true;
+            }
+            for ev in pool.sweep(&m, 0.5, false, &mut copt) {
+                match ev {
+                    LaneEvent::Token { slot, index, token } => {
+                        let toks = streamed.entry(slot).or_default();
+                        assert_eq!(index, toks.len(), "indices must be dense");
+                        toks.push(token);
+                    }
+                    LaneEvent::Done { slot, output } => outputs.push((slot, output)),
+                }
+            }
+            guard += 1;
+            assert!(guard < 20, "pool failed to drain");
+        }
+        assert_eq!(outputs.len(), 2);
+        let a = greedy_ref(&m, &[1, 2, 3], 3);
+        let b = greedy_ref(&m, &[9, 8], 2);
+        assert_outputs_identical("lane A", &outputs[0].1, &a);
+        assert_outputs_identical("lane B (admitted into running pool)", &outputs[1].1, &b);
+        // the streamed tokens ARE the outputs (both rode slot 0 in turn,
+        // so the stream interleaves; per Done-order they partition)
+        let all_streamed = &streamed[&0];
+        let concat: Vec<i32> = a
+            .new_tokens()
+            .iter()
+            .chain(b.new_tokens())
+            .copied()
+            .collect();
+        assert_eq!(*all_streamed, concat);
+    }
+
+    #[test]
+    fn pool_evict_frees_lane_and_returns_partial_output() {
+        let m = tiny_model();
+        let mut pool = LanePool::new(1);
+        pool.admit(&m, &[3, 1, 4], 6, MaskPlan::PruneOnce, true);
+        let mut none = None;
+        pool.sweep(&m, 0.5, false, &mut none);
+        pool.sweep(&m, 0.5, false, &mut none);
+        assert_eq!(pool.active(), 1, "6-step lane still mid-flight");
+        let partial = pool.evict(0);
+        assert_eq!(partial.steps.len(), 2, "two sweeps ran");
+        // the partial prefix is exactly the full decode's prefix
+        let full = greedy_ref(&m, &[3, 1, 4], 6);
+        assert_eq!(partial.tokens[..], full.tokens[..partial.tokens.len()]);
+        assert!(pool.is_idle(), "evict must free the lane");
+        // the freed slot admits a newcomer that decodes untouched
+        pool.admit(&m, &[9, 8], 2, MaskPlan::PruneOnce, true);
+        let mut outs = Vec::new();
+        while !pool.is_idle() {
+            for ev in pool.sweep(&m, 0.5, false, &mut none) {
+                if let LaneEvent::Done { output, .. } = ev {
+                    outs.push(output);
+                }
+            }
+        }
+        assert_outputs_identical("post-evict newcomer", &outs[0], &greedy_ref(&m, &[9, 8], 2));
+    }
+
+    #[test]
+    fn pool_zero_step_lane_finishes_without_stepping() {
+        let m = tiny_model();
+        let mut pool = LanePool::new(2);
+        pool.admit(&m, &[1, 2], 0, MaskPlan::PruneOnce, true);
+        let mut none = None;
+        let events = pool.sweep(&m, 0.5, false, &mut none);
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            LaneEvent::Done { slot, output } => {
+                assert_eq!(*slot, 0);
+                assert!(output.steps.is_empty());
+                assert_eq!(output.refresh_count, 0);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert!(pool.is_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "full lane pool")]
+    fn pool_admit_beyond_capacity_panics() {
+        let m = tiny_model();
+        let mut pool = LanePool::new(1);
+        pool.admit(&m, &[1], 2, MaskPlan::PruneOnce, true);
+        pool.admit(&m, &[2], 2, MaskPlan::PruneOnce, true);
     }
 }

@@ -102,14 +102,24 @@ const SERVE_SPEC: &[OptSpec] = &[
     opt("max-new", "new tokens per request (host engine)", "1"),
     flag("kv", "force the per-lane KV decode cache on (host engine)"),
     flag("no-kv", "full-window decode every step (A/B baseline)"),
+    flag("continuous", "force continuous batching on (host engine default)"),
+    flag(
+        "drain",
+        "drain each batch to completion before admitting the next \
+         (the pre-continuous A/B baseline)",
+    ),
+    flag("stream", "force per-token response streaming on (default)"),
+    flag("no-stream", "ignore per-request stream channels"),
     opt("config", "optional mumoe.toml to load first", ""),
 ];
 
-/// Resolve the `--kv` / `--no-kv` pair against a config default. Typing
-/// both is contradictory and rejected rather than silently picked.
-fn kv_override(a: &Args, default: bool) -> Result<bool, Error> {
-    match (a.flag("kv"), a.flag("no-kv")) {
-        (true, true) => Err(Error::config("--kv and --no-kv are mutually exclusive")),
+/// Resolve an on/off flag pair against a config default. Typing both is
+/// contradictory and rejected rather than silently picked.
+fn flag_pair(a: &Args, on: &str, off: &str, default: bool) -> Result<bool, Error> {
+    match (a.flag(on), a.flag(off)) {
+        (true, true) => Err(Error::config(format!(
+            "--{on} and --{off} are mutually exclusive"
+        ))),
         (true, false) => Ok(true),
         (false, true) => Ok(false),
         (false, false) => Ok(default),
@@ -155,7 +165,9 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
         cfg.decode.default_max_new = a.get_usize("max-new")?;
         cfg.decode.max_new_cap = cfg.decode.max_new_cap.max(cfg.decode.default_max_new);
     }
-    cfg.decode.kv_cache = kv_override(&a, cfg.decode.kv_cache)?;
+    cfg.decode.kv_cache = flag_pair(&a, "kv", "no-kv", cfg.decode.kv_cache)?;
+    cfg.decode.continuous = flag_pair(&a, "continuous", "drain", cfg.decode.continuous)?;
+    cfg.decode.stream = flag_pair(&a, "stream", "no-stream", cfg.decode.stream)?;
     cfg.validate()?;
 
     let report = mumoe::coordinator::server::replay_trace(
@@ -181,6 +193,11 @@ const GEN_SPEC: &[OptSpec] = &[
     opt("cache-cap", "layout cache capacity (entries, host engine)", "512"),
     flag("kv", "force the per-lane KV decode cache on (default)"),
     flag("no-kv", "full-window decode every step (A/B baseline)"),
+    flag(
+        "stream",
+        "print tokens as they decode (drives the continuous lane pool \
+         directly; token-identical to the batch path)",
+    ),
     flag(
         "device",
         "decode through the PJRT artifact session instead of the host \
@@ -213,7 +230,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     if cache_cap == 0 {
         return Err(Error::config("--cache-cap must be > 0"));
     }
-    let kv = kv_override(&a, mumoe::config::DecodeKnobs::default().kv_cache)?;
+    let kv = flag_pair(&a, "kv", "no-kv", mumoe::config::DecodeKnobs::default().kv_cache)?;
 
     use mumoe::coordinator::engine::{host_model, Engine, HostEngine};
     use mumoe::coordinator::request::Request;
@@ -229,41 +246,76 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     };
     let model = host_model(&serve_cfg)?;
     let cache = Arc::new(Mutex::new(LayoutCache::new(cache_cap)));
-    let mut engine = HostEngine::with_model(model, cache.clone(), true, kv);
 
     let tok = ByteTokenizer;
     let prompt_ids = tok.encode(a.req("prompt")?, true);
     let prompt_len = prompt_ids.len();
-    let request = Request::new(1, prompt_ids.clone(), prompt_len, rho, "cli", None)
-        .with_decode(n_new, plan);
     let t0 = std::time::Instant::now();
-    let responses = engine.execute(DecodeBatch {
-        rho,
-        requests: vec![request],
-    })?;
-    let dt = t0.elapsed().as_secs_f64();
-    let resp = &responses[0];
 
-    let mut text_ids = prompt_ids;
-    text_ids.extend_from_slice(&resp.tokens);
-    println!("{}", tok.decode(&text_ids));
+    let (tokens, steps, prefill_us, step_us) = if a.flag("stream") {
+        // stream mode: drive the continuous lane pool directly and print
+        // each token as its decode step finishes (token-identical to the
+        // batch path below — both run the same Lane::step)
+        use mumoe::decode::{LaneEvent, LanePool};
+        use std::io::Write;
+
+        print!("{}", tok.decode(&prompt_ids));
+        std::io::stdout().flush().ok();
+        let mut pool = LanePool::new(1);
+        pool.admit(&model, &prompt_ids, n_new, plan, kv);
+        let mut done = None;
+        while done.is_none() {
+            let mut guard = cache.lock().expect("cache lock");
+            let mut copt = Some(&mut *guard);
+            for ev in pool.sweep(&model, rho, true, &mut copt) {
+                match ev {
+                    LaneEvent::Token { token, .. } => {
+                        print!("{}", tok.decode(&[token]));
+                        std::io::stdout().flush().ok();
+                    }
+                    LaneEvent::Done { output, .. } => done = Some(output),
+                }
+            }
+        }
+        println!();
+        let out = done.expect("lane finished");
+        (
+            out.new_tokens().to_vec(),
+            out.steps.len(),
+            out.prefill_us,
+            out.step_us,
+        )
+    } else {
+        let mut engine = HostEngine::with_model(model, cache.clone(), true, kv);
+        let request = Request::new(1, prompt_ids.clone(), prompt_len, rho, "cli", None)
+            .with_decode(n_new, plan);
+        let responses = engine.execute(DecodeBatch {
+            rho,
+            requests: vec![request],
+        })?;
+        let resp = &responses[0];
+        let mut text_ids = prompt_ids.clone();
+        text_ids.extend_from_slice(&resp.tokens);
+        println!("{}", tok.decode(&text_ids));
+        (resp.tokens.clone(), resp.steps, resp.prefill_us, resp.step_us)
+    };
+    let dt = t0.elapsed().as_secs_f64();
+
     let (hits, misses) = {
         let c = cache.lock().expect("cache lock");
         (c.hits(), c.misses())
     };
     // tokens, not steps: an EOS-terminated generation runs one more step
     // than it emits tokens, and the count must match the printed text
-    let generated = resp.tokens.len();
+    let generated = tokens.len();
     println!(
         "\n[host engine: model={model_name} plan={} rho={rho} kv={}: {generated} new \
-         tokens in {dt:.2}s = {:.2} tok/s ({} decode steps, prefill {}us + steps \
-         {}us); layout cache {hits} hits / {misses} misses]",
+         tokens in {dt:.2}s = {:.2} tok/s ({steps} decode steps, prefill \
+         {prefill_us}us + steps {step_us}us); layout cache {hits} hits / \
+         {misses} misses]",
         plan.label(),
         if kv { "on" } else { "off" },
         generated as f64 / dt.max(1e-9),
-        resp.steps,
-        resp.prefill_us,
-        resp.step_us,
     );
     Ok(())
 }

@@ -26,8 +26,8 @@ use crate::model::checkpoint::Checkpoint;
 use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
 use crate::tensor::{
-    layernorm_row, layernorm_rows, log_softmax, matmul_tn_sparse_auto, matvec_nt_sparse, relu,
-    Mat, RowSparse,
+    layernorm_row_into, layernorm_rows, log_softmax, matmul_tn_sparse_auto,
+    matvec_nt_sparse_into, relu, Mat, RowSparse,
 };
 use crate::util::error::Error;
 pub use kv::KvCache;
@@ -57,6 +57,61 @@ pub enum PruneMode {
 /// Per-linear compressed layouts for a fixed-selection forward — what the
 /// decode engine reuses across steps (see [`Model::forward_fixed`]).
 pub type FixedLayouts = HashMap<String, Arc<RowSparse>>;
+
+/// Reusable per-lane row buffers for [`Model::forward_step_with`].
+///
+/// A decode step's intermediates are a handful of `d_model`/`d_inner`-
+/// sized rows; allocating them fresh every step (the PR-4 shape) made the
+/// steady-state step path pay ~10 heap allocations per token. One
+/// `StepScratch` per decode lane — owned alongside the lane's [`KvCache`]
+/// and reused the same way — makes the step allocation-free except for
+/// the returned logits row. Every buffer is fully overwritten before it
+/// is read, so reuse is bit-identical to allocation (property-tested in
+/// `proptest.rs::kv_props`, including across refresh rebuilds).
+pub struct StepScratch {
+    /// Residual stream row (`d_model`).
+    h: Vec<f32>,
+    /// Post-layernorm activations row (`d_model`).
+    norm: Vec<f32>,
+    /// Attention projections (`d_model` each).
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention output row (`d_model`).
+    attn: Vec<f32>,
+    /// o / fc2 projection output row (`d_model`).
+    proj: Vec<f32>,
+    /// FFN inner row (`d_inner`).
+    inner: Vec<f32>,
+    /// Attention score scratch (`max_seq_len`; the step uses `pos + 1`).
+    attn_logits: Vec<f32>,
+    /// Width this scratch was sized for (shape check against the model).
+    d_model: usize,
+}
+
+impl StepScratch {
+    /// Preallocate every step buffer for `cfg`'s widths.
+    pub fn new(cfg: &ModelConfig) -> StepScratch {
+        let (d, di) = (cfg.d_model, cfg.d_inner());
+        StepScratch {
+            h: Vec::with_capacity(d),
+            norm: vec![0.0; d],
+            q: Vec::with_capacity(d),
+            k: Vec::with_capacity(d),
+            v: Vec::with_capacity(d),
+            attn: vec![0.0; d],
+            proj: Vec::with_capacity(d),
+            inner: Vec::with_capacity(di),
+            attn_logits: vec![0.0; cfg.max_seq_len],
+            d_model: d,
+        }
+    }
+
+    /// Does this scratch match `cfg`'s widths?
+    pub fn fits(&self, cfg: &ModelConfig) -> bool {
+        self.d_model == cfg.d_model && self.attn_logits.len() >= cfg.max_seq_len
+    }
+}
 
 /// Internal execution mode of the single traversal: how each prunable
 /// linear runs. `PruneMode` is the stable public surface; `Exec` adds the
@@ -358,17 +413,39 @@ impl Model {
     /// [`Model::forward_prefill_last`] and prior steps) and appending the
     /// new position's rows. Returns the next-token logits row.
     ///
-    /// Bit-identical to `forward_fixed_last` over the grown window: every
-    /// per-row operation (embedding add, layernorm, the
-    /// [`crate::tensor::matvec_nt_sparse`] linears, the causal attention
-    /// row, residual adds, the last-row LM head) accumulates in exactly
-    /// the order the full traversal uses for its last row, and cached K/V
-    /// rows are exactly what the full traversal would recompute for the
-    /// unchanged prefix (`proptest.rs::kv_props` proves the composition).
+    /// Allocating convenience form of [`Model::forward_step_with`]: builds
+    /// a fresh [`StepScratch`] per call. Decode lanes hold one scratch and
+    /// call `forward_step_with` instead, making the steady-state step path
+    /// allocation-free apart from the returned logits row.
+    pub fn forward_step(&self, token: i32, layouts: &FixedLayouts, kv: &mut KvCache) -> Vec<f32> {
+        let mut scratch = StepScratch::new(&self.cfg);
+        self.forward_step_with(token, layouts, kv, &mut scratch)
+    }
+
+    /// [`Model::forward_step`] through a caller-owned [`StepScratch`]:
+    /// every per-layer row vector (post-LN activations, q/k/v, attention
+    /// output, projections, the FFN inner row, attention score scratch)
+    /// lives in reused buffers instead of fresh heap allocations — the
+    /// same buffer-reuse discipline [`KvCache`] applies to K/V rows.
+    ///
+    /// Bit-identical both to `forward_fixed_last` over the grown window
+    /// (every per-row operation — embedding add, layernorm, the
+    /// [`crate::tensor::matvec_nt_sparse_into`] linears, the causal
+    /// attention row, residual adds, the last-row LM head — accumulates in
+    /// exactly the order the full traversal uses for its last row) and to
+    /// a fresh scratch per step (every buffer is fully overwritten before
+    /// it is read; `proptest.rs::kv_props` proves both compositions,
+    /// including across a refresh rebuild).
     ///
     /// Cost: O(T) attention + O(nnz) linears per step, vs the full
     /// window's O(T²) + O(T·nnz).
-    pub fn forward_step(&self, token: i32, layouts: &FixedLayouts, kv: &mut KvCache) -> Vec<f32> {
+    pub fn forward_step_with(
+        &self,
+        token: i32,
+        layouts: &FixedLayouts,
+        kv: &mut KvCache,
+        s: &mut StepScratch,
+    ) -> Vec<f32> {
         let cfg = &self.cfg;
         let pos = kv.len();
         assert!(pos >= 1, "forward_step needs a prefilled cache");
@@ -377,80 +454,115 @@ impl Model {
             "cache full: the window must slide — rebuild via forward_prefill_last"
         );
         assert!(kv.fits(cfg), "KvCache shape does not match model");
+        assert!(s.fits(cfg), "StepScratch shape does not match model");
 
         // embed the one new token at its window-relative position
         let tok_row = self.mats["tok_emb"].row(token.clamp(0, cfg.vocab_size as i32 - 1) as usize);
         let pos_row = self.mats["pos_emb"].row(pos);
-        let mut h: Vec<f32> = tok_row.iter().zip(pos_row).map(|(a, b)| a + b).collect();
+        s.h.clear();
+        s.h.extend(tok_row.iter().zip(pos_row).map(|(a, b)| a + b));
 
         for (li, names) in self.layer_names.iter().enumerate() {
-            let y = layernorm_row(&h, &self.vecs[&names.ln1_g], &self.vecs[&names.ln1_b], 1e-5);
-            let q = self.linear_row(&y, &names.q, layouts);
-            let k = self.linear_row(&y, &names.k, layouts);
-            let v = self.linear_row(&y, &names.v, layouts);
+            layernorm_row_into(
+                &s.h,
+                &self.vecs[&names.ln1_g],
+                &self.vecs[&names.ln1_b],
+                1e-5,
+                &mut s.norm,
+            );
+            self.linear_row_into(&s.norm, &names.q, layouts, &mut s.q);
+            self.linear_row_into(&s.norm, &names.k, layouts, &mut s.k);
+            self.linear_row_into(&s.norm, &names.v, layouts, &mut s.v);
             // the new row joins the cache first so attention sees
             // positions 0..=pos, exactly the full pass's causal row
-            kv.write_row(li, pos, &k, &v);
-            let attn = self.attention_row(kv, li, pos, &q);
-            let o = self.linear_row(&attn, &names.o, layouts);
-            for (a, b) in h.iter_mut().zip(&o) {
+            kv.write_row(li, pos, &s.k, &s.v);
+            self.attention_row_into(kv, li, pos, &s.q, &mut s.attn, &mut s.attn_logits);
+            self.linear_row_into(&s.attn, &names.o, layouts, &mut s.proj);
+            for (a, b) in s.h.iter_mut().zip(&s.proj) {
                 *a += b;
             }
 
-            let y = layernorm_row(&h, &self.vecs[&names.ln2_g], &self.vecs[&names.ln2_b], 1e-5);
-            let mut z = self.linear_row(&y, &names.fc1, layouts);
-            for x in &mut z {
+            layernorm_row_into(
+                &s.h,
+                &self.vecs[&names.ln2_g],
+                &self.vecs[&names.ln2_b],
+                1e-5,
+                &mut s.norm,
+            );
+            self.linear_row_into(&s.norm, &names.fc1, layouts, &mut s.inner);
+            for x in &mut s.inner {
                 if *x < 0.0 {
                     *x = 0.0;
                 }
             }
-            let out = self.linear_row(&z, &names.fc2, layouts);
-            for (a, b) in h.iter_mut().zip(&out) {
+            self.linear_row_into(&s.inner, &names.fc2, layouts, &mut s.proj);
+            for (a, b) in s.h.iter_mut().zip(&s.proj) {
                 *a += b;
             }
         }
         kv.set_len(pos + 1);
 
-        let hidden = layernorm_row(&h, &self.vecs["ln_f.g"], &self.vecs["ln_f.b"], 1e-5);
-        // same last-row tied head as forward_fixed_last
-        let last = Mat::from_vec(1, cfg.d_model, hidden);
+        layernorm_row_into(
+            &s.h,
+            &self.vecs["ln_f.g"],
+            &self.vecs["ln_f.b"],
+            1e-5,
+            &mut s.norm,
+        );
+        // same last-row tied head as forward_fixed_last (the logits row is
+        // the step's *product* and escapes the scratch, so it allocates)
+        let last = Mat::from_vec(1, cfg.d_model, s.norm.clone());
         last.matmul_nt_auto(&self.mats["tok_emb"]).data
     }
 
     /// One linear on a single activation row under fixed layouts — the
     /// decode-step mirror of `linear_with_t` (same `Exec::Fixed` lookup,
-    /// same missing-layout panic, bias added in the same element order).
-    fn linear_row(&self, x: &[f32], names: &LinearNames, layouts: &FixedLayouts) -> Vec<f32> {
+    /// same missing-layout panic, bias added in the same element order),
+    /// writing into a scratch buffer the matvec fully overwrites.
+    fn linear_row_into(
+        &self,
+        x: &[f32],
+        names: &LinearNames,
+        layouts: &FixedLayouts,
+        out: &mut Vec<f32>,
+    ) {
         let rs = layouts
             .get(&names.w)
             .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
-        let mut y = matvec_nt_sparse(x, rs);
-        for (a, b) in y.iter_mut().zip(&self.vecs[&names.b]) {
+        matvec_nt_sparse_into(x, rs, out);
+        for (a, b) in out.iter_mut().zip(&self.vecs[&names.b]) {
             *a += b;
         }
-        y
     }
 
     /// The causal attention row for the newest position, reading K/V from
     /// the cache: the same [`attention_head_pos`] worker the full
     /// traversal runs, called at `i = pos` over a fully-valid window
     /// (decode windows are unpadded, so the padding mask can never
-    /// trigger) — bit-identical outputs by construction.
-    fn attention_row(&self, kv: &KvCache, layer: usize, pos: usize, q: &[f32]) -> Vec<f32> {
+    /// trigger) — bit-identical outputs by construction. `out` is zeroed
+    /// before the heads accumulate (the allocating form started from a
+    /// fresh zero vector); `logits` is overwritten score scratch.
+    fn attention_row_into(
+        &self,
+        kv: &KvCache,
+        layer: usize,
+        pos: usize,
+        q: &[f32],
+        out: &mut [f32],
+        logits: &mut [f32],
+    ) {
         let cfg = &self.cfg;
-        let (d, nh, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
         let scale = 1.0 / (hd as f32).sqrt();
         let t = pos + 1;
         let (kmat, vmat) = kv.layer(layer);
-        let mut out = vec![0.0f32; d];
-        let mut logits = vec![0.0f32; t];
+        out.fill(0.0);
         for h in 0..nh {
             let off = h * hd;
             let qi = &q[off..off + hd];
             let orow = &mut out[off..off + hd];
-            attention_head_pos(qi, kmat, vmat, off, pos, t, scale, &mut logits, orow);
+            attention_head_pos(qi, kmat, vmat, off, pos, t, scale, &mut logits[..t], orow);
         }
-        out
     }
 
     /// The worker behind every public forward: one traversal, any exec
@@ -950,6 +1062,40 @@ mod tests {
             assert_eq!(stepped, full, "position {n}");
             assert_eq!(kv.len(), n);
         }
+    }
+
+    #[test]
+    fn reused_scratch_bit_identical_to_allocating_step() {
+        // forward_step (fresh scratch per call) and forward_step_with over
+        // one reused scratch must agree logit-for-logit on every step —
+        // stale buffer contents can never leak into a step's output
+        let m = random_model(&tiny(), 21);
+        let toks: Vec<i32> = vec![7, 3, 11, 5, 13, 2];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv_a = KvCache::new(&m.cfg);
+        let mut kv_b = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks[..2], 2, &layouts, &mut kv_a);
+        m.forward_prefill_last(&toks[..2], 2, &layouts, &mut kv_b);
+        let mut scratch = StepScratch::new(&m.cfg);
+        for &t in &toks[2..] {
+            let fresh = m.forward_step(t, &layouts, &mut kv_a);
+            let reused = m.forward_step_with(t, &layouts, &mut kv_b, &mut scratch);
+            assert_eq!(fresh, reused);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "StepScratch shape")]
+    fn mismatched_scratch_rejected() {
+        let m = random_model(&tiny(), 22);
+        let toks: Vec<i32> = vec![1, 2, 3];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks, 3, &layouts, &mut kv);
+        let mut wide = ModelConfig::new("wider", 2, 2, 32);
+        wide.max_seq_len = m.cfg.max_seq_len;
+        let mut scratch = StepScratch::new(&wide);
+        m.forward_step_with(9, &layouts, &mut kv, &mut scratch);
     }
 
     #[test]

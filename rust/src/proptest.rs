@@ -574,6 +574,53 @@ mod kv_props {
         )
     }
 
+    /// Satellite contract of the scratch struct: `forward_step_with` over
+    /// ONE reused `StepScratch` must equal the allocating `forward_step`
+    /// (a fresh scratch per call) logit-for-logit across consecutive
+    /// steps, **and keep matching after a refresh rebuild** — new layouts
+    /// plus a fresh prefill must not let any stale buffer content leak
+    /// into later steps.
+    fn prop_scratch_reuse_bit_identical(input: &(u64, f64)) -> PropResult {
+        use crate::nn::StepScratch;
+        let (model, prompt, rho, _plan, _max_new) = case(input.0, input.1);
+        let seq = model.cfg.max_seq_len;
+        let mut tokens = prompt;
+        tokens.truncate(seq - 1);
+        let sel = moe::select_experts(&model, &tokens, tokens.len(), rho);
+        let layouts = moe::layouts_for(&model, &sel, None);
+
+        let mut kv_fresh = KvCache::new(&model.cfg);
+        let mut kv_reuse = KvCache::new(&model.cfg);
+        model.forward_prefill_last(&tokens, tokens.len(), &layouts, &mut kv_fresh);
+        model.forward_prefill_last(&tokens, tokens.len(), &layouts, &mut kv_reuse);
+        let mut scratch = StepScratch::new(&model.cfg);
+        let mut rng = Pcg32::new(input.0 ^ 0x7A7A, 9);
+        while tokens.len() < seq {
+            let next = rng.gen_range(256) as i32;
+            tokens.push(next);
+            let fresh = model.forward_step(next, &layouts, &mut kv_fresh);
+            let reused = model.forward_step_with(next, &layouts, &mut kv_reuse, &mut scratch);
+            ensure(
+                fresh == reused,
+                format!("scratch reuse diverged at window length {}", tokens.len()),
+            )?;
+        }
+        // refresh rebuild: re-select on the grown window (different
+        // layouts), prefill both caches again, keep stepping with the
+        // SAME scratch — it must still match the allocating path
+        let sel2 = moe::select_experts(&model, &tokens[1..], seq - 1, rho);
+        let layouts2 = moe::layouts_for(&model, &sel2, None);
+        model.forward_prefill_last(&tokens[1..], seq - 1, &layouts2, &mut kv_fresh);
+        model.forward_prefill_last(&tokens[1..], seq - 1, &layouts2, &mut kv_reuse);
+        let next = rng.gen_range(256) as i32;
+        let fresh = model.forward_step(next, &layouts2, &mut kv_fresh);
+        let reused = model.forward_step_with(next, &layouts2, &mut kv_reuse, &mut scratch);
+        ensure(
+            fresh == reused,
+            "scratch reuse diverged after a refresh rebuild",
+        )
+    }
+
     /// Unit-level form of the same contract: `forward_step` equals
     /// `forward_fixed_last` at every position from one prefill up to a
     /// full window, and the forced rebuild after a slide repopulates the
@@ -629,6 +676,211 @@ mod kv_props {
     #[test]
     fn forward_step_equivalent_to_forward_fixed_last() {
         check(302, 10, gen_seed_rho, prop_forward_step_matches_fixed_last);
+    }
+
+    #[test]
+    fn scratch_reuse_equivalent_to_allocating_step_path() {
+        check(303, 10, gen_seed_rho, prop_scratch_reuse_bit_identical);
+    }
+}
+
+/// Properties of continuous batching (`decode::LanePool` — what the
+/// continuous serve loop drives): for ANY arrival schedule, lane count,
+/// ρ, `MaskPlan` and `max_new` mix, admitting requests into freed lanes
+/// of a running pool produces, per request, tokens and logits
+/// bit-identical to N independent `decode_greedy` calls. Scheduling is a
+/// throughput lever only — admission order and lane reuse can never leak
+/// into decoded output; the shared layout cache may only gain hits.
+#[cfg(test)]
+mod continuous_props {
+    use super::{check, ensure, PropResult};
+    use crate::decode::{decode_greedy, DecodeConfig, DecodeOutput, LaneEvent, LanePool};
+    use crate::model::ModelConfig;
+    use crate::nn::{random_model, Model};
+    use crate::pruning::MaskPlan;
+    use crate::tensor::LayoutCache;
+    use crate::util::rng::Pcg32;
+
+    /// One scheduled request: when it arrives (in sweeps), its prompt and
+    /// decode knobs.
+    #[derive(Clone, Debug)]
+    struct Arrival {
+        at_sweep: usize,
+        prompt: Vec<i32>,
+        max_new: usize,
+        plan: MaskPlan,
+    }
+
+    /// Random tiny model + lane count + ρ + arrival schedule.
+    fn case(seed: u64, rho: f64) -> (Model, usize, f64, Vec<Arrival>) {
+        let mut rng = Pcg32::new(seed, 53);
+        let n_layers = 1 + rng.gen_range_usize(2);
+        let n_heads = 1 + rng.gen_range_usize(2);
+        let head_dim = 4 + 4 * rng.gen_range_usize(2);
+        let cfg = ModelConfig::new("cont-prop-tiny", n_layers, n_heads, n_heads * head_dim);
+        let model = random_model(&cfg, seed ^ 0xFACE);
+        let lanes = 1 + rng.gen_range_usize(3); // 1..=3 lanes
+        let rho = 0.05 + 0.9 * rho.clamp(0.0, 1.0);
+        let plans = [MaskPlan::EveryStep, MaskPlan::PruneOnce, MaskPlan::Refresh(2)];
+        let n_reqs = 2 + rng.gen_range_usize(4); // 2..=5 requests
+        let mut base_prompt: Vec<i32> = (0..2 + rng.gen_range_usize(4))
+            .map(|_| rng.gen_range(256) as i32)
+            .collect();
+        let arrivals = (0..n_reqs)
+            .map(|i| {
+                // half the prompts repeat (the cache-sharing case), half
+                // mutate
+                if i % 2 == 1 {
+                    base_prompt = base_prompt.iter().map(|&t| (t + 3) % 256).collect();
+                }
+                Arrival {
+                    at_sweep: rng.gen_range_usize(6),
+                    prompt: base_prompt.clone(),
+                    // 0..=4 (0 = degenerate); the first request always
+                    // decodes so the schedule exercises at least one
+                    // refresh (the warm-rerun assertions need one)
+                    max_new: if i == 0 {
+                        1 + rng.gen_range_usize(4)
+                    } else {
+                        rng.gen_range_usize(5)
+                    },
+                    plan: plans[rng.gen_range_usize(3)],
+                }
+            })
+            .collect();
+        (model, lanes, rho, arrivals)
+    }
+
+    /// Drive a pool over the schedule exactly like the continuous serve
+    /// loop: before each sweep, admit every already-arrived request FIFO
+    /// into free lanes; sweep; repeat until everything finished. Returns
+    /// the outputs in request order plus each request's streamed tokens.
+    fn run_schedule(
+        model: &Model,
+        lanes: usize,
+        rho: f64,
+        arrivals: &[Arrival],
+        cache: &mut LayoutCache,
+    ) -> (Vec<DecodeOutput>, Vec<Vec<i32>>) {
+        let mut pool = LanePool::new(lanes);
+        let mut outputs: Vec<Option<DecodeOutput>> = vec![None; arrivals.len()];
+        let mut streamed: Vec<Vec<i32>> = vec![Vec::new(); arrivals.len()];
+        // which request occupies each slot
+        let mut owner: Vec<Option<usize>> = vec![None; lanes];
+        let mut next_arrival = 0usize;
+        let mut sweep_idx = 0usize;
+        while outputs.iter().any(|o| o.is_none()) {
+            while next_arrival < arrivals.len()
+                && arrivals[next_arrival].at_sweep <= sweep_idx
+                && pool.free_slot().is_some()
+            {
+                let a = &arrivals[next_arrival];
+                let slot = pool.admit(model, &a.prompt, a.max_new, a.plan, true);
+                owner[slot] = Some(next_arrival);
+                next_arrival += 1;
+            }
+            let mut copt = Some(&mut *cache);
+            for ev in pool.sweep(model, rho, false, &mut copt) {
+                match ev {
+                    LaneEvent::Token { slot, index, token } => {
+                        let req = owner[slot].expect("token from an owned lane");
+                        assert_eq!(streamed[req].len(), index, "dense stream indices");
+                        streamed[req].push(token);
+                    }
+                    LaneEvent::Done { slot, output } => {
+                        let req = owner[slot].take().expect("done lane owned");
+                        outputs[req] = Some(output);
+                    }
+                }
+            }
+            sweep_idx += 1;
+            assert!(sweep_idx < 200, "schedule failed to drain");
+        }
+        (
+            outputs.into_iter().map(|o| o.expect("drained")).collect(),
+            streamed,
+        )
+    }
+
+    fn bit_identical(label: &str, a: &DecodeOutput, b: &DecodeOutput) -> PropResult {
+        ensure(a.tokens == b.tokens, format!("{label}: tokens diverged"))?;
+        ensure(
+            a.steps.len() == b.steps.len(),
+            format!("{label}: step counts diverged"),
+        )?;
+        ensure(
+            a.refresh_count == b.refresh_count,
+            format!("{label}: refresh counts diverged"),
+        )?;
+        for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            ensure(
+                sa.logits == sb.logits,
+                format!("{label}: step {i} logits not bit-identical"),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// THE arrival-schedule invariance property (the tentpole's
+    /// correctness claim): every scheduled request decodes bit-identically
+    /// to its own independent `decode_greedy` (full-window reference — so
+    /// the claim spans lane reuse, KV caching and the shared layout cache
+    /// at once), streamed tokens concatenate to exactly the output's
+    /// `new_tokens()`, and re-running the same schedule against the warm
+    /// cache changes nothing but hit counters (which may only rise).
+    fn prop_schedule_invariant(input: &(u64, f64)) -> PropResult {
+        let (model, lanes, rho, arrivals) = case(input.0, input.1);
+        // big enough that no schedule can evict (eviction would make the
+        // warm-rerun "no recompression" assertion flaky)
+        let mut cache = LayoutCache::new(4096);
+        let (outs, streamed) = run_schedule(&model, lanes, rho, &arrivals, &mut cache);
+        let (hits_cold, misses_cold) = (cache.hits(), cache.misses());
+        for (i, a) in arrivals.iter().enumerate() {
+            let reference = decode_greedy(
+                &model,
+                &a.prompt,
+                &DecodeConfig {
+                    rho,
+                    plan: a.plan,
+                    max_new: a.max_new,
+                    stop_at_eos: false,
+                    kv_cache: false,
+                },
+                None,
+            );
+            bit_identical(
+                &format!("request {i} (lanes={lanes}, plan={})", a.plan.label()),
+                &outs[i],
+                &reference,
+            )?;
+            ensure(
+                streamed[i] == reference.new_tokens(),
+                format!("request {i}: streamed tokens != decoded tokens"),
+            )?;
+        }
+        // same schedule, warm cache: outputs identical, hit counters only
+        // rise, nothing recompresses
+        let (outs2, _) = run_schedule(&model, lanes, rho, &arrivals, &mut cache);
+        for (i, (a, b)) in outs.iter().zip(&outs2).enumerate() {
+            bit_identical(&format!("request {i} warm-cache rerun"), b, a)?;
+        }
+        ensure(
+            cache.misses() == misses_cold,
+            "warm schedule rerun recompressed a layout",
+        )?;
+        ensure(
+            cache.hits() > hits_cold,
+            "warm schedule rerun never hit the cache",
+        )
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        (r.next_u64(), r.next_f64())
+    }
+
+    #[test]
+    fn continuous_batching_token_identical_to_independent_greedy() {
+        check(401, 8, gen_seed_rho, prop_schedule_invariant);
     }
 }
 

@@ -12,7 +12,7 @@ mod sparse;
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
 pub use sparse::{
     fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_par, matvec_nt_sparse,
-    rho_milli, LayoutCache, LayoutKey, RowSparse,
+    matvec_nt_sparse_into, rho_milli, LayoutCache, LayoutKey, RowSparse,
 };
 
 use crate::util::threadpool::{self, ThreadPool};
@@ -315,9 +315,10 @@ pub fn layernorm_rows(x: &Mat, g: &[f32], b: &[f32], eps: f32) -> Mat {
     out
 }
 
-/// Layer-norm of a single row — the KV-decode step form. Delegating both
-/// this and [`layernorm_rows`] to one worker keeps the step path
-/// bit-identical to the full traversal by construction.
+/// Layer-norm of a single row (allocating form of [`layernorm_row_into`],
+/// which the KV-decode step path uses with lane scratch). Delegating all
+/// three entry points to one worker keeps the step path bit-identical to
+/// the full traversal by construction.
 pub fn layernorm_row(row: &[f32], g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
     assert_eq!(g.len(), row.len());
     assert_eq!(b.len(), row.len());
@@ -326,7 +327,14 @@ pub fn layernorm_row(row: &[f32], g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
     out
 }
 
-fn layernorm_row_into(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+/// [`layernorm_row`] writing into a caller-owned buffer — the scratch
+/// form of the decode step path. Fully overwrites `out`, so reuse is
+/// bit-identical to allocation by construction (all three layernorm entry
+/// points share this one worker).
+pub fn layernorm_row_into(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(g.len(), row.len());
+    assert_eq!(b.len(), row.len());
+    assert_eq!(out.len(), row.len());
     let n = row.len();
     let mean = row.iter().sum::<f32>() / n as f32;
     let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;

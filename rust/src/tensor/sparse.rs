@@ -380,14 +380,26 @@ pub fn matmul_tn_sparse_auto(xt: &Mat, w: &RowSparse) -> Mat {
 /// dense product) without paying a transpose, a `Mat` allocation or the
 /// dispatch bookkeeping per decode step.
 pub fn matvec_nt_sparse(x: &[f32], w: &RowSparse) -> Vec<f32> {
-    assert_eq!(x.len(), w.cols, "matvec_nt_sparse shape mismatch");
     let mut out = vec![0.0f32; w.rows];
+    matvec_nt_sparse_into(x, w, &mut out);
+    out
+}
+
+/// [`matvec_nt_sparse`] writing into a caller-owned buffer (resized to
+/// `w.rows`) — the scratch-reuse form of the decode step path. Every
+/// output element is zeroed before the same accumulation loop runs, so
+/// the result is bit-identical to the allocating form regardless of what
+/// the buffer held before (`proptest.rs` proves the composition at the
+/// decode level).
+pub fn matvec_nt_sparse_into(x: &[f32], w: &RowSparse, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), w.cols, "matvec_nt_sparse shape mismatch");
+    out.clear();
+    out.resize(w.rows, 0.0);
     for (j, acc) in out.iter_mut().enumerate() {
         for p in w.row_ptr[j]..w.row_ptr[j + 1] {
             *acc += w.values[p] * x[w.col_idx[p] as usize];
         }
     }
-    out
 }
 
 #[cfg(test)]

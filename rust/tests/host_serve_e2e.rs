@@ -69,7 +69,7 @@ fn batched_host_serving_matches_direct_decode() {
     let mut submitted = Vec::new();
     for (prompt, rho, max_new) in &cases {
         let req = router
-            .admit_decode(prompt, *rho, "synth_wiki", *max_new, None, Some(tx.clone()))
+            .admit_decode(prompt, *rho, "synth_wiki", *max_new, None, None, Some(tx.clone()))
             .expect("admit");
         submitted.push(req.id);
         handle.submit(req).expect("submit");
@@ -145,7 +145,7 @@ fn warm_cache_hits_rise_across_repeated_requests() {
     let send_one = || {
         let (tx, rx) = channel();
         let req = router
-            .admit_decode("a repeated prompt", 0.6, "synth_wiki", 2, None, Some(tx))
+            .admit_decode("a repeated prompt", 0.6, "synth_wiki", 2, None, None, Some(tx))
             .expect("admit");
         handle.submit(req).expect("submit");
         let resp = rx
@@ -177,6 +177,147 @@ fn warm_cache_hits_rise_across_repeated_requests() {
         "repeated request must not recompress anything"
     );
     handle.shutdown().expect("shutdown");
+}
+
+/// Decode a prompt directly on the reference model (the serve path must
+/// reproduce this token-for-token whatever the scheduling did).
+fn reference_decode(prompt: &str, rho: f64, max_new: usize) -> Vec<i32> {
+    let ids = ByteTokenizer.encode(prompt, true);
+    decode_greedy(
+        &reference_model(),
+        &ids,
+        &DecodeConfig {
+            rho,
+            plan: MaskPlan::PruneOnce,
+            max_new,
+            stop_at_eos: false,
+            kv_cache: false,
+        },
+        None,
+    )
+    .new_tokens()
+    .to_vec()
+}
+
+#[test]
+fn streamed_events_concatenate_to_response_tokens() {
+    // both serve modes must deliver the same stream contract: one
+    // StepEvent per generated token, dense indices, concatenating to
+    // exactly the terminal Response::tokens
+    for continuous in [true, false] {
+        let mut cfg = serve_cfg();
+        cfg.decode.continuous = continuous;
+        let metrics = Arc::new(Metrics::new());
+        let router =
+            Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router config");
+        let handle = Server::start(&router).expect("host server");
+
+        let (tx, rx) = channel();
+        let (stx, srx) = channel();
+        let req = router
+            .admit_decode("stream this back", 0.6, "synth_wiki", 4, None, Some(stx), Some(tx))
+            .expect("admit");
+        let id = req.id;
+        handle.submit(req).expect("submit");
+
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(resp.is_ok());
+        assert_eq!(resp.steps, 4);
+        // the serve loop drops the stream sender with the lane, so the
+        // iterator terminates once every event is in
+        let events: Vec<_> = srx.iter().collect();
+        assert_eq!(events.len(), resp.tokens.len());
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.id, id, "continuous={continuous}");
+            assert_eq!(ev.index, i, "continuous={continuous}: dense indices");
+        }
+        let streamed: Vec<i32> = events.iter().map(|e| e.token).collect();
+        assert_eq!(
+            streamed, resp.tokens,
+            "continuous={continuous}: stream must concatenate to tokens"
+        );
+        assert_eq!(
+            resp.tokens,
+            reference_decode("stream this back", 0.6, 4),
+            "continuous={continuous}: scheduling must not change tokens"
+        );
+        handle.shutdown().expect("shutdown");
+    }
+}
+
+#[test]
+fn cancellation_frees_lane_admits_queued_request_and_is_recorded() {
+    // single-lane pool: the queued request can only run if cancelling the
+    // in-flight one actually frees its lane mid-generation
+    let mut cfg = serve_cfg();
+    cfg.decode.batch_size = 1;
+    cfg.decode.max_new_cap = 256;
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config");
+    let handle = Server::start(&router).expect("host server");
+
+    // A: long-running streaming request holding the only lane. 256 steps
+    // of real host forwards take seconds; the test thread cancels within
+    // microseconds of A's first token, so A finishing naturally before
+    // the cancel is observed would need the thread descheduled for
+    // essentially the whole generation — the cancel always lands
+    // mid-flight in practice.
+    let (atx, arx) = channel();
+    let (astx, asrx) = channel();
+    let a = router
+        .admit_decode("the long one", 0.6, "synth_wiki", 256, None, Some(astx), Some(atx))
+        .expect("admit A");
+    let a_id = a.id;
+    let a_cancel = a.cancel.clone();
+    handle.submit(a).expect("submit A");
+
+    // A's first streamed token proves its lane is running
+    let first = asrx.recv_timeout(Duration::from_secs(60)).expect("A streams");
+    assert_eq!(first.index, 0);
+
+    // B queues behind A at the same ρ level, then A is cancelled
+    let (btx, brx) = channel();
+    let b = router
+        .admit_decode("the queued one", 0.6, "synth_wiki", 2, None, None, Some(btx))
+        .expect("admit B");
+    handle.submit(b).expect("submit B");
+    a_cancel.cancel();
+
+    // A gets a terminal cancelled response carrying exactly what was
+    // streamed before the cancel was observed
+    let a_resp = arx.recv_timeout(Duration::from_secs(60)).expect("A terminal");
+    assert!(a_resp.is_cancelled(), "rejected: {:?}", a_resp.rejected);
+    assert!(!a_resp.is_ok());
+    assert_eq!(a_resp.id, a_id);
+    assert!(
+        a_resp.steps < 256,
+        "A must have been cut short, ran {} steps",
+        a_resp.steps
+    );
+    let mut streamed = vec![first.token];
+    streamed.extend(asrx.iter().map(|e| e.token));
+    assert_eq!(streamed, a_resp.tokens, "stream must match the partial");
+
+    // B rode the freed lane and decodes exactly like a direct call
+    let b_resp = brx.recv_timeout(Duration::from_secs(60)).expect("B response");
+    assert!(b_resp.is_ok(), "rejected: {:?}", b_resp.rejected);
+    assert_eq!(b_resp.tokens, reference_decode("the queued one", 0.6, 2));
+    handle.shutdown().expect("shutdown");
+
+    // the cancellation and the admission-into-running-pool are observable
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 1, "only B completed");
+    let levels = metrics.level_stats();
+    let (_, l06) = levels
+        .iter()
+        .find(|(r, _)| (r - 0.6).abs() < 1e-9)
+        .expect("0.6 level served");
+    assert!(
+        l06.admitted_running >= 1,
+        "B must have been admitted into the running pool"
+    );
+    assert!(metrics.lane_occupancy() > 0.0, "sweeps must be sampled");
 }
 
 #[test]
