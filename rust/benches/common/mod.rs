@@ -1,4 +1,8 @@
-//! Shared plumbing for the paper-table benches.
+//! Shared plumbing for the paper-table and perf benches: artifact/env
+//! knobs for the table benches, plus the JSON shorthands, best-of-reps
+//! timing loop, BENCH_*.json footer and smoke-aware gate exit the timing
+//! benches (`sparse_speedup`, `decode_reuse`, `serve_throughput`,
+//! `serve_continuous`, `fused_sweep`) previously copy-pasted.
 //!
 //! Environment knobs (all optional) keep full-table regeneration tractable
 //! on the single-core sandbox while allowing deeper runs:
@@ -8,7 +12,60 @@
 //!   MUMOE_BENCH_QA_LIMIT  eval records for Tables 2-3 (default 48)
 #![allow(dead_code)] // each bench links this module, using a subset
 
+use mumoe::util::json::Json;
 use std::path::PathBuf;
+use std::time::Instant;
+
+pub fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+pub fn jstr(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+/// Was the bench invoked with `--smoke` (tiny dims, 1 rep, gates
+/// informational)? CI runs every timing bench this way.
+pub fn smoke_flag() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// The best-of-reps timing loop every throughput bench ran by hand: call
+/// `work` `reps` times (at least once); each run returns the token count
+/// it produced plus an arbitrary payload. Returns the highest tokens/sec
+/// observed and the payload of that fastest run.
+pub fn best_run<T>(reps: usize, mut work: impl FnMut() -> (usize, T)) -> (f64, T) {
+    let mut best_tps = 0.0f64;
+    let mut best_payload = None;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let (tokens, payload) = work();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let tps = tokens as f64 / dt;
+        if tps > best_tps || best_payload.is_none() {
+            best_tps = tps;
+            best_payload = Some(payload);
+        }
+    }
+    (best_tps, best_payload.expect("reps >= 1 run"))
+}
+
+/// Write a `BENCH_*.json` payload with the standard success/failure
+/// footer lines.
+pub fn write_bench_json(path: &str, out: &Json) {
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Exit nonzero on a failed acceptance gate — except in smoke mode,
+/// which exists to execute the code, not to gate on 1-rep timings.
+pub fn exit_on_gate(accept: bool, smoke: bool) {
+    if !accept && !smoke {
+        std::process::exit(1);
+    }
+}
 
 pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(std::env::var("MUMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))

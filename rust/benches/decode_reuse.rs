@@ -33,6 +33,9 @@
 //! `--smoke`: tiny dims, 1 rep, single ρ, short curve — CI runs this so
 //! the bench code cannot bit-rot (acceptance informational in smoke).
 
+mod common;
+
+use common::{jnum, jstr};
 use mumoe::decode::{decode_greedy, DecodeConfig, DecodeOutput};
 use mumoe::eval::host::decode_drift;
 use mumoe::model::config_by_name;
@@ -42,15 +45,6 @@ use mumoe::pruning::MaskPlan;
 use mumoe::tensor::LayoutCache;
 use mumoe::util::json::Json;
 use std::collections::HashMap;
-use std::time::Instant;
-
-fn jnum(x: f64) -> Json {
-    Json::Num(x)
-}
-
-fn jstr(s: impl Into<String>) -> Json {
-    Json::Str(s.into())
-}
 
 struct BenchShape {
     model: Model,
@@ -108,19 +102,11 @@ fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan, kv: bool)
     };
     // timed cold-cache runs (fresh cache each rep so every rep pays the
     // same compression bill); keep the fastest
-    let mut best_tps = 0.0f64;
-    let mut best_out: Option<DecodeOutput> = None;
-    for _ in 0..sh.reps {
+    let (best_tps, best_out): (f64, DecodeOutput) = common::best_run(sh.reps, || {
         let mut cache = LayoutCache::new(sh.cache_cap);
-        let t0 = Instant::now();
         let out = decode_greedy(&sh.model, prompt, &cfg, Some(&mut cache));
-        let dt = t0.elapsed().as_secs_f64().max(1e-9);
-        let tps = out.steps.len() as f64 / dt;
-        if tps > best_tps {
-            best_tps = tps;
-            best_out = Some(out);
-        }
-    }
+        (out.steps.len(), out)
+    });
     // warm-cache pass: the same request again through a cache primed by
     // one cold run — the coordinator's repeated-prefix case
     let mut cache = LayoutCache::new(sh.cache_cap);
@@ -130,7 +116,7 @@ fn run_plan(sh: &BenchShape, prompt: &[i32], rho: f64, plan: MaskPlan, kv: bool)
         plan,
         kv,
         tok_per_sec: best_tps,
-        out: best_out.expect("at least one rep"),
+        out: best_out,
         warm_hits: warm.cache_hits,
         warm_misses: warm.cache_misses,
     }
@@ -207,7 +193,7 @@ fn curve_json(arm: &CurveArm, kv: bool) -> Json {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = common::smoke_flag();
     let sh = shape(smoke);
     let plans = [MaskPlan::EveryStep, MaskPlan::Refresh(4), MaskPlan::PruneOnce];
     let prompt: Vec<i32> = (0..24).map(|i| (i * 53 + 19) % 256).collect();
@@ -317,11 +303,7 @@ fn main() {
         ("plans".into(), Json::Arr(results)),
         ("accept_prune_once_faster".into(), Json::Bool(accept)),
     ]));
-    let path = "BENCH_decode_reuse.json";
-    match std::fs::write(path, out.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    common::write_bench_json("BENCH_decode_reuse.json", &out);
 
     let kv_out = Json::Obj(HashMap::from([
         ("bench".into(), jstr("kv_decode")),
@@ -339,13 +321,7 @@ fn main() {
         ("no_kv_growth_late_over_early".into(), jnum(no_kv.growth)),
         ("accept_kv_step_cost_flat".into(), Json::Bool(kv_accept)),
     ]));
-    let kv_path = "BENCH_kv_decode.json";
-    match std::fs::write(kv_path, kv_out.dump()) {
-        Ok(()) => println!("wrote {kv_path}"),
-        Err(e) => eprintln!("could not write {kv_path}: {e}"),
-    }
+    common::write_bench_json("BENCH_kv_decode.json", &kv_out);
 
-    if !(accept && kv_accept) && !smoke {
-        std::process::exit(1);
-    }
+    common::exit_on_gate(accept && kv_accept, smoke);
 }

@@ -1,0 +1,254 @@
+//! Fused-sweep bench: matrix-major vs lane-major `LanePool` stepping.
+//!
+//! PR 3/5 made batch size buy layout/cache reuse; the matrix-major sweep
+//! makes it amortize the AXPY traversal itself — same-layout lanes step
+//! through **one** batched sparse matmul per linear per group instead of
+//! N independent `matvec_nt_sparse` calls. This bench drives one pool of
+//! N lanes all decoding the same prompt (so every lane shares every
+//! compressed layout) with fusion forced off (`set_fuse(false)` — the
+//! old lane-major behaviour) vs on, at lanes ∈ {1, 4, 8} ×
+//! ρ ∈ {0.3, 0.5, 0.7}, best of `reps` runs.
+//!
+//! Two non-timing assertions run in every mode (they are deterministic,
+//! so smoke checks them too):
+//! * **identical tokens** — fused and lane-major pools generate exactly
+//!   the same per-lane tokens, which also equal an independent
+//!   `decode_greedy`;
+//! * **structural one-group fusion** — after the prefill sweep (refresh
+//!   steps never fuse), every fused sweep at N ≥ 2 reports exactly one
+//!   execution group of width N via `last_sweep_groups()`: per-linear
+//!   kernel invocations dropped from N to 1 per group by construction.
+//!
+//! Emits `BENCH_fused_sweep.json`. Acceptance (non-smoke): fused tok/s ≥
+//! lane-major tok/s at every cell with ≥ 4 same-layout lanes (singleton
+//! pools take the per-lane path either way, so lanes = 1 is a control).
+//!
+//! `--smoke`: tiny model, one (lanes, ρ) cell, 1 rep — CI runs this so
+//! the bench cannot bit-rot (gate informational in smoke).
+
+mod common;
+
+use common::jnum;
+use mumoe::decode::{decode_greedy, DecodeConfig, LaneEvent, LanePool};
+use mumoe::model::config_by_name;
+use mumoe::model::ModelConfig;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use mumoe::tensor::LayoutCache;
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+
+struct BenchShape {
+    model: Model,
+    model_name: String,
+    lanes: Vec<usize>,
+    rhos: Vec<f64>,
+    n_new: usize,
+    reps: usize,
+    cache_cap: usize,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            model: random_model(&ModelConfig::new("smoke-tiny", 2, 2, 16), 7),
+            model_name: "smoke-tiny(2x2x16)".into(),
+            lanes: vec![4],
+            rhos: vec![0.5],
+            n_new: 4,
+            reps: 1,
+            cache_cap: 512,
+        }
+    } else {
+        let cfg = config_by_name("mu-opt-micro").expect("known model");
+        BenchShape {
+            model: random_model(&cfg, 7),
+            model_name: cfg.name.clone(),
+            lanes: vec![1, 4, 8],
+            rhos: vec![0.3, 0.5, 0.7],
+            n_new: 16,
+            reps: 3,
+            cache_cap: 4096,
+        }
+    }
+}
+
+/// The same-layout workload: every lane decodes this prompt, so after
+/// the shared-cache prefill all lanes carry identical layout Arcs.
+fn prompt() -> Vec<i32> {
+    (0..20).map(|j| (j * 53 + 19) % 256).collect()
+}
+
+struct PoolRun {
+    tokens: usize,
+    /// Per-lane generated tokens, slot order.
+    outputs: Vec<Vec<i32>>,
+    /// Per-sweep execution-group widths, as the pool reported them.
+    sweeps: Vec<Vec<usize>>,
+}
+
+fn run_pool(sh: &BenchShape, lanes: usize, rho: f64, fuse: bool) -> PoolRun {
+    let p = prompt();
+    let mut cache = LayoutCache::new(sh.cache_cap);
+    let mut pool = LanePool::new(lanes);
+    pool.set_fuse(fuse);
+    for _ in 0..lanes {
+        pool.admit(&sh.model, &p, sh.n_new, MaskPlan::PruneOnce, true);
+    }
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); lanes];
+    let mut sweeps = Vec::new();
+    let mut tokens = 0usize;
+    let mut done = 0usize;
+    while done < lanes {
+        let mut copt = Some(&mut cache);
+        let events = pool.sweep(&sh.model, rho, false, &mut copt);
+        sweeps.push(pool.last_sweep_groups().to_vec());
+        for ev in events {
+            match ev {
+                LaneEvent::Token { slot, token, .. } => outputs[slot].push(token),
+                LaneEvent::Done { output, .. } => {
+                    tokens += output.steps.len();
+                    done += 1;
+                }
+            }
+        }
+    }
+    PoolRun {
+        tokens,
+        outputs,
+        sweeps,
+    }
+}
+
+/// The structural fusion claim: prefill sweeps are all singletons (a
+/// refresh step never fuses), every later sweep is ONE group of width N.
+fn assert_fused_structure(run: &PoolRun, lanes: usize, n_new: usize) {
+    assert_eq!(run.sweeps.len(), n_new, "one sweep per generated token");
+    assert_eq!(
+        run.sweeps[0],
+        vec![1; lanes],
+        "the prefill sweep must stay lane-major"
+    );
+    if lanes >= 2 {
+        for (i, widths) in run.sweeps.iter().enumerate().skip(1) {
+            assert_eq!(
+                widths.as_slice(),
+                [lanes],
+                "sweep {i}: same-layout lanes must execute as ONE group \
+                 (one batched matmul per linear), got {widths:?}"
+            );
+        }
+    }
+}
+
+fn main() {
+    let smoke = common::smoke_flag();
+    let sh = shape(smoke);
+    let p = prompt();
+
+    let mut table = mumoe::benchlib::Table::new(
+        format!(
+            "Fused sweep: matrix-major vs lane-major, {} new tokens, {} ({})",
+            sh.n_new,
+            sh.model_name,
+            if smoke { "smoke" } else { "full" }
+        ),
+        &["lanes", "rho", "fused tok/s", "lane-major tok/s", "speedup"],
+    );
+
+    let mut results = Vec::new();
+    let mut accept = true;
+    for &lanes in &sh.lanes {
+        for &rho in &sh.rhos {
+            let (fused_tps, fused) = common::best_run(sh.reps, || {
+                let r = run_pool(&sh, lanes, rho, true);
+                (r.tokens, r)
+            });
+            let (lane_tps, lane_major) = common::best_run(sh.reps, || {
+                let r = run_pool(&sh, lanes, rho, false);
+                (r.tokens, r)
+            });
+
+            // correctness before speed: fusion must never change tokens
+            assert_eq!(fused.tokens, lane_major.tokens);
+            assert_eq!(
+                fused.outputs, lane_major.outputs,
+                "fused sweep changed decoded tokens"
+            );
+            let reference = decode_greedy(
+                &sh.model,
+                &p,
+                &DecodeConfig {
+                    rho,
+                    plan: MaskPlan::PruneOnce,
+                    max_new: sh.n_new,
+                    stop_at_eos: false,
+                    kv_cache: false,
+                },
+                None,
+            );
+            for (slot, out) in fused.outputs.iter().enumerate() {
+                assert_eq!(
+                    out,
+                    reference.new_tokens(),
+                    "lane {slot} diverged from independent decode_greedy"
+                );
+            }
+            assert_fused_structure(&fused, lanes, sh.n_new);
+            // lane-major control: the pool must report only singletons
+            for widths in &lane_major.sweeps {
+                assert!(
+                    widths.iter().all(|&w| w == 1),
+                    "fusion disabled but a fused group appeared: {widths:?}"
+                );
+            }
+
+            let speedup = fused_tps / lane_tps.max(1e-12);
+            table.row(vec![
+                format!("{lanes}"),
+                format!("{rho:.1}"),
+                format!("{fused_tps:.2}"),
+                format!("{lane_tps:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            if lanes >= 4 && fused_tps < lane_tps {
+                accept = false;
+            }
+            results.push(Json::Obj(HashMap::from([
+                ("lanes".into(), jnum(lanes as f64)),
+                ("rho".into(), jnum(rho)),
+                ("fused_tokens_per_sec".into(), jnum(fused_tps)),
+                ("lane_major_tokens_per_sec".into(), jnum(lane_tps)),
+                ("speedup".into(), jnum(speedup)),
+                (
+                    "fused_sweep_widths_ok".into(),
+                    // asserted above; recorded so the JSON is self-evident
+                    Json::Bool(true),
+                ),
+            ])));
+        }
+    }
+    table.print();
+
+    println!(
+        "\nACCEPTANCE: fused >= lane-major tok/s at every cell with >= 4 \
+         same-layout lanes, plus the structural one-group-per-sweep \
+         assertion ({}).",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        // smoke exists to execute the code, not to gate on 1-rep timings
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), Json::Str("fused_sweep".into())),
+        ("model".into(), Json::Str(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("n_new_tokens".into(), jnum(sh.n_new as f64)),
+        ("cells".into(), Json::Arr(results)),
+        ("accept_fused_at_least_lane_major".into(), Json::Bool(accept)),
+    ]));
+    common::write_bench_json("BENCH_fused_sweep.json", &out);
+    common::exit_on_gate(accept, smoke);
+}

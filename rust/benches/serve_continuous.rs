@@ -30,6 +30,9 @@
 //! `--smoke`: tiny model, one ρ, shortened mixed workload — CI runs this
 //! so the bench cannot bit-rot (gates informational only).
 
+mod common;
+
+use common::jnum;
 use mumoe::decode::{decode_batch, BatchRequest, LaneEvent, LanePool};
 use mumoe::model::config_by_name;
 use mumoe::model::ModelConfig;
@@ -39,11 +42,6 @@ use mumoe::tensor::LayoutCache;
 use mumoe::util::json::Json;
 use std::collections::HashMap;
 use std::collections::VecDeque;
-use std::time::Instant;
-
-fn jnum(x: f64) -> Json {
-    Json::Num(x)
-}
 
 struct BenchShape {
     model: Model,
@@ -101,8 +99,9 @@ fn requests(sh: &BenchShape, cycle: &[usize]) -> Vec<(Vec<i32>, usize)> {
         .collect()
 }
 
+/// One mode's deterministic counters; tokens/sec comes from wrapping a
+/// run in [`common::best_run`], which owns the timing.
 struct ModeRun {
-    tps: f64,
     /// Mean lane occupancy: active-lane-steps / (sweeps × lanes).
     occupancy: f64,
     tokens: usize,
@@ -117,7 +116,6 @@ fn run_drain(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> ModeRun {
     let mut tokens = 0usize;
     let mut lane_steps = 0usize;
     let mut lane_slots = 0usize;
-    let t0 = Instant::now();
     for chunk in reqs.chunks(sh.lanes) {
         let items: Vec<BatchRequest> = chunk
             .iter()
@@ -137,9 +135,7 @@ fn run_drain(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> ModeRun {
             lane_slots += sh.lanes;
         }
     }
-    let dt = t0.elapsed().as_secs_f64().max(1e-9);
     ModeRun {
-        tps: tokens as f64 / dt,
         occupancy: lane_steps as f64 / lane_slots.max(1) as f64,
         tokens,
     }
@@ -156,7 +152,6 @@ fn run_continuous(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> Mode
     let mut lane_steps = 0usize;
     let mut lane_slots = 0usize;
     let mut done = 0usize;
-    let t0 = Instant::now();
     while done < reqs.len() {
         while pool.free_slot().is_some() {
             let Some((prompt, max_new)) = queue.pop_front() else {
@@ -174,16 +169,14 @@ fn run_continuous(sh: &BenchShape, reqs: &[(Vec<i32>, usize)], rho: f64) -> Mode
             }
         }
     }
-    let dt = t0.elapsed().as_secs_f64().max(1e-9);
     ModeRun {
-        tps: tokens as f64 / dt,
         occupancy: lane_steps as f64 / lane_slots.max(1) as f64,
         tokens,
     }
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = common::smoke_flag();
     let sh = shape(smoke);
 
     let mut table = mumoe::benchlib::Table::new(
@@ -213,25 +206,21 @@ fn main() {
         for &rho in &sh.rhos {
             let reqs = requests(&sh, cycle);
             // best-of-reps wall numbers; occupancy is deterministic
-            let mut cont = run_continuous(&sh, &reqs, rho);
-            let mut drain = run_drain(&sh, &reqs, rho);
-            for _ in 1..sh.reps {
-                let c = run_continuous(&sh, &reqs, rho);
-                if c.tps > cont.tps {
-                    cont = c;
-                }
-                let d = run_drain(&sh, &reqs, rho);
-                if d.tps > drain.tps {
-                    drain = d;
-                }
-            }
+            let (cont_tps, cont) = common::best_run(sh.reps, || {
+                let r = run_continuous(&sh, &reqs, rho);
+                (r.tokens, r)
+            });
+            let (drain_tps, drain) = common::best_run(sh.reps, || {
+                let r = run_drain(&sh, &reqs, rho);
+                (r.tokens, r)
+            });
             assert_eq!(cont.tokens, drain.tokens, "modes must decode the same work");
-            let speedup = cont.tps / drain.tps.max(1e-12);
+            let speedup = cont_tps / drain_tps.max(1e-12);
             table.row(vec![
                 (*label).into(),
                 format!("{rho:.1}"),
-                format!("{:.2}", cont.tps),
-                format!("{:.2}", drain.tps),
+                format!("{cont_tps:.2}"),
+                format!("{drain_tps:.2}"),
                 format!("{speedup:.2}x"),
                 format!("{:.3}", cont.occupancy),
                 format!("{:.3}", drain.occupancy),
@@ -239,7 +228,7 @@ fn main() {
             // gates: continuous >= drain throughput (0.9x noise floor on
             // the timed axis) and strictly higher occupancy wherever the
             // max_new mix leaves drain lanes idle (deterministic axis)
-            if cont.tps < 0.9 * drain.tps {
+            if cont_tps < 0.9 * drain_tps {
                 accept = false;
             }
             if mixed && cont.occupancy <= drain.occupancy {
@@ -249,8 +238,8 @@ fn main() {
                 ("workload".into(), Json::Str((*label).into())),
                 ("mixed_max_new".into(), Json::Bool(mixed)),
                 ("rho".into(), jnum(rho)),
-                ("continuous_tokens_per_sec".into(), jnum(cont.tps)),
-                ("drain_tokens_per_sec".into(), jnum(drain.tps)),
+                ("continuous_tokens_per_sec".into(), jnum(cont_tps)),
+                ("drain_tokens_per_sec".into(), jnum(drain_tps)),
                 ("speedup".into(), jnum(speedup)),
                 ("continuous_lane_occupancy".into(), jnum(cont.occupancy)),
                 ("drain_lane_occupancy".into(), jnum(drain.occupancy)),
@@ -282,12 +271,6 @@ fn main() {
             Json::Bool(accept),
         ),
     ]));
-    let path = "BENCH_serve_continuous.json";
-    match std::fs::write(path, out.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
-    if !accept && !smoke {
-        std::process::exit(1);
-    }
+    common::write_bench_json("BENCH_serve_continuous.json", &out);
+    common::exit_on_gate(accept, smoke);
 }

@@ -24,6 +24,9 @@
 //! `--smoke`: tiny model, 1 rep, single (batch, ρ) cell — CI runs this so
 //! the bench cannot bit-rot.
 
+mod common;
+
+use common::jnum;
 use mumoe::decode::{decode_batch, decode_greedy, BatchRequest, DecodeConfig};
 use mumoe::model::config_by_name;
 use mumoe::model::ModelConfig;
@@ -32,11 +35,6 @@ use mumoe::pruning::MaskPlan;
 use mumoe::tensor::LayoutCache;
 use mumoe::util::json::Json;
 use std::collections::HashMap;
-use std::time::Instant;
-
-fn jnum(x: f64) -> Json {
-    Json::Num(x)
-}
 
 struct BenchShape {
     model: Model,
@@ -96,9 +94,7 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
 
     // batched: one decode_batch through one shared cache (fresh per rep so
     // every rep pays the same compression bill)
-    let mut batched_tps = 0.0f64;
-    let mut batched_misses = 0u64;
-    for _ in 0..sh.reps {
+    let (batched_tps, batched_misses) = common::best_run(sh.reps, || {
         let items: Vec<BatchRequest> = prompts
             .iter()
             .map(|p| BatchRequest {
@@ -108,19 +104,13 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
             })
             .collect();
         let mut cache = LayoutCache::new(sh.cache_cap);
-        let t0 = Instant::now();
         let outs = decode_batch(&sh.model, &items, rho, false, true, Some(&mut cache));
-        let dt = t0.elapsed().as_secs_f64().max(1e-9);
         let tokens: usize = outs.iter().map(|o| o.steps.len()).sum();
-        batched_tps = batched_tps.max(tokens as f64 / dt);
-        batched_misses = cache.misses();
-    }
+        (tokens, cache.misses())
+    });
 
     // per-request: N independent decode_greedy calls, fresh cache each
-    let mut per_request_tps = 0.0f64;
-    let mut per_request_misses = 0u64;
-    for _ in 0..sh.reps {
-        let t0 = Instant::now();
+    let (per_request_tps, per_request_misses) = common::best_run(sh.reps, || {
         let mut tokens = 0usize;
         let mut misses = 0u64;
         for p in &prompts {
@@ -140,10 +130,8 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
             tokens += out.steps.len();
             misses += cache.misses();
         }
-        let dt = t0.elapsed().as_secs_f64().max(1e-9);
-        per_request_tps = per_request_tps.max(tokens as f64 / dt);
-        per_request_misses = misses;
-    }
+        (tokens, misses)
+    });
 
     Cell {
         batched_tps,
@@ -154,7 +142,7 @@ fn run_cell(sh: &BenchShape, batch: usize, rho: f64) -> Cell {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = common::smoke_flag();
     let sh = shape(smoke);
 
     let mut table = mumoe::benchlib::Table::new(
@@ -231,12 +219,6 @@ fn main() {
         ("cells".into(), Json::Arr(results)),
         ("accept_batched_at_least_per_request".into(), Json::Bool(accept)),
     ]));
-    let path = "BENCH_serve_throughput.json";
-    match std::fs::write(path, out.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
-    if !accept && !smoke {
-        std::process::exit(1);
-    }
+    common::write_bench_json("BENCH_serve_throughput.json", &out);
+    common::exit_on_gate(accept, smoke);
 }

@@ -21,6 +21,9 @@
 //! `--smoke`: tiny dims, 1 rep, no acceptance gate — CI runs this so the
 //! bench code cannot bit-rot.
 
+mod common;
+
+use common::{jnum, jstr};
 use mumoe::benchlib::{black_box, Bencher, Stats, Table};
 use mumoe::flops::{achieved_forward, count_forward, ArchShape};
 use mumoe::model::config_by_name;
@@ -34,14 +37,6 @@ use mumoe::util::threadpool;
 use std::collections::HashMap;
 
 const RHOS: [f64; 3] = [0.3, 0.5, 0.7];
-
-fn jnum(x: f64) -> Json {
-    Json::Num(x)
-}
-
-fn jstr(s: impl Into<String>) -> Json {
-    Json::Str(s.into())
-}
 
 fn stats_ms(s: &Stats) -> f64 {
     s.mean_ms()
@@ -188,7 +183,7 @@ fn forward_section(results: &mut Vec<Json>, smoke: bool) -> Option<f64> {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = common::smoke_flag();
     println!(
         "sparse_speedup: host threads = {}{}",
         threadpool::global().size(),
@@ -221,16 +216,11 @@ fn main() {
             accept.map(jnum).unwrap_or(Json::Null),
         ),
     ]));
-    let path = "BENCH_sparse_speedup.json";
-    match std::fs::write(path, out.dump()) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    println!();
+    common::write_bench_json("BENCH_sparse_speedup.json", &out);
     // keep the optimizer honest about the bench results living to the end
     black_box(());
     // full runs gate on the acceptance criterion (smoke never evaluates
     // it: mu-opt-small doesn't run there), matching decode_reuse.rs
-    if accept.is_some_and(|s| s <= 1.0) {
-        std::process::exit(1);
-    }
+    common::exit_on_gate(!accept.is_some_and(|s| s <= 1.0), smoke);
 }

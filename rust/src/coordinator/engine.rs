@@ -23,9 +23,10 @@
 //! compute.
 
 use super::batcher::DecodeBatch;
+use super::metrics::Metrics;
 use super::request::Response;
 use crate::config::{EngineKind, ServeConfig};
-use crate::decode::{decode_batch, BatchRequest};
+use crate::decode::{decode_batch_observed, BatchRequest};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::config_by_name;
 use crate::nn::{random_model, Model};
@@ -93,8 +94,14 @@ pub trait Engine: Sized {
 
     /// Build the engine on the calling (serve) thread. `cache` is the
     /// router's shared layout cache; backends that don't compress
-    /// layouts ignore it.
-    fn prepare(cfg: &ServeConfig, cache: Arc<Mutex<LayoutCache>>) -> Result<Prepared<Self>, Error>;
+    /// layouts ignore it. `metrics` is the serve loop's shared sink for
+    /// execution-internal observations (fused sweep widths); backends
+    /// without per-sweep structure ignore it.
+    fn prepare(
+        cfg: &ServeConfig,
+        cache: Arc<Mutex<LayoutCache>>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<Prepared<Self>, Error>;
 
     /// Execute one ρ-keyed batch: exactly one [`Response`] per request,
     /// in request order. `latency_us`/`batch_size` are stamped by the
@@ -114,6 +121,9 @@ pub struct HostEngine {
     /// Per-lane KV caches inside `decode_batch` (`[decode] kv_cache`,
     /// default on; outputs are bit-identical either way).
     kv_cache: bool,
+    /// Optional sink for fused-sweep width observations (the drain
+    /// path's counterpart of `run_pool`'s per-sweep recording).
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl HostEngine {
@@ -130,7 +140,15 @@ impl HostEngine {
             cache,
             stop_at_eos,
             kv_cache,
+            metrics: None,
         }
+    }
+
+    /// Attach a metrics sink; executed batches then report per-sweep
+    /// fused group widths via [`Metrics::record_fused_sweep`].
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
     }
 
     pub fn model(&self) -> &Model {
@@ -143,16 +161,20 @@ impl Engine for HostEngine {
         EngineKind::Host
     }
 
-    fn prepare(cfg: &ServeConfig, cache: Arc<Mutex<LayoutCache>>) -> Result<Prepared<Self>, Error> {
+    fn prepare(
+        cfg: &ServeConfig,
+        cache: Arc<Mutex<LayoutCache>>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<Prepared<Self>, Error> {
         let model = host_model(cfg)?;
         let seq_len = model.cfg.max_seq_len;
+        let mut engine =
+            HostEngine::with_model(model, cache, cfg.decode.stop_at_eos, cfg.decode.kv_cache);
+        if let Some(m) = metrics {
+            engine = engine.with_metrics(m);
+        }
         Ok(Prepared {
-            engine: HostEngine::with_model(
-                model,
-                cache,
-                cfg.decode.stop_at_eos,
-                cfg.decode.kv_cache,
-            ),
+            engine,
             seq_len,
             batch_capacity: cfg.decode.batch_size,
         })
@@ -176,13 +198,19 @@ impl Engine for HostEngine {
             .cache
             .lock()
             .map_err(|_| Error::coordinator("layout cache poisoned"))?;
-        let outs = decode_batch(
+        let metrics = self.metrics.clone();
+        let outs = decode_batch_observed(
             &self.model,
             &items,
             rho,
             self.stop_at_eos,
             self.kv_cache,
             Some(&mut cache),
+            |groups| {
+                if let Some(m) = &metrics {
+                    m.record_fused_sweep(rho, groups);
+                }
+            },
         );
         drop(cache);
 
@@ -220,6 +248,7 @@ impl Engine for PjrtEngine {
     fn prepare(
         cfg: &ServeConfig,
         _cache: Arc<Mutex<LayoutCache>>,
+        _metrics: Option<Arc<Metrics>>,
     ) -> Result<Prepared<Self>, Error> {
         use crate::runtime::registry::Registry;
         use crate::runtime::session::Session;
@@ -433,6 +462,41 @@ mod tests {
     }
 
     #[test]
+    fn execute_reports_fused_widths_to_metrics() {
+        // Two identical requests share every layout via the cache, so
+        // after their prefill sweep the pool fuses them: the metrics
+        // sink must see width-2 groups, and attaching it must not
+        // change the decoded tokens.
+        let metrics = Arc::new(Metrics::new());
+        let (eng, _cache) = engine_with(64);
+        let mut eng = eng.with_metrics(metrics.clone());
+        let batch = DecodeBatch {
+            rho: 0.5,
+            requests: vec![req(1, &[4, 2, 9], 0.5, 4), req(2, &[4, 2, 9], 0.5, 4)],
+        };
+        let responses = eng.execute(batch).expect("execute");
+        assert_eq!(responses[0].tokens, responses[1].tokens);
+        let (mut plain_eng, _c) = engine_with(64);
+        let plain = plain_eng
+            .execute(DecodeBatch {
+                rho: 0.5,
+                requests: vec![req(1, &[4, 2, 9], 0.5, 4), req(2, &[4, 2, 9], 0.5, 4)],
+            })
+            .expect("execute");
+        assert_eq!(responses[0].tokens, plain[0].tokens);
+        let levels = metrics.level_stats();
+        assert_eq!(levels.len(), 1);
+        let st = levels[0].1;
+        assert!(st.fused_groups > 0);
+        assert!(
+            st.fused_width_hist[1] > 0,
+            "same-layout pair must fuse at width 2: {:?}",
+            st.fused_width_hist
+        );
+        assert!(st.mean_fused_width() > 1.0);
+    }
+
+    #[test]
     fn prepare_falls_back_to_deterministic_model() {
         let cfg = ServeConfig {
             artifacts_dir: "definitely-absent-artifacts-dir".into(),
@@ -440,7 +504,7 @@ mod tests {
             ..Default::default()
         };
         let cache = Arc::new(Mutex::new(LayoutCache::new(cfg.layout_cache_cap)));
-        let prepared = HostEngine::prepare(&cfg, cache).expect("prepare");
+        let prepared = HostEngine::prepare(&cfg, cache, None).expect("prepare");
         assert_eq!(prepared.seq_len, crate::model::MAX_SEQ_LEN);
         assert_eq!(prepared.batch_capacity, cfg.decode.batch_size);
         assert_eq!(HostEngine::kind(), EngineKind::Host);
@@ -461,7 +525,7 @@ mod tests {
             ..Default::default()
         };
         let cache = Arc::new(Mutex::new(LayoutCache::new(8)));
-        assert!(HostEngine::prepare(&cfg, cache).is_err());
+        assert!(HostEngine::prepare(&cfg, cache, None).is_err());
     }
 
     #[test]

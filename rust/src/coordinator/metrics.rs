@@ -36,6 +36,15 @@ pub struct LevelStats {
     pub lane_steps: u64,
     /// Lane-occupancy denominator: pool capacity summed over sweeps.
     pub lane_slots: u64,
+    /// Matrix-major execution groups observed (each fused batch and each
+    /// singleton fallback counts once).
+    pub fused_groups: u64,
+    /// Lane-rows carried by those groups; `fused_rows / fused_groups` is
+    /// the mean fused width — 1.0 means fusion never engaged.
+    pub fused_rows: u64,
+    /// Histogram of group widths: buckets 1..=7 plus an 8+ overflow
+    /// bucket, indexed by `width - 1`.
+    pub fused_width_hist: [u64; 8],
 }
 
 impl LevelStats {
@@ -46,6 +55,15 @@ impl LevelStats {
             return 0.0;
         }
         self.lane_steps as f64 / self.lane_slots as f64
+    }
+
+    /// Mean lanes per execution group (1.0 = lane-major behaviour, > 1
+    /// means matrix-major fusion engaged; 0 before any sweep).
+    pub fn mean_fused_width(&self) -> f64 {
+        if self.fused_groups == 0 {
+            return 0.0;
+        }
+        self.fused_rows as f64 / self.fused_groups as f64
     }
 }
 
@@ -126,6 +144,34 @@ impl Metrics {
         let e = levels.entry(rho_milli(rho)).or_default();
         e.lane_steps += active as u64;
         e.lane_slots += capacity as u64;
+    }
+
+    /// One lane-pool sweep's execution-group widths at a snapped level
+    /// (matrix-major fusion: each fused batch or singleton fallback is
+    /// one group carrying `width` lane-rows). No-op on an empty sweep.
+    pub fn record_fused_sweep(&self, rho: f64, group_sizes: &[usize]) {
+        if group_sizes.is_empty() {
+            return;
+        }
+        let mut levels = self.levels.lock().expect("metrics level map poisoned");
+        let e = levels.entry(rho_milli(rho)).or_default();
+        for &w in group_sizes {
+            e.fused_groups += 1;
+            e.fused_rows += w as u64;
+            e.fused_width_hist[w.clamp(1, 8) - 1] += 1;
+        }
+    }
+
+    /// Aggregate mean fused width across levels (0 before any sweep).
+    pub fn mean_fused_width(&self) -> f64 {
+        let levels = self.levels.lock().expect("metrics level map poisoned");
+        let (rows, groups) = levels
+            .values()
+            .fold((0u64, 0u64), |(a, b), s| (a + s.fused_rows, b + s.fused_groups));
+        if groups == 0 {
+            return 0.0;
+        }
+        rows as f64 / groups as f64
     }
 
     /// Aggregate mean lane occupancy across levels (0 before any sweep).
@@ -299,7 +345,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "accepted={} rejected={} completed={} cancelled={} batches={} \
-             occupancy={:.2} lane_occ={:.2} mean_lat={:.0}us p50={}us \
+             occupancy={:.2} lane_occ={:.2} fused_width={:.2} \
+             mean_lat={:.0}us p50={}us \
              p95={}us p99={}us decode_tok_s={:.1}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -308,6 +355,7 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
             self.lane_occupancy(),
+            self.mean_fused_width(),
             self.mean_latency_us(),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
@@ -319,7 +367,8 @@ impl Metrics {
         for (rho, st) in self.level_stats() {
             s.push_str(&format!(
                 "\n  level rho={rho:.2}: batches={} requests={} tokens={} \
-                 prefill_us={} step_us={} admitted_running={} lane_occ={:.2}",
+                 prefill_us={} step_us={} admitted_running={} lane_occ={:.2} \
+                 fused_width={:.2}",
                 st.batches,
                 st.requests,
                 st.tokens,
@@ -327,6 +376,7 @@ impl Metrics {
                 st.step_us,
                 st.admitted_running,
                 st.lane_occupancy(),
+                st.mean_fused_width(),
             ));
         }
         s
@@ -344,6 +394,7 @@ impl Metrics {
         m.insert("batches".into(), g(&self.batches));
         m.insert("occupancy".into(), Json::Num(self.batch_occupancy()));
         m.insert("lane_occupancy".into(), Json::Num(self.lane_occupancy()));
+        m.insert("mean_fused_width".into(), Json::Num(self.mean_fused_width()));
         m.insert("mean_latency_us".into(), Json::Num(self.mean_latency_us()));
         m.insert(
             "p50_us".into(),
@@ -375,6 +426,21 @@ impl Metrics {
                         Json::Num(st.admitted_running as f64),
                     ),
                     ("lane_occupancy".into(), Json::Num(st.lane_occupancy())),
+                    ("fused_groups".into(), Json::Num(st.fused_groups as f64)),
+                    ("fused_rows".into(), Json::Num(st.fused_rows as f64)),
+                    (
+                        "mean_fused_width".into(),
+                        Json::Num(st.mean_fused_width()),
+                    ),
+                    (
+                        "fused_width_hist".into(),
+                        Json::Arr(
+                            st.fused_width_hist
+                                .iter()
+                                .map(|&c| Json::Num(c as f64))
+                                .collect(),
+                        ),
+                    ),
                 ])),
             );
         }
@@ -532,6 +598,42 @@ mod tests {
         let l = j.req("levels").unwrap().req("0.40").unwrap();
         assert_eq!(l.req("admitted_running").unwrap().as_f64(), Some(2.0));
         assert!((l.req("lane_occupancy").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_width_histogram_accumulates() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_fused_width(), 0.0, "no sweeps yet");
+        m.record_fused_sweep(0.4, &[]); // empty sweep must not create a level
+        assert!(m.level_stats().is_empty());
+        // Two sweeps at rho=0.4: [3, 1] then [4]; one sweep at 0.6: [1, 1].
+        m.record_fused_sweep(0.4, &[3, 1]);
+        m.record_fused_sweep(0.4, &[4]);
+        m.record_fused_sweep(0.6, &[1, 1]);
+        // A width-12 group lands in the 8+ overflow bucket.
+        m.record_fused_sweep(0.6, &[12]);
+        let levels = m.level_stats();
+        assert_eq!(levels[0].0, 0.4);
+        let st = levels[0].1;
+        assert_eq!(st.fused_groups, 3);
+        assert_eq!(st.fused_rows, 8);
+        assert_eq!(st.fused_width_hist[0], 1); // width 1
+        assert_eq!(st.fused_width_hist[2], 1); // width 3
+        assert_eq!(st.fused_width_hist[3], 1); // width 4
+        assert!((st.mean_fused_width() - 8.0 / 3.0).abs() < 1e-9);
+        assert_eq!(levels[1].1.fused_width_hist[7], 1, "12 overflows to 8+");
+        // Aggregate: (8 + 2 + 12) rows over (3 + 2 + 1) groups.
+        assert!((m.mean_fused_width() - 22.0 / 6.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("fused_width="), "{s}");
+        let j = m.to_json();
+        assert!(j.req("mean_fused_width").unwrap().as_f64().unwrap() > 1.0);
+        let l = j.req("levels").unwrap().req("0.40").unwrap();
+        assert_eq!(l.req("fused_groups").unwrap().as_f64(), Some(3.0));
+        assert_eq!(l.req("fused_rows").unwrap().as_f64(), Some(8.0));
+        assert!(
+            (l.req("mean_fused_width").unwrap().as_f64().unwrap() - 8.0 / 3.0).abs() < 1e-9
+        );
     }
 
     #[test]

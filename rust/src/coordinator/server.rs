@@ -176,7 +176,7 @@ fn serve_thread<E: Engine>(
     stop: Arc<AtomicBool>,
 ) -> Result<(), Error> {
     // --- startup: all backend state lives and dies on this thread ------
-    let prepared: Prepared<E> = match E::prepare(&cfg, cache) {
+    let prepared: Prepared<E> = match E::prepare(&cfg, cache, Some(metrics.clone())) {
         Ok(p) => {
             let _ = ready_tx.send(Ok(p.seq_len));
             p
@@ -483,6 +483,9 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
             let mut copt = Some(&mut *guard);
             pool.sweep(ctx.model, rho, ctx.cfg.decode.stop_at_eos, &mut copt)
         };
+        // matrix-major observability: how wide this sweep's execution
+        // groups were (1 = lane-major fallback, > 1 = fused batch)
+        ctx.metrics.record_fused_sweep(rho, pool.last_sweep_groups());
         for ev in events {
             match ev {
                 LaneEvent::Token { slot, index, token } => {

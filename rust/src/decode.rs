@@ -61,12 +61,33 @@
 //! ([`Lane::step`]), so none can drift apart — admission order and lane
 //! reuse are invisible in the decoded tokens
 //! (`proptest.rs::continuous_props`).
+//!
+//! # Matrix-major fused sweeps
+//!
+//! [`LanePool::sweep`] executes matrix-major, not lane-major: active
+//! lanes whose next step is a pure incremental step and whose per-linear
+//! layouts are the *same shared objects* (the sharing a common
+//! [`LayoutCache`] gives same-selection batch-mates) are grouped, their
+//! step rows stacked into one (N, d_model) matrix, and each linear runs
+//! as **one** batched sparse matmul over the shared layout instead of N
+//! matvecs ([`crate::nn::Model::forward_step_batch_with`]). Attention,
+//! K/V appends and logits stay per-lane — K/V rows encode private
+//! history and are never shareable. Refresh steps, slide rebuilds and
+//! singleton groups take the per-lane path unchanged. Fusion is a pure
+//! execution-schedule change: tokens, logits and traces are bit-identical
+//! to per-lane sweeps (and to `decode_greedy`) for any arrival schedule,
+//! proven over random group compositions — mixed plans, refresh steps
+//! splitting a group mid-flight, lanes at different window positions —
+//! by `proptest.rs::continuous_props`.
 
 use crate::coordinator::request::argmax;
 use crate::moe::{self, layouts_for};
-use crate::nn::{FixedLayouts, KvCache, Model, StepScratch};
+use crate::nn::{FixedLayouts, KvCache, Model, StepBatchScratch, StepScratch};
 use crate::pruning::MaskPlan;
-use crate::tensor::LayoutCache;
+use crate::tensor::{fnv1a64, LayoutCache};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Knobs of one greedy decode.
@@ -250,6 +271,24 @@ impl Lane {
         token
     }
 
+    /// Can this lane's next step run through the fused matrix-major path?
+    /// Exactly the lanes whose [`Lane::step`] would take the incremental
+    /// `forward_step_with` branch: no refresh due at `step`, a KV cache
+    /// present, and the cache valid for the current window (it did not
+    /// slide and grew by exactly the one appended token) — i.e. the
+    /// `stale` predicate below, negated. Refresh steps (selection +
+    /// prefill) and slide rebuilds stay on the per-lane path.
+    fn fusible(&self, seq: usize, step: usize, plan: MaskPlan) -> bool {
+        if plan.refreshes_at(step) {
+            return false;
+        }
+        let Some(kv) = self.kv.as_ref() else {
+            return false;
+        };
+        let start = self.tokens.len().saturating_sub(seq);
+        start == self.prev_start && kv.len() + 1 == self.tokens.len() - start
+    }
+
     fn into_output(self) -> DecodeOutput {
         DecodeOutput {
             tokens: self.tokens,
@@ -348,6 +387,41 @@ pub struct BatchRequest<'a> {
 /// [`sweep`]: LanePool::sweep
 pub struct LanePool {
     slots: Vec<Option<PoolLane>>,
+    /// Occupied-slot count, maintained on admit/evict/finish so the serve
+    /// hot loop's occupancy checks never rescan the slots.
+    active_count: usize,
+    /// Free slot indices as a min-heap, so admission still fills the
+    /// lowest-index slot first (the pre-heap scan's order) in O(log n).
+    free_slots: BinaryHeap<Reverse<usize>>,
+    /// Run fusible same-layout lanes through the matrix-major batched
+    /// step (default). Off = the per-lane A/B baseline the fused-sweep
+    /// bench and the fusion property test compare against; outputs are
+    /// bit-identical either way.
+    fuse: bool,
+    /// Lazily-built matrix buffers for fused steps, reused across sweeps.
+    batch_scratch: Option<StepBatchScratch>,
+    /// Per-group fused widths of the most recent sweep (see
+    /// [`LanePool::last_sweep_groups`]).
+    last_groups: Vec<usize>,
+}
+
+/// Identity of a lane's per-linear layouts for fused-group formation: an
+/// FNV-1a hash over the `Arc` *pointers* of each linear's compressed
+/// layout, in `linear_names` order. Two lanes hash equal exactly when
+/// every linear executes the same shared layout object — the sharing a
+/// common [`LayoutCache`] already establishes for same-selection
+/// batch-mates (`identical_batch_mates_share_compressed_layouts`).
+/// Pointer identity is deliberately conservative: equal-content layouts
+/// compressed separately (no cache) group apart, which costs fusion
+/// opportunity but can never group lanes whose layouts differ. `None` if
+/// a linear has no layout yet (a lane that never refreshed — such lanes
+/// are not fusible anyway).
+fn layout_identity(layouts: &FixedLayouts, names: &[String]) -> Option<u64> {
+    let mut words = Vec::with_capacity(names.len());
+    for n in names {
+        words.push(Arc::as_ptr(layouts.get(n)?) as usize as u64);
+    }
+    Some(fnv1a64(words))
 }
 
 /// One occupied slot: the lane plus its per-request knobs and private
@@ -386,6 +460,11 @@ impl LanePool {
         assert!(capacity > 0, "a lane pool needs at least one lane");
         LanePool {
             slots: (0..capacity).map(|_| None).collect(),
+            active_count: 0,
+            free_slots: (0..capacity).map(Reverse).collect(),
+            fuse: true,
+            batch_scratch: None,
+            last_groups: Vec::new(),
         }
     }
 
@@ -393,18 +472,41 @@ impl LanePool {
         self.slots.len()
     }
 
-    /// Occupied lanes.
+    /// Occupied lanes — O(1), tracked across admit/evict/finish.
     pub fn active(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.active_count
     }
 
     pub fn is_idle(&self) -> bool {
-        self.active() == 0
+        self.active_count == 0
     }
 
-    /// Lowest-index free slot, if any.
+    /// Lowest-index free slot, if any — O(1) peek at the free-slot heap.
     pub fn free_slot(&self) -> Option<usize> {
-        self.slots.iter().position(|s| s.is_none())
+        self.free_slots.peek().map(|r| r.0)
+    }
+
+    /// Enable or disable matrix-major fusion of same-layout lanes
+    /// (default on). The off position is the per-lane A/B baseline:
+    /// tokens, logits and traces are bit-identical either way
+    /// (`proptest.rs::continuous_props` proves it over random schedules).
+    pub fn set_fuse(&mut self, fuse: bool) {
+        self.fuse = fuse;
+    }
+
+    /// Widths of the step groups the most recent [`LanePool::sweep`] ran:
+    /// one entry ≥ 2 per fused group (one batched matmul per linear served
+    /// that many lanes) and one `1` per lane stepped on the per-lane path.
+    /// Zero-step finishes contribute nothing. Feeds the fused-width
+    /// metrics histogram and the fused-sweep bench's structural assertion.
+    pub fn last_sweep_groups(&self) -> &[usize] {
+        &self.last_groups
+    }
+
+    /// Bookkeeping for a slot going empty (evict or finish).
+    fn release_slot(&mut self, slot: usize) {
+        self.active_count -= 1;
+        self.free_slots.push(Reverse(slot));
     }
 
     /// Admit a request into the lowest free slot (fresh lane: its first
@@ -420,13 +522,14 @@ impl LanePool {
         plan: MaskPlan,
         use_kv: bool,
     ) -> usize {
-        let slot = self.free_slot().expect("admit into a full lane pool");
+        let slot = self.free_slots.pop().expect("admit into a full lane pool").0;
         self.slots[slot] = Some(PoolLane {
             lane: Lane::new(model, prompt, lane_wants_kv(use_kv, max_new, plan)),
             plan,
             max_new,
             step: 0,
         });
+        self.active_count += 1;
         slot
     }
 
@@ -435,15 +538,30 @@ impl LanePool {
     /// empty slot — cancelling nothing is a caller bug.
     pub fn evict(&mut self, slot: usize) -> DecodeOutput {
         let pl = self.slots[slot].take().expect("evict from an empty lane");
+        self.release_slot(slot);
         pl.lane.into_output()
     }
 
-    /// One step-major sweep: run one decode step on every active lane (in
-    /// slot order), emitting a [`LaneEvent::Token`] per appended token and
-    /// a [`LaneEvent::Done`] for each lane that finished — finished slots
-    /// are free for admission as soon as `sweep` returns. All lanes run
-    /// at one snapped `rho` (the pool's batch key) through one shared
-    /// `cache`.
+    /// One step-major sweep: run one decode step on every active lane,
+    /// emitting a [`LaneEvent::Token`] per appended token and a
+    /// [`LaneEvent::Done`] for each lane that finished (in slot order) —
+    /// finished slots are free for admission as soon as `sweep` returns.
+    /// All lanes run at one snapped `rho` (the pool's batch key) through
+    /// one shared `cache`.
+    ///
+    /// Execution is **matrix-major**: lanes whose next step is a pure
+    /// incremental step ([`Lane::fusible`]) are grouped by layout identity
+    /// ([`layout_identity`] — the snapped ρ is already the pool's batch
+    /// key), and each group of ≥ 2 runs as one
+    /// [`Model::forward_step_batch_with`]: its step rows stacked into an
+    /// (N, d_model) matrix, **one** batched sparse matmul per linear
+    /// instead of N matvecs, K/V and logits scattered back per lane.
+    /// Singleton groups, refresh steps and slide rebuilds take the
+    /// existing per-lane [`Lane::step`] path. Per lane, tokens / logits /
+    /// traces are bit-identical to an all-per-lane sweep (and hence to
+    /// `decode_greedy`) — the batched step shares the per-lane path's
+    /// kernels and accumulation orders by construction; a fused batch's
+    /// wall time is split evenly across its lanes' step-time accounting.
     pub fn sweep(
         &mut self,
         model: &Model,
@@ -451,22 +569,133 @@ impl LanePool {
         stop_at_eos: bool,
         cache: &mut Option<&mut LayoutCache>,
     ) -> Vec<LaneEvent> {
-        let mut events = Vec::new();
-        for slot in 0..self.slots.len() {
+        self.last_groups.clear();
+        let n_slots = self.slots.len();
+        // token produced by this sweep's step, per slot (None = no step:
+        // empty slot or a zero-step lane finishing below)
+        let mut stepped: Vec<Option<i32>> = vec![None; n_slots];
+
+        // group fusible lanes by shared layout identity, preserving slot
+        // order within each group and ordering groups by first member
+        let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+        if self.fuse {
+            let seq = model.cfg.max_seq_len;
+            let names = model.cfg.linear_names();
+            for slot in 0..n_slots {
+                let Some(pl) = self.slots[slot].as_ref() else {
+                    continue;
+                };
+                if pl.step >= pl.max_new || !pl.lane.fusible(seq, pl.step, pl.plan) {
+                    continue;
+                }
+                let Some(key) = layout_identity(&pl.lane.layouts, &names) else {
+                    continue;
+                };
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, members)) => members.push(slot),
+                    None => groups.push((key, vec![slot])),
+                }
+            }
+            // singletons gain nothing from the matrix path; let them ride
+            // the per-lane stepper below
+            groups.retain(|(_, g)| g.len() >= 2);
+        }
+
+        // fused matrix-major steps: one batched sparse matmul per linear
+        // per group
+        for (_, group) in &groups {
+            if !self.batch_scratch.as_ref().is_some_and(|s| s.fits(&model.cfg)) {
+                self.batch_scratch = Some(StepBatchScratch::new(&model.cfg, n_slots));
+            }
+            let scratch = self.batch_scratch.as_mut().expect("batch scratch ensured");
+            // all members execute the same layout objects (that is the
+            // group key); cloning the map is n_linears Arc bumps
+            let layouts = self.slots[group[0]]
+                .as_ref()
+                .expect("grouped slot occupied")
+                .lane
+                .layouts
+                .clone();
+            let newest: Vec<i32> = group
+                .iter()
+                .map(|&s| {
+                    *self.slots[s]
+                        .as_ref()
+                        .expect("grouped slot occupied")
+                        .lane
+                        .tokens
+                        .last()
+                        .expect("lanes hold non-empty prompts")
+                })
+                .collect();
+            let mut kvs: Vec<&mut KvCache> = Vec::with_capacity(group.len());
+            let mut gi = 0;
+            for (si, slot) in self.slots.iter_mut().enumerate() {
+                if gi < group.len() && group[gi] == si {
+                    let pl = slot.as_mut().expect("grouped slot occupied");
+                    kvs.push(pl.lane.kv.as_mut().expect("fusible lanes carry kv"));
+                    gi += 1;
+                }
+            }
+            let t0 = Instant::now();
+            let logits = model.forward_step_batch_with(&newest, &layouts, &mut kvs, scratch);
+            // one batch wall time, split evenly: each lane's step-time
+            // share sums (with its trace) to the same partition the
+            // per-lane path records
+            let share = t0.elapsed().as_micros() as u64 / group.len() as u64;
+            drop(kvs);
+            for (i, &slot) in group.iter().enumerate() {
+                let pl = self.slots[slot].as_mut().expect("grouped slot occupied");
+                let row = logits.row(i);
+                let token = argmax(row);
+                pl.lane.step_us += share;
+                pl.lane.steps.push(StepTrace {
+                    token,
+                    logits: row.to_vec(),
+                    refreshed: false,
+                    elapsed_us: share,
+                });
+                pl.step += 1;
+                stepped[slot] = Some(token);
+            }
+            self.last_groups.push(group.len());
+        }
+
+        // per-lane path: refresh / rebuild steps, kv-off lanes, singleton
+        // groups — in slot order, so shared-cache touch order is stable
+        for slot in 0..n_slots {
+            if stepped[slot].is_some() {
+                continue;
+            }
             let Some(pl) = self.slots[slot].as_mut() else {
                 continue;
             };
             // zero-step lanes (max_new = 0) finish without ever stepping
             if pl.step >= pl.max_new {
+                continue;
+            }
+            let token = pl.lane.step(model, pl.step, rho, pl.plan, cache);
+            pl.step += 1;
+            stepped[slot] = Some(token);
+            self.last_groups.push(1);
+        }
+
+        // deliver events in slot order, exactly as the lane-major sweep
+        // did: append-or-EOS, then Done for finished lanes
+        let mut events = Vec::new();
+        for slot in 0..n_slots {
+            let Some(pl) = self.slots[slot].as_mut() else {
+                continue;
+            };
+            let Some(token) = stepped[slot] else {
                 let pl = self.slots[slot].take().expect("occupied slot");
+                self.release_slot(slot);
                 events.push(LaneEvent::Done {
                     slot,
                     output: pl.lane.into_output(),
                 });
                 continue;
-            }
-            let token = pl.lane.step(model, pl.step, rho, pl.plan, cache);
-            pl.step += 1;
+            };
             let mut finished = pl.step >= pl.max_new;
             if stop_at_eos && token == model.cfg.eos_id {
                 // EOS terminates the lane and is not appended: no Token
@@ -478,6 +707,7 @@ impl LanePool {
             }
             if finished {
                 let pl = self.slots[slot].take().expect("occupied slot");
+                self.release_slot(slot);
                 events.push(LaneEvent::Done {
                     slot,
                     output: pl.lane.into_output(),
@@ -508,7 +738,25 @@ pub fn decode_batch(
     rho: f64,
     stop_at_eos: bool,
     use_kv: bool,
+    cache: Option<&mut LayoutCache>,
+) -> Vec<DecodeOutput> {
+    decode_batch_observed(model, items, rho, stop_at_eos, use_kv, cache, |_| {})
+}
+
+/// [`decode_batch`] with a per-sweep observer: after every pool sweep,
+/// `on_sweep` receives the sweep's step-group widths
+/// ([`LanePool::last_sweep_groups`]). The coordinator's drain path feeds
+/// these into the per-ρ fused-width metrics histogram; observation cannot
+/// change the decode (the observer runs between sweeps, after all state
+/// updates).
+pub fn decode_batch_observed(
+    model: &Model,
+    items: &[BatchRequest<'_>],
+    rho: f64,
+    stop_at_eos: bool,
+    use_kv: bool,
     mut cache: Option<&mut LayoutCache>,
+    mut on_sweep: impl FnMut(&[usize]),
 ) -> Vec<DecodeOutput> {
     if items.is_empty() {
         return Vec::new();
@@ -524,6 +772,7 @@ pub fn decode_batch(
                 outs[slot] = Some(output);
             }
         }
+        on_sweep(pool.last_sweep_groups());
     }
     outs.into_iter()
         .map(|o| o.expect("every admitted lane finishes"))
@@ -957,5 +1206,193 @@ mod tests {
         let mut pool = LanePool::new(1);
         pool.admit(&m, &[1], 2, MaskPlan::PruneOnce, true);
         pool.admit(&m, &[2], 2, MaskPlan::PruneOnce, true);
+    }
+
+    // ---- matrix-major fused sweeps -----------------------------------------
+
+    /// Drain a pool of identical-knob lanes, returning (outputs in slot
+    /// order, all per-sweep group widths).
+    fn drain_pool(
+        m: &Model,
+        prompts: &[&[i32]],
+        max_new: usize,
+        plan: MaskPlan,
+        fuse: bool,
+        cache: &mut LayoutCache,
+    ) -> (Vec<DecodeOutput>, Vec<Vec<usize>>) {
+        let mut pool = LanePool::new(prompts.len());
+        pool.set_fuse(fuse);
+        for p in prompts {
+            pool.admit(m, p, max_new, plan, true);
+        }
+        let mut copt = Some(&mut *cache);
+        let mut outs: Vec<Option<DecodeOutput>> = prompts.iter().map(|_| None).collect();
+        let mut widths = Vec::new();
+        while !pool.is_idle() {
+            for ev in pool.sweep(m, 0.5, false, &mut copt) {
+                if let LaneEvent::Done { slot, output } = ev {
+                    outs[slot] = Some(output);
+                }
+            }
+            widths.push(pool.last_sweep_groups().to_vec());
+        }
+        (
+            outs.into_iter().map(|o| o.expect("drained")).collect(),
+            widths,
+        )
+    }
+
+    #[test]
+    fn fused_sweep_bit_identical_to_per_lane_and_actually_fuses() {
+        // three same-prompt PruneOnce lanes through a shared cache share
+        // layout Arcs, so every post-prefill sweep must run one 3-wide
+        // fused group — and the outputs must equal both the unfused pool
+        // and independent decode_greedy, logit for logit
+        let m = tiny_model();
+        let prompts: [&[i32]; 3] = [&[9, 1, 7], &[9, 1, 7], &[9, 1, 7]];
+        let mut cache_a = crate::tensor::LayoutCache::new(64);
+        let mut cache_b = crate::tensor::LayoutCache::new(64);
+        let (fused, widths) = drain_pool(&m, &prompts, 5, MaskPlan::PruneOnce, true, &mut cache_a);
+        let (plain, _) = drain_pool(&m, &prompts, 5, MaskPlan::PruneOnce, false, &mut cache_b);
+        for (i, (a, b)) in fused.iter().zip(&plain).enumerate() {
+            assert_outputs_identical(&format!("lane {i} fused vs per-lane"), a, b);
+            assert_outputs_identical(
+                &format!("lane {i} fused vs greedy"),
+                a,
+                &greedy_ref(&m, prompts[i], 5),
+            );
+        }
+        // sweep 0 is all prefills (3 per-lane widths); sweeps 1..=4 must
+        // each be exactly one 3-wide group
+        assert_eq!(widths[0], vec![1, 1, 1], "prefill sweep is per-lane");
+        for (s, w) in widths.iter().enumerate().skip(1) {
+            assert_eq!(*w, vec![3], "sweep {s} must fuse all lanes");
+        }
+    }
+
+    #[test]
+    fn refresh_splits_fused_group_mid_flight() {
+        // Refresh(3) lanes admitted one sweep apart refresh on different
+        // sweeps: the fused group forms (both between refreshes, same
+        // cached selection), splits whenever either lane refreshes, and
+        // re-forms after — and every token must still equal an
+        // independent greedy decode
+        let m = tiny_model();
+        let mut cache = crate::tensor::LayoutCache::new(64);
+        let mut copt = Some(&mut cache);
+        let mut pool = LanePool::new(2);
+        let prompt: &[i32] = &[3, 1, 4, 1];
+        pool.admit(&m, prompt, 6, MaskPlan::Refresh(3), true);
+        pool.sweep(&m, 0.5, false, &mut copt); // lane 0 prefills alone
+        pool.admit(&m, prompt, 6, MaskPlan::Refresh(3), true);
+        let mut outs: Vec<Option<DecodeOutput>> = vec![None, None];
+        let mut widths: Vec<Vec<usize>> = Vec::new();
+        let mut guard = 0;
+        while !pool.is_idle() {
+            for ev in pool.sweep(&m, 0.5, false, &mut copt) {
+                if let LaneEvent::Done { slot, output } = ev {
+                    outs[slot] = Some(output);
+                }
+            }
+            widths.push(pool.last_sweep_groups().to_vec());
+            guard += 1;
+            assert!(guard < 20, "pool failed to drain");
+        }
+        let reference = decode_greedy(&m, prompt, &cfg_nokv(MaskPlan::Refresh(3), 6), None);
+        for (i, o) in outs.iter().enumerate() {
+            assert_outputs_identical(
+                &format!("offset-phase lane {i}"),
+                o.as_ref().expect("drained"),
+                &reference,
+            );
+        }
+        // the schedule: lane 0 refreshes at its steps 0/3 (sweeps 1/4
+        // counting from this loop's first sweep... structural claim only:
+        // some sweep fused both lanes AND some mid-generation sweep with
+        // both lanes active ran them apart — refresh split the group
+        let fused_sweeps = widths.iter().filter(|w| w.contains(&2)).count();
+        let split_sweeps = widths.iter().filter(|w| w.len() == 2).count();
+        assert!(fused_sweeps > 0, "offset Refresh(3) lanes never fused");
+        assert!(split_sweeps > 0, "refresh never split the fused group");
+    }
+
+    #[test]
+    fn unshared_layouts_never_fuse() {
+        // without a shared LayoutCache each lane compresses privately:
+        // equal-content layouts in distinct Arcs must group apart
+        let m = tiny_model();
+        let mut pool = LanePool::new(2);
+        let prompt: &[i32] = &[5, 6, 7];
+        pool.admit(&m, prompt, 4, MaskPlan::PruneOnce, true);
+        pool.admit(&m, prompt, 4, MaskPlan::PruneOnce, true);
+        let mut none = None;
+        while !pool.is_idle() {
+            pool.sweep(&m, 0.5, false, &mut none);
+            assert!(
+                pool.last_sweep_groups().iter().all(|&w| w == 1),
+                "privately-compressed lanes must not fuse"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_slot_tracking_stays_consistent() {
+        // O(1) active/free bookkeeping must agree with the slots under
+        // admit / evict / zero-step finish / drain, and admission must
+        // keep filling the lowest free slot
+        let m = tiny_model();
+        let mut pool = LanePool::new(3);
+        assert_eq!((pool.active(), pool.free_slot()), (0, Some(0)));
+        let a = pool.admit(&m, &[1, 2], 3, MaskPlan::PruneOnce, true);
+        let b = pool.admit(&m, &[3, 4], 3, MaskPlan::PruneOnce, true);
+        let c = pool.admit(&m, &[5, 6], 0, MaskPlan::PruneOnce, true);
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(pool.active(), 3);
+        assert!(pool.free_slot().is_none());
+        pool.evict(1);
+        assert_eq!((pool.active(), pool.free_slot()), (2, Some(1)));
+        let mut none = None;
+        pool.sweep(&m, 0.5, false, &mut none); // zero-step lane 2 finishes
+        assert_eq!(pool.active(), 1);
+        assert_eq!(pool.free_slot(), Some(1), "lowest free slot first");
+        let d = pool.admit(&m, &[7], 1, MaskPlan::PruneOnce, true);
+        assert_eq!(d, 1, "freed slot 1 reused before slot 2");
+        while !pool.is_idle() {
+            pool.sweep(&m, 0.5, false, &mut none);
+        }
+        assert_eq!((pool.active(), pool.free_slot()), (0, Some(0)));
+    }
+
+    #[test]
+    fn decode_batch_observed_reports_group_widths() {
+        let m = tiny_model();
+        let prompt: &[i32] = &[9, 1, 7];
+        let items = [
+            batch_item(prompt, 4, MaskPlan::PruneOnce),
+            batch_item(prompt, 4, MaskPlan::PruneOnce),
+        ];
+        let mut cache = crate::tensor::LayoutCache::new(64);
+        let mut sweeps: Vec<Vec<usize>> = Vec::new();
+        let outs = decode_batch_observed(&m, &items, 0.5, false, true, Some(&mut cache), |g| {
+            sweeps.push(g.to_vec())
+        });
+        assert_eq!(outs.len(), 2);
+        assert_eq!(sweeps.len(), 4, "one observation per sweep");
+        assert_eq!(sweeps[0], vec![1, 1], "prefill sweep per-lane");
+        for s in &sweeps[1..] {
+            assert_eq!(*s, vec![2], "shared-cache mates fuse");
+        }
+        // observed run must equal the unobserved entry point
+        let plain = decode_batch(
+            &m,
+            &items,
+            0.5,
+            false,
+            true,
+            Some(&mut crate::tensor::LayoutCache::new(64)),
+        );
+        for (i, (a, b)) in outs.iter().zip(&plain).enumerate() {
+            assert_outputs_identical(&format!("observed lane {i}"), a, b);
+        }
     }
 }

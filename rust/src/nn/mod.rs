@@ -27,7 +27,7 @@ use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
 use crate::tensor::{
     layernorm_row_into, layernorm_rows, log_softmax, matmul_tn_sparse_auto,
-    matvec_nt_sparse_into, relu, Mat, RowSparse,
+    matmul_tn_sparse_auto_into, matvec_nt_sparse_into, relu, Mat, RowSparse,
 };
 use crate::util::error::Error;
 pub use kv::KvCache;
@@ -103,6 +103,74 @@ impl StepScratch {
             proj: Vec::with_capacity(d),
             inner: Vec::with_capacity(di),
             attn_logits: vec![0.0; cfg.max_seq_len],
+            d_model: d,
+        }
+    }
+
+    /// Does this scratch match `cfg`'s widths?
+    pub fn fits(&self, cfg: &ModelConfig) -> bool {
+        self.d_model == cfg.d_model && self.attn_logits.len() >= cfg.max_seq_len
+    }
+}
+
+/// Reusable matrix buffers for [`Model::forward_step_batch_with`] — the
+/// matrix-major analogue of [`StepScratch`].
+///
+/// A fused sweep stacks N same-layout lanes' step rows into (N, width)
+/// matrices so each linear runs as **one** sparse matmul instead of N
+/// matvecs. All intermediates (residual stream, post-LN activations, the
+/// q/k/v/attention/projection/FFN matrices, plus the transposed input and
+/// output staging the sparse kernel's `*_into` forms consume) live here
+/// and are reshaped per call via [`Mat::resize_zeroed`] /
+/// [`Mat::transpose_into`], so a steady-state fused sweep allocates only
+/// the returned logits matrix. Every buffer is fully overwritten before it
+/// is read — reuse is bit-identical to allocation by construction.
+pub struct StepBatchScratch {
+    /// Residual stream rows, one per lane (N, d_model).
+    h: Mat,
+    /// Post-layernorm activation rows (N, d_model).
+    norm: Mat,
+    /// Transposed linear input (width, N) — shared across q/k/v.
+    xt: Mat,
+    /// Transposed linear output staging (d_out, N).
+    yt: Mat,
+    /// Attention projections (N, d_model each).
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Attention output rows (N, d_model).
+    attn: Mat,
+    /// o / fc2 projection outputs (N, d_model).
+    proj: Mat,
+    /// FFN inner rows (N, d_inner).
+    inner: Mat,
+    /// Attention score scratch (`max_seq_len`; shared across lanes — each
+    /// lane's attention row overwrites it before reading).
+    attn_logits: Vec<f32>,
+    /// Per-lane window positions, captured at entry.
+    pos: Vec<usize>,
+    /// Width this scratch was sized for (shape check against the model).
+    d_model: usize,
+}
+
+impl StepBatchScratch {
+    /// Preallocate every buffer for `cfg`'s widths and up to `max_lanes`
+    /// fused lanes (smaller groups reuse the same backing storage).
+    pub fn new(cfg: &ModelConfig, max_lanes: usize) -> StepBatchScratch {
+        let (d, di, n) = (cfg.d_model, cfg.d_inner(), max_lanes.max(1));
+        StepBatchScratch {
+            h: Mat::zeros(n, d),
+            norm: Mat::zeros(n, d),
+            xt: Mat::zeros(d, n),
+            yt: Mat::zeros(di, n),
+            q: Mat::zeros(n, d),
+            k: Mat::zeros(n, d),
+            v: Mat::zeros(n, d),
+            attn: Mat::zeros(n, d),
+            proj: Mat::zeros(n, d),
+            inner: Mat::zeros(n, di),
+            attn_logits: vec![0.0; cfg.max_seq_len],
+            pos: Vec::with_capacity(n),
             d_model: d,
         }
     }
@@ -513,6 +581,180 @@ impl Model {
         // the step's *product* and escapes the scratch, so it allocates)
         let last = Mat::from_vec(1, cfg.d_model, s.norm.clone());
         last.matmul_nt_auto(&self.mats["tok_emb"]).data
+    }
+
+    /// One incremental decode step for N lanes *sharing the same layouts*,
+    /// executed matrix-major: the lanes' step rows are stacked into
+    /// (N, width) matrices so every linear runs as **one**
+    /// [`crate::tensor::matmul_tn_sparse_auto_into`] over the shared
+    /// layout instead of N independent matvecs. Attention stays per-lane —
+    /// K/V rows are private history and are read from / appended to each
+    /// lane's own [`KvCache`] — as do the embedding, layernorm and
+    /// residual rows (all row-local ops on the stacked matrices).
+    ///
+    /// Returns the (N, vocab) next-token logits, row `i` for lane `i`.
+    ///
+    /// Row `i` is bit-identical to [`Model::forward_step_with`] on lane
+    /// `i` by construction:
+    /// - the AXPY sparse kernel accumulates each output element `(j, lane)`
+    ///   over the row's active weights in ascending stored order — exactly
+    ///   the order `matvec_nt_sparse_into` uses for that element (and the
+    ///   W-row-parallel variant is bit-identical to serial);
+    /// - layernorm and attention route through the same single workers
+    ///   ([`crate::tensor::layernorm_row_into`], [`attention_head_pos`]);
+    /// - the dense LM head accumulates each output row independently in
+    ///   the same k-order, so an (N, d) head equals N (1, d) heads.
+    ///
+    /// Lanes may sit at *different* window positions — only the layouts
+    /// must be shared. `proptest.rs::continuous_props` proves the
+    /// composition over random arrival schedules, plans and refresh
+    /// phases.
+    pub fn forward_step_batch_with(
+        &self,
+        newest: &[i32],
+        layouts: &FixedLayouts,
+        kvs: &mut [&mut KvCache],
+        s: &mut StepBatchScratch,
+    ) -> Mat {
+        let cfg = &self.cfg;
+        let n = newest.len();
+        assert_eq!(n, kvs.len(), "one KvCache per fused lane");
+        assert!(n >= 1, "batched step needs at least one lane");
+        assert!(s.fits(cfg), "StepBatchScratch shape does not match model");
+        s.pos.clear();
+        for kv in kvs.iter() {
+            let pos = kv.len();
+            assert!(pos >= 1, "forward_step needs a prefilled cache");
+            assert!(
+                pos < cfg.max_seq_len,
+                "cache full: the window must slide — rebuild via forward_prefill_last"
+            );
+            assert!(kv.fits(cfg), "KvCache shape does not match model");
+            s.pos.push(pos);
+        }
+
+        // embed each lane's new token at its own window-relative position
+        let d = cfg.d_model;
+        let tok_emb = &self.mats["tok_emb"];
+        let pos_emb = &self.mats["pos_emb"];
+        s.h.resize_zeroed(n, d);
+        s.attn.resize_zeroed(n, d);
+        for (i, &tok) in newest.iter().enumerate() {
+            let tok_row = tok_emb.row(tok.clamp(0, cfg.vocab_size as i32 - 1) as usize);
+            let pos_row = pos_emb.row(s.pos[i]);
+            for (dst, (a, b)) in s.h.row_mut(i).iter_mut().zip(tok_row.iter().zip(pos_row)) {
+                *dst = a + b;
+            }
+        }
+
+        for (li, names) in self.layer_names.iter().enumerate() {
+            s.norm.resize_zeroed(n, d);
+            for i in 0..n {
+                layernorm_row_into(
+                    s.h.row(i),
+                    &self.vecs[&names.ln1_g],
+                    &self.vecs[&names.ln1_b],
+                    1e-5,
+                    s.norm.row_mut(i),
+                );
+            }
+            // q/k/v consume the same activations: transpose once, run one
+            // sparse matmul per linear over the whole group
+            s.norm.transpose_into(&mut s.xt);
+            self.linear_batch_into(&s.xt, &names.q, layouts, &mut s.yt, &mut s.q);
+            self.linear_batch_into(&s.xt, &names.k, layouts, &mut s.yt, &mut s.k);
+            self.linear_batch_into(&s.xt, &names.v, layouts, &mut s.yt, &mut s.v);
+            // each lane's new row joins its own cache first so attention
+            // sees positions 0..=pos — exactly the per-lane step's order
+            for i in 0..n {
+                kvs[i].write_row(li, s.pos[i], s.k.row(i), s.v.row(i));
+            }
+            for i in 0..n {
+                self.attention_row_into(
+                    &*kvs[i],
+                    li,
+                    s.pos[i],
+                    s.q.row(i),
+                    s.attn.row_mut(i),
+                    &mut s.attn_logits,
+                );
+            }
+            s.attn.transpose_into(&mut s.xt);
+            self.linear_batch_into(&s.xt, &names.o, layouts, &mut s.yt, &mut s.proj);
+            for i in 0..n {
+                for (a, b) in s.h.row_mut(i).iter_mut().zip(s.proj.row(i)) {
+                    *a += b;
+                }
+            }
+
+            for i in 0..n {
+                layernorm_row_into(
+                    s.h.row(i),
+                    &self.vecs[&names.ln2_g],
+                    &self.vecs[&names.ln2_b],
+                    1e-5,
+                    s.norm.row_mut(i),
+                );
+            }
+            s.norm.transpose_into(&mut s.xt);
+            self.linear_batch_into(&s.xt, &names.fc1, layouts, &mut s.yt, &mut s.inner);
+            for x in &mut s.inner.data {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+            }
+            s.inner.transpose_into(&mut s.xt);
+            self.linear_batch_into(&s.xt, &names.fc2, layouts, &mut s.yt, &mut s.proj);
+            for i in 0..n {
+                for (a, b) in s.h.row_mut(i).iter_mut().zip(s.proj.row(i)) {
+                    *a += b;
+                }
+            }
+        }
+        for (i, kv) in kvs.iter_mut().enumerate() {
+            kv.set_len(s.pos[i] + 1);
+        }
+
+        for i in 0..n {
+            layernorm_row_into(
+                s.h.row(i),
+                &self.vecs["ln_f.g"],
+                &self.vecs["ln_f.b"],
+                1e-5,
+                s.norm.row_mut(i),
+            );
+        }
+        // same tied head as the per-lane step; each output row of the
+        // dense kernel is accumulated independently, so the (N, V) matrix
+        // is row-for-row the N single-lane heads
+        s.norm.matmul_nt_auto(&self.mats["tok_emb"])
+    }
+
+    /// One linear over a *stacked group* of activation rows under fixed
+    /// layouts — the matrix-major mirror of [`Model::linear_row_into`]
+    /// (same layout lookup, same missing-layout panic, bias added per row
+    /// in the same element order). `xt` carries the group's activations
+    /// already transposed to (d_in, N); `yt` stages the kernel's natural
+    /// transposed output; `out` receives the (N, d_out) result.
+    fn linear_batch_into(
+        &self,
+        xt: &Mat,
+        names: &LinearNames,
+        layouts: &FixedLayouts,
+        yt: &mut Mat,
+        out: &mut Mat,
+    ) {
+        let rs = layouts
+            .get(&names.w)
+            .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
+        matmul_tn_sparse_auto_into(xt, rs, yt);
+        yt.transpose_into(out);
+        let b = &self.vecs[&names.b];
+        for i in 0..out.rows {
+            for (a, bv) in out.row_mut(i).iter_mut().zip(b) {
+                *a += bv;
+            }
+        }
     }
 
     /// One linear on a single activation row under fixed layouts — the
@@ -1082,6 +1324,74 @@ mod tests {
             let reused = m.forward_step_with(t, &layouts, &mut kv_b, &mut scratch);
             assert_eq!(fresh, reused);
         }
+    }
+
+    #[test]
+    fn batched_step_bit_identical_to_per_lane_steps() {
+        // the matrix-major step must agree logit-for-logit with N
+        // independent per-lane steps over the same shared layouts, with
+        // lanes at *different* window positions, and the reused batch
+        // scratch must stay bit-identical across consecutive sweeps
+        let m = random_model(&tiny(), 23);
+        let prompts: [&[i32]; 3] = [&[5, 11, 23], &[7, 3], &[9, 8, 7, 6]];
+        let sel_toks: Vec<i32> = vec![5, 11, 23, 47];
+        let layouts = fixed_layouts(&m, &sel_toks, 0.5);
+
+        let mut kv_solo: Vec<KvCache> = Vec::new();
+        let mut kv_fused: Vec<KvCache> = Vec::new();
+        for p in prompts {
+            let mut a = KvCache::new(&m.cfg);
+            let mut b = KvCache::new(&m.cfg);
+            m.forward_prefill_last(p, p.len(), &layouts, &mut a);
+            m.forward_prefill_last(p, p.len(), &layouts, &mut b);
+            kv_solo.push(a);
+            kv_fused.push(b);
+        }
+
+        let mut scratch = StepBatchScratch::new(&m.cfg, prompts.len());
+        let mut newest: Vec<i32> = vec![42, 17, 31];
+        for sweep in 0..3 {
+            let solo: Vec<Vec<f32>> = newest
+                .iter()
+                .zip(kv_solo.iter_mut())
+                .map(|(&t, kv)| m.forward_step(t, &layouts, kv))
+                .collect();
+            let mut refs: Vec<&mut KvCache> = kv_fused.iter_mut().collect();
+            let fused = m.forward_step_batch_with(&newest, &layouts, &mut refs, &mut scratch);
+            assert_eq!((fused.rows, fused.cols), (3, m.cfg.vocab_size));
+            for (i, want) in solo.iter().enumerate() {
+                assert_eq!(fused.row(i), want.as_slice(), "sweep {sweep} lane {i}");
+                assert_eq!(kv_fused[i].len(), kv_solo[i].len());
+            }
+            // feed each lane its own argmax so positions keep diverging
+            newest = solo
+                .iter()
+                .map(|l| {
+                    l.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap()
+                })
+                .collect();
+        }
+    }
+
+    #[test]
+    fn batched_step_single_lane_matches_row_step() {
+        // a singleton group through the batch path is still exact
+        let m = random_model(&tiny(), 24);
+        let toks: Vec<i32> = vec![2, 4, 6];
+        let layouts = fixed_layouts(&m, &toks, 0.6);
+        let mut kv_a = KvCache::new(&m.cfg);
+        let mut kv_b = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks, 3, &layouts, &mut kv_a);
+        m.forward_prefill_last(&toks, 3, &layouts, &mut kv_b);
+        let solo = m.forward_step(8, &layouts, &mut kv_a);
+        let mut scratch = StepBatchScratch::new(&m.cfg, 1);
+        let mut refs: Vec<&mut KvCache> = vec![&mut kv_b];
+        let fused = m.forward_step_batch_with(&[8], &layouts, &mut refs, &mut scratch);
+        assert_eq!(fused.row(0), solo.as_slice());
     }
 
     #[test]

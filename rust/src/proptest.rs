@@ -762,7 +762,22 @@ mod continuous_props {
         arrivals: &[Arrival],
         cache: &mut LayoutCache,
     ) -> (Vec<DecodeOutput>, Vec<Vec<i32>>) {
+        run_schedule_fused(model, lanes, rho, arrivals, cache, true)
+    }
+
+    /// `run_schedule` with the pool's matrix-major fusion forced on or
+    /// off — the lane-major (`fuse = false`) run is the per-lane
+    /// reference the fused path must be bit-identical to.
+    fn run_schedule_fused(
+        model: &Model,
+        lanes: usize,
+        rho: f64,
+        arrivals: &[Arrival],
+        cache: &mut LayoutCache,
+        fuse: bool,
+    ) -> (Vec<DecodeOutput>, Vec<Vec<i32>>) {
         let mut pool = LanePool::new(lanes);
+        pool.set_fuse(fuse);
         let mut outputs: Vec<Option<DecodeOutput>> = vec![None; arrivals.len()];
         let mut streamed: Vec<Vec<i32>> = vec![Vec::new(); arrivals.len()];
         // which request occupies each slot
@@ -874,6 +889,48 @@ mod continuous_props {
         )
     }
 
+    /// Matrix-major fusion property (tentpole of the fused-sweep PR):
+    /// over random group compositions — mixed plans, duplicate and
+    /// divergent prompts, ragged `max_new`, staggered arrivals, refresh
+    /// steps that split a group mid-flight, lanes at different window
+    /// positions — a fused pool decodes bit-identically (tokens, logits,
+    /// refresh counts, stream order) to the same schedule with fusion
+    /// forced off. Prefill/refresh steps never fuse by construction, so
+    /// every case also exercises the group-forming/splitting boundary.
+    fn prop_fused_sweep_equals_lane_major(input: &(u64, f64)) -> PropResult {
+        let (model, lanes, rho, arrivals) = case(input.0, input.1);
+        let mut cache_fused = LayoutCache::new(4096);
+        let (fused, fused_stream) =
+            run_schedule_fused(&model, lanes, rho, &arrivals, &mut cache_fused, true);
+        let mut cache_lane = LayoutCache::new(4096);
+        let (lane_major, lane_stream) =
+            run_schedule_fused(&model, lanes, rho, &arrivals, &mut cache_lane, false);
+        for (i, a) in arrivals.iter().enumerate() {
+            bit_identical(
+                &format!(
+                    "request {i} fused vs lane-major (lanes={lanes}, plan={})",
+                    a.plan.label()
+                ),
+                &fused[i],
+                &lane_major[i],
+            )?;
+            ensure(
+                fused_stream[i] == lane_stream[i],
+                format!("request {i}: fused stream != lane-major stream"),
+            )?;
+        }
+        // fusion only changes how steps execute, never what compresses:
+        // both runs must exercise the layout cache identically
+        ensure(
+            cache_fused.misses() == cache_lane.misses(),
+            "fused run compressed a different number of layouts",
+        )?;
+        ensure(
+            cache_fused.hits() == cache_lane.hits(),
+            "fused run hit the cache a different number of times",
+        )
+    }
+
     fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
         (r.next_u64(), r.next_f64())
     }
@@ -881,6 +938,11 @@ mod continuous_props {
     #[test]
     fn continuous_batching_token_identical_to_independent_greedy() {
         check(401, 8, gen_seed_rho, prop_schedule_invariant);
+    }
+
+    #[test]
+    fn fused_sweeps_bit_identical_to_lane_major_sweeps() {
+        check(402, 8, gen_seed_rho, prop_fused_sweep_equals_lane_major);
     }
 }
 

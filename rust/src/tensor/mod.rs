@@ -11,7 +11,8 @@ mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
 pub use sparse::{
-    fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_par, matvec_nt_sparse,
+    fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_auto_into,
+    matmul_tn_sparse_into, matmul_tn_sparse_par, matmul_tn_sparse_par_into, matvec_nt_sparse,
     matvec_nt_sparse_into, rho_milli, LayoutCache, LayoutKey, RowSparse,
 };
 
@@ -82,13 +83,35 @@ impl Mat {
     /// Transpose (copy).
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-owned matrix (reshaped to `(cols, rows)`,
+    /// every element overwritten) — the allocation-free form of [`Mat::t`]
+    /// used by the batched decode step, which transposes the same scratch
+    /// matrices every sweep. Writes in the same element order as `t()`, so
+    /// reuse is bit-identical to allocation by construction.
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.resize_zeroed(self.cols, self.rows);
         for i in 0..self.rows {
             let row = self.row(i);
             for (j, &v) in row.iter().enumerate() {
                 out.data[j * self.rows + i] = v;
             }
         }
-        out
+    }
+
+    /// Reshape to `(rows, cols)` with every element zeroed, keeping the
+    /// backing allocation when it is already large enough. The scratch
+    /// primitive behind the `*_into` kernels: a reused buffer starts from
+    /// the exact state a fresh `Mat::zeros` would, so downstream
+    /// accumulation is bit-identical regardless of what the buffer held.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
     }
 
     /// `self @ other` — blocked i-k-j loop (cache-friendly row-major form).
@@ -420,6 +443,32 @@ mod tests {
         for (x, y) in got.data.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn transpose_into_matches_t_over_dirty_buffers() {
+        let mut rng = Pcg32::new(14, 0);
+        let mut out = randmat(&mut rng, 9, 2); // wrong shape, stale contents
+        for (r, c) in [(3, 5), (1, 7), (6, 1), (4, 4)] {
+            let a = randmat(&mut rng, r, c);
+            a.transpose_into(&mut out);
+            let want = a.t();
+            assert_eq!((out.rows, out.cols), (c, r));
+            assert_eq!(out.data, want.data, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn resize_zeroed_clears_and_reshapes() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        m.resize_zeroed(3, 5);
+        assert_eq!((m.rows, m.cols), (3, 5));
+        assert!(m.data.iter().all(|&v| v == 0.0));
+        assert_eq!(m.data.len(), 15);
+        // shrinking keeps the invariant too
+        m.data.fill(7.0);
+        m.resize_zeroed(1, 2);
+        assert_eq!(m.data, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -326,21 +326,44 @@ fn tn_sparse_rows(xt: &Mat, w: &RowSparse, lo: usize, hi: usize, out: &mut [f32]
 /// callers that feed several linears from the same activation matrix
 /// (q/k/v in a transformer block) transpose once and reuse it.
 pub fn matmul_tn_sparse(xt: &Mat, w: &RowSparse) -> Mat {
+    let mut out_t = Mat::zeros(0, 0);
+    matmul_tn_sparse_into(xt, w, &mut out_t);
+    out_t.t()
+}
+
+/// Allocation-free core of [`matmul_tn_sparse`]: accumulates the product
+/// in its natural *transposed* `(w.rows, T)` layout into a caller-owned
+/// matrix (reshaped and zeroed via [`Mat::resize_zeroed`], so reuse is
+/// bit-identical to allocation). Callers that need the `(T, w.rows)`
+/// orientation transpose back with [`Mat::transpose_into`]; the batched
+/// decode step keeps both buffers in lane scratch and allocates nothing
+/// per sweep.
+pub fn matmul_tn_sparse_into(xt: &Mat, w: &RowSparse, out_t: &mut Mat) {
     assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
     let (m, n) = (xt.cols, w.rows);
-    let mut out_t = Mat::zeros(n, m);
+    out_t.resize_zeroed(n, m);
     tn_sparse_rows(xt, w, 0, n, &mut out_t.data);
-    out_t.t()
 }
 
 /// [`matmul_tn_sparse`] with the W-rows partitioned across the pool's
 /// workers (each output row is owned by exactly one worker, accumulated in
 /// the same order as the serial kernel — bit-identical results).
 pub fn matmul_tn_sparse_par(xt: &Mat, w: &RowSparse, pool: &ThreadPool) -> Mat {
+    let mut out_t = Mat::zeros(0, 0);
+    matmul_tn_sparse_par_into(xt, w, pool, &mut out_t);
+    out_t.t()
+}
+
+/// Allocation-free core of [`matmul_tn_sparse_par`]: the W-row-partitioned
+/// kernel writing the transposed `(w.rows, T)` product into a caller-owned
+/// matrix. Bit-identical to [`matmul_tn_sparse_into`] — every output row
+/// is owned by exactly one worker and accumulated in the serial order.
+pub fn matmul_tn_sparse_par_into(xt: &Mat, w: &RowSparse, pool: &ThreadPool, out_t: &mut Mat) {
     assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
     let (m, n) = (xt.cols, w.rows);
     if pool.size() <= 1 || n <= 1 {
-        return matmul_tn_sparse(xt, w);
+        matmul_tn_sparse_into(xt, w, out_t);
+        return;
     }
     // ~2 chunks per worker for load balance without oversplitting
     let chunks = (pool.size() * 2).min(n);
@@ -354,21 +377,28 @@ pub fn matmul_tn_sparse_par(xt: &Mat, w: &RowSparse, pool: &ThreadPool) -> Mat {
         tn_sparse_rows(xt, w, lo, hi, &mut part);
         part
     });
-    let mut out_t = Mat::zeros(n, m);
+    out_t.resize_zeroed(n, m);
     for ((lo, hi), part) in ranges.into_iter().zip(parts) {
         out_t.data[lo * m..hi * m].copy_from_slice(&part);
     }
-    out_t.t()
 }
 
 /// [`matmul_tn_sparse`], choosing serial or pooled execution by work size
 /// (`nnz · T` multiply-adds, same threshold as the dense auto kernel).
 pub fn matmul_tn_sparse_auto(xt: &Mat, w: &RowSparse) -> Mat {
+    let mut out_t = Mat::zeros(0, 0);
+    matmul_tn_sparse_auto_into(xt, w, &mut out_t);
+    out_t.t()
+}
+
+/// Allocation-free form of [`matmul_tn_sparse_auto`]: same `nnz · T`
+/// dispatch, transposed `(w.rows, T)` product into a caller-owned matrix.
+pub fn matmul_tn_sparse_auto_into(xt: &Mat, w: &RowSparse, out_t: &mut Mat) {
     let macs = w.nnz() * xt.cols;
     if macs >= super::PAR_MIN_MACS {
-        matmul_tn_sparse_par(xt, w, threadpool::global())
+        matmul_tn_sparse_par_into(xt, w, threadpool::global(), out_t);
     } else {
-        matmul_tn_sparse(xt, w)
+        matmul_tn_sparse_into(xt, w, out_t);
     }
 }
 
@@ -505,6 +535,37 @@ mod tests {
         let out = x.matmul_nt_sparse_par(&empty, &pool);
         assert!(out.data.iter().all(|&v| v == 0.0));
         assert_eq!((out.rows, out.cols), (4, 5));
+    }
+
+    #[test]
+    fn into_kernels_bit_identical_over_dirty_buffers() {
+        // the allocation-free forms must match the allocating kernels
+        // bit-for-bit regardless of what the reused buffer held before
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg32::new(31, 0);
+        let mut out_t = randmat(&mut rng, 5, 3); // stale shape + contents
+        for (t, d_in, d_out) in [(1, 12, 7), (6, 20, 11), (17, 33, 9)] {
+            let x = randmat(&mut rng, t, d_in);
+            let mut w = randmat(&mut rng, d_out, d_in);
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let rs = RowSparse::from_dense(&w);
+            let xt = x.t();
+            let want = matmul_tn_sparse(&xt, &rs);
+
+            matmul_tn_sparse_into(&xt, &rs, &mut out_t);
+            assert_eq!((out_t.rows, out_t.cols), (d_out, t));
+            assert_eq!(out_t.t().data, want.data, "serial ({t},{d_in},{d_out})");
+
+            matmul_tn_sparse_par_into(&xt, &rs, &pool, &mut out_t);
+            assert_eq!(out_t.t().data, want.data, "par ({t},{d_in},{d_out})");
+
+            matmul_tn_sparse_auto_into(&xt, &rs, &mut out_t);
+            assert_eq!(out_t.t().data, want.data, "auto ({t},{d_in},{d_out})");
+        }
     }
 
     fn key(name: &str, fp: u64) -> LayoutKey {

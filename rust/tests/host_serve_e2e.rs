@@ -321,6 +321,106 @@ fn cancellation_frees_lane_admits_queued_request_and_is_recorded() {
 }
 
 #[test]
+fn mixed_workload_fuses_shared_layouts_and_keeps_tokens_identical() {
+    // Matrix-major sweeps: a continuous pool carrying two lanes with the
+    // SAME prompt/plan (they share every compressed layout via the
+    // router's cache, so their steps fuse into one batched matmul per
+    // linear) plus two divergent lanes (different prompts; one on
+    // Refresh(2), whose refresh steps keep splitting it out of any
+    // group). Fusion must never change tokens, and the fused-width
+    // metrics must prove it actually engaged (> 1 on the shared cells).
+    let mut cfg = serve_cfg();
+    cfg.decode.continuous = true;
+    cfg.decode.batch_size = 4;
+    // wide batching window so all four requests seed ONE pool run — the
+    // batcher still fires early the moment the batch fills
+    cfg.batch_window_us = 200_000;
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config");
+    let handle = Server::start(&router).expect("host server");
+
+    let cases: [(&str, MaskPlan, usize); 4] = [
+        ("the fused twin prompt", MaskPlan::PruneOnce, 6),
+        ("the fused twin prompt", MaskPlan::PruneOnce, 6),
+        ("a diverging refresher", MaskPlan::Refresh(2), 6),
+        ("a third odd one out", MaskPlan::PruneOnce, 3),
+    ];
+    let (tx, rx) = channel();
+    let mut submitted = Vec::new();
+    for (prompt, plan, max_new) in &cases {
+        let req = router
+            .admit_decode(
+                prompt,
+                0.6,
+                "synth_wiki",
+                *max_new,
+                Some(*plan),
+                None,
+                Some(tx.clone()),
+            )
+            .expect("admit");
+        submitted.push(req.id);
+        handle.submit(req).expect("submit");
+    }
+    drop(tx);
+
+    let model = reference_model();
+    let tok = ByteTokenizer;
+    let mut seen = 0usize;
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
+        assert!(resp.is_ok(), "rejected: {:?}", resp.rejected);
+        let idx = submitted
+            .iter()
+            .position(|&id| id == resp.id)
+            .expect("known id");
+        let (prompt, plan, max_new) = cases[idx];
+        let reference = decode_greedy(
+            &model,
+            &tok.encode(prompt, true),
+            &DecodeConfig {
+                rho: 0.6,
+                plan,
+                max_new,
+                stop_at_eos: false,
+                kv_cache: false,
+            },
+            None,
+        );
+        assert_eq!(
+            resp.tokens,
+            reference.new_tokens(),
+            "request {idx}: fusion must not change tokens"
+        );
+        assert_eq!(resp.steps, max_new);
+        seen += 1;
+    }
+    assert_eq!(seen, cases.len());
+    handle.shutdown().expect("shutdown");
+
+    let levels = metrics.level_stats();
+    let (_, l06) = levels
+        .iter()
+        .find(|(r, _)| (r - 0.6).abs() < 1e-9)
+        .expect("0.6 level served");
+    assert!(l06.fused_groups > 0, "sweeps must report execution groups");
+    assert!(
+        l06.fused_width_hist[1..].iter().sum::<u64>() > 0,
+        "the same-layout twins must have fused at width > 1: {:?}",
+        l06.fused_width_hist
+    );
+    assert!(
+        l06.fused_width_hist[0] > 0,
+        "divergent lanes and refresh steps must stay singleton cells"
+    );
+    assert!(
+        l06.mean_fused_width() > 1.0,
+        "mean fused width must rise above lane-major's 1.0"
+    );
+    assert!(metrics.mean_fused_width() > 1.0);
+}
+
+#[test]
 fn host_server_rejects_unknown_model_at_startup() {
     let mut cfg = serve_cfg();
     cfg.model = "mu-opt-nonexistent".into();
