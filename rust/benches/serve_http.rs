@@ -1,0 +1,389 @@
+//! HTTP serving latency: the first end-to-end numbers in the project —
+//! not engine tok/s but what a real client sees over a socket.
+//!
+//! A `data::trace` Poisson arrival schedule is replayed against the
+//! HTTP/SSE front-end over loopback: one client thread per request
+//! sleeps until its arrival offset, POSTs `/generate` with
+//! `"stream": true`, and timestamps every SSE event as it arrives.
+//! Reported per request, then aggregated to p50/p95/p99:
+//!
+//! * **TTFT** — first streamed token event after the POST was written
+//!   (queueing + admission + prefill + the first decode sweep);
+//! * **per-token latency** — gaps between consecutive token events
+//!   (sweep cadence under whatever fusion/batching the pool found);
+//! * **request latency** — POST written → connection closed.
+//!
+//! Gates (hard outside `--smoke`): every request completes with a
+//! terminal `done` event, and each stream's token events concatenate to
+//! exactly the terminal `tokens` — the transport must preserve the
+//! serve loop's stream contract under concurrency. Latency numbers are
+//! reported, not gated: loopback percentiles on a shared sandbox core
+//! are workload-shape facts, not regressions. Emits
+//! `BENCH_serve_http.json`.
+//!
+//! `--smoke`: 6 requests over 2 lanes at one ρ — CI runs this so the
+//! front-end and this harness cannot bit-rot.
+
+mod common;
+
+use common::jnum;
+use mumoe::config::{EngineKind, ServeConfig};
+use mumoe::coordinator::http::HttpServer;
+use mumoe::coordinator::{Metrics, Router};
+use mumoe::data::corpus::Corpus;
+use mumoe::data::trace::{self, TraceConfig};
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct BenchShape {
+    n_requests: usize,
+    /// Mean arrival rate (req/s) for the Poisson schedule.
+    rate: f64,
+    lanes: usize,
+    /// Request i asks for `cycle[i % len]` new tokens.
+    max_new_cycle: Vec<usize>,
+    rho_choices: Vec<f64>,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            n_requests: 6,
+            rate: 400.0,
+            lanes: 2,
+            max_new_cycle: vec![1, 2],
+            rho_choices: vec![0.6],
+        }
+    } else {
+        BenchShape {
+            n_requests: 32,
+            rate: 25.0,
+            lanes: 4,
+            max_new_cycle: vec![2, 4, 8],
+            rho_choices: vec![0.4, 0.6, 1.0],
+        }
+    }
+}
+
+fn serve_cfg(sh: &BenchShape) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        model: "mu-opt-micro".into(),
+        // point at nothing so the engine deterministically falls back to
+        // the random model regardless of whether artifacts were built
+        artifacts_dir: "serve-http-bench-no-artifacts".into(),
+        engine: EngineKind::Host,
+        rho_levels: vec![0.4, 0.6, 1.0],
+        batch_window_us: 500,
+        queue_cap: 256,
+        ..Default::default()
+    };
+    cfg.decode.max_new_cap = 64;
+    cfg.decode.batch_size = sh.lanes;
+    cfg.decode.stop_at_eos = false;
+    cfg
+}
+
+/// Synthetic corpora matching `data::trace`'s unit tests: deterministic
+/// prompt material without touching the filesystem.
+fn corpora() -> Vec<Corpus> {
+    mumoe::data::DOMAINS
+        .iter()
+        .map(|d| Corpus {
+            domain: d.to_string(),
+            split: "bench".into(),
+            bytes: (0..2000).map(|i| b'a' + (i % 26) as u8).collect(),
+        })
+        .collect()
+}
+
+/// What one streamed request observed, wall-clock side.
+struct ClientResult {
+    /// 200 with a terminal `done` event.
+    ok: bool,
+    /// Streamed token events concatenate to the terminal `tokens`.
+    consistent: bool,
+    ttft_us: f64,
+    /// Gaps between consecutive token events.
+    gaps_us: Vec<f64>,
+    latency_us: f64,
+    tokens: usize,
+}
+
+fn failed() -> ClientResult {
+    ClientResult {
+        ok: false,
+        consistent: false,
+        ttft_us: 0.0,
+        gaps_us: Vec::new(),
+        latency_us: 0.0,
+        tokens: 0,
+    }
+}
+
+/// POST one streaming generation and timestamp each SSE event as it
+/// arrives (`data: ` occurrences counted on the raw bytes, so chunked
+/// framing never delays a timestamp until full parse).
+fn run_client(addr: SocketAddr, body: String) -> ClientResult {
+    let t0 = Instant::now();
+    let Ok(mut s) = TcpStream::connect(addr) else {
+        return failed();
+    };
+    let _ = s.set_read_timeout(Some(Duration::from_secs(120)));
+    let _ = s.set_nodelay(true);
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    if s.write_all(req.as_bytes()).is_err() {
+        return failed();
+    }
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut event_times: Vec<Instant> = Vec::new();
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                raw.extend_from_slice(&chunk[..n]);
+                let seen = String::from_utf8_lossy(&raw).matches("data: ").count();
+                let now = Instant::now();
+                while event_times.len() < seen {
+                    event_times.push(now);
+                }
+            }
+            Err(_) => return failed(),
+        }
+    }
+    let latency_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let text = String::from_utf8_lossy(&raw).to_string();
+    let Some(head_end) = text.find("\r\n\r\n") else {
+        return failed();
+    };
+    let head = &text[..head_end];
+    if head.split_whitespace().nth(1) != Some("200") {
+        return failed();
+    }
+    let (streamed, done) = parse_sse(&dechunk(&text[head_end + 4..]));
+    let Some(done) = done else {
+        return failed();
+    };
+    let terminal = tokens_of(&done);
+    let consistent = streamed == terminal;
+    // the last `data: ` occurrence is the done event's payload — token
+    // cadence comes from the first `terminal.len()` event times
+    let n = terminal.len().min(event_times.len());
+    let ttft_us = event_times
+        .first()
+        .map_or(0.0, |t| t.duration_since(t0).as_secs_f64() * 1e6);
+    let gaps_us = event_times[..n]
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]).as_secs_f64() * 1e6)
+        .collect();
+    ClientResult {
+        ok: true,
+        consistent,
+        ttft_us,
+        gaps_us,
+        latency_us,
+        tokens: terminal.len(),
+    }
+}
+
+fn dechunk(mut rest: &str) -> String {
+    let mut out = String::new();
+    while let Some(nl) = rest.find("\r\n") {
+        let Ok(size) = usize::from_str_radix(rest[..nl].trim(), 16) else {
+            break;
+        };
+        if size == 0 {
+            break;
+        }
+        let start = nl + 2;
+        if start + size + 2 > rest.len() {
+            break;
+        }
+        out.push_str(&rest[start..start + size]);
+        rest = &rest[start + size + 2..];
+    }
+    out
+}
+
+fn parse_sse(body: &str) -> (Vec<i32>, Option<Json>) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    for block in body.split("\n\n").filter(|b| !b.trim().is_empty()) {
+        if let Some(rest) = block.strip_prefix("event: done\n") {
+            if let Some(payload) = rest.strip_prefix("data: ") {
+                done = Json::parse(payload).ok();
+            }
+        } else if let Some(payload) = block.strip_prefix("data: ") {
+            if let Ok(ev) = Json::parse(payload) {
+                if let Some(t) = ev.req("token").ok().and_then(Json::as_f64) {
+                    tokens.push(t as i32);
+                }
+            }
+        }
+    }
+    (tokens, done)
+}
+
+fn tokens_of(j: &Json) -> Vec<i32> {
+    j.req("tokens")
+        .ok()
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).map(|t| t as i32).collect())
+        .unwrap_or_default()
+}
+
+/// Nearest-rank percentile over a sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    v
+}
+
+fn main() {
+    let smoke = common::smoke_flag();
+    let sh = shape(smoke);
+    let cfg = serve_cfg(&sh);
+
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config"),
+    );
+    let handle = HttpServer::start(router, "127.0.0.1:0").expect("http server");
+    let addr = handle.addr();
+
+    let entries = trace::generate(
+        &TraceConfig {
+            rate: sh.rate,
+            n_requests: sh.n_requests,
+            rho_choices: sh.rho_choices.clone(),
+            ..Default::default()
+        },
+        &corpora(),
+    );
+
+    // one client thread per request, released at its arrival offset
+    let base = Instant::now();
+    let clients: Vec<_> = entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let body = Json::Obj(HashMap::from([
+                ("prompt".into(), Json::Str(e.prompt.clone())),
+                ("rho".into(), jnum(e.rho)),
+                (
+                    "max_new".into(),
+                    jnum(sh.max_new_cycle[i % sh.max_new_cycle.len()] as f64),
+                ),
+                ("domain".into(), Json::Str(e.domain.clone())),
+                ("stream".into(), Json::Bool(true)),
+            ]))
+            .dump();
+            let arrival = Duration::from_micros(e.arrival_us);
+            std::thread::spawn(move || {
+                let since = base.elapsed();
+                if since < arrival {
+                    std::thread::sleep(arrival - since);
+                }
+                run_client(addr, body)
+            })
+        })
+        .collect();
+    let results: Vec<ClientResult> = clients
+        .into_iter()
+        .map(|c| c.join().expect("client thread"))
+        .collect();
+    let wall_s = base.elapsed().as_secs_f64();
+    handle.shutdown().expect("shutdown");
+
+    let completed = results.iter().filter(|r| r.ok).count();
+    let consistent = results.iter().filter(|r| r.ok && r.consistent).count();
+    let total_tokens: usize = results.iter().map(|r| r.tokens).sum();
+    let ttft = sorted(results.iter().filter(|r| r.ok).map(|r| r.ttft_us).collect());
+    let gaps = sorted(results.iter().flat_map(|r| r.gaps_us.iter().copied()).collect());
+    let latency = sorted(results.iter().filter(|r| r.ok).map(|r| r.latency_us).collect());
+
+    let mut table = mumoe::benchlib::Table::new(
+        format!(
+            "HTTP serving latency over loopback: {} requests at {} req/s \
+             over {} lanes ({})",
+            sh.n_requests,
+            sh.rate,
+            sh.lanes,
+            if smoke { "smoke" } else { "full" }
+        ),
+        &["metric", "p50 (us)", "p95 (us)", "p99 (us)", "samples"],
+    );
+    for (label, series) in [
+        ("TTFT", &ttft),
+        ("per-token", &gaps),
+        ("request", &latency),
+    ] {
+        table.row(vec![
+            label.into(),
+            format!("{:.0}", percentile(series, 50.0)),
+            format!("{:.0}", percentile(series, 95.0)),
+            format!("{:.0}", percentile(series, 99.0)),
+            format!("{}", series.len()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n{completed}/{} completed, {total_tokens} tokens in {wall_s:.2}s \
+         ({:.1} tok/s end-to-end)",
+        sh.n_requests,
+        total_tokens as f64 / wall_s.max(1e-9)
+    );
+
+    // gates: delivery + stream consistency (timing is reported, not gated)
+    let accept = completed == sh.n_requests && consistent == completed;
+    println!(
+        "ACCEPTANCE: all requests complete with streams matching terminal \
+         tokens ({}).",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let pcts = |series: &[f64]| {
+        Json::Obj(HashMap::from([
+            ("p50_us".into(), jnum(percentile(series, 50.0))),
+            ("p95_us".into(), jnum(percentile(series, 95.0))),
+            ("p99_us".into(), jnum(percentile(series, 99.0))),
+            ("samples".into(), jnum(series.len() as f64)),
+        ]))
+    };
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), Json::Str("serve_http".into())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("n_requests".into(), jnum(sh.n_requests as f64)),
+        ("rate_per_sec".into(), jnum(sh.rate)),
+        ("lanes".into(), jnum(sh.lanes as f64)),
+        ("completed".into(), jnum(completed as f64)),
+        ("stream_consistent".into(), jnum(consistent as f64)),
+        ("total_tokens".into(), jnum(total_tokens as f64)),
+        ("wall_seconds".into(), jnum(wall_s)),
+        ("ttft".into(), pcts(&ttft)),
+        ("per_token".into(), pcts(&gaps)),
+        ("request_latency".into(), pcts(&latency)),
+        ("accept_delivery_and_consistency".into(), Json::Bool(accept)),
+    ]));
+    common::write_bench_json("BENCH_serve_http.json", &out);
+    common::exit_on_gate(accept, smoke);
+}

@@ -319,6 +319,10 @@ pub struct ServeConfig {
     /// this when serving a checkpoint whose vocabulary ends sequences
     /// with a different id, so `stop_at_eos` halts at *its* EOS.
     pub eos_id: Option<i32>,
+    /// Address for the HTTP/SSE front-end (`coordinator.http_addr`, e.g.
+    /// `"127.0.0.1:8080"`; port 0 picks an ephemeral port). Empty keeps
+    /// the trace-replay serve mode; the CLI's `serve --http` overrides.
+    pub http_addr: String,
     /// Workers for host-side preprocessing.
     pub workers: usize,
     /// Capacity (entries) of the shared compressed-layout cache keyed by
@@ -339,6 +343,7 @@ impl Default for ServeConfig {
             rho_levels: vec![0.2, 0.4, 0.5, 0.6, 0.8, 1.0],
             default_rho: 0.5,
             eos_id: None,
+            http_addr: String::new(),
             workers: 2,
             layout_cache_cap: 512,
             decode: DecodeKnobs::default(),
@@ -369,6 +374,7 @@ impl ServeConfig {
                 .get("coordinator.eos_id")
                 .and_then(Value::as_i64)
                 .map(|i| i as i32),
+            http_addr: t.str_or("coordinator.http_addr", &d.http_addr),
             workers: t.usize_or("coordinator.workers", d.workers),
             layout_cache_cap: t.usize_or("coordinator.layout_cache_cap", d.layout_cache_cap),
             decode: DecodeKnobs {
@@ -509,6 +515,15 @@ default_rho = 0.6
                 "error should name rho_levels: {err}"
             );
         }
+    }
+
+    #[test]
+    fn http_addr_from_toml() {
+        let t = Toml::parse("[coordinator]\nhttp_addr = \"127.0.0.1:8080\"\n").unwrap();
+        assert_eq!(ServeConfig::from_toml(&t).unwrap().http_addr, "127.0.0.1:8080");
+        // absent ⇒ empty ⇒ trace-replay serve mode
+        let none = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(none.http_addr.is_empty());
     }
 
     #[test]

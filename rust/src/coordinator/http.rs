@@ -1,0 +1,702 @@
+//! HTTP/1.1 + SSE serving front-end: the first real transport in front of
+//! the coordinator. Dependency-free by design — a std `TcpListener`, a
+//! small hand-rolled request parser and chunked-transfer writer, matching
+//! the repo's pure-std policy (no axum/hyper in the hermetic build).
+//!
+//! Endpoints:
+//!
+//! * `POST /generate` — JSON body `{"prompt": "...", "rho": 0.6,
+//!   "max_new": 8, "plan": "prune-once", "domain": "chat",
+//!   "stream": true}` → [`Router::admit_decode`]. Field errors and router
+//!   rejections are 4xx **before anything touches the engine thread**;
+//!   `"stream": true` answers with `text/event-stream` over chunked
+//!   transfer, one `data:` event per generated token (driven by the
+//!   existing [`StepEvent`] channel) and a terminal `event: done`
+//!   carrying the full response. Without `stream` the response is one
+//!   JSON object.
+//! * `GET /health` — `{"status": "ready" | "draining", ...}`; flips to
+//!   `draining` when shutdown begins.
+//! * `GET /metrics` — Prometheus text ([`Metrics::to_prometheus`]) plus
+//!   the router's live `mumoe_queue_depth` gauge.
+//!
+//! A client disconnect mid-stream cancels its request: the connection
+//! worker fires the request's [`CancelToken`] on the first failed write,
+//! and — belt and braces — the continuous serve loop treats the dropped
+//! `StepEvent` receiver as an implicit cancel, so the lane frees within
+//! one sweep either way.
+//!
+//! Lifecycle: `bind` (ready) → [`HttpHandle::begin_drain`] (health says
+//! draining, new generations get 503, in-flight streams keep running) →
+//! [`HttpHandle::shutdown`] (stop accepting, join workers so in-flight
+//! requests deliver, then shut the engine loop down).
+
+use super::metrics::Metrics;
+use super::request::{CancelToken, RequestId, Response, StepEvent};
+use super::router::Router;
+use super::server::{Server, ServerHandle};
+use crate::config::ServeConfig;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::pruning::MaskPlan;
+use crate::util::error::Error;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Largest accepted request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Largest accepted request body.
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// How long a connection may dribble its request in.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a worker waits for the engine to deliver (covers a full
+/// `max_new_cap` generation queued behind a busy pool).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Everything a connection worker needs, shared across all of them.
+struct Shared {
+    router: Arc<Router>,
+    engine: ServerHandle,
+    draining: AtomicBool,
+}
+
+/// The HTTP front-end launcher.
+pub struct HttpServer;
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`; port 0 picks an ephemeral
+    /// one), start the engine serve loop for the router's configured
+    /// backend and spawn the accept loop. Fails fast on a bad address or
+    /// a bad model — nothing listens unless the engine came up.
+    pub fn start(router: Arc<Router>, addr: &str) -> Result<HttpHandle, Error> {
+        let engine = Server::start(&router)?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::coordinator(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::coordinator(format!("local_addr: {e}")))?;
+        let shared = Arc::new(Shared {
+            router,
+            engine,
+            draining: AtomicBool::new(false),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let shared = shared.clone();
+            let stop = stop.clone();
+            let workers = workers.clone();
+            std::thread::Builder::new()
+                .name("mumoe-http".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break; // the shutdown wake-up connection
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let shared = shared.clone();
+                        let worker = std::thread::Builder::new()
+                            .name("mumoe-http-conn".into())
+                            .spawn(move || handle_connection(&shared, stream))
+                            .expect("spawn connection worker");
+                        let mut guard = workers.lock().expect("worker list poisoned");
+                        guard.retain(|w| !w.is_finished());
+                        guard.push(worker);
+                    }
+                })
+                .expect("spawn http accept thread")
+        };
+        crate::info!("http server listening on {local}");
+        Ok(HttpHandle {
+            addr: local,
+            shared,
+            stop,
+            accept: Some(accept),
+            workers,
+        })
+    }
+}
+
+/// Control-plane handle for a running HTTP front-end.
+pub struct HttpHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl HttpHandle {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.shared.engine.metrics
+    }
+
+    /// Flip `/health` to `draining` and refuse new generations with 503.
+    /// In-flight requests (and their streams) keep running; `/health` and
+    /// `/metrics` keep answering. [`HttpHandle::shutdown`] calls this
+    /// first, so the flip is observable before the listener closes.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Graceful shutdown: drain (new generations 503), stop accepting,
+    /// join every connection worker so in-flight requests deliver, then
+    /// shut the engine loop down.
+    pub fn shutdown(mut self) -> Result<(), Error> {
+        self.begin_drain();
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().expect("worker list poisoned"));
+        for w in workers {
+            let _ = w.join();
+        }
+        self.shared.engine.shutdown()
+    }
+
+    /// Block on the accept loop (the `mumoe serve --http` foreground
+    /// mode: runs until the process is killed).
+    pub fn join(mut self) -> Result<(), Error> {
+        if let Some(accept) = self.accept.take() {
+            accept
+                .join()
+                .map_err(|_| Error::coordinator("http accept thread panicked"))?;
+        }
+        self.shared.engine.shutdown()
+    }
+}
+
+/// `mumoe serve --http <addr>`: start the coordinator behind the HTTP
+/// front-end and serve until killed.
+pub fn serve_http(cfg: ServeConfig, addr: &str) -> Result<(), Error> {
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new(cfg, crate::model::MAX_SEQ_LEN, metrics)?);
+    let handle = HttpServer::start(router, addr)?;
+    println!("serving on http://{}", handle.addr());
+    println!("  POST /generate   GET /health   GET /metrics");
+    handle.join()
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+/// One parsed request. Bodies are raw bytes; `/generate` re-parses them
+/// as JSON with its own error mapping.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// (status, message) — rendered as `{"error": message}` with the code's
+/// reason phrase.
+type HttpError = (u16, String);
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
+}
+
+/// Serve exactly one request on the connection, then close (every
+/// response carries `Connection: close`; workers are cheap threads and
+/// the load generator measures per-request latency anyway).
+fn handle_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err((status, msg)) => {
+            write_json(&mut stream, status, &json_error(&msg, None));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let draining = shared.draining.load(Ordering::SeqCst);
+            let cfg = shared.router.config();
+            let body = Json::Obj(HashMap::from([
+                (
+                    "status".into(),
+                    Json::Str(if draining { "draining" } else { "ready" }.into()),
+                ),
+                ("model".into(), Json::Str(cfg.model.clone())),
+                ("engine".into(), Json::Str(cfg.engine.label().into())),
+            ]));
+            write_json(&mut stream, 200, &body);
+        }
+        ("GET", "/metrics") => {
+            let mut text = shared.engine.metrics.to_prometheus();
+            text.push_str(&format!(
+                "# HELP mumoe_queue_depth Requests queued between admission and execution\n\
+                 # TYPE mumoe_queue_depth gauge\n\
+                 mumoe_queue_depth {}\n",
+                shared.router.queue_depth()
+            ));
+            write_response(
+                &mut stream,
+                200,
+                "text/plain; version=0.0.4",
+                text.as_bytes(),
+            );
+        }
+        ("POST", "/generate") => handle_generate(shared, &mut stream, &req.body),
+        ("GET", "/generate") | ("POST", "/health") | ("POST", "/metrics") => {
+            write_json(
+                &mut stream,
+                405,
+                &json_error(&format!("{} does not allow {}", req.path, req.method), None),
+            );
+        }
+        (_, path) => {
+            write_json(
+                &mut stream,
+                404,
+                &json_error(&format!("no route for {path}"), None),
+            );
+        }
+    }
+}
+
+/// The decode request a `/generate` body parses into.
+struct GenerateBody {
+    prompt: String,
+    rho: f64,
+    max_new: usize,
+    plan: Option<MaskPlan>,
+    domain: String,
+    stream: bool,
+}
+
+/// Parse and validate the JSON body; every failure names the offending
+/// field so clients can fix requests without reading server logs.
+fn parse_generate(body: &[u8]) -> Result<GenerateBody, HttpError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, "body is not valid UTF-8".to_string()))?;
+    let json =
+        Json::parse(text).map_err(|e| (400, format!("body is not valid JSON: {e}")))?;
+    if json.as_obj().is_none() {
+        return Err((400, "body must be a JSON object".to_string()));
+    }
+    let field = |name: &str, want: &str| (400, format!("field '{name}' must be {want}"));
+
+    let prompt = match json.get("prompt") {
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| field("prompt", "a string"))?
+            .to_string(),
+        None => return Err((400, "field 'prompt' is required".to_string())),
+    };
+    let rho = match json.get("rho") {
+        Some(v) => v.as_f64().ok_or_else(|| field("rho", "a number"))?,
+        None => 0.0, // router substitutes the configured default
+    };
+    let max_new = match json.get("max_new") {
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+                .ok_or_else(|| field("max_new", "a non-negative integer"))?;
+            x as usize
+        }
+        None => 0, // router substitutes the configured default
+    };
+    let plan = match json.get("plan") {
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| field("plan", "a string"))?;
+            Some(
+                MaskPlan::parse(s)
+                    .map_err(|e| (400, format!("field 'plan' is invalid: {e}")))?,
+            )
+        }
+        None => None,
+    };
+    let domain = match json.get("domain") {
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| field("domain", "a string"))?
+            .to_string(),
+        None => "http".to_string(),
+    };
+    let stream = match json.get("stream") {
+        Some(v) => match v {
+            Json::Bool(b) => *b,
+            _ => return Err(field("stream", "a boolean")),
+        },
+        None => false,
+    };
+    Ok(GenerateBody {
+        prompt,
+        rho,
+        max_new,
+        plan,
+        domain,
+        stream,
+    })
+}
+
+fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
+    let greq = match parse_generate(body) {
+        Ok(greq) => greq,
+        Err((status, msg)) => {
+            // malformed bodies never reach the router, let alone the
+            // engine thread
+            write_json(stream, status, &json_error(&msg, None));
+            return;
+        }
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        write_json(stream, 503, &json_error("server is draining", None));
+        return;
+    }
+
+    let (reply_tx, reply_rx) = channel::<Response>();
+    let (step_tx, step_rx) = channel::<StepEvent>();
+    let step_tx = greq.stream.then_some(step_tx);
+    // admission runs on this worker thread: rejections (empty prompt,
+    // over-cap max_new, queue full) are shed here as 4xx without ever
+    // touching the engine thread
+    let req = match shared.router.admit_decode(
+        &greq.prompt,
+        greq.rho,
+        &greq.domain,
+        greq.max_new,
+        greq.plan,
+        step_tx,
+        Some(reply_tx),
+    ) {
+        Ok(req) => req,
+        Err(rej) => {
+            let status = if rej.rejected.as_deref() == Some("queue full") {
+                429
+            } else {
+                400
+            };
+            let id = rej.id;
+            let msg = rej.rejected.unwrap_or_else(|| "rejected".into());
+            write_json(stream, status, &json_error(&msg, Some(id)));
+            return;
+        }
+    };
+    let id = req.id;
+    let cancel = req.cancel.clone();
+    if shared.engine.submit(req).is_err() {
+        write_json(stream, 503, &json_error("server is shutting down", Some(id)));
+        return;
+    }
+
+    if greq.stream {
+        stream_response(stream, id, &cancel, step_rx, reply_rx);
+    } else {
+        drop(step_rx);
+        match reply_rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(resp) => {
+                if resp.is_ok() || resp.is_cancelled() {
+                    write_json(stream, 200, &response_json(&resp));
+                } else {
+                    let msg = resp.rejected.clone().unwrap_or_else(|| "failed".into());
+                    write_json(stream, 500, &json_error(&msg, Some(id)));
+                }
+            }
+            Err(_) => {
+                // give the lane back before walking away
+                cancel.cancel();
+                write_json(stream, 504, &json_error("timed out waiting for decode", Some(id)));
+            }
+        }
+    }
+}
+
+/// SSE over chunked transfer: one `data:` event per [`StepEvent`], then a
+/// terminal `event: done` with the full response. The first failed write
+/// means the client hung up — fire the request's [`CancelToken`] so its
+/// lane frees within a sweep (the serve loop's dropped-receiver detection
+/// backstops this when the worker dies outright).
+fn stream_response(
+    stream: &mut TcpStream,
+    id: RequestId,
+    cancel: &CancelToken,
+    step_rx: std::sync::mpsc::Receiver<StepEvent>,
+    reply_rx: std::sync::mpsc::Receiver<Response>,
+) {
+    let head = "HTTP/1.1 200 OK\r\n\
+                Content-Type: text/event-stream\r\n\
+                Cache-Control: no-cache\r\n\
+                Transfer-Encoding: chunked\r\n\
+                Connection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        cancel.cancel();
+        return;
+    }
+    loop {
+        match step_rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(ev) => {
+                let payload = Json::Obj(HashMap::from([
+                    ("id".into(), Json::Num(ev.id as f64)),
+                    ("index".into(), Json::Num(ev.index as f64)),
+                    ("token".into(), Json::Num(ev.token as f64)),
+                ]));
+                let event = format!("data: {}\n\n", payload.dump());
+                if write_chunk(stream, event.as_bytes()).is_err() {
+                    cancel.cancel();
+                    return;
+                }
+            }
+            // the serve loop dropped its sender: the terminal response is
+            // delivered (or imminently will be) on the reply channel
+            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                cancel.cancel();
+                let event = format!(
+                    "event: error\ndata: {}\n\n",
+                    json_error("timed out waiting for decode", Some(id)).dump()
+                );
+                let _ = write_chunk(stream, event.as_bytes());
+                let _ = write_chunk(stream, b"");
+                return;
+            }
+        }
+    }
+    match reply_rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(resp) => {
+            let event = format!("event: done\ndata: {}\n\n", response_json(&resp).dump());
+            if write_chunk(stream, event.as_bytes()).is_err() {
+                cancel.cancel();
+                return;
+            }
+        }
+        Err(_) => {
+            cancel.cancel();
+            let event = format!(
+                "event: error\ndata: {}\n\n",
+                json_error("decode ended without a terminal response", Some(id)).dump()
+            );
+            let _ = write_chunk(stream, event.as_bytes());
+        }
+    }
+    let _ = write_chunk(stream, b""); // terminating zero-length chunk
+}
+
+// ---------------------------------------------------------------------------
+// Wire helpers
+// ---------------------------------------------------------------------------
+
+/// Read one request: head until `\r\n\r\n` (bounded), then exactly
+/// `Content-Length` body bytes (bounded).
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, HttpError> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err((431, "request head too large".into()));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| (400, format!("read: {e}")))?;
+        if n == 0 {
+            return Err((400, "truncated request".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| (400, "request head is not valid UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = (
+        parts.next().unwrap_or("").to_string(),
+        parts.next().unwrap_or("").to_string(),
+        parts.next().unwrap_or(""),
+    );
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err((400, format!("malformed request line '{request_line}'")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((key, value)) = line.split_once(':') else {
+            continue;
+        };
+        if key.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| (400, "bad Content-Length".to_string()))?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err((413, "request body too large".into()));
+    }
+    // whatever followed the head in the last read is the body's prefix
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| (400, format!("read body: {e}")))?;
+        if n == 0 {
+            return Err((400, "truncated request body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// One fixed-length response; every connection serves a single exchange.
+fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &[u8]) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body))
+        .and_then(|()| stream.flush());
+}
+
+fn write_json(stream: &mut TcpStream, status: u16, body: &Json) {
+    write_response(stream, status, "application/json", body.dump().as_bytes());
+}
+
+/// One chunk of a chunked-transfer body; empty payload terminates.
+fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n", payload.len())?;
+    stream.write_all(payload)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+fn json_error(msg: &str, id: Option<RequestId>) -> Json {
+    let mut m = HashMap::from([("error".into(), Json::Str(msg.into()))]);
+    if let Some(id) = id {
+        m.insert("id".into(), Json::Num(id as f64));
+    }
+    Json::Obj(m)
+}
+
+/// The wire form of a terminal [`Response`] (shared by the plain-JSON and
+/// the SSE `done` paths so the two framings cannot diverge).
+fn response_json(resp: &Response) -> Json {
+    Json::Obj(HashMap::from([
+        ("id".into(), Json::Num(resp.id as f64)),
+        (
+            "tokens".into(),
+            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("text".into(), Json::Str(ByteTokenizer.decode(&resp.tokens))),
+        ("steps".into(), Json::Num(resp.steps as f64)),
+        ("latency_us".into(), Json::Num(resp.latency_us as f64)),
+        ("prefill_us".into(), Json::Num(resp.prefill_us as f64)),
+        ("step_us".into(), Json::Num(resp.step_us as f64)),
+        ("batch_size".into(), Json::Num(resp.batch_size as f64)),
+        ("rho_used".into(), Json::Num(resp.rho_used)),
+        ("cancelled".into(), Json::Bool(resp.is_cancelled())),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_body_defaults_and_field_errors() {
+        let ok = parse_generate(br#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(ok.prompt, "hi");
+        assert_eq!(ok.rho, 0.0, "router substitutes the default");
+        assert_eq!(ok.max_new, 0, "router substitutes the default");
+        assert!(ok.plan.is_none());
+        assert_eq!(ok.domain, "http");
+        assert!(!ok.stream);
+
+        let full = parse_generate(
+            br#"{"prompt": "p", "rho": 0.6, "max_new": 4, "plan": "refresh:2",
+                 "domain": "chat", "stream": true}"#,
+        )
+        .unwrap();
+        assert_eq!(full.rho, 0.6);
+        assert_eq!(full.max_new, 4);
+        assert_eq!(full.plan, Some(MaskPlan::Refresh(2)));
+        assert_eq!(full.domain, "chat");
+        assert!(full.stream);
+
+        // every bad field is a 400 naming the field
+        for (body, field) in [
+            (&br#"{"rho": 0.5}"#[..], "prompt"),
+            (br#"{"prompt": 3}"#, "prompt"),
+            (br#"{"prompt": "p", "rho": "x"}"#, "rho"),
+            (br#"{"prompt": "p", "max_new": 1.5}"#, "max_new"),
+            (br#"{"prompt": "p", "max_new": -1}"#, "max_new"),
+            (br#"{"prompt": "p", "plan": "sometimes"}"#, "plan"),
+            (br#"{"prompt": "p", "stream": "yes"}"#, "stream"),
+            (br#"{"prompt": "p", "domain": 9}"#, "domain"),
+        ] {
+            let (status, msg) = parse_generate(body).unwrap_err();
+            assert_eq!(status, 400, "{msg}");
+            assert!(msg.contains(field), "'{msg}' should name '{field}'");
+        }
+        // non-JSON and non-object bodies
+        assert_eq!(parse_generate(b"not json").unwrap_err().0, 400);
+        assert_eq!(parse_generate(b"[1,2]").unwrap_err().0, 400);
+        assert_eq!(parse_generate(&[0xff, 0xfe]).unwrap_err().0, 400);
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(16));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+
+    #[test]
+    fn response_json_carries_tokens_and_text() {
+        let out = crate::decode::DecodeOutput {
+            tokens: vec![1, 104, 105],
+            prompt_len: 1,
+            steps: Vec::new(),
+            refresh_count: 0,
+            prefill_us: 10,
+            step_us: 5,
+            cache_hits: 0,
+            cache_misses: 0,
+        };
+        let mut resp = Response::from_decode(7, 0.6, &out, None);
+        resp.steps = 2;
+        let j = response_json(&resp);
+        assert_eq!(j.req("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.req("cancelled").unwrap(), &Json::Bool(false));
+    }
+}

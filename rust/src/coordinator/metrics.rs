@@ -382,6 +382,213 @@ impl Metrics {
         s
     }
 
+    /// Prometheus text-format (version 0.0.4) rendering for the HTTP
+    /// `/metrics` endpoint: global counters/gauges, the request-latency
+    /// histogram (log₂ buckets mapped to cumulative `le` buckets), and the
+    /// per-ρ-level decode counters — including per-level token counters
+    /// and the fused-width histogram — as `rho`-labelled families.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(4096);
+        let counter = |s: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(
+                s,
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}"
+            );
+        };
+        let gauge = |s: &mut String, name: &str, help: &str, v: f64| {
+            let _ = writeln!(
+                s,
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}"
+            );
+        };
+        let g = |k: &AtomicU64| k.load(Ordering::Relaxed);
+        counter(
+            &mut s,
+            "mumoe_requests_accepted_total",
+            "Requests admitted by the router",
+            g(&self.accepted),
+        );
+        counter(
+            &mut s,
+            "mumoe_requests_rejected_total",
+            "Requests shed by admission control or failed execution",
+            g(&self.rejected),
+        );
+        counter(
+            &mut s,
+            "mumoe_requests_completed_total",
+            "Requests that delivered a successful terminal response",
+            g(&self.completed),
+        );
+        counter(
+            &mut s,
+            "mumoe_requests_cancelled_total",
+            "Requests that ended in a client cancellation",
+            g(&self.cancelled),
+        );
+        counter(
+            &mut s,
+            "mumoe_batches_total",
+            "Scheduling units executed (drained batches + lane-pool runs)",
+            g(&self.batches),
+        );
+        counter(
+            &mut s,
+            "mumoe_decode_tokens_total",
+            "Tokens generated by decode execution",
+            g(&self.decode_tokens),
+        );
+        counter(
+            &mut s,
+            "mumoe_decode_prefill_us_total",
+            "Decode execution time in selection + full-window prefill/rebuild work (us)",
+            g(&self.decode_prefill_us),
+        );
+        counter(
+            &mut s,
+            "mumoe_decode_step_us_total",
+            "Decode execution time in reused incremental steps (us)",
+            g(&self.decode_step_us),
+        );
+        gauge(
+            &mut s,
+            "mumoe_queue_peak",
+            "Highest queue depth observed at admission",
+            g(&self.queue_peak) as f64,
+        );
+        gauge(
+            &mut s,
+            "mumoe_batch_occupancy",
+            "Mean fraction of batch slots occupied",
+            self.batch_occupancy(),
+        );
+        gauge(
+            &mut s,
+            "mumoe_lane_occupancy",
+            "Mean fraction of lane-pool slots active per sweep",
+            self.lane_occupancy(),
+        );
+        gauge(
+            &mut s,
+            "mumoe_mean_fused_width",
+            "Mean lanes per matrix-major execution group",
+            self.mean_fused_width(),
+        );
+        gauge(
+            &mut s,
+            "mumoe_decode_tokens_per_sec",
+            "Aggregate decode throughput over execution time",
+            self.decode_tokens_per_sec(),
+        );
+
+        // request latency: log2 buckets render as cumulative `le` bounds
+        let _ = writeln!(
+            s,
+            "# HELP mumoe_request_latency_us End-to-end request latency (us)\n\
+             # TYPE mumoe_request_latency_us histogram"
+        );
+        let mut cum = 0u64;
+        for (i, b) in self.latency_us.iter().enumerate() {
+            let count = b.load(Ordering::Relaxed);
+            cum += count;
+            if count > 0 {
+                let _ = writeln!(
+                    s,
+                    "mumoe_request_latency_us_bucket{{le=\"{}\"}} {cum}",
+                    1u64 << (i + 1)
+                );
+            }
+        }
+        let _ = writeln!(s, "mumoe_request_latency_us_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(
+            s,
+            "mumoe_request_latency_us_sum {}",
+            self.latency_sum_us.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(s, "mumoe_request_latency_us_count {cum}");
+
+        // per-ρ-level decode families, `rho`-labelled
+        let levels = self.level_stats();
+        let level_counter =
+            |s: &mut String, name: &str, help: &str, get: &dyn Fn(&LevelStats) -> u64| {
+                let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} counter");
+                for (rho, st) in &levels {
+                    let _ = writeln!(s, "{name}{{rho=\"{rho:.2}\"}} {}", get(st));
+                }
+            };
+        level_counter(
+            &mut s,
+            "mumoe_level_tokens_total",
+            "Tokens generated per snapped rho level",
+            &|st| st.tokens,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_requests_total",
+            "Requests decoded per snapped rho level",
+            &|st| st.requests,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_batches_total",
+            "Scheduling units per snapped rho level",
+            &|st| st.batches,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_prefill_us_total",
+            "Prefill-class execution time per snapped rho level (us)",
+            &|st| st.prefill_us,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_step_us_total",
+            "Per-step execution time per snapped rho level (us)",
+            &|st| st.step_us,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_admitted_running_total",
+            "Requests admitted into a running lane pool per snapped rho level",
+            &|st| st.admitted_running,
+        );
+        let _ = writeln!(
+            s,
+            "# HELP mumoe_level_lane_occupancy Mean lane occupancy per snapped rho level\n\
+             # TYPE mumoe_level_lane_occupancy gauge"
+        );
+        for (rho, st) in &levels {
+            let _ = writeln!(
+                s,
+                "mumoe_level_lane_occupancy{{rho=\"{rho:.2}\"}} {}",
+                st.lane_occupancy()
+            );
+        }
+        // fused-width histogram: widths 1..7 plus the 8+ overflow bucket
+        let _ = writeln!(
+            s,
+            "# HELP mumoe_fused_width_groups Matrix-major execution groups by fused width \
+             per snapped rho level\n# TYPE mumoe_fused_width_groups counter"
+        );
+        for (rho, st) in &levels {
+            for (i, &count) in st.fused_width_hist.iter().enumerate() {
+                if count > 0 {
+                    let width = if i == 7 {
+                        "8+".to_string()
+                    } else {
+                        (i + 1).to_string()
+                    };
+                    let _ = writeln!(
+                        s,
+                        "mumoe_fused_width_groups{{rho=\"{rho:.2}\",width=\"{width}\"}} {count}"
+                    );
+                }
+            }
+        }
+        s
+    }
+
     /// JSON dump for machine consumers.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -634,6 +841,30 @@ mod tests {
         assert!(
             (l.req("mean_fused_width").unwrap().as_f64().unwrap() - 8.0 / 3.0).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn prometheus_text_carries_counters_levels_and_histograms() {
+        let m = Metrics::new();
+        m.record_accept();
+        m.record_completion(500);
+        m.record_decode(0.6, 2, 8, 1_000, 900, 100);
+        m.record_fused_sweep(0.6, &[3, 1, 12]);
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE mumoe_requests_accepted_total counter"), "{text}");
+        assert!(text.contains("mumoe_requests_accepted_total 1"), "{text}");
+        assert!(text.contains("mumoe_requests_completed_total 1"), "{text}");
+        // 500us lands in the 2^8..2^9 bucket => cumulative at le="512"
+        assert!(text.contains("mumoe_request_latency_us_bucket{le=\"512\"} 1"), "{text}");
+        assert!(text.contains("mumoe_request_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("mumoe_request_latency_us_sum 500"), "{text}");
+        assert!(text.contains("mumoe_level_tokens_total{rho=\"0.60\"} 8"), "{text}");
+        assert!(text.contains("mumoe_level_requests_total{rho=\"0.60\"} 2"), "{text}");
+        assert!(text.contains("mumoe_fused_width_groups{rho=\"0.60\",width=\"3\"} 1"), "{text}");
+        assert!(text.contains("mumoe_fused_width_groups{rho=\"0.60\",width=\"8+\"} 1"), "{text}");
+        // empty buckets are elided; the zero-width family never renders a
+        // width it did not observe
+        assert!(!text.contains("width=\"5\""), "{text}");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod http;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -36,6 +37,7 @@ pub mod server;
 
 pub use batcher::{BatcherConfig, DecodeBatch, DynamicBatcher};
 pub use engine::{Engine, HostEngine, Prepared};
+pub use http::{HttpHandle, HttpServer};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
 pub use router::Router;

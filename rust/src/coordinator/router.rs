@@ -20,7 +20,18 @@ pub struct Router {
     tokenizer: ByteTokenizer,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
-    /// Live queue depth (approximate; maintained by the server loop).
+    /// Live queue depth: incremented here on admission, decremented by the
+    /// server loop when a request leaves the queue for a batch or lane.
+    ///
+    /// **Consistency contract.** Writers publish with `Release`
+    /// (`admit_decode` increments, the serve loop decrements) and readers
+    /// load with `Acquire` (`admit_decode`'s cap check, `/metrics` from
+    /// HTTP worker threads), so a reader that observes a count also
+    /// observes the request-state writes that preceded it. The gauge is
+    /// still *approximate*: the cap check's load and increment are two
+    /// operations, not one RMW, so concurrent admitters can overshoot
+    /// `queue_cap` by at most the number of racing threads — it is a
+    /// load-shedding heuristic, not a capacity invariant.
     depth: Arc<AtomicU64>,
     /// Shared compressed-layout cache keyed by
     /// `(model weights, linear, snapped-ρ level, mask fingerprint)`.
@@ -53,6 +64,13 @@ impl Router {
 
     pub fn depth_handle(&self) -> Arc<AtomicU64> {
         self.depth.clone()
+    }
+
+    /// Current approximate queue depth (see the `depth` field's
+    /// consistency contract). Safe to call from any thread; `/metrics`
+    /// renders it as a gauge.
+    pub fn queue_depth(&self) -> u64 {
+        self.depth.load(Ordering::Acquire)
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -130,7 +148,7 @@ impl Router {
                 ),
             )));
         }
-        let depth = self.depth.load(Ordering::Relaxed) as usize;
+        let depth = self.depth.load(Ordering::Acquire) as usize;
         self.metrics.record_queue_depth(depth);
         if depth >= self.cfg.queue_cap {
             self.metrics.record_reject();
@@ -144,7 +162,7 @@ impl Router {
         let (tokens, valid_len) = self.tokenizer.pad_to(ids, self.seq_len);
 
         self.metrics.record_accept();
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.depth.fetch_add(1, Ordering::Release);
         let mut req = Request::new(id, tokens, valid_len, snapped, domain, reply)
             .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan));
         if self.cfg.decode.stream {
@@ -301,6 +319,19 @@ mod tests {
         assert!(r.admit_decode("hi", 0.4, "d", 1, None, None, None).is_ok());
         let rej = r.admit_decode("hi", 0.4, "d", 2, None, None, None).unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("single-token"));
+    }
+
+    #[test]
+    fn queue_depth_tracks_admissions() {
+        let r = router(10);
+        assert_eq!(r.queue_depth(), 0);
+        r.admit("a", 0.5, "d", None).unwrap();
+        r.admit("b", 0.5, "d", None).unwrap();
+        assert_eq!(r.queue_depth(), 2, "admissions increment the gauge");
+        // the serve loop's decrement side (Release) is exercised e2e in
+        // tests/host_serve_e2e.rs; here only the reader contract matters
+        r.depth_handle().fetch_sub(1, Ordering::Release);
+        assert_eq!(r.queue_depth(), 1);
     }
 
     #[test]

@@ -41,29 +41,37 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Control-plane handle returned by [`Server::start`].
+/// Control-plane handle returned by [`Server::start`]. All methods take
+/// `&self`, so one handle can be shared behind an `Arc` by many
+/// submitters (the HTTP front-end hands it to every connection worker)
+/// while one of them drives the lifecycle.
 pub struct ServerHandle {
-    tx: Option<Sender<Request>>,
-    join: Option<std::thread::JoinHandle<Result<(), Error>>>,
+    tx: Mutex<Option<Sender<Request>>>,
+    join: Mutex<Option<std::thread::JoinHandle<Result<(), Error>>>>,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 }
 
 impl ServerHandle {
-    /// Submit an admitted request (router output).
+    /// Submit an admitted request (router output). Submissions racing a
+    /// [`ServerHandle::shutdown`] get a typed error, never a panic — a
+    /// network front-end loses that race constantly.
     pub fn submit(&self, req: Request) -> Result<(), Error> {
-        self.tx
-            .as_ref()
-            .expect("server already shut down")
-            .send(req)
-            .map_err(|_| Error::coordinator("server loop exited"))
+        match self.tx.lock().expect("submit sender poisoned").as_ref() {
+            Some(tx) => tx
+                .send(req)
+                .map_err(|_| Error::coordinator("server loop exited")),
+            None => Err(Error::coordinator("server already shut down")),
+        }
     }
 
-    /// Graceful shutdown: flush queues, join the loop.
-    pub fn shutdown(mut self) -> Result<(), Error> {
+    /// Graceful shutdown: flush queues, join the loop. Idempotent — a
+    /// second call (or a racing one from another holder of the handle)
+    /// finds the join handle already taken and returns `Ok`.
+    pub fn shutdown(&self) -> Result<(), Error> {
         self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx.take());
-        match self.join.take() {
+        drop(self.tx.lock().expect("submit sender poisoned").take());
+        match self.join.lock().expect("join handle poisoned").take() {
             Some(j) => j
                 .join()
                 .map_err(|_| Error::coordinator("server thread panicked"))?,
@@ -151,8 +159,8 @@ impl Server {
             Ok(Ok(seq_len)) => {
                 crate::info!("server ready (engine={label}, seq_len={seq_len})");
                 Ok(ServerHandle {
-                    tx: Some(tx),
-                    join: Some(join),
+                    tx: Mutex::new(Some(tx)),
+                    join: Mutex::new(Some(join)),
                     metrics,
                     stop,
                 })
@@ -260,7 +268,9 @@ fn run_batch<E: Engine>(
     metrics: &Metrics,
 ) {
     let rho = batch.rho;
-    depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+    // Release pairs with the router's Acquire load — see the depth field's
+    // consistency contract on `Router`.
+    depth.fetch_sub(batch.len() as u64, Ordering::Release);
 
     // shed requests cancelled while they queued: the batch must not
     // spend decode steps on clients that already hung up
@@ -325,7 +335,10 @@ fn run_batch<E: Engine>(
                 if let Some(stream) = stream {
                     // drained batches finished before delivery: replay the
                     // per-token events so streams concatenate to
-                    // Response::tokens exactly like the continuous loop's
+                    // Response::tokens exactly like the continuous loop's.
+                    // A dropped receiver is harmless here (the generation
+                    // already ran; there is no lane left to free), so send
+                    // errors are swallowed.
                     for (index, &token) in resp.tokens.iter().enumerate() {
                         let _ = stream.send(StepEvent { id, index, token });
                     }
@@ -489,13 +502,25 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
         for ev in events {
             match ev {
                 LaneEvent::Token { slot, index, token } => {
-                    if let Some(lane) = live[slot].as_ref() {
+                    if let Some(lane) = live[slot].as_mut() {
                         if let Some(stream) = &lane.stream {
-                            let _ = stream.send(StepEvent {
-                                id: lane.id,
-                                index,
-                                token,
-                            });
+                            let gone = stream
+                                .send(StepEvent {
+                                    id: lane.id,
+                                    index,
+                                    token,
+                                })
+                                .is_err();
+                            if gone {
+                                // the receiver was dropped (client hung up
+                                // mid-stream): decoding tokens nobody will
+                                // read wastes the lane, so treat it as an
+                                // implicit cancel — the next sweep's
+                                // cancellation pass evicts the lane and
+                                // records a terminal cancelled response
+                                lane.stream = None;
+                                lane.cancel.cancel();
+                            }
                         }
                     }
                 }
@@ -518,7 +543,9 @@ fn admit_lane(
     rho: f64,
     into_running: bool,
 ) {
-    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    // Release pairs with the router's Acquire load — see the depth field's
+    // consistency contract on `Router`.
+    ctx.depth.fetch_sub(1, Ordering::Release);
     debug_assert!((req.rho - rho).abs() < 1e-9, "pool/request rho mismatch");
     if req.cancel.is_cancelled() {
         ctx.metrics.record_cancel();

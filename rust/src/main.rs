@@ -110,6 +110,12 @@ const SERVE_SPEC: &[OptSpec] = &[
     ),
     flag("stream", "force per-token response streaming on (default)"),
     flag("no-stream", "ignore per-request stream channels"),
+    opt(
+        "http",
+        "serve HTTP/SSE on this address (e.g. 127.0.0.1:8080) instead of \
+         replaying a trace",
+        "",
+    ),
     opt("config", "optional mumoe.toml to load first", ""),
 ];
 
@@ -126,11 +132,13 @@ fn flag_pair(a: &Args, on: &str, off: &str, default: bool) -> Result<bool, Error
     }
 }
 
-/// Replay a synthetic trace through the full coordinator. The default
-/// `host` engine runs batched multi-token decode through the router's
-/// shared layout cache and needs no `pjrt` feature (a missing checkpoint
-/// falls back to a deterministic random model); `--engine pjrt` drives
-/// the AOT artifact sessions instead.
+/// Replay a synthetic trace through the full coordinator, or — with
+/// `--http <addr>` (or `coordinator.http_addr` in the TOML) — serve real
+/// clients over HTTP/SSE until killed. The default `host` engine runs
+/// batched multi-token decode through the router's shared layout cache
+/// and needs no `pjrt` feature (a missing checkpoint falls back to a
+/// deterministic random model); `--engine pjrt` drives the AOT artifact
+/// sessions instead.
 fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     if wants_help(rest) {
         println!("{}", usage("serve", "replay a trace", SERVE_SPEC));
@@ -168,8 +176,15 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     cfg.decode.kv_cache = flag_pair(&a, "kv", "no-kv", cfg.decode.kv_cache)?;
     cfg.decode.continuous = flag_pair(&a, "continuous", "drain", cfg.decode.continuous)?;
     cfg.decode.stream = flag_pair(&a, "stream", "no-stream", cfg.decode.stream)?;
+    if a.given("http") {
+        cfg.http_addr = a.req("http")?.to_string();
+    }
     cfg.validate()?;
 
+    if !cfg.http_addr.is_empty() {
+        let addr = cfg.http_addr.clone();
+        return mumoe::coordinator::http::serve_http(cfg, &addr);
+    }
     let report = mumoe::coordinator::server::replay_trace(
         cfg,
         a.get_usize("requests")?,

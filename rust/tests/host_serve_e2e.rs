@@ -421,6 +421,86 @@ fn mixed_workload_fuses_shared_layouts_and_keeps_tokens_identical() {
 }
 
 #[test]
+fn submit_after_shutdown_returns_error_not_panic() {
+    // regression: submit used to panic via expect() once the sender was
+    // taken — a network front-end races requests against shutdown
+    // constantly, so the race must surface as a recoverable error
+    let cfg = serve_cfg();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics).expect("router");
+    let handle = Server::start(&router).expect("host server");
+    handle.shutdown().expect("shutdown");
+
+    let req = router
+        .admit_decode("too late", 0.6, "synth_wiki", 1, None, None, None)
+        .expect("admission is independent of the serve loop");
+    let err = handle.submit(req).expect_err("submit after shutdown");
+    assert!(
+        err.to_string().contains("shut down"),
+        "error should say the server is gone: {err}"
+    );
+    // shutdown is idempotent: a second call is an Ok no-op
+    handle.shutdown().expect("second shutdown");
+}
+
+#[test]
+fn dropped_stream_receiver_evicts_lane_and_records_cancel() {
+    // single-lane pool: request B can only run if dropping A's StepEvent
+    // receiver (the client hung up mid-stream) implicitly cancels A and
+    // frees its lane — instead of decoding 256 tokens nobody will read
+    let mut cfg = serve_cfg();
+    cfg.decode.batch_size = 1;
+    cfg.decode.max_new_cap = 256;
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config");
+    let handle = Server::start(&router).expect("host server");
+
+    let (atx, arx) = channel();
+    let (astx, asrx) = channel();
+    let a = router
+        .admit_decode("the abandoned one", 0.6, "synth_wiki", 256, None, Some(astx), Some(atx))
+        .expect("admit A");
+    let a_id = a.id;
+    handle.submit(a).expect("submit A");
+
+    // wait for A's first token so the drop lands mid-generation, then
+    // hang up: no explicit CancelToken, just a dead receiver
+    let first = asrx.recv_timeout(Duration::from_secs(60)).expect("A streams");
+    assert_eq!(first.index, 0);
+    drop(asrx);
+
+    // the serve loop notices the dead stream on its next send, cancels
+    // the lane, and records a terminal cancelled response
+    let a_resp = arx.recv_timeout(Duration::from_secs(60)).expect("A terminal");
+    assert!(
+        a_resp.is_cancelled(),
+        "dead receiver must cancel, got {:?}",
+        a_resp.rejected
+    );
+    assert_eq!(a_resp.id, a_id);
+    assert!(
+        a_resp.steps < 256,
+        "A must have been cut short, ran {} steps",
+        a_resp.steps
+    );
+
+    // the freed lane serves B normally
+    let (btx, brx) = channel();
+    let b = router
+        .admit_decode("the next client", 0.6, "synth_wiki", 2, None, None, Some(btx))
+        .expect("admit B");
+    handle.submit(b).expect("submit B");
+    let b_resp = brx.recv_timeout(Duration::from_secs(60)).expect("B response");
+    assert!(b_resp.is_ok(), "rejected: {:?}", b_resp.rejected);
+    assert_eq!(b_resp.tokens, reference_decode("the next client", 0.6, 2));
+    handle.shutdown().expect("shutdown");
+
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 1, "only B completed");
+}
+
+#[test]
 fn host_server_rejects_unknown_model_at_startup() {
     let mut cfg = serve_cfg();
     cfg.model = "mu-opt-nonexistent".into();

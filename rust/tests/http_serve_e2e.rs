@@ -1,0 +1,371 @@
+//! Integration: the HTTP/SSE front-end over real loopback sockets — a
+//! hand-rolled std `TcpStream` client POSTs `/generate` against
+//! `HttpServer` and the assertions mirror `host_serve_e2e`: whatever the
+//! transport and scheduling did, the streamed tokens must be
+//! bit-identical to a direct `decode_greedy` on the same weights.
+
+use mumoe::config::{EngineKind, ServeConfig};
+use mumoe::coordinator::engine::HOST_FALLBACK_SEED;
+use mumoe::coordinator::http::{HttpHandle, HttpServer};
+use mumoe::coordinator::{Metrics, Router};
+use mumoe::decode::{decode_greedy, DecodeConfig};
+use mumoe::model::config_by_name;
+use mumoe::model::tokenizer::ByteTokenizer;
+use mumoe::pruning::MaskPlan;
+use mumoe::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn serve_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig {
+        model: "mu-opt-micro".into(),
+        // point at nothing so the engine deterministically falls back to
+        // the random model regardless of whether artifacts were built
+        artifacts_dir: "http-serve-e2e-no-artifacts".into(),
+        engine: EngineKind::Host,
+        rho_levels: vec![0.4, 0.6, 1.0],
+        batch_window_us: 500,
+        queue_cap: 64,
+        ..Default::default()
+    };
+    cfg.decode.default_max_new = 2;
+    cfg.decode.max_new_cap = 8;
+    cfg.decode.batch_size = 4;
+    cfg.decode.stop_at_eos = false;
+    cfg
+}
+
+fn start(cfg: ServeConfig) -> (Arc<Metrics>, HttpHandle) {
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(
+        Router::new(cfg, mumoe::model::MAX_SEQ_LEN, metrics.clone()).expect("router config"),
+    );
+    let handle = HttpServer::start(router, "127.0.0.1:0").expect("http server");
+    (metrics, handle)
+}
+
+/// The serve path must reproduce this token-for-token whatever the
+/// transport and scheduling did (same invariant as `host_serve_e2e`).
+fn reference_decode(prompt: &str, rho: f64, max_new: usize) -> Vec<i32> {
+    let model = mumoe::nn::random_model(
+        &config_by_name("mu-opt-micro").expect("known model"),
+        HOST_FALLBACK_SEED,
+    );
+    let ids = ByteTokenizer.encode(prompt, true);
+    decode_greedy(
+        &model,
+        &ids,
+        &DecodeConfig {
+            rho,
+            plan: MaskPlan::PruneOnce,
+            max_new,
+            stop_at_eos: false,
+            kv_cache: false,
+        },
+        None,
+    )
+    .new_tokens()
+    .to_vec()
+}
+
+/// One exchange over a fresh connection (the server closes after each
+/// response). Returns (status, head, de-chunked body).
+fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("write request");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read response");
+    let text = String::from_utf8(buf).expect("utf8 response");
+    let head_end = text.find("\r\n\r\n").expect("response head");
+    let head = text[..head_end].to_string();
+    let raw_body = &text[head_end + 4..];
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        dechunk(raw_body)
+    } else {
+        raw_body.to_string()
+    };
+    (status, head, body)
+}
+
+fn dechunk(mut rest: &str) -> String {
+    let mut out = String::new();
+    while let Some(nl) = rest.find("\r\n") {
+        let size = usize::from_str_radix(rest[..nl].trim(), 16).expect("chunk size");
+        if size == 0 {
+            break;
+        }
+        let start = nl + 2;
+        out.push_str(&rest[start..start + size]);
+        rest = &rest[start + size + 2..];
+    }
+    out
+}
+
+/// Split an SSE body into its per-token `data:` payloads and the
+/// terminal `event: done` payload.
+fn parse_sse(body: &str) -> (Vec<Json>, Option<Json>) {
+    let mut data = Vec::new();
+    let mut done = None;
+    for block in body.split("\n\n").filter(|b| !b.trim().is_empty()) {
+        if let Some(rest) = block.strip_prefix("event: done\n") {
+            let payload = rest.strip_prefix("data: ").expect("done payload");
+            done = Some(Json::parse(payload).expect("done json"));
+        } else if let Some(payload) = block.strip_prefix("data: ") {
+            data.push(Json::parse(payload).expect("event json"));
+        } else {
+            panic!("unexpected SSE block: {block:?}");
+        }
+    }
+    (data, done)
+}
+
+fn tokens_of(j: &Json) -> Vec<i32> {
+    j.req("tokens")
+        .expect("tokens field")
+        .as_arr()
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_f64().expect("token number") as i32)
+        .collect()
+}
+
+#[test]
+fn streamed_sse_over_sockets_matches_direct_decode() {
+    let (_, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    // mixed ρ, mixed max_new, all at configured levels (kept small:
+    // every request pays real host forwards in a debug-profile test)
+    let cases: Vec<(String, f64, usize)> = (0..4)
+        .map(|i| {
+            let rho = [0.4, 0.6, 1.0][i % 3];
+            let max_new = 1 + (i % 3);
+            (format!("tyrolia record {i} is "), rho, max_new)
+        })
+        .collect();
+
+    for (prompt, rho, max_new) in &cases {
+        let body = format!(
+            r#"{{"prompt": "{prompt}", "rho": {rho}, "max_new": {max_new}, "stream": true}}"#
+        );
+        let (status, head, sse) = http_request(addr, "POST", "/generate", Some(&body));
+        assert_eq!(status, 200, "{head}\n{sse}");
+        assert!(
+            head.to_ascii_lowercase().contains("content-type: text/event-stream"),
+            "{head}"
+        );
+        let (events, done) = parse_sse(&sse);
+        let done = done.expect("terminal done event");
+
+        // dense indices, streamed tokens == terminal tokens == reference
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.req("index").unwrap().as_f64(), Some(i as f64));
+        }
+        let streamed: Vec<i32> = events
+            .iter()
+            .map(|e| e.req("token").unwrap().as_f64().unwrap() as i32)
+            .collect();
+        let terminal = tokens_of(&done);
+        assert_eq!(streamed, terminal, "stream must concatenate to tokens");
+        assert_eq!(
+            terminal,
+            reference_decode(prompt, *rho, *max_new),
+            "transport must not change tokens"
+        );
+        assert_eq!(done.req("cancelled").unwrap(), &Json::Bool(false));
+        assert_eq!(done.req("steps").unwrap().as_usize(), Some(*max_new));
+    }
+
+    // the non-stream framing carries the same tokens as the SSE one
+    let (prompt, rho, max_new) = &cases[1];
+    let body =
+        format!(r#"{{"prompt": "{prompt}", "rho": {rho}, "max_new": {max_new}}}"#);
+    let (status, _, plain) = http_request(addr, "POST", "/generate", Some(&body));
+    assert_eq!(status, 200, "{plain}");
+    let resp = Json::parse(&plain).expect("response json");
+    assert_eq!(tokens_of(&resp), reference_decode(prompt, *rho, *max_new));
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn health_flips_ready_to_draining_and_sheds_new_generations() {
+    let (_, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    let (status, _, body) = http_request(addr, "GET", "/health", None);
+    assert_eq!(status, 200);
+    let health = Json::parse(&body).expect("health json");
+    assert_eq!(health.req("status").unwrap().as_str(), Some("ready"));
+    assert_eq!(health.req("model").unwrap().as_str(), Some("mu-opt-micro"));
+
+    handle.begin_drain();
+    let (status, _, body) = http_request(addr, "GET", "/health", None);
+    assert_eq!(status, 200, "health keeps answering while draining");
+    let health = Json::parse(&body).expect("health json");
+    assert_eq!(health.req("status").unwrap().as_str(), Some("draining"));
+
+    let (status, _, body) =
+        http_request(addr, "POST", "/generate", Some(r#"{"prompt": "nope"}"#));
+    assert_eq!(status, 503, "draining sheds new generations: {body}");
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn malformed_and_overcap_requests_are_4xx_without_touching_the_engine() {
+    let (metrics, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    // malformed JSON: 400 before admission, nothing accepted
+    let (status, _, body) =
+        http_request(addr, "POST", "/generate", Some("{not json"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("JSON"), "{body}");
+
+    // missing / mistyped fields: 400 naming the field
+    let (status, _, body) =
+        http_request(addr, "POST", "/generate", Some(r#"{"rho": 0.6}"#));
+    assert_eq!(status, 400);
+    assert!(body.contains("prompt"), "{body}");
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "p", "stream": "yes"}"#),
+    );
+    assert_eq!(status, 400);
+    assert!(body.contains("stream"), "{body}");
+    assert_eq!(metrics.accepted.load(Ordering::Relaxed), 0);
+
+    // over-cap max_new: shed by admission control as a 400, engine idle
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "p", "max_new": 9999}"#),
+    );
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("cap"), "{body}");
+    assert_eq!(metrics.accepted.load(Ordering::Relaxed), 0);
+    assert!(metrics.rejected.load(Ordering::Relaxed) >= 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+
+    // unknown route and wrong method
+    let (status, _, _) = http_request(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = http_request(addr, "GET", "/generate", None);
+    assert_eq!(status, 405);
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn metrics_endpoint_exposes_prometheus_families() {
+    let (_, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    // run one generation so the per-ρ families materialize
+    let (status, _, _) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "count me", "rho": 0.6, "max_new": 2}"#),
+    );
+    assert_eq!(status, 200);
+
+    let (status, head, text) = http_request(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(head.contains("text/plain"), "{head}");
+    for family in [
+        "mumoe_requests_accepted_total 1",
+        "mumoe_requests_completed_total 1",
+        "mumoe_decode_tokens_total 2",
+        "mumoe_level_tokens_total{rho=\"0.60\"} 2",
+        "mumoe_fused_width_groups{rho=\"0.60\",width=\"1\"}",
+        "mumoe_request_latency_us_bucket{le=\"+Inf\"} 1",
+        "mumoe_queue_depth 0",
+    ] {
+        assert!(text.contains(family), "missing {family:?} in:\n{text}");
+    }
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn client_disconnect_mid_stream_frees_the_lane() {
+    // single-lane pool: request B can only complete if hanging up on A's
+    // SSE stream actually cancels A and frees the lane
+    let mut cfg = serve_cfg();
+    cfg.decode.batch_size = 1;
+    cfg.decode.max_new_cap = 256;
+    let (metrics, handle) = start(cfg);
+    let addr = handle.addr();
+
+    // A: long streaming generation; read until the first token event
+    // proves the lane is running, then drop the socket mid-stream
+    {
+        let mut s = TcpStream::connect(addr).expect("connect A");
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let body = r#"{"prompt": "the abandoned one", "rho": 0.6, "max_new": 256, "stream": true}"#;
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).expect("write A");
+        let mut seen = Vec::new();
+        let mut chunk = [0u8; 256];
+        while !String::from_utf8_lossy(&seen).contains("data: ") {
+            let n = s.read(&mut chunk).expect("read A");
+            assert!(n > 0, "server closed before first token");
+            seen.extend_from_slice(&chunk[..n]);
+        }
+        // socket drops here, mid-generation
+    }
+
+    // B completes on the freed lane and decodes exactly like a direct
+    // call — if A's disconnect didn't cancel, the single lane would be
+    // busy for 256 steps and this request would starve instead
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "the next client", "rho": 0.6, "max_new": 2}"#),
+    );
+    assert_eq!(status, 200, "{body}");
+    let resp = Json::parse(&body).expect("response json");
+    assert_eq!(tokens_of(&resp), reference_decode("the next client", 0.6, 2));
+    assert_eq!(resp.req("cancelled").unwrap(), &Json::Bool(false));
+
+    handle.shutdown().expect("shutdown");
+    assert!(
+        metrics.cancelled.load(Ordering::Relaxed) >= 1,
+        "A's disconnect must be recorded as a cancellation"
+    );
+    assert!(
+        resp.req("steps").unwrap().as_usize() == Some(2),
+        "B must have run its own 2 steps"
+    );
+}
