@@ -294,6 +294,36 @@ impl Default for DecodeKnobs {
     }
 }
 
+/// Cross-request prefix KV store + session registry knobs (the
+/// `[kvstore]` config section; see `crate::kvstore`). Only meaningful on
+/// the continuous host path with `decode.kv_cache` on — the router
+/// rejects `session` requests otherwise, and the drain path never
+/// consults the store.
+#[derive(Clone, Copy, Debug)]
+pub struct KvStoreKnobs {
+    /// Consult/publish the shared prefix store at lane prefill and honour
+    /// per-request `session` ids. Off makes every admission cold (the
+    /// store is provably transparent either way —
+    /// `proptest.rs::kvstore_props`). CLI: `--kvstore` / `--no-kvstore`.
+    pub enabled: bool,
+    /// Resident-token budget of the store (sum of entry lengths; LRU
+    /// eviction above it). CLI: `--kv-budget`.
+    pub token_budget: usize,
+    /// Idle seconds before a parked session is expired (swept
+    /// opportunistically when lanes finish). CLI: `--session-ttl`.
+    pub session_ttl_secs: u64,
+}
+
+impl Default for KvStoreKnobs {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            token_budget: 4096,
+            session_ttl_secs: 600,
+        }
+    }
+}
+
 /// Everything the `serve` subcommand needs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -330,6 +360,8 @@ pub struct ServeConfig {
     pub layout_cache_cap: usize,
     /// Multi-token decode knobs (see [`DecodeKnobs`]).
     pub decode: DecodeKnobs,
+    /// Cross-request prefix KV store + sessions (see [`KvStoreKnobs`]).
+    pub kvstore: KvStoreKnobs,
 }
 
 impl Default for ServeConfig {
@@ -347,6 +379,7 @@ impl Default for ServeConfig {
             workers: 2,
             layout_cache_cap: 512,
             decode: DecodeKnobs::default(),
+            kvstore: KvStoreKnobs::default(),
         }
     }
 }
@@ -386,6 +419,14 @@ impl ServeConfig {
                 kv_cache: t.bool_or("decode.kv_cache", d.decode.kv_cache),
                 continuous: t.bool_or("decode.continuous", d.decode.continuous),
                 stream: t.bool_or("decode.stream", d.decode.stream),
+            },
+            kvstore: KvStoreKnobs {
+                enabled: t.bool_or("kvstore.enabled", d.kvstore.enabled),
+                token_budget: t.usize_or("kvstore.token_budget", d.kvstore.token_budget),
+                session_ttl_secs: t.usize_or(
+                    "kvstore.session_ttl_secs",
+                    d.kvstore.session_ttl_secs as usize,
+                ) as u64,
             },
         };
         cfg.validate()?;
@@ -436,6 +477,12 @@ impl ServeConfig {
         }
         if self.decode.batch_size == 0 {
             return Err(Error::config("decode.batch_size must be > 0"));
+        }
+        if self.kvstore.enabled && self.kvstore.token_budget == 0 {
+            return Err(Error::config("kvstore.token_budget must be > 0"));
+        }
+        if self.kvstore.enabled && self.kvstore.session_ttl_secs == 0 {
+            return Err(Error::config("kvstore.session_ttl_secs must be > 0"));
         }
         Ok(())
     }
@@ -621,6 +668,51 @@ default_rho = 0.6
             assert!(with_knobs(knobs).validate().is_err(), "{knobs:?}");
         }
         assert!(with_knobs(DecodeKnobs::default()).validate().is_ok());
+    }
+
+    #[test]
+    fn kvstore_knobs_from_toml() {
+        let t = Toml::parse(
+            "[kvstore]\nenabled = false\ntoken_budget = 1024\nsession_ttl_secs = 30\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert!(!c.kvstore.enabled);
+        assert_eq!(c.kvstore.token_budget, 1024);
+        assert_eq!(c.kvstore.session_ttl_secs, 30);
+        // defaults when the section is absent
+        let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(d.kvstore.enabled, "prefix reuse is the default");
+        assert_eq!(d.kvstore.token_budget, 4096);
+        assert_eq!(d.kvstore.session_ttl_secs, 600);
+    }
+
+    #[test]
+    fn validation_rejects_bad_kvstore_knobs() {
+        let with_knobs = |kvstore: KvStoreKnobs| ServeConfig {
+            kvstore,
+            ..ServeConfig::default()
+        };
+        assert!(with_knobs(KvStoreKnobs {
+            token_budget: 0,
+            ..Default::default()
+        })
+        .validate()
+        .is_err());
+        assert!(with_knobs(KvStoreKnobs {
+            session_ttl_secs: 0,
+            ..Default::default()
+        })
+        .validate()
+        .is_err());
+        // disabled stores skip the budget/ttl checks
+        assert!(with_knobs(KvStoreKnobs {
+            enabled: false,
+            token_budget: 0,
+            session_ttl_secs: 0,
+        })
+        .validate()
+        .is_ok());
     }
 
     #[test]

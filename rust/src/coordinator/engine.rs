@@ -322,9 +322,12 @@ impl Engine for PjrtEngine {
                     latency_us: 0,
                     batch_size: 0,
                     // single-token graph execution: no prefill/step split
+                    // and no KV reuse to attribute
                     prefill_us: 0,
                     step_us: 0,
                     rho_used: batch.rho,
+                    prefilled_tokens: 0,
+                    seeded_tokens: 0,
                     rejected: None,
                 }
             })

@@ -7,17 +7,22 @@
 //!
 //! * `POST /generate` — JSON body `{"prompt": "...", "rho": 0.6,
 //!   "max_new": 8, "plan": "prune-once", "domain": "chat",
-//!   "stream": true}` → [`Router::admit_decode`]. Field errors and router
-//!   rejections are 4xx **before anything touches the engine thread**;
-//!   `"stream": true` answers with `text/event-stream` over chunked
-//!   transfer, one `data:` event per generated token (driven by the
-//!   existing [`StepEvent`] channel) and a terminal `event: done`
-//!   carrying the full response. Without `stream` the response is one
-//!   JSON object.
+//!   "stream": true, "session": "chat-1"}` → [`Router::admit_decode`].
+//!   Field errors and router rejections are 4xx **before anything touches
+//!   the engine thread**; `"stream": true` answers with
+//!   `text/event-stream` over chunked transfer, one `data:` event per
+//!   generated token (driven by the existing [`StepEvent`] channel) and a
+//!   terminal `event: done` carrying the full response. Without `stream`
+//!   the response is one JSON object. `"session"` opts into cross-turn KV
+//!   continuation (`crate::kvstore`): the id is echoed in the terminal
+//!   response so clients know which id to continue or delete.
+//! * `DELETE /session/:id` — drop a parked session (idempotent;
+//!   `{"session": id, "deleted": bool}` says whether it existed).
 //! * `GET /health` — `{"status": "ready" | "draining", ...}`; flips to
 //!   `draining` when shutdown begins.
-//! * `GET /metrics` — Prometheus text ([`Metrics::to_prometheus`]) plus
-//!   the router's live `mumoe_queue_depth` gauge.
+//! * `GET /metrics` — Prometheus text ([`Metrics::to_prometheus`],
+//!   including the layout-cache and prefix-KV-store occupancy gauges)
+//!   plus the router's live `mumoe_queue_depth` gauge.
 //!
 //! A client disconnect mid-stream cancels its request: the connection
 //! worker fires the request's [`CancelToken`] on the first failed write,
@@ -187,7 +192,7 @@ pub fn serve_http(cfg: ServeConfig, addr: &str) -> Result<(), Error> {
     let router = Arc::new(Router::new(cfg, crate::model::MAX_SEQ_LEN, metrics)?);
     let handle = HttpServer::start(router, addr)?;
     println!("serving on http://{}", handle.addr());
-    println!("  POST /generate   GET /health   GET /metrics");
+    println!("  POST /generate   DELETE /session/:id   GET /health   GET /metrics");
     handle.join()
 }
 
@@ -266,6 +271,26 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
             );
         }
         ("POST", "/generate") => handle_generate(shared, &mut stream, &req.body),
+        ("DELETE", path) => match path.strip_prefix("/session/") {
+            Some(id) if !id.is_empty() => {
+                // idempotent: deleting an unknown (or already-expired)
+                // session reports deleted=false rather than 404, so
+                // clients can fire-and-forget cleanup
+                let deleted = shared.router.sessions().delete(id);
+                let body = Json::Obj(HashMap::from([
+                    ("session".into(), Json::Str(id.into())),
+                    ("deleted".into(), Json::Bool(deleted)),
+                ]));
+                write_json(&mut stream, 200, &body);
+            }
+            _ => {
+                write_json(
+                    &mut stream,
+                    404,
+                    &json_error(&format!("no route for {path}"), None),
+                );
+            }
+        },
         ("GET", "/generate") | ("POST", "/health") | ("POST", "/metrics") => {
             write_json(
                 &mut stream,
@@ -291,6 +316,9 @@ struct GenerateBody {
     plan: Option<MaskPlan>,
     domain: String,
     stream: bool,
+    /// Session id for cross-turn KV continuation; content rules
+    /// (`crate::kvstore::valid_session_id`) are the router's to enforce.
+    session: Option<String>,
 }
 
 /// Parse and validate the JSON body; every failure names the offending
@@ -350,6 +378,14 @@ fn parse_generate(body: &[u8]) -> Result<GenerateBody, HttpError> {
         },
         None => false,
     };
+    let session = match json.get("session") {
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| field("session", "a string"))?
+                .to_string(),
+        ),
+        None => None,
+    };
     Ok(GenerateBody {
         prompt,
         rho,
@@ -357,6 +393,7 @@ fn parse_generate(body: &[u8]) -> Result<GenerateBody, HttpError> {
         plan,
         domain,
         stream,
+        session,
     })
 }
 
@@ -387,6 +424,7 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
         &greq.domain,
         greq.max_new,
         greq.plan,
+        greq.session.clone(),
         step_tx,
         Some(reply_tx),
     ) {
@@ -411,13 +449,13 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
     }
 
     if greq.stream {
-        stream_response(stream, id, &cancel, step_rx, reply_rx);
+        stream_response(stream, id, greq.session.as_deref(), &cancel, step_rx, reply_rx);
     } else {
         drop(step_rx);
         match reply_rx.recv_timeout(REPLY_TIMEOUT) {
             Ok(resp) => {
                 if resp.is_ok() || resp.is_cancelled() {
-                    write_json(stream, 200, &response_json(&resp));
+                    write_json(stream, 200, &response_json(&resp, greq.session.as_deref()));
                 } else {
                     let msg = resp.rejected.clone().unwrap_or_else(|| "failed".into());
                     write_json(stream, 500, &json_error(&msg, Some(id)));
@@ -440,6 +478,7 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
 fn stream_response(
     stream: &mut TcpStream,
     id: RequestId,
+    session: Option<&str>,
     cancel: &CancelToken,
     step_rx: std::sync::mpsc::Receiver<StepEvent>,
     reply_rx: std::sync::mpsc::Receiver<Response>,
@@ -484,7 +523,10 @@ fn stream_response(
     }
     match reply_rx.recv_timeout(REPLY_TIMEOUT) {
         Ok(resp) => {
-            let event = format!("event: done\ndata: {}\n\n", response_json(&resp).dump());
+            let event = format!(
+                "event: done\ndata: {}\n\n",
+                response_json(&resp, session).dump()
+            );
             if write_chunk(stream, event.as_bytes()).is_err() {
                 cancel.cancel();
                 return;
@@ -608,9 +650,11 @@ fn json_error(msg: &str, id: Option<RequestId>) -> Json {
 }
 
 /// The wire form of a terminal [`Response`] (shared by the plain-JSON and
-/// the SSE `done` paths so the two framings cannot diverge).
-fn response_json(resp: &Response) -> Json {
-    Json::Obj(HashMap::from([
+/// the SSE `done` paths so the two framings cannot diverge). `session`
+/// echoes the request's id back so a client knows which id continues the
+/// turn (the serve loop parks the lane under it).
+fn response_json(resp: &Response, session: Option<&str>) -> Json {
+    let mut m = HashMap::from([
         ("id".into(), Json::Num(resp.id as f64)),
         (
             "tokens".into(),
@@ -623,8 +667,14 @@ fn response_json(resp: &Response) -> Json {
         ("step_us".into(), Json::Num(resp.step_us as f64)),
         ("batch_size".into(), Json::Num(resp.batch_size as f64)),
         ("rho_used".into(), Json::Num(resp.rho_used)),
+        ("prefilled".into(), Json::Num(resp.prefilled_tokens as f64)),
+        ("seeded".into(), Json::Num(resp.seeded_tokens as f64)),
         ("cancelled".into(), Json::Bool(resp.is_cancelled())),
-    ]))
+    ]);
+    if let Some(session) = session {
+        m.insert("session".into(), Json::Str(session.into()));
+    }
+    Json::Obj(m)
 }
 
 #[cfg(test)]
@@ -643,7 +693,7 @@ mod tests {
 
         let full = parse_generate(
             br#"{"prompt": "p", "rho": 0.6, "max_new": 4, "plan": "refresh:2",
-                 "domain": "chat", "stream": true}"#,
+                 "domain": "chat", "stream": true, "session": "chat-1"}"#,
         )
         .unwrap();
         assert_eq!(full.rho, 0.6);
@@ -651,6 +701,7 @@ mod tests {
         assert_eq!(full.plan, Some(MaskPlan::Refresh(2)));
         assert_eq!(full.domain, "chat");
         assert!(full.stream);
+        assert_eq!(full.session.as_deref(), Some("chat-1"));
 
         // every bad field is a 400 naming the field
         for (body, field) in [
@@ -662,6 +713,7 @@ mod tests {
             (br#"{"prompt": "p", "plan": "sometimes"}"#, "plan"),
             (br#"{"prompt": "p", "stream": "yes"}"#, "stream"),
             (br#"{"prompt": "p", "domain": 9}"#, "domain"),
+            (br#"{"prompt": "p", "session": 5}"#, "session"),
         ] {
             let (status, msg) = parse_generate(body).unwrap_err();
             assert_eq!(status, 400, "{msg}");
@@ -690,13 +742,21 @@ mod tests {
             step_us: 5,
             cache_hits: 0,
             cache_misses: 0,
+            prefilled_tokens: 1,
+            seeded_tokens: 3,
+            parked: None,
         };
         let mut resp = Response::from_decode(7, 0.6, &out, None);
         resp.steps = 2;
-        let j = response_json(&resp);
+        let j = response_json(&resp, None);
         assert_eq!(j.req("id").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.req("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.req("prefilled").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("seeded").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.req("cancelled").unwrap(), &Json::Bool(false));
+        assert!(j.get("session").is_none(), "one-shot requests carry no session");
+        let j = response_json(&resp, Some("chat-1"));
+        assert_eq!(j.req("session").unwrap().as_str(), Some("chat-1"));
     }
 }

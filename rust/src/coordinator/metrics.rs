@@ -45,6 +45,14 @@ pub struct LevelStats {
     /// Histogram of group widths: buckets 1..=7 plus an 8+ overflow
     /// bucket, indexed by `width - 1`.
     pub fused_width_hist: [u64; 8],
+    /// Window tokens prefilled by full forward work (selection +
+    /// prefill/rebuild). With the prefix KV store on, a seeded admission
+    /// prefills only its suffix, so this is the *residual* full-window
+    /// work — the split prefix reuse exists to shrink.
+    pub prefilled_tokens: u64,
+    /// Window tokens whose K/V rows were seeded from the cross-request
+    /// prefix store or a parked session instead of being recomputed.
+    pub seeded_tokens: u64,
 }
 
 impl LevelStats {
@@ -87,6 +95,14 @@ pub struct Metrics {
     decode_time_us: AtomicU64,
     decode_prefill_us: AtomicU64,
     decode_step_us: AtomicU64,
+    // live occupancy gauges, overwritten by the serve loop after each
+    // executed batch / sweep (last-write-wins snapshots, not counters)
+    layout_cache_entries: AtomicU64,
+    layout_cache_evictions: AtomicU64,
+    kv_store_entries: AtomicU64,
+    kv_store_tokens: AtomicU64,
+    kv_store_evictions: AtomicU64,
+    sessions_active: AtomicU64,
     levels: Mutex<HashMap<u32, LevelStats>>,
 }
 
@@ -113,8 +129,39 @@ impl Metrics {
             decode_time_us: AtomicU64::new(0),
             decode_prefill_us: AtomicU64::new(0),
             decode_step_us: AtomicU64::new(0),
+            layout_cache_entries: AtomicU64::new(0),
+            layout_cache_evictions: AtomicU64::new(0),
+            kv_store_entries: AtomicU64::new(0),
+            kv_store_tokens: AtomicU64::new(0),
+            kv_store_evictions: AtomicU64::new(0),
+            sessions_active: AtomicU64::new(0),
             levels: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Snapshot the serve loop's shared layout-cache occupancy (resident
+    /// entries; lifetime LRU evictions) for `/metrics`.
+    pub fn set_layout_cache_gauges(&self, entries: usize, evictions: u64) {
+        self.layout_cache_entries
+            .store(entries as u64, Ordering::Relaxed);
+        self.layout_cache_evictions.store(evictions, Ordering::Relaxed);
+    }
+
+    /// Snapshot the prefix KV store and session registry occupancy
+    /// (`crate::kvstore`) for `/metrics`.
+    pub fn set_kvstore_gauges(
+        &self,
+        entries: usize,
+        resident_tokens: usize,
+        evictions: u64,
+        sessions: usize,
+    ) {
+        self.kv_store_entries.store(entries as u64, Ordering::Relaxed);
+        self.kv_store_tokens
+            .store(resident_tokens as u64, Ordering::Relaxed);
+        self.kv_store_evictions.store(evictions, Ordering::Relaxed);
+        self.sessions_active
+            .store(sessions as u64, Ordering::Relaxed);
     }
 
     pub fn record_accept(&self) {
@@ -201,7 +248,9 @@ impl Metrics {
     /// many requests it carried, how many tokens it generated, how long
     /// execution took and how that time splits into prefill-class
     /// (selection + full-window prefill/rebuild) vs per-step (reused
-    /// incremental) work.
+    /// incremental) work — plus the prefilled/seeded window-token split
+    /// (seeded = K/V rows reused from the prefix store or a session).
+    #[allow(clippy::too_many_arguments)] // mirrors record_decode_parts
     pub fn record_decode(
         &self,
         rho: f64,
@@ -210,8 +259,20 @@ impl Metrics {
         elapsed_us: u64,
         prefill_us: u64,
         step_us: u64,
+        prefilled_tokens: u64,
+        seeded_tokens: u64,
     ) {
-        self.record_decode_parts(rho, 1, requests as u64, tokens, elapsed_us, prefill_us, step_us);
+        self.record_decode_parts(
+            rho,
+            1,
+            requests as u64,
+            tokens,
+            elapsed_us,
+            prefill_us,
+            step_us,
+            prefilled_tokens,
+            seeded_tokens,
+        );
     }
 
     /// One lane-pool run starting at a snapped level (continuous path):
@@ -231,6 +292,7 @@ impl Metrics {
     /// "scheduling units" in both serve modes. Cancelled lanes report the
     /// steps they actually ran (that compute happened; capacity numbers
     /// must see it).
+    #[allow(clippy::too_many_arguments)] // mirrors record_decode_parts
     pub fn record_lane_decode(
         &self,
         rho: f64,
@@ -238,8 +300,20 @@ impl Metrics {
         elapsed_us: u64,
         prefill_us: u64,
         step_us: u64,
+        prefilled_tokens: u64,
+        seeded_tokens: u64,
     ) {
-        self.record_decode_parts(rho, 0, 1, tokens, elapsed_us, prefill_us, step_us);
+        self.record_decode_parts(
+            rho,
+            0,
+            1,
+            tokens,
+            elapsed_us,
+            prefill_us,
+            step_us,
+            prefilled_tokens,
+            seeded_tokens,
+        );
     }
 
     #[allow(clippy::too_many_arguments)] // private accumulator behind the two public forms
@@ -252,6 +326,8 @@ impl Metrics {
         elapsed_us: u64,
         prefill_us: u64,
         step_us: u64,
+        prefilled_tokens: u64,
+        seeded_tokens: u64,
     ) {
         self.decode_tokens.fetch_add(tokens, Ordering::Relaxed);
         self.decode_time_us.fetch_add(elapsed_us, Ordering::Relaxed);
@@ -264,6 +340,8 @@ impl Metrics {
         e.tokens += tokens;
         e.prefill_us += prefill_us;
         e.step_us += step_us;
+        e.prefilled_tokens += prefilled_tokens;
+        e.seeded_tokens += seeded_tokens;
     }
 
     /// Aggregate decode throughput over execution time (not wall time —
@@ -367,13 +445,15 @@ impl Metrics {
         for (rho, st) in self.level_stats() {
             s.push_str(&format!(
                 "\n  level rho={rho:.2}: batches={} requests={} tokens={} \
-                 prefill_us={} step_us={} admitted_running={} lane_occ={:.2} \
-                 fused_width={:.2}",
+                 prefill_us={} step_us={} prefilled={} seeded={} \
+                 admitted_running={} lane_occ={:.2} fused_width={:.2}",
                 st.batches,
                 st.requests,
                 st.tokens,
                 st.prefill_us,
                 st.step_us,
+                st.prefilled_tokens,
+                st.seeded_tokens,
                 st.admitted_running,
                 st.lane_occupancy(),
                 st.mean_fused_width(),
@@ -481,6 +561,42 @@ impl Metrics {
             "Aggregate decode throughput over execution time",
             self.decode_tokens_per_sec(),
         );
+        gauge(
+            &mut s,
+            "mumoe_layout_cache_entries",
+            "Resident entries in the serve loop's shared layout cache",
+            g(&self.layout_cache_entries) as f64,
+        );
+        counter(
+            &mut s,
+            "mumoe_layout_cache_evictions_total",
+            "Layout-cache entries evicted by the LRU capacity bound",
+            g(&self.layout_cache_evictions),
+        );
+        gauge(
+            &mut s,
+            "mumoe_kvstore_entries",
+            "Resident prefix entries in the cross-request KV store",
+            g(&self.kv_store_entries) as f64,
+        );
+        gauge(
+            &mut s,
+            "mumoe_kvstore_resident_tokens",
+            "Cached K/V tokens resident in the cross-request KV store",
+            g(&self.kv_store_tokens) as f64,
+        );
+        counter(
+            &mut s,
+            "mumoe_kvstore_evictions_total",
+            "Prefix entries evicted from the KV store under its token budget",
+            g(&self.kv_store_evictions),
+        );
+        gauge(
+            &mut s,
+            "mumoe_sessions_active",
+            "Parked sessions resident in the session registry",
+            g(&self.sessions_active) as f64,
+        );
 
         // request latency: log2 buckets render as cumulative `le` bounds
         let _ = writeln!(
@@ -546,6 +662,18 @@ impl Metrics {
             "mumoe_level_step_us_total",
             "Per-step execution time per snapped rho level (us)",
             &|st| st.step_us,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_prefilled_tokens_total",
+            "Window tokens prefilled by full forward work per snapped rho level",
+            &|st| st.prefilled_tokens,
+        );
+        level_counter(
+            &mut s,
+            "mumoe_level_seeded_tokens_total",
+            "Window tokens seeded from the prefix KV store or a session per snapped rho level",
+            &|st| st.seeded_tokens,
         );
         level_counter(
             &mut s,
@@ -628,6 +756,11 @@ impl Metrics {
                     ("tokens".into(), Json::Num(st.tokens as f64)),
                     ("prefill_us".into(), Json::Num(st.prefill_us as f64)),
                     ("step_us".into(), Json::Num(st.step_us as f64)),
+                    (
+                        "prefilled_tokens".into(),
+                        Json::Num(st.prefilled_tokens as f64),
+                    ),
+                    ("seeded_tokens".into(), Json::Num(st.seeded_tokens as f64)),
                     (
                         "admitted_running".into(),
                         Json::Num(st.admitted_running as f64),
@@ -712,9 +845,9 @@ mod tests {
     #[test]
     fn per_level_decode_counters_accumulate() {
         let m = Metrics::new();
-        m.record_decode(0.4, 3, 12, 1_000, 700, 300);
-        m.record_decode(0.4, 1, 4, 500, 400, 100);
-        m.record_decode(1.0, 2, 2, 250, 250, 0);
+        m.record_decode(0.4, 3, 12, 1_000, 700, 300, 20, 0);
+        m.record_decode(0.4, 1, 4, 500, 400, 100, 1, 7);
+        m.record_decode(1.0, 2, 2, 250, 250, 0, 6, 0);
         let levels = m.level_stats();
         assert_eq!(levels.len(), 2);
         assert_eq!(levels[0].0, 0.4);
@@ -726,6 +859,8 @@ mod tests {
                 tokens: 16,
                 prefill_us: 1_100,
                 step_us: 400,
+                prefilled_tokens: 21,
+                seeded_tokens: 7,
                 ..Default::default()
             }
         );
@@ -747,12 +882,14 @@ mod tests {
     #[test]
     fn summary_and_json_carry_levels() {
         let m = Metrics::new();
-        m.record_decode(0.6, 2, 8, 1_000, 900, 100);
+        m.record_decode(0.6, 2, 8, 1_000, 900, 100, 9, 5);
         let s = m.summary();
         assert!(s.contains("decode_tok_s="), "{s}");
         assert!(s.contains("level rho=0.60"), "{s}");
         assert!(s.contains("prefill_us=900"), "{s}");
         assert!(s.contains("step_us=100"), "{s}");
+        assert!(s.contains("prefilled=9"), "{s}");
+        assert!(s.contains("seeded=5"), "{s}");
         let j = m.to_json();
         assert_eq!(j.req("decode_tokens").unwrap().as_f64(), Some(8.0));
         assert_eq!(j.req("decode_prefill_us").unwrap().as_f64(), Some(900.0));
@@ -762,6 +899,8 @@ mod tests {
         assert_eq!(l.req("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(l.req("prefill_us").unwrap().as_f64(), Some(900.0));
         assert_eq!(l.req("step_us").unwrap().as_f64(), Some(100.0));
+        assert_eq!(l.req("prefilled_tokens").unwrap().as_f64(), Some(9.0));
+        assert_eq!(l.req("seeded_tokens").unwrap().as_f64(), Some(5.0));
     }
 
     #[test]
@@ -779,7 +918,7 @@ mod tests {
         // counts scheduling units (1), not completed lanes (4)
         m.record_pool_run(0.4, 3, 4);
         for _ in 0..4 {
-            m.record_lane_decode(0.4, 2, 100, 80, 20);
+            m.record_lane_decode(0.4, 2, 100, 80, 20, 3, 2);
         }
         assert!((m.lane_occupancy() - 8.0 / 12.0).abs() < 1e-9);
         assert_eq!(m.cancelled.load(Ordering::Relaxed), 1);
@@ -793,6 +932,8 @@ mod tests {
         assert_eq!(levels[0].1.tokens, 8);
         assert_eq!(levels[0].1.prefill_us, 320);
         assert_eq!(levels[0].1.step_us, 80);
+        assert_eq!(levels[0].1.prefilled_tokens, 12);
+        assert_eq!(levels[0].1.seeded_tokens, 8);
         assert!((levels[0].1.lane_occupancy() - 6.0 / 8.0).abs() < 1e-9);
         assert_eq!(levels[1].1.admitted_running, 0);
         let s = m.summary();
@@ -848,7 +989,7 @@ mod tests {
         let m = Metrics::new();
         m.record_accept();
         m.record_completion(500);
-        m.record_decode(0.6, 2, 8, 1_000, 900, 100);
+        m.record_decode(0.6, 2, 8, 1_000, 900, 100, 9, 5);
         m.record_fused_sweep(0.6, &[3, 1, 12]);
         let text = m.to_prometheus();
         assert!(text.contains("# TYPE mumoe_requests_accepted_total counter"), "{text}");
@@ -860,11 +1001,38 @@ mod tests {
         assert!(text.contains("mumoe_request_latency_us_sum 500"), "{text}");
         assert!(text.contains("mumoe_level_tokens_total{rho=\"0.60\"} 8"), "{text}");
         assert!(text.contains("mumoe_level_requests_total{rho=\"0.60\"} 2"), "{text}");
+        assert!(
+            text.contains("mumoe_level_prefilled_tokens_total{rho=\"0.60\"} 9"),
+            "{text}"
+        );
+        assert!(
+            text.contains("mumoe_level_seeded_tokens_total{rho=\"0.60\"} 5"),
+            "{text}"
+        );
         assert!(text.contains("mumoe_fused_width_groups{rho=\"0.60\",width=\"3\"} 1"), "{text}");
         assert!(text.contains("mumoe_fused_width_groups{rho=\"0.60\",width=\"8+\"} 1"), "{text}");
         // empty buckets are elided; the zero-width family never renders a
         // width it did not observe
         assert!(!text.contains("width=\"5\""), "{text}");
+    }
+
+    #[test]
+    fn occupancy_gauges_snapshot_latest_values() {
+        let m = Metrics::new();
+        let text = m.to_prometheus();
+        assert!(text.contains("mumoe_layout_cache_entries 0"), "{text}");
+        assert!(text.contains("mumoe_kvstore_entries 0"), "{text}");
+        m.set_layout_cache_gauges(3, 7);
+        m.set_kvstore_gauges(2, 48, 5, 1);
+        // last write wins: these are snapshots, not accumulators
+        m.set_layout_cache_gauges(4, 9);
+        let text = m.to_prometheus();
+        assert!(text.contains("mumoe_layout_cache_entries 4"), "{text}");
+        assert!(text.contains("mumoe_layout_cache_evictions_total 9"), "{text}");
+        assert!(text.contains("mumoe_kvstore_entries 2"), "{text}");
+        assert!(text.contains("mumoe_kvstore_resident_tokens 48"), "{text}");
+        assert!(text.contains("mumoe_kvstore_evictions_total 5"), "{text}");
+        assert!(text.contains("mumoe_sessions_active 1"), "{text}");
     }
 
     #[test]

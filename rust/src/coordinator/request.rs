@@ -78,6 +78,12 @@ pub struct Request {
     pub stream: Option<Sender<StepEvent>>,
     /// Cancellation token; the client clones it before submitting.
     pub cancel: CancelToken,
+    /// Session id for cross-turn KV continuation (`crate::kvstore`): the
+    /// serve loop prepends the session's parked window to `tokens`, seeds
+    /// its cached rows, and re-parks the finished lane under this id.
+    /// Validated by `Router::admit_decode`; `None` is a plain one-shot
+    /// request.
+    pub session: Option<String>,
 }
 
 impl Request {
@@ -101,6 +107,7 @@ impl Request {
             reply,
             stream: None,
             cancel: CancelToken::new(),
+            session: None,
         }
     }
 
@@ -115,6 +122,12 @@ impl Request {
     /// Attach a per-token streaming channel.
     pub fn with_stream(mut self, stream: Sender<StepEvent>) -> Request {
         self.stream = Some(stream);
+        self
+    }
+
+    /// Attach a session id for cross-turn KV continuation.
+    pub fn with_session(mut self, session: Option<String>) -> Request {
+        self.session = session;
         self
     }
 }
@@ -152,6 +165,12 @@ pub struct Response {
     pub step_us: u64,
     /// The sparsity level actually used after snapping.
     pub rho_used: f64,
+    /// Prompt/window tokens prefilled by full forward work for this
+    /// request (suffix-only on a prefix-store hit; see `crate::kvstore`).
+    pub prefilled_tokens: usize,
+    /// Window tokens whose K/V rows were seeded from the prefix store or
+    /// a parked session instead of being recomputed.
+    pub seeded_tokens: usize,
     /// Set if the request was shed by admission control.
     pub rejected: Option<String>,
 }
@@ -174,6 +193,8 @@ impl Response {
             prefill_us: 0,
             step_us: 0,
             rho_used: 0.0,
+            prefilled_tokens: 0,
+            seeded_tokens: 0,
             rejected: Some(reason.into()),
         }
     }
@@ -215,6 +236,8 @@ impl Response {
             prefill_us: out.prefill_us,
             step_us: out.step_us,
             rho_used: rho,
+            prefilled_tokens: out.prefilled_tokens,
+            seeded_tokens: out.seeded_tokens,
             rejected,
         }
     }
@@ -273,6 +296,9 @@ mod tests {
         let (tx, _rx) = std::sync::mpsc::channel();
         let r = r.with_stream(tx);
         assert!(r.stream.is_some());
+        assert!(r.session.is_none());
+        let r = r.with_session(Some("chat-1".into()));
+        assert_eq!(r.session.as_deref(), Some("chat-1"));
     }
 
     #[test]
@@ -296,8 +322,12 @@ mod tests {
             step_us: 5,
             cache_hits: 0,
             cache_misses: 0,
+            prefilled_tokens: 3,
+            seeded_tokens: 0,
+            parked: None,
         };
         let r = Response::cancelled(9, 0.6, &partial);
+        assert_eq!((r.prefilled_tokens, r.seeded_tokens), (3, 0));
         assert!(!r.is_ok());
         assert!(r.is_cancelled());
         assert_eq!(r.tokens, vec![40, 41], "partial tokens survive");

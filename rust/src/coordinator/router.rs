@@ -5,6 +5,7 @@
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response, StepEvent};
 use crate::config::ServeConfig;
+use crate::kvstore::{valid_session_id, KvStore, SessionRegistry};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::moe::snap_rho;
 use crate::tensor::LayoutCache;
@@ -42,6 +43,14 @@ pub struct Router {
     /// `HostEngine::execute` compresses through (and reuses from) this
     /// one cache.
     layout_cache: Arc<Mutex<LayoutCache>>,
+    /// Shared cross-request prefix KV store (`crate::kvstore`), sized by
+    /// `kvstore.token_budget`. The continuous host serve loop consults it
+    /// at every lane prefill and publishes fresh prefixes back; `None`
+    /// when `kvstore.enabled` is off.
+    kv_store: Option<Arc<KvStore>>,
+    /// Parked multi-turn sessions keyed by client-chosen id; admissions
+    /// carrying `session` continue from (and re-park into) it.
+    sessions: Arc<SessionRegistry>,
 }
 
 impl Router {
@@ -51,6 +60,10 @@ impl Router {
     pub fn new(cfg: ServeConfig, seq_len: usize, metrics: Arc<Metrics>) -> Result<Router, Error> {
         cfg.validate()?;
         let layout_cache = Arc::new(Mutex::new(LayoutCache::new(cfg.layout_cache_cap)));
+        let kv_store = cfg
+            .kvstore
+            .enabled
+            .then(|| Arc::new(KvStore::new(cfg.kvstore.token_budget)));
         Ok(Router {
             cfg,
             seq_len,
@@ -59,6 +72,8 @@ impl Router {
             metrics,
             depth: Arc::new(AtomicU64::new(0)),
             layout_cache,
+            kv_store,
+            sessions: Arc::new(SessionRegistry::new()),
         })
     }
 
@@ -82,6 +97,16 @@ impl Router {
         self.layout_cache.clone()
     }
 
+    /// Handle to the shared prefix KV store (`None` when disabled).
+    pub fn kv_store(&self) -> Option<Arc<KvStore>> {
+        self.kv_store.clone()
+    }
+
+    /// Handle to the session registry.
+    pub fn sessions(&self) -> Arc<SessionRegistry> {
+        self.sessions.clone()
+    }
+
     /// Admission with the config's decode defaults (`max_new` from
     /// `decode.default_max_new`, plan from `decode.plan`). Returns
     /// `Err(Response)` with a rejection when load must be shed (queue
@@ -93,7 +118,7 @@ impl Router {
         domain: &str,
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
-        self.admit_decode(prompt, rho, domain, 0, None, None, reply)
+        self.admit_decode(prompt, rho, domain, 0, None, None, None, reply)
     }
 
     /// Admission decision + request construction with explicit decode
@@ -105,7 +130,11 @@ impl Router {
     /// generated token (dropped here when `decode.stream` is off, so a
     /// disabled knob is enforced at the front door); the returned
     /// request's `cancel` token is the client's mid-flight cancellation
-    /// handle — clone it before submitting.
+    /// handle — clone it before submitting. `session` asks for cross-turn
+    /// KV continuation under a client-chosen id (`crate::kvstore`) —
+    /// validated here, and shed with a named reason when the serving mode
+    /// cannot honour it (store disabled, drain path, KV decode off)
+    /// rather than silently decoding without continuity.
     #[allow(clippy::too_many_arguments)] // the request's full client surface
     pub fn admit_decode(
         &self,
@@ -114,6 +143,7 @@ impl Router {
         domain: &str,
         max_new: usize,
         plan: Option<crate::pruning::MaskPlan>,
+        session: Option<String>,
         stream: Option<Sender<StepEvent>>,
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
@@ -122,6 +152,25 @@ impl Router {
         if prompt.is_empty() {
             self.metrics.record_reject();
             return Err(Box::new(Response::rejected(id, "empty prompt")));
+        }
+        if let Some(s) = &session {
+            if !valid_session_id(s) {
+                self.metrics.record_reject();
+                return Err(Box::new(Response::rejected(
+                    id,
+                    "invalid session id (1..=64 chars of [A-Za-z0-9._-])",
+                )));
+            }
+            if self.kv_store.is_none()
+                || !self.cfg.decode.continuous
+                || !self.cfg.decode.kv_cache
+            {
+                self.metrics.record_reject();
+                return Err(Box::new(Response::rejected(
+                    id,
+                    "sessions need kvstore.enabled, decode.continuous and decode.kv_cache",
+                )));
+            }
         }
         let max_new = if max_new == 0 {
             self.cfg.decode.default_max_new
@@ -164,7 +213,8 @@ impl Router {
         self.metrics.record_accept();
         self.depth.fetch_add(1, Ordering::Release);
         let mut req = Request::new(id, tokens, valid_len, snapped, domain, reply)
-            .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan));
+            .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan))
+            .with_session(session);
         if self.cfg.decode.stream {
             if let Some(stream) = stream {
                 req = req.with_stream(stream);
@@ -270,12 +320,23 @@ mod tests {
         cfg.decode.max_new_cap = 8;
         let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
         let req = r
-            .admit_decode("hi", 0.5, "d", 4, Some(crate::pruning::MaskPlan::Refresh(2)), None, None)
+            .admit_decode(
+                "hi",
+                0.5,
+                "d",
+                4,
+                Some(crate::pruning::MaskPlan::Refresh(2)),
+                None,
+                None,
+                None,
+            )
             .unwrap();
         assert_eq!(req.max_new, 4);
         assert_eq!(req.plan, crate::pruning::MaskPlan::Refresh(2));
         // above the cap: shed with a named reason
-        let rej = r.admit_decode("hi", 0.5, "d", 9, None, None, None).unwrap_err();
+        let rej = r
+            .admit_decode("hi", 0.5, "d", 9, None, None, None, None)
+            .unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("exceeds cap"));
         assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
     }
@@ -286,7 +347,7 @@ mod tests {
         let r = router(10);
         let (tx, _rx) = std::sync::mpsc::channel();
         let req = r
-            .admit_decode("hi", 0.5, "d", 1, None, Some(tx), None)
+            .admit_decode("hi", 0.5, "d", 1, None, None, Some(tx), None)
             .unwrap();
         assert!(req.stream.is_some());
         assert!(!req.cancel.is_cancelled(), "fresh token");
@@ -301,7 +362,7 @@ mod tests {
         let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
         let (tx, _rx) = std::sync::mpsc::channel();
         let req = r
-            .admit_decode("hi", 0.5, "d", 1, None, Some(tx), None)
+            .admit_decode("hi", 0.5, "d", 1, None, None, Some(tx), None)
             .unwrap();
         assert!(req.stream.is_none(), "disabled knob must drop the sender");
     }
@@ -316,9 +377,51 @@ mod tests {
         };
         let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
         // max_new = 1 is always fine
-        assert!(r.admit_decode("hi", 0.4, "d", 1, None, None, None).is_ok());
-        let rej = r.admit_decode("hi", 0.4, "d", 2, None, None, None).unwrap_err();
+        assert!(r
+            .admit_decode("hi", 0.4, "d", 1, None, None, None, None)
+            .is_ok());
+        let rej = r
+            .admit_decode("hi", 0.4, "d", 2, None, None, None, None)
+            .unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("single-token"));
+    }
+
+    #[test]
+    fn session_admission_validates_id_and_serving_mode() {
+        let r = router(10);
+        // well-formed id on the default (continuous + kv + store) config
+        let req = r
+            .admit_decode("hi", 0.5, "d", 1, None, Some("chat-1".into()), None, None)
+            .unwrap();
+        assert_eq!(req.session.as_deref(), Some("chat-1"));
+        assert!(r.kv_store().is_some(), "enabled by default");
+        assert_eq!(r.sessions().len(), 0, "admission does not create slots");
+        // malformed ids are shed with a named reason
+        for bad in ["", "has space", "x".repeat(65).as_str()] {
+            let rej = r
+                .admit_decode("hi", 0.5, "d", 1, None, Some(bad.into()), None, None)
+                .unwrap_err();
+            assert!(
+                rej.rejected.as_deref().unwrap().contains("session id"),
+                "{bad:?} must be rejected by name"
+            );
+        }
+        // a serving mode that cannot honour continuity rejects instead of
+        // silently decoding without it
+        let mut cfg = ServeConfig {
+            queue_cap: 10,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            ..Default::default()
+        };
+        cfg.kvstore.enabled = false;
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        assert!(r.kv_store().is_none());
+        let rej = r
+            .admit_decode("hi", 0.5, "d", 1, None, Some("chat-1".into()), None, None)
+            .unwrap_err();
+        assert!(rej.rejected.as_deref().unwrap().contains("kvstore.enabled"));
+        // sessionless requests still admit fine with the store off
+        assert!(r.admit("hi", 0.5, "d", None).is_ok());
     }
 
     #[test]

@@ -32,7 +32,8 @@ use super::metrics::Metrics;
 use super::request::{CancelToken, Request, RequestId, Response, StepEvent};
 use super::router::Router;
 use crate::config::{EngineKind, ServeConfig};
-use crate::decode::{DecodeOutput, LaneEvent, LanePool};
+use crate::decode::{DecodeOutput, LaneEvent, LanePool, LaneSeed, SessionResume};
+use crate::kvstore::{KvStore, SessionRegistry, SessionState};
 use crate::nn::Model;
 use crate::tensor::LayoutCache;
 use crate::util::error::Error;
@@ -130,6 +131,7 @@ impl Server {
         F: FnOnce(
                 ServeConfig,
                 Arc<Mutex<LayoutCache>>,
+                SharedKv,
                 Receiver<Request>,
                 Sender<Result<usize, Error>>,
                 Arc<AtomicU64>,
@@ -143,6 +145,10 @@ impl Server {
         let depth = router.depth_handle();
         let metrics = router.metrics().clone();
         let cache = router.layout_cache();
+        let kv = SharedKv {
+            store: router.kv_store(),
+            sessions: router.sessions(),
+        };
 
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<usize, Error>>();
@@ -152,7 +158,7 @@ impl Server {
 
         let join = std::thread::Builder::new()
             .name("mumoe-serve".into())
-            .spawn(move || thread(cfg, cache, rx, ready_tx, depth, metrics2, stop2))
+            .spawn(move || thread(cfg, cache, kv, rx, ready_tx, depth, metrics2, stop2))
             .expect("spawn serve thread");
 
         match ready_rx.recv() {
@@ -174,9 +180,39 @@ impl Server {
     }
 }
 
+/// The router's cross-request KV state, bundled for the serve threads.
+/// The drain-to-completion thread only snapshots its occupancy gauges:
+/// its engines rebuild every prefill, and `Router::admit_decode` already
+/// rejects `session` requests when the serving mode cannot honour
+/// continuity.
+struct SharedKv {
+    store: Option<Arc<KvStore>>,
+    sessions: Arc<SessionRegistry>,
+}
+
+/// Snapshot the layout-cache / KV-store / session occupancy gauges after
+/// a scheduling unit (a handful of atomic stores; the cache lock is held
+/// only to read two counters).
+fn snapshot_occupancy(
+    metrics: &Metrics,
+    cache: &Mutex<LayoutCache>,
+    store: &Option<Arc<KvStore>>,
+    sessions: &SessionRegistry,
+) {
+    {
+        let cache = cache.lock().expect("layout cache poisoned");
+        metrics.set_layout_cache_gauges(cache.len(), cache.evictions());
+    }
+    let (entries, tokens, evictions) = store
+        .as_ref()
+        .map_or((0, 0, 0), |s| (s.len(), s.resident_tokens(), s.evictions()));
+    metrics.set_kvstore_gauges(entries, tokens, evictions, sessions.len());
+}
+
 fn serve_thread<E: Engine>(
     cfg: ServeConfig,
     cache: Arc<Mutex<LayoutCache>>,
+    kv: SharedKv,
     rx: Receiver<Request>,
     ready_tx: Sender<Result<usize, Error>>,
     depth: Arc<AtomicU64>,
@@ -184,6 +220,7 @@ fn serve_thread<E: Engine>(
     stop: Arc<AtomicBool>,
 ) -> Result<(), Error> {
     // --- startup: all backend state lives and dies on this thread ------
+    let cache_gauges = cache.clone();
     let prepared: Prepared<E> = match E::prepare(&cfg, cache, Some(metrics.clone())) {
         Ok(p) => {
             let _ = ready_tx.send(Ok(p.seq_len));
@@ -199,6 +236,7 @@ fn serve_thread<E: Engine>(
 
     pump_batches(&cfg, batch_capacity, &rx, &stop, |_batcher, batch| {
         run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
+        snapshot_occupancy(&metrics, &cache_gauges, &kv.store, &kv.sessions);
     });
     Ok(())
 }
@@ -326,7 +364,11 @@ fn run_batch<E: Engine>(
             // step = reused incremental steps)
             let prefill_us: u64 = responses.iter().map(|r| r.prefill_us).sum();
             let step_us: u64 = responses.iter().map(|r| r.step_us).sum();
-            metrics.record_decode(rho, n, tokens, elapsed_us, prefill_us, step_us);
+            let prefilled: u64 = responses.iter().map(|r| r.prefilled_tokens as u64).sum();
+            let seeded: u64 = responses.iter().map(|r| r.seeded_tokens as u64).sum();
+            metrics.record_decode(
+                rho, n, tokens, elapsed_us, prefill_us, step_us, prefilled, seeded,
+            );
             for (mut resp, (id, enqueued_at, reply, stream)) in responses.into_iter().zip(meta) {
                 debug_assert_eq!(resp.id, id, "engine must keep request order");
                 resp.latency_us = enqueued_at.elapsed().as_micros() as u64;
@@ -373,6 +415,7 @@ fn run_batch<E: Engine>(
 fn serve_thread_continuous(
     cfg: ServeConfig,
     cache: Arc<Mutex<LayoutCache>>,
+    kv: SharedKv,
     rx: Receiver<Request>,
     ready_tx: Sender<Result<usize, Error>>,
     depth: Arc<AtomicU64>,
@@ -395,6 +438,8 @@ fn serve_thread_continuous(
             cfg: &cfg,
             model: &model,
             cache: &cache,
+            store: &kv.store,
+            sessions: &kv.sessions,
             batcher,
             rx: &rx,
             depth: &depth,
@@ -411,6 +456,11 @@ struct ContinuousCtx<'a> {
     cfg: &'a ServeConfig,
     model: &'a Model,
     cache: &'a Mutex<LayoutCache>,
+    /// Cross-request prefix KV store; `None` when `kvstore.enabled` is
+    /// off (every admission is then a cold `LaneSeed`).
+    store: &'a Option<Arc<KvStore>>,
+    /// Session registry for multi-turn continuation.
+    sessions: &'a Arc<SessionRegistry>,
     batcher: &'a mut DynamicBatcher,
     rx: &'a Receiver<Request>,
     depth: &'a AtomicU64,
@@ -425,6 +475,10 @@ struct LiveLane {
     reply: Option<Sender<Response>>,
     stream: Option<Sender<StepEvent>>,
     cancel: CancelToken,
+    /// Session id + the registry generation observed at admission; the
+    /// lane parks its final state only if the generation still matches
+    /// (so a `DELETE /session/:id` mid-flight wins — satellite ABA guard).
+    session: Option<(String, u64)>,
 }
 
 /// Drive one lane pool at one snapped ρ until it drains. Per sweep:
@@ -467,7 +521,14 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
                     partial.prefill_us + partial.step_us,
                     partial.prefill_us,
                     partial.step_us,
+                    partial.prefilled_tokens as u64,
+                    partial.seeded_tokens as u64,
                 );
+                // a cancelled session lane still parks its partial state:
+                // the client can continue the same session id from
+                // whatever was decoded before the cancel (the regression
+                // case behind the registry's generation guard)
+                park_session(ctx, &lane, &partial, rho);
                 let mut resp = Response::cancelled(lane.id, rho, &partial);
                 resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
                 resp.batch_size = capacity;
@@ -531,6 +592,7 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
             }
         }
     }
+    snapshot_occupancy(ctx.metrics, ctx.cache, ctx.store, ctx.sessions);
 }
 
 /// Admit one popped request into a free lane (or shed it terminally if it
@@ -554,12 +616,37 @@ fn admit_lane(
         }
         return;
     }
-    let slot = pool.admit(
+    // session continuation: the lane decodes `parked window ++ new turn`,
+    // pinned to the parked layouts and seeded with the parked rows (full
+    // prefill of only the new turn). A fresh/unknown session id just
+    // registers the slot; the lane parks into it on finish.
+    let mut prompt = std::borrow::Cow::Borrowed(&req.tokens[..req.valid_len]);
+    let mut resume = None;
+    let session = req.session.take().map(|id| {
+        let (parked, generation) = ctx.sessions.begin(&id);
+        if let Some(state) = parked {
+            let mut joined = state.tokens.clone();
+            joined.extend_from_slice(&prompt);
+            prompt = std::borrow::Cow::Owned(joined);
+            resume = Some(SessionResume {
+                layouts: state.layouts.clone(),
+                entry: state.entry.clone(),
+            });
+        }
+        (id, generation)
+    });
+    let seed = LaneSeed {
+        store: ctx.store.clone(),
+        resume,
+        park: session.is_some(),
+    };
+    let slot = pool.admit_with(
         ctx.model,
-        &req.tokens[..req.valid_len],
+        &prompt,
         req.max_new,
         req.plan,
         ctx.cfg.decode.kv_cache,
+        seed,
     );
     if into_running {
         ctx.metrics.record_admitted_running(rho);
@@ -570,7 +657,32 @@ fn admit_lane(
         reply: req.reply.take(),
         stream: req.stream.take(),
         cancel: req.cancel.clone(),
+        session,
     });
+}
+
+/// Re-park a session lane's final state under its id, if the slot still
+/// exists with the admission-time generation (a mid-flight `DELETE` or
+/// delete+recreate makes the park a no-op — state from before the delete
+/// must never resurrect). Also sweeps idle sessions past their TTL.
+fn park_session(ctx: &ContinuousCtx<'_>, lane: &LiveLane, output: &DecodeOutput, rho: f64) {
+    let Some((id, generation)) = &lane.session else {
+        return;
+    };
+    if let Some(parked) = &output.parked {
+        let state = Arc::new(SessionState {
+            tokens: parked.tokens.clone(),
+            rho,
+            layouts: parked.layouts.clone(),
+            entry: Arc::new(parked.entry.clone()),
+        });
+        let _ = ctx.sessions.park(id, *generation, state);
+    }
+    // opportunistic TTL sweep: finishing lanes are the registry's only
+    // steady write traffic, so expiry piggybacks here instead of needing
+    // a timer thread
+    ctx.sessions
+        .expire(Duration::from_secs(ctx.cfg.kvstore.session_ttl_secs));
 }
 
 /// Deliver one finished lane: latency + per-level decode metrics + reply.
@@ -590,7 +702,10 @@ fn finish_lane(
         exec_us,
         output.prefill_us,
         output.step_us,
+        output.prefilled_tokens as u64,
+        output.seeded_tokens as u64,
     );
+    park_session(ctx, &lane, output, rho);
     let mut resp = Response::from_decode(lane.id, rho, output, None);
     resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
     // occupancy telemetry: the lane-pool size this request rode in

@@ -81,6 +81,7 @@
 //! by `proptest.rs::continuous_props`.
 
 use crate::coordinator::request::argmax;
+use crate::kvstore::{self, KvEntry, KvStore};
 use crate::moe::{self, layouts_for};
 use crate::nn::{FixedLayouts, KvCache, Model, StepBatchScratch, StepScratch};
 use crate::pruning::MaskPlan;
@@ -149,12 +150,78 @@ pub struct DecodeOutput {
     /// cache was supplied).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Window tokens this decode actually ran prefill-class forwards over
+    /// (full-window prefills/rebuilds plus seeded suffix steps). The
+    /// prefill/seed split is surfaced per ρ level by
+    /// `coordinator::metrics`.
+    pub prefilled_tokens: usize,
+    /// Window tokens *seeded* — copied from the cross-request KV store or
+    /// a parked session ([`crate::kvstore`]) instead of being computed. A
+    /// warm same-prefix admission shows `seeded_tokens = T − 1`,
+    /// `prefilled_tokens = 1`.
+    pub seeded_tokens: usize,
+    /// Continuable state for session parking: present iff the admission
+    /// asked for it ([`LaneSeed::park`]) and the lane held cached rows.
+    pub parked: Option<Box<ParkedLaneState>>,
 }
 
 impl DecodeOutput {
     /// The generated suffix (without the prompt).
     pub fn new_tokens(&self) -> &[i32] {
         &self.tokens[self.prompt_len..]
+    }
+}
+
+/// A finished (or cancelled mid-flight) lane's continuable state, exported
+/// into [`DecodeOutput::parked`] when the admission asked for parking: the
+/// final decode window, the layouts in force at the last step, and the
+/// cached K/V rows covering the window's prefix — everything
+/// `coordinator::server` needs to park a session for multi-turn
+/// continuation.
+#[derive(Clone, Debug)]
+pub struct ParkedLaneState {
+    /// The full final window (post-slide): prompt + generated suffix,
+    /// truncated to the model's window if the generation slid it.
+    pub tokens: Vec<i32>,
+    /// Per-linear layouts in force when the lane stopped — a continuation
+    /// pins these ([`SessionResume`]).
+    pub layouts: FixedLayouts,
+    /// Cached rows covering `tokens[..entry.len()]` (the final generated
+    /// token is part of `tokens` but was never consumed by a forward, so
+    /// `entry.len()` is typically `tokens.len() - 1`).
+    pub entry: KvEntry,
+}
+
+/// The resume half of a session continuation, built by the coordinator
+/// from a parked [`crate::kvstore::SessionState`]: the lane decodes the
+/// concatenated window (parked tokens + new turn) under exactly these
+/// pinned `layouts` — every plan refresh is skipped — and seeds its cache
+/// from `entry` instead of prefilling the parked prefix.
+pub struct SessionResume {
+    pub layouts: FixedLayouts,
+    pub entry: Arc<KvEntry>,
+}
+
+/// Cross-request KV state for one admission ([`LanePool::admit_with`]).
+/// [`LanePool::admit`] uses the cold default: no store, no session, no
+/// parking — byte-for-byte the pre-kvstore behavior.
+#[derive(Default)]
+pub struct LaneSeed {
+    /// Shared prefix store to consult at position-0 prefills (seed the
+    /// longest matching prefix, step only the suffix) and to publish
+    /// freshly prefilled prefixes back to.
+    pub store: Option<Arc<KvStore>>,
+    /// Parked session to continue (pins its layouts).
+    pub resume: Option<SessionResume>,
+    /// Export the lane's final window + rows into
+    /// [`DecodeOutput::parked`] for session parking.
+    pub park: bool,
+}
+
+impl LaneSeed {
+    /// No cross-request state: a plain admission.
+    pub fn cold() -> LaneSeed {
+        LaneSeed::default()
     }
 }
 
@@ -182,6 +249,19 @@ struct Lane {
     step_us: u64,
     cache_hits: u64,
     cache_misses: u64,
+    /// Shared cross-request prefix store ([`crate::kvstore`]) consulted
+    /// (and published to) at prefills of windows starting at absolute
+    /// position 0 — slid windows rebuild as before.
+    store: Option<Arc<KvStore>>,
+    /// Session continuation: the lane's layouts were pinned at admission,
+    /// so every plan refresh is skipped and no selection ever runs.
+    pinned: bool,
+    /// One-shot session seed, consumed by the first prefill.
+    pending_seed: Option<Arc<KvEntry>>,
+    /// Export the final window + rows into [`DecodeOutput::parked`].
+    park: bool,
+    prefilled_tokens: usize,
+    seeded_tokens: usize,
 }
 
 impl Lane {
@@ -201,6 +281,12 @@ impl Lane {
             step_us: 0,
             cache_hits: 0,
             cache_misses: 0,
+            store: None,
+            pinned: false,
+            pending_seed: None,
+            park: false,
+            prefilled_tokens: 0,
+            seeded_tokens: 0,
         }
     }
 
@@ -221,7 +307,9 @@ impl Lane {
         let start = self.tokens.len().saturating_sub(seq);
         let window = &self.tokens[start..];
         let valid = window.len();
-        let refreshed = plan.refreshes_at(step);
+        // pinned lanes (session continuations) decode entirely under the
+        // layouts they were admitted with: no refresh ever runs
+        let refreshed = !self.pinned && plan.refreshes_at(step);
         let t0 = Instant::now();
         if refreshed {
             let (h0, m0) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
@@ -239,7 +327,78 @@ impl Lane {
                 // the last step appended, and it did not slide
                 let stale = refreshed || start != self.prev_start || kv.len() + 1 != valid;
                 if stale {
-                    let logits = model.forward_prefill_last(window, valid, &self.layouts, kv);
+                    // Cross-request reuse applies only to windows starting
+                    // at absolute position 0 (absolute pos-emb: a slid
+                    // window's rows exist nowhere else). The layout chain
+                    // binds any reuse to the exact layouts this prefill
+                    // would execute, which is what keeps seeding bit-exact.
+                    let store = self.store.as_ref().filter(|_| start == 0);
+                    let chain = store.and_then(|_| {
+                        kvstore::layout_chain(&model.cfg.linear_names(), &self.layouts)
+                    });
+                    // clamped so at least one suffix token remains to step
+                    // (a seeded prefill still has to produce logits)
+                    let seed_cap = valid - 1;
+                    let mut seeded = 0usize;
+                    if start == 0 {
+                        if let Some(entry) = self.pending_seed.take() {
+                            // session continuation: the server built this
+                            // window from the parked tokens, so the entry
+                            // covers its prefix; verify defensively and
+                            // fall back to a full prefill on any mismatch
+                            // (e.g. the concatenated window slid)
+                            let n = entry.len().min(seed_cap);
+                            if n >= 1 && entry.tokens[..n] == window[..n] {
+                                kv.seed_from(&entry, n);
+                                seeded = n;
+                            }
+                        }
+                    }
+                    if seeded == 0 {
+                        if let (Some(store), Some(chain)) = (store, chain) {
+                            if let Some((entry, n)) =
+                                store.lookup(model.weights_id(), chain, window)
+                            {
+                                let n = n.min(seed_cap);
+                                if n >= 1 {
+                                    kv.seed_from(&entry, n);
+                                    seeded = n;
+                                }
+                            }
+                        }
+                    }
+                    let logits = if seeded > 0 {
+                        self.seeded_tokens += seeded;
+                        self.prefilled_tokens += valid - seeded;
+                        let scratch = self.scratch.as_mut().expect("kv lanes carry scratch");
+                        model.forward_prefill_suffix_last(
+                            window,
+                            valid,
+                            seeded,
+                            &self.layouts,
+                            kv,
+                            scratch,
+                        )
+                    } else {
+                        self.prefilled_tokens += valid;
+                        model.forward_prefill_last(window, valid, &self.layouts, kv)
+                    };
+                    // publish the now fully-cached prefix so later
+                    // same-prefix admissions can skip it (republishing an
+                    // existing key only refreshes its recency)
+                    if let (Some(store), Some(chain)) = (self.store.as_ref(), chain) {
+                        let (k, v) = kv.export_prefix(valid);
+                        store.publish(
+                            model.weights_id(),
+                            chain,
+                            KvEntry {
+                                tokens: window.to_vec(),
+                                k,
+                                v,
+                                d_model: kv.d_model(),
+                            },
+                        );
+                    }
                     (logits, true)
                 } else {
                     let newest = *window.last().expect("non-empty window");
@@ -279,7 +438,8 @@ impl Lane {
     /// `stale` predicate below, negated. Refresh steps (selection +
     /// prefill) and slide rebuilds stay on the per-lane path.
     fn fusible(&self, seq: usize, step: usize, plan: MaskPlan) -> bool {
-        if plan.refreshes_at(step) {
+        // pinned lanes never refresh, mirroring [`Lane::step`]
+        if !self.pinned && plan.refreshes_at(step) {
             return false;
         }
         let Some(kv) = self.kv.as_ref() else {
@@ -289,7 +449,34 @@ impl Lane {
         start == self.prev_start && kv.len() + 1 == self.tokens.len() - start
     }
 
+    /// Clone the lane's continuable state for session parking: the
+    /// current window plus the cached rows covering its prefix. `None`
+    /// when there is nothing to continue from (no cache, or the lane
+    /// never ran a step).
+    fn export_parked(&self) -> Option<Box<ParkedLaneState>> {
+        let kv = self.kv.as_ref()?;
+        if kv.is_empty() || self.prev_start == usize::MAX || self.layouts.is_empty() {
+            return None;
+        }
+        let window = &self.tokens[self.prev_start..];
+        // rows 0..n cover window[..n]; the final generated token (if any)
+        // was appended after the last forward and has no row yet
+        let n = kv.len().min(window.len());
+        let (k, v) = kv.export_prefix(n);
+        Some(Box::new(ParkedLaneState {
+            tokens: window.to_vec(),
+            layouts: self.layouts.clone(),
+            entry: KvEntry {
+                tokens: window[..n].to_vec(),
+                k,
+                v,
+                d_model: kv.d_model(),
+            },
+        }))
+    }
+
     fn into_output(self) -> DecodeOutput {
+        let parked = if self.park { self.export_parked() } else { None };
         DecodeOutput {
             tokens: self.tokens,
             prompt_len: self.prompt_len,
@@ -299,6 +486,9 @@ impl Lane {
             step_us: self.step_us,
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
+            prefilled_tokens: self.prefilled_tokens,
+            seeded_tokens: self.seeded_tokens,
+            parked,
         }
     }
 }
@@ -522,9 +712,50 @@ impl LanePool {
         plan: MaskPlan,
         use_kv: bool,
     ) -> usize {
+        self.admit_with(model, prompt, max_new, plan, use_kv, LaneSeed::cold())
+    }
+
+    /// [`LanePool::admit`] with cross-request KV state ([`LaneSeed`]):
+    /// consult/publish a shared [`KvStore`] at the lane's prefill,
+    /// continue a parked session (pinning its layouts, seeding its rows,
+    /// skipping every refresh), and/or export the lane's final state into
+    /// [`DecodeOutput::parked`]. A cold seed is byte-for-byte [`admit`]:
+    /// `proptest.rs::kvstore_props` proves the store itself is
+    /// *transparent* — seeded and cold decodes are bit-identical.
+    ///
+    /// [`admit`]: LanePool::admit
+    pub fn admit_with(
+        &mut self,
+        model: &Model,
+        prompt: &[i32],
+        max_new: usize,
+        plan: MaskPlan,
+        use_kv: bool,
+        seed: LaneSeed,
+    ) -> usize {
         let slot = self.free_slots.pop().expect("admit into a full lane pool").0;
+        // a continuation reads cached rows no matter what the plan says
+        // (its refreshes are skipped), so it keeps the cache whenever kv
+        // is on; plain lanes keep the can-this-cache-ever-be-read gate
+        let wants_kv = if seed.resume.is_some() {
+            use_kv
+        } else {
+            lane_wants_kv(use_kv, max_new, plan)
+        };
+        let mut lane = Lane::new(model, prompt, wants_kv);
+        lane.park = seed.park;
+        if wants_kv {
+            lane.store = seed.store;
+        }
+        if let Some(resume) = seed.resume {
+            lane.pinned = true;
+            lane.layouts = resume.layouts;
+            if wants_kv {
+                lane.pending_seed = Some(resume.entry);
+            }
+        }
         self.slots[slot] = Some(PoolLane {
-            lane: Lane::new(model, prompt, lane_wants_kv(use_kv, max_new, plan)),
+            lane,
             plan,
             max_new,
             step: 0,
@@ -1394,5 +1625,129 @@ mod tests {
         for (i, (a, b)) in outs.iter().zip(&plain).enumerate() {
             assert_outputs_identical(&format!("observed lane {i}"), a, b);
         }
+    }
+
+    // ---- cross-request kv reuse --------------------------------------------
+
+    /// Drain one lane admitted with `seed` through a single-lane pool.
+    fn drain_seeded(
+        m: &Model,
+        prompt: &[i32],
+        max_new: usize,
+        plan: MaskPlan,
+        cache: &mut LayoutCache,
+        seed: LaneSeed,
+    ) -> DecodeOutput {
+        let mut pool = LanePool::new(1);
+        pool.admit_with(m, prompt, max_new, plan, true, seed);
+        let mut copt = Some(&mut *cache);
+        let mut out = None;
+        while !pool.is_idle() {
+            for ev in pool.sweep(m, 0.5, false, &mut copt) {
+                if let LaneEvent::Done { output, .. } = ev {
+                    out = Some(output);
+                }
+            }
+        }
+        out.expect("drained")
+    }
+
+    #[test]
+    fn warm_same_prefix_admission_is_suffix_only() {
+        // acceptance, unit form: re-admitting an identical prompt through
+        // a shared store must do zero full-prefix prefill work — seed the
+        // T−1 cached rows, prefill exactly the one remaining suffix token
+        // — and still decode bit-identically to the cold lane
+        let m = tiny_model();
+        let prompt: &[i32] = &[5, 11, 23, 47];
+        let store = Arc::new(KvStore::new(4096));
+        let mut cache = LayoutCache::new(64);
+        let seed = || LaneSeed {
+            store: Some(store.clone()),
+            resume: None,
+            park: false,
+        };
+        let cold = drain_seeded(&m, prompt, 4, MaskPlan::PruneOnce, &mut cache, seed());
+        assert_eq!((cold.seeded_tokens, cold.prefilled_tokens), (0, 4));
+        assert_eq!((store.hits(), store.misses()), (0, 1), "cold lookup misses");
+        let warm = drain_seeded(&m, prompt, 4, MaskPlan::PruneOnce, &mut cache, seed());
+        assert_eq!((warm.seeded_tokens, warm.prefilled_tokens), (3, 1));
+        assert_eq!((store.hits(), store.misses()), (1, 1), "warm lookup hits");
+        assert_outputs_identical("warm vs cold", &warm, &cold);
+        assert_outputs_identical("warm vs greedy", &warm, &greedy_ref(&m, prompt, 4));
+    }
+
+    #[test]
+    fn parked_session_continuation_pins_layouts_and_skips_prefix() {
+        // turn 1 parks its window + cache rows; turn 2 resumes from them:
+        // prefix rows seeded (no store needed), only the new turn's
+        // suffix prefills, zero refreshes — and the whole decode equals a
+        // hand-rolled fixed-layout decode of the concatenated window
+        // under the parked selection (the documented exactness contract)
+        let m = tiny_model();
+        let prompt: &[i32] = &[9, 1, 7, 4];
+        let mut cache = LayoutCache::new(64);
+        let first = drain_seeded(
+            &m,
+            prompt,
+            3,
+            MaskPlan::PruneOnce,
+            &mut cache,
+            LaneSeed {
+                store: None,
+                resume: None,
+                park: true,
+            },
+        );
+        let parked = *first.parked.clone().expect("finished lane parks");
+        assert_eq!(parked.tokens, first.tokens, "park captures the full window");
+        // the last generated token was never stepped, so it has no row
+        assert_eq!(parked.entry.len(), first.tokens.len() - 1);
+
+        let mut full = parked.tokens.clone();
+        full.extend_from_slice(&[7, 9]);
+        let cont = drain_seeded(
+            &m,
+            &full,
+            3,
+            MaskPlan::PruneOnce,
+            &mut cache,
+            LaneSeed {
+                store: None,
+                resume: Some(SessionResume {
+                    layouts: parked.layouts.clone(),
+                    entry: Arc::new(parked.entry.clone()),
+                }),
+                park: true,
+            },
+        );
+        assert_eq!(cont.seeded_tokens, parked.entry.len(), "prefix rows seeded");
+        assert_eq!(
+            cont.prefilled_tokens,
+            full.len() - parked.entry.len(),
+            "only the new turn's suffix prefills"
+        );
+        assert_eq!(cont.refresh_count, 0, "pinned lanes skip every refresh");
+        assert_eq!((cont.cache_hits, cont.cache_misses), (0, 0));
+
+        // hand-rolled reference under the pinned layouts
+        let mut toks = full.clone();
+        let mut kv = KvCache::new(&m.cfg);
+        let mut s = StepScratch::new(&m.cfg);
+        let mut logits = m.forward_prefill_last(&toks, toks.len(), &parked.layouts, &mut kv);
+        for step in 0..3 {
+            let t = argmax(&logits);
+            assert_eq!(cont.steps[step].token, t, "step {step} token");
+            assert_eq!(cont.steps[step].logits, logits, "step {step} logits");
+            toks.push(t);
+            if step + 1 < 3 {
+                logits = m.forward_step_with(t, &parked.layouts, &mut kv, &mut s);
+            }
+        }
+        assert_eq!(cont.tokens, toks, "continuation tokens");
+        // the continuation re-parks the grown window for turn 3
+        let reparked = cont.parked.expect("continuation re-parks");
+        assert_eq!(reparked.tokens, cont.tokens);
+        assert_eq!(reparked.entry.len(), cont.tokens.len() - 1);
     }
 }

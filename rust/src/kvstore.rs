@@ -1,0 +1,554 @@
+//! Cross-request KV reuse: a prefix-keyed KV store plus a session registry.
+//!
+//! Chat-style traffic resends long shared prefixes (system prompts,
+//! few-shot preambles, conversation history), yet a lane's
+//! [`crate::nn::kv::KvCache`] dies with its request and every admission
+//! pays a full O(T²) prefill. This module is the layer between decode and
+//! the coordinator that keeps prefix K/V alive across requests:
+//!
+//! - [`KvStore`]: a shared, token-budget LRU map from
+//!   `(weights-id, token-prefix FNV hash + length, layout chain)` to cloned
+//!   per-layer K/V rows for absolute positions `0..n`. Admission consults
+//!   it; a hit seeds the lane's cache and only the suffix is prefilled.
+//! - [`SessionRegistry`]: named parking spots so a multi-turn client can
+//!   continue a finished lane's cache (and its pinned layouts) with zero
+//!   prefix prefill, guarded by a generation counter so deleting or
+//!   re-creating a session can never let a stale mid-flight lane resurrect
+//!   freed state.
+//!
+//! ## Keying discipline
+//!
+//! μ-MoE selects micro-experts per prompt, so cached K/V is only reusable
+//! when the *layouts that produced it* match — the same
+//! calibration-dependence insight behind [`crate::tensor::LayoutCache`]
+//! applies to cached activations. A key therefore binds three things:
+//!
+//! 1. `weights`: [`crate::nn::Model::weights_id`] — two same-architecture
+//!    models must never share rows.
+//! 2. the token prefix: FNV-1a hash *and* exact length; the entry also
+//!    stores the tokens themselves so a lookup verifies them and a hash
+//!    collision can never seed a lane with another prompt's cache.
+//! 3. [`layout_chain`]: FNV over each prunable linear's
+//!    [`RowSparse::fingerprint`] content hash in `linear_names()` order —
+//!    content, not `Arc` identity, so independently rebuilt but identical
+//!    layouts still hit.
+//!
+//! ## Exactness
+//!
+//! Under the model's absolute position embeddings, K/V rows for window
+//! positions `0..n` depend only on the tokens at `0..n` and the layouts —
+//! so seeding a fresh cache with a matching prefix and stepping the suffix
+//! is bit-identical to a full prefill (`forward_step` ≡ full-window
+//! forward is proven in `nn`; `proptest.rs::kvstore_props` proves the
+//! composition at the decode level). Seeding only applies to windows that
+//! start at absolute position 0; slid windows rebuild as before.
+
+use crate::nn::FixedLayouts;
+use crate::tensor::fnv1a64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Incremental FNV-1a prefix hashes: `out[n]` is the hash of `tokens[..n]`
+/// under the same byte stream [`fnv1a64`] consumes, i.e.
+/// `out[n] == fnv1a64(tokens[..n].iter().map(|&t| t as u64))`. One O(T)
+/// pass gives a lookup every probe length for free.
+pub fn prefix_hashes(tokens: &[i32]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() + 1);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    out.push(h);
+    for &t in tokens {
+        for b in (t as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// FNV over each linear's [`crate::tensor::RowSparse::fingerprint`] in the
+/// caller-supplied (canonical `linear_names()`) order. Content hashes, not
+/// `Arc` pointers: two lanes that rebuilt byte-identical layouts chain
+/// equal, which is what makes store hits possible across requests. `None`
+/// when a linear is missing from the map (never the case for layouts
+/// produced by `moe::layouts_for`).
+pub fn layout_chain(linear_names: &[String], layouts: &FixedLayouts) -> Option<u64> {
+    let mut fps = Vec::with_capacity(linear_names.len());
+    for name in linear_names {
+        fps.push(layouts.get(name)?.fingerprint());
+    }
+    Some(fnv1a64(fps))
+}
+
+/// Store key: which weights, which exact token prefix (hash + length), and
+/// which per-linear layout chain produced the rows.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PrefixKey {
+    pub weights: u64,
+    pub prefix_hash: u64,
+    pub prefix_len: usize,
+    pub layout_chain: u64,
+}
+
+/// One cached prefix: the exact tokens it covers and cloned per-layer K/V
+/// rows for absolute positions `0..len`. Entries are immutable once
+/// published and shared out as `Arc`, so a hit costs one refcount bump and
+/// the row copy into the lane's private cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvEntry {
+    /// The exact prefix tokens — re-verified on every lookup so an FNV
+    /// collision can never seed a lane with another prompt's rows.
+    pub tokens: Vec<i32>,
+    /// Per-layer K rows, each `len * d_model` long (row `t` at
+    /// `t * d_model ..`).
+    pub k: Vec<Vec<f32>>,
+    /// Per-layer V rows, parallel to `k`.
+    pub v: Vec<Vec<f32>>,
+    pub d_model: usize,
+}
+
+impl KvEntry {
+    /// Number of cached positions (tokens).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+}
+
+struct StoreInner {
+    entries: HashMap<PrefixKey, (Arc<KvEntry>, u64)>,
+    tick: u64,
+    resident_tokens: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// Shared, capacity-bounded prefix-keyed KV store. The budget is in
+/// *tokens* (summed entry lengths), not entries — one 4k-token system
+/// prompt costs what 64 short prefixes cost. Eviction is
+/// least-recently-used by lookup/publish recency. Internally synchronized;
+/// share as `Arc<KvStore>`.
+pub struct KvStore {
+    token_budget: usize,
+    inner: Mutex<StoreInner>,
+}
+
+impl KvStore {
+    pub fn new(token_budget: usize) -> KvStore {
+        assert!(token_budget > 0, "kv store token budget must be > 0");
+        KvStore {
+            token_budget,
+            inner: Mutex::new(StoreInner {
+                entries: HashMap::new(),
+                tick: 0,
+                resident_tokens: 0,
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn token_budget(&self) -> usize {
+        self.token_budget
+    }
+
+    /// Longest cached prefix of `window` under (`weights`, `chain`).
+    /// Probes every length from `window.len()` down to 1 against the
+    /// one-pass [`prefix_hashes`] and verifies the stored tokens on a hash
+    /// match. Returns the entry and its matched length `n ≤ window.len()`
+    /// — callers seeding a decode cache clamp the seeded rows to
+    /// `window.len() - 1` so at least one token remains to step for
+    /// logits. Counts exactly one hit or one miss per call.
+    pub fn lookup(&self, weights: u64, chain: u64, window: &[i32]) -> Option<(Arc<KvEntry>, usize)> {
+        let hashes = prefix_hashes(window);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        for n in (1..=window.len()).rev() {
+            let key = PrefixKey {
+                weights,
+                prefix_hash: hashes[n],
+                prefix_len: n,
+                layout_chain: chain,
+            };
+            if let Some((arc, t)) = g.entries.get_mut(&key) {
+                if arc.tokens[..] == window[..n] {
+                    *t = tick;
+                    let found = arc.clone();
+                    g.hits += 1;
+                    return Some((found, n));
+                }
+            }
+        }
+        g.misses += 1;
+        None
+    }
+
+    /// Insert a freshly prefilled prefix, evicting least-recently-used
+    /// entries until the resident-token total fits the budget. An entry
+    /// larger than the whole budget is dropped rather than flushing the
+    /// store for a row set nothing else can share space with. Re-publishing
+    /// an existing key only refreshes its recency (the keying discipline
+    /// makes the rows identical).
+    pub fn publish(&self, weights: u64, chain: u64, entry: KvEntry) {
+        if entry.is_empty() || entry.len() > self.token_budget {
+            return;
+        }
+        let key = PrefixKey {
+            weights,
+            prefix_hash: fnv1a64(entry.tokens.iter().map(|&t| t as u64)),
+            prefix_len: entry.len(),
+            layout_chain: chain,
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(slot) = g.entries.get_mut(&key) {
+            slot.1 = tick;
+            return;
+        }
+        g.resident_tokens += entry.len();
+        g.insertions += 1;
+        g.entries.insert(key, (Arc::new(entry), tick));
+        while g.resident_tokens > self.token_budget {
+            let victim = g
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            if let Some((e, _)) = g.entries.remove(&k) {
+                g.resident_tokens -= e.len();
+                g.evictions += 1;
+            }
+        }
+    }
+
+    /// Resident entry count (a `/metrics` gauge).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Summed token length of resident entries (the LRU budget's unit).
+    pub fn resident_tokens(&self) -> usize {
+        self.inner.lock().unwrap().resident_tokens
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.inner.lock().unwrap().insertions
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+}
+
+/// A finished (or cancelled-with-partials) lane's continuable state: the
+/// final decode window, the snapped ρ it ran at, the layouts active when
+/// it parked, and the cached rows. A continuation *pins* `layouts` — it
+/// skips every refresh and decodes the concatenated window under exactly
+/// these layouts, which is what makes continuation bit-exact against a
+/// fixed-layout reference decode (`kvstore_props` seed series 503).
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// The full final window (post-slide) — the continuation's prompt is
+    /// `tokens ++ new_turn`.
+    pub tokens: Vec<i32>,
+    /// Snapped active ratio the session decoded at (introspection only;
+    /// layouts are pinned regardless).
+    pub rho: f64,
+    /// Per-linear layouts in force when the lane parked.
+    pub layouts: FixedLayouts,
+    /// Cached rows covering `tokens[..entry.len()]` (the last generated
+    /// token is part of `tokens` but was never consumed by a forward, so
+    /// `entry.len()` is typically `tokens.len() - 1`).
+    pub entry: Arc<KvEntry>,
+}
+
+struct SessionSlot {
+    state: Option<Arc<SessionState>>,
+    /// Unique id minted at slot creation. Parking requires presenting the
+    /// generation observed at admission, so a lane that outlived a
+    /// `DELETE /session/:id` (or a delete + re-create) can never resurrect
+    /// state into the successor slot — the ABA guard.
+    generation: u64,
+    last_used: Instant,
+}
+
+/// Named parking spots for multi-turn continuation. `begin` at admission
+/// returns the parked state (if any) plus the slot's generation; `park` at
+/// completion succeeds only if the slot still exists *and* the generation
+/// matches. State is handed out as `Arc`, so deletion never frees rows out
+/// from under a mid-flight lane — it only prevents them being re-parked.
+pub struct SessionRegistry {
+    next_gen: AtomicU64,
+    slots: Mutex<HashMap<String, SessionSlot>>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> SessionRegistry {
+        SessionRegistry {
+            next_gen: AtomicU64::new(1),
+            slots: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Open (or create) the session for an admission: returns the parked
+    /// state to continue from (None on a fresh or not-yet-parked session)
+    /// and the generation the eventual `park` must present.
+    pub fn begin(&self, id: &str) -> (Option<Arc<SessionState>>, u64) {
+        let mut g = self.slots.lock().unwrap();
+        let slot = g.entry(id.to_string()).or_insert_with(|| SessionSlot {
+            state: None,
+            generation: self.next_gen.fetch_add(1, Ordering::Relaxed),
+            last_used: Instant::now(),
+        });
+        slot.last_used = Instant::now();
+        (slot.state.clone(), slot.generation)
+    }
+
+    /// Park a lane's final state under `id`. Fails (returning `false` and
+    /// dropping `state`) if the session was deleted or re-created since
+    /// the matching `begin` — the generation guard.
+    pub fn park(&self, id: &str, generation: u64, state: Arc<SessionState>) -> bool {
+        let mut g = self.slots.lock().unwrap();
+        match g.get_mut(id) {
+            Some(slot) if slot.generation == generation => {
+                slot.state = Some(state);
+                slot.last_used = Instant::now();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop a session. Mid-flight lanes keep their `Arc`'d state; they
+    /// just can't park it back (their generation died with the slot).
+    pub fn delete(&self, id: &str) -> bool {
+        self.slots.lock().unwrap().remove(id).is_some()
+    }
+
+    /// Drop sessions idle longer than `ttl`; returns how many were
+    /// removed. Called opportunistically from the serve loop.
+    pub fn expire(&self, ttl: Duration) -> usize {
+        let mut g = self.slots.lock().unwrap();
+        let before = g.len();
+        g.retain(|_, slot| slot.last_used.elapsed() <= ttl);
+        before - g.len()
+    }
+
+    /// Active session count (a `/metrics` gauge).
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for SessionRegistry {
+    fn default() -> SessionRegistry {
+        SessionRegistry::new()
+    }
+}
+
+/// Session ids travel in request JSON and URL paths; constrain them to a
+/// conservative charset so they round-trip both without escaping.
+pub fn valid_session_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tokens: &[i32], d_model: usize, n_layers: usize, fill: f32) -> KvEntry {
+        let rows = vec![fill; tokens.len() * d_model];
+        KvEntry {
+            tokens: tokens.to_vec(),
+            k: vec![rows.clone(); n_layers],
+            v: vec![rows; n_layers],
+            d_model,
+        }
+    }
+
+    fn state(tokens: &[i32]) -> Arc<SessionState> {
+        Arc::new(SessionState {
+            tokens: tokens.to_vec(),
+            rho: 0.5,
+            layouts: FixedLayouts::new(),
+            entry: Arc::new(entry(&tokens[..tokens.len() - 1], 2, 1, 0.0)),
+        })
+    }
+
+    #[test]
+    fn prefix_hashes_match_fnv1a64_at_every_length() {
+        let toks: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, -7];
+        let hashes = prefix_hashes(&toks);
+        assert_eq!(hashes.len(), toks.len() + 1);
+        for n in 0..=toks.len() {
+            assert_eq!(
+                hashes[n],
+                fnv1a64(toks[..n].iter().map(|&t| t as u64)),
+                "prefix length {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_returns_longest_matching_prefix() {
+        let store = KvStore::new(1000);
+        store.publish(1, 7, entry(&[10, 11], 2, 1, 0.1));
+        store.publish(1, 7, entry(&[10, 11, 12, 13], 2, 1, 0.2));
+        let (e, n) = store.lookup(1, 7, &[10, 11, 12, 13, 14, 15]).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(e.tokens, vec![10, 11, 12, 13]);
+        // identical window: the full-length entry matches at n == T
+        let (_, n) = store.lookup(1, 7, &[10, 11, 12, 13]).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!((store.hits(), store.misses()), (2, 0));
+    }
+
+    #[test]
+    fn lookup_misses_on_foreign_weights_chain_or_tokens() {
+        let store = KvStore::new(1000);
+        store.publish(1, 7, entry(&[10, 11, 12], 2, 1, 0.1));
+        assert!(store.lookup(2, 7, &[10, 11, 12]).is_none(), "weights id");
+        assert!(store.lookup(1, 8, &[10, 11, 12]).is_none(), "layout chain");
+        assert!(store.lookup(1, 7, &[20, 21, 22]).is_none(), "tokens");
+        assert_eq!((store.hits(), store.misses()), (0, 3));
+    }
+
+    #[test]
+    fn token_budget_evicts_least_recently_used() {
+        let store = KvStore::new(8);
+        store.publish(1, 0, entry(&[1, 2, 3], 2, 1, 0.1)); // 3 tokens
+        store.publish(1, 0, entry(&[4, 5, 6], 2, 1, 0.2)); // 6 tokens
+        // touch the first so the second becomes LRU
+        assert!(store.lookup(1, 0, &[1, 2, 3]).is_some());
+        store.publish(1, 0, entry(&[7, 8, 9, 10], 2, 1, 0.3)); // would be 10
+        assert!(store.resident_tokens() <= 8);
+        assert!(store.lookup(1, 0, &[1, 2, 3]).is_some(), "MRU survived");
+        assert!(store.lookup(1, 0, &[4, 5, 6]).is_none(), "LRU evicted");
+        assert_eq!(store.evictions(), 1);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.resident_tokens(), 7);
+    }
+
+    #[test]
+    fn oversized_entry_is_rejected_not_flushing_the_store() {
+        let store = KvStore::new(4);
+        store.publish(1, 0, entry(&[1, 2], 2, 1, 0.1));
+        store.publish(1, 0, entry(&[9; 5], 2, 1, 0.2));
+        assert_eq!(store.len(), 1);
+        assert!(store.lookup(1, 0, &[1, 2]).is_some());
+        assert_eq!(store.evictions(), 0);
+    }
+
+    #[test]
+    fn republish_refreshes_recency_without_duplicating() {
+        let store = KvStore::new(6);
+        store.publish(1, 0, entry(&[1, 2], 2, 1, 0.1));
+        store.publish(1, 0, entry(&[3, 4], 2, 1, 0.2));
+        store.publish(1, 0, entry(&[1, 2], 2, 1, 0.1)); // refresh, not insert
+        assert_eq!((store.len(), store.insertions()), (2, 2));
+        store.publish(1, 0, entry(&[5, 6, 7], 2, 1, 0.3)); // evicts [3,4]
+        assert!(store.lookup(1, 0, &[1, 2]).is_some());
+        assert!(store.lookup(1, 0, &[3, 4]).is_none());
+    }
+
+    #[test]
+    fn session_begin_park_continue_roundtrip() {
+        let reg = SessionRegistry::new();
+        let (prior, generation) = reg.begin("chat-1");
+        assert!(prior.is_none());
+        assert!(reg.park("chat-1", generation, state(&[1, 2, 3])));
+        let (parked, gen2) = reg.begin("chat-1");
+        assert_eq!(gen2, generation, "same slot, same generation");
+        assert_eq!(parked.unwrap().tokens, vec![1, 2, 3]);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn deleted_session_rejects_stale_park() {
+        // regression: evicting a session mid-flight must not let the lane
+        // resurrect freed state when it finally completes
+        let reg = SessionRegistry::new();
+        let (_, generation) = reg.begin("s");
+        assert!(reg.delete("s"));
+        assert!(!reg.park("s", generation, state(&[1, 2])), "slot is gone");
+        // delete + re-create: the successor slot has a fresh generation,
+        // so the stale lane still cannot park (the ABA case)
+        let (prior, gen2) = reg.begin("s");
+        assert!(prior.is_none());
+        assert_ne!(gen2, generation);
+        assert!(!reg.park("s", generation, state(&[1, 2])));
+        assert!(reg.begin("s").0.is_none(), "stale state never landed");
+        assert!(reg.park("s", gen2, state(&[4, 5])), "live lane parks fine");
+    }
+
+    #[test]
+    fn cancel_then_continue_shares_one_generation() {
+        // two requests on the same live session id (cancelled first turn,
+        // then a retry) both hold the same generation: whichever finishes
+        // last parks, and neither is rejected
+        let reg = SessionRegistry::new();
+        let (_, g1) = reg.begin("s");
+        let (_, g2) = reg.begin("s");
+        assert_eq!(g1, g2);
+        assert!(reg.park("s", g1, state(&[1, 2])), "cancelled turn parks");
+        assert!(reg.park("s", g2, state(&[1, 2, 3])), "retry overwrites");
+        assert_eq!(reg.begin("s").0.unwrap().tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn expire_drops_idle_sessions() {
+        let reg = SessionRegistry::new();
+        reg.begin("a");
+        reg.begin("b");
+        assert_eq!(reg.expire(Duration::from_secs(3600)), 0);
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(reg.expire(Duration::from_millis(1)), 2);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn session_id_charset() {
+        assert!(valid_session_id("chat-1"));
+        assert!(valid_session_id("User_42.v2"));
+        assert!(!valid_session_id(""));
+        assert!(!valid_session_id("a/b"));
+        assert!(!valid_session_id("spa ce"));
+        assert!(!valid_session_id(&"x".repeat(65)));
+    }
+}

@@ -32,6 +32,7 @@
 //! model, data                                model zoo, tokenizer, corpora
 //! pruning, moe                               pruning engines + μ-MoE lens
 //! decode                                     host decode engine (mask-plan reuse)
+//! kvstore                                    cross-request prefix KV store + sessions
 //! flops, eval                                analytics + evaluators
 //! runtime                                    PJRT artifact execution
 //! coordinator                                router/batcher/scheduler/server
@@ -45,6 +46,7 @@ pub mod data;
 pub mod decode;
 pub mod eval;
 pub mod flops;
+pub mod kvstore;
 pub mod model;
 pub mod moe;
 pub mod nn;

@@ -110,6 +110,10 @@ const SERVE_SPEC: &[OptSpec] = &[
     ),
     flag("stream", "force per-token response streaming on (default)"),
     flag("no-stream", "ignore per-request stream channels"),
+    flag("kvstore", "force the cross-request prefix KV store on (default)"),
+    flag("no-kvstore", "disable prefix reuse and session continuation"),
+    opt("kv-budget", "prefix KV store capacity (cached tokens)", "4096"),
+    opt("session-ttl", "idle session lifetime (seconds)", "600"),
     opt(
         "http",
         "serve HTTP/SSE on this address (e.g. 127.0.0.1:8080) instead of \
@@ -176,6 +180,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     cfg.decode.kv_cache = flag_pair(&a, "kv", "no-kv", cfg.decode.kv_cache)?;
     cfg.decode.continuous = flag_pair(&a, "continuous", "drain", cfg.decode.continuous)?;
     cfg.decode.stream = flag_pair(&a, "stream", "no-stream", cfg.decode.stream)?;
+    cfg.kvstore.enabled = flag_pair(&a, "kvstore", "no-kvstore", cfg.kvstore.enabled)?;
+    if a.given("kv-budget") {
+        cfg.kvstore.token_budget = a.get_usize("kv-budget")?;
+    }
+    if a.given("session-ttl") {
+        cfg.kvstore.session_ttl_secs = a.get_u64("session-ttl")?;
+    }
     if a.given("http") {
         cfg.http_addr = a.req("http")?.to_string();
     }

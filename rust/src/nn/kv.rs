@@ -113,6 +113,42 @@ impl KvCache {
         assert!(len <= self.capacity(), "cache length exceeds capacity");
         self.len = len;
     }
+
+    /// Row width (the model's `d_model`).
+    pub fn d_model(&self) -> usize {
+        self.k.first().map_or(0, |m| m.cols)
+    }
+
+    /// Seed this cache from a stored prefix entry: copy the first `n`
+    /// positions of every layer's rows and mark them valid, replacing any
+    /// prior contents. The rows must have been produced at absolute
+    /// positions `0..n` under the layouts the lane will keep executing —
+    /// the store's keying discipline (`crate::kvstore`) guarantees both,
+    /// which is what makes a seeded suffix prefill bit-identical to a full
+    /// one.
+    pub fn seed_from(&mut self, entry: &crate::kvstore::KvEntry, n: usize) {
+        assert_eq!(entry.n_layers(), self.n_layers(), "seed layer mismatch");
+        assert_eq!(entry.d_model, self.d_model(), "seed width mismatch");
+        assert!(n <= entry.len(), "seed beyond entry length");
+        assert!(n <= self.capacity(), "seed exceeds cache capacity");
+        let d = self.d_model();
+        for layer in 0..self.k.len() {
+            self.k[layer].data[..n * d].copy_from_slice(&entry.k[layer][..n * d]);
+            self.v[layer].data[..n * d].copy_from_slice(&entry.v[layer][..n * d]);
+        }
+        self.len = n;
+    }
+
+    /// Clone the first `n` cached positions of every layer as flat
+    /// per-layer row vectors — the publishing/parking half of
+    /// [`KvCache::seed_from`].
+    pub fn export_prefix(&self, n: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        assert!(n <= self.len, "export beyond valid rows");
+        let d = self.d_model();
+        let k = self.k.iter().map(|m| m.data[..n * d].to_vec()).collect();
+        let v = self.v.iter().map(|m| m.data[..n * d].to_vec()).collect();
+        (k, v)
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +200,54 @@ mod tests {
         assert!(kv.is_empty());
         // buffers survive a clear: the next prefill overwrites in place
         assert_eq!(kv.capacity(), 6);
+    }
+
+    #[test]
+    fn seed_roundtrips_through_export() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let k = Mat::from_fn(c.max_seq_len, c.d_model, |i, j| (i * 10 + j) as f32);
+        let v = Mat::from_fn(c.max_seq_len, c.d_model, |i, j| -((i * 10 + j) as f32));
+        for l in 0..c.n_layers {
+            kv.record_prefill(l, &k, &v, 4);
+        }
+        kv.set_len(4);
+        let (ek, ev) = kv.export_prefix(3);
+        let entry = crate::kvstore::KvEntry {
+            tokens: vec![1, 2, 3],
+            k: ek,
+            v: ev,
+            d_model: c.d_model,
+        };
+
+        let mut seeded = KvCache::new(&c);
+        seeded.seed_from(&entry, 3);
+        assert_eq!(seeded.len(), 3);
+        for l in 0..c.n_layers {
+            for t in 0..3 {
+                assert_eq!(seeded.layer(l).0.row(t), kv.layer(l).0.row(t));
+                assert_eq!(seeded.layer(l).1.row(t), kv.layer(l).1.row(t));
+            }
+        }
+        // partial seeds (shorter than the entry) take a strict prefix
+        let mut short = KvCache::new(&c);
+        short.seed_from(&entry, 2);
+        assert_eq!(short.len(), 2);
+        assert_eq!(short.layer(0).0.row(1), kv.layer(0).0.row(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "seed layer mismatch")]
+    fn seed_rejects_foreign_shape() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let entry = crate::kvstore::KvEntry {
+            tokens: vec![1],
+            k: vec![vec![0.0; c.d_model]],
+            v: vec![vec![0.0; c.d_model]],
+            d_model: c.d_model,
+        };
+        kv.seed_from(&entry, 1); // 1 layer vs the config's 2
     }
 
     #[test]

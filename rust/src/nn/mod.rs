@@ -476,6 +476,43 @@ impl Model {
         .data
     }
 
+    /// [`Model::forward_prefill_last`] for a cache whose first `from`
+    /// positions were already **seeded** from a stored prefix
+    /// (`KvCache::seed_from` / [`crate::kvstore`]): only the suffix
+    /// `from..valid_len` is computed, by stepping each suffix token through
+    /// [`Model::forward_step_with`]. Returns the last token's logits, like
+    /// a full prefill would.
+    ///
+    /// Bit-identical to `forward_prefill_last` over the whole window when
+    /// the seeded rows were produced at absolute positions `0..from` under
+    /// the *same layouts*: each step is bit-identical to the full-window
+    /// forward of its grown prefix (the `forward_step` ≡ full-window
+    /// contract proven below and in `proptest.rs::kv_props`), and K/V rows
+    /// for positions `0..from` depend only on those tokens and layouts.
+    /// Cost: O((T−from)·T) attention instead of O(T²) — the whole point of
+    /// the cross-request KV store.
+    pub fn forward_prefill_suffix_last(
+        &self,
+        tokens: &[i32],
+        valid_len: usize,
+        from: usize,
+        layouts: &FixedLayouts,
+        kv: &mut KvCache,
+        s: &mut StepScratch,
+    ) -> Vec<f32> {
+        assert_eq!(valid_len, tokens.len(), "prefill caches only unpadded windows");
+        assert!(
+            from >= 1 && from < valid_len,
+            "suffix prefill needs 1 <= from < valid_len"
+        );
+        assert_eq!(kv.len(), from, "cache must hold exactly the seeded prefix");
+        let mut logits = Vec::new();
+        for &tok in &tokens[from..valid_len] {
+            logits = self.forward_step_with(tok, layouts, kv, s);
+        }
+        logits
+    }
+
     /// One incremental decode step: run a *single token* through every
     /// block, reading the window prefix's K/V from `kv` (populated by
     /// [`Model::forward_prefill_last`] and prior steps) and appending the
@@ -1303,6 +1340,56 @@ mod tests {
             let full = m.forward_fixed_last(&toks[..n], n, &layouts);
             assert_eq!(stepped, full, "position {n}");
             assert_eq!(kv.len(), n);
+        }
+    }
+
+    #[test]
+    fn seeded_suffix_prefill_bit_identical_to_full_prefill() {
+        // seed a cache from an exported prefix, prefill only the suffix:
+        // logits and every cached row must equal the full prefill — the
+        // exactness contract the cross-request KV store rests on
+        let m = random_model(&tiny(), 19);
+        let toks: Vec<i32> = vec![5, 11, 23, 47, 95, 191];
+        let layouts = fixed_layouts(&m, &toks, 0.6);
+
+        let mut kv_full = KvCache::new(&m.cfg);
+        let full = m.forward_prefill_last(&toks, toks.len(), &layouts, &mut kv_full);
+
+        for n in 1..toks.len() {
+            // export positions 0..n as a store entry would hold them
+            let mut kv_prefix = KvCache::new(&m.cfg);
+            m.forward_prefill_last(&toks[..n], n, &layouts, &mut kv_prefix);
+            let (k, v) = kv_prefix.export_prefix(n);
+            let entry = crate::kvstore::KvEntry {
+                tokens: toks[..n].to_vec(),
+                k,
+                v,
+                d_model: m.cfg.d_model,
+            };
+
+            let mut kv_seeded = KvCache::new(&m.cfg);
+            kv_seeded.seed_from(&entry, n);
+            let mut s = StepScratch::new(&m.cfg);
+            let seeded = m.forward_prefill_suffix_last(
+                &toks,
+                toks.len(),
+                n,
+                &layouts,
+                &mut kv_seeded,
+                &mut s,
+            );
+            assert_eq!(seeded, full, "seed length {n}");
+            assert_eq!(kv_seeded.len(), kv_full.len());
+            for li in 0..m.cfg.n_layers {
+                for t in 0..toks.len() {
+                    assert_eq!(
+                        kv_seeded.layer(li).0.row(t),
+                        kv_full.layer(li).0.row(t),
+                        "k layer {li} pos {t} seed {n}"
+                    );
+                    assert_eq!(kv_seeded.layer(li).1.row(t), kv_full.layer(li).1.row(t));
+                }
+            }
         }
     }
 

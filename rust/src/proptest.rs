@@ -946,6 +946,281 @@ mod continuous_props {
     }
 }
 
+/// Properties of cross-request KV reuse (`crate::kvstore` + the decode
+/// lanes' `LaneSeed` path): the prefix store must be *transparent* —
+/// decoding through it, cold or warm, is bit-identical to a storeless KV
+/// decode, with seeding only re-labelling window work from `prefilled`
+/// to `seeded` — its hit/miss/insertion counters must be exact, and a
+/// session continuation must equal a hand-rolled decode of the
+/// concatenated window under the parked (pinned) layouts. Checked over
+/// random tiny models, prompts and active ratios.
+#[cfg(test)]
+mod kvstore_props {
+    use super::{check, ensure, PropResult};
+    use crate::decode::{
+        decode_greedy, DecodeConfig, DecodeOutput, LaneEvent, LanePool, LaneSeed, SessionResume,
+    };
+    use crate::kvstore::KvStore;
+    use crate::model::ModelConfig;
+    use crate::nn::{random_model, Model};
+    use crate::pruning::MaskPlan;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    /// Random tiny model + prompt + ρ + generation length. Lengths stay
+    /// far below the default window (128), so no case ever slides —
+    /// every prefill starts at absolute position 0, the store's domain.
+    fn case(seed: u64, rho: f64) -> (Model, Vec<i32>, f64, usize) {
+        let mut rng = Pcg32::new(seed, 61);
+        let n_layers = 1 + rng.gen_range_usize(2);
+        let n_heads = 1 + rng.gen_range_usize(2);
+        let head_dim = 4 + 4 * rng.gen_range_usize(2); // 4 or 8
+        let cfg = ModelConfig::new("kvstore-prop-tiny", n_layers, n_heads, n_heads * head_dim);
+        let model = random_model(&cfg, seed ^ 0xD1CE);
+        let plen = 2 + rng.gen_range_usize(6);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+        let rho = 0.05 + 0.9 * rho.clamp(0.0, 1.0);
+        let max_new = 2 + rng.gen_range_usize(4);
+        (model, prompt, rho, max_new)
+    }
+
+    fn dcfg(rho: f64, plan: MaskPlan, max_new: usize) -> DecodeConfig {
+        DecodeConfig {
+            rho,
+            plan,
+            max_new,
+            stop_at_eos: false,
+            kv_cache: true,
+        }
+    }
+
+    fn seed_with(store: &Arc<KvStore>) -> LaneSeed {
+        LaneSeed {
+            store: Some(store.clone()),
+            resume: None,
+            park: false,
+        }
+    }
+
+    /// Drive one request through a fresh single-lane pool (the
+    /// cross-request path only exists on pool admissions).
+    fn run_pool(
+        model: &Model,
+        prompt: &[i32],
+        rho: f64,
+        plan: MaskPlan,
+        max_new: usize,
+        seed: LaneSeed,
+    ) -> DecodeOutput {
+        let mut pool = LanePool::new(1);
+        pool.admit_with(model, prompt, max_new, plan, true, seed);
+        let mut cache = None;
+        let mut sweeps = 0;
+        loop {
+            for ev in pool.sweep(model, rho, false, &mut cache) {
+                if let LaneEvent::Done { output, .. } = ev {
+                    return output;
+                }
+            }
+            sweeps += 1;
+            assert!(sweeps < 200, "lane failed to drain");
+        }
+    }
+
+    fn bit_identical(label: &str, a: &DecodeOutput, b: &DecodeOutput) -> PropResult {
+        ensure(a.tokens == b.tokens, format!("{label}: tokens diverged"))?;
+        ensure(
+            a.steps.len() == b.steps.len(),
+            format!("{label}: step counts diverged"),
+        )?;
+        ensure(
+            a.refresh_count == b.refresh_count,
+            format!("{label}: refresh counts diverged"),
+        )?;
+        for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            ensure(
+                sa.token == sb.token,
+                format!("{label}: step {i} token {} vs {}", sa.token, sb.token),
+            )?;
+            ensure(
+                sa.logits == sb.logits,
+                format!("{label}: step {i} logits not bit-identical"),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Tentpole property (the warm-admission contract): re-admitting an
+    /// identical prompt through a shared store is bit-identical to the
+    /// cold run (itself bit-identical to a storeless decode), the warm
+    /// run seeds all but one window token (`seeded = T − 1`,
+    /// `prefilled = 1`), and the store's counters are exact throughout.
+    fn prop_warm_rerun_bit_identical_counters_exact(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let plan = MaskPlan::PruneOnce;
+        let reference = decode_greedy(&model, &prompt, &dcfg(rho, plan, max_new), None);
+        let store = Arc::new(KvStore::new(4096));
+        let cold = run_pool(&model, &prompt, rho, plan, max_new, seed_with(&store));
+        bit_identical("cold through store vs storeless", &cold, &reference)?;
+        ensure(cold.seeded_tokens == 0, "cold run seeded tokens")?;
+        ensure(
+            cold.prefilled_tokens == prompt.len(),
+            format!("cold prefilled {} != {}", cold.prefilled_tokens, prompt.len()),
+        )?;
+        ensure(
+            (store.hits(), store.misses(), store.insertions()) == (0, 1, 1),
+            format!(
+                "cold counters (h/m/i) = ({}, {}, {})",
+                store.hits(),
+                store.misses(),
+                store.insertions()
+            ),
+        )?;
+        let warm = run_pool(&model, &prompt, rho, plan, max_new, seed_with(&store));
+        bit_identical("warm same-prefix rerun vs storeless", &warm, &reference)?;
+        ensure(
+            warm.seeded_tokens == prompt.len() - 1,
+            format!("warm seeded {} != T-1 = {}", warm.seeded_tokens, prompt.len() - 1),
+        )?;
+        ensure(warm.prefilled_tokens == 1, "warm run must prefill exactly one token")?;
+        ensure(
+            (store.hits(), store.misses(), store.insertions()) == (1, 1, 1),
+            format!(
+                "warm counters (h/m/i) = ({}, {}, {})",
+                store.hits(),
+                store.misses(),
+                store.insertions()
+            ),
+        )
+    }
+
+    /// Transparency over a mixed prompt family — the base prompt, an
+    /// extension sharing its prefix, a mutation, and an exact repeat —
+    /// decoded sequentially through ONE shared store: every output must
+    /// equal its own storeless reference (hits may only relabel work,
+    /// never change it), and the store must count exactly one lookup per
+    /// stale position-0 prefill (one per refresh in these no-slide
+    /// cases).
+    fn prop_store_transparent_over_prompt_mix(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let mut rng = Pcg32::new(input.0 ^ 0x51DE, 23);
+        let plans = [MaskPlan::PruneOnce, MaskPlan::Refresh(2)];
+        let mut extended = prompt.clone();
+        extended.extend((0..1 + rng.gen_range_usize(3)).map(|_| rng.gen_range(256) as i32));
+        let mutated: Vec<i32> = prompt.iter().map(|&t| (t + 11) % 256).collect();
+        let prompts = [prompt.clone(), extended, mutated, prompt];
+        let store = Arc::new(KvStore::new(4096));
+        let mut expected_lookups = 0u64;
+        for (i, p) in prompts.iter().enumerate() {
+            let plan = plans[rng.gen_range_usize(2)];
+            let reference = decode_greedy(&model, p, &dcfg(rho, plan, max_new), None);
+            let out = run_pool(&model, p, rho, plan, max_new, seed_with(&store));
+            bit_identical(&format!("prompt {i} ({})", plan.label()), &out, &reference)?;
+            ensure(
+                out.seeded_tokens + out.prefilled_tokens >= p.len(),
+                format!("prompt {i}: window work under-counted"),
+            )?;
+            expected_lookups += out.refresh_count as u64;
+        }
+        ensure(
+            store.hits() + store.misses() == expected_lookups,
+            format!(
+                "{} hits + {} misses != {} stale prefills",
+                store.hits(),
+                store.misses(),
+                expected_lookups
+            ),
+        )
+    }
+
+    /// A session continuation — parked window ++ new turn, layouts
+    /// pinned, rows seeded — must skip every refresh, seed exactly the
+    /// parked rows, prefill only the unseeded suffix, and produce step
+    /// logits equal to the full-window fixed-layout forward over its own
+    /// prefix: the hand-rolled reference in which nothing but the pinned
+    /// layouts decides the outputs.
+    fn prop_session_continuation_matches_pinned_reference(input: &(u64, f64)) -> PropResult {
+        let (model, prompt, rho, max_new) = case(input.0, input.1);
+        let mut rng = Pcg32::new(input.0 ^ 0xC0DE, 29);
+        let store = Arc::new(KvStore::new(4096));
+        let park = LaneSeed {
+            store: Some(store.clone()),
+            resume: None,
+            park: true,
+        };
+        let turn1 = run_pool(&model, &prompt, rho, MaskPlan::PruneOnce, max_new, park);
+        let parked = turn1.parked.as_deref().ok_or("turn 1 parked no state")?;
+        ensure(
+            parked.tokens == turn1.tokens,
+            "parked window != final tokens (these cases never slide)",
+        )?;
+        ensure(
+            parked.entry.len() == turn1.tokens.len() - 1,
+            format!(
+                "parked rows cover {} of {} tokens",
+                parked.entry.len(),
+                turn1.tokens.len()
+            ),
+        )?;
+        let new_turn: Vec<i32> = (0..1 + rng.gen_range_usize(3))
+            .map(|_| rng.gen_range(256) as i32)
+            .collect();
+        let mut concat = parked.tokens.clone();
+        concat.extend_from_slice(&new_turn);
+        let max_new2 = 2 + rng.gen_range_usize(3);
+        let resume = LaneSeed {
+            store: Some(store.clone()),
+            resume: Some(SessionResume {
+                layouts: parked.layouts.clone(),
+                entry: Arc::new(parked.entry.clone()),
+            }),
+            park: true,
+        };
+        let cont = run_pool(&model, &concat, rho, MaskPlan::PruneOnce, max_new2, resume);
+        ensure(cont.refresh_count == 0, "pinned continuation ran a refresh")?;
+        ensure(
+            cont.seeded_tokens == parked.entry.len(),
+            format!(
+                "continuation seeded {} != parked {}",
+                cont.seeded_tokens,
+                parked.entry.len()
+            ),
+        )?;
+        ensure(
+            cont.prefilled_tokens == concat.len() - parked.entry.len(),
+            "continuation prefilled more than the unseeded suffix",
+        )?;
+        for (i, st) in cont.steps.iter().enumerate() {
+            let valid = concat.len() + i;
+            let want = model.forward_fixed_last(&cont.tokens[..valid], valid, &parked.layouts);
+            ensure(
+                st.logits == want,
+                format!("continuation step {i} logits diverged from the pinned reference"),
+            )?;
+        }
+        Ok(())
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        (r.next_u64(), r.next_f64())
+    }
+
+    #[test]
+    fn warm_store_rerun_bit_identical_with_exact_counters() {
+        check(501, 8, gen_seed_rho, prop_warm_rerun_bit_identical_counters_exact);
+    }
+
+    #[test]
+    fn store_transparent_over_mixed_prompt_family() {
+        check(502, 6, gen_seed_rho, prop_store_transparent_over_prompt_mix);
+    }
+
+    #[test]
+    fn session_continuation_bit_exact_against_pinned_layout_reference() {
+        check(503, 6, gen_seed_rho, prop_session_continuation_matches_pinned_reference);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

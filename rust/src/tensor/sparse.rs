@@ -189,6 +189,7 @@ pub struct LayoutCache {
     tick: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
     entries: HashMap<LayoutKey, (Arc<RowSparse>, u64)>,
 }
 
@@ -200,6 +201,7 @@ impl LayoutCache {
             tick: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
             entries: HashMap::new(),
         }
     }
@@ -222,6 +224,12 @@ impl LayoutCache {
 
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// LRU entries dropped over the cache's lifetime (a `/metrics` gauge:
+    /// a high rate against a steady hit rate means the capacity is churning).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Non-counting, non-bumping presence check (tests / introspection).
@@ -271,6 +279,7 @@ impl LayoutCache {
                 .map(|(k, _)| k.clone());
             if let Some(k) = victim {
                 self.entries.remove(&k);
+                self.evictions += 1;
             }
         }
         arc
@@ -587,6 +596,18 @@ mod tests {
         }
         assert_eq!(c.misses(), 5);
         assert_eq!(c.hits(), 0);
+        // 5 inserts into 2 slots: 3 victims dropped
+        assert_eq!(c.evictions(), 3);
+    }
+
+    #[test]
+    fn cache_eviction_counter_stays_zero_under_capacity() {
+        let mut c = LayoutCache::new(4);
+        for i in 0..4u64 {
+            c.get_or_insert_with(key("a", i), || layout(i));
+        }
+        assert!(c.get(&key("a", 0)).is_some());
+        assert_eq!(c.evictions(), 0);
     }
 
     #[test]

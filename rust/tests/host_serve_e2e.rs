@@ -69,7 +69,7 @@ fn batched_host_serving_matches_direct_decode() {
     let mut submitted = Vec::new();
     for (prompt, rho, max_new) in &cases {
         let req = router
-            .admit_decode(prompt, *rho, "synth_wiki", *max_new, None, None, Some(tx.clone()))
+            .admit_decode(prompt, *rho, "synth_wiki", *max_new, None, None, None, Some(tx.clone()))
             .expect("admit");
         submitted.push(req.id);
         handle.submit(req).expect("submit");
@@ -145,7 +145,7 @@ fn warm_cache_hits_rise_across_repeated_requests() {
     let send_one = || {
         let (tx, rx) = channel();
         let req = router
-            .admit_decode("a repeated prompt", 0.6, "synth_wiki", 2, None, None, Some(tx))
+            .admit_decode("a repeated prompt", 0.6, "synth_wiki", 2, None, None, None, Some(tx))
             .expect("admit");
         handle.submit(req).expect("submit");
         let resp = rx
@@ -215,7 +215,7 @@ fn streamed_events_concatenate_to_response_tokens() {
         let (tx, rx) = channel();
         let (stx, srx) = channel();
         let req = router
-            .admit_decode("stream this back", 0.6, "synth_wiki", 4, None, Some(stx), Some(tx))
+            .admit_decode("stream this back", 0.6, "synth_wiki", 4, None, None, Some(stx), Some(tx))
             .expect("admit");
         let id = req.id;
         handle.submit(req).expect("submit");
@@ -266,7 +266,7 @@ fn cancellation_frees_lane_admits_queued_request_and_is_recorded() {
     let (atx, arx) = channel();
     let (astx, asrx) = channel();
     let a = router
-        .admit_decode("the long one", 0.6, "synth_wiki", 256, None, Some(astx), Some(atx))
+        .admit_decode("the long one", 0.6, "synth_wiki", 256, None, None, Some(astx), Some(atx))
         .expect("admit A");
     let a_id = a.id;
     let a_cancel = a.cancel.clone();
@@ -279,7 +279,7 @@ fn cancellation_frees_lane_admits_queued_request_and_is_recorded() {
     // B queues behind A at the same ρ level, then A is cancelled
     let (btx, brx) = channel();
     let b = router
-        .admit_decode("the queued one", 0.6, "synth_wiki", 2, None, None, Some(btx))
+        .admit_decode("the queued one", 0.6, "synth_wiki", 2, None, None, None, Some(btx))
         .expect("admit B");
     handle.submit(b).expect("submit B");
     a_cancel.cancel();
@@ -357,6 +357,7 @@ fn mixed_workload_fuses_shared_layouts_and_keeps_tokens_identical() {
                 *max_new,
                 Some(*plan),
                 None,
+                None,
                 Some(tx.clone()),
             )
             .expect("admit");
@@ -432,7 +433,7 @@ fn submit_after_shutdown_returns_error_not_panic() {
     handle.shutdown().expect("shutdown");
 
     let req = router
-        .admit_decode("too late", 0.6, "synth_wiki", 1, None, None, None)
+        .admit_decode("too late", 0.6, "synth_wiki", 1, None, None, None, None)
         .expect("admission is independent of the serve loop");
     let err = handle.submit(req).expect_err("submit after shutdown");
     assert!(
@@ -459,7 +460,16 @@ fn dropped_stream_receiver_evicts_lane_and_records_cancel() {
     let (atx, arx) = channel();
     let (astx, asrx) = channel();
     let a = router
-        .admit_decode("the abandoned one", 0.6, "synth_wiki", 256, None, Some(astx), Some(atx))
+        .admit_decode(
+            "the abandoned one",
+            0.6,
+            "synth_wiki",
+            256,
+            None,
+            None,
+            Some(astx),
+            Some(atx),
+        )
         .expect("admit A");
     let a_id = a.id;
     handle.submit(a).expect("submit A");
@@ -488,7 +498,7 @@ fn dropped_stream_receiver_evicts_lane_and_records_cancel() {
     // the freed lane serves B normally
     let (btx, brx) = channel();
     let b = router
-        .admit_decode("the next client", 0.6, "synth_wiki", 2, None, None, Some(btx))
+        .admit_decode("the next client", 0.6, "synth_wiki", 2, None, None, None, Some(btx))
         .expect("admit B");
     handle.submit(b).expect("submit B");
     let b_resp = brx.recv_timeout(Duration::from_secs(60)).expect("B response");

@@ -306,11 +306,169 @@ fn metrics_endpoint_exposes_prometheus_families() {
         "mumoe_fused_width_groups{rho=\"0.60\",width=\"1\"}",
         "mumoe_request_latency_us_bucket{le=\"+Inf\"} 1",
         "mumoe_queue_depth 0",
+        // the prefill/seed split: "count me" is BOS + one token per byte,
+        // all computed (nothing was in the store to seed from)
+        "mumoe_level_prefilled_tokens_total{rho=\"0.60\"} 9",
+        "mumoe_level_seeded_tokens_total{rho=\"0.60\"} 0",
+        // occupancy gauges snapshotted by the serve loop
+        "mumoe_layout_cache_entries",
+        "mumoe_kvstore_entries",
+        "mumoe_sessions_active",
     ] {
         assert!(text.contains(family), "missing {family:?} in:\n{text}");
     }
 
     handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn multi_turn_session_seeds_parked_prefix_and_delete_resets_it() {
+    let (_, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    // turn 1 opens the session: nothing parked yet, so the whole BOS'd
+    // prompt prefills, and the session id is echoed back terminally
+    let p1 = "session turn one";
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(&format!(
+            r#"{{"prompt": "{p1}", "rho": 0.6, "max_new": 3, "session": "chat-1"}}"#
+        )),
+    );
+    assert_eq!(status, 200, "{body}");
+    let turn1 = Json::parse(&body).expect("turn 1 json");
+    assert_eq!(turn1.req("session").unwrap().as_str(), Some("chat-1"));
+    assert_eq!(turn1.req("seeded").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        turn1.req("prefilled").unwrap().as_usize(),
+        Some(p1.len() + 1),
+        "turn 1 prefills BOS + one token per byte"
+    );
+
+    // turn 2 continues it: the parked window (turn 1's BOS'd prompt plus
+    // its 3 generated tokens, minus the never-forwarded last one) seeds
+    // from the parked cache — zero full-prefix prefill — and only the
+    // new turn (+ that last token) pays compute
+    let p2 = " and turn two";
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(&format!(
+            r#"{{"prompt": "{p2}", "rho": 0.6, "max_new": 2, "session": "chat-1"}}"#
+        )),
+    );
+    assert_eq!(status, 200, "{body}");
+    let turn2 = Json::parse(&body).expect("turn 2 json");
+    assert_eq!(turn2.req("session").unwrap().as_str(), Some("chat-1"));
+    assert_eq!(
+        turn2.req("seeded").unwrap().as_usize(),
+        Some(p1.len() + 1 + 3 - 1),
+        "turn 2 must seed the whole parked window"
+    );
+    assert_eq!(
+        turn2.req("prefilled").unwrap().as_usize(),
+        Some(p2.len() + 2),
+        "turn 2 prefills only its own turn plus the un-forwarded token"
+    );
+    assert_eq!(tokens_of(&turn2).len(), 2, "turn 2 generated its own tokens");
+
+    // deleting the session works once, then reports not-found
+    let (status, _, body) = http_request(addr, "DELETE", "/session/chat-1", None);
+    assert_eq!(status, 200, "{body}");
+    let del = Json::parse(&body).expect("delete json");
+    assert_eq!(del.req("session").unwrap().as_str(), Some("chat-1"));
+    assert_eq!(del.req("deleted").unwrap(), &Json::Bool(true));
+    let (_, _, body) = http_request(addr, "DELETE", "/session/chat-1", None);
+    let del = Json::parse(&body).expect("second delete json");
+    assert_eq!(del.req("deleted").unwrap(), &Json::Bool(false));
+
+    // a turn on the deleted id starts a fresh session: cold again
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "turn three", "rho": 0.6, "max_new": 2, "session": "chat-1"}"#),
+    );
+    assert_eq!(status, 200, "{body}");
+    let turn3 = Json::parse(&body).expect("turn 3 json");
+    assert_eq!(
+        turn3.req("seeded").unwrap().as_usize(),
+        Some(0),
+        "a deleted session has nothing left to seed from"
+    );
+
+    // malformed ids are shed before admission, naming the field
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "p", "session": "bad/id"}"#),
+    );
+    assert_eq!(status, 400);
+    assert!(body.contains("session"), "{body}");
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancelled_session_turn_parks_partial_state_for_continuation() {
+    // single-lane pool: hanging up on a streaming session turn must both
+    // free the lane AND park the partial window under the session id, so
+    // a retry on the same id continues instead of starting cold (the
+    // regression behind the registry's generation guard)
+    let mut cfg = serve_cfg();
+    cfg.decode.batch_size = 1;
+    cfg.decode.max_new_cap = 256;
+    let (metrics, handle) = start(cfg);
+    let addr = handle.addr();
+
+    {
+        let mut s = TcpStream::connect(addr).expect("connect A");
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let body = concat!(
+            r#"{"prompt": "park me", "rho": 0.6, "max_new": 256, "#,
+            r#""stream": true, "session": "live-1"}"#
+        );
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).expect("write A");
+        let mut seen = Vec::new();
+        let mut chunk = [0u8; 256];
+        while !String::from_utf8_lossy(&seen).contains("data: ") {
+            let n = s.read(&mut chunk).expect("read A");
+            assert!(n > 0, "server closed before first token");
+            seen.extend_from_slice(&chunk[..n]);
+        }
+        // socket drops here: an implicit cancel mid-generation
+    }
+
+    // the continuation on the same id must find the parked partial
+    // window: its prefix seeds instead of prefilling
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": " continue", "rho": 0.6, "max_new": 2, "session": "live-1"}"#),
+    );
+    assert_eq!(status, 200, "{body}");
+    let resp = Json::parse(&body).expect("continuation json");
+    assert_eq!(resp.req("session").unwrap().as_str(), Some("live-1"));
+    assert_eq!(resp.req("cancelled").unwrap(), &Json::Bool(false));
+    let seeded = resp.req("seeded").unwrap().as_usize().expect("seeded");
+    assert!(seeded > 0, "the cancelled turn must park state to continue from");
+    assert_eq!(tokens_of(&resp).len(), 2);
+
+    handle.shutdown().expect("shutdown");
+    assert!(
+        metrics.cancelled.load(Ordering::Relaxed) >= 1,
+        "the dropped stream must be recorded as a cancellation"
+    );
 }
 
 #[test]
