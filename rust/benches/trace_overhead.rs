@@ -1,0 +1,248 @@
+//! Trace-overhead bench: the flight recorder must be free when disabled.
+//!
+//! PR 9 threads per-request tracing through the continuous serve path:
+//! every sweep the pool reports its per-lane steps and the recorder turns
+//! them into spans. That bookkeeping runs on the decode hot path, so this
+//! bench drives the same `LanePool` loop the server runs in four modes:
+//!
+//! * **baseline** — no recorder calls at all (the pre-PR-9 loop);
+//! * **disabled** — `FlightRecorder::disabled()` wired in exactly like
+//!   the server wires it (`record_sweep` every sweep): the cost of the
+//!   enabled-check itself;
+//! * **enabled** — spans recorded for every lane every sweep;
+//! * **sampled** — enabled plus kernel attribution on every sweep
+//!   (`kernel_sample_every = 1`, the worst case: per-segment clock reads
+//!   inside every forward).
+//!
+//! Deterministic assertions in every mode (smoke checks them too):
+//! tokens are bit-identical across all four modes (observability must
+//! not steer decode), the disabled recorder stays structurally empty
+//! (nothing buffered, nothing allocated into its rings), and the enabled
+//! recorder holds one finished timeline per lane with prefill/step spans
+//! plus one kernel sample per sweep in sampled mode.
+//!
+//! Emits `BENCH_trace_overhead.json`. Acceptance (non-smoke): disabled
+//! tok/s ≥ 90% of baseline (parity — the disabled path is one relaxed
+//! atomic load per sweep) and enabled tok/s ≥ 80% of baseline.
+//!
+//! `--smoke`: tiny model, 1 rep — CI runs this so the bench cannot
+//! bit-rot (gates informational in smoke).
+
+mod common;
+
+use common::jnum;
+use mumoe::decode::{LaneEvent, LanePool};
+use mumoe::model::config_by_name;
+use mumoe::model::ModelConfig;
+use mumoe::nn::{random_model, Model};
+use mumoe::pruning::MaskPlan;
+use mumoe::tensor::LayoutCache;
+use mumoe::trace::FlightRecorder;
+use mumoe::util::json::Json;
+use std::collections::HashMap;
+
+struct BenchShape {
+    model: Model,
+    model_name: String,
+    lanes: usize,
+    rho: f64,
+    n_new: usize,
+    reps: usize,
+    cache_cap: usize,
+}
+
+fn shape(smoke: bool) -> BenchShape {
+    if smoke {
+        BenchShape {
+            model: random_model(&ModelConfig::new("smoke-tiny", 2, 2, 16), 7),
+            model_name: "smoke-tiny(2x2x16)".into(),
+            lanes: 2,
+            rho: 0.5,
+            n_new: 4,
+            reps: 1,
+            cache_cap: 512,
+        }
+    } else {
+        let cfg = config_by_name("mu-opt-micro").expect("known model");
+        BenchShape {
+            model: random_model(&cfg, 7),
+            model_name: cfg.name.clone(),
+            lanes: 4,
+            rho: 0.5,
+            n_new: 16,
+            reps: 3,
+            cache_cap: 4096,
+        }
+    }
+}
+
+fn prompt() -> Vec<i32> {
+    (0..20).map(|j| (j * 53 + 19) % 256).collect()
+}
+
+struct PoolRun {
+    tokens: usize,
+    /// Per-lane generated tokens, slot order.
+    outputs: Vec<Vec<i32>>,
+    /// The recorder the run was wired with (None = baseline).
+    recorder: Option<FlightRecorder>,
+}
+
+/// One pool drain with the recorder wired exactly the way the continuous
+/// serve loop wires it: sampling cadence from the recorder, one
+/// `record_sweep` per sweep (before delivery), `finish` on Done.
+fn run_pool(sh: &BenchShape, recorder: Option<FlightRecorder>) -> PoolRun {
+    let p = prompt();
+    let mut cache = LayoutCache::new(sh.cache_cap);
+    let mut pool = LanePool::new(sh.lanes);
+    for _ in 0..sh.lanes {
+        pool.admit(&sh.model, &p, sh.n_new, MaskPlan::PruneOnce, true);
+    }
+    if let Some(rec) = &recorder {
+        pool.set_kernel_sampling(rec.kernel_sample_every());
+        for slot in 0..sh.lanes {
+            rec.begin((slot + 1) as u64);
+        }
+    }
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); sh.lanes];
+    let mut tokens = 0usize;
+    let mut done = 0usize;
+    while done < sh.lanes {
+        let mut copt = Some(&mut cache);
+        let events = pool.sweep(&sh.model, sh.rho, false, &mut copt);
+        if let Some(rec) = &recorder {
+            let sample = pool.take_kernel_sample();
+            rec.record_sweep(|slot| Some((slot + 1) as u64), pool.last_sweep_lane_steps(), sample);
+        }
+        for ev in events {
+            match ev {
+                LaneEvent::Token { slot, token, .. } => outputs[slot].push(token),
+                LaneEvent::Done { slot, output } => {
+                    tokens += output.steps.len();
+                    done += 1;
+                    if let Some(rec) = &recorder {
+                        rec.finish((slot + 1) as u64, "done");
+                    }
+                }
+            }
+        }
+    }
+    PoolRun {
+        tokens,
+        outputs,
+        recorder,
+    }
+}
+
+fn main() {
+    let smoke = common::smoke_flag();
+    let sh = shape(smoke);
+
+    type MakeRecorder = fn() -> Option<FlightRecorder>;
+    let modes: [(&str, MakeRecorder); 4] = [
+        ("baseline", || None),
+        ("disabled", || Some(FlightRecorder::disabled())),
+        ("enabled", || Some(FlightRecorder::new(true, 64, 0))),
+        ("sampled", || Some(FlightRecorder::new(true, 64, 1))),
+    ];
+
+    let title = format!(
+        "Trace overhead: {} lanes x {} new tokens, {} ({})",
+        sh.lanes,
+        sh.n_new,
+        sh.model_name,
+        if smoke { "smoke" } else { "full" }
+    );
+    let mut table = mumoe::benchlib::Table::new(title, &["mode", "tok/s", "vs baseline"]);
+
+    let mut tps_by_mode: Vec<(String, f64)> = Vec::new();
+    let mut reference_outputs: Option<Vec<Vec<i32>>> = None;
+    for (name, make) in &modes {
+        let (tps, run) = common::best_run(sh.reps, || {
+            let r = run_pool(&sh, make());
+            (r.tokens, r)
+        });
+
+        // correctness before speed: observability must not steer decode
+        match &reference_outputs {
+            None => reference_outputs = Some(run.outputs.clone()),
+            Some(reference) => {
+                assert_eq!(&run.outputs, reference, "mode {name} changed decoded tokens")
+            }
+        }
+        match (*name, &run.recorder) {
+            ("disabled", Some(rec)) => {
+                assert!(!rec.enabled());
+                assert!(rec.is_empty(), "disabled recorder must buffer nothing on the hot path");
+                assert!(rec.last(8).is_empty());
+            }
+            ("enabled", Some(rec)) | ("sampled", Some(rec)) => {
+                assert_eq!(rec.completed(), sh.lanes, "one finished timeline per lane");
+                for slot in 0..sh.lanes {
+                    let t = rec.timeline((slot + 1) as u64).expect("lane timeline");
+                    assert!(!t.spans.is_empty(), "lane {slot} recorded no spans");
+                    let phases: Vec<&str> = t.spans.iter().map(|s| s.phase).collect();
+                    assert!(phases.contains(&"prefill"), "{phases:?}");
+                    assert!(t.span_sum_us() > 0);
+                }
+                if *name == "sampled" {
+                    assert_eq!(
+                        rec.kernel_samples().len(),
+                        sh.n_new,
+                        "every-sweep cadence samples every sweep"
+                    );
+                } else {
+                    assert!(rec.kernel_samples().is_empty(), "cadence 0 never samples");
+                }
+            }
+            _ => {}
+        }
+
+        let baseline_tps = tps_by_mode.first().map_or(tps, |(_, t)| *t);
+        table.row(vec![
+            name.to_string(),
+            format!("{tps:.2}"),
+            format!("{:.3}x", tps / baseline_tps.max(1e-12)),
+        ]);
+        tps_by_mode.push((name.to_string(), tps));
+    }
+    table.print();
+
+    let baseline = tps_by_mode[0].1.max(1e-12);
+    let disabled_ratio = tps_by_mode[1].1 / baseline;
+    let enabled_ratio = tps_by_mode[2].1 / baseline;
+    let sampled_ratio = tps_by_mode[3].1 / baseline;
+    let accept = disabled_ratio >= 0.9 && enabled_ratio >= 0.8;
+    println!(
+        "\nACCEPTANCE: disabled-trace tok/s >= 90% of baseline (got \
+         {disabled_ratio:.3}) and enabled >= 80% (got {enabled_ratio:.3}): {}.",
+        if accept { "PASS" } else { "FAIL" }
+    );
+    if smoke {
+        println!("(smoke mode: acceptance informational only)");
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), Json::Str("trace_overhead".into())),
+        ("model".into(), Json::Str(sh.model_name.clone())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("lanes".into(), jnum(sh.lanes as f64)),
+        ("n_new_tokens".into(), jnum(sh.n_new as f64)),
+        (
+            "tokens_per_sec".into(),
+            Json::Obj(
+                tps_by_mode
+                    .iter()
+                    .map(|(n, t)| (n.clone(), jnum(*t)))
+                    .collect(),
+            ),
+        ),
+        ("disabled_over_baseline".into(), jnum(disabled_ratio)),
+        ("enabled_over_baseline".into(), jnum(enabled_ratio)),
+        ("sampled_over_baseline".into(), jnum(sampled_ratio)),
+        ("tokens_identical_across_modes".into(), Json::Bool(true)),
+        ("accept_disabled_parity".into(), Json::Bool(accept)),
+    ]));
+    common::write_bench_json("BENCH_trace_overhead.json", &out);
+    common::exit_on_gate(accept, smoke);
+}

@@ -324,6 +324,36 @@ impl Default for KvStoreKnobs {
     }
 }
 
+/// Per-request tracing knobs (the `[trace]` config section; see
+/// `crate::trace`). The recorder only retains *completed* request
+/// timelines — `capacity` bounds that ring — and `kernel_sample_every`
+/// gates the sampled per-sweep kernel attribution so the hot path stays
+/// allocation-free between samples.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceKnobs {
+    /// Record per-request span timelines (`GET /trace`,
+    /// `GET /requests/:id`). Off leaves a single-branch no-op on the
+    /// serve hot path. CLI: `--trace` / `--no-trace`.
+    pub enabled: bool,
+    /// Completed request timelines (and kernel samples) retained in the
+    /// flight recorder's ring. CLI: `--trace-capacity`.
+    pub capacity: usize,
+    /// Sample kernel-time attribution (sparse linears vs attention vs
+    /// stack/scatter) every N-th lane-pool sweep; 0 never samples. CLI:
+    /// `--trace-kernel-every`.
+    pub kernel_sample_every: u64,
+}
+
+impl Default for TraceKnobs {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            capacity: 64,
+            kernel_sample_every: 0,
+        }
+    }
+}
+
 /// Everything the `serve` subcommand needs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -362,6 +392,8 @@ pub struct ServeConfig {
     pub decode: DecodeKnobs,
     /// Cross-request prefix KV store + sessions (see [`KvStoreKnobs`]).
     pub kvstore: KvStoreKnobs,
+    /// Per-request tracing (see [`TraceKnobs`]).
+    pub trace: TraceKnobs,
 }
 
 impl Default for ServeConfig {
@@ -380,6 +412,7 @@ impl Default for ServeConfig {
             layout_cache_cap: 512,
             decode: DecodeKnobs::default(),
             kvstore: KvStoreKnobs::default(),
+            trace: TraceKnobs::default(),
         }
     }
 }
@@ -426,6 +459,14 @@ impl ServeConfig {
                 session_ttl_secs: t.usize_or(
                     "kvstore.session_ttl_secs",
                     d.kvstore.session_ttl_secs as usize,
+                ) as u64,
+            },
+            trace: TraceKnobs {
+                enabled: t.bool_or("trace.enabled", d.trace.enabled),
+                capacity: t.usize_or("trace.capacity", d.trace.capacity),
+                kernel_sample_every: t.usize_or(
+                    "trace.kernel_sample_every",
+                    d.trace.kernel_sample_every as usize,
                 ) as u64,
             },
         };
@@ -483,6 +524,9 @@ impl ServeConfig {
         }
         if self.kvstore.enabled && self.kvstore.session_ttl_secs == 0 {
             return Err(Error::config("kvstore.session_ttl_secs must be > 0"));
+        }
+        if self.trace.enabled && self.trace.capacity == 0 {
+            return Err(Error::config("trace.capacity must be > 0"));
         }
         Ok(())
     }
@@ -710,6 +754,45 @@ default_rho = 0.6
             enabled: false,
             token_budget: 0,
             session_ttl_secs: 0,
+        })
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn trace_knobs_from_toml() {
+        let t = Toml::parse(
+            "[trace]\nenabled = false\ncapacity = 16\nkernel_sample_every = 8\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert!(!c.trace.enabled);
+        assert_eq!(c.trace.capacity, 16);
+        assert_eq!(c.trace.kernel_sample_every, 8);
+        // defaults when the section is absent
+        let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(d.trace.enabled, "tracing records by default");
+        assert_eq!(d.trace.capacity, 64);
+        assert_eq!(d.trace.kernel_sample_every, 0, "kernel sampling opt-in");
+    }
+
+    #[test]
+    fn validation_rejects_bad_trace_knobs() {
+        let with_knobs = |trace: TraceKnobs| ServeConfig {
+            trace,
+            ..ServeConfig::default()
+        };
+        assert!(with_knobs(TraceKnobs {
+            capacity: 0,
+            ..Default::default()
+        })
+        .validate()
+        .is_err());
+        // a disabled recorder skips the capacity check
+        assert!(with_knobs(TraceKnobs {
+            enabled: false,
+            capacity: 0,
+            kernel_sample_every: 0,
         })
         .validate()
         .is_ok());

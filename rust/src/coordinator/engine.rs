@@ -328,6 +328,8 @@ impl Engine for PjrtEngine {
                     rho_used: batch.rho,
                     prefilled_tokens: 0,
                     seeded_tokens: 0,
+                    queue_wait_us: 0,
+                    ttft_us: 0,
                     rejected: None,
                 }
             })

@@ -23,6 +23,12 @@
 //! * `GET /metrics` — Prometheus text ([`Metrics::to_prometheus`],
 //!   including the layout-cache and prefix-KV-store occupancy gauges)
 //!   plus the router's live `mumoe_queue_depth` gauge.
+//! * `GET /trace?last=N` — Chrome trace-event JSON (loadable in
+//!   Perfetto / `chrome://tracing`) for the last N completed requests
+//!   in the flight recorder, plus sampled kernel-attribution slices;
+//!   404 when tracing is disabled.
+//! * `GET /requests/:id` — one request's span timeline as plain JSON
+//!   (phases with start/end/duration in µs); 404 for unknown ids.
 //!
 //! A client disconnect mid-stream cancels its request: the connection
 //! worker fires the request's [`CancelToken`] on the first failed write,
@@ -42,6 +48,7 @@ use super::server::{Server, ServerHandle};
 use crate::config::ServeConfig;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::pruning::MaskPlan;
+use crate::trace::{chrome_trace, FlightRecorder};
 use crate::util::error::Error;
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -50,7 +57,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Largest accepted request head (request line + headers).
 const MAX_HEAD_BYTES: usize = 16 * 1024;
@@ -67,6 +74,8 @@ struct Shared {
     router: Arc<Router>,
     engine: ServerHandle,
     draining: AtomicBool,
+    recorder: Arc<FlightRecorder>,
+    started: Instant,
 }
 
 /// The HTTP front-end launcher.
@@ -84,10 +93,13 @@ impl HttpServer {
         let local = listener
             .local_addr()
             .map_err(|e| Error::coordinator(format!("local_addr: {e}")))?;
+        let recorder = router.recorder();
         let shared = Arc::new(Shared {
             router,
             engine,
             draining: AtomicBool::new(false),
+            recorder,
+            started: Instant::now(),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
@@ -193,6 +205,7 @@ pub fn serve_http(cfg: ServeConfig, addr: &str) -> Result<(), Error> {
     let handle = HttpServer::start(router, addr)?;
     println!("serving on http://{}", handle.addr());
     println!("  POST /generate   DELETE /session/:id   GET /health   GET /metrics");
+    println!("  GET /trace?last=N   GET /requests/:id");
     handle.join()
 }
 
@@ -241,7 +254,9 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    // route on the path alone; `?last=N`-style query strings ride along
+    let (path, query) = req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+    match (req.method.as_str(), path) {
         ("GET", "/health") => {
             let draining = shared.draining.load(Ordering::SeqCst);
             let cfg = shared.router.config();
@@ -252,6 +267,19 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
                 ),
                 ("model".into(), Json::Str(cfg.model.clone())),
                 ("engine".into(), Json::Str(cfg.engine.label().into())),
+                ("version".into(), Json::Str(env!("CARGO_PKG_VERSION").into())),
+                (
+                    "uptime_seconds".into(),
+                    Json::Num(shared.started.elapsed().as_secs_f64()),
+                ),
+                (
+                    "queue_depth".into(),
+                    Json::Num(shared.router.queue_depth() as f64),
+                ),
+                (
+                    "lane_occupancy".into(),
+                    Json::Num(shared.engine.metrics.lane_occupancy()),
+                ),
             ]));
             write_json(&mut stream, 200, &body);
         }
@@ -269,6 +297,21 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
                 "text/plain; version=0.0.4",
                 text.as_bytes(),
             );
+        }
+        ("GET", "/trace") => handle_trace(shared, &mut stream, query),
+        ("GET", p) if p.starts_with("/requests/") => {
+            let timeline = p["/requests/".len()..]
+                .parse::<RequestId>()
+                .ok()
+                .and_then(|id| shared.recorder.timeline(id));
+            match timeline {
+                Some(t) => write_json(&mut stream, 200, &t.to_json()),
+                None => write_json(
+                    &mut stream,
+                    404,
+                    &json_error(&format!("no trace for {p}"), None),
+                ),
+            }
         }
         ("POST", "/generate") => handle_generate(shared, &mut stream, &req.body),
         ("DELETE", path) => match path.strip_prefix("/session/") {
@@ -306,6 +349,40 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
             );
         }
     }
+}
+
+/// `GET /trace?last=N`: Chrome trace-event JSON for the last N completed
+/// requests (default: the recorder's full ring) plus the sampled
+/// kernel-attribution slices. 404 while tracing is disabled so scrapers
+/// can distinguish "off" from "empty".
+fn handle_trace(shared: &Shared, stream: &mut TcpStream, query: &str) {
+    let rec = &shared.recorder;
+    if !rec.enabled() {
+        write_json(stream, 404, &json_error("tracing disabled", None));
+        return;
+    }
+    let last = match query_param(query, "last") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                let msg = "query parameter 'last' must be an integer";
+                write_json(stream, 400, &json_error(msg, None));
+                return;
+            }
+        },
+        None => rec.capacity(),
+    };
+    let body = chrome_trace(&rec.last(last), &rec.kernel_samples());
+    write_json(stream, 200, &body);
+}
+
+/// Value of `name` in a `k=v&k2=v2` query string.
+fn query_param<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        pair.split_once('=')
+            .filter(|(k, _)| *k == name)
+            .map(|(_, v)| v)
+    })
 }
 
 /// The decode request a `/generate` body parses into.
@@ -437,6 +514,7 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
             };
             let id = rej.id;
             let msg = rej.rejected.unwrap_or_else(|| "rejected".into());
+            crate::debug!("generate rejected: {msg}"; id = id, status = status);
             write_json(stream, status, &json_error(&msg, Some(id)));
             return;
         }
@@ -447,6 +525,7 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
         write_json(stream, 503, &json_error("server is shutting down", Some(id)));
         return;
     }
+    crate::debug!("generate admitted"; id = id, stream = greq.stream);
 
     if greq.stream {
         stream_response(stream, id, greq.session.as_deref(), &cancel, step_rx, reply_rx);
@@ -670,6 +749,18 @@ fn response_json(resp: &Response, session: Option<&str>) -> Json {
         ("prefilled".into(), Json::Num(resp.prefilled_tokens as f64)),
         ("seeded".into(), Json::Num(resp.seeded_tokens as f64)),
         ("cancelled".into(), Json::Bool(resp.is_cancelled())),
+        // server-side latency breakdown: where this request's wall time
+        // went, from admission to terminal delivery
+        (
+            "timing".into(),
+            Json::Obj(HashMap::from([
+                ("queue_wait_us".into(), Json::Num(resp.queue_wait_us as f64)),
+                ("ttft_us".into(), Json::Num(resp.ttft_us as f64)),
+                ("prefill_us".into(), Json::Num(resp.prefill_us as f64)),
+                ("step_us".into(), Json::Num(resp.step_us as f64)),
+                ("total_us".into(), Json::Num(resp.latency_us as f64)),
+            ])),
+        ),
     ]);
     if let Some(session) = session {
         m.insert("session".into(), Json::Str(session.into()));
@@ -756,7 +847,25 @@ mod tests {
         assert_eq!(j.req("seeded").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.req("cancelled").unwrap(), &Json::Bool(false));
         assert!(j.get("session").is_none(), "one-shot requests carry no session");
+        let timing = j.req("timing").unwrap();
+        assert_eq!(timing.req("prefill_us").unwrap().as_f64(), Some(10.0));
+        assert_eq!(timing.req("step_us").unwrap().as_f64(), Some(5.0));
+        assert_eq!(
+            timing.req("total_us").unwrap().as_f64(),
+            Some(resp.latency_us as f64)
+        );
+        assert_eq!(timing.req("queue_wait_us").unwrap().as_f64(), Some(0.0));
+        assert_eq!(timing.req("ttft_us").unwrap().as_f64(), Some(0.0));
         let j = response_json(&resp, Some("chat-1"));
         assert_eq!(j.req("session").unwrap().as_str(), Some("chat-1"));
+    }
+
+    #[test]
+    fn query_param_picks_named_pair() {
+        assert_eq!(query_param("last=5", "last"), Some("5"));
+        assert_eq!(query_param("a=1&last=9&b=2", "last"), Some("9"));
+        assert_eq!(query_param("", "last"), None);
+        assert_eq!(query_param("lastx=5", "last"), None);
+        assert_eq!(query_param("last", "last"), None, "valueless key");
     }
 }

@@ -1,4 +1,5 @@
-//! Serving metrics: lock-free counters + a log₂-bucketed latency histogram
+//! Serving metrics: lock-free counters + log₂-bucketed µs histograms
+//! (end-to-end latency, queue wait, server-side TTFT, inter-token gap)
 //! good enough for p50/p95/p99 without allocation on the hot path, plus a
 //! per-ρ-level decode breakdown (batches / requests / tokens per snapped
 //! level, and aggregate decode tokens/sec) so host serving is observable
@@ -75,6 +76,98 @@ impl LevelStats {
     }
 }
 
+/// Lock-free log₂-bucketed µs histogram (2^0 .. 2^39, ~9 minutes): one
+/// relaxed atomic add per observation, cumulative `le`-bucket rendering
+/// for Prometheus. Shared by the latency / queue-wait / TTFT /
+/// inter-token-gap families so their shapes cannot drift.
+#[derive(Debug)]
+struct Histo {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Histo {
+    fn new() -> Histo {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, us: u64) {
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    fn sum(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile: the upper bound of the containing bucket
+    /// (0 when empty).
+    fn percentile(&self, pct: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * pct / 100.0).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    fn mean(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum() as f64 / n as f64
+    }
+
+    /// Append the family in Prometheus text format: cumulative `le`
+    /// buckets (empties elided), `+Inf`, `_sum`, `_count`.
+    fn render_prometheus(&self, s: &mut String, name: &str, help: &str) {
+        use std::fmt::Write as _;
+        let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let count = b.load(Ordering::Relaxed);
+            cum += count;
+            if count > 0 {
+                let _ = writeln!(s, "{name}_bucket{{le=\"{}\"}} {cum}", 1u64 << (i + 1));
+            }
+        }
+        let _ = writeln!(s, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(s, "{name}_sum {}", self.sum());
+        let _ = writeln!(s, "{name}_count {cum}");
+    }
+}
+
+/// Escape a string for use as a Prometheus label value (text format
+/// 0.0.4: backslash, double quote and newline must be escaped).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 /// Shared metrics sink (all methods take &self; safe across threads).
 #[derive(Debug)]
 pub struct Metrics {
@@ -89,8 +182,14 @@ pub struct Metrics {
     pub batch_slots: AtomicU64,
     pub batch_occupied: AtomicU64,
     pub queue_peak: AtomicU64,
-    latency_us: [AtomicU64; BUCKETS],
-    latency_sum_us: AtomicU64,
+    latency: Histo,
+    /// Enqueue → execution pickup (lane admission / batch pop).
+    queue_wait: Histo,
+    /// Enqueue → first generated token, measured server-side.
+    ttft: Histo,
+    /// Wall-clock gap between consecutive tokens of one request
+    /// (continuous serving only; the drain path has no live tokens).
+    token_gap: Histo,
     decode_tokens: AtomicU64,
     decode_time_us: AtomicU64,
     decode_prefill_us: AtomicU64,
@@ -123,8 +222,10 @@ impl Metrics {
             batch_slots: AtomicU64::new(0),
             batch_occupied: AtomicU64::new(0),
             queue_peak: AtomicU64::new(0),
-            latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
-            latency_sum_us: AtomicU64::new(0),
+            latency: Histo::new(),
+            queue_wait: Histo::new(),
+            ttft: Histo::new(),
+            token_gap: Histo::new(),
             decode_tokens: AtomicU64::new(0),
             decode_time_us: AtomicU64::new(0),
             decode_prefill_us: AtomicU64::new(0),
@@ -375,39 +476,50 @@ impl Metrics {
 
     pub fn record_completion(&self, latency_us: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
-        let b = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.latency_us[b].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_us);
+    }
+
+    /// Queued time of one request (enqueue → execution pickup), stamped
+    /// by the serve loop when a batch pops it or a lane admits it.
+    pub fn record_queue_wait(&self, us: u64) {
+        self.queue_wait.record(us);
+    }
+
+    /// Server-side time-to-first-token of one request (enqueue → first
+    /// generated token; equals delivery latency on the drain path, which
+    /// only replies once the whole batch has executed).
+    pub fn record_ttft(&self, us: u64) {
+        self.ttft.record(us);
+    }
+
+    /// Gap between two consecutive live tokens of one continuously
+    /// decoded request.
+    pub fn record_token_gap(&self, us: u64) {
+        self.token_gap.record(us);
     }
 
     /// Approximate latency percentile from the histogram (upper bound of
     /// the containing bucket).
     pub fn latency_percentile_us(&self, pct: f64) -> u64 {
-        let total: u64 = self
-            .latency_us
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * pct / 100.0).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.latency_us.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << BUCKETS
+        self.latency.percentile(pct)
+    }
+
+    pub fn ttft_percentile_us(&self, pct: f64) -> u64 {
+        self.ttft.percentile(pct)
+    }
+
+    pub fn queue_wait_percentile_us(&self, pct: f64) -> u64 {
+        self.queue_wait.percentile(pct)
+    }
+
+    /// `(count, sum_us)` of the server-side TTFT histogram — lets tests
+    /// bracket client-observed TTFT without parsing `/metrics` text.
+    pub fn ttft_stats(&self) -> (u64, u64) {
+        (self.ttft.total(), self.ttft.sum())
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean()
     }
 
     /// Mean fraction of batch slots actually occupied.
@@ -598,31 +710,27 @@ impl Metrics {
             g(&self.sessions_active) as f64,
         );
 
-        // request latency: log2 buckets render as cumulative `le` bounds
-        let _ = writeln!(
-            s,
-            "# HELP mumoe_request_latency_us End-to-end request latency (us)\n\
-             # TYPE mumoe_request_latency_us histogram"
+        // µs histograms: log2 buckets render as cumulative `le` bounds
+        self.latency.render_prometheus(
+            &mut s,
+            "mumoe_request_latency_us",
+            "End-to-end request latency (us)",
         );
-        let mut cum = 0u64;
-        for (i, b) in self.latency_us.iter().enumerate() {
-            let count = b.load(Ordering::Relaxed);
-            cum += count;
-            if count > 0 {
-                let _ = writeln!(
-                    s,
-                    "mumoe_request_latency_us_bucket{{le=\"{}\"}} {cum}",
-                    1u64 << (i + 1)
-                );
-            }
-        }
-        let _ = writeln!(s, "mumoe_request_latency_us_bucket{{le=\"+Inf\"}} {cum}");
-        let _ = writeln!(
-            s,
-            "mumoe_request_latency_us_sum {}",
-            self.latency_sum_us.load(Ordering::Relaxed)
+        self.queue_wait.render_prometheus(
+            &mut s,
+            "mumoe_queue_wait_us",
+            "Time requests spent queued before execution pickup (us)",
         );
-        let _ = writeln!(s, "mumoe_request_latency_us_count {cum}");
+        self.ttft.render_prometheus(
+            &mut s,
+            "mumoe_ttft_us",
+            "Server-side time to first generated token (us)",
+        );
+        self.token_gap.render_prometheus(
+            &mut s,
+            "mumoe_inter_token_gap_us",
+            "Gap between consecutive tokens of a continuously decoded request (us)",
+        );
 
         // per-ρ-level decode families, `rho`-labelled
         let levels = self.level_stats();
@@ -746,6 +854,19 @@ impl Metrics {
         );
         m.insert("decode_prefill_us".into(), g(&self.decode_prefill_us));
         m.insert("decode_step_us".into(), g(&self.decode_step_us));
+        m.insert(
+            "queue_wait_mean_us".into(),
+            Json::Num(self.queue_wait.mean()),
+        );
+        m.insert("ttft_mean_us".into(), Json::Num(self.ttft.mean()));
+        m.insert(
+            "ttft_p50_us".into(),
+            Json::Num(self.ttft.percentile(50.0) as f64),
+        );
+        m.insert(
+            "inter_token_gap_mean_us".into(),
+            Json::Num(self.token_gap.mean()),
+        );
         let mut levels = std::collections::HashMap::new();
         for (rho, st) in self.level_stats() {
             levels.insert(
@@ -1042,5 +1163,102 @@ mod tests {
         m.record_queue_depth(9);
         m.record_queue_depth(5);
         assert_eq!(m.queue_peak.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn prometheus_families_have_exactly_one_type_line() {
+        let m = Metrics::new();
+        m.record_accept();
+        m.record_completion(500);
+        m.record_queue_wait(100);
+        m.record_ttft(300);
+        m.record_token_gap(50);
+        m.record_decode(0.6, 2, 8, 1_000, 900, 100, 9, 5);
+        m.record_fused_sweep(0.6, &[3, 1]);
+        let text = m.to_prometheus();
+        let mut seen = std::collections::HashSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let fam = rest.split_whitespace().next().unwrap().to_string();
+                assert!(seen.insert(fam.clone()), "duplicate # TYPE for {fam}\n{text}");
+            }
+        }
+        for fam in [
+            "mumoe_request_latency_us",
+            "mumoe_queue_wait_us",
+            "mumoe_ttft_us",
+            "mumoe_inter_token_gap_us",
+        ] {
+            assert!(seen.contains(fam), "missing # TYPE for {fam}\n{text}");
+        }
+    }
+
+    /// Conformance: the `+Inf` bucket, `_count` and `_sum` of a rendered
+    /// histogram family agree, and cumulative buckets never decrease.
+    fn assert_histo_conformant(text: &str, name: &str, want_count: u64, want_sum: u64) {
+        let inf = format!("{name}_bucket{{le=\"+Inf\"}} {want_count}");
+        assert!(text.contains(&inf), "{name}: missing `{inf}`\n{text}");
+        assert!(
+            text.contains(&format!("{name}_count {want_count}")),
+            "{name}: _count != +Inf bucket\n{text}"
+        );
+        assert!(
+            text.contains(&format!("{name}_sum {want_sum}")),
+            "{name}: bad _sum\n{text}"
+        );
+        let prefix = format!("{name}_bucket{{le=\"");
+        let mut prev = 0u64;
+        let mut bucket_lines = 0usize;
+        for line in text.lines().filter(|l| l.starts_with(&prefix)) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "buckets not cumulative: {line}\n{text}");
+            prev = v;
+            bucket_lines += 1;
+        }
+        assert!(bucket_lines >= 1, "{name}: no bucket lines\n{text}");
+        assert_eq!(prev, want_count, "{name}: last bucket is not the total");
+    }
+
+    #[test]
+    fn histogram_inf_count_and_sum_are_consistent() {
+        let m = Metrics::new();
+        m.record_completion(500);
+        m.record_completion(4_000);
+        m.record_queue_wait(120);
+        m.record_ttft(10);
+        m.record_ttft(90_000);
+        m.record_token_gap(7);
+        let text = m.to_prometheus();
+        assert_histo_conformant(&text, "mumoe_request_latency_us", 2, 4_500);
+        assert_histo_conformant(&text, "mumoe_queue_wait_us", 1, 120);
+        assert_histo_conformant(&text, "mumoe_ttft_us", 2, 90_010);
+        assert_histo_conformant(&text, "mumoe_inter_token_gap_us", 1, 7);
+        assert_eq!(m.ttft_stats(), (2, 90_010));
+        assert!(m.ttft_percentile_us(50.0) >= 10);
+        assert!(m.queue_wait_percentile_us(99.0) >= 120);
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn json_carries_ttft_and_queue_wait() {
+        let m = Metrics::new();
+        m.record_queue_wait(200);
+        m.record_ttft(1_000);
+        m.record_token_gap(40);
+        let j = m.to_json();
+        assert_eq!(j.req("queue_wait_mean_us").unwrap().as_f64(), Some(200.0));
+        assert_eq!(j.req("ttft_mean_us").unwrap().as_f64(), Some(1_000.0));
+        assert!(j.req("ttft_p50_us").unwrap().as_f64().unwrap() >= 1_000.0);
+        assert_eq!(
+            j.req("inter_token_gap_mean_us").unwrap().as_f64(),
+            Some(40.0)
+        );
     }
 }

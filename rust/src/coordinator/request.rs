@@ -171,6 +171,14 @@ pub struct Response {
     /// Window tokens whose K/V rows were seeded from the prefix store or
     /// a parked session instead of being recomputed.
     pub seeded_tokens: usize,
+    /// Time spent queued before a lane/batch picked the request up,
+    /// stamped by the serve loop (0 for rejected requests).
+    pub queue_wait_us: u64,
+    /// Time to first token: enqueue → first generated token. On the
+    /// drain path (whole batch executes, then replies) this equals
+    /// `latency_us`; the continuous loop stamps the first live
+    /// [`StepEvent`]'s wall-clock instead.
+    pub ttft_us: u64,
     /// Set if the request was shed by admission control.
     pub rejected: Option<String>,
 }
@@ -195,6 +203,8 @@ impl Response {
             rho_used: 0.0,
             prefilled_tokens: 0,
             seeded_tokens: 0,
+            queue_wait_us: 0,
+            ttft_us: 0,
             rejected: Some(reason.into()),
         }
     }
@@ -238,6 +248,8 @@ impl Response {
             rho_used: rho,
             prefilled_tokens: out.prefilled_tokens,
             seeded_tokens: out.seeded_tokens,
+            queue_wait_us: 0,
+            ttft_us: 0,
             rejected,
         }
     }

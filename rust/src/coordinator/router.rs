@@ -8,7 +8,8 @@ use crate::config::ServeConfig;
 use crate::kvstore::{valid_session_id, KvStore, SessionRegistry};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::moe::snap_rho;
-use crate::tensor::LayoutCache;
+use crate::tensor::{rho_milli, LayoutCache};
+use crate::trace::{AttrValue, FlightRecorder};
 use crate::util::error::Error;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -51,6 +52,11 @@ pub struct Router {
     /// Parked multi-turn sessions keyed by client-chosen id; admissions
     /// carrying `session` continue from (and re-park into) it.
     sessions: Arc<SessionRegistry>,
+    /// Per-request span recorder (`crate::trace`), sized by `[trace]`
+    /// config. The router opens each admitted request's timeline; the
+    /// serve loop spans its lifecycle phases and closes it. A disabled
+    /// recorder no-ops behind one relaxed atomic load.
+    recorder: Arc<FlightRecorder>,
 }
 
 impl Router {
@@ -64,6 +70,11 @@ impl Router {
             .kvstore
             .enabled
             .then(|| Arc::new(KvStore::new(cfg.kvstore.token_budget)));
+        let recorder = Arc::new(FlightRecorder::new(
+            cfg.trace.enabled,
+            cfg.trace.capacity,
+            cfg.trace.kernel_sample_every,
+        ));
         Ok(Router {
             cfg,
             seq_len,
@@ -74,6 +85,7 @@ impl Router {
             layout_cache,
             kv_store,
             sessions: Arc::new(SessionRegistry::new()),
+            recorder,
         })
     }
 
@@ -105,6 +117,11 @@ impl Router {
     /// Handle to the session registry.
     pub fn sessions(&self) -> Arc<SessionRegistry> {
         self.sessions.clone()
+    }
+
+    /// Handle to the per-request flight recorder.
+    pub fn recorder(&self) -> Arc<FlightRecorder> {
+        self.recorder.clone()
     }
 
     /// Admission with the config's decode defaults (`max_new` from
@@ -148,6 +165,11 @@ impl Router {
         reply: Option<Sender<Response>>,
     ) -> Result<Request, Box<Response>> {
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let t_admit = if self.recorder.enabled() {
+            self.recorder.now_us()
+        } else {
+            0
+        };
 
         if prompt.is_empty() {
             self.metrics.record_reject();
@@ -212,6 +234,22 @@ impl Router {
 
         self.metrics.record_accept();
         self.depth.fetch_add(1, Ordering::Release);
+        if self.recorder.enabled() {
+            // backdate the root to the start of admission so the admit
+            // span (and everything after) nests within it
+            self.recorder.begin_at(id, t_admit);
+            self.recorder.span(
+                id,
+                "admit",
+                None,
+                t_admit,
+                self.recorder.now_us(),
+                &[
+                    ("rho_milli", AttrValue::Num(rho_milli(snapped) as u64)),
+                    ("max_new", AttrValue::Num(max_new as u64)),
+                ],
+            );
+        }
         let mut req = Request::new(id, tokens, valid_len, snapped, domain, reply)
             .with_decode(max_new, plan.unwrap_or(self.cfg.decode.plan))
             .with_session(session);
@@ -443,6 +481,32 @@ mod tests {
         let a = r.admit("a", 0.5, "d", None).unwrap();
         let b = r.admit("b", 0.5, "d", None).unwrap();
         assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn admission_opens_a_trace_timeline() {
+        let r = router(10);
+        let req = r.admit("hello", 0.5, "d", None).unwrap();
+        let rec = r.recorder();
+        assert!(rec.enabled(), "tracing on by default");
+        let t = rec.timeline(req.id).expect("active timeline after admit");
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].phase, "admit");
+        assert!(t.spans[0].start_us >= t.begin_us, "admit nests in root");
+        // rejections never open a timeline
+        let rej = r.admit("", 0.5, "d", None).unwrap_err();
+        assert!(rec.timeline(rej.id).is_none());
+        // disabled tracing records nothing at admission
+        let mut cfg = ServeConfig {
+            queue_cap: 10,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            ..Default::default()
+        };
+        cfg.trace.enabled = false;
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        let req = r.admit("hello", 0.5, "d", None).unwrap();
+        assert!(r.recorder().is_empty());
+        assert!(r.recorder().timeline(req.id).is_none());
     }
 
     #[test]

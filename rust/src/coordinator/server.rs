@@ -36,6 +36,7 @@ use crate::decode::{DecodeOutput, LaneEvent, LanePool, LaneSeed, SessionResume};
 use crate::kvstore::{KvStore, SessionRegistry, SessionState};
 use crate::nn::Model;
 use crate::tensor::LayoutCache;
+use crate::trace::{AttrValue, FlightRecorder};
 use crate::util::error::Error;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -137,6 +138,7 @@ impl Server {
                 Arc<AtomicU64>,
                 Arc<Metrics>,
                 Arc<AtomicBool>,
+                Arc<FlightRecorder>,
             ) -> Result<(), Error>
             + Send
             + 'static,
@@ -149,6 +151,7 @@ impl Server {
             store: router.kv_store(),
             sessions: router.sessions(),
         };
+        let recorder = router.recorder();
 
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<usize, Error>>();
@@ -158,7 +161,7 @@ impl Server {
 
         let join = std::thread::Builder::new()
             .name("mumoe-serve".into())
-            .spawn(move || thread(cfg, cache, kv, rx, ready_tx, depth, metrics2, stop2))
+            .spawn(move || thread(cfg, cache, kv, rx, ready_tx, depth, metrics2, stop2, recorder))
             .expect("spawn serve thread");
 
         match ready_rx.recv() {
@@ -209,6 +212,7 @@ fn snapshot_occupancy(
     metrics.set_kvstore_gauges(entries, tokens, evictions, sessions.len());
 }
 
+#[allow(clippy::too_many_arguments)] // the serve thread's full shared surface
 fn serve_thread<E: Engine>(
     cfg: ServeConfig,
     cache: Arc<Mutex<LayoutCache>>,
@@ -218,6 +222,7 @@ fn serve_thread<E: Engine>(
     depth: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    recorder: Arc<FlightRecorder>,
 ) -> Result<(), Error> {
     // --- startup: all backend state lives and dies on this thread ------
     let cache_gauges = cache.clone();
@@ -235,7 +240,7 @@ fn serve_thread<E: Engine>(
     let batch_capacity = prepared.batch_capacity;
 
     pump_batches(&cfg, batch_capacity, &rx, &stop, |_batcher, batch| {
-        run_batch(&mut engine, batch, batch_capacity, &depth, &metrics);
+        run_batch(&mut engine, batch, batch_capacity, &depth, &metrics, &recorder);
         snapshot_occupancy(&metrics, &cache_gauges, &kv.store, &kv.sessions);
     });
     Ok(())
@@ -304,6 +309,7 @@ fn run_batch<E: Engine>(
     capacity: usize,
     depth: &AtomicU64,
     metrics: &Metrics,
+    recorder: &FlightRecorder,
 ) {
     let rho = batch.rho;
     // Release pairs with the router's Acquire load — see the depth field's
@@ -318,6 +324,7 @@ fn run_batch<E: Engine>(
         .partition(|r| !r.cancel.is_cancelled());
     for r in gone {
         metrics.record_cancel();
+        recorder.finish(r.id, "cancelled");
         if let Some(reply) = r.reply {
             let _ = reply.send(Response::cancelled_before_start(r.id, rho));
         }
@@ -343,6 +350,11 @@ fn run_batch<E: Engine>(
         .collect();
 
     let t0 = Instant::now();
+    let t_exec_begin = if recorder.enabled() {
+        recorder.now_us()
+    } else {
+        0
+    };
     let result = engine.execute(batch).and_then(|responses| {
         if responses.len() == meta.len() {
             Ok(responses)
@@ -373,7 +385,35 @@ fn run_batch<E: Engine>(
                 debug_assert_eq!(resp.id, id, "engine must keep request order");
                 resp.latency_us = enqueued_at.elapsed().as_micros() as u64;
                 resp.batch_size = n;
+                // drained batches reply only after the whole batch ran, so
+                // the first token reaches the client at delivery: TTFT is
+                // the full latency here (the continuous loop stamps the
+                // first live token instead)
+                resp.queue_wait_us = t0.saturating_duration_since(enqueued_at).as_micros() as u64;
+                resp.ttft_us = resp.latency_us;
+                metrics.record_queue_wait(resp.queue_wait_us);
+                metrics.record_ttft(resp.ttft_us);
                 metrics.record_completion(resp.latency_us);
+                if recorder.enabled() {
+                    let t_exec_end = recorder.now_us();
+                    recorder.span(
+                        id,
+                        "queue_wait",
+                        None,
+                        t_exec_begin.saturating_sub(resp.queue_wait_us),
+                        t_exec_begin,
+                        &[],
+                    );
+                    recorder.span(
+                        id,
+                        "exec",
+                        None,
+                        t_exec_begin,
+                        t_exec_end,
+                        &[("tokens", AttrValue::Num(resp.steps as u64))],
+                    );
+                    recorder.finish(id, "done");
+                }
                 if let Some(stream) = stream {
                     // drained batches finished before delivery: replay the
                     // per-token events so streams concatenate to
@@ -394,6 +434,7 @@ fn run_batch<E: Engine>(
             crate::error!("batch execution failed: {e}");
             for (id, _, reply, _) in meta {
                 metrics.record_reject();
+                recorder.finish(id, "rejected");
                 if let Some(reply) = reply {
                     let _ = reply.send(Response::rejected(id, format!("exec: {e}")));
                 }
@@ -412,6 +453,7 @@ fn run_batch<E: Engine>(
 /// batch *seeds a persistent lane pool* instead of draining to
 /// completion: [`run_pool`] keeps refilling freed lanes from the same-ρ
 /// queue until both the pool and the queue are empty.
+#[allow(clippy::too_many_arguments)] // the serve thread's full shared surface
 fn serve_thread_continuous(
     cfg: ServeConfig,
     cache: Arc<Mutex<LayoutCache>>,
@@ -421,6 +463,7 @@ fn serve_thread_continuous(
     depth: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    recorder: Arc<FlightRecorder>,
 ) -> Result<(), Error> {
     let model = match host_model(&cfg) {
         Ok(m) => {
@@ -444,6 +487,7 @@ fn serve_thread_continuous(
             rx: &rx,
             depth: &depth,
             metrics: &metrics,
+            recorder: &recorder,
         };
         run_pool(&mut ctx, batch);
     });
@@ -465,6 +509,8 @@ struct ContinuousCtx<'a> {
     rx: &'a Receiver<Request>,
     depth: &'a AtomicU64,
     metrics: &'a Metrics,
+    /// Per-request span recorder (a single relaxed load when disabled).
+    recorder: &'a FlightRecorder,
 }
 
 /// Delivery-side state of one occupied lane (the pool holds the compute
@@ -479,6 +525,14 @@ struct LiveLane {
     /// lane parks its final state only if the generation still matches
     /// (so a `DELETE /session/:id` mid-flight wins — satellite ABA guard).
     session: Option<(String, u64)>,
+    /// Time spent queued before this lane picked the request up.
+    queue_wait_us: u64,
+    /// Server-side TTFT, stamped at the lane's first `Token` event (0
+    /// until then; lanes that never emit a token — e.g. an immediate EOS
+    /// stop — fall back to full latency at delivery).
+    ttft_us: u64,
+    /// Wall-clock of the most recent `Token` event (inter-token gaps).
+    last_token_at: Option<Instant>,
 }
 
 /// Drive one lane pool at one snapped ρ until it drains. Per sweep:
@@ -497,6 +551,8 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
     let rho = seed.rho;
     let capacity = ctx.cfg.decode.batch_size;
     let mut pool = LanePool::new(capacity);
+    // 0 when tracing is disabled, so unsampled sweeps stay branch-only
+    pool.set_kernel_sampling(ctx.recorder.kernel_sample_every());
     let mut live: Vec<Option<LiveLane>> = (0..capacity).map(|_| None).collect();
     for req in seed.requests {
         admit_lane(ctx, &mut pool, &mut live, req, rho, false);
@@ -532,6 +588,9 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
                 let mut resp = Response::cancelled(lane.id, rho, &partial);
                 resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
                 resp.batch_size = capacity;
+                resp.queue_wait_us = lane.queue_wait_us;
+                resp.ttft_us = lane.ttft_us;
+                ctx.recorder.finish(lane.id, "cancelled");
                 if let Some(reply) = lane.reply {
                     let _ = reply.send(resp);
                 }
@@ -560,10 +619,21 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
         // matrix-major observability: how wide this sweep's execution
         // groups were (1 = lane-major fallback, > 1 = fused batch)
         ctx.metrics.record_fused_sweep(rho, pool.last_sweep_groups());
+        // per-request phase spans for this sweep (+ the sampled kernel
+        // split when the cadence hit)
+        if ctx.recorder.enabled() {
+            let sample = pool.take_kernel_sample();
+            ctx.recorder.record_sweep(
+                |slot| live[slot].as_ref().map(|l| l.id),
+                pool.last_sweep_lane_steps(),
+                sample,
+            );
+        }
         for ev in events {
             match ev {
                 LaneEvent::Token { slot, index, token } => {
                     if let Some(lane) = live[slot].as_mut() {
+                        note_token(ctx, lane);
                         if let Some(stream) = &lane.stream {
                             let gone = stream
                                 .send(StepEvent {
@@ -595,6 +665,25 @@ fn run_pool(ctx: &mut ContinuousCtx<'_>, seed: DecodeBatch) {
     snapshot_occupancy(ctx.metrics, ctx.cache, ctx.store, ctx.sessions);
 }
 
+/// Stamp TTFT / inter-token-gap bookkeeping for one live `Token` event.
+/// Fires for every generated token — streaming and non-streaming lanes
+/// alike — so server-side TTFT reflects when the token *existed*, not
+/// when a client chose to read it.
+fn note_token(ctx: &ContinuousCtx<'_>, lane: &mut LiveLane) {
+    let now = Instant::now();
+    match lane.last_token_at {
+        None => {
+            lane.ttft_us = now.saturating_duration_since(lane.enqueued_at).as_micros() as u64;
+            ctx.metrics.record_ttft(lane.ttft_us);
+        }
+        Some(prev) => {
+            let gap = now.saturating_duration_since(prev).as_micros() as u64;
+            ctx.metrics.record_token_gap(gap);
+        }
+    }
+    lane.last_token_at = Some(now);
+}
+
 /// Admit one popped request into a free lane (or shed it terminally if it
 /// was cancelled while queued — the lane stays free for the next pop).
 fn admit_lane(
@@ -611,11 +700,14 @@ fn admit_lane(
     debug_assert!((req.rho - rho).abs() < 1e-9, "pool/request rho mismatch");
     if req.cancel.is_cancelled() {
         ctx.metrics.record_cancel();
+        ctx.recorder.finish(req.id, "cancelled");
         if let Some(reply) = req.reply.take() {
             let _ = reply.send(Response::cancelled_before_start(req.id, rho));
         }
         return;
     }
+    let queue_wait_us = req.enqueued_at.elapsed().as_micros() as u64;
+    ctx.metrics.record_queue_wait(queue_wait_us);
     // session continuation: the lane decodes `parked window ++ new turn`,
     // pinned to the parked layouts and seeded with the parked rows (full
     // prefill of only the new turn). A fresh/unknown session id just
@@ -651,6 +743,18 @@ fn admit_lane(
     if into_running {
         ctx.metrics.record_admitted_running(rho);
     }
+    if ctx.recorder.enabled() {
+        // the wait ended just now, when the lane picked the request up
+        let now = ctx.recorder.now_us();
+        ctx.recorder.span(
+            req.id,
+            "queue_wait",
+            Some(slot),
+            now.saturating_sub(queue_wait_us),
+            now,
+            &[],
+        );
+    }
     live[slot] = Some(LiveLane {
         id: req.id,
         enqueued_at: req.enqueued_at,
@@ -658,7 +762,11 @@ fn admit_lane(
         stream: req.stream.take(),
         cancel: req.cancel.clone(),
         session,
+        queue_wait_us,
+        ttft_us: 0,
+        last_token_at: None,
     });
+    crate::debug!("lane admitted"; id = req.id, slot = slot, queue_wait_us = queue_wait_us);
 }
 
 /// Re-park a session lane's final state under its id, if the slot still
@@ -710,7 +818,40 @@ fn finish_lane(
     resp.latency_us = lane.enqueued_at.elapsed().as_micros() as u64;
     // occupancy telemetry: the lane-pool size this request rode in
     resp.batch_size = capacity;
+    resp.queue_wait_us = lane.queue_wait_us;
+    // a lane whose only step EOS-stopped never emits a Token event; its
+    // first token reached the client at delivery, i.e. full latency
+    resp.ttft_us = if lane.last_token_at.is_some() {
+        lane.ttft_us
+    } else {
+        resp.latency_us
+    };
     ctx.metrics.record_completion(resp.latency_us);
+    if ctx.recorder.enabled() {
+        if let (Some(stream_end), true) = (lane.last_token_at, lane.stream.is_some()) {
+            // one span covering the live token-delivery window (first
+            // Token event → last), rather than a micro-span per token
+            let now_us = ctx.recorder.now_us();
+            let enq_us = now_us.saturating_sub(lane.enqueued_at.elapsed().as_micros() as u64);
+            let end_us = now_us.saturating_sub(stream_end.elapsed().as_micros() as u64);
+            ctx.recorder.span(
+                lane.id,
+                "stream",
+                None,
+                enq_us + lane.ttft_us,
+                end_us,
+                &[("tokens", AttrValue::Num(output.steps.len() as u64))],
+            );
+        }
+        ctx.recorder.finish(lane.id, "done");
+    }
+    crate::debug!(
+        "lane finished";
+        id = lane.id,
+        steps = resp.steps,
+        latency_us = resp.latency_us,
+        ttft_us = resp.ttft_us,
+    );
     if let Some(reply) = lane.reply {
         let _ = reply.send(resp);
     }

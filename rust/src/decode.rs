@@ -86,6 +86,7 @@ use crate::moe::{self, layouts_for};
 use crate::nn::{FixedLayouts, KvCache, Model, StepBatchScratch, StepScratch};
 use crate::pruning::MaskPlan;
 use crate::tensor::{fnv1a64, LayoutCache};
+use crate::trace::{StepKind, StepProfile, SweepLaneStep};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
@@ -262,6 +263,12 @@ struct Lane {
     park: bool,
     prefilled_tokens: usize,
     seeded_tokens: usize,
+    /// Classification of the most recent step (`crate::trace` phase
+    /// reporting; the fused sweep path classifies its members itself).
+    last_kind: StepKind,
+    /// Seeded / prefilled window-token deltas of the most recent step.
+    last_seeded: usize,
+    last_prefilled: usize,
 }
 
 impl Lane {
@@ -287,6 +294,9 @@ impl Lane {
             park: false,
             prefilled_tokens: 0,
             seeded_tokens: 0,
+            last_kind: StepKind::Step,
+            last_seeded: 0,
+            last_prefilled: 0,
         }
     }
 
@@ -303,6 +313,23 @@ impl Lane {
         plan: MaskPlan,
         cache: &mut Option<&mut LayoutCache>,
     ) -> i32 {
+        self.step_profiled(model, step, rho, plan, cache, None)
+    }
+
+    /// [`Lane::step`] with optional sampled kernel attribution: an
+    /// incremental step's forward splits its time into the profile's
+    /// linear/attention/other buckets. Prefill-class forwards (and the
+    /// kv-disabled path) are not instrumented kernel-by-kernel, so their
+    /// whole elapsed time lands in `other_us`.
+    fn step_profiled(
+        &mut self,
+        model: &Model,
+        step: usize,
+        rho: f64,
+        plan: MaskPlan,
+        cache: &mut Option<&mut LayoutCache>,
+        mut prof: Option<&mut StepProfile>,
+    ) -> i32 {
         let seq = model.cfg.max_seq_len;
         let start = self.tokens.len().saturating_sub(seq);
         let window = &self.tokens[start..];
@@ -310,6 +337,10 @@ impl Lane {
         // pinned lanes (session continuations) decode entirely under the
         // layouts they were admitted with: no refresh ever runs
         let refreshed = !self.pinned && plan.refreshes_at(step);
+        let cold = self.prev_start == usize::MAX;
+        let slide = !cold && start != self.prev_start;
+        let seeded_before = self.seeded_tokens;
+        let prefilled_before = self.prefilled_tokens;
         let t0 = Instant::now();
         if refreshed {
             let (h0, m0) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
@@ -404,7 +435,13 @@ impl Lane {
                     let newest = *window.last().expect("non-empty window");
                     let scratch = self.scratch.as_mut().expect("kv lanes carry scratch");
                     (
-                        model.forward_step_with(newest, &self.layouts, kv, scratch),
+                        model.forward_step_profiled(
+                            newest,
+                            &self.layouts,
+                            kv,
+                            scratch,
+                            prof.as_deref_mut(),
+                        ),
                         false,
                     )
                 }
@@ -419,6 +456,29 @@ impl Lane {
             self.prefill_us += elapsed_us;
         } else {
             self.step_us += elapsed_us;
+        }
+        self.last_seeded = self.seeded_tokens - seeded_before;
+        self.last_prefilled = self.prefilled_tokens - prefilled_before;
+        // cold full-window work is the lane's prefill even when selection
+        // also ran (every plan refreshes at step 0); Refresh is reserved
+        // for re-selections after the lane is warm
+        self.last_kind = if !full_window {
+            StepKind::Step
+        } else if refreshed && !cold {
+            StepKind::Refresh
+        } else if slide {
+            StepKind::Slide
+        } else if self.last_seeded > 0 {
+            StepKind::SeededPrefill
+        } else {
+            StepKind::Prefill
+        };
+        // only the incremental kv branch splits its time internally
+        let inline_profiled = !full_window && self.kv.is_some();
+        if let Some(p) = prof {
+            if !inline_profiled {
+                p.other_us += elapsed_us;
+            }
         }
         let token = argmax(&logits);
         self.steps.push(StepTrace {
@@ -593,6 +653,15 @@ pub struct LanePool {
     /// Per-group fused widths of the most recent sweep (see
     /// [`LanePool::last_sweep_groups`]).
     last_groups: Vec<usize>,
+    /// Per-lane step records of the most recent sweep (see
+    /// [`LanePool::last_sweep_lane_steps`]).
+    last_lane_steps: Vec<SweepLaneStep>,
+    /// Sample kernel attribution every N sweeps (0 = never, the default).
+    kernel_sample_every: u64,
+    sweep_counter: u64,
+    /// The most recent sampled sweep's (stepped lanes, kernel split),
+    /// consumed by [`LanePool::take_kernel_sample`].
+    kernel_sample: Option<(usize, StepProfile)>,
 }
 
 /// Identity of a lane's per-linear layouts for fused-group formation: an
@@ -655,6 +724,10 @@ impl LanePool {
             fuse: true,
             batch_scratch: None,
             last_groups: Vec::new(),
+            last_lane_steps: Vec::new(),
+            kernel_sample_every: 0,
+            sweep_counter: 0,
+            kernel_sample: None,
         }
     }
 
@@ -691,6 +764,30 @@ impl LanePool {
     /// metrics histogram and the fused-sweep bench's structural assertion.
     pub fn last_sweep_groups(&self) -> &[usize] {
         &self.last_groups
+    }
+
+    /// Per-lane step records of the most recent [`LanePool::sweep`]: slot,
+    /// step kind (prefill / seeded prefill / refresh / slide / step /
+    /// fused step), elapsed time, fused-group width and the
+    /// seeded/prefilled token split. Feeds the serve loop's per-request
+    /// span recording ([`crate::trace::FlightRecorder::record_sweep`]).
+    /// Zero-step finishes contribute nothing.
+    pub fn last_sweep_lane_steps(&self) -> &[SweepLaneStep] {
+        &self.last_lane_steps
+    }
+
+    /// Sample kernel-time attribution every `every` sweeps (0 = never,
+    /// the default). A sampled sweep runs its forwards through the
+    /// profiled variants (bit-identical outputs, a handful of extra
+    /// timer reads); every other sweep pays one integer test.
+    pub fn set_kernel_sampling(&mut self, every: u64) {
+        self.kernel_sample_every = every;
+    }
+
+    /// The most recent sweep's (stepped lanes, kernel split) if that
+    /// sweep was sampled; unsampled sweeps clear it. Consuming resets it.
+    pub fn take_kernel_sample(&mut self) -> Option<(usize, StepProfile)> {
+        self.kernel_sample.take()
     }
 
     /// Bookkeeping for a slot going empty (evict or finish).
@@ -801,6 +898,14 @@ impl LanePool {
         cache: &mut Option<&mut LayoutCache>,
     ) -> Vec<LaneEvent> {
         self.last_groups.clear();
+        self.last_lane_steps.clear();
+        self.kernel_sample = None;
+        self.sweep_counter += 1;
+        // sampled sweeps accumulate a kernel-time split; profiled and
+        // unprofiled forwards are bit-identical
+        let mut profile = (self.kernel_sample_every > 0
+            && self.sweep_counter % self.kernel_sample_every == 0)
+            .then(StepProfile::default);
         let n_slots = self.slots.len();
         // token produced by this sweep's step, per slot (None = no step:
         // empty slot or a zero-step lane finishing below)
@@ -869,7 +974,13 @@ impl LanePool {
                 }
             }
             let t0 = Instant::now();
-            let logits = model.forward_step_batch_with(&newest, &layouts, &mut kvs, scratch);
+            let logits = model.forward_step_batch_profiled(
+                &newest,
+                &layouts,
+                &mut kvs,
+                scratch,
+                profile.as_mut(),
+            );
             // one batch wall time, split evenly: each lane's step-time
             // share sums (with its trace) to the same partition the
             // per-lane path records
@@ -888,6 +999,14 @@ impl LanePool {
                 });
                 pl.step += 1;
                 stepped[slot] = Some(token);
+                self.last_lane_steps.push(SweepLaneStep {
+                    slot,
+                    kind: StepKind::Fused,
+                    elapsed_us: share,
+                    width: group.len(),
+                    seeded: 0,
+                    prefilled: 0,
+                });
             }
             self.last_groups.push(group.len());
         }
@@ -905,10 +1024,23 @@ impl LanePool {
             if pl.step >= pl.max_new {
                 continue;
             }
-            let token = pl.lane.step(model, pl.step, rho, pl.plan, cache);
+            let token =
+                pl.lane.step_profiled(model, pl.step, rho, pl.plan, cache, profile.as_mut());
             pl.step += 1;
             stepped[slot] = Some(token);
             self.last_groups.push(1);
+            self.last_lane_steps.push(SweepLaneStep {
+                slot,
+                kind: pl.lane.last_kind,
+                elapsed_us: pl.lane.steps.last().map_or(0, |s| s.elapsed_us),
+                width: 1,
+                seeded: pl.lane.last_seeded,
+                prefilled: pl.lane.last_prefilled,
+            });
+        }
+        if let Some(p) = profile {
+            let lanes = stepped.iter().filter(|s| s.is_some()).count();
+            self.kernel_sample = Some((lanes, p));
         }
 
         // deliver events in slot order, exactly as the lane-major sweep
@@ -1749,5 +1881,118 @@ mod tests {
         let reparked = cont.parked.expect("continuation re-parks");
         assert_eq!(reparked.tokens, cont.tokens);
         assert_eq!(reparked.entry.len(), cont.tokens.len() - 1);
+    }
+
+    // ---- sweep step classification + kernel sampling -----------------------
+
+    #[test]
+    fn sweep_lane_steps_classify_prefill_fused_and_step() {
+        let m = tiny_model();
+        let mut cache = LayoutCache::new(64);
+        let mut copt = Some(&mut cache);
+        let prompt: &[i32] = &[9, 1, 7];
+        let mut pool = LanePool::new(2);
+        pool.admit(&m, prompt, 3, MaskPlan::PruneOnce, true);
+        pool.admit(&m, prompt, 3, MaskPlan::PruneOnce, true);
+        pool.sweep(&m, 0.5, false, &mut copt);
+        let steps = pool.last_sweep_lane_steps();
+        assert_eq!(steps.len(), 2);
+        assert!(steps.iter().all(|s| s.kind == StepKind::Prefill));
+        assert!(steps.iter().all(|s| s.prefilled == prompt.len() && s.seeded == 0));
+        assert!(steps.iter().all(|s| s.width == 1));
+        // post-prefill, the shared-cache mates fuse
+        pool.sweep(&m, 0.5, false, &mut copt);
+        let steps = pool.last_sweep_lane_steps();
+        assert_eq!(steps.len(), 2);
+        assert!(
+            steps.iter().all(|s| s.kind == StepKind::Fused && s.width == 2),
+            "shared-cache mates fuse: {steps:?}"
+        );
+        // a lone lane's incremental step stays on the per-lane path
+        let mut pool = LanePool::new(1);
+        pool.admit(&m, prompt, 3, MaskPlan::PruneOnce, true);
+        pool.sweep(&m, 0.5, false, &mut copt);
+        pool.sweep(&m, 0.5, false, &mut copt);
+        let steps = pool.last_sweep_lane_steps();
+        assert_eq!(steps.len(), 1);
+        assert_eq!((steps[0].kind, steps[0].width), (StepKind::Step, 1));
+    }
+
+    #[test]
+    fn sweep_lane_steps_classify_refresh_and_seeded_prefill() {
+        let m = tiny_model();
+        let mut none = None;
+        let mut pool = LanePool::new(1);
+        pool.admit(&m, &[3, 1, 4, 1], 4, MaskPlan::Refresh(2), true);
+        // step 0 refreshes too, but cold full-window work is Prefill
+        pool.sweep(&m, 0.5, false, &mut none);
+        assert_eq!(pool.last_sweep_lane_steps()[0].kind, StepKind::Prefill);
+        pool.sweep(&m, 0.5, false, &mut none);
+        assert_eq!(pool.last_sweep_lane_steps()[0].kind, StepKind::Step);
+        // step 2: Refresh(2) re-selects on a warm lane
+        pool.sweep(&m, 0.5, false, &mut none);
+        assert_eq!(pool.last_sweep_lane_steps()[0].kind, StepKind::Refresh);
+
+        // a warm store admission seeds its prefix: SeededPrefill
+        let prompt: &[i32] = &[5, 11, 23, 47];
+        let store = Arc::new(KvStore::new(4096));
+        let mut cache = LayoutCache::new(64);
+        let seed = || LaneSeed {
+            store: Some(store.clone()),
+            resume: None,
+            park: false,
+        };
+        drain_seeded(&m, prompt, 3, MaskPlan::PruneOnce, &mut cache, seed());
+        let mut pool = LanePool::new(1);
+        pool.admit_with(&m, prompt, 3, MaskPlan::PruneOnce, true, seed());
+        let mut copt = Some(&mut cache);
+        pool.sweep(&m, 0.5, false, &mut copt);
+        let st = pool.last_sweep_lane_steps()[0];
+        assert_eq!(st.kind, StepKind::SeededPrefill);
+        assert_eq!((st.seeded, st.prefilled), (3, 1));
+    }
+
+    #[test]
+    fn kernel_sampling_profiles_every_nth_sweep_only() {
+        let m = tiny_model();
+        let mut cache = LayoutCache::new(64);
+        let mut copt = Some(&mut cache);
+        let prompt: &[i32] = &[9, 1, 7];
+        let mut pool = LanePool::new(2);
+        pool.set_kernel_sampling(2);
+        pool.admit(&m, prompt, 4, MaskPlan::PruneOnce, true);
+        pool.admit(&m, prompt, 4, MaskPlan::PruneOnce, true);
+        pool.sweep(&m, 0.5, false, &mut copt); // sweep 1: unsampled
+        assert!(pool.take_kernel_sample().is_none());
+        pool.sweep(&m, 0.5, false, &mut copt); // sweep 2: sampled (fused)
+        let (lanes, prof) = pool.take_kernel_sample().expect("sampled sweep");
+        assert_eq!(lanes, 2);
+        // structural only — timers on a debug-profile tiny model may read 0
+        let _ = prof.total_us();
+        assert!(pool.take_kernel_sample().is_none(), "consumed");
+        pool.sweep(&m, 0.5, false, &mut copt); // sweep 3: unsampled again
+        assert!(pool.take_kernel_sample().is_none());
+    }
+
+    #[test]
+    fn kernel_sampling_is_output_transparent() {
+        let m = tiny_model();
+        let prompt: &[i32] = &[1, 2, 3];
+        let run = |every: u64| {
+            let mut pool = LanePool::new(1);
+            pool.set_kernel_sampling(every);
+            pool.admit(&m, prompt, 5, MaskPlan::PruneOnce, true);
+            let mut none = None;
+            let mut out = None;
+            while !pool.is_idle() {
+                for ev in pool.sweep(&m, 0.5, false, &mut none) {
+                    if let LaneEvent::Done { output, .. } = ev {
+                        out = Some(output);
+                    }
+                }
+            }
+            out.expect("drained")
+        };
+        assert_outputs_identical("sampled vs unsampled", &run(1), &run(0));
     }
 }

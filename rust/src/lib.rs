@@ -34,6 +34,7 @@
 //! decode                                     host decode engine (mask-plan reuse)
 //! kvstore                                    cross-request prefix KV store + sessions
 //! flops, eval                                analytics + evaluators
+//! trace                                      span recorder + flight recorder
 //! runtime                                    PJRT artifact execution
 //! coordinator                                router/batcher/scheduler/server
 //! ```
@@ -55,6 +56,7 @@ pub mod pruning;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type (see [`util::error::Error`]).

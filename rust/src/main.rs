@@ -120,6 +120,14 @@ const SERVE_SPEC: &[OptSpec] = &[
          replaying a trace",
         "",
     ),
+    flag("trace", "force the request flight recorder on (default)"),
+    flag("no-trace", "disable request tracing (allocation-free hot path)"),
+    opt("trace-capacity", "flight-recorder ring size (completed requests)", "64"),
+    opt(
+        "trace-kernel-every",
+        "sample kernel attribution every Nth sweep (0 = never)",
+        "0",
+    ),
     opt("config", "optional mumoe.toml to load first", ""),
 ];
 
@@ -190,6 +198,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     if a.given("http") {
         cfg.http_addr = a.req("http")?.to_string();
     }
+    cfg.trace.enabled = flag_pair(&a, "trace", "no-trace", cfg.trace.enabled)?;
+    if a.given("trace-capacity") {
+        cfg.trace.capacity = a.get_usize("trace-capacity")?;
+    }
+    if a.given("trace-kernel-every") {
+        cfg.trace.kernel_sample_every = a.get_u64("trace-kernel-every")?;
+    }
     cfg.validate()?;
 
     if !cfg.http_addr.is_empty() {
@@ -228,6 +243,12 @@ const GEN_SPEC: &[OptSpec] = &[
         "device",
         "decode through the PJRT artifact session instead of the host \
          engine (needs --features pjrt; re-prunes every step in-graph)",
+    ),
+    opt(
+        "trace-out",
+        "write a Chrome trace-event JSON (Perfetto-loadable) of the \
+         decode to this file (host engine; drives the lane-pool path)",
+        "",
     ),
 ];
 
@@ -278,17 +299,38 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     let prompt_len = prompt_ids.len();
     let t0 = std::time::Instant::now();
 
-    let (tokens, steps, prefill_us, step_us) = if a.flag("stream") {
+    let trace_out = a
+        .get("trace-out")
+        .filter(|s| !s.is_empty())
+        .map(str::to_string);
+    let (tokens, steps, prefill_us, step_us) = if a.flag("stream") || trace_out.is_some() {
         // stream mode: drive the continuous lane pool directly and print
         // each token as its decode step finishes (token-identical to the
-        // batch path below — both run the same Lane::step)
+        // batch path below — both run the same Lane::step). --trace-out
+        // rides this path too, because the pool is what exposes the
+        // per-sweep lane steps the flight recorder turns into spans.
         use mumoe::decode::{LaneEvent, LanePool};
+        use mumoe::trace::{chrome_trace, FlightRecorder};
         use std::io::Write;
 
-        print!("{}", tok.decode(&prompt_ids));
-        std::io::stdout().flush().ok();
+        let streaming = a.flag("stream");
+        // single-request CLI decode: one trace timeline, id 1, with
+        // kernel attribution sampled on every sweep
+        let recorder = trace_out.as_ref().map(|_| FlightRecorder::new(true, 8, 1));
+        if streaming {
+            print!("{}", tok.decode(&prompt_ids));
+            std::io::stdout().flush().ok();
+        }
         let mut pool = LanePool::new(1);
+        if let Some(rec) = &recorder {
+            pool.set_kernel_sampling(rec.kernel_sample_every());
+            rec.begin(1);
+        }
+        let t_admit = recorder.as_ref().map(|r| r.now_us());
         pool.admit(&model, &prompt_ids, n_new, plan, kv);
+        if let (Some(rec), Some(t0)) = (&recorder, t_admit) {
+            rec.span(1, "admit", None, t0, rec.now_us(), &[]);
+        }
         let mut done = None;
         while done.is_none() {
             let mut guard = cache.lock().expect("cache lock");
@@ -296,15 +338,35 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
             for ev in pool.sweep(&model, rho, true, &mut copt) {
                 match ev {
                     LaneEvent::Token { token, .. } => {
-                        print!("{}", tok.decode(&[token]));
-                        std::io::stdout().flush().ok();
+                        if streaming {
+                            print!("{}", tok.decode(&[token]));
+                            std::io::stdout().flush().ok();
+                        }
                     }
                     LaneEvent::Done { output, .. } => done = Some(output),
                 }
             }
+            if let Some(rec) = &recorder {
+                let sample = pool.take_kernel_sample();
+                rec.record_sweep(|_| Some(1), pool.last_sweep_lane_steps(), sample);
+            }
         }
-        println!();
+        if streaming {
+            println!();
+        }
         let out = done.expect("lane finished");
+        if !streaming {
+            let mut text_ids = prompt_ids.clone();
+            text_ids.extend_from_slice(out.new_tokens());
+            println!("{}", tok.decode(&text_ids));
+        }
+        if let (Some(rec), Some(path)) = (&recorder, &trace_out) {
+            rec.finish(1, "done");
+            let json = chrome_trace(&rec.last(1), &rec.kernel_samples());
+            std::fs::write(path, json.dump())
+                .map_err(|e| Error::config(format!("write {path}: {e}")))?;
+            eprintln!("[trace written to {path}]");
+        }
         (
             out.new_tokens().to_vec(),
             out.steps.len(),

@@ -29,11 +29,13 @@ use crate::tensor::{
     layernorm_row_into, layernorm_rows, log_softmax, matmul_tn_sparse_auto,
     matmul_tn_sparse_auto_into, matvec_nt_sparse_into, relu, Mat, RowSparse,
 };
+use crate::trace::StepProfile;
 use crate::util::error::Error;
 pub use kv::KvCache;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Process-unique id generator for weight-set identity (see
 /// [`Model::weights_id`]). Starts at 1 so 0 can serve as a "no model"
@@ -57,6 +59,57 @@ pub enum PruneMode {
 /// Per-linear compressed layouts for a fixed-selection forward — what the
 /// decode engine reuses across steps (see [`Model::forward_fixed`]).
 pub type FixedLayouts = HashMap<String, Arc<RowSparse>>;
+
+/// Lap timer behind the sampled kernel-attribution forwards
+/// ([`Model::forward_step_profiled`] and the batch variant): constructed
+/// only when a [`StepProfile`] is being filled, so the unprofiled step
+/// path never reads the clock.
+struct KernelLaps<'a> {
+    prof: &'a mut StepProfile,
+    mark: Instant,
+}
+
+impl<'a> KernelLaps<'a> {
+    fn new(prof: &'a mut StepProfile) -> KernelLaps<'a> {
+        KernelLaps {
+            prof,
+            mark: Instant::now(),
+        }
+    }
+
+    /// Microseconds since the previous mark, advancing the mark.
+    fn lap_us(&mut self) -> u64 {
+        let now = Instant::now();
+        let us = now.duration_since(self.mark).as_micros() as u64;
+        self.mark = now;
+        us
+    }
+
+    fn linear(&mut self) {
+        let us = self.lap_us();
+        self.prof.linear_us += us;
+    }
+
+    fn attention(&mut self) {
+        let us = self.lap_us();
+        self.prof.attention_us += us;
+    }
+
+    fn other(&mut self) {
+        let us = self.lap_us();
+        self.prof.other_us += us;
+    }
+}
+
+/// Charge the time since the last lap to one [`StepProfile`] bucket, iff
+/// the forward is being profiled (`$laps` is an `Option<KernelLaps>`).
+macro_rules! lap {
+    ($laps:expr, $bucket:ident) => {
+        if let Some(l) = $laps.as_mut() {
+            l.$bucket();
+        }
+    };
+}
 
 /// Reusable per-lane row buffers for [`Model::forward_step_with`].
 ///
@@ -551,6 +604,23 @@ impl Model {
         kv: &mut KvCache,
         s: &mut StepScratch,
     ) -> Vec<f32> {
+        self.forward_step_profiled(token, layouts, kv, s, None)
+    }
+
+    /// [`Model::forward_step_with`] with optional sampled kernel
+    /// attribution: when `prof` is `Some`, the step's wall time is split
+    /// into the profile's linear / attention / other buckets
+    /// ([`crate::trace::StepProfile`]) as it runs. `None` skips every
+    /// clock read. Profiling only observes time — outputs are
+    /// bit-identical either way.
+    pub fn forward_step_profiled(
+        &self,
+        token: i32,
+        layouts: &FixedLayouts,
+        kv: &mut KvCache,
+        s: &mut StepScratch,
+        prof: Option<&mut StepProfile>,
+    ) -> Vec<f32> {
         let cfg = &self.cfg;
         let pos = kv.len();
         assert!(pos >= 1, "forward_step needs a prefilled cache");
@@ -560,12 +630,14 @@ impl Model {
         );
         assert!(kv.fits(cfg), "KvCache shape does not match model");
         assert!(s.fits(cfg), "StepScratch shape does not match model");
+        let mut laps = prof.map(KernelLaps::new);
 
         // embed the one new token at its window-relative position
         let tok_row = self.mats["tok_emb"].row(token.clamp(0, cfg.vocab_size as i32 - 1) as usize);
         let pos_row = self.mats["pos_emb"].row(pos);
         s.h.clear();
         s.h.extend(tok_row.iter().zip(pos_row).map(|(a, b)| a + b));
+        lap!(laps, other);
 
         for (li, names) in self.layer_names.iter().enumerate() {
             layernorm_row_into(
@@ -575,14 +647,18 @@ impl Model {
                 1e-5,
                 &mut s.norm,
             );
+            lap!(laps, other);
             self.linear_row_into(&s.norm, &names.q, layouts, &mut s.q);
             self.linear_row_into(&s.norm, &names.k, layouts, &mut s.k);
             self.linear_row_into(&s.norm, &names.v, layouts, &mut s.v);
+            lap!(laps, linear);
             // the new row joins the cache first so attention sees
             // positions 0..=pos, exactly the full pass's causal row
             kv.write_row(li, pos, &s.k, &s.v);
             self.attention_row_into(kv, li, pos, &s.q, &mut s.attn, &mut s.attn_logits);
+            lap!(laps, attention);
             self.linear_row_into(&s.attn, &names.o, layouts, &mut s.proj);
+            lap!(laps, linear);
             for (a, b) in s.h.iter_mut().zip(&s.proj) {
                 *a += b;
             }
@@ -594,16 +670,21 @@ impl Model {
                 1e-5,
                 &mut s.norm,
             );
+            lap!(laps, other);
             self.linear_row_into(&s.norm, &names.fc1, layouts, &mut s.inner);
+            lap!(laps, linear);
             for x in &mut s.inner {
                 if *x < 0.0 {
                     *x = 0.0;
                 }
             }
+            lap!(laps, other);
             self.linear_row_into(&s.inner, &names.fc2, layouts, &mut s.proj);
+            lap!(laps, linear);
             for (a, b) in s.h.iter_mut().zip(&s.proj) {
                 *a += b;
             }
+            lap!(laps, other);
         }
         kv.set_len(pos + 1);
 
@@ -614,10 +695,13 @@ impl Model {
             1e-5,
             &mut s.norm,
         );
+        lap!(laps, other);
         // same last-row tied head as forward_fixed_last (the logits row is
         // the step's *product* and escapes the scratch, so it allocates)
         let last = Mat::from_vec(1, cfg.d_model, s.norm.clone());
-        last.matmul_nt_auto(&self.mats["tok_emb"]).data
+        let logits = last.matmul_nt_auto(&self.mats["tok_emb"]).data;
+        lap!(laps, linear);
+        logits
     }
 
     /// One incremental decode step for N lanes *sharing the same layouts*,
@@ -653,6 +737,23 @@ impl Model {
         kvs: &mut [&mut KvCache],
         s: &mut StepBatchScratch,
     ) -> Mat {
+        self.forward_step_batch_profiled(newest, layouts, kvs, s, None)
+    }
+
+    /// [`Model::forward_step_batch_with`] with optional sampled kernel
+    /// attribution — the fused-sweep mirror of
+    /// [`Model::forward_step_profiled`]. The stack/scatter transposes of
+    /// the matrix-major path are charged to the profile's `other_us`
+    /// bucket. `None` skips every clock read; outputs are bit-identical
+    /// either way.
+    pub fn forward_step_batch_profiled(
+        &self,
+        newest: &[i32],
+        layouts: &FixedLayouts,
+        kvs: &mut [&mut KvCache],
+        s: &mut StepBatchScratch,
+        prof: Option<&mut StepProfile>,
+    ) -> Mat {
         let cfg = &self.cfg;
         let n = newest.len();
         assert_eq!(n, kvs.len(), "one KvCache per fused lane");
@@ -669,6 +770,7 @@ impl Model {
             assert!(kv.fits(cfg), "KvCache shape does not match model");
             s.pos.push(pos);
         }
+        let mut laps = prof.map(KernelLaps::new);
 
         // embed each lane's new token at its own window-relative position
         let d = cfg.d_model;
@@ -683,6 +785,7 @@ impl Model {
                 *dst = a + b;
             }
         }
+        lap!(laps, other);
 
         for (li, names) in self.layer_names.iter().enumerate() {
             s.norm.resize_zeroed(n, d);
@@ -698,9 +801,11 @@ impl Model {
             // q/k/v consume the same activations: transpose once, run one
             // sparse matmul per linear over the whole group
             s.norm.transpose_into(&mut s.xt);
+            lap!(laps, other);
             self.linear_batch_into(&s.xt, &names.q, layouts, &mut s.yt, &mut s.q);
             self.linear_batch_into(&s.xt, &names.k, layouts, &mut s.yt, &mut s.k);
             self.linear_batch_into(&s.xt, &names.v, layouts, &mut s.yt, &mut s.v);
+            lap!(laps, linear);
             // each lane's new row joins its own cache first so attention
             // sees positions 0..=pos — exactly the per-lane step's order
             for i in 0..n {
@@ -716,8 +821,11 @@ impl Model {
                     &mut s.attn_logits,
                 );
             }
+            lap!(laps, attention);
             s.attn.transpose_into(&mut s.xt);
+            lap!(laps, other);
             self.linear_batch_into(&s.xt, &names.o, layouts, &mut s.yt, &mut s.proj);
+            lap!(laps, linear);
             for i in 0..n {
                 for (a, b) in s.h.row_mut(i).iter_mut().zip(s.proj.row(i)) {
                     *a += b;
@@ -734,19 +842,24 @@ impl Model {
                 );
             }
             s.norm.transpose_into(&mut s.xt);
+            lap!(laps, other);
             self.linear_batch_into(&s.xt, &names.fc1, layouts, &mut s.yt, &mut s.inner);
+            lap!(laps, linear);
             for x in &mut s.inner.data {
                 if *x < 0.0 {
                     *x = 0.0;
                 }
             }
             s.inner.transpose_into(&mut s.xt);
+            lap!(laps, other);
             self.linear_batch_into(&s.xt, &names.fc2, layouts, &mut s.yt, &mut s.proj);
+            lap!(laps, linear);
             for i in 0..n {
                 for (a, b) in s.h.row_mut(i).iter_mut().zip(s.proj.row(i)) {
                     *a += b;
                 }
             }
+            lap!(laps, other);
         }
         for (i, kv) in kvs.iter_mut().enumerate() {
             kv.set_len(s.pos[i] + 1);
@@ -761,10 +874,13 @@ impl Model {
                 s.norm.row_mut(i),
             );
         }
+        lap!(laps, other);
         // same tied head as the per-lane step; each output row of the
         // dense kernel is accumulated independently, so the (N, V) matrix
         // is row-for-row the N single-lane heads
-        s.norm.matmul_nt_auto(&self.mats["tok_emb"])
+        let logits = s.norm.matmul_nt_auto(&self.mats["tok_emb"]);
+        lap!(laps, linear);
+        logits
     }
 
     /// One linear over a *stacked group* of activation rows under fixed
@@ -1411,6 +1527,47 @@ mod tests {
             let reused = m.forward_step_with(t, &layouts, &mut kv_b, &mut scratch);
             assert_eq!(fresh, reused);
         }
+    }
+
+    #[test]
+    fn profiled_steps_bit_identical_to_unprofiled() {
+        // kernel attribution only observes time: the profiled step (and
+        // its batch mirror) must agree logit-for-logit with the plain one
+        let m = random_model(&tiny(), 29);
+        let toks: Vec<i32> = vec![7, 3, 11, 5, 13];
+        let layouts = fixed_layouts(&m, &toks, 0.5);
+        let mut kv_a = KvCache::new(&m.cfg);
+        let mut kv_b = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks[..2], 2, &layouts, &mut kv_a);
+        m.forward_prefill_last(&toks[..2], 2, &layouts, &mut kv_b);
+        let mut sa = StepScratch::new(&m.cfg);
+        let mut sb = StepScratch::new(&m.cfg);
+        let mut prof = StepProfile::default();
+        for &t in &toks[2..] {
+            let plain = m.forward_step_with(t, &layouts, &mut kv_a, &mut sa);
+            let profiled =
+                m.forward_step_profiled(t, &layouts, &mut kv_b, &mut sb, Some(&mut prof));
+            assert_eq!(plain, profiled);
+        }
+        // timers on a debug-profile tiny model may legitimately read 0 µs;
+        // the split only has to be structurally usable
+        let _ = prof.total_us();
+
+        let mut kv_c = KvCache::new(&m.cfg);
+        let mut kv_d = KvCache::new(&m.cfg);
+        m.forward_prefill_last(&toks, toks.len(), &layouts, &mut kv_c);
+        m.forward_prefill_last(&toks, toks.len(), &layouts, &mut kv_d);
+        let mut bs = StepBatchScratch::new(&m.cfg, 1);
+        let plain = {
+            let mut refs: Vec<&mut KvCache> = vec![&mut kv_c];
+            m.forward_step_batch_with(&[42], &layouts, &mut refs, &mut bs)
+        };
+        let profiled = {
+            let mut refs: Vec<&mut KvCache> = vec![&mut kv_d];
+            let p = Some(&mut prof);
+            m.forward_step_batch_profiled(&[42], &layouts, &mut refs, &mut bs, p)
+        };
+        assert_eq!(plain.data, profiled.data);
     }
 
     #[test]

@@ -1,0 +1,756 @@
+//! Per-request tracing: a span recorder, a bounded flight recorder and a
+//! Chrome trace-event (catapult JSON, Perfetto-loadable) serializer —
+//! dependency-free, consistent with the pure-std policy.
+//!
+//! μ-MoE picks structured sparsity *per prompt*, so where a request's
+//! wall-clock goes (admission, queue wait, seed-vs-prefill, fused vs
+//! per-lane sweeps, refresh rebuilds, stream writes) varies request by
+//! request and cannot be read off the aggregate `Metrics` counters. The
+//! [`FlightRecorder`] holds the last N *completed* request timelines in a
+//! ring buffer; every lifecycle phase lands as a [`Span`] with monotonic
+//! start/end microseconds on the recorder's single epoch clock, so spans
+//! from different threads order correctly in one trace.
+//!
+//! **Hot-path contract.** When the recorder is disabled every mutating
+//! method returns after a single relaxed atomic load — no allocation, no
+//! lock, no `Instant::now()`. The serve loop additionally guards its own
+//! span *assembly* behind [`FlightRecorder::enabled`], so a disabled
+//! recorder costs exactly one branch per call site
+//! (`benches/trace_overhead.rs` gates this).
+//!
+//! Kernel attribution (time in sparse linears vs attention vs the
+//! stack/scatter glue) is sampled: every `kernel_sample_every`-th sweep
+//! threads a [`StepProfile`] through the forward, and the sample lands in
+//! a separate bounded ring ([`KernelSample`]) rather than on a request —
+//! a sweep's compute is shared by its fused group, not owned by one
+//! request.
+
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Root phase name: one per request, brackets every child span.
+pub const ROOT_PHASE: &str = "request";
+
+/// A span attribute value: small numeric or static-label payloads only,
+/// so recording never formats or allocates strings on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttrValue {
+    Num(u64),
+    Label(&'static str),
+}
+
+impl AttrValue {
+    fn to_json(self) -> Json {
+        match self {
+            AttrValue::Num(n) => Json::Num(n as f64),
+            AttrValue::Label(s) => Json::Str(s.into()),
+        }
+    }
+}
+
+/// One completed lifecycle phase of a request.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub phase: &'static str,
+    /// Lane-pool slot the phase ran on (`None` for pre-lane phases:
+    /// admission, queue wait, drain-mode execution).
+    pub lane: Option<usize>,
+    /// Monotonic microseconds on the recorder's epoch clock.
+    pub start_us: u64,
+    pub end_us: u64,
+    pub attrs: Vec<(&'static str, AttrValue)>,
+}
+
+/// The full recorded timeline of one request.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    /// When the request entered the recorder (admission).
+    pub begin_us: u64,
+    /// When it finished (0 while still active).
+    pub end_us: u64,
+    /// Terminal outcome ("done" | "cancelled" | "rejected"; "" while
+    /// active).
+    pub outcome: &'static str,
+    pub spans: Vec<Span>,
+}
+
+impl RequestTrace {
+    /// Total recorded wall-clock (0 while active).
+    pub fn total_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.begin_us)
+    }
+
+    /// Sum of child span durations — the accounted-for share of
+    /// `total_us` (phases may legitimately leave gaps: batching windows,
+    /// sweeps serving other lanes).
+    pub fn span_sum_us(&self) -> u64 {
+        self.spans
+            .iter()
+            .map(|s| s.end_us.saturating_sub(s.start_us))
+            .sum()
+    }
+
+    /// JSON timeline for `GET /requests/:id`.
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = HashMap::from([
+                    ("phase".into(), Json::Str(s.phase.into())),
+                    ("start_us".into(), Json::Num(s.start_us as f64)),
+                    ("end_us".into(), Json::Num(s.end_us as f64)),
+                    (
+                        "dur_us".into(),
+                        Json::Num(s.end_us.saturating_sub(s.start_us) as f64),
+                    ),
+                ]);
+                if let Some(lane) = s.lane {
+                    m.insert("lane".into(), Json::Num(lane as f64));
+                }
+                if !s.attrs.is_empty() {
+                    m.insert(
+                        "attrs".into(),
+                        Json::Obj(
+                            s.attrs
+                                .iter()
+                                .map(|(k, v)| ((*k).into(), v.to_json()))
+                                .collect(),
+                        ),
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        Json::Obj(HashMap::from([
+            ("id".into(), Json::Num(self.id as f64)),
+            ("begin_us".into(), Json::Num(self.begin_us as f64)),
+            ("end_us".into(), Json::Num(self.end_us as f64)),
+            ("total_us".into(), Json::Num(self.total_us() as f64)),
+            ("span_sum_us".into(), Json::Num(self.span_sum_us() as f64)),
+            ("outcome".into(), Json::Str(self.outcome.into())),
+            ("spans".into(), Json::Arr(spans)),
+        ]))
+    }
+}
+
+/// Sampled per-sweep kernel-time attribution, accumulated inside the
+/// forward pass (`nn::Model::forward_step*` profiled variants).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepProfile {
+    /// Time in sparse/dense linear kernels (q,k,v,o,fc1,fc2 + LM head).
+    pub linear_us: u64,
+    /// Time writing K/V rows and attending against the cache.
+    pub attention_us: u64,
+    /// Everything else: embed, layernorms, residuals, stack/scatter
+    /// transposes on the fused path.
+    pub other_us: u64,
+}
+
+impl StepProfile {
+    pub fn total_us(&self) -> u64 {
+        self.linear_us + self.attention_us + self.other_us
+    }
+}
+
+/// One sampled sweep's kernel split.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSample {
+    /// Sweep end time on the recorder's epoch clock.
+    pub at_us: u64,
+    /// Active lanes the sampled sweep stepped.
+    pub lanes: usize,
+    pub profile: StepProfile,
+}
+
+/// What kind of work a lane's step did this sweep — the per-sweep
+/// classification `decode::LanePool::sweep` exposes so the serve loop can
+/// span each lane's phase without re-deriving decode internals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// Cold full-window KV prefill (first step of a lane).
+    Prefill,
+    /// Prefill with a prefix seeded from the KV store or a session.
+    SeededPrefill,
+    /// Selection refresh: new layouts + full cache rebuild.
+    Refresh,
+    /// Window slide: position re-base forced a full cache rebuild.
+    Slide,
+    /// Reused incremental step on the per-lane path.
+    Step,
+    /// Reused incremental step executed inside a fused group.
+    Fused,
+}
+
+impl StepKind {
+    pub fn phase(self) -> &'static str {
+        match self {
+            StepKind::Prefill => "prefill",
+            StepKind::SeededPrefill => "seeded_prefill",
+            StepKind::Refresh => "refresh",
+            StepKind::Slide => "slide",
+            StepKind::Step => "step",
+            StepKind::Fused => "fused_step",
+        }
+    }
+}
+
+/// One lane's step record for a single sweep (reported by
+/// `LanePool::last_sweep_lane_steps`).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepLaneStep {
+    pub slot: usize,
+    pub kind: StepKind,
+    pub elapsed_us: u64,
+    /// Lanes in the execution group (1 on the per-lane path).
+    pub width: usize,
+    /// Window tokens seeded from the store/session by this step
+    /// (prefill-class steps only).
+    pub seeded: usize,
+    /// Window tokens prefilled by full forward work in this step
+    /// (prefill-class steps only).
+    pub prefilled: usize,
+}
+
+struct Inner {
+    active: HashMap<u64, RequestTrace>,
+    done: VecDeque<RequestTrace>,
+    kernel: VecDeque<KernelSample>,
+}
+
+/// Bounded ring-buffer recorder of per-request span timelines.
+///
+/// All methods take `&self`; the single mutex guards cold-path maps only
+/// and is never touched when disabled.
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    capacity: usize,
+    kernel_sample_every: u64,
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    pub fn new(enabled: bool, capacity: usize, kernel_sample_every: u64) -> FlightRecorder {
+        FlightRecorder {
+            enabled: AtomicBool::new(enabled),
+            capacity: capacity.max(1),
+            kernel_sample_every,
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner {
+                active: HashMap::new(),
+                done: VecDeque::new(),
+                kernel: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// A recorder that records nothing (every call is one branch).
+    pub fn disabled() -> FlightRecorder {
+        FlightRecorder::new(false, 1, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording at runtime (bench/test hook; config decides the
+    /// serving default).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Sampling period for kernel attribution (0 = never; forced to 0
+    /// while disabled so callers need no second check).
+    pub fn kernel_sample_every(&self) -> u64 {
+        if self.enabled() {
+            self.kernel_sample_every
+        } else {
+            0
+        }
+    }
+
+    /// Microseconds since the recorder's epoch — the clock every span
+    /// uses.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a request timeline (admission).
+    pub fn begin(&self, id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.begin_at(id, self.now_us());
+    }
+
+    /// Open a request timeline backdated to `begin_us` — the router
+    /// stamps the instant admission *started*, so the admit span itself
+    /// nests within the root.
+    pub fn begin_at(&self, id: u64, begin_us: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("trace recorder poisoned");
+        inner.active.insert(
+            id,
+            RequestTrace {
+                id,
+                begin_us,
+                end_us: 0,
+                outcome: "",
+                spans: Vec::new(),
+            },
+        );
+    }
+
+    /// Record one completed phase of an active request. Unknown ids are
+    /// ignored (request began while the recorder was off, or was already
+    /// evicted). The start is clamped to the root's begin: reconstructed
+    /// spans (`now - elapsed`, with the elapsed measured from a stamp
+    /// taken just before `begin`) can round a microsecond past the
+    /// window, and nesting must hold by construction.
+    pub fn span(
+        &self,
+        id: u64,
+        phase: &'static str,
+        lane: Option<usize>,
+        start_us: u64,
+        end_us: u64,
+        attrs: &[(&'static str, AttrValue)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("trace recorder poisoned");
+        if let Some(t) = inner.active.get_mut(&id) {
+            let start_us = start_us.max(t.begin_us);
+            t.spans.push(Span {
+                phase,
+                lane,
+                start_us,
+                end_us: end_us.max(start_us),
+                attrs: attrs.to_vec(),
+            });
+        }
+    }
+
+    /// Close a request timeline and move it into the completed ring,
+    /// evicting the oldest entry beyond `capacity`.
+    pub fn finish(&self, id: u64, outcome: &'static str) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.now_us();
+        let mut inner = self.inner.lock().expect("trace recorder poisoned");
+        if let Some(mut t) = inner.active.remove(&id) {
+            t.end_us = now.max(t.begin_us);
+            t.outcome = outcome;
+            inner.done.push_back(t);
+            while inner.done.len() > self.capacity {
+                inner.done.pop_front();
+            }
+        }
+    }
+
+    /// Record one sampled sweep's kernel split (same ring bound as the
+    /// request timelines).
+    pub fn record_kernel_sample(&self, lanes: usize, profile: StepProfile) {
+        if !self.enabled() {
+            return;
+        }
+        let at_us = self.now_us();
+        let mut inner = self.inner.lock().expect("trace recorder poisoned");
+        inner.kernel.push_back(KernelSample {
+            at_us,
+            lanes,
+            profile,
+        });
+        while inner.kernel.len() > self.capacity {
+            inner.kernel.pop_front();
+        }
+    }
+
+    /// Span every lane's step of one just-finished sweep. `id_of` maps a
+    /// pool slot to the live request occupying it; lanes whose request is
+    /// unknown (already delivered) are skipped. Each step's span ends
+    /// "now" and starts `elapsed_us` earlier — sweep steps are recorded
+    /// immediately after they run, so the reconstruction error is the
+    /// sweep's own bookkeeping, not queuing.
+    pub fn record_sweep<F: Fn(usize) -> Option<u64>>(
+        &self,
+        id_of: F,
+        steps: &[SweepLaneStep],
+        sample: Option<(usize, StepProfile)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.now_us();
+        for st in steps {
+            let Some(id) = id_of(st.slot) else {
+                continue;
+            };
+            let mut attrs = vec![("width", AttrValue::Num(st.width as u64))];
+            if st.seeded > 0 {
+                attrs.push(("seeded", AttrValue::Num(st.seeded as u64)));
+            }
+            if st.prefilled > 0 {
+                attrs.push(("prefilled", AttrValue::Num(st.prefilled as u64)));
+            }
+            self.span(
+                id,
+                st.kind.phase(),
+                Some(st.slot),
+                now.saturating_sub(st.elapsed_us),
+                now,
+                &attrs,
+            );
+        }
+        if let Some((lanes, profile)) = sample {
+            self.record_kernel_sample(lanes, profile);
+        }
+    }
+
+    /// A completed request's timeline by id (falls back to the active
+    /// map so an in-flight request is inspectable too).
+    pub fn timeline(&self, id: u64) -> Option<RequestTrace> {
+        let inner = self.inner.lock().expect("trace recorder poisoned");
+        inner
+            .done
+            .iter()
+            .rev()
+            .find(|t| t.id == id)
+            .or_else(|| inner.active.get(&id))
+            .cloned()
+    }
+
+    /// The last `n` completed timelines, oldest first.
+    pub fn last(&self, n: usize) -> Vec<RequestTrace> {
+        let inner = self.inner.lock().expect("trace recorder poisoned");
+        let skip = inner.done.len().saturating_sub(n);
+        inner.done.iter().skip(skip).cloned().collect()
+    }
+
+    pub fn kernel_samples(&self) -> Vec<KernelSample> {
+        let inner = self.inner.lock().expect("trace recorder poisoned");
+        inner.kernel.iter().copied().collect()
+    }
+
+    /// Completed timelines currently resident.
+    pub fn completed(&self) -> usize {
+        self.inner.lock().expect("trace recorder poisoned").done.len()
+    }
+
+    /// True when nothing was ever recorded (the disabled-mode guarantee
+    /// `benches/trace_overhead.rs` asserts).
+    pub fn is_empty(&self) -> bool {
+        let inner = self.inner.lock().expect("trace recorder poisoned");
+        inner.active.is_empty() && inner.done.is_empty() && inner.kernel.is_empty()
+    }
+}
+
+/// Serialize timelines + kernel samples as Chrome trace-event JSON
+/// (catapult "X" complete events; load in Perfetto / `chrome://tracing`).
+/// One track (`tid`) per request under `pid` 1; kernel samples render on
+/// `pid` 0 with their split in `args`.
+pub fn chrome_trace(traces: &[RequestTrace], kernel: &[KernelSample]) -> Json {
+    fn event(
+        name: &str,
+        pid: u64,
+        tid: u64,
+        start_us: u64,
+        dur_us: u64,
+        args: HashMap<String, Json>,
+    ) -> Json {
+        let mut m = HashMap::from([
+            ("name".into(), Json::Str(name.into())),
+            ("cat".into(), Json::Str("serve".into())),
+            ("ph".into(), Json::Str("X".into())),
+            ("pid".into(), Json::Num(pid as f64)),
+            ("tid".into(), Json::Num(tid as f64)),
+            ("ts".into(), Json::Num(start_us as f64)),
+            ("dur".into(), Json::Num(dur_us as f64)),
+        ]);
+        if !args.is_empty() {
+            m.insert("args".into(), Json::Obj(args));
+        }
+        Json::Obj(m)
+    }
+
+    let mut events = Vec::new();
+    for t in traces {
+        events.push(event(
+            ROOT_PHASE,
+            1,
+            t.id,
+            t.begin_us,
+            t.total_us(),
+            HashMap::from([("outcome".into(), Json::Str(t.outcome.into()))]),
+        ));
+        for s in &t.spans {
+            let mut args: HashMap<String, Json> = s
+                .attrs
+                .iter()
+                .map(|(k, v)| ((*k).into(), v.to_json()))
+                .collect();
+            if let Some(lane) = s.lane {
+                args.insert("lane".into(), Json::Num(lane as f64));
+            }
+            events.push(event(
+                s.phase,
+                1,
+                t.id,
+                s.start_us,
+                s.end_us.saturating_sub(s.start_us),
+                args,
+            ));
+        }
+    }
+    for k in kernel {
+        let total = k.profile.total_us();
+        events.push(event(
+            "kernel_sample",
+            0,
+            0,
+            k.at_us.saturating_sub(total),
+            total,
+            HashMap::from([
+                ("linear_us".into(), Json::Num(k.profile.linear_us as f64)),
+                (
+                    "attention_us".into(),
+                    Json::Num(k.profile.attention_us as f64),
+                ),
+                ("other_us".into(), Json::Num(k.profile.other_us as f64)),
+                ("lanes".into(), Json::Num(k.lanes as f64)),
+            ]),
+        ));
+    }
+    Json::Obj(HashMap::from([
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_one(r: &FlightRecorder, id: u64) {
+        r.begin(id);
+        let t0 = r.now_us();
+        r.span(id, "admit", None, t0, t0 + 5, &[]);
+        r.span(
+            id,
+            "prefill",
+            Some(0),
+            t0 + 5,
+            t0 + 40,
+            &[("prefilled", AttrValue::Num(9))],
+        );
+        r.span(id, "step", Some(0), t0 + 40, t0 + 50, &[("width", AttrValue::Num(1))]);
+        r.finish(id, "done");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = FlightRecorder::disabled();
+        assert!(!r.enabled());
+        assert_eq!(r.kernel_sample_every(), 0);
+        record_one(&r, 1);
+        r.record_kernel_sample(2, StepProfile::default());
+        r.record_sweep(
+            |_| Some(1),
+            &[SweepLaneStep {
+                slot: 0,
+                kind: StepKind::Step,
+                elapsed_us: 3,
+                width: 1,
+                seeded: 0,
+                prefilled: 0,
+            }],
+            None,
+        );
+        assert!(r.is_empty());
+        assert!(r.timeline(1).is_none());
+        assert!(r.last(8).is_empty());
+    }
+
+    #[test]
+    fn ring_buffer_bounded_and_ordered() {
+        let r = FlightRecorder::new(true, 3, 0);
+        for id in 1..=5 {
+            record_one(&r, id);
+        }
+        assert_eq!(r.completed(), 3, "capacity bounds the ring");
+        let last = r.last(3);
+        let ids: Vec<u64> = last.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![3, 4, 5], "oldest evicted, oldest-first order");
+        assert!(r.timeline(1).is_none(), "evicted timeline gone");
+        let t = r.timeline(4).expect("resident timeline");
+        assert_eq!(t.outcome, "done");
+        assert_eq!(t.spans.len(), 3);
+        assert!(t.end_us >= t.begin_us);
+        // last(n) with n < resident returns the newest n
+        let ids: Vec<u64> = r.last(2).iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![4, 5]);
+    }
+
+    #[test]
+    fn spans_nest_within_the_request_bounds() {
+        let r = FlightRecorder::new(true, 8, 0);
+        record_one(&r, 7);
+        let t = r.timeline(7).unwrap();
+        for s in &t.spans {
+            assert!(s.start_us >= t.begin_us, "{} starts before begin", s.phase);
+            assert!(s.end_us <= t.end_us, "{} ends after finish", s.phase);
+            assert!(s.end_us >= s.start_us);
+        }
+        assert!(t.span_sum_us() <= t.total_us() + 50);
+    }
+
+    #[test]
+    fn active_timeline_visible_before_finish() {
+        let r = FlightRecorder::new(true, 8, 0);
+        r.begin(9);
+        r.span(9, "queue_wait", None, 0, 10, &[]);
+        let t = r.timeline(9).expect("active request inspectable");
+        assert_eq!(t.outcome, "");
+        assert_eq!(t.end_us, 0);
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(r.completed(), 0);
+        r.finish(9, "cancelled");
+        assert_eq!(r.timeline(9).unwrap().outcome, "cancelled");
+    }
+
+    #[test]
+    fn unknown_ids_and_double_finish_are_noops() {
+        let r = FlightRecorder::new(true, 4, 0);
+        r.span(42, "step", None, 0, 1, &[]);
+        r.finish(42, "done");
+        assert!(r.is_empty());
+        record_one(&r, 1);
+        r.finish(1, "done"); // second finish: already moved to the ring
+        assert_eq!(r.completed(), 1);
+    }
+
+    #[test]
+    fn record_sweep_spans_live_lanes_and_samples_kernels() {
+        let r = FlightRecorder::new(true, 4, 2);
+        assert_eq!(r.kernel_sample_every(), 2);
+        r.begin(11);
+        let steps = [
+            SweepLaneStep {
+                slot: 0,
+                kind: StepKind::Fused,
+                elapsed_us: 12,
+                width: 3,
+                seeded: 0,
+                prefilled: 0,
+            },
+            SweepLaneStep {
+                slot: 1,
+                kind: StepKind::SeededPrefill,
+                elapsed_us: 80,
+                width: 1,
+                seeded: 6,
+                prefilled: 2,
+            },
+        ];
+        // slot 1 has no live request mapping: skipped, not misattributed
+        r.record_sweep(
+            |slot| (slot == 0).then_some(11),
+            &steps,
+            Some((
+                2,
+                StepProfile {
+                    linear_us: 30,
+                    attention_us: 10,
+                    other_us: 5,
+                },
+            )),
+        );
+        r.finish(11, "done");
+        let t = r.timeline(11).unwrap();
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].phase, "fused_step");
+        assert_eq!(t.spans[0].lane, Some(0));
+        assert_eq!(t.spans[0].attrs, vec![("width", AttrValue::Num(3))]);
+        let samples = r.kernel_samples();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].lanes, 2);
+        assert_eq!(samples[0].profile.total_us(), 45);
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_nesting() {
+        let r = FlightRecorder::new(true, 8, 1);
+        record_one(&r, 5);
+        r.record_kernel_sample(
+            1,
+            StepProfile {
+                linear_us: 20,
+                attention_us: 5,
+                other_us: 1,
+            },
+        );
+        let j = chrome_trace(&r.last(8), &r.kernel_samples());
+        // the dump must round-trip through the parser (valid JSON)
+        let parsed = Json::parse(&j.dump()).expect("valid trace JSON");
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        // root + 3 child spans + 1 kernel sample
+        assert_eq!(events.len(), 5);
+        let root = events
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str() == Some(ROOT_PHASE))
+            .expect("root span present");
+        let root_ts = root.req("ts").unwrap().as_f64().unwrap();
+        let root_end = root_ts + root.req("dur").unwrap().as_f64().unwrap();
+        for e in events {
+            assert_eq!(e.req("ph").unwrap().as_str(), Some("X"));
+            let pid = e.req("pid").unwrap().as_f64().unwrap();
+            if pid != 1.0 {
+                continue; // kernel track
+            }
+            let ts = e.req("ts").unwrap().as_f64().unwrap();
+            let end = ts + e.req("dur").unwrap().as_f64().unwrap();
+            assert!(ts >= root_ts && end <= root_end, "child within root bounds");
+            assert_eq!(e.req("tid").unwrap().as_f64(), Some(5.0));
+        }
+        let kernel = events
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str() == Some("kernel_sample"))
+            .expect("kernel sample event");
+        let args = kernel.req("args").unwrap();
+        assert_eq!(args.req("linear_us").unwrap().as_f64(), Some(20.0));
+        assert_eq!(args.req("lanes").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn timeline_json_carries_spans_and_sums() {
+        let r = FlightRecorder::new(true, 4, 0);
+        record_one(&r, 3);
+        let j = r.timeline(3).unwrap().to_json();
+        let parsed = Json::parse(&j.dump()).expect("valid timeline JSON");
+        assert_eq!(parsed.req("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.req("outcome").unwrap().as_str(), Some("done"));
+        let spans = parsed.req("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[1].req("phase").unwrap().as_str(), Some("prefill"));
+        assert_eq!(spans[1].req("lane").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            spans[1].req("attrs").unwrap().req("prefilled").unwrap().as_f64(),
+            Some(9.0)
+        );
+        let span_sum = parsed.req("span_sum_us").unwrap().as_f64().unwrap();
+        assert_eq!(span_sum, 50.0, "5 + 35 + 10");
+    }
+}

@@ -1,8 +1,19 @@
 //! Leveled stderr logger (std-only `log`-crate substitute).
 //!
-//! Level comes from `MUMOE_LOG` (error|warn|info|debug|trace) or
-//! [`set_level`]; defaults to `info`. Output: `[12.345s INFO target] msg`.
+//! The filter comes from `MUMOE_LOG` (or [`set_level`], a global test
+//! hook); the default level is `info`. `MUMOE_LOG` takes a default
+//! level plus comma-separated per-target overrides:
+//! `MUMOE_LOG=info,http=trace,server=debug`. A single-segment selector
+//! matches any path segment of the logging module (`http` matches
+//! `mumoe::coordinator::http`); selectors containing `::` match by
+//! substring, and the longest matching selector wins.
+//!
+//! Output: `[12.345s INFO target] msg key=value ...` — the trailing
+//! fields come from the macros' structured form,
+//! `crate::info!("admitted"; id = id, slot = slot)`, and render lazily
+//! (nothing formats unless the line is emitted).
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -40,50 +51,145 @@ impl Level {
     }
 }
 
+/// A parsed `MUMOE_LOG` spec: a default level plus per-target overrides.
+struct Filter {
+    default: Level,
+    targets: Vec<(String, Level)>,
+}
+
+impl Filter {
+    /// Parse `info,http=trace`-style specs. Unknown levels and empty
+    /// parts are ignored rather than fatal — a typo in an env var must
+    /// never take the server down.
+    fn parse(spec: &str) -> Filter {
+        let mut default = Level::Info;
+        let mut targets = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                Some((target, level)) => {
+                    if let Some(level) = Level::parse(level.trim()) {
+                        targets.push((target.trim().to_string(), level));
+                    }
+                }
+                None => {
+                    if let Some(level) = Level::parse(part) {
+                        default = level;
+                    }
+                }
+            }
+        }
+        Filter { default, targets }
+    }
+
+    /// Effective level for a module path; the longest matching selector
+    /// wins, falling back to the default.
+    fn level_for(&self, target: &str) -> Level {
+        let mut best: Option<(usize, Level)> = None;
+        for (sel, level) in &self.targets {
+            let better = !best.is_some_and(|(len, _)| len >= sel.len());
+            if selector_matches(target, sel) && better {
+                best = Some((sel.len(), *level));
+            }
+        }
+        best.map_or(self.default, |(_, l)| l)
+    }
+}
+
+/// `http` (no `::`) matches any path segment; `coordinator::http`
+/// matches as a substring of the module path.
+fn selector_matches(target: &str, sel: &str) -> bool {
+    if sel.contains("::") {
+        target.contains(sel)
+    } else {
+        target.split("::").any(|seg| seg == sel)
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // unset sentinel
+static FILTER: OnceLock<Filter> = OnceLock::new();
 static START: OnceLock<Instant> = OnceLock::new();
 
 fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
+fn filter() -> &'static Filter {
+    FILTER.get_or_init(|| Filter::parse(&std::env::var("MUMOE_LOG").unwrap_or_default()))
+}
+
+/// Global override (test hook): trumps `MUMOE_LOG`, including its
+/// per-target selectors.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+fn override_level() -> Option<Level> {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Some(Level::Error),
+        1 => Some(Level::Warn),
+        2 => Some(Level::Info),
+        3 => Some(Level::Debug),
+        4 => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// The effective default level (per-target overrides aside).
 pub fn level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw == u8::MAX {
-        let l = std::env::var("MUMOE_LOG")
-            .ok()
-            .and_then(|s| Level::parse(&s))
-            .unwrap_or(Level::Info);
-        LEVEL.store(l as u8, Ordering::Relaxed);
-        return l;
-    }
-    // SAFETY-free decode: raw was stored from a Level
-    match raw {
-        0 => Level::Error,
-        1 => Level::Warn,
-        2 => Level::Info,
-        3 => Level::Debug,
-        _ => Level::Trace,
-    }
+    override_level().unwrap_or_else(|| filter().default)
 }
 
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Would a record at `l` from module `target` be emitted?
+pub fn enabled_for(l: Level, target: &str) -> bool {
+    match override_level() {
+        Some(max) => l <= max,
+        None => l <= filter().level_for(target),
+    }
+}
+
 pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
-    if enabled(l) {
+    if enabled_for(l, target) {
         let t = start().elapsed().as_secs_f64();
         eprintln!("[{t:9.3}s {:5} {target}] {msg}", l.as_str());
     }
 }
 
+/// Structured variant: appends ` key=value` pairs after the message.
+/// Values only render when the line is actually emitted.
+pub fn log_kv(
+    l: Level,
+    target: &str,
+    msg: std::fmt::Arguments<'_>,
+    kvs: &[(&str, &dyn std::fmt::Display)],
+) {
+    if enabled_for(l, target) {
+        let t = start().elapsed().as_secs_f64();
+        let mut line = format!("[{t:9.3}s {:5} {target}] {msg}", l.as_str());
+        for (k, v) in kvs {
+            let _ = write!(line, " {k}={v}");
+        }
+        eprintln!("{line}");
+    }
+}
+
 #[macro_export]
 macro_rules! info {
+    ($fmt:literal $(, $arg:expr)* ; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::log::log_kv(
+            $crate::util::log::Level::Info,
+            module_path!(),
+            format_args!($fmt $(, $arg)*),
+            &[$((stringify!($k), &$v as &dyn ::std::fmt::Display)),+],
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::log::log($crate::util::log::Level::Info,
                                module_path!(), format_args!($($arg)*))
@@ -92,6 +198,14 @@ macro_rules! info {
 
 #[macro_export]
 macro_rules! warn_ {
+    ($fmt:literal $(, $arg:expr)* ; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::log::log_kv(
+            $crate::util::log::Level::Warn,
+            module_path!(),
+            format_args!($fmt $(, $arg)*),
+            &[$((stringify!($k), &$v as &dyn ::std::fmt::Display)),+],
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::log::log($crate::util::log::Level::Warn,
                                module_path!(), format_args!($($arg)*))
@@ -100,6 +214,14 @@ macro_rules! warn_ {
 
 #[macro_export]
 macro_rules! debug {
+    ($fmt:literal $(, $arg:expr)* ; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::log::log_kv(
+            $crate::util::log::Level::Debug,
+            module_path!(),
+            format_args!($fmt $(, $arg)*),
+            &[$((stringify!($k), &$v as &dyn ::std::fmt::Display)),+],
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::log::log($crate::util::log::Level::Debug,
                                module_path!(), format_args!($($arg)*))
@@ -108,6 +230,14 @@ macro_rules! debug {
 
 #[macro_export]
 macro_rules! error {
+    ($fmt:literal $(, $arg:expr)* ; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::log::log_kv(
+            $crate::util::log::Level::Error,
+            module_path!(),
+            format_args!($fmt $(, $arg)*),
+            &[$((stringify!($k), &$v as &dyn ::std::fmt::Display)),+],
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::log::log($crate::util::log::Level::Error,
                                module_path!(), format_args!($($arg)*))
@@ -132,5 +262,42 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(!enabled(Level::Debug));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn filter_parses_default_and_targets() {
+        let f = Filter::parse("info,http=trace,server=debug");
+        assert_eq!(f.default, Level::Info);
+        assert_eq!(f.level_for("mumoe::coordinator::http"), Level::Trace);
+        assert_eq!(f.level_for("mumoe::coordinator::server"), Level::Debug);
+        assert_eq!(f.level_for("mumoe::decode"), Level::Info);
+
+        // bare level only
+        let f = Filter::parse("warn");
+        assert_eq!(f.default, Level::Warn);
+        assert_eq!(f.level_for("anything"), Level::Warn);
+
+        // junk is ignored, not fatal
+        let f = Filter::parse("bogus,=,http=nope,,server=trace");
+        assert_eq!(f.default, Level::Info);
+        assert_eq!(f.level_for("mumoe::coordinator::http"), Level::Info);
+        assert_eq!(f.level_for("mumoe::coordinator::server"), Level::Trace);
+    }
+
+    #[test]
+    fn filter_longest_selector_wins() {
+        let f = Filter::parse("warn,coordinator=info,coordinator::http=trace");
+        assert_eq!(f.level_for("mumoe::coordinator::http"), Level::Trace);
+        assert_eq!(f.level_for("mumoe::coordinator::server"), Level::Info);
+        assert_eq!(f.level_for("mumoe::nn"), Level::Warn);
+    }
+
+    #[test]
+    fn single_segment_selector_matches_whole_segments_only() {
+        assert!(selector_matches("mumoe::coordinator::http", "http"));
+        assert!(selector_matches("mumoe::coordinator::http", "coordinator"));
+        assert!(!selector_matches("mumoe::coordinator::http", "htt"));
+        assert!(selector_matches("mumoe::coordinator::http", "coordinator::http"));
+        assert!(!selector_matches("mumoe::decode", "coordinator::http"));
     }
 }

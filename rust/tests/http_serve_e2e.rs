@@ -219,6 +219,16 @@ fn health_flips_ready_to_draining_and_sheds_new_generations() {
     let health = Json::parse(&body).expect("health json");
     assert_eq!(health.req("status").unwrap().as_str(), Some("ready"));
     assert_eq!(health.req("model").unwrap().as_str(), Some("mu-opt-micro"));
+    assert_eq!(
+        health.req("version").unwrap().as_str(),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+    assert!(health.req("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(health.req("queue_depth").unwrap().as_f64(), Some(0.0));
+    assert!(
+        health.req("lane_occupancy").unwrap().as_f64().is_some(),
+        "idle server still reports an occupancy gauge"
+    );
 
     handle.begin_drain();
     let (status, _, body) = http_request(addr, "GET", "/health", None);
@@ -409,6 +419,170 @@ fn multi_turn_session_seeds_parked_prefix_and_delete_resets_it() {
     );
     assert_eq!(status, 400);
     assert!(body.contains("session"), "{body}");
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn trace_endpoints_expose_timeline_and_chrome_json() {
+    let (_, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    let t0 = std::time::Instant::now();
+    let (status, _, body) = http_request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "trace me", "rho": 0.6, "max_new": 3}"#),
+    );
+    let client_us = t0.elapsed().as_micros() as u64;
+    assert_eq!(status, 200, "{body}");
+    let resp = Json::parse(&body).expect("response json");
+    let id = resp.req("id").unwrap().as_f64().expect("request id") as u64;
+
+    // the terminal response carries the server-side timing breakdown
+    let timing = resp.req("timing").expect("timing object");
+    let total_us = timing.req("total_us").unwrap().as_f64().unwrap() as u64;
+    assert!(total_us > 0, "decode took measurable time");
+    assert!(
+        timing.req("ttft_us").unwrap().as_f64().unwrap() as u64 <= total_us,
+        "the first token cannot land after the terminal response"
+    );
+
+    // GET /requests/:id — the single-request timeline
+    let (status, _, body) = http_request(addr, "GET", &format!("/requests/{id}"), None);
+    assert_eq!(status, 200, "{body}");
+    let tl = Json::parse(&body).expect("timeline json");
+    assert_eq!(tl.req("id").unwrap().as_f64(), Some(id as f64));
+    assert_eq!(tl.req("outcome").unwrap().as_str(), Some("done"));
+    let tl_total = tl.req("total_us").unwrap().as_f64().unwrap() as u64;
+    let span_sum = tl.req("span_sum_us").unwrap().as_f64().unwrap() as u64;
+    // span accounting must be consistent with the measured latency: the
+    // timeline window fits inside the client-observed wall time, and
+    // every span fits inside the timeline window
+    assert!(
+        tl_total <= client_us,
+        "timeline {tl_total}us inside client-observed {client_us}us"
+    );
+    assert!(span_sum > 0, "phases were recorded with real durations");
+    let begin = tl.req("begin_us").unwrap().as_f64().unwrap();
+    let end = tl.req("end_us").unwrap().as_f64().unwrap();
+    let spans = tl.req("spans").unwrap().as_arr().expect("spans array");
+    assert!(!spans.is_empty());
+    let mut phases = Vec::new();
+    for s in spans {
+        let s0 = s.req("start_us").unwrap().as_f64().unwrap();
+        let s1 = s.req("end_us").unwrap().as_f64().unwrap();
+        assert!(s0 >= begin && s1 <= end, "span inside the request window");
+        phases.push(s.req("phase").unwrap().as_str().unwrap().to_string());
+    }
+    for expected in ["admit", "queue_wait", "prefill", "step"] {
+        assert!(
+            phases.iter().any(|p| p == expected),
+            "missing phase {expected:?} in {phases:?}"
+        );
+    }
+
+    // unknown ids and garbage queries answer 4xx, not 500
+    let (status, _, _) = http_request(addr, "GET", "/requests/999999", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = http_request(addr, "GET", "/trace?last=abc", None);
+    assert_eq!(status, 400);
+
+    // GET /trace — valid Chrome trace-event JSON, spans nested under the
+    // per-request root event
+    let (status, _, body) = http_request(addr, "GET", "/trace?last=8", None);
+    assert_eq!(status, 200, "{body}");
+    let trace = Json::parse(&body).expect("chrome trace json");
+    let events = trace.req("traceEvents").unwrap().as_arr().expect("events");
+    assert!(!events.is_empty());
+    let root = events
+        .iter()
+        .find(|e| e.req("name").unwrap().as_str() == Some("request"))
+        .expect("per-request root event");
+    let root_ts = root.req("ts").unwrap().as_f64().unwrap();
+    let root_end = root_ts + root.req("dur").unwrap().as_f64().unwrap();
+    for e in events {
+        assert_eq!(e.req("ph").unwrap().as_str(), Some("X"), "complete events");
+        if e.req("pid").unwrap().as_f64() != Some(1.0) {
+            continue; // kernel-sample track
+        }
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        let ev_end = ts + e.req("dur").unwrap().as_f64().unwrap();
+        assert!(
+            ts >= root_ts && ev_end <= root_end,
+            "event nests within its request root"
+        );
+        assert_eq!(e.req("tid").unwrap().as_f64(), Some(id as f64));
+    }
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn trace_endpoints_are_404_when_tracing_is_disabled() {
+    let mut cfg = serve_cfg();
+    cfg.trace.enabled = false;
+    let (_, handle) = start(cfg);
+    let addr = handle.addr();
+
+    let (status, _, body) = http_request(addr, "GET", "/trace", None);
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("disabled"), "{body}");
+    let (status, _, _) = http_request(addr, "GET", "/requests/1", None);
+    assert_eq!(status, 404);
+
+    handle.shutdown().expect("shutdown");
+}
+
+#[test]
+fn server_ttft_is_bracketed_by_client_observed_ttft() {
+    let (metrics, handle) = start(serve_cfg());
+    let addr = handle.addr();
+
+    // hand-rolled streaming exchange so the client can timestamp its own
+    // first-token arrival
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let body = r#"{"prompt": "time to first token", "rho": 0.6, "max_new": 3, "stream": true}"#;
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let t0 = std::time::Instant::now();
+    s.write_all(req.as_bytes()).expect("write request");
+    let mut seen = Vec::new();
+    let mut chunk = [0u8; 256];
+    while !String::from_utf8_lossy(&seen).contains("data: ") {
+        let n = s.read(&mut chunk).expect("read stream");
+        assert!(n > 0, "server closed before the first token");
+        seen.extend_from_slice(&chunk[..n]);
+    }
+    let client_ttft_us = t0.elapsed().as_micros() as u64;
+    // drain to completion so the lane delivers cleanly before shutdown
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => seen.extend_from_slice(&chunk[..n]),
+        }
+    }
+
+    // server-side TTFT is measured from admission to the Token event, a
+    // strict sub-interval of what the client observed around the wire
+    let (count, sum_us) = metrics.ttft_stats();
+    assert_eq!(count, 1, "one streamed request records one TTFT");
+    assert!(sum_us > 0, "prefill plus the first step takes measurable time");
+    assert!(
+        sum_us <= client_ttft_us,
+        "server TTFT {sum_us}us must not exceed client-observed {client_ttft_us}us"
+    );
+
+    // the same histogram family is scrapeable
+    let (_, _, text) = http_request(addr, "GET", "/metrics", None);
+    assert!(text.contains("mumoe_ttft_us_bucket{le=\"+Inf\"} 1"), "{text}");
+    assert!(text.contains("mumoe_ttft_us_count 1"), "{text}");
+    assert!(text.contains("mumoe_queue_wait_us_count 1"), "{text}");
 
     handle.shutdown().expect("shutdown");
 }
