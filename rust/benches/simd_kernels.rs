@@ -1,0 +1,360 @@
+//! SIMD + int8 kernel dispatch: scalar vs AVX2 vs FMA vs quantized.
+//!
+//! The `tensor::simd` dispatch only earns its keep if (a) the `Simd` mode
+//! is bit-identical to `Scalar` (so flipping the knob can never change
+//! tokens) and (b) it is at least as fast on the kernels the serving path
+//! actually runs. This bench checks both, at the three dispatch sites:
+//!
+//! * **batch** — `matmul_tn_sparse_mode` (the fused-sweep / prefill
+//!   kernel, AXPY inner loop over T contiguous lanes) and
+//!   `matmul_nt_mode` (the dense attention/linear row kernel);
+//! * **decode** — `matvec_nt_sparse_mode` (the per-step KV-decode dot);
+//! * **int8** — `quant_matvec_nt` / `quant_matmul_tn` against their f32
+//!   twins: tok/s, max relative drift, and argmax (token) agreement —
+//!   plus one end-to-end `LanePool` decode, f32 vs quantized layouts,
+//!   judged by `eval::host::decode_drift` (mean per-step KL + greedy
+//!   token agreement, the same machinery that gates mask-plan reuse).
+//!
+//! `Fma` is the opt-in fast mode: its drift against scalar is measured
+//! and reported, never gated (it is allowed to differ in the last bits).
+//!
+//! Emits `BENCH_simd_kernels.json`.
+//!
+//! Acceptance (full runs on an AVX2 host only): SIMD f32 tok/s >= scalar
+//! tok/s on the largest sparse batch shape, with bit-identical output.
+//! Hosts without AVX2 pass trivially (the dispatcher clamps to scalar).
+//!
+//! `--smoke`: tiny dims, 1 rep, no acceptance gate — CI runs this so the
+//! bench code cannot bit-rot.
+
+mod common;
+
+use common::{jnum, jstr};
+use mumoe::benchlib::{black_box, Bencher, Stats, Table};
+use mumoe::pruning::wanda::online_wanda_mask;
+use mumoe::tensor::{
+    matmul_tn_sparse_mode, matvec_nt_sparse_mode, quant_matmul_tn, quant_matvec_nt,
+    quant_matvec_nt_into, simd, Mat, SimdMode,
+};
+use mumoe::util::json::Json;
+use mumoe::util::rng::Pcg32;
+use std::collections::HashMap;
+
+const RHO: f64 = 0.5;
+
+fn smoke_bencher() -> Bencher {
+    Bencher {
+        warmup: std::time::Duration::from_millis(0),
+        budget: std::time::Duration::from_millis(0),
+        min_iters: 1,
+        max_iters: 1,
+    }
+}
+
+fn tps(tokens: usize, s: &Stats) -> f64 {
+    tokens as f64 / (s.mean_ms() / 1000.0).max(1e-12)
+}
+
+/// Largest |a-b| / max(|a|, |b|, 1e-6) over the pair — the drift metric
+/// for the modes that are allowed to differ (FMA contraction, int8).
+fn max_rel_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| f64::from((x - y).abs()) / f64::from(x.abs().max(y.abs()).max(1e-6)))
+        .fold(0.0, f64::max)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    black_box(best)
+}
+
+/// The policy layer is pure and host-independent — check the contract the
+/// CI forced-scalar leg relies on before timing anything.
+fn dispatch_section() -> Json {
+    assert_eq!(
+        simd::resolve_policy(Some("off"), SimdMode::Simd),
+        SimdMode::Scalar,
+        "MUMOE_SIMD=off must force the scalar fallback"
+    );
+    assert_eq!(
+        simd::resolve_policy(Some("fma"), SimdMode::Scalar),
+        SimdMode::Fma,
+        "MUMOE_SIMD=fma must override a scalar request"
+    );
+    assert_eq!(simd::resolve_policy(None, SimdMode::Fma), SimdMode::Fma);
+    assert_eq!(simd::clamp_to_host(SimdMode::Scalar), SimdMode::Scalar);
+    println!(
+        "dispatch: host avx2={} fma={} (MUMOE_SIMD=off forces scalar: ok)",
+        simd::detected(),
+        simd::fma_detected()
+    );
+    Json::Obj(HashMap::from([
+        ("avx2".into(), Json::Bool(simd::detected())),
+        ("fma".into(), Json::Bool(simd::fma_detected())),
+        ("env_off_forces_scalar".into(), Json::Bool(true)),
+    ]))
+}
+
+/// Sparse + dense batch kernels (the prefill / fused-sweep path).
+/// Returns the acceptance verdict: SIMD >= scalar tok/s on the largest
+/// sparse shape (None when the host has no AVX2 — nothing to gate).
+fn batch_section(results: &mut Vec<Json>, smoke: bool) -> Option<bool> {
+    let bencher = if smoke {
+        smoke_bencher()
+    } else {
+        Bencher::default()
+    };
+    let mut table = Table::new(
+        format!("Batch kernels at rho={RHO} (tok/s; simd == scalar bitwise)"),
+        &["kernel", "d_out x d_in", "T", "scalar", "simd", "fma", "fma drift"],
+    );
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(32, 16, 8)]
+    } else {
+        &[(256, 256, 128), (1024, 256, 128)]
+    };
+    let mut accept = None;
+    for &(d_out, d_in, t) in shapes {
+        let mut rng = Pcg32::new(42, (d_out * d_in) as u64);
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
+        let rs = online_wanda_mask(&w, &x, RHO).compress(&w);
+        let xt = x.t();
+
+        // sparse: the mu-MoE linear (AXPY over T contiguous lanes)
+        let y_scalar = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Scalar);
+        let y_simd = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Simd);
+        assert_eq!(
+            y_scalar.data, y_simd.data,
+            "sparse simd must be bit-identical to scalar ({d_out}x{d_in})"
+        );
+        let y_fma = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Fma);
+        let sp_drift = max_rel_diff(&y_scalar.data, &y_fma.data);
+        let sp_scalar = bencher.run(|| matmul_tn_sparse_mode(&xt, &rs, SimdMode::Scalar));
+        let sp_simd = bencher.run(|| matmul_tn_sparse_mode(&xt, &rs, SimdMode::Simd));
+        let sp_fma = bencher.run(|| matmul_tn_sparse_mode(&xt, &rs, SimdMode::Fma));
+        table.row(vec![
+            "sparse".into(),
+            format!("{d_out}x{d_in}"),
+            format!("{t}"),
+            format!("{:.0}", tps(t, &sp_scalar)),
+            format!("{:.0}", tps(t, &sp_simd)),
+            format!("{:.0}", tps(t, &sp_fma)),
+            format!("{sp_drift:.2e}"),
+        ]);
+
+        // dense: the attention / unpruned-linear row kernel
+        let d_scalar = x.matmul_nt_mode(&w, SimdMode::Scalar);
+        let d_simd = x.matmul_nt_mode(&w, SimdMode::Simd);
+        assert_eq!(
+            d_scalar.data, d_simd.data,
+            "dense simd must be bit-identical to scalar ({d_out}x{d_in})"
+        );
+        let d_fma = x.matmul_nt_mode(&w, SimdMode::Fma);
+        let dn_drift = max_rel_diff(&d_scalar.data, &d_fma.data);
+        let dn_scalar = bencher.run(|| x.matmul_nt_mode(&w, SimdMode::Scalar));
+        let dn_simd = bencher.run(|| x.matmul_nt_mode(&w, SimdMode::Simd));
+        let dn_fma = bencher.run(|| x.matmul_nt_mode(&w, SimdMode::Fma));
+        table.row(vec![
+            "dense".into(),
+            format!("{d_out}x{d_in}"),
+            format!("{t}"),
+            format!("{:.0}", tps(t, &dn_scalar)),
+            format!("{:.0}", tps(t, &dn_simd)),
+            format!("{:.0}", tps(t, &dn_fma)),
+            format!("{dn_drift:.2e}"),
+        ]);
+
+        results.push(Json::Obj(HashMap::from([
+            ("d_out".into(), jnum(d_out as f64)),
+            ("d_in".into(), jnum(d_in as f64)),
+            ("t".into(), jnum(t as f64)),
+            ("sparse_scalar_tps".into(), jnum(tps(t, &sp_scalar))),
+            ("sparse_simd_tps".into(), jnum(tps(t, &sp_simd))),
+            ("sparse_fma_tps".into(), jnum(tps(t, &sp_fma))),
+            ("sparse_fma_drift".into(), jnum(sp_drift)),
+            ("dense_scalar_tps".into(), jnum(tps(t, &dn_scalar))),
+            ("dense_simd_tps".into(), jnum(tps(t, &dn_simd))),
+            ("dense_fma_tps".into(), jnum(tps(t, &dn_fma))),
+            ("dense_fma_drift".into(), jnum(dn_drift)),
+        ])));
+        // gate on the largest shape only (first rows are noise-prone)
+        if !smoke && simd::detected() {
+            accept = Some(tps(t, &sp_simd) >= tps(t, &sp_scalar));
+        }
+    }
+    table.print();
+    accept
+}
+
+/// Decode-step kernels: the per-token sparse dot, f32 vs int8.
+fn decode_section(results: &mut Vec<Json>, smoke: bool) {
+    let bencher = if smoke {
+        smoke_bencher()
+    } else {
+        Bencher::default()
+    };
+    let mut table = Table::new(
+        format!("Decode step at rho={RHO} (matvec tok/s; int8 vs f32)"),
+        &["d_out x d_in", "scalar", "simd", "int8", "int8 drift", "argmax"],
+    );
+    let shapes: &[(usize, usize)] = if smoke {
+        &[(32, 16)]
+    } else {
+        &[(256, 256), (1024, 256), (1024, 1024)]
+    };
+    for &(d_out, d_in) in shapes {
+        let mut rng = Pcg32::new(7, (d_out * d_in) as u64);
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let x = Mat::from_vec(1, d_in, rng.normal_vec(d_in));
+        let rs = online_wanda_mask(&w, &x, RHO).compress_quant(&w);
+        let q = rs
+            .quant
+            .as_ref()
+            .expect("compress_quant attaches the sidecar")
+            .clone();
+
+        let mut y_scalar = Vec::new();
+        let mut y_simd = Vec::new();
+        matvec_nt_sparse_mode(&x.data, &rs, &mut y_scalar, SimdMode::Scalar);
+        matvec_nt_sparse_mode(&x.data, &rs, &mut y_simd, SimdMode::Simd);
+        assert_eq!(
+            y_scalar, y_simd,
+            "decode simd must be bit-identical to scalar ({d_out}x{d_in})"
+        );
+        let y_q = quant_matvec_nt(&x.data, &q);
+        let drift = max_rel_diff(&y_scalar, &y_q);
+        let agree = argmax(&y_scalar) == argmax(&y_q);
+        // int8 batch form must agree with its own matvec bit-for-bit
+        // (same accumulation order), mirroring the f32 kernels' contract
+        assert_eq!(quant_matmul_tn(&x.t(), &q).data, y_q);
+
+        let mut buf = Vec::new();
+        let t_scalar =
+            bencher.run(|| matvec_nt_sparse_mode(&x.data, &rs, &mut buf, SimdMode::Scalar));
+        let t_simd = bencher.run(|| matvec_nt_sparse_mode(&x.data, &rs, &mut buf, SimdMode::Simd));
+        let mut qbuf = Vec::new();
+        let t_q = bencher.run(|| quant_matvec_nt_into(&x.data, &q, &mut qbuf));
+        table.row(vec![
+            format!("{d_out}x{d_in}"),
+            format!("{:.0}", tps(1, &t_scalar)),
+            format!("{:.0}", tps(1, &t_simd)),
+            format!("{:.0}", tps(1, &t_q)),
+            format!("{drift:.2e}"),
+            if agree { "same".into() } else { "DIFFERS".into() },
+        ]);
+        results.push(Json::Obj(HashMap::from([
+            ("d_out".into(), jnum(d_out as f64)),
+            ("d_in".into(), jnum(d_in as f64)),
+            ("scalar_tps".into(), jnum(tps(1, &t_scalar))),
+            ("simd_tps".into(), jnum(tps(1, &t_simd))),
+            ("int8_tps".into(), jnum(tps(1, &t_q))),
+            ("int8_drift".into(), jnum(drift)),
+            ("int8_argmax_agrees".into(), Json::Bool(agree)),
+        ])));
+    }
+    table.print();
+}
+
+/// End-to-end int8 quality: one full greedy decode, f32 vs quantized
+/// layouts, through the same `LanePool` the server runs — judged by the
+/// decode-drift machinery (mean per-step KL + greedy-token agreement)
+/// that already gates mask-plan reuse in `decode_reuse`.
+fn quant_drift_section(smoke: bool) -> Json {
+    use mumoe::decode::{DecodeOutput, LaneEvent, LanePool};
+    use mumoe::eval::host::decode_drift;
+    use mumoe::model::config_by_name;
+    use mumoe::nn::{random_model, Model};
+    use mumoe::pruning::MaskPlan;
+    use mumoe::tensor::LayoutCache;
+
+    fn run(model: &Model, prompt: &[i32], n_new: usize, quant: bool) -> (DecodeOutput, f64) {
+        let mut cache = LayoutCache::new(64);
+        let mut pool = LanePool::new(1);
+        pool.set_quant(quant);
+        pool.admit(model, prompt, n_new, MaskPlan::PruneOnce, true);
+        let t0 = std::time::Instant::now();
+        let mut done = None;
+        while done.is_none() {
+            let mut copt = Some(&mut cache);
+            for ev in pool.sweep(model, RHO, true, &mut copt) {
+                if let LaneEvent::Done { output, .. } = ev {
+                    done = Some(output);
+                }
+            }
+        }
+        (done.expect("lane finished"), t0.elapsed().as_secs_f64())
+    }
+
+    let cfg = config_by_name("mu-opt-micro").expect("known model");
+    let model = random_model(&cfg, 7);
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 37 + 11) % 256).collect();
+    let n_new = if smoke { 4 } else { 24 };
+    let (base, base_s) = run(&model, &prompt, n_new, false);
+    let (q, quant_s) = run(&model, &prompt, n_new, true);
+    let drift = decode_drift(&base, &q);
+    let f32_tps = base.steps.len() as f64 / base_s.max(1e-9);
+    let int8_tps = q.steps.len() as f64 / quant_s.max(1e-9);
+    println!(
+        "\nint8 end-to-end (mu-opt-micro, rho={RHO}, prune-once): {} steps, \
+         mean KL {:.3e}, token agreement {:.2}, f32 {:.1} tok/s vs int8 {:.1} tok/s",
+        drift.steps, drift.mean_kl, drift.token_agreement, f32_tps, int8_tps
+    );
+    Json::Obj(HashMap::from([
+        ("steps".into(), jnum(drift.steps as f64)),
+        ("mean_kl".into(), jnum(drift.mean_kl)),
+        ("token_agreement".into(), jnum(drift.token_agreement)),
+        ("max_abs_logit_delta".into(), jnum(drift.max_abs_logit_delta)),
+        ("f32_tps".into(), jnum(f32_tps)),
+        ("int8_tps".into(), jnum(int8_tps)),
+    ]))
+}
+
+fn main() {
+    let smoke = common::smoke_flag();
+    println!("simd_kernels{}", if smoke { " (smoke mode)" } else { "" });
+    let dispatch = dispatch_section();
+    let mut batch = Vec::new();
+    let mut decode = Vec::new();
+    let accept = batch_section(&mut batch, smoke);
+    decode_section(&mut decode, smoke);
+    let quant_drift = quant_drift_section(smoke);
+
+    match accept {
+        Some(ok) => println!(
+            "\nACCEPTANCE: simd sparse tok/s >= scalar on the largest shape \
+             ({})",
+            if ok { "PASS" } else { "FAIL" }
+        ),
+        None => println!(
+            "\nACCEPTANCE: not evaluated ({})",
+            if smoke {
+                "smoke mode"
+            } else {
+                "host has no AVX2 — scalar only"
+            }
+        ),
+    }
+
+    let out = Json::Obj(HashMap::from([
+        ("bench".into(), jstr("simd_kernels")),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("dispatch".into(), dispatch),
+        ("batch".into(), Json::Arr(batch)),
+        ("decode".into(), Json::Arr(decode)),
+        ("quant_drift".into(), quant_drift),
+        (
+            "accept_simd_ge_scalar".into(),
+            accept.map(Json::Bool).unwrap_or(Json::Null),
+        ),
+    ]));
+    println!();
+    common::write_bench_json("BENCH_simd_kernels.json", &out);
+    common::exit_on_gate(accept.unwrap_or(true), smoke);
+}

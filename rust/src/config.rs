@@ -312,6 +312,11 @@ pub struct KvStoreKnobs {
     /// Idle seconds before a parked session is expired (swept
     /// opportunistically when lanes finish). CLI: `--session-ttl`.
     pub session_ttl_secs: u64,
+    /// Bound on concurrent session slots in the registry. At the cap, a
+    /// new session id evicts the least-recently-used *parked* slot, or is
+    /// rejected (HTTP 429) when every slot is mid-flight. CLI:
+    /// `--max-sessions`.
+    pub max_sessions: usize,
 }
 
 impl Default for KvStoreKnobs {
@@ -320,6 +325,33 @@ impl Default for KvStoreKnobs {
             enabled: true,
             token_budget: 4096,
             session_ttl_secs: 600,
+            max_sessions: crate::kvstore::DEFAULT_MAX_SESSIONS,
+        }
+    }
+}
+
+/// Kernel-dispatch knobs (the `[kernel]` config section; see
+/// `crate::tensor::simd` and `crate::tensor::quant`).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelKnobs {
+    /// Requested SIMD mode for the sparse/dense inner kernels:
+    /// `"scalar"` | `"simd"` (default; bit-identical to scalar) |
+    /// `"fma"` (fused multiply-add fast path — changes rounding, opt-in
+    /// only). Clamped to host capability at engine prepare; the
+    /// `MUMOE_SIMD` env var overrides both. CLI: `--simd`.
+    pub simd: crate::tensor::SimdMode,
+    /// Compress pruned layouts with an int8 per-row-absmax sidecar and
+    /// run the quantized kernels (f32 accumulate). Approximate — gate
+    /// with the decode-drift eval before enabling in production. CLI:
+    /// `--quant` / `--no-quant`.
+    pub quant: bool,
+}
+
+impl Default for KernelKnobs {
+    fn default() -> Self {
+        Self {
+            simd: crate::tensor::SimdMode::Simd,
+            quant: false,
         }
     }
 }
@@ -394,6 +426,9 @@ pub struct ServeConfig {
     pub kvstore: KvStoreKnobs,
     /// Per-request tracing (see [`TraceKnobs`]).
     pub trace: TraceKnobs,
+    /// Kernel dispatch: SIMD mode + int8 quantization (see
+    /// [`KernelKnobs`]).
+    pub kernel: KernelKnobs,
 }
 
 impl Default for ServeConfig {
@@ -413,6 +448,7 @@ impl Default for ServeConfig {
             decode: DecodeKnobs::default(),
             kvstore: KvStoreKnobs::default(),
             trace: TraceKnobs::default(),
+            kernel: KernelKnobs::default(),
         }
     }
 }
@@ -427,6 +463,14 @@ impl ServeConfig {
         let plan = match t.get("decode.plan").and_then(Value::as_str) {
             Some(s) => crate::pruning::MaskPlan::parse(s)?,
             None => d.decode.plan,
+        };
+        let simd = match t.get("kernel.simd").and_then(Value::as_str) {
+            Some(s) => crate::tensor::SimdMode::parse(s).ok_or_else(|| {
+                Error::config(format!(
+                    "unknown kernel.simd '{s}' (expected scalar | simd | fma)"
+                ))
+            })?,
+            None => d.kernel.simd,
         };
         let cfg = Self {
             artifacts_dir: t.str_or("runtime.artifacts_dir", &d.artifacts_dir),
@@ -460,6 +504,7 @@ impl ServeConfig {
                     "kvstore.session_ttl_secs",
                     d.kvstore.session_ttl_secs as usize,
                 ) as u64,
+                max_sessions: t.usize_or("kvstore.max_sessions", d.kvstore.max_sessions),
             },
             trace: TraceKnobs {
                 enabled: t.bool_or("trace.enabled", d.trace.enabled),
@@ -468,6 +513,10 @@ impl ServeConfig {
                     "trace.kernel_sample_every",
                     d.trace.kernel_sample_every as usize,
                 ) as u64,
+            },
+            kernel: KernelKnobs {
+                simd,
+                quant: t.bool_or("kernel.quant", d.kernel.quant),
             },
         };
         cfg.validate()?;
@@ -524,6 +573,9 @@ impl ServeConfig {
         }
         if self.kvstore.enabled && self.kvstore.session_ttl_secs == 0 {
             return Err(Error::config("kvstore.session_ttl_secs must be > 0"));
+        }
+        if self.kvstore.enabled && self.kvstore.max_sessions == 0 {
+            return Err(Error::config("kvstore.max_sessions must be > 0"));
         }
         if self.trace.enabled && self.trace.capacity == 0 {
             return Err(Error::config("trace.capacity must be > 0"));
@@ -749,14 +801,46 @@ default_rho = 0.6
         })
         .validate()
         .is_err());
-        // disabled stores skip the budget/ttl checks
+        assert!(with_knobs(KvStoreKnobs {
+            max_sessions: 0,
+            ..Default::default()
+        })
+        .validate()
+        .is_err());
+        // disabled stores skip the budget/ttl/session-cap checks
         assert!(with_knobs(KvStoreKnobs {
             enabled: false,
             token_budget: 0,
             session_ttl_secs: 0,
+            max_sessions: 0,
         })
         .validate()
         .is_ok());
+    }
+
+    #[test]
+    fn max_sessions_from_toml() {
+        let t = Toml::parse("[kvstore]\nmax_sessions = 16\n").unwrap();
+        assert_eq!(ServeConfig::from_toml(&t).unwrap().kvstore.max_sessions, 16);
+        // absent ⇒ registry default
+        let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.kvstore.max_sessions, crate::kvstore::DEFAULT_MAX_SESSIONS);
+    }
+
+    #[test]
+    fn kernel_knobs_from_toml() {
+        let t = Toml::parse("[kernel]\nsimd = \"scalar\"\nquant = true\n").unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert_eq!(c.kernel.simd, crate::tensor::SimdMode::Scalar);
+        assert!(c.kernel.quant);
+        // defaults when the section is absent
+        let d = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.kernel.simd, crate::tensor::SimdMode::Simd);
+        assert!(!d.kernel.quant, "int8 kernels are opt-in");
+        // bad spelling is a typed error, not a silent default
+        let bad = Toml::parse("[kernel]\nsimd = \"sse9\"\n").unwrap();
+        let err = ServeConfig::from_toml(&bad).unwrap_err();
+        assert!(err.to_string().contains("kernel.simd"), "{err}");
     }
 
     #[test]

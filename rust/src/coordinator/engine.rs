@@ -121,6 +121,10 @@ pub struct HostEngine {
     /// Per-lane KV caches inside `decode_batch` (`[decode] kv_cache`,
     /// default on; outputs are bit-identical either way).
     kv_cache: bool,
+    /// Compress layouts with int8 sidecars and run the quantized kernels
+    /// (`[kernel] quant`, default off — approximate, gate with the
+    /// decode-drift eval).
+    quant: bool,
     /// Optional sink for fused-sweep width observations (the drain
     /// path's counterpart of `run_pool`'s per-sweep recording).
     metrics: Option<Arc<Metrics>>,
@@ -135,11 +139,24 @@ impl HostEngine {
         stop_at_eos: bool,
         kv_cache: bool,
     ) -> Self {
+        HostEngine::with_model_quant(model, cache, stop_at_eos, kv_cache, false)
+    }
+
+    /// [`with_model`](HostEngine::with_model) plus the int8-quantized
+    /// kernel toggle.
+    pub fn with_model_quant(
+        model: Model,
+        cache: Arc<Mutex<LayoutCache>>,
+        stop_at_eos: bool,
+        kv_cache: bool,
+        quant: bool,
+    ) -> Self {
         HostEngine {
             model,
             cache,
             stop_at_eos,
             kv_cache,
+            quant,
             metrics: None,
         }
     }
@@ -168,8 +185,16 @@ impl Engine for HostEngine {
     ) -> Result<Prepared<Self>, Error> {
         let model = host_model(cfg)?;
         let seq_len = model.cfg.max_seq_len;
-        let mut engine =
-            HostEngine::with_model(model, cache, cfg.decode.stop_at_eos, cfg.decode.kv_cache);
+        // resolve the process-wide SIMD mode once, on the serve thread:
+        // config request, clamped to host capability, MUMOE_SIMD override
+        crate::tensor::simd::set_mode(cfg.kernel.simd);
+        let mut engine = HostEngine::with_model_quant(
+            model,
+            cache,
+            cfg.decode.stop_at_eos,
+            cfg.decode.kv_cache,
+            cfg.kernel.quant,
+        );
         if let Some(m) = metrics {
             engine = engine.with_metrics(m);
         }
@@ -205,6 +230,7 @@ impl Engine for HostEngine {
             rho,
             self.stop_at_eos,
             self.kv_cache,
+            self.quant,
             Some(&mut cache),
             |groups| {
                 if let Some(m) = &metrics {
@@ -418,6 +444,27 @@ mod tests {
             assert_eq!(a.tokens, b.tokens);
             assert_eq!(a.logits, b.logits);
             assert_eq!(a.steps, b.steps);
+        }
+    }
+
+    #[test]
+    fn quant_engine_is_deterministic() {
+        // int8 kernels are approximate vs f32 but must stay a pure
+        // function of the batch — two runs agree bit-exactly
+        let run = || {
+            let cache = Arc::new(Mutex::new(LayoutCache::new(64)));
+            let mut eng = HostEngine::with_model_quant(tiny_model(), cache, false, true, true);
+            eng.execute(DecodeBatch {
+                rho: 0.5,
+                requests: vec![req(1, &[1, 2, 3], 0.5, 4), req(2, &[9, 8], 0.5, 2)],
+            })
+            .expect("execute")
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.logits, y.logits);
         }
     }
 

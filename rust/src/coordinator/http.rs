@@ -507,10 +507,11 @@ fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
     ) {
         Ok(req) => req,
         Err(rej) => {
-            let status = if rej.rejected.as_deref() == Some("queue full") {
-                429
-            } else {
-                400
+            // load shedding (full queue / full session registry) is 429;
+            // everything else is a malformed request
+            let status = match rej.rejected.as_deref() {
+                Some("queue full") | Some("session registry at capacity") => 429,
+                _ => 400,
             };
             let id = rej.id;
             let msg = rej.rejected.unwrap_or_else(|| "rejected".into());

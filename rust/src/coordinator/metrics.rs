@@ -178,6 +178,9 @@ pub struct Metrics {
     /// or shed from the queue at admission-pop time). Disjoint from
     /// `completed` and `rejected`.
     pub cancelled: AtomicU64,
+    /// Session requests shed because the registry was at capacity with
+    /// every slot mid-flight (a subset of `rejected`; HTTP returns 429).
+    pub sessions_rejected: AtomicU64,
     pub batches: AtomicU64,
     pub batch_slots: AtomicU64,
     pub batch_occupied: AtomicU64,
@@ -218,6 +221,7 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            sessions_rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_slots: AtomicU64::new(0),
             batch_occupied: AtomicU64::new(0),
@@ -275,6 +279,12 @@ impl Metrics {
 
     pub fn record_cancel(&self) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session request shed because the registry was at capacity (the
+    /// caller also records the generic reject).
+    pub fn record_session_rejected(&self) {
+        self.sessions_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One request admitted into a *running* lane pool at a snapped level
@@ -621,6 +631,12 @@ impl Metrics {
         );
         counter(
             &mut s,
+            "mumoe_sessions_rejected_total",
+            "Session requests shed at the registry capacity bound",
+            g(&self.sessions_rejected),
+        );
+        counter(
+            &mut s,
             "mumoe_batches_total",
             "Scheduling units executed (drained batches + lane-pool runs)",
             g(&self.batches),
@@ -834,6 +850,7 @@ impl Metrics {
         m.insert("rejected".into(), g(&self.rejected));
         m.insert("completed".into(), g(&self.completed));
         m.insert("cancelled".into(), g(&self.cancelled));
+        m.insert("sessions_rejected".into(), g(&self.sessions_rejected));
         m.insert("batches".into(), g(&self.batches));
         m.insert("occupancy".into(), Json::Num(self.batch_occupancy()));
         m.insert("lane_occupancy".into(), Json::Num(self.lane_occupancy()));
@@ -1154,6 +1171,17 @@ mod tests {
         assert!(text.contains("mumoe_kvstore_resident_tokens 48"), "{text}");
         assert!(text.contains("mumoe_kvstore_evictions_total 5"), "{text}");
         assert!(text.contains("mumoe_sessions_active 1"), "{text}");
+    }
+
+    #[test]
+    fn session_rejections_render_in_prometheus_and_json() {
+        let m = Metrics::new();
+        m.record_reject();
+        m.record_session_rejected();
+        let text = m.to_prometheus();
+        assert!(text.contains("mumoe_sessions_rejected_total 1"), "{text}");
+        let j = m.to_json();
+        assert_eq!(j.req("sessions_rejected").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

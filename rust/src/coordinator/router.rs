@@ -75,6 +75,9 @@ impl Router {
             cfg.trace.capacity,
             cfg.trace.kernel_sample_every,
         ));
+        // the registry asserts cap > 0; a disabled kvstore never begins
+        // sessions, so its (unvalidated) max_sessions must not trip that
+        let max_sessions = cfg.kvstore.max_sessions.max(1);
         Ok(Router {
             cfg,
             seq_len,
@@ -84,7 +87,7 @@ impl Router {
             depth: Arc::new(AtomicU64::new(0)),
             layout_cache,
             kv_store,
-            sessions: Arc::new(SessionRegistry::new()),
+            sessions: Arc::new(SessionRegistry::with_capacity(max_sessions)),
             recorder,
         })
     }
@@ -191,6 +194,17 @@ impl Router {
                 return Err(Box::new(Response::rejected(
                     id,
                     "sessions need kvstore.enabled, decode.continuous and decode.kv_cache",
+                )));
+            }
+            // registry at capacity with every slot mid-flight: shed here
+            // (HTTP maps this to 429) instead of failing in the serve
+            // loop. Checking without creating keeps admission slot-free.
+            if !self.sessions.admissible(s) {
+                self.metrics.record_reject();
+                self.metrics.record_session_rejected();
+                return Err(Box::new(Response::rejected(
+                    id,
+                    "session registry at capacity",
                 )));
             }
         }
@@ -459,6 +473,35 @@ mod tests {
             .unwrap_err();
         assert!(rej.rejected.as_deref().unwrap().contains("kvstore.enabled"));
         // sessionless requests still admit fine with the store off
+        assert!(r.admit("hi", 0.5, "d", None).is_ok());
+    }
+
+    #[test]
+    fn session_admission_sheds_at_registry_capacity() {
+        // regression for the unbounded registry: a full registry whose
+        // slots are all mid-flight must 429 new session ids at the front
+        // door, not fail inside the serve loop
+        let mut cfg = ServeConfig {
+            queue_cap: 10,
+            rho_levels: vec![0.4, 0.6, 1.0],
+            ..Default::default()
+        };
+        cfg.kvstore.max_sessions = 1;
+        let r = Router::new(cfg, 128, Arc::new(Metrics::new())).unwrap();
+        assert_eq!(r.sessions().capacity(), 1);
+        // occupy the single slot with an in-flight session (begun, never
+        // parked — not evictable)
+        r.sessions().begin("busy").unwrap();
+        let rej = r
+            .admit_decode("hi", 0.5, "d", 1, None, Some("other".into()), None, None)
+            .unwrap_err();
+        assert!(rej.rejected.as_deref().unwrap().contains("at capacity"));
+        assert_eq!(r.metrics().rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(r.metrics().sessions_rejected.load(Ordering::Relaxed), 1);
+        // the existing session id still admits, as do sessionless requests
+        assert!(r
+            .admit_decode("hi", 0.5, "d", 1, None, Some("busy".into()), None, None)
+            .is_ok());
         assert!(r.admit("hi", 0.5, "d", None).is_ok());
     }
 

@@ -711,11 +711,18 @@ fn admit_lane(
     // session continuation: the lane decodes `parked window ++ new turn`,
     // pinned to the parked layouts and seeded with the parked rows (full
     // prefill of only the new turn). A fresh/unknown session id just
-    // registers the slot; the lane parks into it on finish.
+    // registers the slot; the lane parks into it on finish. `begin` can
+    // refuse at the registry's capacity bound (every slot mid-flight);
+    // admission raced past the router's `admissible` check, so shed the
+    // request here with the same named reason.
     let mut prompt = std::borrow::Cow::Borrowed(&req.tokens[..req.valid_len]);
     let mut resume = None;
-    let session = req.session.take().map(|id| {
-        let (parked, generation) = ctx.sessions.begin(&id);
+    let mut session_refused = false;
+    let session = req.session.take().and_then(|id| {
+        let Some((parked, generation)) = ctx.sessions.begin(&id) else {
+            session_refused = true;
+            return None;
+        };
         if let Some(state) = parked {
             let mut joined = state.tokens.clone();
             joined.extend_from_slice(&prompt);
@@ -725,8 +732,17 @@ fn admit_lane(
                 entry: state.entry.clone(),
             });
         }
-        (id, generation)
+        Some((id, generation))
     });
+    if session_refused {
+        ctx.metrics.record_reject();
+        ctx.metrics.record_session_rejected();
+        ctx.recorder.finish(req.id, "rejected");
+        if let Some(reply) = req.reply.take() {
+            let _ = reply.send(Response::rejected(req.id, "session registry at capacity"));
+        }
+        return;
+    }
     let seed = LaneSeed {
         store: ctx.store.clone(),
         resume,

@@ -82,7 +82,7 @@
 
 use crate::coordinator::request::argmax;
 use crate::kvstore::{self, KvEntry, KvStore};
-use crate::moe::{self, layouts_for};
+use crate::moe;
 use crate::nn::{FixedLayouts, KvCache, Model, StepBatchScratch, StepScratch};
 use crate::pruning::MaskPlan;
 use crate::tensor::{fnv1a64, LayoutCache};
@@ -269,6 +269,9 @@ struct Lane {
     /// Seeded / prefilled window-token deltas of the most recent step.
     last_seeded: usize,
     last_prefilled: usize,
+    /// Refreshes compress with an int8 sidecar ([`moe::layouts_for_mode`])
+    /// so the forwards run the quantized kernels.
+    quant: bool,
 }
 
 impl Lane {
@@ -297,6 +300,7 @@ impl Lane {
             last_kind: StepKind::Step,
             last_seeded: 0,
             last_prefilled: 0,
+            quant: false,
         }
     }
 
@@ -345,7 +349,7 @@ impl Lane {
         if refreshed {
             let (h0, m0) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
             let sel = moe::select_experts(model, window, valid, rho);
-            self.layouts = layouts_for(model, &sel, cache.as_deref_mut());
+            self.layouts = moe::layouts_for_mode(model, &sel, cache.as_deref_mut(), self.quant);
             let (h1, m1) = cache.as_deref().map_or((0, 0), |c| (c.hits(), c.misses()));
             self.cache_hits += h1 - h0;
             self.cache_misses += m1 - m0;
@@ -662,6 +666,8 @@ pub struct LanePool {
     /// The most recent sampled sweep's (stepped lanes, kernel split),
     /// consumed by [`LanePool::take_kernel_sample`].
     kernel_sample: Option<(usize, StepProfile)>,
+    /// Admit lanes in int8-quantized kernel mode (see [`Lane::quant`]).
+    quant: bool,
 }
 
 /// Identity of a lane's per-linear layouts for fused-group formation: an
@@ -728,6 +734,7 @@ impl LanePool {
             kernel_sample_every: 0,
             sweep_counter: 0,
             kernel_sample: None,
+            quant: false,
         }
     }
 
@@ -755,6 +762,14 @@ impl LanePool {
     /// (`proptest.rs::continuous_props` proves it over random schedules).
     pub fn set_fuse(&mut self, fuse: bool) {
         self.fuse = fuse;
+    }
+
+    /// Admit subsequent lanes in int8-quantized kernel mode: every plan
+    /// refresh compresses with [`crate::pruning::Mask::compress_quant`],
+    /// so forwards run the quantized kernels. Off by default; quality vs
+    /// f32 is measured by the decode-drift machinery, not assumed.
+    pub fn set_quant(&mut self, quant: bool) {
+        self.quant = quant;
     }
 
     /// Widths of the step groups the most recent [`LanePool::sweep`] ran:
@@ -840,6 +855,7 @@ impl LanePool {
             lane_wants_kv(use_kv, max_new, plan)
         };
         let mut lane = Lane::new(model, prompt, wants_kv);
+        lane.quant = self.quant;
         lane.park = seed.park;
         if wants_kv {
             lane.store = seed.store;
@@ -1103,7 +1119,7 @@ pub fn decode_batch(
     use_kv: bool,
     cache: Option<&mut LayoutCache>,
 ) -> Vec<DecodeOutput> {
-    decode_batch_observed(model, items, rho, stop_at_eos, use_kv, cache, |_| {})
+    decode_batch_observed(model, items, rho, stop_at_eos, use_kv, false, cache, |_| {})
 }
 
 /// [`decode_batch`] with a per-sweep observer: after every pool sweep,
@@ -1111,13 +1127,16 @@ pub fn decode_batch(
 /// ([`LanePool::last_sweep_groups`]). The coordinator's drain path feeds
 /// these into the per-ρ fused-width metrics histogram; observation cannot
 /// change the decode (the observer runs between sweeps, after all state
-/// updates).
+/// updates). `quant` admits every lane in int8-quantized kernel mode
+/// (see [`LanePool::set_quant`]).
+#[allow(clippy::too_many_arguments)]
 pub fn decode_batch_observed(
     model: &Model,
     items: &[BatchRequest<'_>],
     rho: f64,
     stop_at_eos: bool,
     use_kv: bool,
+    quant: bool,
     mut cache: Option<&mut LayoutCache>,
     mut on_sweep: impl FnMut(&[usize]),
 ) -> Vec<DecodeOutput> {
@@ -1125,6 +1144,7 @@ pub fn decode_batch_observed(
         return Vec::new();
     }
     let mut pool = LanePool::new(items.len());
+    pool.set_quant(quant);
     for it in items {
         pool.admit(model, it.prompt, it.max_new, it.plan, use_kv);
     }
@@ -1727,6 +1747,29 @@ mod tests {
     }
 
     #[test]
+    fn quant_decode_is_deterministic_and_kv_transparent() {
+        // within quant mode the bit-identity ladder must keep holding:
+        // the quant matvec (KV step) and quant matmul (prefill) share one
+        // accumulation order, so KV on/off cannot change tokens or logits
+        let m = tiny_model();
+        let prompt: &[i32] = &[3, 1, 4, 1, 5];
+        let items = [
+            batch_item(prompt, 5, MaskPlan::Refresh(2)),
+            batch_item(prompt, 5, MaskPlan::PruneOnce),
+        ];
+        let kv_on = decode_batch_observed(&m, &items, 0.5, false, true, true, None, |_| {});
+        let kv_off = decode_batch_observed(&m, &items, 0.5, false, false, true, None, |_| {});
+        for (i, (a, b)) in kv_on.iter().zip(&kv_off).enumerate() {
+            assert_outputs_identical(&format!("quant lane {i}"), a, b);
+        }
+        // and a repeat run is bit-identical (determinism)
+        let again = decode_batch_observed(&m, &items, 0.5, false, true, true, None, |_| {});
+        for (i, (a, b)) in kv_on.iter().zip(&again).enumerate() {
+            assert_outputs_identical(&format!("quant repeat lane {i}"), a, b);
+        }
+    }
+
+    #[test]
     fn decode_batch_observed_reports_group_widths() {
         let m = tiny_model();
         let prompt: &[i32] = &[9, 1, 7];
@@ -1736,9 +1779,10 @@ mod tests {
         ];
         let mut cache = crate::tensor::LayoutCache::new(64);
         let mut sweeps: Vec<Vec<usize>> = Vec::new();
-        let outs = decode_batch_observed(&m, &items, 0.5, false, true, Some(&mut cache), |g| {
-            sweeps.push(g.to_vec())
-        });
+        let outs =
+            decode_batch_observed(&m, &items, 0.5, false, true, false, Some(&mut cache), |g| {
+                sweeps.push(g.to_vec())
+            });
         assert_eq!(outs.len(), 2);
         assert_eq!(sweeps.len(), 4, "one observation per sweep");
         assert_eq!(sweeps[0], vec![1, 1], "prefill sweep per-lane");

@@ -45,7 +45,7 @@
 
 use crate::nn::FixedLayouts;
 use crate::tensor::fnv1a64;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -126,12 +126,42 @@ impl KvEntry {
 
 struct StoreInner {
     entries: HashMap<PrefixKey, (Arc<KvEntry>, u64)>,
+    /// Published prefix lengths per `(weights, layout_chain)`:
+    /// `length → resident entries of that length`. Lookups probe only
+    /// these lengths (longest first) instead of every `T..1`, so a
+    /// two-entry store costs two probes however long the window is.
+    lengths: HashMap<(u64, u64), BTreeMap<usize, u32>>,
     tick: u64,
     resident_tokens: usize,
     hits: u64,
     misses: u64,
     insertions: u64,
     evictions: u64,
+}
+
+impl StoreInner {
+    fn index_insert(&mut self, weights: u64, chain: u64, len: usize) {
+        *self
+            .lengths
+            .entry((weights, chain))
+            .or_default()
+            .entry(len)
+            .or_insert(0) += 1;
+    }
+
+    fn index_remove(&mut self, weights: u64, chain: u64, len: usize) {
+        if let Some(m) = self.lengths.get_mut(&(weights, chain)) {
+            if let Some(c) = m.get_mut(&len) {
+                *c -= 1;
+                if *c == 0 {
+                    m.remove(&len);
+                }
+            }
+            if m.is_empty() {
+                self.lengths.remove(&(weights, chain));
+            }
+        }
+    }
 }
 
 /// Shared, capacity-bounded prefix-keyed KV store. The budget is in
@@ -151,6 +181,7 @@ impl KvStore {
             token_budget,
             inner: Mutex::new(StoreInner {
                 entries: HashMap::new(),
+                lengths: HashMap::new(),
                 tick: 0,
                 resident_tokens: 0,
                 hits: 0,
@@ -166,18 +197,27 @@ impl KvStore {
     }
 
     /// Longest cached prefix of `window` under (`weights`, `chain`).
-    /// Probes every length from `window.len()` down to 1 against the
-    /// one-pass [`prefix_hashes`] and verifies the stored tokens on a hash
-    /// match. Returns the entry and its matched length `n ≤ window.len()`
-    /// — callers seeding a decode cache clamp the seeded rows to
-    /// `window.len() - 1` so at least one token remains to step for
-    /// logits. Counts exactly one hit or one miss per call.
+    /// Probes only the prefix lengths actually published for this
+    /// (`weights`, `chain`) pair — longest first, via the store's length
+    /// index — and verifies the stored tokens on a hash match. Returns the
+    /// entry and its matched length `n ≤ window.len()` — callers seeding a
+    /// decode cache clamp the seeded rows to `window.len() - 1` so at
+    /// least one token remains to step for logits. Counts exactly one hit
+    /// or one miss per call.
     pub fn lookup(&self, weights: u64, chain: u64, window: &[i32]) -> Option<(Arc<KvEntry>, usize)> {
-        let hashes = prefix_hashes(window);
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
-        for n in (1..=window.len()).rev() {
+        let candidates: Vec<usize> = match g.lengths.get(&(weights, chain)) {
+            Some(m) => m.range(1..=window.len()).rev().map(|(&n, _)| n).collect(),
+            None => Vec::new(),
+        };
+        if candidates.is_empty() {
+            g.misses += 1;
+            return None;
+        }
+        let hashes = prefix_hashes(window);
+        for n in candidates {
             let key = PrefixKey {
                 weights,
                 prefix_hash: hashes[n],
@@ -201,8 +241,10 @@ impl KvStore {
     /// entries until the resident-token total fits the budget. An entry
     /// larger than the whole budget is dropped rather than flushing the
     /// store for a row set nothing else can share space with. Re-publishing
-    /// an existing key only refreshes its recency (the keying discipline
-    /// makes the rows identical).
+    /// an existing key verifies the resident tokens first: equal tokens
+    /// only refresh recency, while a mismatch (a hash collision parked a
+    /// foreign prefix under this key) replaces the resident entry so the
+    /// fresh rows win — collisions must never serve another prompt's rows.
     pub fn publish(&self, weights: u64, chain: u64, entry: KvEntry) {
         if entry.is_empty() || entry.len() > self.token_budget {
             return;
@@ -213,15 +255,34 @@ impl KvStore {
             prefix_len: entry.len(),
             layout_chain: chain,
         };
+        self.publish_keyed(key, entry);
+    }
+
+    /// Core of [`publish`], operating on a pre-built key. Split out so the
+    /// collision regression test can hand-forge a key whose hash does not
+    /// match its tokens (real 64-bit FNV-1a collisions are impractical to
+    /// construct from token streams).
+    fn publish_keyed(&self, key: PrefixKey, entry: KvEntry) {
+        let weights = key.weights;
+        let chain = key.layout_chain;
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
         if let Some(slot) = g.entries.get_mut(&key) {
-            slot.1 = tick;
+            if slot.0.tokens == entry.tokens {
+                slot.1 = tick;
+                return;
+            }
+            // Collision: same key, different prefix. Replace in place —
+            // the key pins prefix_len, so the token lengths are equal and
+            // neither resident_tokens nor the length index moves.
+            *slot = (Arc::new(entry), tick);
+            g.insertions += 1;
             return;
         }
         g.resident_tokens += entry.len();
         g.insertions += 1;
+        g.index_insert(weights, chain, entry.len());
         g.entries.insert(key, (Arc::new(entry), tick));
         while g.resident_tokens > self.token_budget {
             let victim = g
@@ -233,6 +294,7 @@ impl KvStore {
             if let Some((e, _)) = g.entries.remove(&k) {
                 g.resident_tokens -= e.len();
                 g.evictions += 1;
+                g.index_remove(k.weights, k.layout_chain, e.len());
             }
         }
     }
@@ -305,31 +367,79 @@ struct SessionSlot {
 /// completion succeeds only if the slot still exists *and* the generation
 /// matches. State is handed out as `Arc`, so deletion never frees rows out
 /// from under a mid-flight lane — it only prevents them being re-parked.
+/// Default for [`SessionRegistry`] capacity and the `[kvstore]
+/// max_sessions` knob.
+pub const DEFAULT_MAX_SESSIONS: usize = 1024;
+
 pub struct SessionRegistry {
     next_gen: AtomicU64,
+    cap: usize,
     slots: Mutex<HashMap<String, SessionSlot>>,
 }
 
 impl SessionRegistry {
     pub fn new() -> SessionRegistry {
+        SessionRegistry::with_capacity(DEFAULT_MAX_SESSIONS)
+    }
+
+    /// Registry bounded to `cap` concurrent sessions. At the cap, a new
+    /// session id evicts the least-recently-used *parked* slot (its owner
+    /// re-prefills on the next turn) or, when every slot is mid-flight,
+    /// is rejected — unparked lanes are never torn out from under their
+    /// generation.
+    pub fn with_capacity(cap: usize) -> SessionRegistry {
+        assert!(cap > 0, "session registry capacity must be > 0");
         SessionRegistry {
             next_gen: AtomicU64::new(1),
+            cap,
             slots: Mutex::new(HashMap::new()),
         }
     }
 
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     /// Open (or create) the session for an admission: returns the parked
     /// state to continue from (None on a fresh or not-yet-parked session)
-    /// and the generation the eventual `park` must present.
-    pub fn begin(&self, id: &str) -> (Option<Arc<SessionState>>, u64) {
+    /// and the generation the eventual `park` must present. Returns
+    /// `None` when the registry is at capacity and no slot is evictable
+    /// (every session is mid-flight) — callers surface that as an
+    /// at-capacity rejection.
+    pub fn begin(&self, id: &str) -> Option<(Option<Arc<SessionState>>, u64)> {
         let mut g = self.slots.lock().unwrap();
+        if let Some(slot) = g.get_mut(id) {
+            slot.last_used = Instant::now();
+            return Some((slot.state.clone(), slot.generation));
+        }
+        if g.len() >= self.cap {
+            let victim = g
+                .iter()
+                .filter(|(_, s)| s.state.is_some())
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    g.remove(&k);
+                }
+                None => return None,
+            }
+        }
         let slot = g.entry(id.to_string()).or_insert_with(|| SessionSlot {
             state: None,
             generation: self.next_gen.fetch_add(1, Ordering::Relaxed),
             last_used: Instant::now(),
         });
-        slot.last_used = Instant::now();
-        (slot.state.clone(), slot.generation)
+        Some((slot.state.clone(), slot.generation))
+    }
+
+    /// Whether `begin(id)` would succeed right now, without creating or
+    /// evicting anything. The router checks this before queueing so an
+    /// over-capacity session sheds at admission (HTTP 429) instead of
+    /// failing deep inside the serve loop.
+    pub fn admissible(&self, id: &str) -> bool {
+        let g = self.slots.lock().unwrap();
+        g.contains_key(id) || g.len() < self.cap || g.values().any(|s| s.state.is_some())
     }
 
     /// Park a lane's final state under `id`. Fails (returning `false` and
@@ -490,10 +600,10 @@ mod tests {
     #[test]
     fn session_begin_park_continue_roundtrip() {
         let reg = SessionRegistry::new();
-        let (prior, generation) = reg.begin("chat-1");
+        let (prior, generation) = reg.begin("chat-1").unwrap();
         assert!(prior.is_none());
         assert!(reg.park("chat-1", generation, state(&[1, 2, 3])));
-        let (parked, gen2) = reg.begin("chat-1");
+        let (parked, gen2) = reg.begin("chat-1").unwrap();
         assert_eq!(gen2, generation, "same slot, same generation");
         assert_eq!(parked.unwrap().tokens, vec![1, 2, 3]);
         assert_eq!(reg.len(), 1);
@@ -504,16 +614,17 @@ mod tests {
         // regression: evicting a session mid-flight must not let the lane
         // resurrect freed state when it finally completes
         let reg = SessionRegistry::new();
-        let (_, generation) = reg.begin("s");
+        let (_, generation) = reg.begin("s").unwrap();
         assert!(reg.delete("s"));
         assert!(!reg.park("s", generation, state(&[1, 2])), "slot is gone");
         // delete + re-create: the successor slot has a fresh generation,
         // so the stale lane still cannot park (the ABA case)
-        let (prior, gen2) = reg.begin("s");
+        let (prior, gen2) = reg.begin("s").unwrap();
         assert!(prior.is_none());
         assert_ne!(gen2, generation);
         assert!(!reg.park("s", generation, state(&[1, 2])));
-        assert!(reg.begin("s").0.is_none(), "stale state never landed");
+        let (prior, _) = reg.begin("s").unwrap();
+        assert!(prior.is_none(), "stale state never landed");
         assert!(reg.park("s", gen2, state(&[4, 5])), "live lane parks fine");
     }
 
@@ -523,23 +634,110 @@ mod tests {
         // then a retry) both hold the same generation: whichever finishes
         // last parks, and neither is rejected
         let reg = SessionRegistry::new();
-        let (_, g1) = reg.begin("s");
-        let (_, g2) = reg.begin("s");
+        let (_, g1) = reg.begin("s").unwrap();
+        let (_, g2) = reg.begin("s").unwrap();
         assert_eq!(g1, g2);
         assert!(reg.park("s", g1, state(&[1, 2])), "cancelled turn parks");
         assert!(reg.park("s", g2, state(&[1, 2, 3])), "retry overwrites");
-        assert_eq!(reg.begin("s").0.unwrap().tokens, vec![1, 2, 3]);
+        let (parked, _) = reg.begin("s").unwrap();
+        assert_eq!(parked.unwrap().tokens, vec![1, 2, 3]);
     }
 
     #[test]
     fn expire_drops_idle_sessions() {
         let reg = SessionRegistry::new();
-        reg.begin("a");
-        reg.begin("b");
+        reg.begin("a").unwrap();
+        reg.begin("b").unwrap();
         assert_eq!(reg.expire(Duration::from_secs(3600)), 0);
         std::thread::sleep(Duration::from_millis(2));
         assert_eq!(reg.expire(Duration::from_millis(1)), 2);
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn session_cap_evicts_idle_lru_or_rejects() {
+        // regression: the registry used to grow without bound — every new
+        // session id allocated a slot forever
+        let reg = SessionRegistry::with_capacity(2);
+        let (_, ga) = reg.begin("a").unwrap();
+        assert!(reg.park("a", ga, state(&[1, 2])));
+        std::thread::sleep(Duration::from_millis(2));
+        let (_, gb) = reg.begin("b").unwrap();
+        assert!(reg.park("b", gb, state(&[3, 4])));
+        // at cap with two parked slots: a third id evicts the LRU ("a")
+        assert!(reg.admissible("c"));
+        let (prior, _) = reg.begin("c").unwrap();
+        assert!(prior.is_none());
+        assert_eq!(reg.len(), 2);
+        // "a" was evicted: re-beginning it gets a fresh slot (no state,
+        // new generation) and in turn evicts the parked "b"
+        let (prior, ga2) = reg.begin("a").unwrap();
+        assert!(prior.is_none(), "evicted session lost its parked state");
+        assert_ne!(ga2, ga);
+        assert_eq!(reg.len(), 2);
+        // now every slot is mid-flight (none parked): a new id is
+        // rejected, while existing ids still begin fine
+        assert!(!reg.admissible("d"));
+        assert!(reg.begin("d").is_none(), "all slots in flight");
+        assert!(reg.begin("c").is_some(), "existing id unaffected by cap");
+        assert_eq!(reg.len(), 2, "rejection created nothing");
+    }
+
+    #[test]
+    fn publish_collision_replaces_foreign_entry() {
+        // regression: publish used to treat any key match as "same prefix,
+        // refresh recency", so a hash collision would keep serving the
+        // foreign prompt's rows forever. Real FNV-1a collisions are
+        // impractical to forge from tokens, so drive the keyed core with a
+        // hand-built colliding key: same hash/len, different tokens.
+        let store = KvStore::new(16);
+        let key = PrefixKey {
+            weights: 1,
+            prefix_hash: 0xDEAD_BEEF,
+            prefix_len: 2,
+            layout_chain: 0,
+        };
+        store.publish_keyed(key.clone(), entry(&[1, 2], 2, 1, 0.1));
+        store.publish_keyed(key.clone(), entry(&[9, 8], 2, 1, 0.7));
+        // the replacement is a real insertion, not a recency refresh, and
+        // neither duplicates the slot nor double-counts resident tokens
+        assert_eq!((store.len(), store.insertions()), (1, 2));
+        assert_eq!(store.resident_tokens(), 2);
+        let g = store.inner.lock().unwrap();
+        let (resident, _) = g.entries.get(&key).unwrap();
+        assert_eq!(resident.tokens, vec![9, 8], "fresh rows won");
+        assert_eq!(resident.k[0][0], 0.7);
+        drop(g);
+        // equal tokens under the same key still only refresh recency
+        store.publish_keyed(key.clone(), entry(&[9, 8], 2, 1, 0.7));
+        assert_eq!((store.len(), store.insertions()), (1, 2));
+    }
+
+    #[test]
+    fn lookup_probes_only_published_lengths() {
+        // the length index must keep longest-prefix semantics and the
+        // one-hit-or-miss counter discipline across publish and eviction
+        let store = KvStore::new(16);
+        store.publish(1, 0, entry(&[1, 2], 2, 1, 0.1));
+        store.publish(1, 0, entry(&[1, 2, 3, 4], 2, 1, 0.2));
+        // a very long window still finds the longest published prefix
+        let window: Vec<i32> = (1..=1000).collect();
+        let (hit, n) = store.lookup(1, 0, &window).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(hit.tokens, vec![1, 2, 3, 4]);
+        // shorter window: only length 2 is probeable
+        let (_, n) = store.lookup(1, 0, &[1, 2, 3]).unwrap();
+        assert_eq!(n, 2);
+        // foreign chain has no index entry: pure miss, no probes
+        assert!(store.lookup(1, 9, &window).is_none());
+        assert_eq!((store.hits(), store.misses()), (2, 1));
+        // evicting must unindex: flush both entries with a budget-sized
+        // insert, then the old lengths no longer match
+        store.publish(1, 0, entry(&[7; 16], 2, 1, 0.3));
+        assert!(store.lookup(1, 0, &[1, 2, 3, 4]).is_none());
+        let g = store.inner.lock().unwrap();
+        let lens = g.lengths.get(&(1, 0)).unwrap();
+        assert_eq!(lens.keys().copied().collect::<Vec<_>>(), vec![16]);
     }
 
     #[test]

@@ -115,6 +115,19 @@ const SERVE_SPEC: &[OptSpec] = &[
     opt("kv-budget", "prefix KV store capacity (cached tokens)", "4096"),
     opt("session-ttl", "idle session lifetime (seconds)", "600"),
     opt(
+        "max-sessions",
+        "session registry capacity (idle sessions LRU-evict at the bound; \
+         all-in-flight sheds with 429)",
+        "1024",
+    ),
+    opt(
+        "simd",
+        "kernel dispatch: scalar | simd | fma (MUMOE_SIMD env overrides)",
+        "",
+    ),
+    flag("quant", "force int8-quantized sparse decode layouts on"),
+    flag("no-quant", "force f32 sparse layouts (default)"),
+    opt(
         "http",
         "serve HTTP/SSE on this address (e.g. 127.0.0.1:8080) instead of \
          replaying a trace",
@@ -195,6 +208,16 @@ fn cmd_serve(rest: &[String]) -> Result<(), Error> {
     if a.given("session-ttl") {
         cfg.kvstore.session_ttl_secs = a.get_u64("session-ttl")?;
     }
+    if a.given("max-sessions") {
+        cfg.kvstore.max_sessions = a.get_usize("max-sessions")?;
+    }
+    if a.given("simd") {
+        let s = a.req("simd")?;
+        cfg.kernel.simd = mumoe::tensor::SimdMode::parse(s).ok_or_else(|| {
+            Error::config(format!("unknown --simd '{s}' (expected scalar | simd | fma)"))
+        })?;
+    }
+    cfg.kernel.quant = flag_pair(&a, "quant", "no-quant", cfg.kernel.quant)?;
     if a.given("http") {
         cfg.http_addr = a.req("http")?.to_string();
     }
@@ -245,6 +268,12 @@ const GEN_SPEC: &[OptSpec] = &[
          engine (needs --features pjrt; re-prunes every step in-graph)",
     ),
     opt(
+        "simd",
+        "kernel dispatch: scalar | simd | fma (MUMOE_SIMD env overrides)",
+        "",
+    ),
+    flag("quant", "decode through int8-quantized sparse layouts"),
+    opt(
         "trace-out",
         "write a Chrome trace-event JSON (Perfetto-loadable) of the \
          decode to this file (host engine; drives the lane-pool path)",
@@ -278,6 +307,15 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
         return Err(Error::config("--cache-cap must be > 0"));
     }
     let kv = flag_pair(&a, "kv", "no-kv", mumoe::config::DecodeKnobs::default().kv_cache)?;
+    let quant = a.flag("quant");
+    // resolve the process-wide SIMD mode up front, like serve's prepare()
+    let simd = match a.get("simd").filter(|s| !s.is_empty()) {
+        Some(s) => mumoe::tensor::SimdMode::parse(s).ok_or_else(|| {
+            Error::config(format!("unknown --simd '{s}' (expected scalar | simd | fma)"))
+        })?,
+        None => mumoe::config::KernelKnobs::default().simd,
+    };
+    mumoe::tensor::simd::set_mode(simd);
 
     use mumoe::coordinator::engine::{host_model, Engine, HostEngine};
     use mumoe::coordinator::request::Request;
@@ -322,6 +360,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
             std::io::stdout().flush().ok();
         }
         let mut pool = LanePool::new(1);
+        pool.set_quant(quant);
         if let Some(rec) = &recorder {
             pool.set_kernel_sampling(rec.kernel_sample_every());
             rec.begin(1);
@@ -374,7 +413,7 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
             out.step_us,
         )
     } else {
-        let mut engine = HostEngine::with_model(model, cache.clone(), true, kv);
+        let mut engine = HostEngine::with_model_quant(model, cache.clone(), true, kv, quant);
         let request = Request::new(1, prompt_ids.clone(), prompt_len, rho, "cli", None)
             .with_decode(n_new, plan);
         let responses = engine.execute(DecodeBatch {
@@ -397,12 +436,14 @@ fn cmd_generate(rest: &[String]) -> Result<(), Error> {
     // than it emits tokens, and the count must match the printed text
     let generated = tokens.len();
     println!(
-        "\n[host engine: model={model_name} plan={} rho={rho} kv={}: {generated} new \
-         tokens in {dt:.2}s = {:.2} tok/s ({steps} decode steps, prefill \
-         {prefill_us}us + steps {step_us}us); layout cache {hits} hits / \
+        "\n[host engine: model={model_name} plan={} rho={rho} kv={} kernels={}{}: \
+         {generated} new tokens in {dt:.2}s = {:.2} tok/s ({steps} decode steps, \
+         prefill {prefill_us}us + steps {step_us}us); layout cache {hits} hits / \
          {misses} misses]",
         plan.label(),
         if kv { "on" } else { "off" },
+        mumoe::tensor::simd::mode().label(),
+        if quant { "+int8" } else { "" },
         generated as f64 / dt.max(1e-9),
     );
     Ok(())

@@ -45,18 +45,43 @@ pub fn select_experts(model: &Model, tokens: &[i32], valid_len: usize, rho: f64)
 pub fn layouts_for(
     model: &Model,
     sel: &ExpertSelection,
+    cache: Option<&mut LayoutCache>,
+) -> FixedLayouts {
+    layouts_for_mode(model, sel, cache, false)
+}
+
+/// [`layouts_for`] with a kernel-mode switch: `quant` compresses through
+/// [`crate::pruning::Mask::compress_quant`] instead, attaching the int8
+/// sidecar the `nn` funnels dispatch on, and caches in the layout cache's
+/// quant arm under the same key — f32 and quantized layouts for one mask
+/// can be resident simultaneously without aliasing.
+pub fn layouts_for_mode(
+    model: &Model,
+    sel: &ExpertSelection,
     mut cache: Option<&mut LayoutCache>,
+    quant: bool,
 ) -> FixedLayouts {
     let mut out = FixedLayouts::new();
     for (name, w) in model.prunable() {
         let mask = &sel.masks[&name];
+        let compress = || {
+            if quant {
+                mask.compress_quant(w)
+            } else {
+                mask.compress(w)
+            }
+        };
         let layout = match cache.as_deref_mut() {
             Some(c) => {
                 let key =
                     LayoutKey::new(model.weights_id(), &*name, sel.rho, mask.fingerprint());
-                c.get_or_insert_with(key, || mask.compress(w))
+                if quant {
+                    c.get_or_insert_quant_with(key, compress)
+                } else {
+                    c.get_or_insert_with(key, compress)
+                }
             }
-            None => Arc::new(mask.compress(w)),
+            None => Arc::new(compress()),
         };
         out.insert(name, layout);
     }
@@ -235,6 +260,40 @@ mod tests {
         for (name, a) in &cached {
             // cache hit returns the same Arc, not a recompression
             assert!(Arc::ptr_eq(a, &again[name]), "{name}");
+        }
+    }
+
+    #[test]
+    fn quant_layouts_carry_sidecars_and_cache_in_their_own_arm() {
+        let m = model();
+        let sel = select_experts(&m, &[4, 2, 9, 7], 4, 0.5);
+        let mut cache = LayoutCache::new(64);
+        let n = m.cfg.linear_names().len() as u64;
+        let f32s = layouts_for_mode(&m, &sel, Some(&mut cache), false);
+        let quants = layouts_for_mode(&m, &sel, Some(&mut cache), true);
+        // same key, different arm: no cross-hits, both resident
+        assert_eq!((cache.hits(), cache.misses()), (0, 2 * n));
+        assert_eq!(cache.len(), 2 * n as usize);
+        for (name, q) in &quants {
+            assert!(q.quant.is_some(), "{name}: sidecar missing");
+            assert!(f32s[name].quant.is_none(), "{name}: f32 arm got a sidecar");
+            // same selection, same surviving weights under the sidecar
+            assert_eq!(q.values, f32s[name].values, "{name}");
+        }
+        // repeat selections hit their respective arms without rebuilding
+        let again = layouts_for_mode(&m, &sel, Some(&mut cache), true);
+        assert_eq!((cache.hits(), cache.misses()), (n, 2 * n));
+        for (name, q) in &quants {
+            assert!(Arc::ptr_eq(q, &again[name]), "{name}");
+        }
+        // no-cache quant path attaches the sidecar too
+        let direct = layouts_for_mode(&m, &sel, None, true);
+        for (name, q) in &direct {
+            assert_eq!(
+                q.fingerprint(),
+                quants[name].fingerprint(),
+                "{name}: direct and cached quant layouts diverge"
+            );
         }
     }
 

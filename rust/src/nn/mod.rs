@@ -27,7 +27,8 @@ use crate::model::{ModelConfig, PAD_ID};
 use crate::pruning::wanda;
 use crate::tensor::{
     layernorm_row_into, layernorm_rows, log_softmax, matmul_tn_sparse_auto,
-    matmul_tn_sparse_auto_into, matvec_nt_sparse_into, relu, Mat, RowSparse,
+    matmul_tn_sparse_auto_into, matvec_nt_sparse_into, quant_matmul_tn, quant_matmul_tn_into,
+    quant_matvec_nt_into, relu, Mat, RowSparse,
 };
 use crate::trace::StepProfile;
 use crate::util::error::Error;
@@ -397,10 +398,19 @@ impl Model {
         let w = &self.mats[&names.w];
         let b = &self.vecs[&names.b];
         // auto kernels: serial for decode-sized work, W-row-parallel for
-        // prefill-sized layouts (bit-identical either way)
-        let sparse_mm = |rs: &RowSparse| match xt {
-            Some(xt) => matmul_tn_sparse_auto(xt, rs),
-            None => x.matmul_nt_sparse_auto(rs),
+        // prefill-sized layouts (bit-identical either way); layouts
+        // carrying an int8 sidecar run the quantized kernels instead
+        let sparse_mm = |rs: &RowSparse| {
+            if let Some(q) = &rs.quant {
+                return match xt {
+                    Some(xt) => quant_matmul_tn(xt, q),
+                    None => quant_matmul_tn(&x.t(), q),
+                };
+            }
+            match xt {
+                Some(xt) => matmul_tn_sparse_auto(xt, rs),
+                None => x.matmul_nt_sparse_auto(rs),
+            }
         };
         let mut y = match exec {
             Exec::Dense => x.matmul_nt(w),
@@ -900,7 +910,11 @@ impl Model {
         let rs = layouts
             .get(&names.w)
             .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
-        matmul_tn_sparse_auto_into(xt, rs, yt);
+        if let Some(q) = &rs.quant {
+            quant_matmul_tn_into(xt, q, yt);
+        } else {
+            matmul_tn_sparse_auto_into(xt, rs, yt);
+        }
         yt.transpose_into(out);
         let b = &self.vecs[&names.b];
         for i in 0..out.rows {
@@ -924,7 +938,11 @@ impl Model {
         let rs = layouts
             .get(&names.w)
             .unwrap_or_else(|| panic!("no fixed layout for linear {}", names.w));
-        matvec_nt_sparse_into(x, rs, out);
+        if let Some(q) = &rs.quant {
+            quant_matvec_nt_into(x, q, out);
+        } else {
+            matvec_nt_sparse_into(x, rs, out);
+        }
         for (a, b) in out.iter_mut().zip(&self.vecs[&names.b]) {
             *a += b;
         }

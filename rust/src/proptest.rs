@@ -1221,6 +1221,150 @@ mod kvstore_props {
     }
 }
 
+/// Properties of the SIMD dispatch layer (`tensor::simd`) and the int8
+/// sidecar (`tensor::quant`): `Simd` mode must be bit-identical to
+/// `Scalar` at all three kernel dispatch sites — over arbitrary shapes,
+/// tie-heavy ragged masks and dirty reused buffers — and the quantizer's
+/// round-trip error must stay within its per-row absmax bound. These are
+/// the contracts that make the `[kernel] simd` knob (and the CI
+/// `MUMOE_SIMD=off` leg) free to flip without changing a single token.
+#[cfg(test)]
+mod simd_props {
+    use super::{check, ensure, PropResult};
+    use crate::pruning::{mask_from_scores, selection::Selector, Mask};
+    use crate::tensor::{
+        matmul_tn_sparse_mode, matvec_nt_sparse_mode, quant_matmul_tn, quant_matvec_nt, Mat,
+        QuantRowSparse, SimdMode,
+    };
+    use crate::util::rng::Pcg32;
+
+    /// Random (w, x, mask) case. Odd seeds use tie-heavy quantized scores
+    /// so threshold ties produce raggedly-sized sparse rows — the SIMD
+    /// kernels' tail-handling breeding ground; the shape ranges straddle
+    /// the 8-lane AVX2 width on both axes.
+    fn case(seed: u64, rho: f64) -> (Mat, Mat, Mask) {
+        let mut rng = Pcg32::new(seed, 43);
+        let d_out = 1 + rng.gen_range_usize(24);
+        let d_in = 1 + rng.gen_range_usize(80);
+        let t = 1 + rng.gen_range_usize(12);
+        let w = Mat::from_vec(d_out, d_in, rng.normal_vec(d_out * d_in));
+        let x = Mat::from_vec(t, d_in, rng.normal_vec(t * d_in));
+        let scores = if seed % 2 == 0 {
+            Mat::from_vec(d_out, d_in, w.data.iter().map(|v| v.abs()).collect())
+        } else {
+            Mat::from_fn(d_out, d_in, |_, _| (rng.gen_range(3) as f32) * 0.5)
+        };
+        let mask = mask_from_scores(&scores, rho.clamp(0.0, 1.0), Selector::KthValue);
+        (w, x, mask)
+    }
+
+    /// Batch kernels: the sparse AXPY sweep and the dense row kernel at
+    /// `Simd` must equal `Scalar` bit-for-bit, and the process-default
+    /// entry points must agree with both (whatever mode the environment
+    /// resolved — this is what keeps `MUMOE_SIMD` token-neutral).
+    fn prop_batch_kernels_simd_bit_identical(input: &(u64, f64)) -> PropResult {
+        let (w, x, mask) = case(input.0, input.1);
+        let rs = mask.compress(&w);
+        let xt = x.t();
+        let scalar = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Scalar);
+        let simd = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Simd);
+        ensure(scalar.data == simd.data, "sparse simd diverged from scalar")?;
+        ensure(
+            scalar.data == x.matmul_nt_sparse(&rs).data,
+            "sparse process-default diverged from scalar",
+        )?;
+        let d_scalar = x.matmul_nt_mode(&w, SimdMode::Scalar);
+        let d_simd = x.matmul_nt_mode(&w, SimdMode::Simd);
+        ensure(d_scalar.data == d_simd.data, "dense simd diverged from scalar")?;
+        ensure(
+            d_scalar.data == x.matmul_nt(&w).data,
+            "dense process-default diverged from scalar",
+        )
+    }
+
+    /// Decode kernel: the per-step sparse dot at `Simd` must equal
+    /// `Scalar` bit-for-bit even when both write through the same dirty
+    /// reused buffer, and must equal the T=1 batch kernel (the step ≡
+    /// full-window contract the KV decode path rests on).
+    fn prop_decode_matvec_simd_bit_identical(input: &(u64, f64)) -> PropResult {
+        let (w, x, mask) = case(input.0, input.1);
+        let rs = mask.compress(&w);
+        let row = x.row(0);
+        let mut rng = Pcg32::new(input.0 ^ 0x51D0, 5);
+        // both buffers start with garbage of the wrong length
+        let mut y_scalar = rng.normal_vec(1 + rng.gen_range_usize(40));
+        let mut y_simd = rng.normal_vec(1 + rng.gen_range_usize(40));
+        matvec_nt_sparse_mode(row, &rs, &mut y_scalar, SimdMode::Scalar);
+        matvec_nt_sparse_mode(row, &rs, &mut y_simd, SimdMode::Simd);
+        ensure(y_scalar == y_simd, "decode simd diverged from scalar")?;
+        let x1 = Mat::from_vec(1, rs.cols, row.to_vec());
+        let full = matmul_tn_sparse_mode(&x1.t(), &rs, SimdMode::Scalar);
+        ensure(
+            y_scalar == full.data,
+            "decode step diverged from the T=1 batch kernel",
+        )
+    }
+
+    /// Quantizer round-trip: every surviving weight must dequantize to
+    /// within half a quantization step (`scale / 2`) of its f32 value,
+    /// with structure (row_ptr/col_idx) preserved exactly — and the
+    /// quantized decode matvec must equal the quantized T=1 matmul
+    /// bit-for-bit (the same step ≡ full-window contract, within quant
+    /// mode).
+    fn prop_quant_round_trip_bounded(input: &(u64, f64)) -> PropResult {
+        let (w, x, mask) = case(input.0, input.1);
+        let rs = mask.compress(&w);
+        let q = QuantRowSparse::from_sparse(&rs);
+        let back = q.dequantize();
+        ensure(back.row_ptr == rs.row_ptr, "quant changed row_ptr")?;
+        ensure(back.col_idx == rs.col_idx, "quant changed col_idx")?;
+        for i in 0..rs.rows {
+            // scale/2 plus a whisker of fp slack from the two roundings
+            let bound = q.scales[i] * 0.5001 + 1e-12;
+            for p in rs.row_ptr[i]..rs.row_ptr[i + 1] {
+                let err = (back.values[p] - rs.values[p]).abs();
+                ensure(
+                    err <= bound,
+                    format!("row {i}: round-trip err {err} > bound {bound}"),
+                )?;
+            }
+        }
+        let row = x.row(0);
+        let y = quant_matvec_nt(row, &q);
+        let x1 = Mat::from_vec(1, rs.cols, row.to_vec());
+        let full = quant_matmul_tn(&x1.t(), &q);
+        ensure(
+            y == full.data,
+            "quant decode step diverged from the T=1 quant matmul",
+        )
+    }
+
+    fn gen_seed_rho(r: &mut Pcg32) -> (u64, f64) {
+        // bias toward the boundary rhos where ragged rows concentrate
+        let rho = match r.gen_range(5) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => r.next_f64(),
+        };
+        (r.next_u64(), rho)
+    }
+
+    #[test]
+    fn batch_kernels_simd_bit_identical_to_scalar() {
+        check(601, 60, gen_seed_rho, prop_batch_kernels_simd_bit_identical);
+    }
+
+    #[test]
+    fn decode_matvec_simd_bit_identical_over_dirty_buffers() {
+        check(602, 60, gen_seed_rho, prop_decode_matvec_simd_bit_identical);
+    }
+
+    #[test]
+    fn quant_round_trip_bounded_and_step_consistent() {
+        check(603, 60, gen_seed_rho, prop_quant_round_trip_bounded);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

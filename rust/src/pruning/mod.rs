@@ -29,7 +29,8 @@ pub mod wanda;
 
 pub use plan::MaskPlan;
 
-use crate::tensor::{fnv1a64, Mat, RowSparse};
+use crate::tensor::{fnv1a64, Mat, QuantRowSparse, RowSparse};
+use std::sync::Arc;
 
 /// Number of *inactive* weights per row for active ratio `rho`, clipped so
 /// at least one weight per row survives (mirrors python `pruning.kc_for`).
@@ -223,7 +224,19 @@ impl Mask {
             row_ptr,
             col_idx,
             values,
+            quant: None,
         }
+    }
+
+    /// [`Mask::compress`] plus an int8 sidecar: the compressed f32 layout
+    /// with a per-row absmax-quantized [`QuantRowSparse`] attached, which
+    /// the `nn` execution funnels dispatch to. Like the mask itself, the
+    /// quantizer is calibration-free — scales come from the surviving
+    /// weights at compression time.
+    pub fn compress_quant(&self, w: &Mat) -> RowSparse {
+        let mut rs = self.compress(w);
+        rs.quant = Some(Arc::new(QuantRowSparse::from_sparse(&rs)));
+        rs
     }
 
     /// Content hash of the active set (shape + bit words). Two masks with
@@ -389,6 +402,23 @@ mod tests {
         let rs2 = m2.compress(&w2);
         assert_eq!(rs2.values, vec![0.0]);
         assert_eq!(rs2.nnz(), 1);
+    }
+
+    #[test]
+    fn compress_quant_attaches_matching_sidecar() {
+        let mut rng = Pcg32::new(12, 0);
+        let w = Mat::from_vec(6, 70, rng.normal_vec(6 * 70)); // spans word tail
+        let s = Mat::from_vec(6, 70, rng.normal_vec(6 * 70));
+        let mask = mask_from_scores(&s, 0.4, selection::Selector::KthValue);
+        let plain = mask.compress(&w);
+        let quant = mask.compress_quant(&w);
+        // identical f32 CSR; the sidecar is exactly the quantization of it
+        assert_eq!(plain.row_ptr, quant.row_ptr);
+        assert_eq!(plain.col_idx, quant.col_idx);
+        assert_eq!(plain.values, quant.values);
+        let q = quant.quant.as_ref().expect("sidecar attached");
+        assert_eq!(**q, QuantRowSparse::from_sparse(&plain));
+        assert_ne!(plain.fingerprint(), quant.fingerprint());
     }
 
     #[test]

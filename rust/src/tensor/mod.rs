@@ -7,13 +7,20 @@
 //! the stack actually uses, each carefully tested.
 
 mod linalg;
+pub mod quant;
+pub mod simd;
 mod sparse;
 
 pub use linalg::{cholesky_lower, invert_spd, solve_lower, solve_upper};
+pub use quant::{
+    quant_matmul_tn, quant_matmul_tn_into, quant_matvec_nt, quant_matvec_nt_into, QuantRowSparse,
+};
+pub use simd::SimdMode;
 pub use sparse::{
     fnv1a64, matmul_tn_sparse, matmul_tn_sparse_auto, matmul_tn_sparse_auto_into,
-    matmul_tn_sparse_into, matmul_tn_sparse_par, matmul_tn_sparse_par_into, matvec_nt_sparse,
-    matvec_nt_sparse_into, rho_milli, LayoutCache, LayoutKey, RowSparse,
+    matmul_tn_sparse_into, matmul_tn_sparse_mode, matmul_tn_sparse_par, matmul_tn_sparse_par_into,
+    matvec_nt_sparse, matvec_nt_sparse_into, matvec_nt_sparse_mode, rho_milli, LayoutCache,
+    LayoutKey, RowSparse,
 };
 
 use crate::util::threadpool::{self, ThreadPool};
@@ -174,6 +181,17 @@ impl Mat {
         out
     }
 
+    /// [`Mat::matmul_nt`] at an explicit SIMD dispatch mode (bench/test
+    /// surface; the plain entry points read the process-wide
+    /// [`simd::mode`]).
+    pub fn matmul_nt_mode(&self, other: &Mat, mode: simd::SimdMode) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        matmul_nt_rows_mode(self, other, 0, m, &mut out.data, mode);
+        out
+    }
+
     /// `self @ other^T`, choosing serial or pooled execution by work size.
     pub fn matmul_nt_auto(&self, other: &Mat) -> Mat {
         let macs = self.rows * self.cols * other.rows;
@@ -291,6 +309,17 @@ impl Mat {
 /// order — the same order the naive kernel used, so results are
 /// bit-identical however the rows are partitioned.
 fn matmul_nt_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
+    matmul_nt_rows_mode(a, b, lo, hi, out, simd::mode());
+}
+
+/// The dense row kernel at an explicit dispatch mode. The AVX2 path
+/// packs 8-column tiles of `b` and broadcasts `a[k]` in ascending k, so
+/// every output element keeps the scalar kernel's separate-mul-add chain
+/// — `Simd` is bit-identical to `Scalar`, `Fma` contracts (opt-in).
+fn matmul_nt_rows_mode(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32], mode: SimdMode) {
+    if simd::dense_nt_rows(a, b, lo, hi, out, mode) {
+        return;
+    }
     let (k, n) = (a.cols, b.rows);
     debug_assert_eq!(out.len(), (hi - lo) * n);
     for i in lo..hi {
@@ -430,6 +459,20 @@ mod tests {
         let a = randmat(&mut rng, 40, 64);
         let b = randmat(&mut rng, 50, 64);
         assert_eq!(a.matmul_nt_auto(&b).data, a.matmul_nt(&b).data);
+    }
+
+    #[test]
+    fn matmul_nt_mode_bit_identical_across_scalar_and_simd() {
+        let mut rng = Pcg32::new(17, 0);
+        // shapes straddle the 8-column SIMD tile and its scalar tail
+        for (m, k, n) in [(1, 5, 3), (3, 11, 8), (7, 16, 9), (5, 24, 21)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let scalar = a.matmul_nt_mode(&b, SimdMode::Scalar);
+            let simd = a.matmul_nt_mode(&b, SimdMode::Simd);
+            assert_eq!(scalar.data, simd.data, "({m},{k},{n})");
+            assert_eq!(scalar.data, a.matmul_nt(&b).data, "auto ({m},{k},{n})");
+        }
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Int8 row-quantized sparse layouts.
+//!
+//! μ-MoE's pruning cuts FLOPs in proportion to ρ; quantizing the surviving
+//! weights to int8 cuts the *memory traffic* of the sparse sweep roughly
+//! 4× on top of that, and — like the mask itself — the quantizer is
+//! calibration-free: per-row absmax scales are computed from the already
+//! pruned layout at compression time, no data pass required.
+//!
+//! [`QuantRowSparse`] mirrors the CSR structure of its parent
+//! [`RowSparse`] exactly (same `row_ptr`/`col_idx`), storing `i8` values
+//! plus one `f32` scale per output row (`scale = max|w| / 127`, zero for
+//! all-zero rows). Kernels accumulate `Σ q·x` in f32 and apply the row
+//! scale once at the end, so the decode-step matvec and the prefill
+//! matmul stay bit-identical to each other within quant mode — the same
+//! per-output-element ordering contract the f32 kernels keep.
+//!
+//! Quantized layouts ride as a sidecar on `RowSparse` (see
+//! `RowSparse::quant`): the execution funnels in `nn` dispatch on its
+//! presence, so plumbing (layout caches, fused grouping, KV layout
+//! chains) is untouched. `RowSparse::fingerprint` folds the sidecar in,
+//! which automatically separates quantized KV keyspaces from f32 ones.
+
+use super::sparse::fnv1a64;
+use super::{Mat, RowSparse};
+
+/// CSR layout with int8 values and per-row dequantization scales.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantRowSparse {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` spans row i — identical to the parent.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    /// Quantized weights, parallel to `col_idx`.
+    pub values: Vec<i8>,
+    /// Per-row scale (`max|w| / 127`; 0 for empty/all-zero rows).
+    pub scales: Vec<f32>,
+}
+
+impl QuantRowSparse {
+    /// Quantize a compressed layout with per-row absmax scales. Every
+    /// surviving weight lands in `[-127, 127]` by construction
+    /// (`|w| ≤ max|w| = 127·scale`), so dequantization error is bounded
+    /// by `scale / 2` per element.
+    pub fn from_sparse(rs: &RowSparse) -> QuantRowSparse {
+        let mut values = Vec::with_capacity(rs.nnz());
+        let mut scales = Vec::with_capacity(rs.rows);
+        for i in 0..rs.rows {
+            let row = &rs.values[rs.row_ptr[i]..rs.row_ptr[i + 1]];
+            let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if max_abs > 0.0 {
+                let inv = 127.0 / max_abs;
+                for &v in row {
+                    values.push((v * inv).round().clamp(-127.0, 127.0) as i8);
+                }
+                scales.push(max_abs / 127.0);
+            } else {
+                values.resize(values.len() + row.len(), 0);
+                scales.push(0.0);
+            }
+        }
+        QuantRowSparse {
+            rows: rs.rows,
+            cols: rs.cols,
+            row_ptr: rs.row_ptr.clone(),
+            col_idx: rs.col_idx.clone(),
+            values,
+            scales,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Reconstruct the f32 layout this quantization round-trips to
+    /// (`q · scale` per element; no sidecar on the result).
+    pub fn dequantize(&self) -> RowSparse {
+        let mut values = Vec::with_capacity(self.values.len());
+        for i in 0..self.rows {
+            let s = self.scales[i];
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                values.push(self.values[p] as f32 * s);
+            }
+        }
+        RowSparse {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            values,
+            quant: None,
+        }
+    }
+
+    /// Content hash over structure, quantized values and scale bits; a
+    /// leading marker keeps it disjoint from f32 layout fingerprints.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(
+            [0x5175616e74u64, self.rows as u64, self.cols as u64]
+                .into_iter()
+                .chain(self.row_ptr.iter().map(|&p| p as u64))
+                .chain(self.col_idx.iter().map(|&c| c as u64))
+                .chain(self.values.iter().map(|&v| v as u8 as u64))
+                .chain(self.scales.iter().map(|s| s.to_bits() as u64)),
+        )
+    }
+}
+
+/// `out = W_q x` for one token (decode step): f32 accumulation of the
+/// int8 values in ascending `p`, row scale applied once at the end —
+/// the same op chain per element as [`quant_matmul_tn_into`], so step ≡
+/// full-window holds within quant mode.
+pub fn quant_matvec_nt_into(x: &[f32], w: &QuantRowSparse, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), w.cols, "quant_matvec_nt shape mismatch");
+    out.clear();
+    out.resize(w.rows, 0.0);
+    for (j, y) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
+            acc += w.values[p] as f32 * x[w.col_idx[p] as usize];
+        }
+        *y = acc * w.scales[j];
+    }
+}
+
+/// [`quant_matvec_nt_into`] into a fresh vector.
+pub fn quant_matvec_nt(x: &[f32], w: &QuantRowSparse) -> Vec<f32> {
+    let mut out = Vec::new();
+    quant_matvec_nt_into(x, w, &mut out);
+    out
+}
+
+/// `out_t = (xt^T W^T)^T`: the quantized twin of `matmul_tn_sparse`'s
+/// transposed-output kernel. AXPY over the row's nonzeros (ascending
+/// `p`, f32 accumulate), then one scale multiply per output row.
+pub fn quant_matmul_tn_into(xt: &Mat, w: &QuantRowSparse, out_t: &mut Mat) {
+    assert_eq!(xt.rows, w.cols, "quant_matmul_tn shape mismatch");
+    let m = xt.cols;
+    out_t.resize_zeroed(w.rows, m);
+    for j in 0..w.rows {
+        let acc = &mut out_t.data[j * m..(j + 1) * m];
+        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
+            let v = w.values[p] as f32;
+            let xr = xt.row(w.col_idx[p] as usize);
+            for (a, &xv) in acc.iter_mut().zip(xr) {
+                *a += v * xv;
+            }
+        }
+        let s = w.scales[j];
+        for a in acc.iter_mut() {
+            *a *= s;
+        }
+    }
+}
+
+/// `x @ W^T` from the transposed activations, returning row-major
+/// `[T, rows]` — the quantized counterpart of `matmul_tn_sparse`.
+pub fn quant_matmul_tn(xt: &Mat, w: &QuantRowSparse) -> Mat {
+    let mut out_t = Mat::zeros(0, 0);
+    quant_matmul_tn_into(xt, w, &mut out_t);
+    out_t.t()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_tn_sparse;
+    use crate::util::rng::Pcg32;
+
+    fn random_sparse(seed: u64, rows: usize, cols: usize, keep: f32) -> RowSparse {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut dense = Mat::zeros(rows, cols);
+        for v in dense.data.iter_mut() {
+            if rng.next_f32() < keep {
+                *v = rng.normal_vec(1)[0];
+            }
+        }
+        RowSparse::from_dense(&dense)
+    }
+
+    #[test]
+    fn round_trip_error_within_half_scale_per_row() {
+        let rs = random_sparse(3, 24, 40, 0.4);
+        let q = QuantRowSparse::from_sparse(&rs);
+        let back = q.dequantize();
+        assert_eq!(back.row_ptr, rs.row_ptr);
+        assert_eq!(back.col_idx, rs.col_idx);
+        for i in 0..rs.rows {
+            // scale/2 plus a whisker of fp slack from the two roundings
+            let bound = q.scales[i] * 0.5001 + 1e-12;
+            for p in rs.row_ptr[i]..rs.row_ptr[i + 1] {
+                let err = (back.values[p] - rs.values[p]).abs();
+                assert!(err <= bound, "row {i}: err {err} > bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_empty_rows_quantize_to_zero_scale() {
+        let mut dense = Mat::zeros(3, 8);
+        dense.data[8] = 1.5; // only row 1 has content
+        dense.data[12] = -0.5;
+        let rs = RowSparse::from_dense(&dense);
+        let q = QuantRowSparse::from_sparse(&rs);
+        assert_eq!(q.scales[0], 0.0);
+        assert!(q.scales[1] > 0.0);
+        assert_eq!(q.scales[2], 0.0);
+        // the row absmax itself maps to ±127 and round-trips exactly
+        let back = q.dequantize();
+        assert_eq!(back.values[0], 1.5);
+    }
+
+    #[test]
+    fn matvec_matches_matmul_single_column() {
+        let rs = random_sparse(11, 16, 32, 0.5);
+        let q = QuantRowSparse::from_sparse(&rs);
+        let mut rng = Pcg32::new(12, 0);
+        let x = rng.normal_vec(32);
+        let y = quant_matvec_nt(&x, &q);
+        let mut xt = Mat::zeros(32, 1);
+        xt.data.copy_from_slice(&x);
+        let full = quant_matmul_tn(&xt, &q);
+        assert_eq!(full.rows, 1);
+        for (a, b) in y.iter().zip(full.row(0)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "decode-step ≡ prefill within quant mode");
+        }
+    }
+
+    #[test]
+    fn quant_matmul_close_to_f32_matmul() {
+        let rs = random_sparse(21, 20, 48, 0.5);
+        let q = QuantRowSparse::from_sparse(&rs);
+        let mut rng = Pcg32::new(22, 0);
+        let mut xt = Mat::zeros(48, 5);
+        let xs = rng.normal_vec(48 * 5);
+        xt.data.copy_from_slice(&xs);
+        let exact = matmul_tn_sparse(&xt, &rs);
+        let approx = quant_matmul_tn(&xt, &q);
+        assert_eq!((exact.rows, exact.cols), (approx.rows, approx.cols));
+        for (e, a) in exact.data.iter().zip(&approx.data) {
+            // per-element error ≤ Σ_p (scale/2)·|x| — generous envelope
+            assert!((e - a).abs() < 0.1, "exact {e} vs quant {a}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_and_differs_from_parent() {
+        let rs = random_sparse(31, 12, 24, 0.4);
+        let q = QuantRowSparse::from_sparse(&rs);
+        assert_ne!(q.fingerprint(), rs.fingerprint());
+        let mut q2 = q.clone();
+        assert_eq!(q.fingerprint(), q2.fingerprint());
+        if let Some(v) = q2.values.first_mut() {
+            *v = v.wrapping_add(1);
+        }
+        assert_ne!(q.fingerprint(), q2.fingerprint());
+    }
+}

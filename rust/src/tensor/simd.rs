@@ -1,0 +1,536 @@
+//! Runtime-dispatched SIMD kernels for the sparse/dense matmul inner
+//! loops.
+//!
+//! Three inner loops dominate μ-MoE host execution: the length-T AXPY of
+//! the row-sparse kernel (`tn_sparse_rows`), the dense `matmul_nt` row
+//! kernel, and the decode-step sparse dot (`matvec_nt_sparse`). This
+//! module provides explicit AVX2 forms of each behind a process-wide
+//! [`SimdMode`], with the scalar fallback always compiled (and the only
+//! path on non-x86_64 targets).
+//!
+//! ## Bit-identity contract
+//!
+//! The repo's correctness proofs (sparse ≡ masked-dense, fused ≡
+//! lane-major, KV-step ≡ full-window) all rest on one invariant: every
+//! output element is accumulated in the same order everywhere. The
+//! [`SimdMode::Simd`] paths preserve it exactly:
+//!
+//! - AXPY vectorizes *across T* with separate mul + add: each `acc[t]`
+//!   sees precisely the scalar operation sequence.
+//! - The dense kernel packs an 8-column tile of `W` and broadcasts `a[k]`
+//!   in ascending k: per output element, the same separate-mul-add chain
+//!   as the scalar kernel.
+//! - The sparse dot vectorizes the gather + multiply but spills products
+//!   and adds them *sequentially in p order* — the sum chain is unchanged.
+//!
+//! So `Simd` is bit-identical to `Scalar` on every path
+//! (`proptest.rs::simd_props` proves it over random shapes, and the
+//! forced-`MUMOE_SIMD=off` CI leg runs the whole suite on the fallback).
+//! [`SimdMode::Fma`] is the explicit opt-in fast mode: it contracts
+//! mul+add with `vfmadd` and reduces dots in lanes, which changes
+//! rounding. Its drift is measured (`benches/simd_kernels.rs`), never
+//! silently enabled.
+//!
+//! ## Selection
+//!
+//! `mode()` resolves, once, from the `MUMOE_SIMD` env var (`off`/`on`/
+//! `fma`; overrides everything) falling back to whatever [`set_mode`]
+//! requested (the `[kernel] simd` config knob / `--simd` flag), clamped
+//! to what the host actually supports. Unset, the default is `Simd`
+//! where AVX2 is detected and `Scalar` elsewhere.
+
+use super::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Kernel dispatch mode. `Scalar` and `Simd` are bit-identical; `Fma` is
+/// the opt-in contracted fast mode (measured drift).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Plain Rust loops — the reference semantics, always available.
+    Scalar = 0,
+    /// AVX2 with separate mul + add: bit-identical to `Scalar`.
+    Simd = 1,
+    /// AVX2 with fused multiply-add contraction: fastest, measured drift.
+    Fma = 2,
+}
+
+impl SimdMode {
+    /// Parse a config/CLI/env spelling. `off`/`scalar` force the
+    /// fallback; `on`/`simd`/`auto` request the bit-identical AVX2 path;
+    /// `fma`/`fast` opt into contraction.
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "false" | "0" => Some(SimdMode::Scalar),
+            "on" | "simd" | "auto" | "avx2" | "true" | "1" => Some(SimdMode::Simd),
+            "fma" | "fast" => Some(SimdMode::Fma),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdMode::Scalar => "scalar",
+            SimdMode::Simd => "simd",
+            SimdMode::Fma => "fma",
+        }
+    }
+}
+
+/// True when the host can run the AVX2 paths at all.
+pub fn detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when the host can run the contracted (`Fma`) paths.
+pub fn fma_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Clamp a requested mode to what this host supports: `Fma` degrades to
+/// `Simd` without FMA, and anything SIMD degrades to `Scalar` without
+/// AVX2 (including every non-x86_64 target).
+pub fn clamp_to_host(requested: SimdMode) -> SimdMode {
+    match requested {
+        SimdMode::Scalar => SimdMode::Scalar,
+        SimdMode::Simd if detected() => SimdMode::Simd,
+        SimdMode::Fma if fma_detected() => SimdMode::Fma,
+        SimdMode::Fma if detected() => SimdMode::Simd,
+        _ => SimdMode::Scalar,
+    }
+}
+
+/// Pure resolution policy (host-independent, unit-testable): the
+/// `MUMOE_SIMD` env value, when present and well-formed, overrides the
+/// configured request; an unparseable value is ignored with a warning.
+pub fn resolve_policy(env: Option<&str>, requested: SimdMode) -> SimdMode {
+    match env.map(str::trim).filter(|s| !s.is_empty()) {
+        Some(s) => SimdMode::parse(s).unwrap_or_else(|| {
+            crate::warn_!("MUMOE_SIMD={s:?} is not off/on/fma; keeping {}", requested.label());
+            requested
+        }),
+        None => requested,
+    }
+}
+
+const MODE_UNRESOLVED: u8 = u8::MAX;
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNRESOLVED);
+
+fn mode_from_u8(v: u8) -> Option<SimdMode> {
+    match v {
+        0 => Some(SimdMode::Scalar),
+        1 => Some(SimdMode::Simd),
+        2 => Some(SimdMode::Fma),
+        _ => None,
+    }
+}
+
+fn resolve(requested: SimdMode) -> SimdMode {
+    let env = std::env::var("MUMOE_SIMD").ok();
+    clamp_to_host(resolve_policy(env.as_deref(), requested))
+}
+
+/// Install the process-wide dispatch mode (the `[kernel] simd` knob /
+/// `--simd` flag call this at startup). `MUMOE_SIMD` still overrides.
+pub fn set_mode(requested: SimdMode) {
+    MODE.store(resolve(requested) as u8, Ordering::Relaxed);
+}
+
+/// The process-wide dispatch mode, lazily resolved on first use (env
+/// override, then AVX2 auto-detection) when [`set_mode`] never ran.
+pub fn mode() -> SimdMode {
+    if let Some(m) = mode_from_u8(MODE.load(Ordering::Relaxed)) {
+        return m;
+    }
+    let m = resolve(SimdMode::Simd);
+    MODE.store(m as u8, Ordering::Relaxed);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// AXPY: acc[t] += v * x[t] — the sparse matrix kernel's inner loop.
+// ---------------------------------------------------------------------------
+
+/// `acc[t] += v * x[t]` over `min(acc.len(), x.len())` lanes at the given
+/// mode. `Simd` is bit-identical to `Scalar` (independent accumulators,
+/// separate mul + add); `Fma` contracts.
+#[inline]
+pub fn axpy(acc: &mut [f32], x: &[f32], v: f32, mode: SimdMode) {
+    #[cfg(target_arch = "x86_64")]
+    match mode {
+        SimdMode::Fma if fma_detected() => {
+            // SAFETY: avx2 + fma presence checked at runtime just above.
+            unsafe { axpy_fma(acc, x, v) };
+            return;
+        }
+        SimdMode::Simd | SimdMode::Fma if detected() => {
+            // SAFETY: avx2 presence checked at runtime just above.
+            unsafe { axpy_avx2(acc, x, v) };
+            return;
+        }
+        _ => {}
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = mode;
+    axpy_scalar(acc, x, v);
+}
+
+#[inline]
+fn axpy_scalar(acc: &mut [f32], x: &[f32], v: f32) {
+    for (a, &xv) in acc.iter_mut().zip(x) {
+        *a += v * xv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], x: &[f32], v: f32) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len());
+    let vv = _mm256_set1_ps(v);
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(t));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(t));
+        // separate mul + add: each lane sees exactly the scalar sequence
+        let sum = _mm256_add_ps(av, _mm256_mul_ps(vv, xv));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(t), sum);
+        t += 8;
+    }
+    axpy_scalar(&mut acc[t..n], &x[t..n], v);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_fma(acc: &mut [f32], x: &[f32], v: f32) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len());
+    let vv = _mm256_set1_ps(v);
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(t));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(t));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(t), _mm256_fmadd_ps(vv, xv, av));
+        t += 8;
+    }
+    axpy_scalar(&mut acc[t..n], &x[t..n], v);
+}
+
+// ---------------------------------------------------------------------------
+// Sparse dot: Σ_p vals[p] · x[cols[p]] — the decode-step kernel.
+// ---------------------------------------------------------------------------
+
+/// `Σ_p vals[p] · x[cols[p]]` in ascending `p` at the given mode. `Simd`
+/// vectorizes the gather + multiply but adds the spilled products in the
+/// scalar order — bit-identical. `Fma` keeps 8 contracted accumulator
+/// lanes and reduces at the end (fast, reordered).
+#[inline]
+pub fn sparse_dot(x: &[f32], cols: &[u32], vals: &[f32], mode: SimdMode) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    match mode {
+        // i32 gather indices: fall back if the width could overflow them
+        // (never in practice — d_in is a model dimension)
+        SimdMode::Fma if fma_detected() && x.len() <= i32::MAX as usize => {
+            // SAFETY: avx2 + fma presence checked at runtime just above.
+            return unsafe { sparse_dot_fma(x, cols, vals) };
+        }
+        SimdMode::Simd | SimdMode::Fma if detected() && x.len() <= i32::MAX as usize => {
+            // SAFETY: avx2 presence checked at runtime just above.
+            return unsafe { sparse_dot_avx2(x, cols, vals) };
+        }
+        _ => {}
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = mode;
+    sparse_dot_scalar(x, cols, vals)
+}
+
+#[inline]
+fn sparse_dot_scalar(x: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    let mut sum = 0.0f32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        sum += v * x[c as usize];
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sparse_dot_avx2(x: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = cols.len().min(vals.len());
+    let mut sum = 0.0f32;
+    let mut buf = [0.0f32; 8];
+    let mut p = 0usize;
+    while p + 8 <= n {
+        let idx = _mm256_loadu_si256(cols.as_ptr().add(p) as *const __m256i);
+        let xv = _mm256_i32gather_ps::<4>(x.as_ptr(), idx);
+        let vv = _mm256_loadu_ps(vals.as_ptr().add(p));
+        _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_mul_ps(vv, xv));
+        // sequential adds keep the scalar accumulation order: products
+        // are IEEE muls either way, so the chain is bit-identical
+        for &b in &buf {
+            sum += b;
+        }
+        p += 8;
+    }
+    sum + sparse_dot_scalar(x, &cols[p..n], &vals[p..n])
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn sparse_dot_fma(x: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = cols.len().min(vals.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + 8 <= n {
+        let idx = _mm256_loadu_si256(cols.as_ptr().add(p) as *const __m256i);
+        let xv = _mm256_i32gather_ps::<4>(x.as_ptr(), idx);
+        let vv = _mm256_loadu_ps(vals.as_ptr().add(p));
+        acc = _mm256_fmadd_ps(vv, xv, acc);
+        p += 8;
+    }
+    // deterministic lane reduction (fixed order; differs from scalar —
+    // that's the opt-in fast mode's measured drift)
+    let mut buf = [0.0f32; 8];
+    _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+    let mut sum = 0.0f32;
+    for &b in &buf {
+        sum += b;
+    }
+    sum + sparse_dot_scalar(x, &cols[p..n], &vals[p..n])
+}
+
+// ---------------------------------------------------------------------------
+// Dense rows: the matmul_nt row kernel (a @ b^T, output rows lo..hi).
+// ---------------------------------------------------------------------------
+
+/// Try the AVX2 dense row kernel; `false` means the caller must run the
+/// scalar body (mode is `Scalar`, or the host lacks AVX2). Packs an
+/// 8-column tile of `b` into contiguous scratch, then broadcasts `a[k]`
+/// in ascending k — per output element, the exact scalar mul/add chain.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn dense_nt_rows(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    mode: SimdMode,
+) -> bool {
+    match mode {
+        SimdMode::Fma if fma_detected() => {
+            // SAFETY: avx2 + fma presence checked at runtime just above.
+            unsafe { dense_nt_rows_fma(a, b, lo, hi, out) };
+            true
+        }
+        SimdMode::Simd | SimdMode::Fma if detected() => {
+            // SAFETY: avx2 presence checked at runtime just above.
+            unsafe { dense_nt_rows_avx2(a, b, lo, hi, out) };
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn dense_nt_rows(
+    _a: &Mat,
+    _b: &Mat,
+    _lo: usize,
+    _hi: usize,
+    _out: &mut [f32],
+    _mode: SimdMode,
+) -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dense_nt_rows_avx2(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
+    dense_nt_rows_vec::<false>(a, b, lo, hi, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dense_nt_rows_fma(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
+    dense_nt_rows_vec::<true>(a, b, lo, hi, out);
+}
+
+/// Shared vector body; `FMA` selects contraction at compile time, so the
+/// non-FMA instantiation never emits a fused instruction. Only reachable
+/// through the feature-gated wrappers above.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn dense_nt_rows_vec<const FMA: bool>(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    // k×8 transposed tile of one 8-column block of b: the inner loop then
+    // reads 8 consecutive weights per k instead of 8 strided rows
+    let mut tile = vec![0.0f32; k * 8];
+    let mut j = 0usize;
+    while j + 8 <= n {
+        for c in 0..8 {
+            for (kk, &bv) in b.row(j + c).iter().enumerate() {
+                tile[kk * 8 + c] = bv;
+            }
+        }
+        for i in lo..hi {
+            let mut acc = _mm256_setzero_ps();
+            for (kk, &av) in a.row(i).iter().enumerate() {
+                let bv = _mm256_loadu_ps(tile.as_ptr().add(kk * 8));
+                let av8 = _mm256_set1_ps(av);
+                acc = if FMA {
+                    _mm256_fmadd_ps(av8, bv, acc)
+                } else {
+                    // separate mul + add: per-element scalar order
+                    _mm256_add_ps(acc, _mm256_mul_ps(av8, bv))
+                };
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add((i - lo) * n + j), acc);
+        }
+        j += 8;
+    }
+    // tail columns (< 8): the scalar ascending-k dot, same as the
+    // reference kernel's remainder loop
+    while j < n {
+        let b_row = &b.row(j)[..k];
+        for i in lo..hi {
+            let mut s = 0.0f32;
+            for (kk, &av) in a.row(i).iter().enumerate() {
+                s += av * b_row[kk];
+            }
+            out[(i - lo) * n + j] = s;
+        }
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("on"), Some(SimdMode::Simd));
+        assert_eq!(SimdMode::parse("AUTO"), Some(SimdMode::Simd));
+        assert_eq!(SimdMode::parse("fma"), Some(SimdMode::Fma));
+        assert_eq!(SimdMode::parse("fast"), Some(SimdMode::Fma));
+        assert_eq!(SimdMode::parse("banana"), None);
+        for m in [SimdMode::Scalar, SimdMode::Simd, SimdMode::Fma] {
+            assert_eq!(SimdMode::parse(m.label()), Some(m));
+        }
+    }
+
+    #[test]
+    fn disabled_env_selects_scalar_fallback() {
+        // the runtime-dispatch contract: MUMOE_SIMD=off wins over any
+        // configured request, and a scalar request survives clamping on
+        // every host — the fallback is always selectable
+        assert_eq!(resolve_policy(Some("off"), SimdMode::Simd), SimdMode::Scalar);
+        assert_eq!(resolve_policy(Some("off"), SimdMode::Fma), SimdMode::Scalar);
+        assert_eq!(clamp_to_host(SimdMode::Scalar), SimdMode::Scalar);
+    }
+
+    #[test]
+    fn env_override_beats_request_and_garbage_is_ignored() {
+        assert_eq!(resolve_policy(Some("fma"), SimdMode::Scalar), SimdMode::Fma);
+        assert_eq!(resolve_policy(None, SimdMode::Fma), SimdMode::Fma);
+        assert_eq!(resolve_policy(Some(""), SimdMode::Simd), SimdMode::Simd);
+        assert_eq!(resolve_policy(Some("banana"), SimdMode::Simd), SimdMode::Simd);
+    }
+
+    #[test]
+    fn clamp_respects_host_capabilities() {
+        // whatever the host, the clamped mode must be runnable and
+        // monotone: no capability ⇒ degrade, never upgrade
+        let simd = clamp_to_host(SimdMode::Simd);
+        let fma = clamp_to_host(SimdMode::Fma);
+        if detected() {
+            assert_eq!(simd, SimdMode::Simd);
+        } else {
+            assert_eq!(simd, SimdMode::Scalar);
+            assert_eq!(fma, SimdMode::Scalar);
+        }
+        if fma_detected() {
+            assert_eq!(fma, SimdMode::Fma);
+        } else {
+            assert_ne!(fma, SimdMode::Fma);
+        }
+    }
+
+    #[test]
+    fn axpy_simd_bit_identical_to_scalar() {
+        let mut rng = Pcg32::new(7, 0);
+        // lengths straddle the 8-lane width to exercise the tail path
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 64, 100] {
+            let x: Vec<f32> = rng.normal_vec(n);
+            let base: Vec<f32> = rng.normal_vec(n);
+            let v = rng.normal_vec(1)[0];
+            let mut scalar = base.clone();
+            axpy(&mut scalar, &x, v, SimdMode::Scalar);
+            let mut simd = base.clone();
+            axpy(&mut simd, &x, v, SimdMode::Simd);
+            assert_eq!(scalar, simd, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sparse_dot_simd_bit_identical_to_scalar() {
+        let mut rng = Pcg32::new(9, 0);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 129] {
+            let x: Vec<f32> = rng.normal_vec(200);
+            let cols: Vec<u32> = (0..n).map(|_| rng.gen_range(200)).collect();
+            let vals: Vec<f32> = rng.normal_vec(n);
+            let a = sparse_dot(&x, &cols, &vals, SimdMode::Scalar);
+            let b = sparse_dot(&x, &cols, &vals, SimdMode::Simd);
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fma_mode_drift_is_bounded() {
+        // the fast mode reorders/contracts: not bit-identical, but it must
+        // stay numerically close on normalized inputs
+        let mut rng = Pcg32::new(11, 0);
+        let x: Vec<f32> = rng.normal_vec(256);
+        let cols: Vec<u32> = (0..97).map(|_| rng.gen_range(256)).collect();
+        let vals: Vec<f32> = rng.normal_vec(97);
+        let a = sparse_dot(&x, &cols, &vals, SimdMode::Scalar);
+        let b = sparse_dot(&x, &cols, &vals, SimdMode::Fma);
+        assert!((a - b).abs() < 1e-3, "scalar {a} vs fma {b}");
+        let base: Vec<f32> = rng.normal_vec(64);
+        let xs: Vec<f32> = rng.normal_vec(64);
+        let mut s = base.clone();
+        axpy(&mut s, &xs, 0.7, SimdMode::Scalar);
+        let mut f = base.clone();
+        axpy(&mut f, &xs, 0.7, SimdMode::Fma);
+        for (p, q) in s.iter().zip(&f) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+}

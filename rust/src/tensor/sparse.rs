@@ -21,6 +21,8 @@
 //! ([`matmul_tn_sparse_par`]) runs on the shared threadpool, bit-identical
 //! to the serial kernel; the `*_auto` forms dispatch by `nnz · T` work.
 
+use super::quant::QuantRowSparse;
+use super::simd::{self, SimdMode};
 use super::Mat;
 use crate::util::threadpool::{self, ThreadPool};
 use std::collections::HashMap;
@@ -38,6 +40,13 @@ pub struct RowSparse {
     pub col_idx: Vec<u32>,
     /// Weight values, parallel to `col_idx`.
     pub values: Vec<f32>,
+    /// Optional int8 sidecar ([`crate::pruning::Mask::compress_quant`]).
+    /// When present, the `nn` execution funnels run the quantized kernels
+    /// instead of the f32 ones; everything else (caching, fused grouping,
+    /// KV layout chains) treats the layout normally. Folded into
+    /// [`RowSparse::fingerprint`], so quantized and f32 layouts never
+    /// share a KV keyspace.
+    pub quant: Option<Arc<QuantRowSparse>>,
 }
 
 impl RowSparse {
@@ -66,6 +75,7 @@ impl RowSparse {
             row_ptr,
             col_idx,
             values,
+            quant: None,
         }
     }
 
@@ -109,13 +119,20 @@ impl RowSparse {
     /// Used by cache-transparency checks; the *cache key* hashes the mask
     /// (cheaper, available before compression), not the layout.
     pub fn fingerprint(&self) -> u64 {
-        fnv1a64(
+        let h = fnv1a64(
             [self.rows as u64, self.cols as u64]
                 .into_iter()
                 .chain(self.row_ptr.iter().map(|&p| p as u64))
                 .chain(self.col_idx.iter().map(|&c| c as u64))
                 .chain(self.values.iter().map(|v| v.to_bits() as u64)),
-        )
+        );
+        match &self.quant {
+            None => h,
+            // a quantized layout executes different kernels on different
+            // value bits — it must never fingerprint-collide with its f32
+            // parent, or KV prefixes would cross the quant boundary
+            Some(q) => fnv1a64([h, q.fingerprint()]),
+        }
     }
 }
 
@@ -191,6 +208,11 @@ pub struct LayoutCache {
     misses: u64,
     evictions: u64,
     entries: HashMap<LayoutKey, (Arc<RowSparse>, u64)>,
+    /// Parallel arm for int8-quantized layouts: same `LayoutKey`, with
+    /// the arm itself acting as the quant tag. Shares the capacity,
+    /// recency clock and counters with the f32 arm, so mixed workloads
+    /// still respect one LRU budget.
+    quant_entries: HashMap<LayoutKey, (Arc<RowSparse>, u64)>,
 }
 
 impl LayoutCache {
@@ -203,6 +225,7 @@ impl LayoutCache {
             misses: 0,
             evictions: 0,
             entries: HashMap::new(),
+            quant_entries: HashMap::new(),
         }
     }
 
@@ -210,12 +233,13 @@ impl LayoutCache {
         self.cap
     }
 
+    /// Resident layouts across both arms (the capacity bound's subject).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.len() + self.quant_entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.quant_entries.is_empty()
     }
 
     pub fn hits(&self) -> u64 {
@@ -235,6 +259,11 @@ impl LayoutCache {
     /// Non-counting, non-bumping presence check (tests / introspection).
     pub fn contains(&self, key: &LayoutKey) -> bool {
         self.entries.contains_key(key)
+    }
+
+    /// [`LayoutCache::contains`] for the quant arm.
+    pub fn contains_quant(&self, key: &LayoutKey) -> bool {
+        self.quant_entries.contains_key(key)
     }
 
     /// Look up a layout, counting a hit (and refreshing recency) or a miss.
@@ -271,18 +300,65 @@ impl LayoutCache {
         self.misses += 1;
         let arc = Arc::new(build());
         self.entries.insert(key, (arc.clone(), self.tick));
-        if self.entries.len() > self.cap {
-            let victim = self
+        self.evict_over_cap();
+        arc
+    }
+
+    /// [`LayoutCache::get_or_insert_with`] against the quant arm: same
+    /// key space, but hits only ever return layouts carrying the int8
+    /// sidecar (callers build with `Mask::compress_quant`). f32 and
+    /// quantized layouts for one mask can be resident simultaneously.
+    pub fn get_or_insert_quant_with(
+        &mut self,
+        key: LayoutKey,
+        build: impl FnOnce() -> RowSparse,
+    ) -> Arc<RowSparse> {
+        self.tick += 1;
+        if let Some((arc, tick)) = self.quant_entries.get_mut(&key) {
+            *tick = self.tick;
+            self.hits += 1;
+            return arc.clone();
+        }
+        self.misses += 1;
+        let arc = Arc::new(build());
+        debug_assert!(arc.quant.is_some(), "quant arm expects an int8 sidecar");
+        self.quant_entries.insert(key, (arc.clone(), self.tick));
+        self.evict_over_cap();
+        arc
+    }
+
+    /// Drop globally least-recently-used entries (either arm) until the
+    /// combined occupancy fits the capacity. The just-inserted entry
+    /// holds the newest tick, so it is never the victim.
+    fn evict_over_cap(&mut self) {
+        while self.entries.len() + self.quant_entries.len() > self.cap {
+            let f32_lru = self
                 .entries
                 .iter()
                 .min_by_key(|(_, (_, tick))| *tick)
-                .map(|(k, _)| k.clone());
-            if let Some(k) = victim {
-                self.entries.remove(&k);
-                self.evictions += 1;
+                .map(|(k, (_, tick))| (k.clone(), *tick));
+            let quant_lru = self
+                .quant_entries
+                .iter()
+                .min_by_key(|(_, (_, tick))| *tick)
+                .map(|(k, (_, tick))| (k.clone(), *tick));
+            match (f32_lru, quant_lru) {
+                (Some((fk, ft)), Some((_, qt))) if ft <= qt => {
+                    self.entries.remove(&fk);
+                }
+                (Some(_), Some((qk, _))) => {
+                    self.quant_entries.remove(&qk);
+                }
+                (Some((fk, _)), None) => {
+                    self.entries.remove(&fk);
+                }
+                (None, Some((qk, _))) => {
+                    self.quant_entries.remove(&qk);
+                }
+                (None, None) => return,
             }
+            self.evictions += 1;
         }
-        arc
     }
 }
 
@@ -317,18 +393,40 @@ impl Mat {
 /// serial kernel uses — so results are bit-identical however the rows are
 /// partitioned.
 fn tn_sparse_rows(xt: &Mat, w: &RowSparse, lo: usize, hi: usize, out: &mut [f32]) {
+    tn_sparse_rows_mode(xt, w, lo, hi, out, simd::mode());
+}
+
+/// [`tn_sparse_rows`] at an explicit dispatch mode. The AXPY vectorizes
+/// across T with independent per-element accumulators, so `Scalar` and
+/// `Simd` are bit-identical (`simd_props` proves it); `Fma` contracts.
+pub(crate) fn tn_sparse_rows_mode(
+    xt: &Mat,
+    w: &RowSparse,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    mode: SimdMode,
+) {
     let m = xt.cols;
     debug_assert_eq!(out.len(), (hi - lo) * m);
     for j in lo..hi {
         let acc = &mut out[(j - lo) * m..(j - lo + 1) * m];
         for p in w.row_ptr[j]..w.row_ptr[j + 1] {
-            let v = w.values[p];
-            let xr = xt.row(w.col_idx[p] as usize);
-            for (a, &x) in acc.iter_mut().zip(xr) {
-                *a += v * x;
-            }
+            simd::axpy(acc, xt.row(w.col_idx[p] as usize), w.values[p], mode);
         }
     }
+}
+
+/// [`matmul_tn_sparse`] at an explicit dispatch mode — the bench/proptest
+/// surface for comparing kernel paths; production code reads the
+/// process-wide [`simd::mode`] through the plain entry points.
+pub fn matmul_tn_sparse_mode(xt: &Mat, w: &RowSparse, mode: SimdMode) -> Mat {
+    assert_eq!(xt.rows, w.cols, "matmul_tn_sparse shape mismatch");
+    let (m, n) = (xt.cols, w.rows);
+    let mut out_t = Mat::zeros(0, 0);
+    out_t.resize_zeroed(n, m);
+    tn_sparse_rows_mode(xt, w, 0, n, &mut out_t.data, mode);
+    out_t.t()
 }
 
 /// `xt^T @ W^T` with `xt` the *already transposed* (d_in, T) activations —
@@ -431,13 +529,19 @@ pub fn matvec_nt_sparse(x: &[f32], w: &RowSparse) -> Vec<f32> {
 /// the buffer held before (`proptest.rs` proves the composition at the
 /// decode level).
 pub fn matvec_nt_sparse_into(x: &[f32], w: &RowSparse, out: &mut Vec<f32>) {
+    matvec_nt_sparse_mode(x, w, out, simd::mode());
+}
+
+/// [`matvec_nt_sparse_into`] at an explicit dispatch mode. The `Simd`
+/// path vectorizes the gather + multiply but sums the products in the
+/// scalar `p` order, so it stays bit-identical; `Fma` lane-reduces.
+pub fn matvec_nt_sparse_mode(x: &[f32], w: &RowSparse, out: &mut Vec<f32>, mode: SimdMode) {
     assert_eq!(x.len(), w.cols, "matvec_nt_sparse shape mismatch");
     out.clear();
     out.resize(w.rows, 0.0);
     for (j, acc) in out.iter_mut().enumerate() {
-        for p in w.row_ptr[j]..w.row_ptr[j + 1] {
-            *acc += w.values[p] * x[w.col_idx[p] as usize];
-        }
+        let (lo, hi) = (w.row_ptr[j], w.row_ptr[j + 1]);
+        *acc = simd::sparse_dot(x, &w.col_idx[lo..hi], &w.values[lo..hi], mode);
     }
 }
 
@@ -653,6 +757,81 @@ mod tests {
         assert_eq!(c.hits() + c.misses(), seq.len() as u64);
         assert_eq!((c.hits(), c.misses()), (3, 5));
         assert!(c.len() <= 3);
+    }
+
+    fn quant_layout(seed: u64) -> RowSparse {
+        let mut rs = layout(seed);
+        rs.quant = Some(Arc::new(QuantRowSparse::from_sparse(&rs)));
+        rs
+    }
+
+    #[test]
+    fn quant_arm_is_disjoint_from_f32_arm() {
+        let mut c = LayoutCache::new(4);
+        let k = key("a", 1);
+        let f = c.get_or_insert_with(k.clone(), || layout(1));
+        let q = c.get_or_insert_quant_with(k.clone(), || quant_layout(1));
+        // same key, two residents: the arm is the quant tag
+        assert!(f.quant.is_none());
+        assert!(q.quant.is_some());
+        assert_eq!(c.len(), 2);
+        assert_eq!((c.hits(), c.misses()), (0, 2));
+        // each arm hits independently, without rebuilding
+        let q2 = c.get_or_insert_quant_with(k.clone(), || panic!("must not rebuild on hit"));
+        assert!(Arc::ptr_eq(&q, &q2));
+        let f2 = c.get_or_insert_with(k.clone(), || panic!("must not rebuild on hit"));
+        assert!(Arc::ptr_eq(&f, &f2));
+        assert_eq!((c.hits(), c.misses()), (2, 2));
+        assert!(c.contains(&k) && c.contains_quant(&k));
+    }
+
+    #[test]
+    fn capacity_is_shared_across_arms_with_global_lru() {
+        let mut c = LayoutCache::new(2);
+        c.get_or_insert_with(key("a", 1), || layout(1));
+        c.get_or_insert_quant_with(key("b", 2), || quant_layout(2));
+        // touch the f32 entry so the quant entry is the global LRU
+        assert!(c.get(&key("a", 1)).is_some());
+        c.get_or_insert_with(key("c", 3), || layout(3));
+        assert!(c.len() <= 2, "combined occupancy exceeds capacity");
+        assert!(c.contains(&key("a", 1)));
+        assert!(!c.contains_quant(&key("b", 2)), "global LRU entry survived");
+        assert!(c.contains(&key("c", 3)));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn quant_sidecar_changes_fingerprint() {
+        let plain = layout(5);
+        let quant = quant_layout(5);
+        // same CSR content, but the sidecar must move the fingerprint so
+        // KV layout chains can't alias across the quant boundary
+        assert_eq!(plain.values, quant.values);
+        assert_ne!(plain.fingerprint(), quant.fingerprint());
+    }
+
+    #[test]
+    fn mode_kernels_bit_identical_across_paths() {
+        let mut rng = Pcg32::new(41, 0);
+        for (t, d_in, d_out) in [(1, 12, 7), (9, 33, 17), (24, 40, 31)] {
+            let x = randmat(&mut rng, t, d_in);
+            let mut w = randmat(&mut rng, d_out, d_in);
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let rs = RowSparse::from_dense(&w);
+            let xt = x.t();
+            let scalar = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Scalar);
+            let simd = matmul_tn_sparse_mode(&xt, &rs, SimdMode::Simd);
+            assert_eq!(scalar.data, simd.data, "({t},{d_in},{d_out})");
+            let mut mv_scalar = Vec::new();
+            let mut mv_simd = Vec::new();
+            matvec_nt_sparse_mode(x.row(0), &rs, &mut mv_scalar, SimdMode::Scalar);
+            matvec_nt_sparse_mode(x.row(0), &rs, &mut mv_simd, SimdMode::Simd);
+            assert_eq!(mv_scalar, mv_simd);
+        }
     }
 
     #[test]
